@@ -1,0 +1,95 @@
+//! Pool characterization in the style of paper §3 (Table 1 + Figure 3):
+//! measured host-side numbers for the mapped pool plus the calibrated
+//! virtual-time curves for the CXL fabric.
+//!
+//! Run: `cargo run --release --example characterize_pool`
+
+use cxl_ccl::bench_util::{banner, pow2_sizes, Table};
+use cxl_ccl::pool::{PoolLayout, ShmPool};
+use cxl_ccl::sim::constants as k;
+use cxl_ccl::sim::latency::{pointer_chase, LatencyModel};
+use cxl_ccl::sim::{SimFabric, SimParams};
+use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
+use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::util::size::fmt_bytes;
+use std::time::Instant;
+
+/// Hand-built plan: `streams` ranks each moving `bytes` to/from device 0 or
+/// distinct devices — the §3 concurrency microbenchmarks.
+fn transfer_plan(streams: usize, bytes: usize, same_device: bool, write: bool) -> CollectivePlan {
+    let mut ranks = Vec::new();
+    for r in 0..streams {
+        let mut rp = RankPlan::new(r);
+        let dev_cap = 1usize << 30;
+        let base = if same_device { 0 } else { r * dev_cap };
+        let off = base + (1 << 20) + if same_device { r * bytes } else { 0 };
+        if write {
+            rp.write_ops.push(Op::Write { pool_off: off, src_off: 0, len: bytes });
+        } else {
+            rp.read_ops.push(Op::Read { pool_off: off, dst_off: 0, len: bytes });
+        }
+        ranks.push(rp);
+    }
+    CollectivePlan {
+        primitive: Primitive::Broadcast,
+        variant: CclVariant::All,
+        nranks: streams,
+        n_elems: bytes / 4,
+        send_elems: bytes / 4,
+        recv_elems: bytes / 4,
+        ranks,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("Table 1: access latency");
+    let model = LatencyModel::default();
+    let pool = ShmPool::anon(64 << 20)?;
+    let host = pointer_chase(&pool, 0, 32 << 20, 200_000);
+    let t = Table::new(&[28, 14]);
+    t.header(&["path", "latency"]);
+    t.row(&["local DRAM (paper, MLC)".into(), format!("{:.0}ns", model.dram * 1e9)]);
+    t.row(&["CXL pool (paper, MLC)".into(), format!("{:.0}ns", model.cxl_pool * 1e9)]);
+    t.row(&["ratio (paper: 3.1x)".into(), format!("{:.2}x", model.ratio())]);
+    t.row(&["this host, mapped pool chase".into(), format!("{:.1}ns", host * 1e9)]);
+
+    banner("Figure 3a: single-node bandwidth vs transfer size (virtual time)");
+    let layout = PoolLayout::new(6, 1 << 30, 1 << 20)?;
+    let fab = SimFabric::new(layout).with_params(SimParams::default());
+    let t = Table::new(&[12, 14, 14]);
+    t.header(&["size", "read GB/s", "write GB/s"]);
+    for bytes in pow2_sizes(4 << 10, 1 << 30) {
+        let mut row = vec![fmt_bytes(bytes)];
+        for write in [false, true] {
+            let rep = fab.simulate(&transfer_plan(1, bytes, true, write))?;
+            row.push(format!("{:.2}", bytes as f64 / rep.total_time / 1e9));
+        }
+        t.row(&row);
+    }
+    println!("(plateau = {:.0} GB/s: the Gen5 x8 device limit, Observation 1)", k::CXL_DEVICE_BW / 1e9);
+
+    banner("Figure 3b/3c: concurrent streams, same vs distinct devices (virtual time)");
+    let t = Table::new(&[12, 10, 16, 18]);
+    t.header(&["size", "streams", "same-dev GB/s", "distinct-dev GB/s"]);
+    for bytes in pow2_sizes(1 << 20, 1 << 30) {
+        for streams in [2usize, 3] {
+            let same = fab.simulate(&transfer_plan(streams, bytes, true, false))?;
+            let diff = fab.simulate(&transfer_plan(streams, bytes, false, false))?;
+            t.row(&[
+                fmt_bytes(bytes),
+                streams.to_string(),
+                format!("{:.2} per-stream", bytes as f64 / same.total_time / 1e9),
+                format!("{:.2} per-stream", bytes as f64 / diff.total_time / 1e9),
+            ]);
+        }
+    }
+    println!("(same-device streams fair-share one card, Observation 2)");
+
+    banner("measured host memcpy into the mapped pool (hardware floor on this box)");
+    let buf = vec![0u8; 64 << 20];
+    let t0 = Instant::now();
+    pool.write_bytes(0, &buf)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("64MiB memcpy: {:.2} GB/s", 64e6 * 1.048576 / dt / 1e9);
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT pipeline: lower the L1 kernel + L2 model to HLO **text** artifacts
+the rust runtime loads via PJRT.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the `xla` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage (from `make artifacts`):
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        --presets tiny,e2e --nranks 4
+
+Emits:
+    reduce_add_<tile>.hlo.txt       pairwise f32 add (rust reduce engine)
+    model_step_<preset>.hlo.txt     (flat, xb, yb) -> (loss, flat_grads)
+    adam_update_<preset>.hlo.txt    shard optimizer update
+    manifest.txt                    key=value metadata the rust side parses
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import reduce as kreduce
+
+# Tile sizes exported for the rust reduce engine (elements).
+REDUCE_TILES = (32768, 262144)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps a single tuple result)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_reduce_add(tile: int) -> str:
+    spec = jax.ShapeDtypeStruct((tile,), jnp.float32)
+    fn = lambda a, b: (kreduce.pairwise_add(a, b),)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def shard_len(nparams: int, nranks: int) -> int:
+    """FSDP pads the flat parameter to a multiple of nranks."""
+    return (nparams + nranks - 1) // nranks
+
+
+def lower_model(preset: str, nranks: int, out_dir: str):
+    cfg = M.preset(preset)
+    flat, unravel = M.flat_init(cfg)
+    n = int(flat.shape[0])
+    # Initial parameters (jax init) for the rust trainer, f32 little-endian.
+    import numpy as np
+
+    pbin = os.path.join(out_dir, f"params_{preset}.bin")
+    np.asarray(flat, dtype="<f4").tofile(pbin)
+    step = M.make_train_step(cfg, unravel)
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    pspec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    step_txt = to_hlo_text(jax.jit(step).lower(pspec, tok, tok))
+
+    sl = shard_len(n, nranks)
+    sspec = jax.ShapeDtypeStruct((sl,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    upd = lambda p, g, m, v, t: M.adam_update(p, g, m, v, t)
+    upd_txt = to_hlo_text(jax.jit(upd).lower(sspec, sspec, sspec, sspec, scalar))
+    return cfg, n, sl, step_txt, upd_txt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,e2e")
+    ap.add_argument("--nranks", type=int, default=4)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = [
+        "format=hlo-text",
+        f"nranks={args.nranks}",
+        f"reduce_tiles={','.join(str(t) for t in REDUCE_TILES)}",
+    ]
+
+    for tile in REDUCE_TILES:
+        path = os.path.join(args.out_dir, f"reduce_add_{tile}.hlo.txt")
+        txt = lower_reduce_add(tile)
+        with open(path, "w") as f:
+            f.write(txt)
+        manifest.append(f"reduce_add_{tile}=reduce_add_{tile}.hlo.txt")
+        print(f"wrote {path} ({len(txt)} chars)")
+
+    for preset in [p for p in args.presets.split(",") if p]:
+        cfg, n, sl, step_txt, upd_txt = lower_model(preset, args.nranks, args.out_dir)
+        sp = os.path.join(args.out_dir, f"model_step_{preset}.hlo.txt")
+        up = os.path.join(args.out_dir, f"adam_update_{preset}.hlo.txt")
+        with open(sp, "w") as f:
+            f.write(step_txt)
+        with open(up, "w") as f:
+            f.write(upd_txt)
+        manifest += [
+            f"model_step_{preset}=model_step_{preset}.hlo.txt",
+            f"adam_update_{preset}=adam_update_{preset}.hlo.txt",
+            f"params_bin_{preset}=params_{preset}.bin",
+            f"params_{preset}={n}",
+            f"shard_{preset}={sl}",
+            f"vocab_{preset}={cfg.vocab}",
+            f"d_model_{preset}={cfg.d_model}",
+            f"n_layers_{preset}={cfg.n_layers}",
+            f"seq_len_{preset}={cfg.seq_len}",
+            f"batch_{preset}={cfg.batch}",
+        ]
+        print(f"wrote {sp} ({len(step_txt)} chars), {up} ({len(upd_txt)} chars); "
+              f"params={n} shard={sl}")
+
+    mpath = os.path.join(args.out_dir, "manifest.txt")
+    with open(mpath, "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""L1 — the CXL-CCL compute hot-spot as a Pallas kernel.
+
+The consumer side of AllReduce / Reduce / ReduceScatter reads READY chunks
+from the pool and accumulates them (paper Listing 3, line 14). On the GPU the
+paper does this with CUDA kernels over chunk buffers; here the same hot-spot
+is re-thought for a TPU-shaped memory hierarchy (DESIGN.md
+§Hardware-Adaptation):
+
+- the reduction is a grid over chunk *tiles*; BlockSpec stages each tile
+  HBM→VMEM the way the doorbell/chunk schedule stages CXL→GPU,
+- tiles are (8, 128)-aligned so the elementwise sum maps onto the VPU lanes
+  (the reduction is bandwidth-bound — no MXU needed),
+- `interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; real-TPU numbers are estimated analytically (EXPERIMENTS.md
+  §Perf-L1).
+
+Two entry points:
+
+- :func:`pairwise_add` — ``out = a + b`` over a fixed tile; exported
+  standalone (``artifacts/reduce_add_*.hlo.txt``) and executed from the rust
+  reduce engine through PJRT on the L3 hot path.
+- :func:`stacked_sum` — ``(R, C) -> (C,)`` reduction over the rank axis;
+  used by the L2 model for loss/grad-norm accumulation and as the
+  many-contributor reduction oracle workload.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-friendly tile: 8 sublanes x 128 lanes x 256 rows = 262144 f32 = 1 MiB
+# of VMEM per operand tile — 3 operands double-buffered is 6 MiB, inside a
+# TensorCore's ~16 MiB VMEM. One grid step per exported tile keeps the
+# lowered HLO loop-free (§Perf: the grid loop dominated CPU-PJRT dispatch).
+LANE = 128
+SUBLANE = 8
+TILE_ROWS = 256
+TILE_ELEMS = TILE_ROWS * SUBLANE * LANE  # 262144
+
+
+def _pick_block_rows(rows: int) -> int:
+    """Largest sublane-multiple divisor of `rows` up to the tile budget, so
+    the grid covers the array exactly (rows is always a multiple of SUBLANE
+    because inputs are (8,128)-aligned)."""
+    assert rows % SUBLANE == 0, rows
+    cap = min(rows, TILE_ROWS * SUBLANE)
+    br = cap - (cap % SUBLANE)
+    while br > SUBLANE and rows % br != 0:
+        br -= SUBLANE
+    return max(br, SUBLANE)
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    """One grid step: elementwise sum of a VMEM-resident tile."""
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pairwise_add(a: jax.Array, b: jax.Array, interpret: bool = True) -> jax.Array:
+    """``a + b`` for 1-D f32 arrays whose length divides TILE_ELEMS' grid.
+
+    The caller (aot.py / tests) pads to a multiple of ``SUBLANE * LANE``;
+    the grid walks ``TILE_ELEMS``-sized tiles.
+    """
+    assert a.shape == b.shape and a.ndim == 1, (a.shape, b.shape)
+    n = a.shape[0]
+    assert n % (SUBLANE * LANE) == 0, f"length {n} not (8,128)-aligned"
+    rows = n // LANE
+    a2 = a.reshape(rows, LANE)
+    b2 = b.reshape(rows, LANE)
+    block_rows = _pick_block_rows(rows)
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        _add_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), a.dtype),
+        interpret=interpret,
+    )(a2, b2)
+    return out.reshape(n)
+
+
+def _stacked_kernel(x_ref, o_ref):
+    """One grid step: sum an (R, rows, LANE) VMEM block over axis 0."""
+    o_ref[...] = jnp.sum(x_ref[...], axis=0)
+
+
+@jax.custom_vjp
+def stacked_sum(x: jax.Array) -> jax.Array:
+    """Reduce ``(R, C) -> (C,)`` over the contributor axis R.
+
+    R is the number of ranks contributing a chunk (2-16 in practice);
+    C must be (8,128)-aligned. Each grid step stages an ``(R, block, 128)``
+    brick through VMEM — the BlockSpec expresses the same
+    producer-follows-consumer schedule the doorbell chunks give the CXL
+    path.
+
+    Reverse-mode: d(sum over R)/dx broadcasts the cotangent over R
+    (``custom_vjp`` — pallas_call has no built-in autodiff rule).
+    """
+    return _stacked_sum_impl(x, True)
+
+
+def _stacked_sum_fwd(x):
+    return stacked_sum(x), x.shape[0]
+
+
+def _stacked_sum_bwd(r, ct):
+    return (jnp.broadcast_to(ct[None, :], (r, ct.shape[0])),)
+
+
+stacked_sum.defvjp(_stacked_sum_fwd, _stacked_sum_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _stacked_sum_impl(x: jax.Array, interpret: bool = True) -> jax.Array:
+    assert x.ndim == 2, x.shape
+    r, n = x.shape
+    assert n % (SUBLANE * LANE) == 0, f"length {n} not (8,128)-aligned"
+    rows = n // LANE
+    x3 = x.reshape(r, rows, LANE)
+    # Many-contributor stacks shrink the block so (r+1) tiles still fit the
+    # VMEM budget double-buffered (see vmem_bytes).
+    block_rows = min(_pick_block_rows(rows), _rows_budget(r))
+    while rows % block_rows != 0:
+        block_rows -= SUBLANE
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        _stacked_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((r, block_rows, LANE), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), x.dtype),
+        interpret=interpret,
+    )(x3)
+    return out.reshape(n)
+
+
+def pad_to_alignment(v: jax.Array) -> jax.Array:
+    """Zero-pad a 1-D array up to (8,128) alignment (sum-safe padding)."""
+    n = v.shape[0]
+    unit = SUBLANE * LANE
+    pad = (-n) % unit
+    if pad:
+        v = jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+    return v
+
+
+VMEM_BUDGET = 12 << 20  # leave headroom below a TensorCore's ~16 MiB
+
+
+def _rows_budget(r: int, dtype_bytes: int = 4) -> int:
+    """Largest sublane-multiple block height such that (r+1) operand tiles
+    fit the VMEM budget double-buffered."""
+    rows = VMEM_BUDGET // (2 * (r + 1) * LANE * dtype_bytes)
+    return max(SUBLANE, rows - rows % SUBLANE)
+
+
+def vmem_bytes(r: int = 2, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (used by the
+    roofline discussion in EXPERIMENTS.md §Perf): r input tiles + 1 output
+    tile, double-buffered, with the r-aware block cap applied."""
+    rows = min(TILE_ROWS * SUBLANE, _rows_budget(r, dtype_bytes))
+    return 2 * (r + 1) * rows * LANE * dtype_bytes

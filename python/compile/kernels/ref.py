@@ -1,0 +1,13 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest asserts kernel == ref to float tolerance)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_add_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a + b
+
+
+def stacked_sum_ref(x: jax.Array) -> jax.Array:
+    return jnp.sum(x, axis=0)

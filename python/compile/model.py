@@ -1,0 +1,186 @@
+"""L2 — the LLM-training case-study compute graph (paper §5.5).
+
+A decoder-only transformer LM whose parameters live in ONE flat f32 vector,
+so the rust FSDP driver can treat them exactly like PyTorch FSDP treats its
+flat parameter: AllGather the shards before compute, ReduceScatter the flat
+gradient after backward (both through CXL-CCL), and apply the optimizer on
+the local shard only.
+
+Everything here runs **once**, at `make artifacts` time: the train step and
+the optimizer update are AOT-lowered to HLO text and executed from rust via
+PJRT. Python is never on the training path.
+
+The per-token losses are accumulated with the L1 Pallas kernel
+(:func:`kernels.reduce.stacked_sum`), putting the kernel inside the lowered
+training graph as well as on the rust reduce-engine path.
+"""
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import reduce as kreduce
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer shape. Presets mirror the paper's case study scaled to
+    this host (see DESIGN.md §Substitutions)."""
+
+    vocab: int = 256  # byte-level tokenizer
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    seq_len: int = 32
+    batch: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+PRESETS = {
+    # CI / pytest scale: sub-second artifacts.
+    "tiny": ModelConfig(vocab=256, d_model=64, n_layers=2, n_heads=2, seq_len=32, batch=4),
+    # The end-to-end example (examples/train_fsdp.rs): ~11M params.
+    "e2e": ModelConfig(vocab=256, d_model=384, n_layers=6, n_heads=6, seq_len=128, batch=8),
+    # GPT-2-small-ish scale (~86M); a few demonstration steps only on CPU.
+    "100m": ModelConfig(vocab=8192, d_model=768, n_layers=12, n_heads=12, seq_len=128, batch=4),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Initialize the parameter pytree (layers stacked for lax.scan)."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 8)
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    s = 0.02
+    params = {
+        "embed": s * jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32),
+        "pos": s * jax.random.normal(ks[1], (cfg.seq_len, d), jnp.float32),
+        "layers": {
+            # One leading L axis per tensor -> scan-friendly, keeps the
+            # lowered HLO O(1) in depth.
+            "ln1_g": jnp.ones((L, d), jnp.float32),
+            "ln1_b": jnp.zeros((L, d), jnp.float32),
+            "wqkv": s * jax.random.normal(ks[2], (L, d, 3 * d), jnp.float32),
+            "wo": s * jax.random.normal(ks[3], (L, d, d), jnp.float32),
+            "ln2_g": jnp.ones((L, d), jnp.float32),
+            "ln2_b": jnp.zeros((L, d), jnp.float32),
+            "w1": s * jax.random.normal(ks[4], (L, d, f), jnp.float32),
+            "b1": jnp.zeros((L, f), jnp.float32),
+            "w2": s * jax.random.normal(ks[5], (L, f, d), jnp.float32),
+            "b2": jnp.zeros((L, d), jnp.float32),
+        },
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+    }
+    return params
+
+
+def flat_init(cfg: ModelConfig, seed: int = 0) -> Tuple[jax.Array, object]:
+    """Flat parameter vector + the unflatten closure."""
+    params = init_params(cfg, seed)
+    flat, unravel = ravel_pytree(params)
+    return flat, unravel
+
+
+def param_count(cfg: ModelConfig) -> int:
+    flat, _ = flat_init(cfg)
+    return int(flat.shape[0])
+
+
+def _layer_norm(x, g, b):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-5) * g + b
+
+
+def _block(x, lp, cfg: ModelConfig):
+    """One transformer block; lp holds this layer's tensors (no L axis)."""
+    B, T, d = x.shape
+    h = _layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+    qkv = h @ lp["wqkv"]  # (B, T, 3d)
+    q, kk, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(B, T, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+    q, kk, v = heads(q), heads(kk), heads(v)
+    att = (q @ kk.transpose(0, 1, 3, 2)) / jnp.sqrt(float(cfg.d_head))
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, d)
+    x = x + o @ lp["wo"]
+    h = _layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+    x = x + (jax.nn.gelu(h @ lp["w1"] + lp["b1"])) @ lp["w2"] + lp["b2"]
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """Logits over the vocab: (B, T) i32 -> (B, T, vocab) f32."""
+    x = params["embed"][tokens] + params["pos"][None, : tokens.shape[1]]
+
+    def step(carry, lp):
+        return _block(carry, lp, cfg), None
+
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    # Tied output embedding (GPT-2 style).
+    return x @ params["embed"].T
+
+
+def loss_fn(params, xb, yb, cfg: ModelConfig):
+    """Mean next-token NLL. The per-token losses are summed by the L1
+    Pallas kernel (stacked_sum over a single-contributor stack), so the
+    kernel is part of the lowered training graph."""
+    logits = forward(params, xb, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, yb[..., None], axis=-1)[..., 0]  # (B,T)
+    per_token = kreduce.pad_to_alignment(nll.reshape(-1))
+    total = kreduce.stacked_sum(per_token[None, :])  # Pallas reduction
+    return jnp.sum(total) / (cfg.batch * cfg.seq_len)
+
+
+def make_train_step(cfg: ModelConfig, unravel):
+    """(flat_params, xb, yb) -> (loss, flat_grads) — the artifact rust runs
+    between AllGather and ReduceScatter."""
+
+    def train_step(flat, xb, yb):
+        def f(flat_v):
+            return loss_fn(unravel(flat_v), xb, yb, cfg)
+
+        loss, g = jax.value_and_grad(f)(flat)
+        return (loss, g)
+
+    return train_step
+
+
+def adam_update(shard, grad, m, v, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """Adam on a parameter shard — the post-ReduceScatter local update.
+
+    `step` is the 1-based step count as f32 (bias correction).
+    Returns (new_shard, new_m, new_v).
+    """
+    m = b1 * m + (1.0 - b1) * grad
+    v = b2 * v + (1.0 - b2) * grad * grad
+    mhat = m / (1.0 - b1**step)
+    vhat = v / (1.0 - b2**step)
+    return (shard - lr * mhat / (jnp.sqrt(vhat) + eps), m, v)
+
+
+@functools.lru_cache(maxsize=None)
+def preset(name: str) -> ModelConfig:
+    if name not in PRESETS:
+        raise KeyError(f"unknown preset {name!r}; have {sorted(PRESETS)}")
+    return PRESETS[name]

@@ -1,0 +1,66 @@
+"""AOT pipeline tests: artifacts exist, parse as HLO text, and the manifest
+is consistent with the model presets."""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    out = {}
+    with open(path) as f:
+        for line in f:
+            if "=" in line:
+                k, v = line.strip().split("=", 1)
+                out[k] = v
+    return out
+
+
+class TestManifest:
+    def test_format_and_tiles(self):
+        m = manifest()
+        assert m["format"] == "hlo-text"
+        tiles = [int(t) for t in m["reduce_tiles"].split(",")]
+        assert tiles == list(aot.REDUCE_TILES)
+
+    def test_artifact_files_exist_and_are_hlo(self):
+        m = manifest()
+        for k, v in m.items():
+            if not v.endswith(".hlo.txt"):
+                continue
+            path = os.path.join(ART, v)
+            assert os.path.exists(path), f"{k} -> missing {v}"
+            with open(path) as f:
+                head = f.read(4096)
+            assert "HloModule" in head, f"{v} is not HLO text"
+
+    def test_param_counts_match_model(self):
+        m = manifest()
+        for preset in ["tiny", "e2e"]:
+            if f"params_{preset}" not in m:
+                continue
+            assert int(m[f"params_{preset}"]) == M.param_count(M.preset(preset))
+            nranks = int(m["nranks"])
+            assert int(m[f"shard_{preset}"]) == aot.shard_len(
+                M.param_count(M.preset(preset)), nranks
+            )
+
+
+class TestLowering:
+    def test_reduce_add_entry_signature(self):
+        txt = aot.lower_reduce_add(aot.REDUCE_TILES[0])
+        assert "HloModule" in txt and "ENTRY" in txt
+        assert f"f32[{aot.REDUCE_TILES[0]}]" in txt
+
+    def test_shard_len_padding(self):
+        assert aot.shard_len(10, 4) == 3
+        assert aot.shard_len(12, 4) == 3
+        assert aot.shard_len(13, 4) == 4

@@ -1,0 +1,111 @@
+//! Hot-path microbenchmarks (the §Perf iteration targets): doorbell
+//! ring/wait cost, pool memcpy bandwidth, reduce-engine throughput
+//! (scalar vs AOT-Pallas-via-PJRT), plan building, and real-executor
+//! end-to-end latency per variant.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use cxl_ccl::bench_util::{banner, measure, Table};
+use cxl_ccl::collectives::builder::plan_collective;
+use cxl_ccl::collectives::{CclConfig, CclVariant, Primitive};
+use cxl_ccl::doorbell::{DoorbellSet, WaitPolicy};
+use cxl_ccl::exec::{Communicator, ReduceEngine, ScalarReduceEngine};
+use cxl_ccl::pool::{PoolLayout, ShmPool};
+use cxl_ccl::topology::ClusterSpec;
+use cxl_ccl::util::size::{fmt_bytes, fmt_time};
+use cxl_ccl::util::SplitMix64;
+
+fn main() {
+    banner("doorbell: ring + already-ready wait");
+    let layout = PoolLayout::new(2, 4 << 20, 1 << 20).unwrap();
+    let pool = ShmPool::anon(layout.pool_size()).unwrap();
+    let dbs = DoorbellSet::new(&pool, layout);
+    dbs.reset_all().unwrap();
+    let policy = WaitPolicy::default();
+    let s = measure(100, 10_000, || {
+        dbs.ring(7).unwrap();
+        dbs.wait(7, &policy).unwrap();
+    });
+    println!("ring+wait p50 {} mean {}", fmt_time(s.p50), fmt_time(s.mean));
+
+    banner("pool memcpy bandwidth (this host's hardware floor)");
+    let t = Table::new(&[12, 14, 14]);
+    t.header(&["size", "write GB/s", "read GB/s"]);
+    let big = ShmPool::anon(256 << 20).unwrap();
+    for bytes in [64 << 10, 1 << 20, 16 << 20, 128 << 20] {
+        let src = vec![7u8; bytes];
+        let mut dst = vec![0u8; bytes];
+        let w = measure(2, 8, || big.write_bytes(0, &src).unwrap());
+        let r = measure(2, 8, || big.read_bytes(0, &mut dst).unwrap());
+        t.row(&[
+            fmt_bytes(bytes),
+            format!("{:.2}", bytes as f64 / w.p50 / 1e9),
+            format!("{:.2}", bytes as f64 / r.p50 / 1e9),
+        ]);
+    }
+
+    banner("reduce engine: scalar vs AOT Pallas kernel via PJRT");
+    let n = 262_144usize;
+    let mut rng = SplitMix64::new(3);
+    let mut data = vec![0.0f32; n];
+    rng.fill_f32(&mut data);
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    big.write_bytes(0, &bytes).unwrap();
+    let mut acc = vec![0.0f32; n];
+    let s = measure(3, 20, || {
+        ScalarReduceEngine.reduce_into(&big, 0, &mut acc).unwrap();
+    });
+    println!(
+        "scalar:      p50 {} -> {:.2} GB/s",
+        fmt_time(s.p50),
+        (n * 4) as f64 / s.p50 / 1e9
+    );
+    match cxl_ccl::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => {
+            let k = rt.reduce_kernel(n).unwrap();
+            let engine = cxl_ccl::exec::PjrtReduceEngine::new(k);
+            let s = measure(3, 20, || {
+                engine.reduce_into(&big, 0, &mut acc).unwrap();
+            });
+            println!(
+                "pjrt-pallas: p50 {} -> {:.2} GB/s (tile {} elems)",
+                fmt_time(s.p50),
+                (n * 4) as f64 / s.p50 / 1e9,
+                engine.tile_elems()
+            );
+        }
+        Err(e) => println!("pjrt-pallas: skipped ({e})"),
+    }
+
+    banner("plan building overhead (allocation-sensitive)");
+    let spec = ClusterSpec::paper(64 << 20);
+    let playout = PoolLayout::from_spec(&spec).unwrap();
+    for p in [Primitive::AllGather, Primitive::AllToAll] {
+        let s = measure(10, 200, || {
+            let _ = plan_collective(p, &spec, &playout, &CclConfig::default_all(), 3 << 20)
+                .unwrap();
+        });
+        println!("plan {p}: p50 {}", fmt_time(s.p50));
+    }
+
+    banner("real executor end-to-end (4MiB AllGather, thread-per-rank)");
+    let comm = Communicator::shm(&spec).unwrap();
+    let n = 1 << 20; // 4 MiB per rank
+    let sends: Vec<Vec<f32>> = (0..3).map(|_| vec![1.0f32; n]).collect();
+    let t = Table::new(&[20, 12, 14]);
+    t.header(&["variant", "p50", "pool GB/s"]);
+    for v in CclVariant::ALL {
+        let ccl = v.config(8);
+        let mut recvs = vec![vec![0.0f32; n * 3]; 3];
+        let s = measure(2, 10, || {
+            comm.execute(Primitive::AllGather, &ccl, n, &sends, &mut recvs)
+                .unwrap();
+        });
+        let plan = plan_collective(Primitive::AllGather, &spec, &playout, &ccl, n).unwrap();
+        t.row(&[
+            v.name().into(),
+            fmt_time(s.p50),
+            format!("{:.2}", plan.total_pool_bytes() as f64 / s.p50 / 1e9),
+        ]);
+    }
+}

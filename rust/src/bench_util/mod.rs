@@ -1,0 +1,88 @@
+//! Shared bench harness (criterion is unavailable offline): warmed-up
+//! iteration control, summary statistics, and paper-style table printing.
+
+use crate::util::Stats;
+use std::time::Instant;
+
+/// Measure `f` with warmup, returning per-iteration seconds.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Stats::from(&samples)
+}
+
+/// Right-padded fixed-width table printer for the bench outputs.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(widths: &[usize]) -> Self {
+        Self {
+            widths: widths.to_vec(),
+        }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(12);
+            line.push_str(&format!("{c:<w$}  "));
+        }
+        println!("{}", line.trim_end());
+    }
+
+    pub fn header(&self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * self.widths.len();
+        println!("{}", "-".repeat(total));
+    }
+}
+
+/// Section banner used by every figure/table bench.
+pub fn banner(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+/// Message-size sweep helper: powers of two from `lo` to `hi` inclusive.
+pub fn pow2_sizes(lo: usize, hi: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut s = lo;
+    while s <= hi {
+        v.push(s);
+        s *= 2;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut n = 0usize;
+        let st = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(st.n, 5);
+        assert!(st.mean >= 0.0);
+    }
+
+    #[test]
+    fn pow2_sweep() {
+        assert_eq!(
+            pow2_sizes(1 << 20, 8 << 20),
+            vec![1 << 20, 2 << 20, 4 << 20, 8 << 20]
+        );
+        assert_eq!(pow2_sizes(16, 16), vec![16]);
+    }
+}

@@ -1,0 +1,197 @@
+//! Fine-grained data chunking for publication/retrieval overlap (paper §4.4).
+//!
+//! Each data block is split into `slicing_factor` chunks, each with its own
+//! doorbell, so consumers start retrieving chunk *k* while the producer is
+//! still publishing chunk *k+1* (paper Fig. 7). Chunk boundaries are kept
+//! 4-byte aligned so consumer-side f32 reductions never split an element.
+
+/// Minimum chunk granularity. Chunking below this only adds per-chunk
+/// launch/doorbell overhead with no overlap benefit (NCCL's FIFO slices
+/// have the same floor); the §5.2 small-message losses come from the costs
+/// that remain even at this floor.
+pub const MIN_CHUNK_BYTES: usize = 512 << 10;
+
+/// How many chunks a single data block gets when the user asked for
+/// `requested` chunks over a whole `msg_bytes`-byte message (the §5.4
+/// "slicing factor" partitions the *message*; a block receives its
+/// proportional share, floored at the minimum granularity).
+pub fn effective_chunks(requested: usize, block_len: usize, msg_bytes: usize) -> usize {
+    assert!(requested > 0);
+    if requested == 1 || block_len == 0 || msg_bytes == 0 {
+        return 1;
+    }
+    let proportional = (requested * block_len).div_ceil(msg_bytes);
+    let cap = (block_len / MIN_CHUNK_BYTES).max(1);
+    proportional.clamp(1, cap)
+}
+
+/// A chunk of a block: offset/length relative to the block start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Split `len` bytes into at most `count` chunks with 4-byte-aligned
+/// boundaries. Returns fewer chunks when `len` is too small to split
+/// (empty chunks are never emitted). `count == 1` means no overlap —
+/// the configuration the paper's Fig. 11 shows is worst.
+pub fn split_aligned(len: usize, count: usize) -> Vec<Chunk> {
+    assert!(count > 0, "chunk count must be positive");
+    if len == 0 {
+        return vec![];
+    }
+    let mut chunks = Vec::with_capacity(count);
+    let mut prev = 0usize;
+    for i in 1..=count {
+        // Even split, rounded down to 4-byte alignment; final boundary = len.
+        let bound = if i == count {
+            len
+        } else {
+            (len * i / count) & !3
+        };
+        if bound > prev {
+            chunks.push(Chunk {
+                offset: prev,
+                len: bound - prev,
+            });
+            prev = bound;
+        }
+    }
+    chunks
+}
+
+/// The deterministic publish order of a rank's blocks (paper §4.3):
+/// start from `(rank_id + 1) % nranks` and wrap. Rank 0 in Fig. 6 publishes
+/// data-01 (for rank 1) first, then data-02, ... ending with its own slot
+/// when `include_self`.
+pub fn publish_order(nranks: usize, rank: usize, include_self: bool) -> Vec<usize> {
+    let mut order: Vec<usize> = (1..nranks).map(|i| (rank + i) % nranks).collect();
+    if include_self {
+        order.push(rank);
+    }
+    order
+}
+
+/// Doorbell index computation (computation-driven allocation, paper §4.5).
+///
+/// The slot is a pure function of (writer, data_id, chunk) — both producer
+/// and consumer derive it independently with no shared metadata, preserving
+/// the paper's "single, simple index computation" property.
+#[derive(Debug, Clone, Copy)]
+pub struct DoorbellIndexer {
+    /// Upper bound on `data_id` values per writer.
+    pub max_data_ids: usize,
+    /// Upper bound on chunks per block.
+    pub max_chunks: usize,
+}
+
+impl DoorbellIndexer {
+    pub fn new(max_data_ids: usize, max_chunks: usize) -> Self {
+        assert!(max_data_ids > 0 && max_chunks > 0);
+        Self {
+            max_data_ids,
+            max_chunks,
+        }
+    }
+
+    /// Total slots needed for `nranks` writers.
+    pub fn slots_needed(&self, nranks: usize) -> usize {
+        nranks * self.max_data_ids * self.max_chunks
+    }
+
+    /// Slot index of (writer, data_id, chunk).
+    pub fn index(&self, writer: usize, data_id: usize, chunk: usize) -> usize {
+        debug_assert!(data_id < self.max_data_ids, "data_id {data_id} out of range");
+        debug_assert!(chunk < self.max_chunks, "chunk {chunk} out of range");
+        (writer * self.max_data_ids + data_id) * self.max_chunks + chunk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_exactly_once() {
+        for len in [1usize, 4, 100, 4096, 1 << 20, (1 << 20) + 7] {
+            for count in [1usize, 2, 3, 8, 64] {
+                let chunks = split_aligned(len, count);
+                assert!(!chunks.is_empty());
+                assert_eq!(chunks[0].offset, 0);
+                let mut pos = 0;
+                for c in &chunks {
+                    assert_eq!(c.offset, pos, "gap/overlap at {pos} (len {len} count {count})");
+                    assert!(c.len > 0);
+                    pos += c.len;
+                }
+                assert_eq!(pos, len);
+            }
+        }
+    }
+
+    #[test]
+    fn interior_boundaries_are_aligned() {
+        let chunks = split_aligned(1001, 8);
+        for c in &chunks[..chunks.len() - 1] {
+            assert_eq!(c.offset % 4, 0);
+            assert_eq!((c.offset + c.len) % 4, 0);
+        }
+    }
+
+    #[test]
+    fn single_chunk_is_whole_block() {
+        let chunks = split_aligned(12345, 1);
+        assert_eq!(chunks, vec![Chunk { offset: 0, len: 12345 }]);
+    }
+
+    #[test]
+    fn tiny_blocks_collapse_chunks() {
+        // 8 bytes cannot make 64 aligned chunks; no empty chunks emitted.
+        let chunks = split_aligned(8, 64);
+        assert!(chunks.len() <= 2);
+        assert_eq!(chunks.iter().map(|c| c.len).sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn zero_len_gives_no_chunks() {
+        assert!(split_aligned(0, 4).is_empty());
+    }
+
+    #[test]
+    fn effective_chunks_distributes_slicing_factor() {
+        let mb = 1 << 20;
+        // 8-way slicing of a 96 MiB message: a 48 MiB block gets 4 chunks.
+        assert_eq!(effective_chunks(8, 48 * mb, 96 * mb), 4);
+        // Tiny blocks collapse to one chunk (min granularity).
+        assert_eq!(effective_chunks(8, 256 << 10, 1 * mb), 1);
+        assert_eq!(effective_chunks(64, 1 * mb, 1 * mb), 2);
+        // requested == 1 is always 1.
+        assert_eq!(effective_chunks(1, 48 * mb, 96 * mb), 1);
+        // Never exceeds the requested factor.
+        assert!(effective_chunks(8, 96 * mb, 96 * mb) <= 8);
+    }
+
+    #[test]
+    fn publish_order_matches_fig6() {
+        // Fig. 6: rank 0 publishes for rank 1 first.
+        assert_eq!(publish_order(4, 0, false), vec![1, 2, 3]);
+        assert_eq!(publish_order(4, 3, false), vec![0, 1, 2]);
+        assert_eq!(publish_order(3, 1, true), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn doorbell_indices_are_injective() {
+        let ix = DoorbellIndexer::new(6, 8);
+        let mut seen = std::collections::HashSet::new();
+        for w in 0..4 {
+            for d in 0..6 {
+                for c in 0..8 {
+                    assert!(seen.insert(ix.index(w, d, c)));
+                }
+            }
+        }
+        assert_eq!(seen.len(), ix.slots_needed(4));
+        assert!(*seen.iter().max().unwrap() < ix.slots_needed(4));
+    }
+}

@@ -1,0 +1,317 @@
+//! The `cxl-ccl` launcher: argument parsing and subcommand dispatch
+//! (clap is unavailable offline; the parser is a small flag scanner).
+//!
+//! ```text
+//! cxl-ccl info                         # topology + artifact summary
+//! cxl-ccl run [--config ccl.conf] [--primitive p] [--variant v]
+//!             [--size 16M] [--ranks 3] [--devices 6] [--chunks 8]
+//!             [--iters 3] [--pjrt-reduce]
+//! cxl-ccl sweep [--primitive p] ...    # virtual-time size sweep vs IB
+//! cxl-ccl train [--preset tiny] [--steps 40] [--variant all]
+//! cxl-ccl latency                      # Table-1 style report
+//! ```
+
+use crate::baseline::{collective_time, IbParams};
+use crate::bench_util::{banner, Table};
+use crate::collectives::builder::plan_collective;
+use crate::collectives::{oracle, CclVariant, Primitive};
+use crate::config::{KvFile, RunConfig};
+use crate::exec::Communicator;
+use crate::pool::PoolLayout;
+use crate::sim::SimFabric;
+use crate::topology::ClusterSpec;
+use crate::train::{FsdpTrainer, TrainConfig};
+use crate::util::size::{fmt_bytes, fmt_time, parse_size};
+use crate::util::SplitMix64;
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+pub struct Args {
+    pub cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = argv.get(i + 1).filter(|v| !v.starts_with("--"));
+                match value {
+                    Some(v) => {
+                        flags.push((name.to_string(), v.clone()));
+                        i += 2;
+                    }
+                    None => {
+                        flags.push((name.to_string(), "true".into()));
+                        i += 1;
+                    }
+                }
+            } else {
+                bail!("unexpected argument {a:?} (flags are --name value)");
+            }
+        }
+        Ok(Self { cmd, flags })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+}
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "info" => cmd_info(),
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "train" => cmd_train(&args),
+        "latency" => cmd_latency(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "cxl-ccl — collective communication over a CXL shared memory pool\n\n\
+         subcommands:\n  \
+         info                     topology + artifact summary\n  \
+         run    [--config F] [--primitive p] [--variant all|aggregate|naive]\n         \
+                [--size 16M] [--ranks 3] [--devices 6] [--chunks 8] [--iters 3]\n  \
+         sweep  [--primitive p] [--ranks 3] [--max 1G]   virtual-time vs InfiniBand\n  \
+         train  [--preset tiny|e2e] [--steps 40] [--variant all] [--chunks 8]\n  \
+         latency                  Table-1 style latency report\n"
+    );
+}
+
+fn build_run_config(args: &Args) -> Result<RunConfig> {
+    let mut rc = match args.get("config") {
+        Some(path) => RunConfig::from_kv(&KvFile::load(path)?)?,
+        None => RunConfig::default(),
+    };
+    if let Some(p) = args.get("primitive") {
+        rc.primitive = Primitive::parse(p)?;
+    }
+    if let Some(v) = args.get("variant") {
+        rc.variant = CclVariant::parse(v)?;
+    }
+    if let Some(s) = args.get("size") {
+        rc.msg_bytes = parse_size(s).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(r) = args.get("ranks") {
+        rc.spec.nranks = r.parse()?;
+    }
+    if let Some(d) = args.get("devices") {
+        rc.spec.ndevices = d.parse()?;
+    }
+    if let Some(c) = args.get("chunks") {
+        rc.chunks = c.parse()?;
+    }
+    if let Some(i) = args.get("iters") {
+        rc.iters = i.parse()?;
+    }
+    // Grow devices to fit the requested message if needed.
+    let worst = rc.spec.nranks * rc.msg_bytes + rc.spec.db_region_size + (1 << 20);
+    if rc.spec.device_capacity < worst {
+        rc.spec.device_capacity = worst.next_power_of_two();
+    }
+    Ok(rc)
+}
+
+fn cmd_info() -> Result<()> {
+    banner("cxl-ccl info");
+    let spec = ClusterSpec::paper(64 << 20);
+    println!(
+        "default topology: {} ranks, {} CXL devices x {}, pool {}",
+        spec.nranks,
+        spec.ndevices,
+        fmt_bytes(spec.device_capacity),
+        fmt_bytes(spec.pool_size())
+    );
+    match crate::runtime::Manifest::discover() {
+        Ok(m) => {
+            println!("artifacts: {:?} (nranks={})", m.dir, m.nranks()?);
+            println!("reduce tiles: {:?}", m.reduce_tiles()?);
+        }
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    match crate::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => println!("pjrt platform: {}", rt.platform()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let rc = build_run_config(args)?;
+    let n = rc.n_elems();
+    banner(&format!(
+        "run: {} {} | {} per rank | {} ranks, {} devices, {} chunks",
+        rc.primitive,
+        rc.variant.name(),
+        fmt_bytes(n * 4),
+        rc.spec.nranks,
+        rc.spec.ndevices,
+        rc.chunks
+    ));
+    let comm = Communicator::shm(&rc.spec)?;
+    let ccl = rc.variant.config(rc.chunks).with_root(0);
+    let mut rng = SplitMix64::new(1);
+    let sends: Vec<Vec<f32>> = (0..rc.spec.nranks)
+        .map(|_| {
+            let mut v = vec![0.0f32; rc.primitive.send_elems(n, rc.spec.nranks)];
+            rng.fill_f32(&mut v);
+            v
+        })
+        .collect();
+    let mut recvs: Vec<Vec<f32>> =
+        vec![vec![0.0f32; rc.primitive.recv_elems(n, rc.spec.nranks)]; rc.spec.nranks];
+    let t = Table::new(&[8, 12, 14]);
+    t.header(&["iter", "wall", "pool GB/s"]);
+    for i in 0..rc.iters {
+        let wall = comm.execute(rc.primitive, &ccl, n, &sends, &mut recvs)?;
+        let plan = plan_collective(rc.primitive, &rc.spec, comm.layout(), &ccl, n)?;
+        let bytes: usize = plan.total_pool_bytes();
+        t.row(&[
+            i.to_string(),
+            fmt_time(wall.as_secs_f64()),
+            format!("{:.2}", bytes as f64 / wall.as_secs_f64() / 1e9),
+        ]);
+    }
+    // Verify the last iteration.
+    let want = oracle::expected(rc.primitive, &sends, n, 0);
+    for r in 0..rc.spec.nranks {
+        for (g, e) in recvs[r].iter().zip(&want[r]) {
+            anyhow::ensure!((g - e).abs() <= 1e-4 * e.abs().max(1.0), "verification failed");
+        }
+    }
+    println!("verification vs oracle ✓");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let primitive = Primitive::parse(&args.get_or("primitive", "allgather"))?;
+    let nranks: usize = args.get_or("ranks", "3").parse()?;
+    let max = parse_size(&args.get_or("max", "1G")).map_err(|e| anyhow::anyhow!(e))?;
+    banner(&format!("virtual-time sweep: {primitive}, {nranks} ranks vs InfiniBand"));
+    let t = Table::new(&[10, 12, 12, 12, 10]);
+    t.header(&["size", "all", "naive", "IB", "all-vs-IB"]);
+    let ib = IbParams::default();
+    let mut bytes = 1 << 20;
+    while bytes <= max {
+        let n = (bytes / 4 / nranks).max(1) * nranks;
+        let dev_cap = ((nranks * bytes) + (8 << 20)).next_power_of_two();
+        let spec = ClusterSpec::new(nranks, 6, dev_cap);
+        let layout = PoolLayout::from_spec(&spec)?;
+        let fab = SimFabric::new(layout);
+        let t_all = fab
+            .simulate(&plan_collective(primitive, &spec, &layout, &CclVariant::All.config(8), n)?)?
+            .total_time;
+        let t_naive = fab
+            .simulate(&plan_collective(primitive, &spec, &layout, &CclVariant::Naive.config(1), n)?)?
+            .total_time;
+        let t_ib = collective_time(primitive, n * 4, nranks, &ib);
+        t.row(&[
+            fmt_bytes(bytes),
+            fmt_time(t_all),
+            fmt_time(t_naive),
+            fmt_time(t_ib),
+            format!("{:.2}x", t_ib / t_all),
+        ]);
+        bytes *= 4;
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        preset: args.get_or("preset", "tiny"),
+        steps: args.get_or("steps", "40").parse()?,
+        variant: CclVariant::parse(&args.get_or("variant", "all"))?,
+        chunks: args.get_or("chunks", "8").parse()?,
+        seed: args.get_or("seed", "0").parse()?,
+        ndevices: args.get_or("devices", "6").parse()?,
+    };
+    banner(&format!("FSDP training: {:?}", cfg));
+    let mut trainer = FsdpTrainer::new(cfg.clone())?;
+    let every = (cfg.steps / 10).max(1);
+    trainer.train(|r| {
+        if r.step % every == 0 || r.step == 1 {
+            println!(
+                "step {:<5} loss {:<9.4} comm {} compute {}",
+                r.step,
+                r.loss,
+                fmt_time(r.comm_secs),
+                fmt_time(r.compute_secs)
+            );
+        }
+    })?;
+    Ok(())
+}
+
+fn cmd_latency() -> Result<()> {
+    use crate::sim::latency::{pointer_chase, LatencyModel};
+    banner("Table 1: latency");
+    let m = LatencyModel::default();
+    println!("local DRAM (paper):  {:.0} ns", m.dram * 1e9);
+    println!("CXL pool   (paper):  {:.0} ns  ({:.2}x)", m.cxl_pool * 1e9, m.ratio());
+    let pool = crate::pool::ShmPool::anon(32 << 20)?;
+    let host = pointer_chase(&pool, 0, 16 << 20, 100_000);
+    println!("this host (measured pointer chase over mapped pool): {:.1} ns", host * 1e9);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let a = Args::parse(&argv(&["run", "--size", "4M", "--pjrt-reduce"])).unwrap();
+        assert_eq!(a.cmd, "run");
+        assert_eq!(a.get("size"), Some("4M"));
+        assert_eq!(a.get("pjrt-reduce"), Some("true"));
+        assert_eq!(a.get_or("ranks", "3"), "3");
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(&argv(&["run", "oops"])).is_err());
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = Args::parse(&argv(&["run", "--size", "1M", "--size", "2M"])).unwrap();
+        assert_eq!(a.get("size"), Some("2M"));
+    }
+
+    #[test]
+    fn run_config_grows_devices_for_large_messages() {
+        let a = Args::parse(&argv(&["run", "--size", "256M"])).unwrap();
+        let rc = build_run_config(&a).unwrap();
+        assert!(rc.spec.device_capacity >= 3 * (256 << 20));
+    }
+}

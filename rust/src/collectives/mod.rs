@@ -1,0 +1,262 @@
+//! The eight NCCL-style collective primitives over the CXL pool (paper
+//! Table 2), each in the paper's three implementations:
+//!
+//! - [`CclVariant::All`] — interleaving + fine-grained chunking + doorbell
+//!   overlap (the full system),
+//! - [`CclVariant::Aggregate`] — interleaving at coarse data-block
+//!   granularity, no asynchrony/overlap (barrier between phases),
+//! - [`CclVariant::Naive`] — sequential pool placement, no interleaving,
+//!   no overlap.
+//!
+//! A collective is *planned* into per-rank [`ops::RankPlan`]s (two ordered
+//! streams of [`ops::Op`]s: writeStream and readStream, §4.4) and then
+//! either executed for real by [`crate::exec::Communicator`] or timed in
+//! virtual time by [`crate::sim::fabric::SimFabric`]. One algorithm, two
+//! backends.
+
+pub mod builder;
+pub mod oracle;
+pub mod ops;
+pub mod p2p;
+pub mod staged;
+
+pub use builder::plan_collective;
+pub use ops::{CollectivePlan, Op, RankPlan};
+pub use p2p::plan_send_recv;
+pub use staged::simulate_staged_allreduce;
+
+use anyhow::{bail, Result};
+
+/// The eight primitives of paper Table 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Primitive {
+    AllReduce,
+    Broadcast,
+    Reduce,
+    AllGather,
+    ReduceScatter,
+    Gather,
+    Scatter,
+    AllToAll,
+}
+
+impl Primitive {
+    pub const ALL: [Primitive; 8] = [
+        Primitive::AllReduce,
+        Primitive::Broadcast,
+        Primitive::Reduce,
+        Primitive::AllGather,
+        Primitive::ReduceScatter,
+        Primitive::Gather,
+        Primitive::Scatter,
+        Primitive::AllToAll,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Primitive::AllReduce => "allreduce",
+            Primitive::Broadcast => "broadcast",
+            Primitive::Reduce => "reduce",
+            Primitive::AllGather => "allgather",
+            Primitive::ReduceScatter => "reducescatter",
+            Primitive::Gather => "gather",
+            Primitive::Scatter => "scatter",
+            Primitive::AllToAll => "alltoall",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Primitive> {
+        for p in Self::ALL {
+            if p.name() == s.to_ascii_lowercase() {
+                return Ok(p);
+            }
+        }
+        bail!("unknown primitive {s:?} (expected one of allreduce|broadcast|reduce|allgather|reducescatter|gather|scatter|alltoall)")
+    }
+
+    /// Communication pattern class (paper Table 2 / §4.3): type 1 is
+    /// 1→N or N→1 (root-based), type 2 is N→N.
+    pub fn is_root_based(&self) -> bool {
+        matches!(
+            self,
+            Primitive::Broadcast | Primitive::Reduce | Primitive::Gather | Primitive::Scatter
+        )
+    }
+
+    /// Whether the consumer side performs a reduction.
+    pub fn reduces(&self) -> bool {
+        matches!(
+            self,
+            Primitive::AllReduce | Primitive::Reduce | Primitive::ReduceScatter
+        )
+    }
+
+    /// Per-rank send buffer length in elements for message size `n`
+    /// (Table 2 `SendSize`; `n` is the per-rank `N`).
+    pub fn send_elems(&self, n: usize, nranks: usize) -> usize {
+        match self {
+            Primitive::Scatter => n * nranks,
+            _ => n,
+        }
+    }
+
+    /// Per-rank recv buffer length in elements (Table 2 `RecvSize`).
+    pub fn recv_elems(&self, n: usize, nranks: usize) -> usize {
+        match self {
+            Primitive::AllGather | Primitive::Gather => n * nranks,
+            Primitive::ReduceScatter => n / nranks,
+            _ => n,
+        }
+    }
+
+    /// Total bytes a rank moves through the pool (used for bus-bandwidth
+    /// style reporting in the benches).
+    pub fn bytes_on_wire(&self, n: usize, nranks: usize) -> usize {
+        let b = n * 4;
+        match self {
+            Primitive::AllReduce => b + b * (nranks - 1),        // write N, read (nr-1)N
+            Primitive::Broadcast => b,                           // root writes N, each reads N
+            Primitive::Reduce => b,                              // each writes N, root reads (nr-1)N
+            Primitive::AllGather => b * nranks,                  // write N, read (nr-1)N
+            Primitive::ReduceScatter => b,                       // write (nr-1)/nr N, read same
+            Primitive::Gather => b,
+            Primitive::Scatter => b,
+            Primitive::AllToAll => b,
+        }
+    }
+}
+
+impl std::fmt::Display for Primitive {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The three CXL-CCL implementations evaluated in §5.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CclVariant {
+    /// Full system: interleave + chunking + doorbell overlap.
+    All,
+    /// Interleave at data-block granularity only; barrier, no overlap.
+    Aggregate,
+    /// Sequential placement; barrier, no overlap, no interleave.
+    Naive,
+}
+
+impl CclVariant {
+    pub const ALL: [CclVariant; 3] = [CclVariant::All, CclVariant::Aggregate, CclVariant::Naive];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CclVariant::All => "cxl-ccl-all",
+            CclVariant::Aggregate => "cxl-ccl-aggregate",
+            CclVariant::Naive => "cxl-ccl-naive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CclVariant> {
+        match s.to_ascii_lowercase().as_str() {
+            "all" | "cxl-ccl-all" => Ok(CclVariant::All),
+            "aggregate" | "cxl-ccl-aggregate" => Ok(CclVariant::Aggregate),
+            "naive" | "cxl-ccl-naive" => Ok(CclVariant::Naive),
+            _ => bail!("unknown variant {s:?} (all|aggregate|naive)"),
+        }
+    }
+
+    /// Build a config; `chunks` (the §5.4 slicing factor) only applies to
+    /// `All` — the other variants are single-chunk by definition.
+    pub fn config(self, chunks: usize) -> CclConfig {
+        CclConfig::new(self, chunks)
+    }
+}
+
+/// Configuration of one collective invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CclConfig {
+    pub variant: CclVariant,
+    /// Slicing factor: chunks per data block (paper §5.4; 4–8 is best).
+    pub chunks: usize,
+    /// Root rank for the root-based primitives.
+    pub root: usize,
+}
+
+impl CclConfig {
+    pub fn new(variant: CclVariant, chunks: usize) -> Self {
+        let chunks = match variant {
+            CclVariant::All => chunks.max(1),
+            // Aggregate operates at data-block granularity; Naive has no
+            // chunking at all (§5.1).
+            CclVariant::Aggregate | CclVariant::Naive => 1,
+        };
+        Self {
+            variant,
+            chunks,
+            root: 0,
+        }
+    }
+
+    pub fn with_root(mut self, root: usize) -> Self {
+        self.root = root;
+        self
+    }
+
+    /// Paper default: the §5.4 sweet spot.
+    pub fn default_all() -> Self {
+        CclConfig::new(CclVariant::All, 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_parse_round_trips() {
+        for p in Primitive::ALL {
+            assert_eq!(Primitive::parse(p.name()).unwrap(), p);
+        }
+        assert!(Primitive::parse("sendrecv").is_err());
+    }
+
+    #[test]
+    fn table2_sizes() {
+        // Table 2 with N = 12, nranks = 3.
+        assert_eq!(Primitive::AllReduce.send_elems(12, 3), 12);
+        assert_eq!(Primitive::AllReduce.recv_elems(12, 3), 12);
+        assert_eq!(Primitive::AllGather.recv_elems(12, 3), 36);
+        assert_eq!(Primitive::ReduceScatter.recv_elems(12, 3), 4);
+        assert_eq!(Primitive::Gather.recv_elems(12, 3), 36);
+        assert_eq!(Primitive::Scatter.send_elems(12, 3), 36);
+        assert_eq!(Primitive::Scatter.recv_elems(12, 3), 12);
+        assert_eq!(Primitive::AllToAll.send_elems(12, 3), 12);
+        assert_eq!(Primitive::AllToAll.recv_elems(12, 3), 12);
+    }
+
+    #[test]
+    fn pattern_classes_match_paper() {
+        assert!(Primitive::Broadcast.is_root_based());
+        assert!(Primitive::Scatter.is_root_based());
+        assert!(!Primitive::AllReduce.is_root_based());
+        assert!(!Primitive::AllToAll.is_root_based());
+        assert!(Primitive::ReduceScatter.reduces());
+        assert!(!Primitive::AllGather.reduces());
+    }
+
+    #[test]
+    fn aggregate_and_naive_force_single_chunk() {
+        assert_eq!(CclVariant::All.config(8).chunks, 8);
+        assert_eq!(CclVariant::Aggregate.config(8).chunks, 1);
+        assert_eq!(CclVariant::Naive.config(8).chunks, 1);
+        assert_eq!(CclVariant::All.config(0).chunks, 1);
+    }
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!(CclVariant::parse("all").unwrap(), CclVariant::All);
+        assert_eq!(
+            CclVariant::parse("CXL-CCL-Naive").unwrap(),
+            CclVariant::Naive
+        );
+        assert!(CclVariant::parse("turbo").is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! The per-rank operation streams a planned collective compiles to.
+//!
+//! Mirrors §4.4: each rank owns a `writeStream` and a `readStream`
+//! (two CUDA streams in the paper; two threads in [`crate::exec`]).
+//! Ordering rules:
+//! - ops within a stream execute serially, in order;
+//! - across streams/ranks, only doorbells (and the barrier, for the
+//!   non-overlapping variants) order operations.
+
+use crate::collectives::{CclVariant, Primitive};
+
+/// One operation on a rank's stream. All offsets are **bytes**; `src_off`
+/// indexes the rank's send buffer, `dst_off` its recv buffer, `pool_off`
+/// the shared pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Publish: copy `len` bytes of the send buffer into the pool
+    /// (`cudaMemcpyDeviceToHost` in Listing 2).
+    Write {
+        pool_off: usize,
+        src_off: usize,
+        len: usize,
+    },
+    /// Mark a chunk READY and flush (Listing 3 lines 5–7).
+    SetDoorbell { db: usize },
+    /// Spin until a chunk is READY (Listing 3 lines 9–13).
+    WaitDoorbell { db: usize },
+    /// Retrieve: copy `len` pool bytes into the recv buffer
+    /// (`cudaMemcpyHostToDevice`).
+    Read {
+        pool_off: usize,
+        dst_off: usize,
+        len: usize,
+    },
+    /// Retrieve + accumulate f32 elements into the recv buffer (the
+    /// consumer-side reduction; executed by the reduce engine, which may be
+    /// the AOT Pallas kernel via PJRT).
+    ReduceF32 {
+        pool_off: usize,
+        dst_off: usize,
+        len: usize,
+    },
+    /// Local move from the rank's own send buffer to its recv buffer
+    /// (a rank's own contribution never goes through the pool).
+    CopyLocal {
+        src_off: usize,
+        dst_off: usize,
+        len: usize,
+    },
+    /// Full-communicator rendezvous (Naive/Aggregate phase separator).
+    Barrier,
+}
+
+impl Op {
+    /// Bytes this op moves through the pool (0 for sync/local ops).
+    pub fn pool_bytes(&self) -> usize {
+        match self {
+            Op::Write { len, .. } | Op::Read { len, .. } | Op::ReduceF32 { len, .. } => *len,
+            _ => 0,
+        }
+    }
+}
+
+/// The two streams of one rank.
+#[derive(Debug, Clone, Default)]
+pub struct RankPlan {
+    pub rank: usize,
+    pub write_ops: Vec<Op>,
+    pub read_ops: Vec<Op>,
+}
+
+impl RankPlan {
+    pub fn new(rank: usize) -> Self {
+        Self {
+            rank,
+            write_ops: Vec::new(),
+            read_ops: Vec::new(),
+        }
+    }
+
+    pub fn pool_bytes_written(&self) -> usize {
+        self.write_ops.iter().map(Op::pool_bytes).sum()
+    }
+
+    pub fn pool_bytes_read(&self) -> usize {
+        self.read_ops.iter().map(Op::pool_bytes).sum()
+    }
+}
+
+/// A fully planned collective: one `RankPlan` per rank plus metadata.
+#[derive(Debug, Clone)]
+pub struct CollectivePlan {
+    pub primitive: Primitive,
+    pub variant: CclVariant,
+    pub nranks: usize,
+    /// Per-rank message size `N` in f32 elements (Table 2 semantics).
+    pub n_elems: usize,
+    /// Required send/recv buffer lengths in elements.
+    pub send_elems: usize,
+    pub recv_elems: usize,
+    pub ranks: Vec<RankPlan>,
+}
+
+impl CollectivePlan {
+    /// Sanity checks shared by tests and the property harness.
+    pub fn validate(&self, pool_size: usize) -> Result<(), String> {
+        if self.ranks.len() != self.nranks {
+            return Err("plan rank count mismatch".into());
+        }
+        // Writes from different ranks must never overlap in the pool.
+        let mut intervals: Vec<(usize, usize, usize)> = Vec::new();
+        for rp in &self.ranks {
+            for op in &rp.write_ops {
+                if let Op::Write { pool_off, len, .. } = op {
+                    if pool_off + len > pool_size {
+                        return Err(format!(
+                            "rank {} writes [{pool_off}, +{len}) beyond pool {pool_size}",
+                            rp.rank
+                        ));
+                    }
+                    intervals.push((*pool_off, pool_off + len, rp.rank));
+                }
+            }
+        }
+        intervals.sort_unstable();
+        for w in intervals.windows(2) {
+            if w[1].0 < w[0].1 {
+                return Err(format!(
+                    "overlapping pool writes: rank {} [{}..{}) vs rank {} [{}..{})",
+                    w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+                ));
+            }
+        }
+        // Every WaitDoorbell must have a matching SetDoorbell somewhere.
+        let sets: std::collections::HashSet<usize> = self
+            .ranks
+            .iter()
+            .flat_map(|rp| rp.write_ops.iter())
+            .filter_map(|op| match op {
+                Op::SetDoorbell { db } => Some(*db),
+                _ => None,
+            })
+            .collect();
+        for rp in &self.ranks {
+            for op in &rp.read_ops {
+                if let Op::WaitDoorbell { db } = op {
+                    if !sets.contains(db) {
+                        return Err(format!(
+                            "rank {} waits on doorbell {db} that nobody rings",
+                            rp.rank
+                        ));
+                    }
+                }
+            }
+        }
+        // Barrier discipline: either all streams carry exactly one barrier
+        // (Naive/Aggregate) or none do (All).
+        let barrier_counts: Vec<usize> = self
+            .ranks
+            .iter()
+            .flat_map(|rp| {
+                [
+                    rp.write_ops.iter().filter(|o| matches!(o, Op::Barrier)).count(),
+                    rp.read_ops.iter().filter(|o| matches!(o, Op::Barrier)).count(),
+                ]
+            })
+            .collect();
+        if !(barrier_counts.iter().all(|c| *c == 0) || barrier_counts.iter().all(|c| *c == 1)) {
+            return Err("inconsistent barrier placement across streams".into());
+        }
+        Ok(())
+    }
+
+    /// Total bytes all ranks move through the pool.
+    pub fn total_pool_bytes(&self) -> usize {
+        self.ranks
+            .iter()
+            .map(|r| r.pool_bytes_written() + r.pool_bytes_read())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_pool_bytes() {
+        assert_eq!(
+            Op::Write { pool_off: 0, src_off: 0, len: 128 }.pool_bytes(),
+            128
+        );
+        assert_eq!(Op::Barrier.pool_bytes(), 0);
+        assert_eq!(Op::SetDoorbell { db: 3 }.pool_bytes(), 0);
+        assert_eq!(
+            Op::ReduceF32 { pool_off: 0, dst_off: 0, len: 64 }.pool_bytes(),
+            64
+        );
+    }
+
+    #[test]
+    fn validate_catches_overlapping_writes() {
+        let mut p0 = RankPlan::new(0);
+        p0.write_ops.push(Op::Write { pool_off: 100, src_off: 0, len: 64 });
+        let mut p1 = RankPlan::new(1);
+        p1.write_ops.push(Op::Write { pool_off: 130, src_off: 0, len: 64 });
+        let plan = CollectivePlan {
+            primitive: Primitive::AllGather,
+            variant: CclVariant::All,
+            nranks: 2,
+            n_elems: 16,
+            send_elems: 16,
+            recv_elems: 32,
+            ranks: vec![p0, p1],
+        };
+        let err = plan.validate(1 << 20).unwrap_err();
+        assert!(err.contains("overlapping"));
+    }
+
+    #[test]
+    fn validate_catches_unmatched_doorbell() {
+        let mut p0 = RankPlan::new(0);
+        p0.read_ops.push(Op::WaitDoorbell { db: 9 });
+        let plan = CollectivePlan {
+            primitive: Primitive::Broadcast,
+            variant: CclVariant::All,
+            nranks: 1,
+            n_elems: 4,
+            send_elems: 4,
+            recv_elems: 4,
+            ranks: vec![p0],
+        };
+        let err = plan.validate(1 << 20).unwrap_err();
+        assert!(err.contains("nobody rings"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Pure in-memory reference semantics for every primitive (Table 2).
+//!
+//! The executor and simulator are tested against these oracles; they are the
+//! rust-side analogue of `python/compile/kernels/ref.py`.
+
+use crate::collectives::Primitive;
+
+/// Compute the expected recv buffer of every rank.
+///
+/// `sends[r]` is rank r's send buffer (Table 2 `SendSize` elements);
+/// returns one Table 2 `RecvSize` buffer per rank. Ranks that receive
+/// nothing (non-root Gather/Reduce) get zero-filled buffers, matching the
+/// executor's untouched-recv convention.
+pub fn expected(primitive: Primitive, sends: &[Vec<f32>], n: usize, root: usize) -> Vec<Vec<f32>> {
+    let nr = sends.len();
+    assert!(root < nr);
+    match primitive {
+        Primitive::AllReduce => {
+            let mut sum = vec![0.0f32; n];
+            for s in sends {
+                for (a, b) in sum.iter_mut().zip(s) {
+                    *a += b;
+                }
+            }
+            vec![sum; nr]
+        }
+        Primitive::Broadcast => vec![sends[root][..n].to_vec(); nr],
+        Primitive::Reduce => {
+            let mut out = vec![vec![0.0f32; n]; nr];
+            for s in sends {
+                for (a, b) in out[root].iter_mut().zip(s) {
+                    *a += b;
+                }
+            }
+            out
+        }
+        Primitive::AllGather => {
+            let mut cat = Vec::with_capacity(n * nr);
+            for s in sends {
+                cat.extend_from_slice(&s[..n]);
+            }
+            vec![cat; nr]
+        }
+        Primitive::ReduceScatter => {
+            let seg = n / nr;
+            (0..nr)
+                .map(|r| {
+                    let mut acc = vec![0.0f32; seg];
+                    for s in sends {
+                        for (a, b) in acc.iter_mut().zip(&s[r * seg..(r + 1) * seg]) {
+                            *a += b;
+                        }
+                    }
+                    acc
+                })
+                .collect()
+        }
+        Primitive::Gather => {
+            let mut out = vec![vec![0.0f32; n * nr]; nr];
+            for (s, send) in sends.iter().enumerate() {
+                out[root][s * n..(s + 1) * n].copy_from_slice(&send[..n]);
+            }
+            out
+        }
+        Primitive::Scatter => (0..nr)
+            .map(|r| sends[root][r * n..(r + 1) * n].to_vec())
+            .collect(),
+        Primitive::AllToAll => {
+            let seg = n / nr;
+            (0..nr)
+                .map(|r| {
+                    let mut out = vec![0.0f32; n];
+                    for (s, send) in sends.iter().enumerate() {
+                        out[s * seg..(s + 1) * seg]
+                            .copy_from_slice(&send[r * seg..(r + 1) * seg]);
+                    }
+                    out
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sends(nr: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..nr)
+            .map(|r| (0..len).map(|i| (r * 100 + i) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn allreduce_sums() {
+        let out = expected(Primitive::AllReduce, &sends(3, 4), 4, 0);
+        assert_eq!(out[0], vec![300.0, 303.0, 306.0, 309.0]);
+        assert_eq!(out[1], out[0]);
+    }
+
+    #[test]
+    fn broadcast_copies_root() {
+        let out = expected(Primitive::Broadcast, &sends(3, 4), 4, 1);
+        for r in 0..3 {
+            assert_eq!(out[r], vec![100.0, 101.0, 102.0, 103.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_only_root_nonzero() {
+        let out = expected(Primitive::Reduce, &sends(3, 2), 2, 2);
+        assert_eq!(out[2], vec![300.0, 303.0]);
+        assert_eq!(out[0], vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn allgather_concatenates_by_rank() {
+        let out = expected(Primitive::AllGather, &sends(2, 2), 2, 0);
+        assert_eq!(out[0], vec![0.0, 1.0, 100.0, 101.0]);
+        assert_eq!(out[1], out[0]);
+    }
+
+    #[test]
+    fn reducescatter_segments() {
+        let out = expected(Primitive::ReduceScatter, &sends(2, 4), 4, 0);
+        // seg = 2; rank 0 gets sum of first halves, rank 1 second halves.
+        assert_eq!(out[0], vec![100.0, 102.0]);
+        assert_eq!(out[1], vec![104.0, 106.0]);
+    }
+
+    #[test]
+    fn gather_places_by_source() {
+        let out = expected(Primitive::Gather, &sends(2, 2), 2, 1);
+        assert_eq!(out[1], vec![0.0, 1.0, 100.0, 101.0]);
+        assert_eq!(out[0], vec![0.0; 4]);
+    }
+
+    #[test]
+    fn scatter_slices_root_buffer() {
+        let root_buf: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let s = vec![root_buf, vec![0.0; 6]];
+        let out = expected(Primitive::Scatter, &s, 3, 0);
+        assert_eq!(out[0], vec![0.0, 1.0, 2.0]);
+        assert_eq!(out[1], vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn alltoall_transposes_segments() {
+        let out = expected(Primitive::AllToAll, &sends(2, 4), 4, 0);
+        // rank0 recv: [s0 seg0, s1 seg0] = [0,1, 100,101]
+        assert_eq!(out[0], vec![0.0, 1.0, 100.0, 101.0]);
+        assert_eq!(out[1], vec![2.0, 3.0, 102.0, 103.0]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Point-to-point send/recv over the pool (the `ncclSend`/`ncclRecv`
+//! analogue — excluded from the paper's evaluation because it is not a
+//! collective, but required by any CCL users would adopt).
+//!
+//! A send/recv pair is planned with the same machinery as the collectives:
+//! the sender publishes chunks to devices chosen by the type-1 round-robin
+//! (the transfer is 1→1, so spreading across devices buys the aggregate
+//! bandwidth of the pool up to the sender's DMA-engine cap), and the
+//! receiver chases the chunk doorbells.
+
+use crate::chunking::{effective_chunks, split_aligned};
+use crate::collectives::ops::{CollectivePlan, Op, RankPlan};
+use crate::collectives::{CclConfig, CclVariant, Primitive};
+use crate::interleave;
+use crate::pool::PoolLayout;
+use crate::topology::ClusterSpec;
+use anyhow::{bail, Result};
+
+/// Plan a single send/recv: `src` rank's `n_elems` f32 buffer lands in
+/// `dst` rank's recv buffer. Returned as a [`CollectivePlan`] so both the
+/// executor and the simulator run it unchanged (non-participating ranks
+/// get empty streams).
+pub fn plan_send_recv(
+    spec: &ClusterSpec,
+    layout: &PoolLayout,
+    cfg: &CclConfig,
+    src: usize,
+    dst: usize,
+    n_elems: usize,
+) -> Result<CollectivePlan> {
+    spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+    if src >= spec.nranks || dst >= spec.nranks {
+        bail!("send/recv ranks ({src} -> {dst}) out of range ({} ranks)", spec.nranks);
+    }
+    if src == dst {
+        bail!("send/recv requires distinct ranks (got {src} -> {src})");
+    }
+    if n_elems == 0 {
+        bail!("message size must be positive");
+    }
+    let n_bytes = n_elems * 4;
+    let nd = layout.stacking.ndevices;
+    // Spread the message across all devices (type-1, data_id = piece).
+    let npieces = if cfg.variant == CclVariant::Naive { 1 } else { nd };
+    let pieces = split_aligned(n_bytes, npieces);
+    let stride = pieces.iter().map(|p| p.len).max().unwrap().div_ceil(64) * 64;
+    let ix = crate::chunking::DoorbellIndexer::new(nd.max(spec.nranks), cfg.chunks);
+    if ix.slots_needed(spec.nranks) > layout.doorbell_slots() {
+        bail!("doorbell region too small for send/recv slicing");
+    }
+
+    let mut ranks: Vec<RankPlan> = (0..spec.nranks).map(RankPlan::new).collect();
+    for (b, piece) in pieces.iter().enumerate() {
+        let addr = interleave::type1(layout, b, stride)?;
+        let chunks = effective_chunks(cfg.chunks, piece.len, n_bytes);
+        for (ci, ch) in split_aligned(piece.len, chunks).into_iter().enumerate() {
+            ranks[src].write_ops.push(Op::Write {
+                pool_off: addr.pool_offset + ch.offset,
+                src_off: piece.offset + ch.offset,
+                len: ch.len,
+            });
+            if cfg.variant == CclVariant::All {
+                ranks[src].write_ops.push(Op::SetDoorbell { db: ix.index(src, b, ci) });
+                ranks[dst].read_ops.push(Op::WaitDoorbell { db: ix.index(src, b, ci) });
+            }
+            ranks[dst].read_ops.push(Op::Read {
+                pool_off: addr.pool_offset + ch.offset,
+                dst_off: piece.offset + ch.offset,
+                len: ch.len,
+            });
+        }
+    }
+    if cfg.variant != CclVariant::All {
+        for rp in &mut ranks {
+            rp.write_ops.push(Op::Barrier);
+            rp.read_ops.insert(0, Op::Barrier);
+        }
+    }
+    Ok(CollectivePlan {
+        // Reported as Broadcast-shaped for accounting (1 writer, 1 reader).
+        primitive: Primitive::Broadcast,
+        variant: cfg.variant,
+        nranks: spec.nranks,
+        n_elems,
+        send_elems: n_elems,
+        recv_elems: n_elems,
+        ranks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Communicator;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn send_recv_delivers_payload() {
+        let spec = ClusterSpec::new(3, 6, 8 << 20);
+        let comm = Communicator::shm(&spec).unwrap();
+        let layout = *comm.layout();
+        let cfg = CclConfig::default_all();
+        let n = 3 * 4099; // ragged
+        let plan = plan_send_recv(&spec, &layout, &cfg, 2, 0, n).unwrap();
+        plan.validate(layout.pool_size()).unwrap();
+        let mut rng = SplitMix64::new(77);
+        let mut payload = vec![0.0f32; n];
+        rng.fill_f32(&mut payload);
+        let sends = vec![vec![0.0f32; n], vec![0.0f32; n], payload.clone()];
+        let mut recvs = vec![vec![0.0f32; n]; 3];
+        comm.run_plan(&plan, &sends, &mut recvs).unwrap();
+        assert_eq!(recvs[0], payload, "payload must arrive intact");
+        assert!(recvs[1].iter().all(|v| *v == 0.0), "bystander untouched");
+    }
+
+    #[test]
+    fn send_recv_spreads_across_devices() {
+        let spec = ClusterSpec::new(2, 6, 8 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let plan =
+            plan_send_recv(&spec, &layout, &CclConfig::default_all(), 0, 1, 6 * 65536).unwrap();
+        let devices: std::collections::HashSet<usize> = plan.ranks[0]
+            .write_ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::Write { pool_off, .. } => Some(layout.stacking.device_of(*pool_off)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(devices.len(), 6, "message should stripe all devices");
+    }
+
+    #[test]
+    fn invalid_pairs_rejected() {
+        let spec = ClusterSpec::new(2, 6, 8 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let cfg = CclConfig::default_all();
+        assert!(plan_send_recv(&spec, &layout, &cfg, 0, 0, 64).is_err());
+        assert!(plan_send_recv(&spec, &layout, &cfg, 0, 5, 64).is_err());
+        assert!(plan_send_recv(&spec, &layout, &cfg, 0, 1, 0).is_err());
+    }
+
+    #[test]
+    fn naive_variant_uses_barrier() {
+        let spec = ClusterSpec::new(2, 6, 8 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let plan =
+            plan_send_recv(&spec, &layout, &CclVariant::Naive.config(1), 0, 1, 1024).unwrap();
+        assert!(plan.ranks[0].write_ops.contains(&Op::Barrier));
+        assert!(!plan.ranks[1]
+            .read_ops
+            .iter()
+            .any(|o| matches!(o, Op::WaitDoorbell { .. })));
+    }
+}

@@ -1,0 +1,124 @@
+//! Staged AllReduce — the extension the paper's §5.2 discussion motivates.
+//!
+//! The paper's one-shot AllReduce has every rank read *all* other ranks'
+//! full buffers ("partially reduced results cannot be reused across
+//! ranks"), which is why it only reaches ~1.05× of the IB ring at large
+//! sizes and scales poorly (Fig. 10). The classic fix — exactly what the
+//! ring does — is to stage it as **ReduceScatter followed by AllGather**:
+//! each rank reduces only its 1/nranks slice (reusing everyone's partial
+//! work) and then re-distributes.
+//!
+//! On the pool this halves the per-rank read volume from `(nr−1)·N` to
+//! `2·(nr−1)·N/nr`, at the cost of a second synchronization phase. The
+//! ablation bench (`fig9_collectives` prints it; `hotpath` measures it for
+//! real) shows where the trade crosses over.
+
+use crate::collectives::builder::plan_collective;
+use crate::collectives::{CclConfig, Primitive};
+use crate::exec::Communicator;
+use crate::pool::PoolLayout;
+use crate::sim::SimFabric;
+use crate::topology::ClusterSpec;
+use anyhow::{ensure, Result};
+use std::time::Duration;
+
+/// Virtual-time cost of the staged AllReduce (RS phase + AG phase).
+pub fn simulate_staged_allreduce(
+    spec: &ClusterSpec,
+    layout: &PoolLayout,
+    cfg: &CclConfig,
+    n_elems: usize,
+) -> Result<f64> {
+    ensure!(
+        n_elems % spec.nranks == 0,
+        "staged allreduce needs nranks-divisible length"
+    );
+    let fab = SimFabric::new(*layout);
+    let rs = plan_collective(Primitive::ReduceScatter, spec, layout, cfg, n_elems)?;
+    let ag = plan_collective(Primitive::AllGather, spec, layout, cfg, n_elems / spec.nranks)?;
+    Ok(fab.simulate(&rs)?.total_time + fab.simulate(&ag)?.total_time)
+}
+
+impl Communicator {
+    /// In-place staged AllReduce: ReduceScatter + AllGather through the
+    /// pool. Requires `bufs[r].len()` divisible by nranks.
+    pub fn all_reduce_staged_f32(
+        &self,
+        bufs: &mut [Vec<f32>],
+        cfg: &CclConfig,
+    ) -> Result<Duration> {
+        let nr = self.spec().nranks;
+        let n = bufs.first().map(|b| b.len()).unwrap_or(0);
+        ensure!(n % nr == 0, "buffer length {n} not divisible by {nr} ranks");
+        let sends: Vec<Vec<f32>> = bufs.to_vec();
+        let t0 = std::time::Instant::now();
+        // Phase 1: each rank ends up owning the reduced slice r.
+        let slices = self.reduce_scatter_f32(&sends, cfg)?;
+        // Phase 2: share the reduced slices back out.
+        let gathered = self.all_gather_f32(&slices, cfg)?;
+        for (r, buf) in bufs.iter_mut().enumerate() {
+            buf.copy_from_slice(&gathered[r][..n]);
+        }
+        Ok(t0.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{oracle, CclVariant};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn staged_matches_oracle() {
+        let spec = ClusterSpec::new(4, 6, 8 << 20);
+        let comm = Communicator::shm(&spec).unwrap();
+        let n = 4 * 1024;
+        let mut rng = SplitMix64::new(3);
+        let mut bufs: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_f32(&mut v);
+                v
+            })
+            .collect();
+        let want = oracle::expected(Primitive::AllReduce, &bufs, n, 0);
+        comm.all_reduce_staged_f32(&mut bufs, &CclConfig::default_all())
+            .unwrap();
+        for r in 0..4 {
+            for (g, e) in bufs[r].iter().zip(&want[r]) {
+                assert!((g - e).abs() <= 1e-4 * e.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn staged_beats_oneshot_at_scale_in_virtual_time() {
+        // The §5.2 limitation: one-shot reads (nr-1)·N per rank. Staged
+        // reads 2·(nr-1)·N/nr. At 6 ranks the staged plan must win.
+        let spec = ClusterSpec::new(6, 6, 1 << 30);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let cfg = CclVariant::All.config(8);
+        let n = (64 << 20) / 4 / 6 * 6; // ~64 MiB per rank, divisible by 6
+        let staged = simulate_staged_allreduce(&spec, &layout, &cfg, n).unwrap();
+        let oneshot = {
+            let fab = SimFabric::new(layout);
+            let plan = plan_collective(Primitive::AllReduce, &spec, &layout, &cfg, n).unwrap();
+            fab.simulate(&plan).unwrap().total_time
+        };
+        assert!(
+            staged < oneshot * 0.7,
+            "staged {staged} should clearly beat one-shot {oneshot} at 6 ranks"
+        );
+    }
+
+    #[test]
+    fn indivisible_length_rejected() {
+        let spec = ClusterSpec::new(4, 6, 8 << 20);
+        let comm = Communicator::shm(&spec).unwrap();
+        let mut bufs = vec![vec![0.0f32; 1001]; 4];
+        assert!(comm
+            .all_reduce_staged_f32(&mut bufs, &CclConfig::default_all())
+            .is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Run configuration: a small INI-style `key = value` file format plus the
+//! typed `RunConfig` the launcher consumes (serde/toml are unavailable in
+//! this offline build, so the parser is local).
+//!
+//! Example (`ccl.conf`):
+//! ```text
+//! # communicator
+//! nranks   = 3
+//! ndevices = 6
+//! device_capacity = 64M
+//! # collective
+//! primitive = allgather
+//! variant   = all
+//! chunks    = 8
+//! msg_size  = 16M
+//! ```
+
+use crate::collectives::{CclVariant, Primitive};
+use crate::topology::ClusterSpec;
+use crate::util::size::parse_size;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed key/value file.
+#[derive(Debug, Clone, Default)]
+pub struct KvFile {
+    kv: HashMap<String, String>,
+}
+
+impl KvFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = HashMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {raw:?}", ln + 1);
+            };
+            let key = k.trim().to_string();
+            if kv.insert(key.clone(), v.trim().to_string()).is_some() {
+                bail!("line {}: duplicate key {key:?}", ln + 1);
+            }
+        }
+        Ok(Self { kv })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("key {key:?}={v:?}")),
+        }
+    }
+
+    pub fn size_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => parse_size(v).map_err(|e| anyhow::anyhow!(e)),
+        }
+    }
+}
+
+/// Full launcher configuration for one collective run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub spec: ClusterSpec,
+    pub primitive: Primitive,
+    pub variant: CclVariant,
+    pub chunks: usize,
+    /// Message size in bytes (`N × 4`).
+    pub msg_bytes: usize,
+    pub iters: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            spec: ClusterSpec::paper(64 << 20),
+            primitive: Primitive::AllGather,
+            variant: CclVariant::All,
+            chunks: 8,
+            msg_bytes: 4 << 20,
+            iters: 3,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed file, falling back to defaults per key.
+    pub fn from_kv(kv: &KvFile) -> Result<Self> {
+        let d = RunConfig::default();
+        let mut spec = ClusterSpec::new(
+            kv.usize_or("nranks", d.spec.nranks)?,
+            kv.usize_or("ndevices", d.spec.ndevices)?,
+            kv.size_or("device_capacity", d.spec.device_capacity)?,
+        );
+        spec.db_region_size = kv.size_or("db_region", spec.db_region_size)?;
+        Ok(Self {
+            spec,
+            primitive: match kv.get("primitive") {
+                Some(p) => Primitive::parse(p)?,
+                None => d.primitive,
+            },
+            variant: match kv.get("variant") {
+                Some(v) => CclVariant::parse(v)?,
+                None => d.variant,
+            },
+            chunks: kv.usize_or("chunks", d.chunks)?,
+            msg_bytes: kv.size_or("msg_size", d.msg_bytes)?,
+            iters: kv.usize_or("iters", d.iters)?,
+        })
+    }
+
+    pub fn n_elems(&self) -> usize {
+        (self.msg_bytes / 4 / self.spec.nranks).max(1) * self.spec.nranks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_example_config() {
+        let kv = KvFile::parse(
+            "# comm\nnranks = 4\nndevices=6\ndevice_capacity = 64M\nprimitive= alltoall\nvariant =naive\nmsg_size = 2M\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.spec.nranks, 4);
+        assert_eq!(rc.spec.device_capacity, 64 << 20);
+        assert_eq!(rc.primitive, Primitive::AllToAll);
+        assert_eq!(rc.variant, CclVariant::Naive);
+        assert_eq!(rc.msg_bytes, 2 << 20);
+        assert_eq!(rc.n_elems() % 4, 0);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(KvFile::parse("a = 1\na = 2\n").is_err());
+        assert!(KvFile::parse("just words\n").is_err());
+        let kv = KvFile::parse("primitive = warp\n").unwrap();
+        assert!(RunConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let kv = KvFile::parse("\n# full comment\nnranks = 5 # trailing\n\n").unwrap();
+        assert_eq!(kv.get("nranks"), Some("5"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let rc = RunConfig::from_kv(&KvFile::parse("").unwrap()).unwrap();
+        assert_eq!(rc.spec.nranks, 3);
+        assert_eq!(rc.chunks, 8);
+    }
+}

@@ -1,0 +1,130 @@
+//! Interconnect hardware cost model (paper §5.5): building the CXL-pool
+//! fabric vs the InfiniBand fabric for a small GPU pod.
+//!
+//! The paper's figures: a 200 Gb/s-per-port InfiniBand switch costs ~$16K,
+//! the TITAN-II CXL switch ~$5.8K (citing the Beluga paper [69]), yielding
+//! the headline **2.75× lower interconnect cost** (16/5.8 ≈ 2.76). The
+//! model also itemizes per-node parts so other pod shapes can be priced.
+
+/// One priced component.
+#[derive(Debug, Clone)]
+pub struct CostItem {
+    pub name: &'static str,
+    pub unit_usd: f64,
+    pub quantity: usize,
+}
+
+impl CostItem {
+    pub fn total(&self) -> f64 {
+        self.unit_usd * self.quantity as f64
+    }
+}
+
+/// A bill of materials for one fabric.
+#[derive(Debug, Clone)]
+pub struct FabricCost {
+    pub name: &'static str,
+    pub items: Vec<CostItem>,
+}
+
+impl FabricCost {
+    pub fn total(&self) -> f64 {
+        self.items.iter().map(CostItem::total).sum()
+    }
+
+    /// Switch-only subtotal (the paper's headline comparison).
+    pub fn switch_only(&self) -> f64 {
+        self.items
+            .iter()
+            .filter(|i| i.name.contains("switch"))
+            .map(CostItem::total)
+            .sum()
+    }
+}
+
+/// InfiniBand fabric for `nodes` nodes (paper baseline).
+pub fn infiniband_fabric(nodes: usize) -> FabricCost {
+    FabricCost {
+        name: "InfiniBand 200Gb/s",
+        items: vec![
+            CostItem {
+                name: "IB switch (200 Gb/s per port)",
+                unit_usd: 16_000.0, // §5.5
+                quantity: 1,
+            },
+            CostItem {
+                name: "200G HCA (per node)",
+                unit_usd: 1_200.0,
+                quantity: nodes,
+            },
+            CostItem {
+                name: "DAC/AOC cable (per node)",
+                unit_usd: 150.0,
+                quantity: nodes,
+            },
+        ],
+    }
+}
+
+/// CXL pool fabric for `nodes` nodes and `devices` memory cards.
+///
+/// Memory cards are deliberately *not* counted toward the interconnect
+/// comparison (they are pooled capacity the cluster buys either way —
+/// the paper's Beluga-style argument); pass `include_memory` to price them.
+pub fn cxl_fabric(nodes: usize, devices: usize, include_memory: bool) -> FabricCost {
+    let mut items = vec![
+        CostItem {
+            name: "CXL 2.0 switch (TITAN-II)",
+            unit_usd: 5_800.0, // §5.5, citing [69]
+            quantity: 1,
+        },
+        CostItem {
+            name: "Gen5 x16 cable (per node)",
+            unit_usd: 120.0,
+            quantity: nodes,
+        },
+    ];
+    if include_memory {
+        items.push(CostItem {
+            name: "CZ120 128GB CXL card",
+            unit_usd: 1_600.0,
+            quantity: devices,
+        });
+    }
+    FabricCost {
+        name: "CXL shared memory pool",
+        items,
+    }
+}
+
+/// The paper's headline ratio: switch-cost IB / switch-cost CXL.
+pub fn switch_cost_ratio() -> f64 {
+    infiniband_fabric(3).switch_only() / cxl_fabric(3, 6, false).switch_only()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_ratio_matches_paper() {
+        let r = switch_cost_ratio();
+        assert!((r - 2.76).abs() < 0.02, "ratio {r} vs paper 2.75x");
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let ib = infiniband_fabric(3);
+        assert!(ib.total() > ib.switch_only());
+        assert_eq!(ib.items[1].quantity, 3);
+        let cxl = cxl_fabric(3, 6, true);
+        assert!(cxl.total() > cxl_fabric(3, 6, false).total());
+    }
+
+    #[test]
+    fn cxl_cheaper_even_with_nics_counted() {
+        let ib = infiniband_fabric(3).total();
+        let cxl = cxl_fabric(3, 6, false).total();
+        assert!(ib / cxl > 2.0, "ib {ib} cxl {cxl}");
+    }
+}

@@ -1,0 +1,188 @@
+//! The lightweight in-memory locking ("doorbell") mechanism (paper §4.5).
+//!
+//! Each data chunk has a dedicated semaphore living in the shared pool's
+//! pre-allocated doorbell region. Only the chunk's *owner* (producer) may
+//! update it: STALE → READY once the write is complete and flushed.
+//! Consumers spin on the doorbell — re-flushing the line each probe, since
+//! the fabric is not coherent across nodes — and only then read the data.
+//!
+//! Doorbell *allocation* is computation-driven: the slot index is derived
+//! arithmetically from the block/chunk identity (paper Eq. 2), so no
+//! metadata or allocator lives on the critical path.
+
+use crate::pool::{PoolLayout, ShmPool};
+use anyhow::{bail, Result};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+/// One doorbell occupies a full cache line so that flushing/invalidation
+/// (and on real hardware, ownership transfer) never falsely shares.
+pub const DOORBELL_SLOT: usize = 64;
+
+/// Semaphore states (paper Fig. 8).
+pub const STALE: u32 = 0;
+pub const READY: u32 = 1;
+
+/// How a consumer waits on a doorbell.
+#[derive(Debug, Clone, Copy)]
+pub struct WaitPolicy {
+    /// Spin iterations between yields.
+    pub spin_iters: u32,
+    /// Give up after this long (failure injection / hang detection).
+    pub timeout: Duration,
+}
+
+impl Default for WaitPolicy {
+    fn default() -> Self {
+        Self {
+            spin_iters: 256,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Handle over the doorbell region of a pool.
+pub struct DoorbellSet<'a> {
+    pool: &'a ShmPool,
+    layout: PoolLayout,
+}
+
+impl<'a> DoorbellSet<'a> {
+    pub fn new(pool: &'a ShmPool, layout: PoolLayout) -> Self {
+        Self { pool, layout }
+    }
+
+    /// Number of slots available.
+    pub fn slots(&self) -> usize {
+        self.layout.doorbell_slots()
+    }
+
+    /// Reset every doorbell to STALE. Must only run while the communicator
+    /// is quiescent (between collectives).
+    pub fn reset_all(&self) -> Result<()> {
+        self.pool.zero(0, self.layout.db_region)?;
+        self.pool.flush(0, self.layout.db_region);
+        Ok(())
+    }
+
+    /// Producer side (Listing 3 lines 5–7): mark chunk `index` READY and
+    /// flush so remote sockets observe it.
+    pub fn ring(&self, index: usize) -> Result<()> {
+        let off = self.layout.doorbell_offset(index)?;
+        let db = self.pool.atomic_u32(off)?;
+        db.store(READY, Ordering::Release);
+        self.pool.flush(off, DOORBELL_SLOT); // flush_doorbell(db_ptr)
+        Ok(())
+    }
+
+    /// Non-blocking probe.
+    pub fn is_ready(&self, index: usize) -> Result<bool> {
+        let off = self.layout.doorbell_offset(index)?;
+        Ok(self.pool.atomic_u32(off)?.load(Ordering::Acquire) == READY)
+    }
+
+    /// Consumer side (Listing 3 lines 9–13): spin until READY, flushing the
+    /// cached line between probes; yield periodically; error on timeout
+    /// instead of hanging (the paper's pseudo-code sleeps in the loop).
+    pub fn wait(&self, index: usize, policy: &WaitPolicy) -> Result<()> {
+        let off = self.layout.doorbell_offset(index)?;
+        let db = self.pool.atomic_u32(off)?;
+        let start = Instant::now();
+        loop {
+            for _ in 0..policy.spin_iters {
+                if db.load(Ordering::Acquire) == READY {
+                    return Ok(());
+                }
+                std::hint::spin_loop();
+            }
+            // flush_doorbell: invalidate our cached copy, not the pool state.
+            self.pool.flush(off, DOORBELL_SLOT);
+            if start.elapsed() > policy.timeout {
+                bail!(
+                    "doorbell {index} timed out after {:?} (producer missing or deadlock)",
+                    policy.timeout
+                );
+            }
+            std::thread::yield_now(); // sleep() in Listing 3
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn setup() -> (Arc<ShmPool>, PoolLayout) {
+        let layout = PoolLayout::new(2, 1 << 20, 4096).unwrap();
+        let pool = Arc::new(ShmPool::anon(layout.pool_size()).unwrap());
+        (pool, layout)
+    }
+
+    #[test]
+    fn ring_then_wait_completes() {
+        let (pool, layout) = setup();
+        let dbs = DoorbellSet::new(&pool, layout);
+        dbs.reset_all().unwrap();
+        assert!(!dbs.is_ready(3).unwrap());
+        dbs.ring(3).unwrap();
+        assert!(dbs.is_ready(3).unwrap());
+        dbs.wait(3, &WaitPolicy::default()).unwrap();
+    }
+
+    #[test]
+    fn wait_times_out_instead_of_hanging() {
+        let (pool, layout) = setup();
+        let dbs = DoorbellSet::new(&pool, layout);
+        dbs.reset_all().unwrap();
+        let policy = WaitPolicy {
+            spin_iters: 8,
+            timeout: Duration::from_millis(50),
+        };
+        let err = dbs.wait(5, &policy).unwrap_err();
+        assert!(err.to_string().contains("timed out"));
+    }
+
+    #[test]
+    fn cross_thread_producer_consumer() {
+        let (pool, layout) = setup();
+        {
+            let dbs = DoorbellSet::new(&pool, layout);
+            dbs.reset_all().unwrap();
+        }
+        let p2 = Arc::clone(&pool);
+        let consumer = std::thread::spawn(move || {
+            let dbs = DoorbellSet::new(&p2, layout);
+            dbs.wait(7, &WaitPolicy::default()).unwrap();
+            // Data written before the doorbell must be visible after it.
+            let mut buf = [0u8; 4];
+            p2.read_bytes(layout.db_region + 100, &mut buf).unwrap();
+            assert_eq!(&buf, b"DATA");
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        pool.write_bytes(layout.db_region + 100, b"DATA").unwrap();
+        let dbs = DoorbellSet::new(&pool, layout);
+        dbs.ring(7).unwrap();
+        consumer.join().unwrap();
+    }
+
+    #[test]
+    fn reset_returns_all_to_stale() {
+        let (pool, layout) = setup();
+        let dbs = DoorbellSet::new(&pool, layout);
+        for i in 0..dbs.slots() {
+            dbs.ring(i).unwrap();
+        }
+        dbs.reset_all().unwrap();
+        for i in 0..dbs.slots() {
+            assert!(!dbs.is_ready(i).unwrap());
+        }
+    }
+
+    #[test]
+    fn out_of_range_index_rejected() {
+        let (pool, layout) = setup();
+        let dbs = DoorbellSet::new(&pool, layout);
+        assert!(dbs.ring(dbs.slots()).is_err());
+    }
+}

@@ -1,0 +1,403 @@
+//! `Communicator` — the user-facing handle that executes planned collectives
+//! for real over a shared memory pool.
+
+use crate::collectives::ops::{CollectivePlan, Op};
+use crate::collectives::{builder::plan_collective, CclConfig, Primitive};
+use crate::doorbell::{DoorbellSet, WaitPolicy};
+use crate::exec::reduce_engine::{ReduceEngine, ScalarReduceEngine};
+use crate::pool::{PoolLayout, ShmPool};
+use crate::topology::ClusterSpec;
+use anyhow::{bail, Context, Result};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// View an f32 slice as bytes (both directions are safe for f32: every bit
+/// pattern is a valid f32 and alignment only decreases).
+fn f32_bytes(s: &[f32]) -> &[u8] {
+    // SAFETY: see above.
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4) }
+}
+
+fn f32_bytes_mut(s: &mut [f32]) -> &mut [u8] {
+    // SAFETY: see above.
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut u8, s.len() * 4) }
+}
+
+/// A live communicator over a shared CXL-style pool.
+pub struct Communicator {
+    spec: ClusterSpec,
+    layout: PoolLayout,
+    pool: Arc<ShmPool>,
+    wait_policy: WaitPolicy,
+    engine: Arc<dyn ReduceEngine>,
+}
+
+impl Communicator {
+    /// Anonymous shared mapping (thread-rank mode) with the scalar reduce
+    /// engine — the default way to stand a communicator up.
+    pub fn shm(spec: &ClusterSpec) -> Result<Self> {
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let layout = PoolLayout::from_spec(spec)?;
+        let pool = Arc::new(ShmPool::anon(layout.pool_size())?);
+        Ok(Self {
+            spec: spec.clone(),
+            layout,
+            pool,
+            wait_policy: WaitPolicy::default(),
+            engine: Arc::new(ScalarReduceEngine),
+        })
+    }
+
+    /// File-backed pool (DAX-style, paper Listing 1) at `path`.
+    pub fn shm_dax(spec: &ClusterSpec, path: &str) -> Result<Self> {
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let layout = PoolLayout::from_spec(spec)?;
+        let pool = Arc::new(ShmPool::dax_file(path, layout.pool_size())?);
+        Ok(Self {
+            spec: spec.clone(),
+            layout,
+            pool,
+            wait_policy: WaitPolicy::default(),
+            engine: Arc::new(ScalarReduceEngine),
+        })
+    }
+
+    /// Swap the reduction backend (e.g. the AOT Pallas kernel engine).
+    pub fn with_reduce_engine(mut self, engine: Arc<dyn ReduceEngine>) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Adjust the doorbell wait policy (timeouts for failure injection).
+    pub fn with_wait_policy(mut self, policy: WaitPolicy) -> Self {
+        self.wait_policy = policy;
+        self
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    pub fn layout(&self) -> &PoolLayout {
+        &self.layout
+    }
+
+    pub fn pool(&self) -> &Arc<ShmPool> {
+        &self.pool
+    }
+
+    /// Plan and execute in one call. `n_elems` has Table 2 semantics.
+    pub fn execute(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        sends: &[Vec<f32>],
+        recvs: &mut [Vec<f32>],
+    ) -> Result<Duration> {
+        let plan = plan_collective(primitive, &self.spec, &self.layout, cfg, n_elems)?;
+        self.run_plan(&plan, sends, recvs)
+    }
+
+    /// Execute a pre-built plan. Returns the wall-clock duration of the
+    /// collective (all streams joined).
+    pub fn run_plan(
+        &self,
+        plan: &CollectivePlan,
+        sends: &[Vec<f32>],
+        recvs: &mut [Vec<f32>],
+    ) -> Result<Duration> {
+        let nr = self.spec.nranks;
+        if plan.nranks != nr {
+            bail!("plan is for {} ranks, communicator has {nr}", plan.nranks);
+        }
+        if sends.len() != nr || recvs.len() != nr {
+            bail!("need one send and one recv buffer per rank");
+        }
+        for (r, s) in sends.iter().enumerate() {
+            if s.len() < plan.send_elems {
+                bail!(
+                    "rank {r} send buffer too small: {} < {} elems",
+                    s.len(),
+                    plan.send_elems
+                );
+            }
+        }
+        for (r, d) in recvs.iter_mut().enumerate() {
+            if d.len() < plan.recv_elems {
+                bail!(
+                    "rank {r} recv buffer too small: {} < {} elems",
+                    d.len(),
+                    plan.recv_elems
+                );
+            }
+            d[..plan.recv_elems].fill(0.0);
+        }
+        plan.validate(self.layout.pool_size())
+            .map_err(|e| anyhow::anyhow!("invalid plan: {e}"))?;
+
+        // Quiesce + reset doorbells before any stream starts.
+        DoorbellSet::new(&self.pool, self.layout).reset_all()?;
+
+        let barrier = Arc::new(Barrier::new(2 * nr));
+        let start = Instant::now();
+        let mut errors: Vec<anyhow::Error> = Vec::new();
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(2 * nr);
+            for (rank_plan, (send, recv)) in plan
+                .ranks
+                .iter()
+                .zip(sends.iter().zip(recvs.iter_mut()))
+            {
+                let wb = Arc::clone(&barrier);
+                let rb = Arc::clone(&barrier);
+                let pool_w = Arc::clone(&self.pool);
+                let pool_r = Arc::clone(&self.pool);
+                let layout = self.layout;
+                let policy = self.wait_policy;
+                let engine = Arc::clone(&self.engine);
+                let send_w: &[f32] = send;
+                let send_r: &[f32] = send;
+                let write_ops = &rank_plan.write_ops;
+                let read_ops = &rank_plan.read_ops;
+                let rank = rank_plan.rank;
+
+                handles.push(scope.spawn(move || {
+                    run_stream(StreamCtx {
+                        rank,
+                        stream: "write",
+                        ops: write_ops,
+                        pool: &pool_w,
+                        layout,
+                        policy,
+                        barrier: &wb,
+                        engine: None,
+                        send: send_w,
+                        recv: None,
+                    })
+                }));
+                handles.push(scope.spawn(move || {
+                    run_stream(StreamCtx {
+                        rank,
+                        stream: "read",
+                        ops: read_ops,
+                        pool: &pool_r,
+                        layout,
+                        policy,
+                        barrier: &rb,
+                        engine: Some(&*engine),
+                        send: send_r,
+                        recv: Some(recv),
+                    })
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => errors.push(e),
+                    Err(_) => errors.push(anyhow::anyhow!("stream thread panicked")),
+                }
+            }
+        });
+
+        if let Some(e) = errors.into_iter().next() {
+            return Err(e);
+        }
+        Ok(start.elapsed())
+    }
+
+    // ---- convenience wrappers -------------------------------------------
+
+    /// In-place AllReduce: `bufs[r]` is rank r's contribution on input and
+    /// the reduced result on output.
+    pub fn all_reduce_f32(&self, bufs: &mut [Vec<f32>], cfg: &CclConfig) -> Result<Duration> {
+        let n = bufs.first().map(|b| b.len()).unwrap_or(0);
+        let sends: Vec<Vec<f32>> = bufs.to_vec();
+        let d = self.execute(Primitive::AllReduce, cfg, n, &sends, bufs)?;
+        Ok(d)
+    }
+
+    /// In-place Broadcast of `bufs[cfg.root]` to every rank.
+    pub fn broadcast_f32(&self, bufs: &mut [Vec<f32>], cfg: &CclConfig) -> Result<Duration> {
+        let n = bufs.first().map(|b| b.len()).unwrap_or(0);
+        let sends: Vec<Vec<f32>> = bufs.to_vec();
+        self.execute(Primitive::Broadcast, cfg, n, &sends, bufs)
+    }
+
+    /// AllGather: returns each rank's concatenated view.
+    pub fn all_gather_f32(&self, sends: &[Vec<f32>], cfg: &CclConfig) -> Result<Vec<Vec<f32>>> {
+        let n = sends.first().map(|b| b.len()).unwrap_or(0);
+        let mut recvs = vec![vec![0.0f32; n * self.spec.nranks]; self.spec.nranks];
+        self.execute(Primitive::AllGather, cfg, n, sends, &mut recvs)?;
+        Ok(recvs)
+    }
+
+    /// ReduceScatter: returns each rank's reduced segment (N/nranks elems).
+    pub fn reduce_scatter_f32(
+        &self,
+        sends: &[Vec<f32>],
+        cfg: &CclConfig,
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = sends.first().map(|b| b.len()).unwrap_or(0);
+        let mut recvs = vec![vec![0.0f32; n / self.spec.nranks]; self.spec.nranks];
+        self.execute(Primitive::ReduceScatter, cfg, n, sends, &mut recvs)?;
+        Ok(recvs)
+    }
+
+    /// AllToAll: returns each rank's transposed segments.
+    pub fn all_to_all_f32(&self, sends: &[Vec<f32>], cfg: &CclConfig) -> Result<Vec<Vec<f32>>> {
+        let n = sends.first().map(|b| b.len()).unwrap_or(0);
+        let mut recvs = vec![vec![0.0f32; n]; self.spec.nranks];
+        self.execute(Primitive::AllToAll, cfg, n, sends, &mut recvs)?;
+        Ok(recvs)
+    }
+}
+
+struct StreamCtx<'a> {
+    rank: usize,
+    stream: &'static str,
+    ops: &'a [Op],
+    pool: &'a ShmPool,
+    layout: PoolLayout,
+    policy: WaitPolicy,
+    barrier: &'a Barrier,
+    engine: Option<&'a dyn ReduceEngine>,
+    send: &'a [f32],
+    recv: Option<&'a mut [f32]>,
+}
+
+/// Execute one stream's ops in order. On error, keep honouring the
+/// remaining `Barrier` ops so peers don't deadlock, then report.
+fn run_stream(mut ctx: StreamCtx<'_>) -> Result<()> {
+    let dbs = DoorbellSet::new(ctx.pool, ctx.layout);
+    let mut failure: Option<anyhow::Error> = None;
+    for (i, op) in ctx.ops.iter().enumerate() {
+        if failure.is_some() {
+            if matches!(op, Op::Barrier) {
+                ctx.barrier.wait();
+            }
+            continue;
+        }
+        let r = exec_op(&mut ctx, &dbs, op)
+            .with_context(|| format!("rank {} {} stream op {i}: {op:?}", ctx.rank, ctx.stream));
+        if let Err(e) = r {
+            failure = Some(e);
+        }
+    }
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+fn exec_op(ctx: &mut StreamCtx<'_>, dbs: &DoorbellSet<'_>, op: &Op) -> Result<()> {
+    match *op {
+        Op::Write { pool_off, src_off, len } => {
+            let src = f32_bytes(ctx.send);
+            if src_off + len > src.len() {
+                bail!("send buffer overrun: [{src_off}, +{len}) of {}", src.len());
+            }
+            ctx.pool.write_bytes(pool_off, &src[src_off..src_off + len])
+        }
+        Op::SetDoorbell { db } => dbs.ring(db),
+        Op::WaitDoorbell { db } => dbs.wait(db, &ctx.policy),
+        Op::Read { pool_off, dst_off, len } => {
+            let recv = ctx
+                .recv
+                .as_deref_mut()
+                .ok_or_else(|| anyhow::anyhow!("Read op on write stream"))?;
+            let dst = f32_bytes_mut(recv);
+            if dst_off + len > dst.len() {
+                bail!("recv buffer overrun: [{dst_off}, +{len}) of {}", dst.len());
+            }
+            ctx.pool.read_bytes(pool_off, &mut dst[dst_off..dst_off + len])
+        }
+        Op::ReduceF32 { pool_off, dst_off, len } => {
+            let engine = ctx
+                .engine
+                .ok_or_else(|| anyhow::anyhow!("ReduceF32 op on write stream"))?;
+            let recv = ctx
+                .recv
+                .as_deref_mut()
+                .ok_or_else(|| anyhow::anyhow!("ReduceF32 op on write stream"))?;
+            if dst_off % 4 != 0 || len % 4 != 0 {
+                bail!("unaligned reduce: dst_off {dst_off}, len {len}");
+            }
+            let lo = dst_off / 4;
+            let n = len / 4;
+            if lo + n > recv.len() {
+                bail!("recv buffer overrun in reduce");
+            }
+            engine.reduce_into(ctx.pool, pool_off, &mut recv[lo..lo + n])
+        }
+        Op::CopyLocal { src_off, dst_off, len } => {
+            let recv = ctx
+                .recv
+                .as_deref_mut()
+                .ok_or_else(|| anyhow::anyhow!("CopyLocal op on write stream"))?;
+            if src_off % 4 != 0 || dst_off % 4 != 0 || len % 4 != 0 {
+                bail!("unaligned CopyLocal");
+            }
+            let (s0, d0, n) = (src_off / 4, dst_off / 4, len / 4);
+            if s0 + n > ctx.send.len() || d0 + n > recv.len() {
+                bail!("CopyLocal out of bounds");
+            }
+            recv[d0..d0 + n].copy_from_slice(&ctx.send[s0..s0 + n]);
+            Ok(())
+        }
+        Op::Barrier => {
+            ctx.barrier.wait();
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CclVariant;
+
+    fn comm(nranks: usize) -> Communicator {
+        Communicator::shm(&ClusterSpec::new(nranks, 6, 4 << 20)).unwrap()
+    }
+
+    #[test]
+    fn allreduce_smoke() {
+        let c = comm(3);
+        let mut bufs: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32 + 1.0; 256]).collect();
+        c.all_reduce_f32(&mut bufs, &CclConfig::default_all()).unwrap();
+        for b in &bufs {
+            assert!(b.iter().all(|v| *v == 6.0));
+        }
+    }
+
+    #[test]
+    fn broadcast_smoke() {
+        let c = comm(3);
+        let mut bufs = vec![vec![7.0f32; 64], vec![0.0; 64], vec![0.0; 64]];
+        c.broadcast_f32(&mut bufs, &CclVariant::Naive.config(1)).unwrap();
+        assert!(bufs.iter().all(|b| b.iter().all(|v| *v == 7.0)));
+    }
+
+    #[test]
+    fn mismatched_buffer_counts_rejected() {
+        let c = comm(3);
+        let sends = vec![vec![0.0f32; 16]; 2];
+        let mut recvs = vec![vec![0.0f32; 16]; 3];
+        assert!(c
+            .execute(Primitive::AllToAll, &CclConfig::default_all(), 15, &sends, &mut recvs)
+            .is_err());
+    }
+
+    #[test]
+    fn undersized_recv_rejected() {
+        let c = comm(3);
+        let sends = vec![vec![1.0f32; 12]; 3];
+        let mut recvs = vec![vec![0.0f32; 12]; 3]; // allgather needs 36
+        let err = c
+            .execute(Primitive::AllGather, &CclConfig::default_all(), 12, &sends, &mut recvs)
+            .unwrap_err();
+        assert!(err.to_string().contains("recv buffer too small"));
+    }
+}

@@ -1,0 +1,15 @@
+//! The real executor: thread-per-rank, two streams per rank, over a live
+//! shared-memory pool.
+//!
+//! A rank's writeStream and readStream (paper §4.4) are two OS threads. The
+//! write thread owns the node's GPU→pool DMA direction, the read thread the
+//! pool→GPU direction — one engine per direction, exactly the hardware
+//! constraint of Observation 1. Doorbells are the only cross-thread
+//! synchronization in the `All` variant; `Naive`/`Aggregate` use one global
+//! barrier between phases.
+
+pub mod communicator;
+pub mod reduce_engine;
+
+pub use communicator::Communicator;
+pub use reduce_engine::{PjrtReduceEngine, ReduceEngine, ScalarReduceEngine};

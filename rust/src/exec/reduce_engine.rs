@@ -1,0 +1,106 @@
+//! Consumer-side reduction backends.
+//!
+//! The paper performs the reduction on the GPU after reading a READY chunk
+//! from the pool (Listing 3 line 14). Here the equivalent compute engine is
+//! pluggable:
+//!
+//! - [`ScalarReduceEngine`] — a tight f32 loop directly over the mapped pool
+//!   (the default; auto-vectorized by LLVM).
+//! - [`PjrtReduceEngine`] — the AOT-compiled **Pallas** reduction kernel
+//!   (`python/compile/kernels/reduce.py` → `artifacts/reduce_*.hlo.txt`)
+//!   executed through the PJRT CPU client, demonstrating the L1 kernel on
+//!   the L3 hot path.
+
+use crate::pool::ShmPool;
+use anyhow::Result;
+
+/// A backend that accumulates pool-resident f32 data into a local buffer.
+pub trait ReduceEngine: Send + Sync {
+    /// `acc[i] += pool_f32[pool_off/4 + i]` for all i.
+    fn reduce_into(&self, pool: &ShmPool, pool_off: usize, acc: &mut [f32]) -> Result<()>;
+
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Plain scalar/auto-vectorized accumulation.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ScalarReduceEngine;
+
+impl ReduceEngine for ScalarReduceEngine {
+    fn reduce_into(&self, pool: &ShmPool, pool_off: usize, acc: &mut [f32]) -> Result<()> {
+        pool.reduce_add_f32(pool_off, acc)
+    }
+
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+}
+
+/// Reduction through the AOT Pallas kernel (see [`crate::runtime`]).
+///
+/// The kernel computes `out = a + b` over a fixed-width tile; the engine
+/// stages the pool chunk into a scratch literal, runs the executable, and
+/// copies the result back into `acc`. Chunks longer than the tile are
+/// processed tile-by-tile; ragged tails fall back to scalar.
+pub struct PjrtReduceEngine {
+    runner: crate::runtime::ReduceKernel,
+    scratch_len: usize,
+}
+
+impl PjrtReduceEngine {
+    pub fn new(runner: crate::runtime::ReduceKernel) -> Self {
+        let scratch_len = runner.tile_elems();
+        Self { runner, scratch_len }
+    }
+
+    pub fn tile_elems(&self) -> usize {
+        self.scratch_len
+    }
+}
+
+impl ReduceEngine for PjrtReduceEngine {
+    fn reduce_into(&self, pool: &ShmPool, pool_off: usize, acc: &mut [f32]) -> Result<()> {
+        let tile = self.scratch_len;
+        let mut i = 0usize;
+        let mut chunk = vec![0.0f32; tile];
+        while i < acc.len() {
+            let n = (acc.len() - i).min(tile);
+            if n == tile {
+                // Full tile: read pool bytes, run the Pallas kernel.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts_mut(chunk.as_mut_ptr() as *mut u8, tile * 4)
+                };
+                pool.read_bytes(pool_off + i * 4, bytes)?;
+                let out = self.runner.add(&acc[i..i + n], &chunk)?;
+                acc[i..i + n].copy_from_slice(&out);
+            } else {
+                // Ragged tail: scalar path.
+                pool.reduce_add_f32(pool_off + i * 4, &mut acc[i..])?;
+            }
+            i += n;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-pallas"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_engine_accumulates() {
+        let pool = ShmPool::anon(4096).unwrap();
+        let vals = [0.5f32, 1.5, -2.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        pool.write_bytes(256, &bytes).unwrap();
+        let mut acc = vec![1.0f32; 3];
+        ScalarReduceEngine.reduce_into(&pool, 256, &mut acc).unwrap();
+        assert_eq!(acc, vec![1.5, 2.5, -1.0]);
+        assert_eq!(ScalarReduceEngine.name(), "scalar");
+    }
+}

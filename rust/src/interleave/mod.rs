@@ -1,0 +1,245 @@
+//! Software-level interleaving across CXL devices (paper §4.3).
+//!
+//! The pool has no hardware cache-line interleaving, so CXL-CCL places data
+//! blocks by formula — *pre-allocated, model-guided regions* instead of a
+//! dynamic allocator:
+//!
+//! - **Type 1** (1→N / N→1 collectives): round-robin over all devices,
+//!   Eqs. (1)–(3):
+//!   `device_index = data_id % ND`, `device_block_id = data_id / ND`,
+//!   `location = DB_offset + device_block_id·block_size + device_index·DS`.
+//! - **Type 2** (N→N collectives): every rank gets a mutually exclusive
+//!   device range, Eq. (4): `device_per_rank = ND / TOTAL_RANK`, and the
+//!   same Eq. (2)/(3) logic within that range. This keeps concurrent
+//!   writers (and rotated readers) off each other's devices.
+//! - **Naive** (ablation baseline, §5.1): sequential placement from the
+//!   pool base, no interleaving — blocks may straddle devices and all early
+//!   traffic converges on device 0.
+
+use crate::pool::PoolLayout;
+use anyhow::{bail, Result};
+
+/// A placed block: the device it lives on and its absolute pool offset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockAddr {
+    pub device: usize,
+    pub pool_offset: usize,
+}
+
+/// Type-1 placement (Eqs. 1–3). `block_stride` is the uniform per-block
+/// reservation (`block_size` in Eq. 3), which must be ≥ the block's bytes.
+pub fn type1(layout: &PoolLayout, data_id: usize, block_stride: usize) -> Result<BlockAddr> {
+    let nd = layout.stacking.ndevices;
+    let device_index = data_id % nd; // Eq. (1)
+    let device_block_id = data_id / nd; // Eq. (2)
+    let pool_offset = layout.block_location(device_index, device_block_id, block_stride)?; // Eq. (3)
+    Ok(BlockAddr {
+        device: device_index,
+        pool_offset,
+    })
+}
+
+/// Type-2 placement (Eq. 4 + Eqs. 2–3 within the rank's device range).
+///
+/// `blocks_per_rank` is the number of distinct `data_id`s this rank writes;
+/// it namespaces ranks that must share a device when `nranks > ND`.
+pub fn type2(
+    layout: &PoolLayout,
+    nranks: usize,
+    rank: usize,
+    data_id: usize,
+    blocks_per_rank: usize,
+    block_stride: usize,
+) -> Result<BlockAddr> {
+    if rank >= nranks {
+        bail!("rank {rank} out of range ({nranks} ranks)");
+    }
+    if data_id >= blocks_per_rank {
+        bail!("data_id {data_id} >= blocks_per_rank {blocks_per_rank}");
+    }
+    let nd = layout.stacking.ndevices;
+    let dpr = nd / nranks; // Eq. (4): device_per_rank
+    let (device_index, device_block_id) = if dpr >= 1 {
+        // Exclusive range [rank·dpr, (rank+1)·dpr).
+        (rank * dpr + data_id % dpr, data_id / dpr)
+    } else {
+        // More ranks than devices: ranks share devices round-robin; each
+        // co-resident rank gets a disjoint block namespace on the device.
+        let device = rank % nd;
+        let slot = rank / nd;
+        (device, slot * blocks_per_rank + data_id)
+    };
+    let pool_offset = layout.block_location(device_index, device_block_id, block_stride)?;
+    Ok(BlockAddr {
+        device: device_index,
+        pool_offset,
+    })
+}
+
+/// Naive sequential placement: block `global_block_id` at
+/// `DB_offset + global_block_id · block_stride` in *flat* pool space.
+/// No device awareness; returns the device of the first byte.
+pub fn naive(layout: &PoolLayout, global_block_id: usize, block_stride: usize) -> Result<BlockAddr> {
+    let off = layout
+        .db_region
+        .checked_add(
+            global_block_id
+                .checked_mul(block_stride)
+                .ok_or_else(|| anyhow::anyhow!("naive offset overflow"))?,
+        )
+        .ok_or_else(|| anyhow::anyhow!("naive offset overflow"))?;
+    if off + block_stride > layout.pool_size() {
+        bail!(
+            "naive placement: block {global_block_id} (stride {block_stride}) exceeds pool size {}",
+            layout.pool_size()
+        );
+    }
+    Ok(BlockAddr {
+        device: layout.stacking.device_of(off),
+        pool_offset: off,
+    })
+}
+
+/// The read-order rotation (paper §4.3, Fig. 6): rank `r` touches peers
+/// starting from `(r+1) % nranks`, so concurrent readers fan out over
+/// distinct producers' devices instead of converging.
+pub fn rotated_peers(nranks: usize, rank: usize) -> impl Iterator<Item = usize> {
+    (1..nranks).map(move |i| (rank + i) % nranks)
+}
+
+/// Descending peer order: `r-1, r-2, ...`. This is the *consumption* order
+/// matching the Fig. 6 publish rotation for per-destination collectives
+/// (ReduceScatter/AllToAll): producer `s` publishes destination `(s+1)`'s
+/// segment first, so consumer `r`'s segment is available earliest at
+/// producer `r-1`, then `r-2`, ... Reading in this order lets every
+/// consumer chase the producers with a one-segment lag (the paper's
+/// "rank 0 reads data-30 while rank 3 writes data-31").
+pub fn rotated_peers_desc(nranks: usize, rank: usize) -> impl Iterator<Item = usize> {
+    (1..nranks).map(move |i| (rank + nranks - i) % nranks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn layout() -> PoolLayout {
+        PoolLayout::new(6, 1 << 20, 4096).unwrap()
+    }
+
+    #[test]
+    fn type1_round_robins_devices() {
+        let l = layout();
+        // Eq. 1: data_id % ND
+        for id in 0..12 {
+            let b = type1(&l, id, 1024).unwrap();
+            assert_eq!(b.device, id % 6);
+        }
+        // Eq. 2: second lap lands one block higher on the same device.
+        let first = type1(&l, 0, 1024).unwrap();
+        let second = type1(&l, 6, 1024).unwrap();
+        assert_eq!(second.device, first.device);
+        assert_eq!(second.pool_offset, first.pool_offset + 1024);
+    }
+
+    #[test]
+    fn type2_ranges_are_mutually_exclusive() {
+        let l = layout();
+        // 3 ranks × 6 devices -> device_per_rank = 2 (the paper's Fig. 6 shape).
+        let mut per_rank: Vec<HashSet<usize>> = vec![HashSet::new(); 3];
+        for rank in 0..3 {
+            for did in 0..4 {
+                let b = type2(&l, 3, rank, did, 4, 1024).unwrap();
+                per_rank[rank].insert(b.device);
+            }
+        }
+        assert_eq!(per_rank[0], HashSet::from([0, 1]));
+        assert_eq!(per_rank[1], HashSet::from([2, 3]));
+        assert_eq!(per_rank[2], HashSet::from([4, 5]));
+    }
+
+    #[test]
+    fn type2_no_offset_collisions_when_sharing_devices() {
+        // 8 ranks on 6 devices: dpr = 0 fallback, ranks 0 and 6 share dev 0.
+        let l = layout();
+        let mut seen = HashSet::new();
+        for rank in 0..8 {
+            for did in 0..3 {
+                let b = type2(&l, 8, rank, did, 3, 2048).unwrap();
+                assert!(
+                    seen.insert(b.pool_offset),
+                    "collision at offset {} (rank {rank}, data {did})",
+                    b.pool_offset
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn type2_rejects_bad_ids() {
+        let l = layout();
+        assert!(type2(&l, 3, 3, 0, 2, 64).is_err());
+        assert!(type2(&l, 3, 0, 2, 2, 64).is_err());
+    }
+
+    #[test]
+    fn blocks_land_within_their_device() {
+        let l = layout();
+        for rank in 0..3 {
+            for did in 0..4 {
+                let b = type2(&l, 3, rank, did, 4, 4096).unwrap();
+                assert!(l.stacking.within_one_device(b.pool_offset, 4096));
+                assert_eq!(l.stacking.device_of(b.pool_offset), b.device);
+            }
+        }
+    }
+
+    #[test]
+    fn naive_is_sequential_and_device_oblivious() {
+        let l = layout();
+        let a = naive(&l, 0, 1 << 19).unwrap();
+        let b = naive(&l, 1, 1 << 19).unwrap();
+        let c = naive(&l, 2, 1 << 19).unwrap();
+        assert_eq!(b.pool_offset, a.pool_offset + (1 << 19));
+        assert_eq!(c.pool_offset, b.pool_offset + (1 << 19));
+        // Early blocks pile onto device 0 — the hotspot naive suffers from.
+        assert_eq!(a.device, 0);
+        assert_eq!(b.device, 0);
+    }
+
+    #[test]
+    fn naive_rejects_pool_overflow() {
+        let l = layout();
+        assert!(naive(&l, 100, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn descending_rotation_matches_fig6_consumption() {
+        // Fig. 6 (4 ranks): rank 0 reads data-30 (from rank 3) first.
+        let order: Vec<usize> = rotated_peers_desc(4, 0).collect();
+        assert_eq!(order, vec![3, 2, 1]);
+        // Producer s publishes for (s+1) first: consumer r's k-th read
+        // (from s = r-k) is exactly s's k-th publication.
+        let nr = 5;
+        for r in 0..nr {
+            for (k, s) in rotated_peers_desc(nr, r).enumerate() {
+                let publish_pos = crate::chunking::publish_order(nr, s, false)
+                    .iter()
+                    .position(|d| *d == r)
+                    .unwrap();
+                assert_eq!(publish_pos, k, "consumer {r} step {k} producer {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_covers_all_peers_starting_next() {
+        let order: Vec<usize> = rotated_peers(4, 1).collect();
+        assert_eq!(order, vec![2, 3, 0]);
+        let order0: Vec<usize> = rotated_peers(3, 0).collect();
+        assert_eq!(order0, vec![1, 2]);
+        // Union over ranks of first-read peers is all ranks (fan-out).
+        let firsts: HashSet<usize> = (0..4).map(|r| rotated_peers(4, r).next().unwrap()).collect();
+        assert_eq!(firsts.len(), 4);
+    }
+}

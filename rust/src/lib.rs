@@ -1,0 +1,54 @@
+//! # CXL-CCL — collective GPU communication over a CXL shared memory pool
+//!
+//! Reproduction of *"CXL-CCL: Inter-Node Collective GPU-Communication Using a
+//! CXL Shared Memory Pool"* (Xu et al., ICS '26) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: the collective communication library itself — the
+//!   pool substrate, doorbell synchronization, software interleaving, chunked
+//!   overlap scheduling, a thread-per-rank executor, a flow-level fabric
+//!   simulator, and the InfiniBand/NCCL baseline models.
+//! - **L2 (`python/compile/model.py`)**: the LLM-training case-study compute
+//!   graph (transformer fwd/bwd with flat parameters), AOT-lowered to HLO
+//!   text and executed from rust via PJRT (see [`runtime`]).
+//! - **L1 (`python/compile/kernels/`)**: the consumer-side chunked
+//!   sum-reduction as a Pallas kernel, exported standalone for the rust
+//!   reduce engine.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use cxl_ccl::prelude::*;
+//!
+//! let topo = ClusterSpec::new(4, 6, 64 << 20); // 4 ranks, 6 CXL devices
+//! let comm = Communicator::shm(&topo).unwrap();
+//! let mut bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 1024]).collect();
+//! comm.all_reduce_f32(&mut bufs, &CclVariant::All.config(4)).unwrap();
+//! ```
+//!
+//! See `examples/quickstart.rs` for a complete runnable version.
+
+pub mod baseline;
+pub mod bench_util;
+pub mod chunking;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod cost;
+pub mod doorbell;
+pub mod exec;
+pub mod interleave;
+pub mod pool;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod train;
+pub mod util;
+
+/// Convenience re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::collectives::{CclConfig, CclVariant, Primitive};
+    pub use crate::exec::Communicator;
+    pub use crate::sim::fabric::SimFabric;
+    pub use crate::topology::ClusterSpec;
+}

@@ -1,0 +1,10 @@
+//! `cxl-ccl` — the launcher binary. See `cxl_ccl::cli` for subcommands.
+
+fn main() {
+    cxl_ccl::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cxl_ccl::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

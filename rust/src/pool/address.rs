@@ -1,0 +1,120 @@
+//! Sequentially-stacked device address space (paper §2.2, Figure 2).
+//!
+//! With `ND` devices of `DS` bytes each, pool offsets `[0, DS)` map to
+//! device 0, `[DS, 2·DS)` to device 1, ..., `[(ND−1)·DS, ND·DS)` to device
+//! `ND−1`. There is **no** hardware cache-line interleaving across devices —
+//! that absence is the entire motivation for the software interleaving in
+//! [`crate::interleave`].
+
+/// Address arithmetic for a sequentially stacked pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SequentialStacking {
+    /// Number of devices (`ND`).
+    pub ndevices: usize,
+    /// Capacity per device in bytes (`DS`).
+    pub device_capacity: usize,
+}
+
+impl SequentialStacking {
+    pub fn new(ndevices: usize, device_capacity: usize) -> Self {
+        assert!(ndevices > 0 && device_capacity > 0);
+        Self {
+            ndevices,
+            device_capacity,
+        }
+    }
+
+    /// Total pool size in bytes.
+    pub fn total(&self) -> usize {
+        self.ndevices * self.device_capacity
+    }
+
+    /// Which device a pool offset lands on. Panics when out of range.
+    pub fn device_of(&self, offset: usize) -> usize {
+        assert!(offset < self.total(), "offset {offset} out of pool");
+        offset / self.device_capacity
+    }
+
+    /// The pool-offset range served by device `d`.
+    pub fn device_range(&self, d: usize) -> std::ops::Range<usize> {
+        assert!(d < self.ndevices, "device {d} out of range");
+        d * self.device_capacity..(d + 1) * self.device_capacity
+    }
+
+    /// Offset *within* its device for a pool offset.
+    pub fn intra_device_offset(&self, offset: usize) -> usize {
+        offset % self.device_capacity
+    }
+
+    /// True when `[offset, offset+len)` stays within a single device.
+    /// The interleaving planner guarantees this for every data block so a
+    /// transfer's contention profile is attributable to exactly one device.
+    pub fn within_one_device(&self, offset: usize, len: usize) -> bool {
+        len == 0
+            || (offset < self.total()
+                && offset + len <= self.total()
+                && self.device_of(offset) == self.device_of(offset + len - 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stack() -> SequentialStacking {
+        SequentialStacking::new(6, 128 << 20)
+    }
+
+    #[test]
+    fn matches_paper_figure2() {
+        // Figure 2: with six 128 GB devices, [0,128G) -> dev0, ... We use
+        // the same math with scaled capacity.
+        let s = stack();
+        assert_eq!(s.device_of(0), 0);
+        assert_eq!(s.device_of((128 << 20) - 1), 0);
+        assert_eq!(s.device_of(128 << 20), 1);
+        assert_eq!(s.device_of(5 * (128 << 20)), 5);
+        assert_eq!(s.total(), 6 * (128 << 20));
+    }
+
+    #[test]
+    fn device_range_partitions_pool() {
+        let s = stack();
+        let mut covered = 0usize;
+        for d in 0..s.ndevices {
+            let r = s.device_range(d);
+            assert_eq!(r.start, covered);
+            covered = r.end;
+        }
+        assert_eq!(covered, s.total());
+    }
+
+    #[test]
+    fn bijection_offset_device() {
+        let s = SequentialStacking::new(4, 1 << 16);
+        for off in (0..s.total()).step_by(4093) {
+            let d = s.device_of(off);
+            assert!(s.device_range(d).contains(&off));
+            assert_eq!(
+                s.intra_device_offset(off),
+                off - s.device_range(d).start
+            );
+        }
+    }
+
+    #[test]
+    fn within_one_device_detects_straddle() {
+        let s = SequentialStacking::new(2, 1024);
+        assert!(s.within_one_device(0, 1024));
+        assert!(s.within_one_device(1024, 1024));
+        assert!(!s.within_one_device(1000, 100));
+        assert!(s.within_one_device(512, 0));
+        assert!(!s.within_one_device(2047, 2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_pool_offset_panics() {
+        stack().device_of(6 * (128 << 20));
+    }
+}

@@ -1,0 +1,40 @@
+//! Per-device specification of a CXL memory card.
+
+/// A CXL Type-3 memory card behind the switch.
+///
+/// Defaults model the paper's Micron CZ120: PCIe/CXL Gen5 ×8 interface.
+/// The paper's Fig. 3a measures ~20 GB/s sustained for ≥1 MiB transfers —
+/// the device link, not the node's ×16 link, is the limit (Observation 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CxlDeviceSpec {
+    /// Capacity in bytes.
+    pub capacity: usize,
+    /// Sustained link bandwidth, bytes/second.
+    pub link_bw: f64,
+    /// 64 B access latency through the switch, seconds (Table 1: 658 ns).
+    pub access_latency: f64,
+}
+
+impl CxlDeviceSpec {
+    /// The paper's CZ120 card with a scaled capacity.
+    pub fn cz120(capacity: usize) -> Self {
+        Self {
+            capacity,
+            link_bw: 20.0e9, // Fig. 3a plateau
+            access_latency: 658e-9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cz120_defaults_match_paper() {
+        let d = CxlDeviceSpec::cz120(128 << 20);
+        assert_eq!(d.capacity, 128 << 20);
+        assert!((d.link_bw - 20.0e9).abs() < 1.0);
+        assert!((d.access_latency - 658e-9).abs() < 1e-12);
+    }
+}

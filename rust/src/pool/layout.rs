@@ -1,0 +1,161 @@
+//! Pool layout: pre-allocated doorbell region at the base, data blocks above.
+//!
+//! Matches the paper's Eq. (3): every device's data blocks start `DB_offset`
+//! bytes into the pool/device so that the doorbell buffer at the pool base is
+//! never overwritten by data. Doorbells occupy one 64 B slot each (one cache
+//! line — the unit the paper's `flush_doorbell` invalidates).
+
+use crate::doorbell::DOORBELL_SLOT;
+use crate::pool::address::SequentialStacking;
+use anyhow::{bail, Result};
+
+/// Static layout of the shared pool.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolLayout {
+    pub stacking: SequentialStacking,
+    /// `DB_offset` — size of the doorbell region at the pool base.
+    pub db_region: usize,
+}
+
+impl PoolLayout {
+    pub fn new(ndevices: usize, device_capacity: usize, db_region: usize) -> Result<Self> {
+        if db_region == 0 || db_region % DOORBELL_SLOT != 0 {
+            bail!("doorbell region {db_region} must be a positive multiple of {DOORBELL_SLOT}");
+        }
+        if db_region >= device_capacity {
+            bail!("doorbell region {db_region} must fit within device 0 ({device_capacity})");
+        }
+        Ok(Self {
+            stacking: SequentialStacking::new(ndevices, device_capacity),
+            db_region,
+        })
+    }
+
+    pub fn from_spec(spec: &crate::topology::ClusterSpec) -> Result<Self> {
+        Self::new(spec.ndevices, spec.device_capacity, spec.db_region_size)
+    }
+
+    /// Number of doorbell slots.
+    pub fn doorbell_slots(&self) -> usize {
+        self.db_region / DOORBELL_SLOT
+    }
+
+    /// Pool byte offset of doorbell `i`'s status word.
+    pub fn doorbell_offset(&self, i: usize) -> Result<usize> {
+        if i >= self.doorbell_slots() {
+            bail!("doorbell index {i} out of range ({} slots)", self.doorbell_slots());
+        }
+        Ok(i * DOORBELL_SLOT)
+    }
+
+    /// Paper Eq. (3): absolute pool offset of block `device_block_id` on
+    /// device `device_index`:
+    ///
+    /// `location = DB_offset + device_block_id × block_size + device_index × DS`
+    ///
+    /// Errors when the block would spill out of the device (the planner
+    /// validates this for every block it emits).
+    pub fn block_location(
+        &self,
+        device_index: usize,
+        device_block_id: usize,
+        block_size: usize,
+    ) -> Result<usize> {
+        if device_index >= self.stacking.ndevices {
+            bail!("device index {device_index} out of range");
+        }
+        let intra = self
+            .db_region
+            .checked_add(
+                device_block_id
+                    .checked_mul(block_size)
+                    .ok_or_else(|| anyhow::anyhow!("block offset overflow"))?,
+            )
+            .ok_or_else(|| anyhow::anyhow!("block offset overflow"))?;
+        if intra + block_size > self.stacking.device_capacity {
+            bail!(
+                "block {device_block_id} (size {block_size}) exceeds device capacity {} \
+                 (intra-device offset {intra})",
+                self.stacking.device_capacity
+            );
+        }
+        Ok(device_index * self.stacking.device_capacity + intra)
+    }
+
+    /// Usable data bytes per device.
+    pub fn data_capacity_per_device(&self) -> usize {
+        self.stacking.device_capacity - self.db_region
+    }
+
+    /// Total pool size.
+    pub fn pool_size(&self) -> usize {
+        self.stacking.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> PoolLayout {
+        PoolLayout::new(6, 1 << 20, 4096).unwrap()
+    }
+
+    #[test]
+    fn eq3_matches_paper_formula() {
+        let l = layout();
+        let db = 4096usize;
+        let ds = 1usize << 20;
+        // location = DB_offset + block_id*block_size + device_index*DS
+        assert_eq!(l.block_location(0, 0, 1000).unwrap(), db);
+        assert_eq!(l.block_location(2, 3, 1000).unwrap(), db + 3 * 1000 + 2 * ds);
+        assert_eq!(l.block_location(5, 0, 64).unwrap(), db + 5 * ds);
+    }
+
+    #[test]
+    fn blocks_stay_on_their_device() {
+        let l = layout();
+        for dev in 0..6 {
+            for blk in 0..8 {
+                let off = l.block_location(dev, blk, 32 << 10).unwrap();
+                assert!(l.stacking.within_one_device(off, 32 << 10));
+                assert_eq!(l.stacking.device_of(off), dev);
+            }
+        }
+    }
+
+    #[test]
+    fn overflowing_block_rejected() {
+        let l = layout();
+        // device capacity 1 MiB, db 4 KiB -> max block bytes 1 MiB - 4 KiB
+        assert!(l.block_location(0, 0, (1 << 20) - 4096).is_ok());
+        assert!(l.block_location(0, 0, (1 << 20) - 4095).is_err());
+        assert!(l.block_location(0, 1, (1 << 20) / 2).is_err());
+        assert!(l.block_location(6, 0, 64).is_err());
+    }
+
+    #[test]
+    fn doorbell_offsets_within_region() {
+        let l = layout();
+        assert_eq!(l.doorbell_slots(), 64);
+        assert_eq!(l.doorbell_offset(0).unwrap(), 0);
+        assert_eq!(l.doorbell_offset(63).unwrap(), 63 * 64);
+        assert!(l.doorbell_offset(64).is_err());
+    }
+
+    #[test]
+    fn data_never_overlaps_doorbells() {
+        let l = layout();
+        for dev in 0..6 {
+            let off = l.block_location(dev, 0, 64).unwrap();
+            assert!(off >= l.db_region, "block at {off} inside doorbell region");
+        }
+    }
+
+    #[test]
+    fn invalid_layouts_rejected() {
+        assert!(PoolLayout::new(6, 1 << 20, 0).is_err());
+        assert!(PoolLayout::new(6, 1 << 20, 100).is_err());
+        assert!(PoolLayout::new(6, 4096, 4096).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! The CXL shared memory pool substrate.
+//!
+//! The paper's pool is six CXL Type-3 cards sequentially stacked into one
+//! contiguous address space behind a CXL 2.0 switch, exposed to each node via
+//! Device-DAX and `mmap` (Listing 1 in the paper). Here the same workflow is
+//! reproduced with a `MAP_SHARED` mapping ([`shm::ShmPool`]), the identical
+//! sequential-stacking address arithmetic ([`address::SequentialStacking`])
+//! and the doorbell-region + data-region layout ([`layout::PoolLayout`]).
+
+pub mod address;
+pub mod device;
+pub mod layout;
+pub mod shm;
+
+pub use address::SequentialStacking;
+pub use device::CxlDeviceSpec;
+pub use layout::PoolLayout;
+pub use shm::ShmPool;

@@ -1,0 +1,283 @@
+//! DAX-style shared memory mapping for the pool (paper §2.2, Listing 1).
+//!
+//! The paper maps `/dev/dax0.0` with `mmap(MAP_SHARED)` and does manual
+//! layout inside the raw byte range. We reproduce the identical workflow
+//! against either an anonymous shared mapping (thread-rank mode) or a
+//! file in `/dev/shm` (the closest host-software analogue of a DevDAX
+//! character device: a byte-addressable, page-cache-bypassing region shared
+//! by all mappers).
+//!
+//! ## Aliasing discipline
+//!
+//! Concurrent access is governed exactly as on real CXL hardware:
+//! - data regions are written by exactly one producer before the matching
+//!   doorbell is set, and only read by consumers after they observe READY;
+//! - doorbells are 4-byte atomics in dedicated 64 B slots, accessed with
+//!   Acquire/Release ordering (standing in for the paper's explicit
+//!   cache-line flushes on a non-coherent fabric).
+
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// A shared, byte-addressable memory pool mapping.
+pub struct ShmPool {
+    base: *mut u8,
+    len: usize,
+    /// File descriptor when file-backed (DAX emulation); -1 for anonymous.
+    fd: i32,
+    /// Path to unlink on drop when we created the backing file.
+    owned_path: Option<String>,
+}
+
+// SAFETY: the mapping is shared memory by construction; all mutation goes
+// through `&self` methods whose synchronization discipline is documented
+// above (single-producer regions + atomic doorbells).
+unsafe impl Send for ShmPool {}
+unsafe impl Sync for ShmPool {}
+
+impl ShmPool {
+    /// Anonymous `MAP_SHARED` pool — the default for thread-per-rank runs.
+    pub fn anon(len: usize) -> Result<Self> {
+        if len == 0 {
+            bail!("pool length must be positive");
+        }
+        // SAFETY: straightforward mmap; result checked below.
+        let base = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED | libc::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if base == libc::MAP_FAILED {
+            bail!("mmap(anon, {len}) failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Self {
+            base: base.cast(),
+            len,
+            fd: -1,
+            owned_path: None,
+        })
+    }
+
+    /// File-backed pool, mirroring the paper's Listing 1 against a DAX
+    /// device path. Creates (and truncates to `len`) the file if needed.
+    pub fn dax_file(path: &str, len: usize) -> Result<Self> {
+        if len == 0 {
+            bail!("pool length must be positive");
+        }
+        let cpath = std::ffi::CString::new(path).context("path contains NUL")?;
+        // Listing 1 line 1: open the DAX device read/write.
+        // SAFETY: cpath is a valid NUL-terminated string.
+        let fd = unsafe { libc::open(cpath.as_ptr(), libc::O_RDWR | libc::O_CREAT, 0o600) };
+        if fd < 0 {
+            bail!("open({path}) failed: {}", std::io::Error::last_os_error());
+        }
+        // SAFETY: fd is valid.
+        if unsafe { libc::ftruncate(fd, len as libc::off_t) } != 0 {
+            let e = std::io::Error::last_os_error();
+            unsafe { libc::close(fd) };
+            bail!("ftruncate({path}, {len}) failed: {e}");
+        }
+        // Listing 1 line 2: map a `len`-byte window MAP_SHARED.
+        // SAFETY: fd valid, len positive.
+        let base = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            )
+        };
+        if base == libc::MAP_FAILED {
+            let e = std::io::Error::last_os_error();
+            unsafe { libc::close(fd) };
+            bail!("mmap({path}, {len}) failed: {e}");
+        }
+        Ok(Self {
+            base: base.cast(),
+            len,
+            fd,
+            owned_path: Some(path.to_string()),
+        })
+    }
+
+    /// Pool length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn check(&self, off: usize, len: usize) -> Result<()> {
+        if off.checked_add(len).map_or(true, |end| end > self.len) {
+            bail!("pool access [{off}, {off}+{len}) out of bounds (pool {})", self.len);
+        }
+        Ok(())
+    }
+
+    /// Producer-side store: copy `src` into the pool at `off`
+    /// (the `cudaMemcpyDeviceToHost` leg of Listing 2).
+    pub fn write_bytes(&self, off: usize, src: &[u8]) -> Result<()> {
+        self.check(off, src.len())?;
+        // SAFETY: bounds checked; producer exclusivity per module docs.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.base.add(off), src.len());
+        }
+        Ok(())
+    }
+
+    /// Consumer-side load: copy pool bytes at `off` into `dst`
+    /// (the `cudaMemcpyHostToDevice` leg of Listing 2).
+    pub fn read_bytes(&self, off: usize, dst: &mut [u8]) -> Result<()> {
+        self.check(off, dst.len())?;
+        // SAFETY: bounds checked; consumer reads only READY regions.
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.base.add(off), dst.as_mut_ptr(), dst.len());
+        }
+        Ok(())
+    }
+
+    /// Read `len/4` f32 values at `off` and accumulate into `acc`
+    /// (the consumer-side reduce of Listing 2 / Listing 3 line 14).
+    /// `off` must be 4-byte aligned.
+    pub fn reduce_add_f32(&self, off: usize, acc: &mut [f32]) -> Result<()> {
+        let bytes = acc.len() * 4;
+        self.check(off, bytes)?;
+        if off % 4 != 0 {
+            bail!("reduce_add_f32 offset {off} not 4-byte aligned");
+        }
+        // SAFETY: bounds+alignment checked; region is READY per discipline.
+        unsafe {
+            let src = self.base.add(off) as *const f32;
+            for (i, a) in acc.iter_mut().enumerate() {
+                *a += *src.add(i);
+            }
+        }
+        Ok(())
+    }
+
+    /// Borrow a doorbell word at byte offset `off` (4-aligned).
+    ///
+    /// The AtomicU32 lives *inside* the shared pool, exactly like the
+    /// paper's in-pool semaphores.
+    pub fn atomic_u32(&self, off: usize) -> Result<&AtomicU32> {
+        self.check(off, 4)?;
+        if off % 4 != 0 {
+            bail!("atomic offset {off} not 4-byte aligned");
+        }
+        // SAFETY: in-bounds, aligned; AtomicU32 has no invalid bit patterns.
+        Ok(unsafe { &*(self.base.add(off) as *const AtomicU32) })
+    }
+
+    /// Model of the paper's `flush_doorbell`: on real CXL the store must be
+    /// flushed past the (non-coherent) fabric; on this coherent host a
+    /// SeqCst fence gives the equivalent global-visibility guarantee.
+    pub fn flush(&self, _off: usize, _len: usize) {
+        std::sync::atomic::fence(Ordering::SeqCst);
+    }
+
+    /// Zero a byte range (used to reset the doorbell region between runs).
+    pub fn zero(&self, off: usize, len: usize) -> Result<()> {
+        self.check(off, len)?;
+        // SAFETY: bounds checked; called only during quiescent setup.
+        unsafe { std::ptr::write_bytes(self.base.add(off), 0, len) };
+        Ok(())
+    }
+
+    /// Raw base pointer (for the bench harness's memcpy calibration only).
+    pub fn base_ptr(&self) -> *mut u8 {
+        self.base
+    }
+}
+
+impl Drop for ShmPool {
+    fn drop(&mut self) {
+        // SAFETY: base/len are the live mapping created in the constructor.
+        unsafe {
+            libc::munmap(self.base.cast(), self.len);
+            if self.fd >= 0 {
+                libc::close(self.fd);
+            }
+        }
+        if let Some(p) = &self.owned_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anon_write_read_roundtrip() {
+        let p = ShmPool::anon(1 << 16).unwrap();
+        let data: Vec<u8> = (0..=255).collect();
+        p.write_bytes(1000, &data).unwrap();
+        let mut out = vec![0u8; 256];
+        p.read_bytes(1000, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn bounds_are_enforced() {
+        let p = ShmPool::anon(4096).unwrap();
+        assert!(p.write_bytes(4095, &[0, 0]).is_err());
+        let mut b = [0u8; 8];
+        assert!(p.read_bytes(4092, &mut b).is_err());
+        assert!(p.write_bytes(usize::MAX, &[1]).is_err());
+        // At-boundary is fine.
+        assert!(p.write_bytes(4088, &[1u8; 8]).is_ok());
+    }
+
+    #[test]
+    fn dax_file_backed_shared_between_mappers() {
+        let path = "/dev/shm/cxl_ccl_test_pool";
+        let _ = std::fs::remove_file(path);
+        let a = ShmPool::dax_file(path, 8192).unwrap();
+        let b = ShmPool::dax_file(path, 8192).unwrap();
+        a.write_bytes(128, b"hello-cxl").unwrap();
+        let mut out = vec![0u8; 9];
+        b.read_bytes(128, &mut out).unwrap();
+        assert_eq!(&out, b"hello-cxl");
+        drop(a);
+        drop(b);
+        assert!(!std::path::Path::new(path).exists(), "file unlinked on drop");
+    }
+
+    #[test]
+    fn reduce_add_accumulates() {
+        let p = ShmPool::anon(4096).unwrap();
+        let vals = [1.0f32, 2.0, 3.0, 4.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        p.write_bytes(64, &bytes).unwrap();
+        let mut acc = vec![10.0f32; 4];
+        p.reduce_add_f32(64, &mut acc).unwrap();
+        assert_eq!(acc, vec![11.0, 12.0, 13.0, 14.0]);
+        // Misaligned offset rejected.
+        assert!(p.reduce_add_f32(66, &mut acc).is_err());
+    }
+
+    #[test]
+    fn atomics_in_pool() {
+        let p = ShmPool::anon(4096).unwrap();
+        let a = p.atomic_u32(256).unwrap();
+        a.store(7, Ordering::Release);
+        assert_eq!(p.atomic_u32(256).unwrap().load(Ordering::Acquire), 7);
+        assert!(p.atomic_u32(255).is_err(), "misaligned rejected");
+    }
+
+    #[test]
+    fn zero_len_pool_rejected() {
+        assert!(ShmPool::anon(0).is_err());
+    }
+}

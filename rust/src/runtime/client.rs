@@ -1,0 +1,207 @@
+//! PJRT CPU client wrapper: load HLO text → compile once → execute many.
+
+use crate::runtime::Manifest;
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Mutex;
+
+fn xe(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+/// A live PJRT client plus the artifact manifest.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// CPU client over the discovered artifacts directory.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(xe)?,
+            manifest: Manifest::discover()?,
+        })
+    }
+
+    pub fn cpu_with_dir(dir: &str) -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(xe)?,
+            manifest: Manifest::load(dir)?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by manifest key.
+    fn compile(&self, key: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.artifact_path(key)?;
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(xe)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(xe)
+            .with_context(|| format!("compiling {key}"))
+    }
+
+    /// The Pallas pairwise-add reduction kernel, choosing the largest tile
+    /// ≤ `preferred` elements (or the smallest available).
+    pub fn reduce_kernel(&self, preferred: usize) -> Result<ReduceKernel> {
+        let tiles = self.manifest.reduce_tiles()?;
+        let tile = tiles
+            .iter()
+            .copied()
+            .filter(|t| *t <= preferred)
+            .max()
+            .or_else(|| tiles.first().copied())
+            .ok_or_else(|| anyhow!("no reduce tiles in manifest"))?;
+        let exe = self.compile(&format!("reduce_add_{tile}"))?;
+        Ok(ReduceKernel {
+            exe: Mutex::new(exe),
+            tile,
+        })
+    }
+
+    /// The train-step executable for a model preset.
+    pub fn model_step(&self, preset: &str) -> Result<ModelStep> {
+        let exe = self.compile(&format!("model_step_{preset}"))?;
+        Ok(ModelStep {
+            exe,
+            n_params: self.manifest.get_usize(&format!("params_{preset}"))?,
+            batch: self.manifest.get_usize(&format!("batch_{preset}"))?,
+            seq_len: self.manifest.get_usize(&format!("seq_len_{preset}"))?,
+            vocab: self.manifest.get_usize(&format!("vocab_{preset}"))?,
+        })
+    }
+
+    /// The Adam shard-update executable for a preset.
+    pub fn adam_update(&self, preset: &str) -> Result<AdamUpdate> {
+        let exe = self.compile(&format!("adam_update_{preset}"))?;
+        Ok(AdamUpdate {
+            exe,
+            shard_len: self.manifest.get_usize(&format!("shard_{preset}"))?,
+        })
+    }
+}
+
+/// The L1 Pallas reduction on the L3 hot path: `out = a + b` over one tile.
+///
+/// The executable is behind a `Mutex` so the engine can be shared by the
+/// per-rank reader threads (PJRT CPU executions are serialized here; on a
+/// real deployment each node has its own client).
+pub struct ReduceKernel {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    tile: usize,
+}
+
+// SAFETY: all access to the executable goes through the Mutex; the PJRT CPU
+// client itself is thread-safe for compilation/execution.
+unsafe impl Send for ReduceKernel {}
+unsafe impl Sync for ReduceKernel {}
+
+impl ReduceKernel {
+    pub fn tile_elems(&self) -> usize {
+        self.tile
+    }
+
+    /// `a + b` elementwise; both slices must be exactly one tile long.
+    pub fn add(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        if a.len() != self.tile || b.len() != self.tile {
+            bail!(
+                "reduce kernel tile mismatch: got {}/{}, tile {}",
+                a.len(),
+                b.len(),
+                self.tile
+            );
+        }
+        let la = xla::Literal::vec1(a);
+        let lb = xla::Literal::vec1(b);
+        let exe = self.exe.lock().unwrap();
+        let out = exe.execute::<xla::Literal>(&[la, lb]).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        let out = out.to_tuple1().map_err(xe)?;
+        out.to_vec::<f32>().map_err(xe)
+    }
+}
+
+/// `(flat_params, xb, yb) -> (loss, flat_grads)`.
+pub struct ModelStep {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_params: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl ModelStep {
+    /// Run one fwd/bwd. `tokens_x/y` are row-major `(batch, seq_len)` i32.
+    pub fn run(&self, flat: &[f32], tokens_x: &[i32], tokens_y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        if flat.len() != self.n_params {
+            bail!("params len {} != {}", flat.len(), self.n_params);
+        }
+        let bt = self.batch * self.seq_len;
+        if tokens_x.len() != bt || tokens_y.len() != bt {
+            bail!("token batch must be {} elements", bt);
+        }
+        let lp = xla::Literal::vec1(flat);
+        let lx = xla::Literal::vec1(tokens_x)
+            .reshape(&[self.batch as i64, self.seq_len as i64])
+            .map_err(xe)?;
+        let ly = xla::Literal::vec1(tokens_y)
+            .reshape(&[self.batch as i64, self.seq_len as i64])
+            .map_err(xe)?;
+        let out = self.exe.execute::<xla::Literal>(&[lp, lx, ly]).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        let (loss, grads) = out.to_tuple2().map_err(xe)?;
+        let loss = loss.to_vec::<f32>().map_err(xe)?[0];
+        let grads = grads.to_vec::<f32>().map_err(xe)?;
+        Ok((loss, grads))
+    }
+}
+
+/// `(shard, grad, m, v, step) -> (shard', m', v')`.
+pub struct AdamUpdate {
+    exe: xla::PjRtLoadedExecutable,
+    pub shard_len: usize,
+}
+
+impl AdamUpdate {
+    pub fn run(
+        &self,
+        shard: &[f32],
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        for (name, s) in [("shard", shard), ("grad", grad), ("m", m), ("v", v)] {
+            if s.len() != self.shard_len {
+                bail!("{name} len {} != shard len {}", s.len(), self.shard_len);
+            }
+        }
+        let args = [
+            xla::Literal::vec1(shard),
+            xla::Literal::vec1(grad),
+            xla::Literal::vec1(m),
+            xla::Literal::vec1(v),
+            xla::Literal::scalar(step),
+        ];
+        let out = self.exe.execute::<xla::Literal>(&args).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        let (p, m2, v2) = out.to_tuple3().map_err(xe)?;
+        Ok((
+            p.to_vec::<f32>().map_err(xe)?,
+            m2.to_vec::<f32>().map_err(xe)?,
+            v2.to_vec::<f32>().map_err(xe)?,
+        ))
+    }
+}

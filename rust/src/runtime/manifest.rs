@@ -1,0 +1,122 @@
+//! `artifacts/manifest.txt` — key=value metadata emitted by the AOT
+//! pipeline (no serde offline, so the format is deliberately trivial).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    kv: HashMap<String, String>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let mut kv = HashMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("manifest line {} is not key=value: {line:?}", i + 1);
+            };
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        if kv.get("format").map(String::as_str) != Some("hlo-text") {
+            bail!("unsupported artifact format {:?}", kv.get("format"));
+        }
+        Ok(Self { dir, kv })
+    }
+
+    /// Default location relative to the repo root / current dir.
+    pub fn discover() -> Result<Self> {
+        for cand in ["artifacts", "../artifacts"] {
+            if Path::new(cand).join("manifest.txt").exists() {
+                return Self::load(cand);
+            }
+        }
+        bail!("no artifacts/manifest.txt found (run `make artifacts`)")
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.kv
+            .get(key)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing key {key:?}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("manifest key {key:?} is not an integer"))
+    }
+
+    /// Absolute path of an artifact referenced by `key`.
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(self.get(key)?))
+    }
+
+    /// Tile sizes available for the reduce kernel, ascending.
+    pub fn reduce_tiles(&self) -> Result<Vec<usize>> {
+        let mut v = self
+            .get("reduce_tiles")?
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().context("bad tile"))
+            .collect::<Result<Vec<_>>>()?;
+        v.sort_unstable();
+        Ok(v)
+    }
+
+    pub fn nranks(&self) -> Result<usize> {
+        self.get_usize("nranks")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_key_values() {
+        let dir = std::env::temp_dir().join("ccl_manifest_test1");
+        write_manifest(
+            &dir,
+            "format=hlo-text\nnranks=4\nreduce_tiles=32768,262144\nmodel_step_tiny=model_step_tiny.hlo.txt\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.nranks().unwrap(), 4);
+        assert_eq!(m.reduce_tiles().unwrap(), vec![32768, 262144]);
+        assert!(m
+            .artifact_path("model_step_tiny")
+            .unwrap()
+            .ends_with("model_step_tiny.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = std::env::temp_dir().join("ccl_manifest_test2");
+        write_manifest(&dir, "format=proto\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("ccl_manifest_test3");
+        write_manifest(&dir, "format=hlo-text\nthis is not kv\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced by
+//! `python/compile/aot.py` and executes them from rust.
+//!
+//! This is the only place the stack touches XLA at run time — python is
+//! build-time only. Interchange is HLO *text*: jax ≥ 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{AdamUpdate, ModelStep, PjrtRuntime, ReduceKernel};
+pub use manifest::Manifest;

@@ -1,0 +1,548 @@
+//! Flow-level, event-driven virtual-time simulation of a planned collective
+//! over the CXL pool.
+//!
+//! This is the same emulator methodology the paper itself uses for its
+//! scalability study (§5.3): "concurrent read or write requests targeting
+//! the same CXL device share the available bandwidth uniformly; requests
+//! directed to different CXL devices are mutually independent." On top of
+//! that we model the fixed costs measured in §3 (see [`crate::sim::constants`]).
+//!
+//! The input is the *identical* [`CollectivePlan`] the real executor runs —
+//! one algorithm, two backends.
+
+use crate::collectives::ops::{CollectivePlan, Op};
+use crate::pool::PoolLayout;
+use crate::sim::constants as k;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Tunable physical parameters (defaults = the paper's testbed, §3).
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    /// Per-CXL-device sustained bandwidth (Fig. 3a plateau).
+    pub device_bw: f64,
+    /// Per-node, per-direction DMA engine cap (Observation 1).
+    pub node_dma_bw: f64,
+    /// Fixed cost per cudaMemcpyAsync (the §5.2 small-message overhead).
+    pub memcpy_overhead: f64,
+    /// Producer doorbell store + flush.
+    pub doorbell_ring: f64,
+    /// Consumer wake-up delay after READY becomes visible.
+    pub doorbell_poll: f64,
+    /// Probe cost when the bell is already READY.
+    pub doorbell_check: f64,
+    /// Global barrier cost (Naive/Aggregate phase separator).
+    pub barrier_cost: f64,
+    /// GPU-local copy bandwidth (CopyLocal ops).
+    pub local_copy_bw: f64,
+    /// Consumer-side reduction throughput.
+    pub reduce_bw: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        Self {
+            device_bw: k::CXL_DEVICE_BW,
+            node_dma_bw: k::NODE_DMA_BW,
+            memcpy_overhead: k::MEMCPY_LAUNCH_OVERHEAD,
+            doorbell_ring: k::DOORBELL_RING_COST,
+            doorbell_poll: k::DOORBELL_POLL_INTERVAL,
+            doorbell_check: k::DOORBELL_CHECK_COST,
+            barrier_cost: k::BARRIER_COST,
+            local_copy_bw: k::LOCAL_COPY_BW,
+            reduce_bw: k::REDUCE_BW,
+        }
+    }
+}
+
+/// Simulation result.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Virtual end-to-end time (all streams drained), seconds.
+    pub total_time: f64,
+    /// Completion time of each rank (max of its two streams).
+    pub rank_time: Vec<f64>,
+    /// Bytes that crossed each device's port.
+    pub device_bytes: Vec<usize>,
+    /// Peak number of simultaneously active transfers on any device.
+    pub peak_device_flows: usize,
+}
+
+impl SimReport {
+    /// Aggregate pool throughput (total bytes moved / total time).
+    pub fn pool_throughput(&self) -> f64 {
+        self.device_bytes.iter().sum::<usize>() as f64 / self.total_time
+    }
+}
+
+/// The virtual-time fabric.
+pub struct SimFabric {
+    pub layout: PoolLayout,
+    pub params: SimParams,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    /// Ready to issue the next op.
+    Ready,
+    /// Fixed-cost busy period until the given virtual time.
+    Busy(f64),
+    /// Mid-transfer (has queued segments and/or a live flow).
+    Transferring,
+    /// Waiting on a doorbell id.
+    Blocked(usize),
+    /// Parked at the barrier.
+    AtBarrier,
+    /// Stream drained.
+    Done,
+}
+
+struct Stream<'p> {
+    rank: usize,
+    is_write: bool,
+    ops: &'p [Op],
+    pc: usize,
+    phase: Phase,
+    /// Remaining per-device segments of the current transfer (device,
+    /// bytes), executed sequentially in address order.
+    segs: Vec<(usize, f64)>,
+    /// Trailing fixed cost after the transfer (reduce compute).
+    post_cost: f64,
+    finish: f64,
+}
+
+struct Flow {
+    stream: usize,
+    device: usize,
+    /// Pool-write flows and pool-read flows use independent link/port
+    /// capacity: PCIe/CXL is full duplex, which is also what lets the
+    /// paper's Fig. 7 chunk pipeline overlap a producer's writes with a
+    /// consumer's reads of the same block. Contention (Observation 2 /
+    /// Fig. 3b-c) is within a direction.
+    is_write: bool,
+    remaining: f64,
+    rate: f64,
+}
+
+impl SimFabric {
+    pub fn new(layout: PoolLayout) -> Self {
+        Self {
+            layout,
+            params: SimParams::default(),
+        }
+    }
+
+    pub fn with_params(mut self, params: SimParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Split a pool transfer into per-device byte segments (address order).
+    fn device_segments(&self, pool_off: usize, len: usize) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        let mut off = pool_off;
+        let mut rem = len;
+        while rem > 0 {
+            let dev = self.layout.stacking.device_of(off);
+            let dev_end = self.layout.stacking.device_range(dev).end;
+            let take = rem.min(dev_end - off);
+            out.push((dev, take as f64));
+            off += take;
+            rem -= take;
+        }
+        out
+    }
+
+    /// Simulate a plan to completion in virtual time.
+    pub fn simulate(&self, plan: &CollectivePlan) -> Result<SimReport> {
+        let p = self.params;
+        let nr = plan.nranks;
+        let mut streams: Vec<Stream> = Vec::with_capacity(2 * nr);
+        for rp in &plan.ranks {
+            for is_write in [true, false] {
+                streams.push(Stream {
+                    rank: rp.rank,
+                    is_write,
+                    ops: if is_write { &rp.write_ops } else { &rp.read_ops },
+                    pc: 0,
+                    phase: Phase::Ready,
+                    segs: Vec::new(),
+                    post_cost: 0.0,
+                    finish: 0.0,
+                });
+            }
+        }
+
+        let ndev = self.layout.stacking.ndevices;
+        let mut flows: Vec<Flow> = Vec::new();
+        let mut db_set_at: HashMap<usize, f64> = HashMap::new();
+        let mut device_bytes = vec![0usize; ndev];
+        let mut peak_flows = 0usize;
+        let mut t = 0.0f64;
+        let total_ops: usize = streams.iter().map(|s| s.ops.len()).sum();
+        let max_iters = 60 * total_ops + 10_000;
+
+        for _iter in 0..max_iters {
+            // --- issue phase: drive every stream as far as it can go at
+            //     the current virtual time --------------------------------
+            let mut progressed = true;
+            while progressed {
+                progressed = false;
+                for si in 0..streams.len() {
+                    match streams[si].phase {
+                        Phase::Busy(until) if until <= t + 1e-15 => {
+                            let s = &mut streams[si];
+                            s.phase = if s.segs.is_empty() && s.post_cost == 0.0 {
+                                Phase::Ready
+                            } else {
+                                Phase::Transferring
+                            };
+                            progressed = true;
+                        }
+                        Phase::Blocked(db) => {
+                            if let Some(&ts) = db_set_at.get(&db) {
+                                if ts <= t {
+                                    streams[si].phase = Phase::Busy(t + p.doorbell_poll);
+                                    progressed = true;
+                                }
+                            }
+                        }
+                        Phase::Transferring => {
+                            // Start the next segment if no live flow.
+                            if flows.iter().any(|f| f.stream == si) {
+                                continue;
+                            }
+                            let s = &mut streams[si];
+                            if let Some((dev, bytes)) = s.segs.first().copied() {
+                                s.segs.remove(0);
+                                device_bytes[dev] += bytes as usize;
+                                let is_write = s.is_write;
+                                flows.push(Flow {
+                                    stream: si,
+                                    device: dev,
+                                    is_write,
+                                    remaining: bytes,
+                                    rate: 0.0,
+                                });
+                            } else {
+                                let post = s.post_cost;
+                                s.post_cost = 0.0;
+                                s.phase = Phase::Busy(t + post);
+                                progressed = true;
+                            }
+                        }
+                        Phase::Ready => {
+                            progressed = true;
+                            if streams[si].pc >= streams[si].ops.len() {
+                                streams[si].phase = Phase::Done;
+                                streams[si].finish = t;
+                                continue;
+                            }
+                            let op = streams[si].ops[streams[si].pc];
+                            streams[si].pc += 1;
+                            let s = &mut streams[si];
+                            match op {
+                                Op::Write { pool_off, len, .. } | Op::Read { pool_off, len, .. } => {
+                                    s.segs = self.device_segments(pool_off, len);
+                                    s.post_cost = 0.0;
+                                    s.phase = Phase::Busy(t + p.memcpy_overhead);
+                                }
+                                Op::ReduceF32 { pool_off, len, .. } => {
+                                    s.segs = self.device_segments(pool_off, len);
+                                    s.post_cost = len as f64 / p.reduce_bw;
+                                    s.phase = Phase::Busy(t + p.memcpy_overhead);
+                                }
+                                Op::CopyLocal { len, .. } => {
+                                    s.phase = Phase::Busy(
+                                        t + p.memcpy_overhead + len as f64 / p.local_copy_bw,
+                                    );
+                                }
+                                Op::SetDoorbell { db } => {
+                                    db_set_at.entry(db).or_insert(t + p.doorbell_ring);
+                                    s.phase = Phase::Busy(t + p.doorbell_ring);
+                                }
+                                Op::WaitDoorbell { db } => match db_set_at.get(&db) {
+                                    Some(&ts) if ts <= t => {
+                                        s.phase = Phase::Busy(t + p.doorbell_check);
+                                    }
+                                    _ => s.phase = Phase::Blocked(db),
+                                },
+                                Op::Barrier => {
+                                    s.phase = Phase::AtBarrier;
+                                }
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                // Barrier release: all live streams parked.
+                let arrived = streams.iter().filter(|s| s.phase == Phase::AtBarrier).count();
+                if arrived > 0
+                    && streams
+                        .iter()
+                        .all(|s| matches!(s.phase, Phase::AtBarrier | Phase::Done))
+                {
+                    let release = t + p.barrier_cost;
+                    for s in streams.iter_mut() {
+                        if s.phase == Phase::AtBarrier {
+                            s.phase = Phase::Busy(release);
+                        }
+                    }
+                    progressed = true;
+                }
+            }
+
+            if streams.iter().all(|s| s.phase == Phase::Done) {
+                break;
+            }
+
+            // --- rates: max-min fair share per device, capped per-flow by
+            //     the node DMA engine --------------------------------------
+            let mut per_port: HashMap<(usize, bool), usize> = HashMap::new();
+            for f in &flows {
+                *per_port.entry((f.device, f.is_write)).or_insert(0) += 1;
+            }
+            peak_flows = peak_flows.max(per_port.values().copied().max().unwrap_or(0));
+            for f in flows.iter_mut() {
+                let n = per_port[&(f.device, f.is_write)] as f64;
+                f.rate = (p.device_bw / n).min(p.node_dma_bw);
+            }
+
+            // --- next event time -----------------------------------------
+            let mut t_next = f64::INFINITY;
+            for s in &streams {
+                match s.phase {
+                    Phase::Busy(until) => t_next = t_next.min(until),
+                    Phase::Blocked(db) => {
+                        if let Some(&ts) = db_set_at.get(&db) {
+                            t_next = t_next.min(ts);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            for f in &flows {
+                if f.rate > 0.0 {
+                    t_next = t_next.min(t + f.remaining / f.rate);
+                }
+            }
+            if !t_next.is_finite() {
+                let stuck: Vec<String> = streams
+                    .iter()
+                    .filter(|s| s.phase != Phase::Done)
+                    .map(|s| {
+                        format!(
+                            "rank {} {} pc {} {:?}",
+                            s.rank,
+                            if s.is_write { "write" } else { "read" },
+                            s.pc,
+                            s.phase
+                        )
+                    })
+                    .collect();
+                bail!("simulation deadlock at t={t:.9}: {stuck:?}");
+            }
+
+            // --- advance --------------------------------------------------
+            let dt = (t_next - t).max(0.0);
+            t = t_next;
+            for f in flows.iter_mut() {
+                f.remaining -= f.rate * dt;
+            }
+            let mut finished = Vec::new();
+            flows.retain(|f| {
+                if f.remaining <= 0.5 {
+                    finished.push(f.stream);
+                    false
+                } else {
+                    true
+                }
+            });
+            for si in finished {
+                streams[si].phase = Phase::Transferring; // next segment or done
+            }
+        }
+
+        if streams.iter().any(|s| s.phase != Phase::Done) {
+            bail!("simulation did not converge (iteration cap reached)");
+        }
+
+        let mut rank_time = vec![0.0f64; nr];
+        for s in &streams {
+            rank_time[s.rank] = rank_time[s.rank].max(s.finish);
+        }
+        Ok(SimReport {
+            total_time: t,
+            rank_time,
+            device_bytes,
+            peak_device_flows: peak_flows,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::builder::plan_collective;
+    use crate::collectives::{CclConfig, CclVariant, Primitive};
+    use crate::topology::ClusterSpec;
+
+    fn setup(nranks: usize) -> (ClusterSpec, PoolLayout, SimFabric) {
+        let spec = ClusterSpec::new(nranks, 6, 256 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        (spec, layout, SimFabric::new(layout))
+    }
+
+    fn sim_time(p: Primitive, v: CclVariant, nranks: usize, n_elems: usize) -> f64 {
+        let (spec, layout, fab) = setup(nranks);
+        let plan = plan_collective(p, &spec, &layout, &v.config(8), n_elems).unwrap();
+        fab.simulate(&plan).unwrap().total_time
+    }
+
+    #[test]
+    fn single_write_matches_bandwidth_model() {
+        // Naive 2-rank broadcast: write 64 MiB, barrier, read 64 MiB, all
+        // on device 0 -> ~2 × bytes / device_bw.
+        let (spec, layout, fab) = setup(2);
+        let n = 16 << 20;
+        let plan = plan_collective(
+            Primitive::Broadcast,
+            &spec,
+            &layout,
+            &CclVariant::Naive.config(1),
+            n,
+        )
+        .unwrap();
+        let rep = fab.simulate(&plan).unwrap();
+        let ideal = 2.0 * (n * 4) as f64 / k::CXL_DEVICE_BW;
+        assert!(
+            rep.total_time > ideal * 0.95 && rep.total_time < ideal * 1.3,
+            "time {} vs ideal {}",
+            rep.total_time,
+            ideal
+        );
+    }
+
+    #[test]
+    fn observation2_same_device_contention_is_visible() {
+        let spec1 = ClusterSpec::new(3, 1, 1 << 30);
+        let layout1 = PoolLayout::from_spec(&spec1).unwrap();
+        let fab1 = SimFabric::new(layout1);
+        let plan1 = plan_collective(
+            Primitive::Gather,
+            &spec1,
+            &layout1,
+            &CclConfig::default_all(),
+            16 << 20,
+        )
+        .unwrap();
+        let t1 = fab1.simulate(&plan1).unwrap();
+
+        let (spec6, layout6, fab6) = setup(3);
+        let plan6 = plan_collective(
+            Primitive::Gather,
+            &spec6,
+            &layout6,
+            &CclConfig::default_all(),
+            16 << 20,
+        )
+        .unwrap();
+        let t6 = fab6.simulate(&plan6).unwrap();
+        assert!(
+            t1.total_time > 1.3 * t6.total_time,
+            "contended {} should be much slower than interleaved {}",
+            t1.total_time,
+            t6.total_time
+        );
+        assert!(t1.peak_device_flows >= 2);
+    }
+
+    #[test]
+    fn all_variant_beats_naive_for_allgather() {
+        let t_all = sim_time(Primitive::AllGather, CclVariant::All, 3, 16 << 20);
+        let t_naive = sim_time(Primitive::AllGather, CclVariant::Naive, 3, 16 << 20);
+        let speedup = t_naive / t_all;
+        assert!(
+            speedup > 1.5,
+            "expected All >> Naive, got {speedup:.2} ({t_all} vs {t_naive})"
+        );
+    }
+
+    #[test]
+    fn chunking_overlap_beats_single_chunk() {
+        let (spec, layout, fab) = setup(3);
+        let n = 32 << 20;
+        let time = |chunks: usize| {
+            let plan = plan_collective(
+                Primitive::AllGather,
+                &spec,
+                &layout,
+                &CclVariant::All.config(chunks),
+                n,
+            )
+            .unwrap();
+            fab.simulate(&plan).unwrap().total_time
+        };
+        let t1 = time(1);
+        let t8 = time(8);
+        assert!(t8 < t1, "8 chunks {t8} should beat 1 chunk {t1}");
+    }
+
+    #[test]
+    fn bytes_are_conserved() {
+        let (spec, layout, fab) = setup(3);
+        for p in Primitive::ALL {
+            let plan =
+                plan_collective(p, &spec, &layout, &CclConfig::default_all(), 3 << 14).unwrap();
+            let rep = fab.simulate(&plan).unwrap();
+            let expected: usize = plan.total_pool_bytes();
+            let simulated: usize = rep.device_bytes.iter().sum();
+            assert_eq!(simulated, expected, "{p}: byte conservation");
+        }
+    }
+
+    #[test]
+    fn more_ranks_same_devices_increases_time() {
+        let t3 = sim_time(Primitive::AllToAll, CclVariant::All, 3, 12 << 20);
+        let t12 = sim_time(Primitive::AllToAll, CclVariant::All, 12, 12 << 20);
+        assert!(t12 > 1.2 * t3, "12-rank {t12} should exceed 3-rank {t3}");
+    }
+
+    #[test]
+    fn rank_times_bounded_by_total() {
+        let (spec, layout, fab) = setup(3);
+        let plan = plan_collective(
+            Primitive::AllReduce,
+            &spec,
+            &layout,
+            &CclConfig::default_all(),
+            3 << 16,
+        )
+        .unwrap();
+        let rep = fab.simulate(&plan).unwrap();
+        for rt in &rep.rank_time {
+            assert!(*rt <= rep.total_time + 1e-12);
+        }
+        assert!(rep.rank_time.iter().cloned().fold(0.0, f64::max) > 0.0);
+    }
+
+    #[test]
+    fn deadlock_detection_reports_instead_of_hanging() {
+        use crate::collectives::ops::{CollectivePlan, Op, RankPlan};
+        let (_, layout, _) = setup(2);
+        let fab = SimFabric::new(layout);
+        let mut r0 = RankPlan::new(0);
+        r0.read_ops.push(Op::WaitDoorbell { db: 3 }); // nobody rings it
+        let plan = CollectivePlan {
+            primitive: Primitive::Broadcast,
+            variant: CclVariant::All,
+            nranks: 2,
+            n_elems: 4,
+            send_elems: 4,
+            recv_elems: 4,
+            ranks: vec![r0, RankPlan::new(1)],
+        };
+        let err = fab.simulate(&plan).unwrap_err();
+        assert!(err.to_string().contains("deadlock"));
+    }
+}

@@ -1,0 +1,95 @@
+//! Access-latency model + measured pointer-chase (Table 1).
+//!
+//! The paper measures 214 ns to local DRAM and 658 ns to the pool with
+//! Intel MLC. The model side reports the calibrated constants; the measured
+//! side runs a dependent-load pointer chase over a mapped region on *this*
+//! host — it cannot reproduce CXL's absolute numbers (there is no switch
+//! here), but it demonstrates the MLC methodology and feeds the hotpath
+//! bench.
+
+use crate::pool::ShmPool;
+use crate::sim::constants::{CXL_LATENCY, DRAM_LATENCY};
+use crate::util::SplitMix64;
+use std::time::Instant;
+
+/// Modeled Table 1 row.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyModel {
+    pub dram: f64,
+    pub cxl_pool: f64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        Self {
+            dram: DRAM_LATENCY,
+            cxl_pool: CXL_LATENCY,
+        }
+    }
+}
+
+impl LatencyModel {
+    /// The headline ratio the paper reports (3.1×).
+    pub fn ratio(&self) -> f64 {
+        self.cxl_pool / self.dram
+    }
+}
+
+/// MLC-style dependent-load latency over `region_bytes` of a pool mapping:
+/// builds a random cyclic permutation of cache-line-spaced slots and walks
+/// it `steps` times. Returns seconds per load.
+pub fn pointer_chase(pool: &ShmPool, region_off: usize, region_bytes: usize, steps: usize) -> f64 {
+    const LINE: usize = 64;
+    let slots = (region_bytes / LINE).max(2);
+    // Sattolo's algorithm: a single cycle visiting every slot.
+    let mut perm: Vec<u64> = (0..slots as u64).collect();
+    let mut rng = SplitMix64::new(0xCA11_AB1E);
+    for i in (1..slots).rev() {
+        let j = rng.next_below(i as u64) as usize;
+        perm.swap(i, j);
+    }
+    // next[i] = perm-successor; store as u64 in the first 8 bytes of a line.
+    let mut next = vec![0u64; slots];
+    for i in 0..slots {
+        next[perm[i] as usize] = perm[(i + 1) % slots];
+    }
+    for (i, n) in next.iter().enumerate() {
+        pool.write_bytes(region_off + i * LINE, &n.to_le_bytes())
+            .expect("chase region out of pool");
+    }
+    let mut idx = 0u64;
+    let mut buf = [0u8; 8];
+    // Warmup lap.
+    for _ in 0..slots.min(steps) {
+        pool.read_bytes(region_off + idx as usize * LINE, &mut buf).unwrap();
+        idx = u64::from_le_bytes(buf);
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        pool.read_bytes(region_off + idx as usize * LINE, &mut buf).unwrap();
+        idx = u64::from_le_bytes(buf);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    // Keep the dependency chain live.
+    std::hint::black_box(idx);
+    dt / steps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_ratio_matches_table1() {
+        let m = LatencyModel::default();
+        assert!((m.ratio() - 3.07).abs() < 0.1);
+    }
+
+    #[test]
+    fn pointer_chase_returns_plausible_host_latency() {
+        let pool = ShmPool::anon(1 << 20).unwrap();
+        let lat = pointer_chase(&pool, 0, 1 << 20, 20_000);
+        // On any real host a dependent load is between 0.5 ns (L1) and 2 µs.
+        assert!(lat > 5e-10 && lat < 2e-6, "latency {lat}");
+    }
+}

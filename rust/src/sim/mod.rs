@@ -1,0 +1,13 @@
+//! Virtual-time performance substrate.
+//!
+//! Absolute performance cannot be measured on this host (no CXL switch, no
+//! GPUs), so the figures are regenerated on a flow-level simulator
+//! calibrated with the paper's §3 characterization — the same approach the
+//! paper itself takes for its §5.3 scalability study. Correctness always
+//! runs for real (see [`crate::exec`]); only *time* is virtual here.
+
+pub mod constants;
+pub mod fabric;
+pub mod latency;
+
+pub use fabric::{SimFabric, SimParams, SimReport};

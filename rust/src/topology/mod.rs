@@ -1,0 +1,128 @@
+//! Cluster topology: ranks (one GPU per node, as in the paper's testbed),
+//! the CXL device pool behind the switch, and the communicator wiring.
+
+/// Static description of the cluster + pool a communicator runs on.
+///
+/// The paper's testbed is `nranks = 3` nodes (one H100 each) and
+/// `ndevices = 6` Micron CZ120 cards of 128 GB behind a TITAN-II switch.
+/// Capacities here are scaled down (default 128 MiB/device) so the whole
+/// pool fits comfortably in this machine's RAM; all placement math is
+/// capacity-relative so the scaling is behaviour-preserving.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterSpec {
+    /// Number of communicator ranks (== nodes; 1 GPU per node).
+    pub nranks: usize,
+    /// Number of CXL memory devices stacked in the pool.
+    pub ndevices: usize,
+    /// Capacity of each CXL device, bytes (`DS` in the paper).
+    pub device_capacity: usize,
+    /// Size of the pre-allocated doorbell region at the pool base
+    /// (`DB_offset` in the paper). Must be a multiple of 64.
+    pub db_region_size: usize,
+}
+
+impl ClusterSpec {
+    /// Default doorbell region: 1 MiB = 16384 cache-line doorbells.
+    pub const DEFAULT_DB_REGION: usize = 1 << 20;
+
+    /// Build a spec with the default doorbell region.
+    pub fn new(nranks: usize, ndevices: usize, device_capacity: usize) -> Self {
+        Self {
+            nranks,
+            ndevices,
+            device_capacity,
+            db_region_size: Self::DEFAULT_DB_REGION,
+        }
+    }
+
+    /// The paper's testbed shape (3 nodes, 6 devices), with scaled capacity.
+    pub fn paper(device_capacity: usize) -> Self {
+        Self::new(3, 6, device_capacity)
+    }
+
+    /// Total pool size (sequentially stacked devices).
+    pub fn pool_size(&self) -> usize {
+        self.ndevices * self.device_capacity
+    }
+
+    /// Number of doorbell slots available (64 B per slot).
+    pub fn doorbell_slots(&self) -> usize {
+        self.db_region_size / crate::doorbell::DOORBELL_SLOT
+    }
+
+    /// `device_per_rank` from the paper's Eq. 4 (`ND / TOTAL_RANK`).
+    /// Zero when there are more ranks than devices — callers must fall back
+    /// to shared devices (see `interleave::type2`).
+    pub fn device_per_rank(&self) -> usize {
+        self.ndevices / self.nranks
+    }
+
+    /// Validate invariants; returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nranks < 2 {
+            return Err(format!("need >= 2 ranks, got {}", self.nranks));
+        }
+        if self.ndevices == 0 {
+            return Err("need >= 1 CXL device".into());
+        }
+        if self.device_capacity < (1 << 16) {
+            return Err(format!(
+                "device capacity {} too small (< 64 KiB)",
+                self.device_capacity
+            ));
+        }
+        if self.db_region_size % 64 != 0 || self.db_region_size == 0 {
+            return Err(format!(
+                "doorbell region {} must be a positive multiple of 64",
+                self.db_region_size
+            ));
+        }
+        if self.db_region_size >= self.device_capacity {
+            return Err(format!(
+                "doorbell region {} must fit inside device 0 ({})",
+                self.db_region_size, self.device_capacity
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape() {
+        let s = ClusterSpec::paper(128 << 20);
+        assert_eq!(s.nranks, 3);
+        assert_eq!(s.ndevices, 6);
+        assert_eq!(s.pool_size(), 6 * (128 << 20));
+        assert_eq!(s.device_per_rank(), 2);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn device_per_rank_truncates() {
+        assert_eq!(ClusterSpec::new(4, 6, 1 << 20).device_per_rank(), 1);
+        assert_eq!(ClusterSpec::new(12, 6, 1 << 20).device_per_rank(), 0);
+        assert_eq!(ClusterSpec::new(2, 6, 1 << 20).device_per_rank(), 3);
+    }
+
+    #[test]
+    fn validation_catches_bad_specs() {
+        assert!(ClusterSpec::new(1, 6, 1 << 20).validate().is_err());
+        assert!(ClusterSpec::new(3, 0, 1 << 20).validate().is_err());
+        assert!(ClusterSpec::new(3, 6, 1024).validate().is_err());
+        let mut s = ClusterSpec::new(3, 6, 1 << 20);
+        s.db_region_size = 100; // not multiple of 64
+        assert!(s.validate().is_err());
+        s.db_region_size = 2 << 20; // bigger than a device
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn doorbell_slot_count() {
+        let s = ClusterSpec::new(3, 6, 8 << 20);
+        assert_eq!(s.doorbell_slots(), (1 << 20) / 64);
+    }
+}

@@ -1,0 +1,271 @@
+//! FSDP-style trainer: flat parameter vector sharded across ranks.
+//!
+//! Per step (PyTorch FSDP's communication schedule, paper §5.5):
+//!
+//! 1. **AllGather** the parameter shards through CXL-CCL → full flat params,
+//! 2. each rank runs fwd/bwd (the AOT `model_step` artifact via PJRT) on its
+//!    own micro-batch,
+//! 3. **ReduceScatter** the flat gradients through CXL-CCL → each rank owns
+//!    the reduced gradient slice for its shard,
+//! 4. each rank applies Adam to its shard (the AOT `adam_update` artifact).
+//!
+//! Ranks are simulated as sequential compute + real pool communication on
+//! this host; the step also reports the *virtual-time* communication cost
+//! on the CXL fabric vs the InfiniBand baseline, which is where the paper's
+//! 1.11× end-to-end claim comes from.
+
+use crate::baseline::{collective_time, IbParams};
+use crate::collectives::builder::plan_collective;
+use crate::collectives::{CclConfig, CclVariant, Primitive};
+use crate::exec::Communicator;
+use crate::pool::PoolLayout;
+use crate::runtime::{AdamUpdate, ModelStep, PjrtRuntime};
+use crate::sim::SimFabric;
+use crate::topology::ClusterSpec;
+use crate::train::data::Corpus;
+use crate::util::SplitMix64;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model preset name (must exist in the artifact manifest).
+    pub preset: String,
+    pub steps: usize,
+    /// CXL-CCL variant + slicing factor for both collectives.
+    pub variant: CclVariant,
+    pub chunks: usize,
+    pub seed: u64,
+    /// CXL devices in the pool (paper testbed: 6).
+    pub ndevices: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            preset: "tiny".into(),
+            steps: 20,
+            variant: CclVariant::All,
+            chunks: 8,
+            seed: 0,
+            ndevices: 6,
+        }
+    }
+}
+
+/// Per-step observability record.
+#[derive(Debug, Clone, Copy)]
+pub struct StepReport {
+    pub step: usize,
+    /// Mean loss over ranks.
+    pub loss: f32,
+    /// Wall-clock of the two real collectives (pool memcpy + doorbells).
+    pub comm_secs: f64,
+    /// Wall-clock of fwd/bwd + optimizer across ranks (PJRT, sequential).
+    pub compute_secs: f64,
+    /// Virtual-time cost of this step's collectives on the CXL fabric.
+    pub sim_cxl_secs: f64,
+    /// Same volumes on the InfiniBand baseline.
+    pub sim_ib_secs: f64,
+}
+
+/// The FSDP training driver.
+pub struct FsdpTrainer {
+    step_exe: ModelStep,
+    adam: AdamUpdate,
+    comm: Communicator,
+    spec: ClusterSpec,
+    cfg: TrainConfig,
+    nranks: usize,
+    n_params: usize,
+    padded: usize,
+    shard_len: usize,
+    shards: Vec<Vec<f32>>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    corpus: Corpus,
+    rngs: Vec<SplitMix64>,
+    step_count: usize,
+}
+
+impl FsdpTrainer {
+    /// Stand up the trainer from the artifact manifest.
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let rt = PjrtRuntime::cpu()?;
+        let nranks = rt.manifest.nranks()?;
+        let step_exe = rt.model_step(&cfg.preset)?;
+        let adam = rt.adam_update(&cfg.preset)?;
+        let n_params = step_exe.n_params;
+        let shard_len = adam.shard_len;
+        let padded = shard_len * nranks;
+
+        // Initial parameters come from the AOT pipeline (jax init) so the
+        // rust side trains the same model python validated.
+        let params_path = rt
+            .manifest
+            .artifact_path(&format!("params_bin_{}", cfg.preset))?;
+        let raw = std::fs::read(&params_path)
+            .with_context(|| format!("reading initial params {params_path:?}"))?;
+        anyhow::ensure!(
+            raw.len() == n_params * 4,
+            "params file has {} bytes, expected {}",
+            raw.len(),
+            n_params * 4
+        );
+        let mut flat = vec![0.0f32; padded];
+        for (i, c) in raw.chunks_exact(4).enumerate() {
+            flat[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+
+        // Pool sized so every placement fits: the ReduceScatter of the full
+        // padded gradient lays nranks segment-blocks per rank device range
+        // (worst case ~padded×4 bytes of reservation on one device).
+        let per_dev = (2 * padded * 4 + (4 << 20)).next_power_of_two();
+        let spec = ClusterSpec::new(nranks, cfg.ndevices, per_dev);
+        let comm = Communicator::shm(&spec)?;
+
+        let shards: Vec<Vec<f32>> = (0..nranks)
+            .map(|r| flat[r * shard_len..(r + 1) * shard_len].to_vec())
+            .collect();
+        let zero = vec![0.0f32; shard_len];
+        let vocab = step_exe.vocab;
+        let corpus = Corpus::synthetic(1 << 20, vocab, cfg.seed ^ 0xC0DE);
+        let mut seed_rng = SplitMix64::new(cfg.seed);
+        let rngs = (0..nranks).map(|_| seed_rng.split()).collect();
+
+        Ok(Self {
+            step_exe,
+            adam,
+            comm,
+            spec,
+            cfg,
+            nranks,
+            n_params,
+            padded,
+            shard_len,
+            shards,
+            m: vec![zero.clone(); nranks],
+            v: vec![zero; nranks],
+            corpus,
+            rngs,
+            step_count: 0,
+        })
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Virtual-time communication cost of one step's collectives (CXL
+    /// fabric vs InfiniBand), for the §5.5 comparison.
+    pub fn sim_step_comm(&self) -> Result<(f64, f64)> {
+        let layout = PoolLayout::from_spec(&self.spec)?;
+        let fab = SimFabric::new(layout);
+        let ccl = self.cfg.variant.config(self.cfg.chunks);
+        let ag = plan_collective(
+            Primitive::AllGather,
+            &self.spec,
+            &layout,
+            &ccl,
+            self.shard_len,
+        )?;
+        let rs = plan_collective(
+            Primitive::ReduceScatter,
+            &self.spec,
+            &layout,
+            &ccl,
+            self.padded,
+        )?;
+        let cxl = fab.simulate(&ag)?.total_time + fab.simulate(&rs)?.total_time;
+        let ib = IbParams::default();
+        let ib_t = collective_time(Primitive::AllGather, self.shard_len * 4, self.nranks, &ib)
+            + collective_time(Primitive::ReduceScatter, self.padded * 4, self.nranks, &ib);
+        Ok((cxl, ib_t))
+    }
+
+    /// Run one FSDP step.
+    pub fn step(&mut self) -> Result<StepReport> {
+        self.step_count += 1;
+        let ccl: CclConfig = self.cfg.variant.config(self.cfg.chunks);
+
+        // (1) AllGather parameter shards -> full (padded) flat params.
+        let t0 = Instant::now();
+        let gathered = self.comm.all_gather_f32(&self.shards, &ccl)?;
+        let mut comm_secs = t0.elapsed().as_secs_f64();
+
+        // (2) fwd/bwd per rank on its own micro-batch.
+        let t1 = Instant::now();
+        let mut losses = Vec::with_capacity(self.nranks);
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.nranks);
+        let inv = 1.0f32 / self.nranks as f32;
+        for r in 0..self.nranks {
+            let full = &gathered[r][..self.n_params];
+            let (xb, yb) =
+                self.corpus
+                    .sample_batch(&mut self.rngs[r], self.step_exe.batch, self.step_exe.seq_len);
+            let (loss, mut g) = self.step_exe.run(full, &xb, &yb)?;
+            losses.push(loss);
+            // Pre-scale for the mean; pad to the sharded length.
+            for gi in g.iter_mut() {
+                *gi *= inv;
+            }
+            g.resize(self.padded, 0.0);
+            grads.push(g);
+        }
+        let mut compute_secs = t1.elapsed().as_secs_f64();
+
+        // (3) ReduceScatter gradients -> per-rank reduced shard.
+        let t2 = Instant::now();
+        let grad_shards = self.comm.reduce_scatter_f32(&grads, &ccl)?;
+        comm_secs += t2.elapsed().as_secs_f64();
+
+        // (4) Adam on the local shard (PJRT artifact).
+        let t3 = Instant::now();
+        for r in 0..self.nranks {
+            let (p, m, v) = self.adam.run(
+                &self.shards[r],
+                &grad_shards[r],
+                &self.m[r],
+                &self.v[r],
+                self.step_count as f32,
+            )?;
+            self.shards[r] = p;
+            self.m[r] = m;
+            self.v[r] = v;
+        }
+        compute_secs += t3.elapsed().as_secs_f64();
+
+        let (sim_cxl, sim_ib) = self.sim_step_comm()?;
+        Ok(StepReport {
+            step: self.step_count,
+            loss: losses.iter().sum::<f32>() / self.nranks as f32,
+            comm_secs,
+            compute_secs,
+            sim_cxl_secs: sim_cxl,
+            sim_ib_secs: sim_ib,
+        })
+    }
+
+    /// Train for the configured number of steps, returning the loss curve.
+    pub fn train(&mut self, mut on_step: impl FnMut(&StepReport)) -> Result<Vec<StepReport>> {
+        let mut out = Vec::with_capacity(self.cfg.steps);
+        for _ in 0..self.cfg.steps {
+            let rep = self.step()?;
+            on_step(&rep);
+            out.push(rep);
+        }
+        Ok(out)
+    }
+
+    /// Bytes each rank moves through the fabric per step (AG + RS).
+    pub fn comm_bytes_per_step(&self) -> usize {
+        // AllGather: write shard, read (nr-1) shards; RS: symmetric on the
+        // padded gradient.
+        self.padded * 4 * 2
+    }
+}

@@ -1,0 +1,10 @@
+//! The LLM-training case study (paper §5.5): FSDP-style training driven by
+//! the rust coordinator, with **all** inter-rank communication going through
+//! CXL-CCL (AllGather for parameters, ReduceScatter for gradients) and all
+//! compute going through the AOT artifacts via PJRT.
+
+pub mod data;
+pub mod fsdp;
+
+pub use data::Corpus;
+pub use fsdp::{FsdpTrainer, StepReport, TrainConfig};

@@ -1,0 +1,64 @@
+//! Minimal `log` facade backend (env_logger is unavailable offline).
+//!
+//! Controlled by `CCL_LOG` (error|warn|info|debug|trace), default `info`.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
+use std::time::Instant;
+
+static INIT: Once = Once::new();
+static mut START: Option<Instant> = None;
+
+struct CclLogger;
+
+impl log::Log for CclLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        // SAFETY: START is written once inside `Once` before any logging.
+        let elapsed = unsafe { START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0) };
+        let lvl = match record.level() {
+            Level::Error => "E",
+            Level::Warn => "W",
+            Level::Info => "I",
+            Level::Debug => "D",
+            Level::Trace => "T",
+        };
+        eprintln!("[{elapsed:9.4} {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: CclLogger = CclLogger;
+
+/// Install the logger (idempotent). Level comes from `CCL_LOG`.
+pub fn init() {
+    INIT.call_once(|| {
+        unsafe { START = Some(Instant::now()) };
+        let level = match std::env::var("CCL_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke test");
+    }
+}

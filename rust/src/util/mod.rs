@@ -1,0 +1,12 @@
+//! Small self-contained utilities: PRNG, statistics, size formatting, logging.
+//!
+//! The build environment is fully offline, so these replace the usual crates
+//! (`rand`, `criterion`'s stats, `env_logger`).
+
+pub mod logger;
+pub mod rng;
+pub mod size;
+pub mod stats;
+
+pub use rng::SplitMix64;
+pub use stats::Stats;

@@ -1,0 +1,129 @@
+//! SplitMix64 — tiny deterministic PRNG used by tests, property harnesses
+//! and workload generators (the `rand` crate is unavailable offline).
+//!
+//! Reference: Steele, Lea, Flood — "Fast splittable pseudorandom number
+//! generators", OOPSLA 2014. Passes BigCrush when used as a 64-bit stream.
+
+/// Deterministic 64-bit PRNG with splittable seeding.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a seed. Equal seeds give equal streams.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be non-zero.
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "bound must be positive");
+        // Lemire's nearly-divisionless method is overkill here; modulo bias
+        // is < 2^-32 for the bounds we use (all << 2^32).
+        self.next_u64() % bound
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Standard-normal-ish f32 via the sum of 4 uniforms (Irwin–Hall),
+    /// good enough for synthetic model weights / workloads.
+    pub fn next_gaussian(&mut self) -> f32 {
+        let s: f32 = (0..4).map(|_| self.next_f32()).sum();
+        (s - 2.0) * (12.0f32 / 4.0).sqrt()
+    }
+
+    /// Derive an independent child generator (splittable seeding).
+    pub fn split(&mut self) -> SplitMix64 {
+        SplitMix64::new(self.next_u64() ^ 0xA5A5_A5A5_DEAD_BEEF)
+    }
+
+    /// Fill a slice with uniform f32 in [-1, 1).
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_f32() * 2.0 - 1.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_equal_seeds() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn next_below_respects_bound() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            assert!(r.next_below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn range_inclusive_hits_both_ends() {
+        let mut r = SplitMix64::new(9);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..2000 {
+            match r.range(3, 5) {
+                3 => lo_seen = true,
+                5 => hi_seen = true,
+                4 => {}
+                _ => panic!("out of range"),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = SplitMix64::new(11);
+        for _ in 0..1000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = SplitMix64::new(5);
+        let mut c1 = parent.split();
+        let mut c2 = parent.split();
+        let equal = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(equal, 0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Byte-size parsing and formatting ("256MB", "4GB", "1.5 GiB/s").
+
+/// Parse a human size string like `64K`, `256MB`, `4GB`, `1073741824`.
+/// K/M/G/T are binary multiples (matching nccl-tests' `-b/-e` flags).
+pub fn parse_size(s: &str) -> Result<usize, String> {
+    let t = s.trim().to_ascii_uppercase();
+    let t = t
+        .strip_suffix("IB")
+        .map(|p| p.to_string())
+        .unwrap_or_else(|| t.strip_suffix('B').unwrap_or(&t).to_string());
+    let (num, mult) = match t.chars().last() {
+        Some('K') => (&t[..t.len() - 1], 1usize << 10),
+        Some('M') => (&t[..t.len() - 1], 1usize << 20),
+        Some('G') => (&t[..t.len() - 1], 1usize << 30),
+        Some('T') => (&t[..t.len() - 1], 1usize << 40),
+        _ => (t.as_str(), 1usize),
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|e| format!("bad size {s:?}: {e}"))?;
+    if v < 0.0 {
+        return Err(format!("negative size {s:?}"));
+    }
+    Ok((v * mult as f64).round() as usize)
+}
+
+/// Format bytes with a binary suffix: 1536 → "1.5KiB".
+pub fn fmt_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if (v - v.round()).abs() < 1e-9 {
+        format!("{}{}", v.round() as u64, UNITS[u])
+    } else {
+        format!("{:.1}{}", v, UNITS[u])
+    }
+}
+
+/// Format a bandwidth in bytes/second as GB/s (decimal, matching the paper).
+pub fn fmt_gbps(bytes_per_sec: f64) -> String {
+    format!("{:.2} GB/s", bytes_per_sec / 1e9)
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.0}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_and_suffixed() {
+        assert_eq!(parse_size("1024").unwrap(), 1024);
+        assert_eq!(parse_size("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_size("256MB").unwrap(), 256 << 20);
+        assert_eq!(parse_size("4GB").unwrap(), 4usize << 30);
+        assert_eq!(parse_size("1GiB").unwrap(), 1 << 30);
+        assert_eq!(parse_size("1.5M").unwrap(), (1.5 * (1 << 20) as f64) as usize);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_size("abc").is_err());
+        assert!(parse_size("-4K").is_err());
+    }
+
+    #[test]
+    fn fmt_round_trip_shapes() {
+        assert_eq!(fmt_bytes(1024), "1KiB");
+        assert_eq!(fmt_bytes(1536), "1.5KiB");
+        assert_eq!(fmt_bytes(1 << 30), "1GiB");
+        assert_eq!(fmt_bytes(0), "0B");
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(658e-9), "658ns");
+        assert!(fmt_time(5e-5).ends_with("us"));
+        assert!(fmt_time(0.01).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,112 @@
+//! Summary statistics for bench measurements (criterion is unavailable
+//! offline, so the bench harness carries its own).
+
+/// Summary of a set of samples (times in seconds, bandwidths, ...).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    /// Compute summary statistics. Panics on an empty slice.
+    pub fn from(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty(), "Stats::from requires samples");
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(2).saturating_sub(1) as f64;
+        Stats {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// Relative stddev (coefficient of variation); 0 when mean is 0.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev / self.mean
+        }
+    }
+}
+
+/// Nearest-rank percentile on a pre-sorted slice, `q` in [0, 1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Geometric mean of positive values; used for the paper's "average
+/// speedup over message sizes" summaries.
+pub fn geomean(values: &[f64]) -> f64 {
+    assert!(!values.is_empty());
+    let log_sum: f64 = values
+        .iter()
+        .map(|v| {
+            assert!(*v > 0.0, "geomean requires positive values");
+            v.ln()
+        })
+        .sum();
+    (log_sum / values.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant() {
+        let s = Stats::from(&[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Stats::from(&samples);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        // Nearest-rank on 100 samples lands on 50 or 51.
+        assert!((s.p50 - 50.5).abs() <= 0.5, "p50 = {}", s.p50);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stats_empty_panics() {
+        let _ = Stats::from(&[]);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let s = Stats::from(&[5.0, 1.0, 3.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Failure injection: misuse and fault paths must surface as errors, not
+//! hangs, corruption, or silent truncation.
+
+use cxl_ccl::collectives::builder::plan_collective;
+use cxl_ccl::collectives::{CclConfig, CclVariant, Primitive};
+use cxl_ccl::doorbell::WaitPolicy;
+use cxl_ccl::exec::Communicator;
+use cxl_ccl::pool::PoolLayout;
+use cxl_ccl::topology::ClusterSpec;
+use std::time::Duration;
+
+#[test]
+fn pool_too_small_is_a_plan_error() {
+    // 3 ranks x 24 MiB messages cannot fit 4 MiB devices.
+    let spec = ClusterSpec::new(3, 6, 4 << 20);
+    let layout = PoolLayout::from_spec(&spec).unwrap();
+    let err = plan_collective(
+        Primitive::AllGather,
+        &spec,
+        &layout,
+        &CclConfig::default_all(),
+        3 * (2 << 20),
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("exceeds") || msg.contains("capacity"), "{msg}");
+}
+
+#[test]
+fn missing_producer_times_out_cleanly() {
+    // Hand-craft a plan whose reader waits on a doorbell nobody rings,
+    // with a tight timeout: the executor must return an error (and release
+    // all threads), not deadlock.
+    use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
+    let spec = ClusterSpec::new(2, 6, 4 << 20);
+    let comm = Communicator::shm(&spec)
+        .unwrap()
+        .with_wait_policy(WaitPolicy {
+            spin_iters: 16,
+            timeout: Duration::from_millis(100),
+        });
+    // Circular dependency: each rank's ring is gated on the other's —
+    // the classic producer-missing deadlock, expressed so the static plan
+    // validator (every wait has a matching set) still passes.
+    let mut r0 = RankPlan::new(0);
+    r0.write_ops.push(Op::WaitDoorbell { db: 12 });
+    r0.write_ops.push(Op::SetDoorbell { db: 11 });
+    let mut r1 = RankPlan::new(1);
+    r1.write_ops.push(Op::WaitDoorbell { db: 11 });
+    r1.write_ops.push(Op::SetDoorbell { db: 12 });
+    let plan = CollectivePlan {
+        primitive: Primitive::Broadcast,
+        variant: CclVariant::All,
+        nranks: 2,
+        n_elems: 4,
+        send_elems: 4,
+        recv_elems: 4,
+        ranks: vec![r0, r1],
+    };
+    let sends = vec![vec![0.0f32; 4]; 2];
+    let mut recvs = vec![vec![0.0f32; 4]; 2];
+    let t0 = std::time::Instant::now();
+    let err = comm.run_plan(&plan, &sends, &mut recvs);
+    assert!(err.is_err(), "expected timeout error");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "must fail fast, took {:?}",
+        t0.elapsed()
+    );
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("timed out"), "{msg}");
+}
+
+#[test]
+fn send_buffer_overrun_is_caught() {
+    use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
+    let spec = ClusterSpec::new(2, 6, 4 << 20);
+    let comm = Communicator::shm(&spec).unwrap();
+    let mut r0 = RankPlan::new(0);
+    r0.write_ops.push(Op::Write {
+        pool_off: 2 << 20,
+        src_off: 0,
+        len: 1 << 20, // larger than the 16-element send buffer
+    });
+    let plan = CollectivePlan {
+        primitive: Primitive::Broadcast,
+        variant: CclVariant::All,
+        nranks: 2,
+        n_elems: 4,
+        send_elems: 4,
+        recv_elems: 4,
+        ranks: vec![r0, RankPlan::new(1)],
+    };
+    let sends = vec![vec![0.0f32; 4]; 2];
+    let mut recvs = vec![vec![0.0f32; 4]; 2];
+    let msg = format!("{:#}", comm.run_plan(&plan, &sends, &mut recvs).unwrap_err());
+    assert!(msg.contains("overrun"), "{msg}");
+}
+
+#[test]
+fn invalid_specs_rejected_at_communicator_creation() {
+    assert!(Communicator::shm(&ClusterSpec::new(1, 6, 4 << 20)).is_err());
+    assert!(Communicator::shm(&ClusterSpec::new(3, 0, 4 << 20)).is_err());
+    let mut bad_db = ClusterSpec::new(3, 6, 4 << 20);
+    bad_db.db_region_size = 63;
+    assert!(Communicator::shm(&bad_db).is_err());
+}
+
+#[test]
+fn doorbell_exhaustion_suggests_remediation() {
+    let mut spec = ClusterSpec::new(8, 6, 4 << 20);
+    spec.db_region_size = 64 * 16;
+    let layout = PoolLayout::from_spec(&spec).unwrap();
+    let msg = format!(
+        "{:#}",
+        plan_collective(
+            Primitive::AllToAll,
+            &spec,
+            &layout,
+            &CclVariant::All.config(64),
+            8 * 1024,
+        )
+        .unwrap_err()
+    );
+    assert!(msg.contains("doorbell region too small"), "{msg}");
+    assert!(msg.contains("db_region_size"), "error should tell the user the fix: {msg}");
+}
+
+#[test]
+fn reduce_scatter_indivisible_size_errors() {
+    let spec = ClusterSpec::new(3, 6, 4 << 20);
+    let comm = Communicator::shm(&spec).unwrap();
+    let sends = vec![vec![0.0f32; 100]; 3];
+    let mut recvs = vec![vec![0.0f32; 34]; 3];
+    let err = comm
+        .execute(Primitive::ReduceScatter, &CclConfig::default_all(), 100, &sends, &mut recvs)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("divisible"));
+}
+
+#[test]
+fn dax_path_failures_are_reported() {
+    let spec = ClusterSpec::new(3, 6, 4 << 20);
+    let err = match Communicator::shm_dax(&spec, "/nonexistent-dir/pool") {
+        Err(e) => e,
+        Ok(_) => panic!("expected dax open failure"),
+    };
+    assert!(format!("{err:#}").contains("open"));
+}
+
+#[test]
+fn back_to_back_error_then_success_leaves_pool_usable() {
+    // After a failed collective (bad size), the same communicator must
+    // still run a correct one (doorbell reset discipline).
+    let spec = ClusterSpec::new(3, 6, 4 << 20);
+    let comm = Communicator::shm(&spec).unwrap();
+    let sends_bad = vec![vec![0.0f32; 100]; 3];
+    let mut recvs_bad = vec![vec![0.0f32; 34]; 3];
+    let _ = comm.execute(
+        Primitive::ReduceScatter,
+        &CclConfig::default_all(),
+        100,
+        &sends_bad,
+        &mut recvs_bad,
+    );
+    let mut bufs: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32; 300]).collect();
+    comm.all_reduce_f32(&mut bufs, &CclConfig::default_all()).unwrap();
+    assert!(bufs.iter().all(|b| b.iter().all(|v| *v == 3.0)));
+}

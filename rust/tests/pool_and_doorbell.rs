@@ -1,0 +1,104 @@
+//! Integration tests for the pool substrate + doorbell mechanism under
+//! realistic multi-threaded traffic.
+
+use cxl_ccl::doorbell::{DoorbellSet, WaitPolicy, DOORBELL_SLOT};
+use cxl_ccl::pool::{PoolLayout, ShmPool};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn many_producers_many_consumers_stress() {
+    // 4 producers each publish 32 chunks; 4 consumers verify contents in
+    // doorbell order. Exercises the exact Listing-3 handshake at scale.
+    let layout = PoolLayout::new(4, 1 << 20, 64 * 256).unwrap();
+    let pool = Arc::new(ShmPool::anon(layout.pool_size()).unwrap());
+    DoorbellSet::new(&pool, layout).reset_all().unwrap();
+
+    const CHUNK: usize = 1024;
+    const CHUNKS: usize = 32;
+    std::thread::scope(|s| {
+        for p in 0..4usize {
+            let pool = Arc::clone(&pool);
+            s.spawn(move || {
+                let dbs = DoorbellSet::new(&pool, layout);
+                for c in 0..CHUNKS {
+                    let off = layout
+                        .block_location(p, c, CHUNK)
+                        .unwrap();
+                    let payload = vec![(p * CHUNKS + c) as u8; CHUNK];
+                    pool.write_bytes(off, &payload).unwrap();
+                    dbs.ring(p * CHUNKS + c).unwrap();
+                }
+            });
+        }
+        for p in 0..4usize {
+            let pool = Arc::clone(&pool);
+            s.spawn(move || {
+                let dbs = DoorbellSet::new(&pool, layout);
+                let policy = WaitPolicy::default();
+                // Consumer p reads producer (p+1)%4's chunks (rotation).
+                let src = (p + 1) % 4;
+                for c in 0..CHUNKS {
+                    dbs.wait(src * CHUNKS + c, &policy).unwrap();
+                    let off = layout.block_location(src, c, CHUNK).unwrap();
+                    let mut buf = vec![0u8; CHUNK];
+                    pool.read_bytes(off, &mut buf).unwrap();
+                    assert!(buf.iter().all(|b| *b == (src * CHUNKS + c) as u8));
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn doorbell_region_is_never_clobbered_by_data() {
+    let layout = PoolLayout::new(2, 1 << 20, 4096).unwrap();
+    let pool = ShmPool::anon(layout.pool_size()).unwrap();
+    let dbs = DoorbellSet::new(&pool, layout);
+    dbs.reset_all().unwrap();
+    dbs.ring(5).unwrap();
+    // Fill every legal data block on both devices.
+    let cap = layout.data_capacity_per_device();
+    for d in 0..2 {
+        let off = layout.block_location(d, 0, cap).unwrap();
+        pool.write_bytes(off, &vec![0xAB; cap]).unwrap();
+    }
+    // Doorbell 5 still READY, all others still STALE.
+    assert!(dbs.is_ready(5).unwrap());
+    assert!(!dbs.is_ready(4).unwrap());
+    assert!(!dbs.is_ready(6).unwrap());
+}
+
+#[test]
+fn wait_policy_timeout_is_respected_under_load() {
+    let layout = PoolLayout::new(1, 1 << 20, 4096).unwrap();
+    let pool = ShmPool::anon(layout.pool_size()).unwrap();
+    let dbs = DoorbellSet::new(&pool, layout);
+    dbs.reset_all().unwrap();
+    let t0 = std::time::Instant::now();
+    let policy = WaitPolicy {
+        spin_iters: 64,
+        timeout: Duration::from_millis(100),
+    };
+    assert!(dbs.wait(0, &policy).is_err());
+    let dt = t0.elapsed();
+    assert!(dt >= Duration::from_millis(100));
+    assert!(dt < Duration::from_secs(5), "timeout wildly overshot: {dt:?}");
+}
+
+#[test]
+fn slot_constant_is_cache_line() {
+    assert_eq!(DOORBELL_SLOT, 64);
+}
+
+#[test]
+fn pool_survives_full_capacity_write() {
+    let layout = PoolLayout::new(3, 1 << 20, 4096).unwrap();
+    let pool = ShmPool::anon(layout.pool_size()).unwrap();
+    let total = layout.pool_size();
+    let big = vec![0x5Au8; total - 4096];
+    pool.write_bytes(4096, &big).unwrap();
+    let mut tail = vec![0u8; 16];
+    pool.read_bytes(total - 16, &mut tail).unwrap();
+    assert!(tail.iter().all(|b| *b == 0x5A));
+}

@@ -1,0 +1,170 @@
+//! Property-based tests (hand-rolled harness on SplitMix64 — proptest is
+//! unavailable offline): randomized communicator shapes, message sizes,
+//! variants and slicing factors, checking the paper's structural invariants
+//! and executor correctness on every sample.
+
+use cxl_ccl::collectives::builder::plan_collective;
+use cxl_ccl::collectives::ops::Op;
+use cxl_ccl::collectives::{oracle, CclVariant, Primitive};
+use cxl_ccl::exec::Communicator;
+use cxl_ccl::pool::PoolLayout;
+use cxl_ccl::sim::SimFabric;
+use cxl_ccl::topology::ClusterSpec;
+use cxl_ccl::util::SplitMix64;
+use std::collections::HashSet;
+
+const CASES: usize = 60;
+
+fn random_case(rng: &mut SplitMix64) -> (ClusterSpec, Primitive, CclVariant, usize, usize) {
+    let nranks = rng.range(2, 8);
+    let ndevices = rng.range(1, 8);
+    let spec = ClusterSpec::new(nranks, ndevices, 16 << 20);
+    let p = Primitive::ALL[rng.range(0, 7)];
+    let v = CclVariant::ALL[rng.range(0, 2)];
+    let chunks = [1usize, 2, 4, 8, 16][rng.range(0, 4)];
+    // Element count: random, forced to nranks-divisibility (covers ragged
+    // per-device splits while satisfying RS/A2A preconditions).
+    let n = rng.range(1, 20_000) * nranks;
+    (spec, p, v, chunks, n)
+}
+
+/// Invariant 1: pool writes from different ranks never overlap, every
+/// doorbell waited on is rung, and plan validation passes.
+#[test]
+fn prop_plans_are_structurally_valid() {
+    let mut rng = SplitMix64::new(0x9150_1234);
+    for case in 0..CASES {
+        let (spec, p, v, chunks, n) = random_case(&mut rng);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let plan = match plan_collective(p, &spec, &layout, &v.config(chunks), n) {
+            Ok(pl) => pl,
+            Err(e) => panic!("case {case} {p} {v:?} n={n}: plan failed: {e}"),
+        };
+        plan.validate(layout.pool_size())
+            .unwrap_or_else(|e| panic!("case {case} {p} {v:?}: {e}"));
+    }
+}
+
+/// Invariant 2 (§4.3, type-2 placement): under All/Aggregate with
+/// ndevices >= nranks, no two ranks write the same device.
+#[test]
+fn prop_type2_write_devices_disjoint() {
+    let mut rng = SplitMix64::new(99);
+    let mut tested = 0;
+    while tested < 30 {
+        let (mut spec, _, _, chunks, n) = random_case(&mut rng);
+        if spec.ndevices < spec.nranks {
+            continue;
+        }
+        tested += 1;
+        spec.device_capacity = 32 << 20;
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        for p in [Primitive::AllToAll, Primitive::AllGather, Primitive::AllReduce, Primitive::ReduceScatter] {
+            let plan =
+                plan_collective(p, &spec, &layout, &CclVariant::All.config(chunks), n).unwrap();
+            let mut dev_writer: Vec<Option<usize>> = vec![None; spec.ndevices];
+            for rp in &plan.ranks {
+                for op in &rp.write_ops {
+                    if let Op::Write { pool_off, .. } = op {
+                        let d = layout.stacking.device_of(*pool_off);
+                        match dev_writer[d] {
+                            None => dev_writer[d] = Some(rp.rank),
+                            Some(w) => assert_eq!(
+                                w, rp.rank,
+                                "{p}: device {d} written by ranks {w} and {}",
+                                rp.rank
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Invariant 3: executor output matches the oracle for random cases.
+#[test]
+fn prop_executor_matches_oracle() {
+    let mut rng = SplitMix64::new(0xEC);
+    for case in 0..24 {
+        let (spec, p, v, chunks, mut n) = random_case(&mut rng);
+        n = n.min(4096 * spec.nranks); // keep executor cases quick
+        let comm = Communicator::shm(&spec).unwrap();
+        let sends: Vec<Vec<f32>> = (0..spec.nranks)
+            .map(|_| {
+                let mut buf = vec![0.0f32; p.send_elems(n, spec.nranks)];
+                rng.fill_f32(&mut buf);
+                buf
+            })
+            .collect();
+        let mut recvs: Vec<Vec<f32>> =
+            vec![vec![0.0f32; p.recv_elems(n, spec.nranks)]; spec.nranks];
+        comm.execute(p, &v.config(chunks), n, &sends, &mut recvs)
+            .unwrap_or_else(|e| panic!("case {case} {p} {v:?} n={n}: {e:#}"));
+        let want = oracle::expected(p, &sends, n, 0);
+        for r in 0..spec.nranks {
+            for (i, (g, e)) in recvs[r].iter().zip(&want[r]).enumerate() {
+                assert!(
+                    (g - e).abs() <= 1e-4 * e.abs().max(1.0),
+                    "case {case} {p} {v:?} rank {r} elem {i}: {g} vs {e}"
+                );
+            }
+        }
+    }
+}
+
+/// Invariant 4: the simulator conserves bytes and never reports a device
+/// moving more than its port could.
+#[test]
+fn prop_sim_conserves_bytes_and_capacity() {
+    let mut rng = SplitMix64::new(0x51);
+    for case in 0..CASES {
+        let (spec, p, v, chunks, n) = random_case(&mut rng);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let plan = plan_collective(p, &spec, &layout, &v.config(chunks), n).unwrap();
+        let fab = SimFabric::new(layout);
+        let rep = fab.simulate(&plan).unwrap_or_else(|e| panic!("case {case} {p}: {e}"));
+        assert_eq!(
+            rep.device_bytes.iter().sum::<usize>(),
+            plan.total_pool_bytes(),
+            "case {case} {p} {v:?}: bytes not conserved"
+        );
+        // Each device port is full duplex: <= 2 x device_bw x total_time.
+        for (d, bytes) in rep.device_bytes.iter().enumerate() {
+            let cap = 2.0 * fab.params.device_bw * rep.total_time * 1.02;
+            assert!(
+                (*bytes as f64) <= cap,
+                "case {case} {p}: device {d} moved {bytes} bytes in {}s (cap {cap})",
+                rep.total_time
+            );
+        }
+        assert!(rep.total_time.is_finite() && rep.total_time > 0.0);
+    }
+}
+
+/// Invariant 5: variant ordering — All never loses badly to Naive on
+/// bandwidth-bound (multi-MiB) messages.
+#[test]
+fn prop_all_variant_never_much_worse_than_naive() {
+    let mut rng = SplitMix64::new(0xAB);
+    for _ in 0..16 {
+        let nranks = rng.range(2, 6);
+        let spec = ClusterSpec::new(nranks, 6, 256 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let p = Primitive::ALL[rng.range(0, 7)];
+        let n = rng.range(1 << 20, 4 << 20) / nranks * nranks;
+        let fab = SimFabric::new(layout);
+        let t_all = fab
+            .simulate(&plan_collective(p, &spec, &layout, &CclVariant::All.config(8), n).unwrap())
+            .unwrap()
+            .total_time;
+        let t_naive = fab
+            .simulate(&plan_collective(p, &spec, &layout, &CclVariant::Naive.config(1), n).unwrap())
+            .unwrap()
+            .total_time;
+        assert!(
+            t_all <= t_naive * 1.10,
+            "{p} nranks={nranks} n={n}: All {t_all} vs Naive {t_naive}"
+        );
+    }
+}

@@ -1,0 +1,179 @@
+//! Integration tests for the virtual-time fabric: the §3/§5 invariants the
+//! paper's evaluation rests on, checked end-to-end through plan + simulate.
+
+use cxl_ccl::baseline::{collective_time, IbParams};
+use cxl_ccl::collectives::builder::plan_collective;
+use cxl_ccl::collectives::{CclConfig, CclVariant, Primitive};
+use cxl_ccl::pool::PoolLayout;
+use cxl_ccl::sim::constants as k;
+use cxl_ccl::sim::{SimFabric, SimParams};
+use cxl_ccl::topology::ClusterSpec;
+
+fn fabric(nranks: usize, dev_cap: usize) -> (ClusterSpec, PoolLayout, SimFabric) {
+    let spec = ClusterSpec::new(nranks, 6, dev_cap);
+    let layout = PoolLayout::from_spec(&spec).unwrap();
+    (spec, layout, SimFabric::new(layout))
+}
+
+fn sim(p: Primitive, v: CclVariant, nranks: usize, msg_bytes: usize) -> f64 {
+    let (spec, layout, fab) = fabric(nranks, (3 * msg_bytes).next_power_of_two().max(32 << 20));
+    let n = (msg_bytes / 4 / nranks).max(1) * nranks;
+    let plan = plan_collective(p, &spec, &layout, &v.config(8), n).unwrap();
+    fab.simulate(&plan).unwrap().total_time
+}
+
+#[test]
+fn observation1_bandwidth_saturates_with_size() {
+    // Fig 3a: bandwidth grows with message size and plateaus ~20 GB/s.
+    let bw = |bytes: usize| {
+        let t = sim(Primitive::Broadcast, CclVariant::Naive, 2, bytes);
+        // naive 2-rank broadcast moves bytes twice (write + read).
+        2.0 * bytes as f64 / t
+    };
+    let small = bw(64 << 10);
+    let large = bw(256 << 20);
+    assert!(small < 0.8 * large, "small {small} should be far below plateau {large}");
+    assert!(
+        large > 0.85 * k::CXL_DEVICE_BW && large < 1.05 * k::CXL_DEVICE_BW,
+        "plateau {large}"
+    );
+}
+
+#[test]
+fn fig9_large_message_ordering_holds() {
+    // For every primitive at 256 MiB: All <= Aggregate <= Naive.
+    for p in Primitive::ALL {
+        let t_all = sim(p, CclVariant::All, 3, 256 << 20);
+        let t_agg = sim(p, CclVariant::Aggregate, 3, 256 << 20);
+        let t_naive = sim(p, CclVariant::Naive, 3, 256 << 20);
+        assert!(
+            t_all <= t_agg * 1.02,
+            "{p}: All {t_all} should not lose to Aggregate {t_agg}"
+        );
+        assert!(
+            t_agg <= t_naive * 1.02,
+            "{p}: Aggregate {t_agg} should not lose to Naive {t_naive}"
+        );
+    }
+}
+
+#[test]
+fn fig9_crossover_small_messages_lose_to_ib() {
+    // §5.2: RS / Scatter / AllToAll lose to IB at small sizes and win at
+    // large sizes — the crossover the paper attributes to cudaMemcpy +
+    // sync software overhead.
+    let ib = IbParams::default();
+    for p in [Primitive::ReduceScatter, Primitive::AllToAll, Primitive::Scatter] {
+        let small_cxl = sim(p, CclVariant::All, 3, 1 << 20);
+        let small_ib = collective_time(p, ((1 << 20) / 12) * 12, 3, &ib);
+        assert!(
+            small_cxl > small_ib,
+            "{p} at 1MiB: CXL {small_cxl} should lose to IB {small_ib}"
+        );
+        let large_cxl = sim(p, CclVariant::All, 3, 1 << 30);
+        let large_ib = collective_time(p, ((1 << 30) / 12) * 12, 3, &ib);
+        assert!(
+            large_cxl < large_ib,
+            "{p} at 1GiB: CXL {large_cxl} should beat IB {large_ib}"
+        );
+    }
+}
+
+#[test]
+fn fig9_allreduce_near_parity_at_large_sizes() {
+    // §5.2: "CXL-CCL-All achieves an average of only 1.05x relative
+    // performance compared with InfiniBand when the message size goes
+    // beyond 256 MB" — the ring's partial-reduction reuse is the limit.
+    let ib = IbParams::default();
+    let cxl = sim(Primitive::AllReduce, CclVariant::All, 3, 512 << 20);
+    let ibt = collective_time(Primitive::AllReduce, ((512 << 20) / 12) * 12, 3, &ib);
+    let ratio = ibt / cxl;
+    assert!(
+        (0.9..1.25).contains(&ratio),
+        "allreduce large-message ratio {ratio} should be near parity"
+    );
+}
+
+#[test]
+fn fig10_allreduce_scales_worse_than_ib_ring() {
+    let t3 = sim(Primitive::AllReduce, CclVariant::All, 3, 128 << 20);
+    let t12 = sim(Primitive::AllReduce, CclVariant::All, 12, 128 << 20);
+    let growth = t12 / t3;
+    assert!(
+        (7.0..14.0).contains(&growth),
+        "paper: 8.7-12.2x at 12 nodes; got {growth}"
+    );
+    let ib = IbParams::default();
+    let ib3 = collective_time(Primitive::AllReduce, ((128 << 20) / 12) * 12, 3, &ib);
+    let ib12 = collective_time(Primitive::AllReduce, ((128 << 20) / 12) * 12, 12, &ib);
+    assert!(ib12 / ib3 < 2.0, "IB ring must scale well");
+}
+
+#[test]
+fn fig10_broadcast_scales_mildly() {
+    let t3 = sim(Primitive::Broadcast, CclVariant::All, 3, 512 << 20);
+    let t6 = sim(Primitive::Broadcast, CclVariant::All, 6, 512 << 20);
+    let t12 = sim(Primitive::Broadcast, CclVariant::All, 12, 512 << 20);
+    assert!((1.05..1.8).contains(&(t6 / t3)), "6-node growth {}", t6 / t3);
+    // Paper reports ~2.5x at 12 nodes; our fabric charges the reader-pair
+    // contention cascade more heavily (EXPERIMENTS.md notes the deviation).
+    assert!((1.8..5.5).contains(&(t12 / t3)), "12-node growth {}", t12 / t3);
+}
+
+#[test]
+fn fig11_single_chunk_is_worst() {
+    let (spec, layout, fab) = fabric(3, 1 << 30);
+    let n = (256 << 20) / 4 / 3 * 3;
+    let time = |c: usize| {
+        let plan =
+            plan_collective(Primitive::AllGather, &spec, &layout, &CclVariant::All.config(c), n)
+                .unwrap();
+        fab.simulate(&plan).unwrap().total_time
+    };
+    let t1 = time(1);
+    let t4 = time(4);
+    let t8 = time(8);
+    assert!(t4 < t1 && t8 < t1, "chunking must beat single chunk: {t1} {t4} {t8}");
+}
+
+#[test]
+fn custom_params_scale_results() {
+    // Doubling device bandwidth should roughly halve a bandwidth-bound run.
+    let (spec, layout, _) = fabric(3, 1 << 30);
+    let n = (256 << 20) / 4 / 3 * 3;
+    let plan =
+        plan_collective(Primitive::AllGather, &spec, &layout, &CclConfig::default_all(), n)
+            .unwrap();
+    let base = SimFabric::new(layout).simulate(&plan).unwrap().total_time;
+    let fast = SimFabric::new(layout)
+        .with_params(SimParams {
+            device_bw: 2.0 * k::CXL_DEVICE_BW,
+            node_dma_bw: 2.0 * k::NODE_DMA_BW,
+            ..SimParams::default()
+        })
+        .simulate(&plan)
+        .unwrap()
+        .total_time;
+    let ratio = base / fast;
+    assert!((1.7..2.2).contains(&ratio), "bandwidth scaling ratio {ratio}");
+}
+
+#[test]
+fn executor_and_sim_agree_on_plan_structure() {
+    // The same plan object drives both backends; sanity-check that what the
+    // simulator times is exactly what the executor executed (byte counts).
+    let (spec, layout, fab) = fabric(3, 32 << 20);
+    let n = 3 * 4096;
+    let plan =
+        plan_collective(Primitive::AllToAll, &spec, &layout, &CclConfig::default_all(), n)
+            .unwrap();
+    let rep = fab.simulate(&plan).unwrap();
+    assert_eq!(
+        rep.device_bytes.iter().sum::<usize>(),
+        plan.total_pool_bytes()
+    );
+    let comm = cxl_ccl::exec::Communicator::shm(&spec).unwrap();
+    let sends: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32; n]).collect();
+    let mut recvs = vec![vec![0.0f32; n]; 3];
+    comm.run_plan(&plan, &sends, &mut recvs).unwrap();
+}

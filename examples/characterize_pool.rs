@@ -5,14 +5,19 @@
 //! Run: `cargo run --release --example characterize_pool`
 
 use cxl_ccl::bench_util::{banner, pow2_sizes, Table};
+use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
+use cxl_ccl::collectives::{CclVariant, Primitive};
 use cxl_ccl::pool::{PoolLayout, ShmPool};
 use cxl_ccl::sim::constants as k;
 use cxl_ccl::sim::latency::{pointer_chase, LatencyModel};
 use cxl_ccl::sim::{SimFabric, SimParams};
-use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
-use cxl_ccl::collectives::{CclVariant, Primitive};
 use cxl_ccl::util::size::fmt_bytes;
 use std::time::Instant;
+
+/// Virtual device capacity: must hold all 3 concurrent 1 GiB streams on one
+/// device so the "same-device" rows actually contend (the pool is simulated,
+/// so the size is free). Keep in sync with the `PoolLayout` below.
+const DEV_CAP: usize = 4 << 30;
 
 /// Hand-built plan: `streams` ranks each moving `bytes` to/from device 0 or
 /// distinct devices — the §3 concurrency microbenchmarks.
@@ -20,8 +25,7 @@ fn transfer_plan(streams: usize, bytes: usize, same_device: bool, write: bool) -
     let mut ranks = Vec::new();
     for r in 0..streams {
         let mut rp = RankPlan::new(r);
-        let dev_cap = 1usize << 30;
-        let base = if same_device { 0 } else { r * dev_cap };
+        let base = if same_device { 0 } else { r * DEV_CAP };
         let off = base + (1 << 20) + if same_device { r * bytes } else { 0 };
         if write {
             rp.write_ops.push(Op::Write { pool_off: off, src_off: 0, len: bytes });
@@ -54,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     t.row(&["this host, mapped pool chase".into(), format!("{:.1}ns", host * 1e9)]);
 
     banner("Figure 3a: single-node bandwidth vs transfer size (virtual time)");
-    let layout = PoolLayout::new(6, 1 << 30, 1 << 20)?;
+    let layout = PoolLayout::new(6, DEV_CAP, 1 << 20)?;
     let fab = SimFabric::new(layout).with_params(SimParams::default());
     let t = Table::new(&[12, 14, 14]);
     t.header(&["size", "read GB/s", "write GB/s"]);
@@ -66,7 +70,10 @@ fn main() -> anyhow::Result<()> {
         }
         t.row(&row);
     }
-    println!("(plateau = {:.0} GB/s: the Gen5 x8 device limit, Observation 1)", k::CXL_DEVICE_BW / 1e9);
+    println!(
+        "(plateau = {:.0} GB/s: the Gen5 x8 device limit, Observation 1)",
+        k::CXL_DEVICE_BW / 1e9
+    );
 
     banner("Figure 3b/3c: concurrent streams, same vs distinct devices (virtual time)");
     let t = Table::new(&[12, 10, 16, 18]);

@@ -34,10 +34,24 @@ fn main() -> anyhow::Result<()> {
         seed: arg("--seed", "0").parse()?,
         ndevices: arg("--devices", "6").parse()?,
     };
-    println!("FSDP case study: preset={} steps={} variant={:?} chunks={}",
-             cfg.preset, cfg.steps, cfg.variant, cfg.chunks);
+    println!(
+        "FSDP case study: preset={} steps={} variant={:?} chunks={}",
+        cfg.preset, cfg.steps, cfg.variant, cfg.chunks
+    );
 
-    let mut trainer = FsdpTrainer::new(cfg.clone())?;
+    // The trainer needs the PJRT runtime (AOT artifacts + `pjrt` wiring);
+    // without it this example skips instead of erroring, like the runtime
+    // integration tests.
+    let mut trainer = match FsdpTrainer::new(cfg.clone()) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("SKIP: {e:#}");
+            println!(
+                "(produce artifacts with `python -m compile.aot` and wire the `pjrt` feature)"
+            );
+            return Ok(());
+        }
+    };
     println!(
         "model: {} params, {} ranks, {} moved per rank per step",
         trainer.n_params(),
@@ -74,10 +88,16 @@ fn main() -> anyhow::Result<()> {
     let comm_speedup = sim_ib / sim_cxl;
     let e2e_paper_mix = (0.65 + 0.35) / (0.65 + 0.35 / comm_speedup);
     println!("\nloss: {:.4} -> {:.4} over {} steps", first.loss, last.loss, reports.len());
-    println!("communication (virtual time): CXL {} vs IB {}  => {:.2}x comm speedup",
-             fmt_time(sim_cxl), fmt_time(sim_ib), comm_speedup);
-    println!("end-to-end at the paper's 65/35 compute/comm mix: {:.2}x (paper: 1.11x)",
-             e2e_paper_mix);
+    println!(
+        "communication (virtual time): CXL {} vs IB {}  => {:.2}x comm speedup",
+        fmt_time(sim_cxl),
+        fmt_time(sim_ib),
+        comm_speedup
+    );
+    println!(
+        "end-to-end at the paper's 65/35 compute/comm mix: {:.2}x (paper: 1.11x)",
+        e2e_paper_mix
+    );
     println!("(this host's PJRT-CPU compute for reference: {})", fmt_time(compute));
     println!(
         "interconnect cost: IB switch ${:.0} vs CXL switch ${:.0} => {:.2}x cheaper (paper: 2.75x)",

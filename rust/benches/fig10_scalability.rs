@@ -77,7 +77,8 @@ fn main() {
         }
         match p {
             Primitive::AllReduce => println!(
-                "(paper: 2.1-3.0x at 6 nodes, 8.7-12.2x at 12; IB ring reuses partial\n reductions and scales better — compare cxl@12 vs IB@12)"
+                "(paper: 2.1-3.0x at 6 nodes, 8.7-12.2x at 12; IB ring reuses partial\n \
+                 reductions and scales better — compare cxl@12 vs IB@12)"
             ),
             Primitive::Broadcast => {
                 println!("(paper: 1.26-1.40x at 6 nodes, ~2.5x at 12; ~1.54x vs IB on average)")

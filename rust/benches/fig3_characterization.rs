@@ -21,7 +21,12 @@ use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
 use cxl_ccl::util::size::fmt_bytes;
 
-const DEV_CAP: usize = 1 << 30;
+// Virtual device capacity. Must hold every concurrent stream of the largest
+// sweep size on ONE device (3 servers × 1 GiB + the doorbell region), or the
+// "same-device" plans silently spill onto neighbouring devices and the
+// Observation-2 contention columns flatten out at large sizes. Simulation
+// moves no real bytes, so 4 GiB per device costs nothing.
+const DEV_CAP: usize = 4 << 30;
 
 /// `streams` node-streams, each transferring `bytes`; `spread=false` pins
 /// all streams to device 0 (contention), `spread=true` gives each its own

@@ -78,7 +78,10 @@ fn main() {
         summary.push((prim, avg));
     }
 
-    banner("Fig 9 summary (paper: AG 1.34x, Bcast 1.84x, Gather 1.94x, Scatter 1.07x, AR 1.5x, RS 1.43x, Reduce 1.70x, A2A 1.53x)");
+    banner(
+        "Fig 9 summary (paper: AG 1.34x, Bcast 1.84x, Gather 1.94x, Scatter 1.07x, AR 1.5x, \
+         RS 1.43x, Reduce 1.70x, A2A 1.53x)",
+    );
     let t = Table::new(&[16, 14]);
     t.header(&["primitive", "avg speedup"]);
     for (p, s) in &summary {

@@ -29,7 +29,10 @@ fn main() {
     // Host measurement: MLC-style chase over small (cache-resident) and
     // large (DRAM-resident) working sets on the mapped pool.
     let pool = ShmPool::anon(256 << 20).unwrap();
-    for (label, ws) in [("this host, 64KiB working set", 64 << 10), ("this host, 128MiB working set", 128 << 20)] {
+    for (label, ws) in [
+        ("this host, 64KiB working set", 64 << 10),
+        ("this host, 128MiB working set", 128 << 20),
+    ] {
         let samples: Vec<f64> = (0..5)
             .map(|_| pointer_chase(&pool, 0, ws, 100_000))
             .collect();

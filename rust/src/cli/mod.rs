@@ -223,12 +223,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let spec = ClusterSpec::new(nranks, 6, dev_cap);
         let layout = PoolLayout::from_spec(&spec)?;
         let fab = SimFabric::new(layout);
-        let t_all = fab
-            .simulate(&plan_collective(primitive, &spec, &layout, &CclVariant::All.config(8), n)?)?
-            .total_time;
-        let t_naive = fab
-            .simulate(&plan_collective(primitive, &spec, &layout, &CclVariant::Naive.config(1), n)?)?
-            .total_time;
+        let all_plan = plan_collective(primitive, &spec, &layout, &CclVariant::All.config(8), n)?;
+        let t_all = fab.simulate(&all_plan)?.total_time;
+        let naive_plan =
+            plan_collective(primitive, &spec, &layout, &CclVariant::Naive.config(1), n)?;
+        let t_naive = fab.simulate(&naive_plan)?.total_time;
         let t_ib = collective_time(primitive, n * 4, nranks, &ib);
         t.row(&[
             fmt_bytes(bytes),

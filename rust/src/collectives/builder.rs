@@ -101,6 +101,7 @@ impl<'a> Ctx<'a> {
 
     /// Emit the retrieve side of one block: per-chunk doorbell wait (when
     /// overlapping) + read or reduce (Listing 3 lines 9–15).
+    #[allow(clippy::too_many_arguments)]
     fn emit_read(
         &self,
         plan: &mut RankPlan,

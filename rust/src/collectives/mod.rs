@@ -71,7 +71,10 @@ impl Primitive {
                 return Ok(p);
             }
         }
-        bail!("unknown primitive {s:?} (expected one of allreduce|broadcast|reduce|allgather|reducescatter|gather|scatter|alltoall)")
+        bail!(
+            "unknown primitive {s:?} (expected one of allreduce|broadcast|reduce|allgather|\
+             reducescatter|gather|scatter|alltoall)"
+        )
     }
 
     /// Communication pattern class (paper Table 2 / §4.3): type 1 is
@@ -114,11 +117,11 @@ impl Primitive {
     pub fn bytes_on_wire(&self, n: usize, nranks: usize) -> usize {
         let b = n * 4;
         match self {
-            Primitive::AllReduce => b + b * (nranks - 1),        // write N, read (nr-1)N
-            Primitive::Broadcast => b,                           // root writes N, each reads N
-            Primitive::Reduce => b,                              // each writes N, root reads (nr-1)N
-            Primitive::AllGather => b * nranks,                  // write N, read (nr-1)N
-            Primitive::ReduceScatter => b,                       // write (nr-1)/nr N, read same
+            Primitive::AllReduce => b + b * (nranks - 1), // write N, read (nr-1)N
+            Primitive::Broadcast => b,                    // root writes N, each reads N
+            Primitive::Reduce => b,                       // each writes N, root reads (nr-1)N
+            Primitive::AllGather => b * nranks,           // write N, read (nr-1)N
+            Primitive::ReduceScatter => b,                // write (nr-1)/nr N, read same
             Primitive::Gather => b,
             Primitive::Scatter => b,
             Primitive::AllToAll => b,

@@ -32,7 +32,8 @@ pub fn type1(layout: &PoolLayout, data_id: usize, block_stride: usize) -> Result
     let nd = layout.stacking.ndevices;
     let device_index = data_id % nd; // Eq. (1)
     let device_block_id = data_id / nd; // Eq. (2)
-    let pool_offset = layout.block_location(device_index, device_block_id, block_stride)?; // Eq. (3)
+    // Eq. (3)
+    let pool_offset = layout.block_location(device_index, device_block_id, block_stride)?;
     Ok(BlockAddr {
         device: device_index,
         pool_offset,
@@ -79,7 +80,11 @@ pub fn type2(
 /// Naive sequential placement: block `global_block_id` at
 /// `DB_offset + global_block_id · block_stride` in *flat* pool space.
 /// No device awareness; returns the device of the first byte.
-pub fn naive(layout: &PoolLayout, global_block_id: usize, block_stride: usize) -> Result<BlockAddr> {
+pub fn naive(
+    layout: &PoolLayout,
+    global_block_id: usize,
+    block_stride: usize,
+) -> Result<BlockAddr> {
     let off = layout
         .db_region
         .checked_add(

@@ -118,10 +118,10 @@ impl ShmPool {
 
     #[inline]
     fn check(&self, off: usize, len: usize) -> Result<()> {
-        if off.checked_add(len).map_or(true, |end| end > self.len) {
-            bail!("pool access [{off}, {off}+{len}) out of bounds (pool {})", self.len);
+        match off.checked_add(len) {
+            Some(end) if end <= self.len => Ok(()),
+            _ => bail!("pool access [{off}, {off}+{len}) out of bounds (pool {})", self.len),
         }
-        Ok(())
     }
 
     /// Producer-side store: copy `src` into the pool at `off`

@@ -1,0 +1,113 @@
+//! API-compatible stub for the PJRT client, used when the `pjrt` feature is
+//! off (the default in the offline build: the vendored `xla` bindings are
+//! unavailable). Constructors report the backend as unavailable; everything
+//! downstream (`cxl-ccl info`, the runtime integration tests, the hotpath
+//! bench) treats that error as "skip the PJRT path".
+
+use crate::runtime::Manifest;
+use anyhow::{bail, Result};
+
+/// Stub PJRT client. [`PjrtRuntime::cpu`] always fails; a build with the
+/// `pjrt` feature (and the vendored `xla` bindings) swaps in the real one.
+pub struct PjrtRuntime {
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        bail!("PJRT backend unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn cpu_with_dir(_dir: &str) -> Result<Self> {
+        bail!("PJRT backend unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// See [`client_xla`](crate::runtime): selects the largest tile ≤
+    /// `preferred`. Unreachable here (no constructor succeeds), but kept so
+    /// the call sites compile identically against both backends.
+    pub fn reduce_kernel(&self, preferred: usize) -> Result<ReduceKernel> {
+        let tiles = self.manifest.reduce_tiles()?;
+        let tile = tiles
+            .iter()
+            .copied()
+            .filter(|t| *t <= preferred)
+            .max()
+            .or_else(|| tiles.first().copied())
+            .ok_or_else(|| anyhow::anyhow!("no reduce tiles in manifest"))?;
+        Ok(ReduceKernel { tile })
+    }
+
+    pub fn model_step(&self, _preset: &str) -> Result<ModelStep> {
+        bail!("PJRT backend unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn adam_update(&self, _preset: &str) -> Result<AdamUpdate> {
+        bail!("PJRT backend unavailable: built without the `pjrt` feature")
+    }
+}
+
+/// Stub reduce kernel: a plain rust `a + b` with the same tile contract as
+/// the AOT Pallas executable.
+pub struct ReduceKernel {
+    tile: usize,
+}
+
+impl ReduceKernel {
+    pub fn tile_elems(&self) -> usize {
+        self.tile
+    }
+
+    /// `a + b` elementwise; both slices must be exactly one tile long.
+    pub fn add(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        if a.len() != self.tile || b.len() != self.tile {
+            bail!(
+                "reduce kernel tile mismatch: got {}/{}, tile {}",
+                a.len(),
+                b.len(),
+                self.tile
+            );
+        }
+        Ok(a.iter().zip(b).map(|(x, y)| x + y).collect())
+    }
+}
+
+/// `(flat_params, xb, yb) -> (loss, flat_grads)` — unavailable without PJRT.
+pub struct ModelStep {
+    pub n_params: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl ModelStep {
+    pub fn run(
+        &self,
+        _flat: &[f32],
+        _tokens_x: &[i32],
+        _tokens_y: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        bail!("PJRT backend unavailable: built without the `pjrt` feature")
+    }
+}
+
+/// `(shard, grad, m, v, step) -> (shard', m', v')` — unavailable without PJRT.
+pub struct AdamUpdate {
+    pub shard_len: usize,
+}
+
+impl AdamUpdate {
+    pub fn run(
+        &self,
+        _shard: &[f32],
+        _grad: &[f32],
+        _m: &[f32],
+        _v: &[f32],
+        _step: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        bail!("PJRT backend unavailable: built without the `pjrt` feature")
+    }
+}

@@ -242,7 +242,8 @@ impl SimFabric {
                             streams[si].pc += 1;
                             let s = &mut streams[si];
                             match op {
-                                Op::Write { pool_off, len, .. } | Op::Read { pool_off, len, .. } => {
+                                Op::Write { pool_off, len, .. }
+                                | Op::Read { pool_off, len, .. } => {
                                     s.segs = self.device_segments(pool_off, len);
                                     s.post_cost = 0.0;
                                     s.phase = Phase::Busy(t + p.memcpy_overhead);

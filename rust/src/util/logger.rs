@@ -3,11 +3,11 @@
 //! Controlled by `CCL_LOG` (error|warn|info|debug|trace), default `info`.
 
 use log::{Level, LevelFilter, Metadata, Record};
-use std::sync::Once;
+use std::sync::{Once, OnceLock};
 use std::time::Instant;
 
 static INIT: Once = Once::new();
-static mut START: Option<Instant> = None;
+static START: OnceLock<Instant> = OnceLock::new();
 
 struct CclLogger;
 
@@ -20,8 +20,7 @@ impl log::Log for CclLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        // SAFETY: START is written once inside `Once` before any logging.
-        let elapsed = unsafe { START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0) };
+        let elapsed = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
         let lvl = match record.level() {
             Level::Error => "E",
             Level::Warn => "W",
@@ -40,7 +39,7 @@ static LOGGER: CclLogger = CclLogger;
 /// Install the logger (idempotent). Level comes from `CCL_LOG`.
 pub fn init() {
     INIT.call_once(|| {
-        unsafe { START = Some(Instant::now()) };
+        let _ = START.set(Instant::now());
         let level = match std::env::var("CCL_LOG").as_deref() {
             Ok("error") => LevelFilter::Error,
             Ok("warn") => LevelFilter::Warn,

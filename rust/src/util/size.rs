@@ -8,7 +8,7 @@ pub fn parse_size(s: &str) -> Result<usize, String> {
         .strip_suffix("IB")
         .map(|p| p.to_string())
         .unwrap_or_else(|| t.strip_suffix('B').unwrap_or(&t).to_string());
-    let (num, mult) = match t.chars().last() {
+    let (num, mult) = match t.chars().next_back() {
         Some('K') => (&t[..t.len() - 1], 1usize << 10),
         Some('M') => (&t[..t.len() - 1], 1usize << 20),
         Some('G') => (&t[..t.len() - 1], 1usize << 30),

@@ -59,7 +59,12 @@ fn prop_type2_write_devices_disjoint() {
         tested += 1;
         spec.device_capacity = 32 << 20;
         let layout = PoolLayout::from_spec(&spec).unwrap();
-        for p in [Primitive::AllToAll, Primitive::AllGather, Primitive::AllReduce, Primitive::ReduceScatter] {
+        for p in [
+            Primitive::AllToAll,
+            Primitive::AllGather,
+            Primitive::AllReduce,
+            Primitive::ReduceScatter,
+        ] {
             let plan =
                 plan_collective(p, &spec, &layout, &CclVariant::All.config(chunks), n).unwrap();
             let mut dev_writer: Vec<Option<usize>> = vec![None; spec.ndevices];

@@ -6,11 +6,12 @@
 
 use cxl_ccl::bench_util::{banner, pow2_sizes, Table};
 use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
-use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::collectives::{CclVariant, CollectiveBackend, Primitive};
 use cxl_ccl::pool::{PoolLayout, ShmPool};
 use cxl_ccl::sim::constants as k;
 use cxl_ccl::sim::latency::{pointer_chase, LatencyModel};
 use cxl_ccl::sim::{SimFabric, SimParams};
+use cxl_ccl::tensor::Dtype;
 use cxl_ccl::util::size::fmt_bytes;
 use std::time::Instant;
 
@@ -39,6 +40,7 @@ fn transfer_plan(streams: usize, bytes: usize, same_device: bool, write: bool) -
         variant: CclVariant::All,
         nranks: streams,
         n_elems: bytes / 4,
+        dtype: Dtype::F32,
         send_elems: bytes / 4,
         recv_elems: bytes / 4,
         ranks,
@@ -65,8 +67,8 @@ fn main() -> anyhow::Result<()> {
     for bytes in pow2_sizes(4 << 10, 1 << 30) {
         let mut row = vec![fmt_bytes(bytes)];
         for write in [false, true] {
-            let rep = fab.simulate(&transfer_plan(1, bytes, true, write))?;
-            row.push(format!("{:.2}", bytes as f64 / rep.total_time / 1e9));
+            let out = fab.run(&transfer_plan(1, bytes, true, write), &[], &mut [])?;
+            row.push(format!("{:.2}", bytes as f64 / out.seconds() / 1e9));
         }
         t.row(&row);
     }
@@ -80,13 +82,13 @@ fn main() -> anyhow::Result<()> {
     t.header(&["size", "streams", "same-dev GB/s", "distinct-dev GB/s"]);
     for bytes in pow2_sizes(1 << 20, 1 << 30) {
         for streams in [2usize, 3] {
-            let same = fab.simulate(&transfer_plan(streams, bytes, true, false))?;
-            let diff = fab.simulate(&transfer_plan(streams, bytes, false, false))?;
+            let same = fab.run(&transfer_plan(streams, bytes, true, false), &[], &mut [])?;
+            let diff = fab.run(&transfer_plan(streams, bytes, false, false), &[], &mut [])?;
             t.row(&[
                 fmt_bytes(bytes),
                 streams.to_string(),
-                format!("{:.2} per-stream", bytes as f64 / same.total_time / 1e9),
-                format!("{:.2} per-stream", bytes as f64 / diff.total_time / 1e9),
+                format!("{:.2} per-stream", bytes as f64 / same.seconds() / 1e9),
+                format!("{:.2} per-stream", bytes as f64 / diff.seconds() / 1e9),
             ]);
         }
     }

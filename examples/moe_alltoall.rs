@@ -11,10 +11,11 @@
 
 use cxl_ccl::baseline::{collective_time, IbParams};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclConfig, Primitive};
-use cxl_ccl::exec::Communicator;
+use cxl_ccl::collectives::{run_with_scratch, CclConfig, Primitive};
+use cxl_ccl::exec::{Communicator, PendingOp};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
+use cxl_ccl::tensor::{Dtype, Tensor};
 use cxl_ccl::topology::ClusterSpec;
 use cxl_ccl::util::size::{fmt_bytes, fmt_time};
 use cxl_ccl::util::SplitMix64;
@@ -60,15 +61,38 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
+    // Every layer launches through the per-rank nonblocking handles: each
+    // expert-rank begins its part of the AllToAll, the group fires once the
+    // last rank joins, and the second layer's launch reuses the cached plan.
+    let alltoall = |bufs: &[Vec<f32>]| -> anyhow::Result<Vec<Vec<f32>>> {
+        let pending: Vec<PendingOp<'_>> = bufs
+            .iter()
+            .enumerate()
+            .map(|(r, b)| {
+                comm.rank(r)?.begin(
+                    Primitive::AllToAll,
+                    &cfg,
+                    n_elems,
+                    Tensor::from_f32(b),
+                    Tensor::zeros(Dtype::F32, n_elems),
+                )
+            })
+            .collect::<anyhow::Result<_>>()?;
+        pending
+            .into_iter()
+            .map(|p| p.wait()?.0.to_f32())
+            .collect()
+    };
+
     // ---- dispatch: tokens -> experts ------------------------------------
     let t0 = std::time::Instant::now();
-    let mut at_expert = comm.all_to_all_f32(&sends, &cfg)?;
+    let mut at_expert = alltoall(&sends)?;
     // ---- expert compute ---------------------------------------------------
     for (e, buf) in at_expert.iter_mut().enumerate() {
         expert_transform(e, buf);
     }
     // ---- combine: experts -> tokens --------------------------------------
-    let returned = comm.all_to_all_f32(&at_expert, &cfg)?;
+    let returned = alltoall(&at_expert)?;
     let wall = t0.elapsed().as_secs_f64();
 
     // ---- verify: token j sent from rank r to expert e comes back as
@@ -100,12 +124,17 @@ fn main() -> anyhow::Result<()> {
         fmt_bytes(n_elems * 4)
     );
     println!("real pool executor (2x alltoall + expert compute): {}", fmt_time(wall));
+    let stats = comm.plan_cache().stats();
+    println!(
+        "plan cache: {} misses, {} hits (the combine layer replans nothing)",
+        stats.misses, stats.hits
+    );
 
     // ---- virtual-time comparison ----------------------------------------
     let layout = PoolLayout::from_spec(&spec)?;
     let fab = SimFabric::new(layout);
     let plan = plan_collective(Primitive::AllToAll, &spec, &layout, &cfg, n_elems)?;
-    let cxl = 2.0 * fab.simulate(&plan)?.total_time;
+    let cxl = 2.0 * run_with_scratch(&fab, &plan)?.seconds();
     let ib = 2.0 * collective_time(Primitive::AllToAll, n_elems * 4, nranks, &IbParams::default());
     println!(
         "virtual time per MoE layer: CXL {} vs IB {} ({:.2}x)",

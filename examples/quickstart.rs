@@ -1,16 +1,15 @@
 //! Quickstart: stand up the paper's topology (3 nodes, 6 CXL devices),
-//! run a few collectives for real over the shared pool, verify the
-//! numerics, and show the virtual-time CXL-vs-InfiniBand comparison.
+//! run collectives through the v2 API — typed tensor views, per-rank
+//! nonblocking handles, and the one `CollectiveBackend` trait that drives
+//! both the real pool executor and the virtual-time fabric — and verify
+//! the numerics.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use cxl_ccl::baseline::{collective_time, IbParams};
-use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{oracle, CclConfig, CclVariant, Primitive};
-use cxl_ccl::exec::Communicator;
-use cxl_ccl::pool::PoolLayout;
-use cxl_ccl::sim::SimFabric;
-use cxl_ccl::topology::ClusterSpec;
+use cxl_ccl::collectives::oracle;
+use cxl_ccl::prelude::*;
+use cxl_ccl::tensor::{views_f32, views_f32_mut};
 use cxl_ccl::util::size::{fmt_bytes, fmt_time};
 use cxl_ccl::util::SplitMix64;
 
@@ -28,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         fmt_bytes(spec.db_region_size),
     );
 
-    // --- 1. AllReduce, verified against the oracle ----------------------
+    // --- 1. AllReduce over typed views, verified against the oracle -----
     let n = 3 * 65536; // 768 KiB per rank
     let mut rng = SplitMix64::new(42);
     let sends: Vec<Vec<f32>> = (0..spec.nranks)
@@ -40,7 +39,11 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let cfg = CclConfig::default_all();
     let mut recvs = vec![vec![0.0f32; n]; spec.nranks];
-    let wall = comm.execute(Primitive::AllReduce, &cfg, n, &sends, &mut recvs)?;
+    let wall = {
+        let send_views = views_f32(&sends);
+        let mut recv_views = views_f32_mut(&mut recvs);
+        comm.collective(Primitive::AllReduce, &cfg, n, &send_views, &mut recv_views)?
+    };
     let want = oracle::expected(Primitive::AllReduce, &sends, n, 0);
     let max_err = recvs
         .iter()
@@ -54,27 +57,64 @@ fn main() -> anyhow::Result<()> {
         fmt_time(wall.as_secs_f64()),
     );
 
-    // --- 2. AllGather through the convenience API ------------------------
-    let gathered = comm.all_gather_f32(&sends, &cfg)?;
-    assert!(gathered.iter().all(|g| g.len() == n * spec.nranks));
-    println!("allgather: every rank holds {} ✓", fmt_bytes(n * 4 * spec.nranks));
+    // --- 2. Nonblocking per-rank handles (ncclGroupStart/End-style) ------
+    let pending: Vec<PendingOp<'_>> = (0..spec.nranks)
+        .map(|r| {
+            comm.rank(r)?.begin(
+                Primitive::AllGather,
+                &cfg,
+                n,
+                Tensor::from_f32(&sends[r]),
+                Tensor::zeros(Dtype::F32, n * spec.nranks),
+            )
+        })
+        .collect::<anyhow::Result<_>>()?;
+    for p in pending {
+        let (gathered, _) = p.wait()?;
+        assert_eq!(gathered.len(), n * spec.nranks);
+    }
+    println!(
+        "allgather via rank handles: every rank holds {} ✓",
+        fmt_bytes(n * 4 * spec.nranks)
+    );
 
-    // --- 3. The three variants in virtual time vs InfiniBand -------------
+    // --- 3. One plan, two backends -----------------------------------------
+    // The identical cached plan runs for real over the pool and in virtual
+    // time on the calibrated fabric, through the same trait.
+    let plan = comm.plan(Primitive::AllGather, &cfg, n, Dtype::F32)?;
+    let fabric = SimFabric::new(*comm.layout());
+    println!("\none plan, two backends (AllGather, {} per rank):", fmt_bytes(n * 4));
+    for backend in [&comm as &dyn CollectiveBackend, &fabric] {
+        let out = run_with_scratch(backend, &plan)?;
+        println!(
+            "  {:<10} {}  ({})",
+            backend.name(),
+            fmt_time(out.seconds()),
+            if out.is_virtual() { "virtual time" } else { "wall clock" },
+        );
+    }
+    let stats = comm.plan_cache().stats();
+    println!(
+        "plan cache: {} misses, {} hits (steady-state calls replan nothing)",
+        stats.misses, stats.hits
+    );
+
+    // --- 4. The three variants in virtual time vs InfiniBand -------------
     // (virtual pool sized for the message; simulation moves no real bytes)
     let msg = 64 << 20; // 64 MiB message on the calibrated fabric
     let sim_spec = ClusterSpec::new(spec.nranks, spec.ndevices, 1 << 30);
-    let layout = PoolLayout::from_spec(&sim_spec)?;
+    let layout = cxl_ccl::pool::PoolLayout::from_spec(&sim_spec)?;
     let fab = SimFabric::new(layout);
     let n_sim = msg / 4;
     println!("\nvirtual-time AllGather, {} per rank:", fmt_bytes(msg));
     for v in CclVariant::ALL {
         let plan = plan_collective(Primitive::AllGather, &sim_spec, &layout, &v.config(8), n_sim)?;
-        let rep = fab.simulate(&plan)?;
+        let out = run_with_scratch(&fab, &plan)?;
         println!(
             "  {:<18} {}  (pool throughput {:.1} GB/s)",
             v.name(),
-            fmt_time(rep.total_time),
-            rep.pool_throughput() / 1e9,
+            fmt_time(out.seconds()),
+            out.sim_report().map(|r| r.pool_throughput() / 1e9).unwrap_or(0.0),
         );
     }
     let ib = collective_time(Primitive::AllGather, msg, spec.nranks, &IbParams::default());

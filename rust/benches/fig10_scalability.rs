@@ -19,7 +19,7 @@
 use cxl_ccl::baseline::{collective_time, IbParams};
 use cxl_ccl::bench_util::{banner, Table};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::collectives::{run_with_scratch, CclVariant, Primitive};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
 use cxl_ccl::topology::ClusterSpec;
@@ -33,7 +33,7 @@ fn sim_time(p: Primitive, nranks: usize, msg_bytes: usize) -> f64 {
     let layout = PoolLayout::from_spec(&spec).unwrap();
     let fab = SimFabric::new(layout);
     let plan = plan_collective(p, &spec, &layout, &CclVariant::All.config(8), n).unwrap();
-    fab.simulate(&plan).unwrap().total_time
+    run_with_scratch(&fab, &plan).unwrap().seconds()
 }
 
 fn main() {

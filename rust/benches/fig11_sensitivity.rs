@@ -7,7 +7,7 @@
 
 use cxl_ccl::bench_util::{banner, Table};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::collectives::{run_with_scratch, CclVariant, Primitive};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
 use cxl_ccl::util::size::fmt_time;
@@ -37,7 +37,7 @@ fn main() {
             let plan =
                 plan_collective(Primitive::AllGather, &spec, &layout, &CclVariant::All.config(k), n)
                     .unwrap();
-            fab.simulate(&plan).unwrap().total_time
+            run_with_scratch(&fab, &plan).unwrap().seconds()
         })
         .collect();
     let best = times.iter().cloned().fold(f64::MAX, f64::min);

@@ -16,9 +16,10 @@
 
 use cxl_ccl::bench_util::{banner, pow2_sizes, Table};
 use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
-use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::collectives::{CclVariant, CollectiveBackend, Primitive};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
+use cxl_ccl::tensor::Dtype;
 use cxl_ccl::util::size::fmt_bytes;
 
 // Virtual device capacity. Must hold every concurrent stream of the largest
@@ -32,16 +33,23 @@ const DEV_CAP: usize = 4 << 30;
 /// all streams to device 0 (contention), `spread=true` gives each its own
 /// device. `fan=k`: a single node splits its transfer over k devices.
 fn plan(streams: usize, bytes: usize, spread: bool, write: bool, fan: usize) -> CollectivePlan {
+    // Fanning splits `bytes` over `fan` devices; the division remainder is
+    // spread over the first `bytes % fan` segments so the modeled traffic
+    // sums to exactly `bytes` (a bare `bytes / fan` would silently drop up
+    // to fan-1 bytes per stream).
+    let seg_base = bytes / fan;
+    let seg_rem = bytes % fan;
     let mut ranks = Vec::new();
     for r in 0..streams {
         let mut rp = RankPlan::new(r);
         for f in 0..fan {
             let dev = if spread { (r * fan + f) % 6 } else { f % 6 };
-            let off = dev * DEV_CAP + (1 << 20) + r * bytes / fan;
+            let len = seg_base + usize::from(f < seg_rem);
+            let off = dev * DEV_CAP + (1 << 20) + r * (seg_base + 1);
             let op = if write {
-                Op::Write { pool_off: off, src_off: 0, len: bytes / fan }
+                Op::Write { pool_off: off, src_off: 0, len }
             } else {
-                Op::Read { pool_off: off, dst_off: 0, len: bytes / fan }
+                Op::Read { pool_off: off, dst_off: 0, len }
             };
             if write {
                 rp.write_ops.push(op);
@@ -56,6 +64,7 @@ fn plan(streams: usize, bytes: usize, spread: bool, write: bool, fan: usize) -> 
         variant: CclVariant::All,
         nranks: streams,
         n_elems: bytes / 4,
+        dtype: Dtype::F32,
         send_elems: bytes / 4,
         recv_elems: bytes / 4,
         ranks,
@@ -65,18 +74,21 @@ fn plan(streams: usize, bytes: usize, spread: bool, write: bool, fan: usize) -> 
 fn main() {
     let layout = PoolLayout::new(6, DEV_CAP, 1 << 20).unwrap();
     let fab = SimFabric::new(layout);
+    // Hand-built plans run through the same backend trait as everything
+    // else; the fabric is a `CollectiveBackend` like the real executor.
+    let sim = |p: CollectivePlan| fab.run(&p, &[], &mut []).unwrap().seconds();
     let gbps = |bytes: usize, t: f64| bytes as f64 / t / 1e9;
 
     banner("Figure 3a: single-node exclusive bandwidth vs transfer size");
     let t = Table::new(&[12, 12, 12]);
     t.header(&["size", "read GB/s", "write GB/s"]);
     for bytes in pow2_sizes(16 << 10, 1 << 30) {
-        let rd = fab.simulate(&plan(1, bytes, false, false, 1)).unwrap();
-        let wr = fab.simulate(&plan(1, bytes, false, true, 1)).unwrap();
+        let rd = sim(plan(1, bytes, false, false, 1));
+        let wr = sim(plan(1, bytes, false, true, 1));
         t.row(&[
             fmt_bytes(bytes),
-            format!("{:.2}", gbps(bytes, rd.total_time)),
-            format!("{:.2}", gbps(bytes, wr.total_time)),
+            format!("{:.2}", gbps(bytes, rd)),
+            format!("{:.2}", gbps(bytes, wr)),
         ]);
     }
     println!("(paper: ~20 GB/s at 1 MiB; limited by the Gen5 x8 device link)");
@@ -85,8 +97,8 @@ fn main() {
     let t = Table::new(&[10, 14]);
     t.header(&["devices", "aggregate GB/s"]);
     for fan in [1usize, 2, 4, 6] {
-        let rep = fab.simulate(&plan(1, 256 << 20, true, false, fan)).unwrap();
-        t.row(&[fan.to_string(), format!("{:.2}", gbps(256 << 20, rep.total_time))]);
+        let vt = sim(plan(1, 256 << 20, true, false, fan));
+        t.row(&[fan.to_string(), format!("{:.2}", gbps(256 << 20, vt))]);
     }
     println!("(paper: aggregate never exceeds the single-device peak — one DMA engine/direction)");
 
@@ -96,13 +108,13 @@ fn main() {
         t.header(&["size", "servers", "same-dev GB/s/srv", "distinct-dev GB/s/srv"]);
         for bytes in pow2_sizes(1 << 20, 1 << 30) {
             for servers in [2usize, 3] {
-                let same = fab.simulate(&plan(servers, bytes, false, write, 1)).unwrap();
-                let diff = fab.simulate(&plan(servers, bytes, true, write, 1)).unwrap();
+                let same = sim(plan(servers, bytes, false, write, 1));
+                let diff = sim(plan(servers, bytes, true, write, 1));
                 t.row(&[
                     fmt_bytes(bytes),
                     servers.to_string(),
-                    format!("{:.2}", gbps(bytes, same.total_time)),
-                    format!("{:.2}", gbps(bytes, diff.total_time)),
+                    format!("{:.2}", gbps(bytes, same)),
+                    format!("{:.2}", gbps(bytes, diff)),
                 ]);
             }
         }

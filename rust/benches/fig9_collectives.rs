@@ -9,23 +9,53 @@
 //! sizes (cudaMemcpy + sync software overhead, §5.2).
 //!
 //! Run: `cargo bench --bench fig9_collectives`
-//! Env: `FIG9_MAX_MB` (default 4096) caps the sweep.
+//! Env: `FIG9_MAX_MB` (default 4096) caps the sweep; `BENCH_JSON=1`
+//! additionally writes machine-readable `BENCH_fig9.json` (per-primitive,
+//! per-variant latency + bus bandwidth) for the CI perf trajectory.
 
 use cxl_ccl::baseline::{collective_time, IbParams};
-use cxl_ccl::bench_util::{banner, Table};
+use cxl_ccl::bench_util::{banner, write_bench_json, Table};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::collectives::{run_with_scratch, CclVariant, Primitive};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
 use cxl_ccl::topology::ClusterSpec;
 use cxl_ccl::util::size::{fmt_bytes, fmt_time};
 use cxl_ccl::util::stats::geomean;
 
+/// One measured cell for the JSON artifact.
+struct JsonRow {
+    primitive: Primitive,
+    variant: &'static str,
+    size_bytes: usize,
+    ns: f64,
+    bus_gbps: f64,
+}
+
+fn write_json(nranks: usize, rows: &[JsonRow]) {
+    let rendered: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"primitive\": \"{}\", \"variant\": \"{}\", \"size_bytes\": {}, \
+                 \"ns\": {:.1}, \"bus_gbps\": {:.3}}}",
+                r.primitive, r.variant, r.size_bytes, r.ns, r.bus_gbps
+            )
+        })
+        .collect();
+    let meta = [("nranks", nranks.to_string())];
+    match write_bench_json("BENCH_fig9.json", "fig9_collectives", &meta, &rendered) {
+        Ok(()) => println!("\nwrote BENCH_fig9.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("\nfailed to write BENCH_fig9.json: {e}"),
+    }
+}
+
 fn main() {
     let max_mb: usize = std::env::var("FIG9_MAX_MB")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(4096);
+    let emit_json = std::env::var("BENCH_JSON").map(|v| v == "1").unwrap_or(false);
     // Paper testbed: 3 nodes, 6 devices. The virtual pool is sized to hold
     // the largest message comfortably (simulation moves no real bytes).
     let nranks = 3;
@@ -39,6 +69,7 @@ fn main() {
     println!("(virtual-time fabric calibrated per paper §3; IB = copy-RDMA pipeline model)");
 
     let mut summary: Vec<(Primitive, f64)> = Vec::new();
+    let mut json_rows: Vec<JsonRow> = Vec::new();
     for prim in Primitive::ALL {
         banner(&format!("Fig 9 panel: {prim}"));
         let t = Table::new(&[10, 12, 12, 12, 12, 12]);
@@ -53,15 +84,36 @@ fn main() {
             let spec = ClusterSpec::new(nranks, 6, dev_cap);
             let layout = PoolLayout::from_spec(&spec).unwrap();
             let fab = SimFabric::new(layout);
-            let sim = |v: CclVariant| -> f64 {
+            // The fabric is driven through the same `CollectiveBackend`
+            // trait as the real executor.
+            let mut sim = |v: CclVariant| -> f64 {
                 let plan = plan_collective(prim, &spec, &layout, &v.config(8), n_elems)
                     .expect("plan");
-                fab.simulate(&plan).expect("simulate").total_time
+                let secs = run_with_scratch(&fab, &plan).expect("simulate").seconds();
+                if emit_json {
+                    json_rows.push(JsonRow {
+                        primitive: prim,
+                        variant: v.name(),
+                        size_bytes: msg_bytes,
+                        ns: secs * 1e9,
+                        bus_gbps: prim.bytes_on_wire(n_elems, nranks) as f64 / secs / 1e9,
+                    });
+                }
+                secs
             };
             let t_naive = sim(CclVariant::Naive);
             let t_agg = sim(CclVariant::Aggregate);
             let t_all = sim(CclVariant::All);
             let t_ib = collective_time(prim, n_elems * 4, nranks, &ib);
+            if emit_json {
+                json_rows.push(JsonRow {
+                    primitive: prim,
+                    variant: "infiniband-200g",
+                    size_bytes: msg_bytes,
+                    ns: t_ib * 1e9,
+                    bus_gbps: prim.bytes_on_wire(n_elems, nranks) as f64 / t_ib / 1e9,
+                });
+            }
             let sp = t_ib / t_all;
             speedups.push(sp);
             t.row(&[
@@ -86,5 +138,9 @@ fn main() {
     t.header(&["primitive", "avg speedup"]);
     for (p, s) in &summary {
         t.row(&[p.to_string(), format!("{s:.2}x")]);
+    }
+
+    if emit_json {
+        write_json(nranks, &json_rows);
     }
 }

@@ -7,10 +7,11 @@
 
 use cxl_ccl::bench_util::{banner, measure, Table};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclConfig, CclVariant, Primitive};
+use cxl_ccl::collectives::{CclConfig, CclVariant, CollectiveBackend, PlanCache, Primitive};
 use cxl_ccl::doorbell::{DoorbellSet, WaitPolicy};
 use cxl_ccl::exec::{Communicator, ReduceEngine, ScalarReduceEngine};
 use cxl_ccl::pool::{PoolLayout, ShmPool};
+use cxl_ccl::tensor::{views_f32, views_f32_mut, Dtype};
 use cxl_ccl::topology::ClusterSpec;
 use cxl_ccl::util::size::{fmt_bytes, fmt_time};
 use cxl_ccl::util::SplitMix64;
@@ -77,7 +78,7 @@ fn main() {
         Err(e) => println!("pjrt-pallas: skipped ({e})"),
     }
 
-    banner("plan building overhead (allocation-sensitive)");
+    banner("plan building overhead: fresh vs PlanCache steady-state");
     let spec = ClusterSpec::paper(64 << 20);
     let playout = PoolLayout::from_spec(&spec).unwrap();
     for p in [Primitive::AllGather, Primitive::AllToAll] {
@@ -85,7 +86,18 @@ fn main() {
             let _ = plan_collective(p, &spec, &playout, &CclConfig::default_all(), 3 << 20)
                 .unwrap();
         });
-        println!("plan {p}: p50 {}", fmt_time(s.p50));
+        let cache = PlanCache::new();
+        let c = measure(10, 200, || {
+            let _ = cache
+                .get_or_plan(&spec, &playout, p, &CclConfig::default_all(), 3 << 20, Dtype::F32)
+                .unwrap();
+        });
+        println!(
+            "plan {p}: fresh p50 {} | cached p50 {} ({:.0}x)",
+            fmt_time(s.p50),
+            fmt_time(c.p50),
+            s.p50 / c.p50.max(1e-12)
+        );
     }
 
     banner("real executor end-to-end (4MiB AllGather, thread-per-rank)");
@@ -96,16 +108,21 @@ fn main() {
     t.header(&["variant", "p50", "pool GB/s"]);
     for v in CclVariant::ALL {
         let ccl = v.config(8);
+        // Cached plan + the unified backend trait: the steady-state loop
+        // every migrated caller now runs.
+        let plan = comm.plan(Primitive::AllGather, &ccl, n, Dtype::F32).unwrap();
         let mut recvs = vec![vec![0.0f32; n * 3]; 3];
         let s = measure(2, 10, || {
-            comm.execute(Primitive::AllGather, &ccl, n, &sends, &mut recvs)
-                .unwrap();
+            let send_views = views_f32(&sends);
+            let mut recv_views = views_f32_mut(&mut recvs);
+            comm.run(&plan, &send_views, &mut recv_views).unwrap();
         });
-        let plan = plan_collective(Primitive::AllGather, &spec, &playout, &ccl, n).unwrap();
         t.row(&[
             v.name().into(),
             fmt_time(s.p50),
             format!("{:.2}", plan.total_pool_bytes() as f64 / s.p50 / 1e9),
         ]);
     }
+    let stats = comm.plan_cache().stats();
+    println!("plan cache after the sweep: {} misses, {} hits", stats.misses, stats.hits);
 }

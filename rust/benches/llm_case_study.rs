@@ -16,7 +16,7 @@
 use cxl_ccl::baseline::{collective_time, IbParams};
 use cxl_ccl::bench_util::{banner, Table};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::collectives::{run_with_scratch, CclVariant, Primitive};
 use cxl_ccl::cost;
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
@@ -39,7 +39,8 @@ fn fsdp_step_comm(params: usize, nranks: usize) -> (f64, f64) {
     let ccl = CclVariant::All.config(8);
     let ag = plan_collective(Primitive::AllGather, &spec, &layout, &ccl, shard).unwrap();
     let rs = plan_collective(Primitive::ReduceScatter, &spec, &layout, &ccl, padded).unwrap();
-    let cxl = fab.simulate(&ag).unwrap().total_time + fab.simulate(&rs).unwrap().total_time;
+    let cxl = run_with_scratch(&fab, &ag).unwrap().seconds()
+        + run_with_scratch(&fab, &rs).unwrap().seconds();
     let ib = IbParams::default();
     let ibt = collective_time(Primitive::AllGather, shard * 4, nranks, &ib)
         + collective_time(Primitive::ReduceScatter, padded * 4, nranks, &ib);

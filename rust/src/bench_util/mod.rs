@@ -53,6 +53,31 @@ pub fn banner(title: &str) {
     println!("=== {title} ===");
 }
 
+/// Minimal machine-readable bench artifact writer (serde is unavailable
+/// offline). Produces `{"bench": <name>, <meta...>, "results": [rows]}`;
+/// `meta` values and `rows` must already be valid JSON fragments.
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    meta: &[(&str, String)],
+    rows: &[String],
+) -> std::io::Result<()> {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"bench\": \"{bench}\",\n"));
+    for (k, v) in meta {
+        out.push_str(&format!("  \"{k}\": {v},\n"));
+    }
+    out.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {r}{}\n",
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// Message-size sweep helper: powers of two from `lo` to `hi` inclusive.
 pub fn pow2_sizes(lo: usize, hi: usize) -> Vec<usize> {
     let mut v = Vec::new();
@@ -75,6 +100,25 @@ mod tests {
         assert_eq!(n, 7);
         assert_eq!(st.n, 5);
         assert!(st.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let path = "/tmp/cxl_ccl_bench_json_test.json";
+        write_bench_json(
+            path,
+            "unit",
+            &[("nranks", "3".into())],
+            &[r#"{"a": 1}"#.into(), r#"{"a": 2}"#.into()],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert!(text.contains("\"bench\": \"unit\""));
+        assert!(text.contains("\"nranks\": 3"));
+        assert!(text.contains("{\"a\": 1},"));
+        assert!(text.ends_with("  ]\n}\n"));
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
     }
 
     #[test]

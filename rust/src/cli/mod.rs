@@ -5,20 +5,24 @@
 //! cxl-ccl info                         # topology + artifact summary
 //! cxl-ccl run [--config ccl.conf] [--primitive p] [--variant v]
 //!             [--size 16M] [--ranks 3] [--devices 6] [--chunks 8]
-//!             [--iters 3] [--pjrt-reduce]
+//!             [--iters 3] [--backend shm|sim] [--dtype f32|f16|bf16|u8]
 //! cxl-ccl sweep [--primitive p] ...    # virtual-time size sweep vs IB
 //! cxl-ccl train [--preset tiny] [--steps 40] [--variant all]
 //! cxl-ccl latency                      # Table-1 style report
 //! ```
+//!
+//! `run` drives either backend — the real shm-pool executor or the
+//! virtual-time fabric — through the one [`CollectiveBackend`] trait.
 
 use crate::baseline::{collective_time, IbParams};
 use crate::bench_util::{banner, Table};
-use crate::collectives::builder::plan_collective;
-use crate::collectives::{oracle, CclVariant, Primitive};
+use crate::collectives::builder::{plan_collective, plan_collective_dtype};
+use crate::collectives::{oracle, run_with_scratch, CclVariant, CollectiveBackend, Primitive};
 use crate::config::{KvFile, RunConfig};
 use crate::exec::Communicator;
 use crate::pool::PoolLayout;
 use crate::sim::SimFabric;
+use crate::tensor::{views_f32, views_f32_mut, Dtype};
 use crate::topology::ClusterSpec;
 use crate::train::{FsdpTrainer, TrainConfig};
 use crate::util::size::{fmt_bytes, fmt_time, parse_size};
@@ -96,7 +100,8 @@ fn print_help() {
          subcommands:\n  \
          info                     topology + artifact summary\n  \
          run    [--config F] [--primitive p] [--variant all|aggregate|naive]\n         \
-                [--size 16M] [--ranks 3] [--devices 6] [--chunks 8] [--iters 3]\n  \
+                [--size 16M] [--ranks 3] [--devices 6] [--chunks 8] [--iters 3]\n         \
+                [--backend shm|sim] [--dtype f32|f16|bf16|u8]\n  \
          sweep  [--primitive p] [--ranks 3] [--max 1G]   virtual-time vs InfiniBand\n  \
          train  [--preset tiny|e2e] [--steps 40] [--variant all] [--chunks 8]\n  \
          latency                  Table-1 style latency report\n"
@@ -163,18 +168,55 @@ fn cmd_info() -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let rc = build_run_config(args)?;
-    let n = rc.n_elems();
+    let dtype = Dtype::parse(&args.get_or("dtype", "f32"))?;
+    let backend_name = args.get_or("backend", "shm");
+    // `--size` is bytes; the element count depends on the dtype.
+    let n = rc.n_elems(dtype);
     banner(&format!(
-        "run: {} {} | {} per rank | {} ranks, {} devices, {} chunks",
+        "run[{backend_name}]: {} {} {dtype} | {} per rank | {} ranks, {} devices, {} chunks",
         rc.primitive,
         rc.variant.name(),
-        fmt_bytes(n * 4),
+        fmt_bytes(n * dtype.size_bytes()),
         rc.spec.nranks,
         rc.spec.ndevices,
         rc.chunks
     ));
-    let comm = Communicator::shm(&rc.spec)?;
     let ccl = rc.variant.config(rc.chunks).with_root(0);
+    let layout = PoolLayout::from_spec(&rc.spec)?;
+    // One plan, one trait: the shm executor and the virtual-time fabric
+    // are interchangeable behind `CollectiveBackend`.
+    let backend: Box<dyn CollectiveBackend> = match backend_name.as_str() {
+        "shm" => Box::new(Communicator::shm(&rc.spec)?),
+        "sim" => Box::new(SimFabric::new(layout)),
+        other => bail!("unknown backend {other:?} (shm|sim)"),
+    };
+    if !backend.is_virtual() && dtype != Dtype::F32 && rc.primitive.reduces() {
+        bail!(
+            "{} with dtype {dtype} cannot execute on the shm backend (the scalar reduce \
+             engine supports only f32 reductions); use --dtype f32, or --backend sim to \
+             time the plan in virtual time",
+            rc.primitive
+        );
+    }
+    let plan = plan_collective_dtype(rc.primitive, &rc.spec, &layout, &ccl, n, dtype)?;
+    let bytes = plan.total_pool_bytes();
+    let t = Table::new(&[8, 12, 14]);
+    t.header(&["iter", "time", "pool GB/s"]);
+
+    if backend.is_virtual() || dtype != Dtype::F32 {
+        // Timing-only path (no f32 oracle for other dtypes).
+        for i in 0..rc.iters {
+            let out = run_with_scratch(&*backend, &plan)?;
+            t.row(&[
+                i.to_string(),
+                fmt_time(out.seconds()),
+                format!("{:.2}", bytes as f64 / out.seconds() / 1e9),
+            ]);
+        }
+        return Ok(());
+    }
+
+    // Real f32 data, verified against the oracle after the last iteration.
     let mut rng = SplitMix64::new(1);
     let sends: Vec<Vec<f32>> = (0..rc.spec.nranks)
         .map(|_| {
@@ -185,19 +227,18 @@ fn cmd_run(args: &Args) -> Result<()> {
         .collect();
     let mut recvs: Vec<Vec<f32>> =
         vec![vec![0.0f32; rc.primitive.recv_elems(n, rc.spec.nranks)]; rc.spec.nranks];
-    let t = Table::new(&[8, 12, 14]);
-    t.header(&["iter", "wall", "pool GB/s"]);
     for i in 0..rc.iters {
-        let wall = comm.execute(rc.primitive, &ccl, n, &sends, &mut recvs)?;
-        let plan = plan_collective(rc.primitive, &rc.spec, comm.layout(), &ccl, n)?;
-        let bytes: usize = plan.total_pool_bytes();
+        let out = {
+            let send_views = views_f32(&sends);
+            let mut recv_views = views_f32_mut(&mut recvs);
+            backend.run(&plan, &send_views, &mut recv_views)?
+        };
         t.row(&[
             i.to_string(),
-            fmt_time(wall.as_secs_f64()),
-            format!("{:.2}", bytes as f64 / wall.as_secs_f64() / 1e9),
+            fmt_time(out.seconds()),
+            format!("{:.2}", bytes as f64 / out.seconds() / 1e9),
         ]);
     }
-    // Verify the last iteration.
     let want = oracle::expected(rc.primitive, &sends, n, 0);
     for r in 0..rc.spec.nranks {
         for (g, e) in recvs[r].iter().zip(&want[r]) {
@@ -224,10 +265,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let layout = PoolLayout::from_spec(&spec)?;
         let fab = SimFabric::new(layout);
         let all_plan = plan_collective(primitive, &spec, &layout, &CclVariant::All.config(8), n)?;
-        let t_all = fab.simulate(&all_plan)?.total_time;
+        let t_all = fab.run(&all_plan, &[], &mut [])?.seconds();
         let naive_plan =
             plan_collective(primitive, &spec, &layout, &CclVariant::Naive.config(1), n)?;
-        let t_naive = fab.simulate(&naive_plan)?.total_time;
+        let t_naive = fab.run(&naive_plan, &[], &mut [])?.seconds();
         let t_ib = collective_time(primitive, n * 4, nranks, &ib);
         t.row(&[
             fmt_bytes(bytes),

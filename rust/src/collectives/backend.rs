@@ -1,0 +1,143 @@
+//! The unified backend trait — "one algorithm, two backends" as an API.
+//!
+//! A [`CollectivePlan`] is a backend-independent program. Everything that
+//! can run one implements [`CollectiveBackend`]:
+//!
+//! - [`crate::exec::Communicator`] executes it for real over the shared
+//!   memory pool and reports wall-clock time,
+//! - [`crate::sim::fabric::SimFabric`] times it on the calibrated
+//!   flow-level fabric and reports virtual time.
+//!
+//! Benches, examples, the CLI and the FSDP train loop all drive whichever
+//! backend they are handed through this one interface instead of matching
+//! on the backend type.
+
+use crate::collectives::ops::CollectivePlan;
+use crate::sim::SimReport;
+use crate::tensor::{Tensor, TensorView, TensorViewMut};
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// What running a plan produced: real elapsed time or a virtual-time
+/// report. [`ExecOutcome::seconds`] unifies the two for timing-only code.
+#[derive(Debug, Clone)]
+pub enum ExecOutcome {
+    /// Real execution over a pool; data moved, wall-clock measured.
+    Executed { wall: Duration },
+    /// Virtual-time simulation; no data moved.
+    Simulated { report: SimReport },
+}
+
+impl ExecOutcome {
+    /// Elapsed seconds — wall-clock or virtual, depending on the backend.
+    pub fn seconds(&self) -> f64 {
+        match self {
+            ExecOutcome::Executed { wall } => wall.as_secs_f64(),
+            ExecOutcome::Simulated { report } => report.total_time,
+        }
+    }
+
+    /// Whether the outcome came from a virtual-time backend.
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, ExecOutcome::Simulated { .. })
+    }
+
+    /// The simulator's full report, when the backend was virtual.
+    pub fn sim_report(&self) -> Option<&SimReport> {
+        match self {
+            ExecOutcome::Simulated { report } => Some(report),
+            ExecOutcome::Executed { .. } => None,
+        }
+    }
+}
+
+/// A backend that can run a planned collective.
+pub trait CollectiveBackend {
+    /// Short backend name for logs and tables.
+    fn name(&self) -> &'static str;
+
+    /// Virtual backends only *time* plans; they accept empty buffer slices
+    /// and never touch caller memory.
+    fn is_virtual(&self) -> bool {
+        false
+    }
+
+    /// Run `plan` with one send and one recv view per rank. Views must
+    /// match the plan's dtype and element counts. Virtual backends also
+    /// accept `(&[], &mut [])`.
+    fn run(
+        &self,
+        plan: &CollectivePlan,
+        sends: &[TensorView<'_>],
+        recvs: &mut [TensorViewMut<'_>],
+    ) -> Result<ExecOutcome>;
+}
+
+/// Per-rank buffer validation shared by every backend (and available to
+/// out-of-crate backend implementations): one send and one recv view per
+/// rank, all matching the plan's dtype and Table 2 element counts. Using
+/// this keeps the two built-in backends failing identically on the same
+/// bad input.
+pub fn validate_views(
+    plan: &CollectivePlan,
+    sends: &[TensorView<'_>],
+    recvs: &[TensorViewMut<'_>],
+) -> Result<()> {
+    if sends.len() != plan.nranks || recvs.len() != plan.nranks {
+        bail!("need one send and one recv buffer per rank");
+    }
+    for (r, s) in sends.iter().enumerate() {
+        if s.dtype() != plan.dtype {
+            bail!(
+                "rank {r} send buffer dtype {} does not match plan dtype {}",
+                s.dtype(),
+                plan.dtype
+            );
+        }
+        if s.len() < plan.send_elems {
+            bail!(
+                "rank {r} send buffer too small: {} < {} elems",
+                s.len(),
+                plan.send_elems
+            );
+        }
+    }
+    for (r, d) in recvs.iter().enumerate() {
+        if d.dtype() != plan.dtype {
+            bail!(
+                "rank {r} recv buffer dtype {} does not match plan dtype {}",
+                d.dtype(),
+                plan.dtype
+            );
+        }
+        if d.len() < plan.recv_elems {
+            bail!(
+                "rank {r} recv buffer too small: {} < {} elems",
+                d.len(),
+                plan.recv_elems
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Run a plan on any backend with freshly allocated zeroed buffers — the
+/// shared code path for timing-only runs (benches, sweeps, the CLI's sim
+/// mode). Virtual backends get no buffers at all.
+pub fn run_with_scratch(
+    backend: &dyn CollectiveBackend,
+    plan: &CollectivePlan,
+) -> Result<ExecOutcome> {
+    if backend.is_virtual() {
+        return backend.run(plan, &[], &mut []);
+    }
+    let sends: Vec<Tensor> = (0..plan.nranks)
+        .map(|_| Tensor::zeros(plan.dtype, plan.send_elems))
+        .collect();
+    let mut recvs: Vec<Tensor> = (0..plan.nranks)
+        .map(|_| Tensor::zeros(plan.dtype, plan.recv_elems))
+        .collect();
+    let send_views: Vec<TensorView<'_>> = sends.iter().map(Tensor::view).collect();
+    let mut recv_views: Vec<TensorViewMut<'_>> = recvs.iter_mut().map(Tensor::view_mut).collect();
+    backend.run(plan, &send_views, &mut recv_views)
+}

@@ -8,6 +8,7 @@ use crate::collectives::ops::{CollectivePlan, Op, RankPlan};
 use crate::collectives::{CclConfig, CclVariant, Primitive};
 use crate::interleave::{self, rotated_peers, rotated_peers_desc, BlockAddr};
 use crate::pool::PoolLayout;
+use crate::tensor::Dtype;
 use crate::topology::ClusterSpec;
 use anyhow::{bail, Context, Result};
 
@@ -121,7 +122,7 @@ impl<'a> Ctx<'a> {
             }
             let pool_off = addr.pool_offset + ch.offset;
             plan.read_ops.push(if reduce {
-                Op::ReduceF32 {
+                Op::Reduce {
                     pool_off,
                     dst_off: dst_off + ch.offset,
                     len: ch.len,
@@ -137,15 +138,29 @@ impl<'a> Ctx<'a> {
     }
 }
 
-/// Plan a collective. `n_elems` is the per-rank message size `N` in f32
-/// elements with Table 2 semantics (so e.g. Scatter's root send buffer is
-/// `N × nranks` elements).
+/// Plan an F32 collective (the common case; see [`plan_collective_dtype`]).
 pub fn plan_collective(
     primitive: Primitive,
     spec: &ClusterSpec,
     layout: &PoolLayout,
     cfg: &CclConfig,
     n_elems: usize,
+) -> Result<CollectivePlan> {
+    plan_collective_dtype(primitive, spec, layout, cfg, n_elems, Dtype::F32)
+}
+
+/// Plan a collective. `n_elems` is the per-rank message size `N` in
+/// elements of `dtype` with Table 2 semantics (so e.g. Scatter's root send
+/// buffer is `N × nranks` elements). Any dtype can be planned; reducing
+/// primitives additionally need a reduce engine that supports the dtype at
+/// execution time (the simulator times any plan).
+pub fn plan_collective_dtype(
+    primitive: Primitive,
+    spec: &ClusterSpec,
+    layout: &PoolLayout,
+    cfg: &CclConfig,
+    n_elems: usize,
+    dtype: Dtype,
 ) -> Result<CollectivePlan> {
     spec.validate().map_err(|e| anyhow::anyhow!(e))?;
     if n_elems == 0 {
@@ -173,7 +188,7 @@ pub fn plan_collective(
         );
     }
 
-    let n_bytes = n_elems * 4;
+    let n_bytes = n_elems * dtype.size_bytes();
     let ctx = Ctx {
         spec,
         layout,
@@ -381,6 +396,7 @@ pub fn plan_collective(
         variant: cfg.variant,
         nranks: nr,
         n_elems,
+        dtype,
         send_elems: primitive.send_elems(n_elems, nr),
         recv_elems: primitive.recv_elems(n_elems, nr),
         ranks,
@@ -556,6 +572,31 @@ mod tests {
         assert_eq!(pl.ranks[0].pool_bytes_written(), 0);
         let bad = CclVariant::All.config(2).with_root(7);
         assert!(plan_collective(Primitive::Broadcast, &spec, &layout, &bad, 1024).is_err());
+    }
+
+    #[test]
+    fn dtype_scales_byte_volumes() {
+        let (spec, layout) = setup();
+        let cfg = CclVariant::All.config(4);
+        let n = 3 * 1024;
+        let p32 =
+            plan_collective_dtype(Primitive::AllGather, &spec, &layout, &cfg, n, Dtype::F32)
+                .unwrap();
+        let p8 = plan_collective_dtype(Primitive::AllGather, &spec, &layout, &cfg, n, Dtype::U8)
+            .unwrap();
+        assert_eq!(p8.dtype, Dtype::U8);
+        p8.validate(layout.pool_size()).unwrap();
+        // Same element count, a quarter of the bytes on the wire.
+        let w32: usize = p32.ranks.iter().map(|r| r.pool_bytes_written()).sum();
+        let w8: usize = p8.ranks.iter().map(|r| r.pool_bytes_written()).sum();
+        assert_eq!(w32, 4 * w8);
+        // Reducing primitives are plan-able for 16-bit dtypes too (the
+        // executor's engine decides whether it can reduce them).
+        let p16 =
+            plan_collective_dtype(Primitive::AllReduce, &spec, &layout, &cfg, n, Dtype::Bf16)
+                .unwrap();
+        p16.validate(layout.pool_size()).unwrap();
+        assert_eq!(p16.elem_bytes(), 2);
     }
 
     #[test]

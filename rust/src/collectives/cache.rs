@@ -1,0 +1,206 @@
+//! Plan caching for steady-state loops.
+//!
+//! Training steps issue the same collective shape every iteration (the FSDP
+//! loop's per-step AllGather/ReduceScatter); replanning each time is pure
+//! overhead. [`PlanCache`] memoizes [`plan_collective_dtype`] outputs under
+//! a [`PlanKey`] so repeated launches reuse the immutable [`CollectivePlan`]
+//! behind an `Arc`. Hit/miss counters make the reuse observable (and
+//! testable).
+
+use crate::collectives::builder::plan_collective_dtype;
+use crate::collectives::ops::CollectivePlan;
+use crate::collectives::{CclConfig, CclVariant, Primitive};
+use crate::pool::PoolLayout;
+use crate::tensor::Dtype;
+use crate::topology::ClusterSpec;
+use anyhow::Result;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Everything a plan depends on. Two launches with equal keys are
+/// guaranteed identical plans (planning is deterministic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub primitive: Primitive,
+    pub variant: CclVariant,
+    pub chunks: usize,
+    pub root: usize,
+    pub nranks: usize,
+    pub ndevices: usize,
+    /// Device capacity and doorbell region also shape placement, so they
+    /// are part of the key even though a single communicator never varies
+    /// them.
+    pub device_capacity: usize,
+    pub db_region_size: usize,
+    pub n_elems: usize,
+    pub dtype: Dtype,
+}
+
+impl PlanKey {
+    pub fn new(
+        primitive: Primitive,
+        cfg: &CclConfig,
+        spec: &ClusterSpec,
+        n_elems: usize,
+        dtype: Dtype,
+    ) -> Self {
+        Self {
+            primitive,
+            variant: cfg.variant,
+            chunks: cfg.chunks,
+            root: cfg.root,
+            nranks: spec.nranks,
+            ndevices: spec.ndevices,
+            device_capacity: spec.device_capacity,
+            db_region_size: spec.db_region_size,
+            n_elems,
+            dtype,
+        }
+    }
+
+    /// Reconstruct the config this key was built from.
+    pub fn config(&self) -> CclConfig {
+        let mut cfg = CclConfig::new(self.variant, self.chunks);
+        cfg.root = self.root;
+        cfg
+    }
+}
+
+/// Cache hit/miss counters (monotonic over the cache's lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+}
+
+/// Thread-safe memo of planned collectives.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<PlanKey, Arc<CollectivePlan>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Return the cached plan for this shape, planning it on first use.
+    pub fn get_or_plan(
+        &self,
+        spec: &ClusterSpec,
+        layout: &PoolLayout,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        dtype: Dtype,
+    ) -> Result<Arc<CollectivePlan>> {
+        let key = PlanKey::new(primitive, cfg, spec, n_elems, dtype);
+        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(plan));
+        }
+        // Plan outside the lock: planning can be slow and racing planners
+        // produce identical plans, so the first insert simply wins. The
+        // insert's vacancy decides hit-vs-miss, keeping the invariant
+        // `misses == number of cached shapes` even under concurrent first
+        // launches.
+        let plan = Arc::new(plan_collective_dtype(
+            primitive, spec, layout, cfg, n_elems, dtype,
+        )?);
+        match self.plans.lock().unwrap().entry(key) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Ok(Arc::clone(e.get()))
+            }
+            Entry::Vacant(e) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Ok(Arc::clone(e.insert(plan)))
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of distinct plans currently cached.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached plan (counters are preserved).
+    pub fn clear(&self) {
+        self.plans.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_return_the_same_arc_and_count() {
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let cache = PlanCache::new();
+        let cfg = CclVariant::All.config(4);
+        let a = cache
+            .get_or_plan(&spec, &layout, Primitive::AllGather, &cfg, 3 * 256, Dtype::F32)
+            .unwrap();
+        let b = cache
+            .get_or_plan(&spec, &layout, Primitive::AllGather, &cfg, 3 * 256, Dtype::F32)
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must reuse the plan");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn dtype_and_shape_are_part_of_the_key() {
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let cache = PlanCache::new();
+        let cfg = CclVariant::All.config(4);
+        for (n, d) in [(3 * 256, Dtype::F32), (3 * 256, Dtype::U8), (3 * 512, Dtype::F32)] {
+            cache
+                .get_or_plan(&spec, &layout, Primitive::AllGather, &cfg, n, d)
+                .unwrap();
+        }
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.stats().hits, 0);
+    }
+
+    #[test]
+    fn planning_errors_are_not_cached() {
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let cache = PlanCache::new();
+        let cfg = CclConfig::default_all();
+        // Not divisible by nranks -> plan error.
+        assert!(cache
+            .get_or_plan(&spec, &layout, Primitive::AllToAll, &cfg, 1000, Dtype::F32)
+            .is_err());
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().misses, 0);
+    }
+
+    #[test]
+    fn key_reconstructs_config() {
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let cfg = CclVariant::All.config(8).with_root(2);
+        let key = PlanKey::new(Primitive::Broadcast, &cfg, &spec, 1024, Dtype::F16);
+        assert_eq!(key.config(), cfg);
+        assert_eq!(key.dtype, Dtype::F16);
+    }
+}

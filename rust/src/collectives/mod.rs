@@ -14,17 +14,22 @@
 //! virtual time by [`crate::sim::fabric::SimFabric`]. One algorithm, two
 //! backends.
 
+pub mod backend;
 pub mod builder;
+pub mod cache;
 pub mod oracle;
 pub mod ops;
 pub mod p2p;
 pub mod staged;
 
-pub use builder::plan_collective;
+pub use backend::{run_with_scratch, CollectiveBackend, ExecOutcome};
+pub use builder::{plan_collective, plan_collective_dtype};
+pub use cache::{CacheStats, PlanCache, PlanKey};
 pub use ops::{CollectivePlan, Op, RankPlan};
 pub use p2p::plan_send_recv;
 pub use staged::simulate_staged_allreduce;
 
+use crate::tensor::Dtype;
 use anyhow::{bail, Result};
 
 /// The eight primitives of paper Table 2.
@@ -67,7 +72,7 @@ impl Primitive {
 
     pub fn parse(s: &str) -> Result<Primitive> {
         for p in Self::ALL {
-            if p.name() == s.to_ascii_lowercase() {
+            if p.name().eq_ignore_ascii_case(s) {
                 return Ok(p);
             }
         }
@@ -112,10 +117,15 @@ impl Primitive {
         }
     }
 
-    /// Total bytes a rank moves through the pool (used for bus-bandwidth
-    /// style reporting in the benches).
+    /// Total bytes a rank moves through the pool for F32 messages (used
+    /// for bus-bandwidth style reporting in the benches).
     pub fn bytes_on_wire(&self, n: usize, nranks: usize) -> usize {
-        let b = n * 4;
+        self.bytes_on_wire_dtype(n, nranks, Dtype::F32)
+    }
+
+    /// Dtype-aware [`Primitive::bytes_on_wire`].
+    pub fn bytes_on_wire_dtype(&self, n: usize, nranks: usize, dtype: Dtype) -> usize {
+        let b = n * dtype.size_bytes();
         match self {
             Primitive::AllReduce => b + b * (nranks - 1), // write N, read (nr-1)N
             Primitive::Broadcast => b,                    // root writes N, each reads N
@@ -174,7 +184,7 @@ impl CclVariant {
 }
 
 /// Configuration of one collective invocation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CclConfig {
     pub variant: CclVariant,
     /// Slicing factor: chunks per data block (paper §5.4; 4–8 is best).
@@ -217,6 +227,7 @@ mod tests {
     fn primitive_parse_round_trips() {
         for p in Primitive::ALL {
             assert_eq!(Primitive::parse(p.name()).unwrap(), p);
+            assert_eq!(Primitive::parse(&p.name().to_uppercase()).unwrap(), p);
         }
         assert!(Primitive::parse("sendrecv").is_err());
     }

@@ -8,6 +8,7 @@
 //!   non-overlapping variants) order operations.
 
 use crate::collectives::{CclVariant, Primitive};
+use crate::tensor::Dtype;
 
 /// One operation on a rank's stream. All offsets are **bytes**; `src_off`
 /// indexes the rank's send buffer, `dst_off` its recv buffer, `pool_off`
@@ -32,10 +33,12 @@ pub enum Op {
         dst_off: usize,
         len: usize,
     },
-    /// Retrieve + accumulate f32 elements into the recv buffer (the
+    /// Retrieve + accumulate elements into the recv buffer (the
     /// consumer-side reduction; executed by the reduce engine, which may be
-    /// the AOT Pallas kernel via PJRT).
-    ReduceF32 {
+    /// the AOT Pallas kernel via PJRT). The element type comes from the
+    /// enclosing plan's [`CollectivePlan::dtype`]; engines reject dtypes
+    /// they cannot reduce at execution time.
+    Reduce {
         pool_off: usize,
         dst_off: usize,
         len: usize,
@@ -55,14 +58,14 @@ impl Op {
     /// Bytes this op moves through the pool (0 for sync/local ops).
     pub fn pool_bytes(&self) -> usize {
         match self {
-            Op::Write { len, .. } | Op::Read { len, .. } | Op::ReduceF32 { len, .. } => *len,
+            Op::Write { len, .. } | Op::Read { len, .. } | Op::Reduce { len, .. } => *len,
             _ => 0,
         }
     }
 }
 
 /// The two streams of one rank.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RankPlan {
     pub rank: usize,
     pub write_ops: Vec<Op>,
@@ -88,13 +91,16 @@ impl RankPlan {
 }
 
 /// A fully planned collective: one `RankPlan` per rank plus metadata.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CollectivePlan {
     pub primitive: Primitive,
     pub variant: CclVariant,
     pub nranks: usize,
-    /// Per-rank message size `N` in f32 elements (Table 2 semantics).
+    /// Per-rank message size `N` in elements (Table 2 semantics).
     pub n_elems: usize,
+    /// Element type of every buffer this plan touches; all byte offsets in
+    /// the op streams are multiples of its size.
+    pub dtype: Dtype,
     /// Required send/recv buffer lengths in elements.
     pub send_elems: usize,
     pub recv_elems: usize,
@@ -102,6 +108,11 @@ pub struct CollectivePlan {
 }
 
 impl CollectivePlan {
+    /// Element size in bytes of the plan's dtype.
+    pub fn elem_bytes(&self) -> usize {
+        self.dtype.size_bytes()
+    }
+
     /// Sanity checks shared by tests and the property harness.
     pub fn validate(&self, pool_size: usize) -> Result<(), String> {
         if self.ranks.len() != self.nranks {
@@ -193,7 +204,7 @@ mod tests {
         assert_eq!(Op::Barrier.pool_bytes(), 0);
         assert_eq!(Op::SetDoorbell { db: 3 }.pool_bytes(), 0);
         assert_eq!(
-            Op::ReduceF32 { pool_off: 0, dst_off: 0, len: 64 }.pool_bytes(),
+            Op::Reduce { pool_off: 0, dst_off: 0, len: 64 }.pool_bytes(),
             64
         );
     }
@@ -209,6 +220,7 @@ mod tests {
             variant: CclVariant::All,
             nranks: 2,
             n_elems: 16,
+            dtype: Dtype::F32,
             send_elems: 16,
             recv_elems: 32,
             ranks: vec![p0, p1],
@@ -226,6 +238,7 @@ mod tests {
             variant: CclVariant::All,
             nranks: 1,
             n_elems: 4,
+            dtype: Dtype::F32,
             send_elems: 4,
             recv_elems: 4,
             ranks: vec![p0],

@@ -82,6 +82,7 @@ pub fn plan_send_recv(
         variant: cfg.variant,
         nranks: spec.nranks,
         n_elems,
+        dtype: crate::tensor::Dtype::F32,
         send_elems: n_elems,
         recv_elems: n_elems,
         ranks,
@@ -108,7 +109,10 @@ mod tests {
         rng.fill_f32(&mut payload);
         let sends = vec![vec![0.0f32; n], vec![0.0f32; n], payload.clone()];
         let mut recvs = vec![vec![0.0f32; n]; 3];
-        comm.run_plan(&plan, &sends, &mut recvs).unwrap();
+        let send_views = crate::tensor::views_f32(&sends);
+        let mut recv_views = crate::tensor::views_f32_mut(&mut recvs);
+        comm.run_plan_views(&plan, &send_views, &mut recv_views).unwrap();
+        drop(recv_views);
         assert_eq!(recvs[0], payload, "payload must arrive intact");
         assert!(recvs[1].iter().all(|v| *v == 0.0), "bystander untouched");
     }

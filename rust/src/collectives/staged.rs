@@ -13,11 +13,13 @@
 //! ablation bench (`fig9_collectives` prints it; `hotpath` measures it for
 //! real) shows where the trade crosses over.
 
+use crate::collectives::backend::CollectiveBackend;
 use crate::collectives::builder::plan_collective;
 use crate::collectives::{CclConfig, Primitive};
 use crate::exec::Communicator;
 use crate::pool::PoolLayout;
 use crate::sim::SimFabric;
+use crate::tensor::{views_f32, views_f32_mut};
 use crate::topology::ClusterSpec;
 use anyhow::{ensure, Result};
 use std::time::Duration;
@@ -36,7 +38,7 @@ pub fn simulate_staged_allreduce(
     let fab = SimFabric::new(*layout);
     let rs = plan_collective(Primitive::ReduceScatter, spec, layout, cfg, n_elems)?;
     let ag = plan_collective(Primitive::AllGather, spec, layout, cfg, n_elems / spec.nranks)?;
-    Ok(fab.simulate(&rs)?.total_time + fab.simulate(&ag)?.total_time)
+    Ok(fab.run(&rs, &[], &mut [])?.seconds() + fab.run(&ag, &[], &mut [])?.seconds())
 }
 
 impl Communicator {
@@ -50,14 +52,21 @@ impl Communicator {
         let nr = self.spec().nranks;
         let n = bufs.first().map(|b| b.len()).unwrap_or(0);
         ensure!(n % nr == 0, "buffer length {n} not divisible by {nr} ranks");
+        let seg = n / nr;
         let sends: Vec<Vec<f32>> = bufs.to_vec();
         let t0 = std::time::Instant::now();
         // Phase 1: each rank ends up owning the reduced slice r.
-        let slices = self.reduce_scatter_f32(&sends, cfg)?;
-        // Phase 2: share the reduced slices back out.
-        let gathered = self.all_gather_f32(&slices, cfg)?;
-        for (r, buf) in bufs.iter_mut().enumerate() {
-            buf.copy_from_slice(&gathered[r][..n]);
+        let mut slices = vec![vec![0.0f32; seg]; nr];
+        {
+            let send_views = views_f32(&sends);
+            let mut recv_views = views_f32_mut(&mut slices);
+            self.collective(Primitive::ReduceScatter, cfg, n, &send_views, &mut recv_views)?;
+        }
+        // Phase 2: gather the reduced slices straight back into `bufs`.
+        {
+            let send_views = views_f32(&slices);
+            let mut recv_views = views_f32_mut(bufs);
+            self.collective(Primitive::AllGather, cfg, seg, &send_views, &mut recv_views)?;
         }
         Ok(t0.elapsed())
     }

@@ -16,6 +16,7 @@
 //! ```
 
 use crate::collectives::{CclVariant, Primitive};
+use crate::tensor::Dtype;
 use crate::topology::ClusterSpec;
 use crate::util::size::parse_size;
 use anyhow::{bail, Context, Result};
@@ -120,8 +121,10 @@ impl RunConfig {
         })
     }
 
-    pub fn n_elems(&self) -> usize {
-        (self.msg_bytes / 4 / self.spec.nranks).max(1) * self.spec.nranks
+    /// Element count for `msg_bytes` of `dtype`, forced to
+    /// nranks-divisibility (the RS/A2A precondition).
+    pub fn n_elems(&self, dtype: Dtype) -> usize {
+        (self.msg_bytes / dtype.size_bytes() / self.spec.nranks).max(1) * self.spec.nranks
     }
 }
 
@@ -141,7 +144,9 @@ mod tests {
         assert_eq!(rc.primitive, Primitive::AllToAll);
         assert_eq!(rc.variant, CclVariant::Naive);
         assert_eq!(rc.msg_bytes, 2 << 20);
-        assert_eq!(rc.n_elems() % 4, 0);
+        assert_eq!(rc.n_elems(Dtype::F32) % 4, 0);
+        // Same byte budget, element count scales with the dtype.
+        assert_eq!(rc.n_elems(Dtype::U8), 4 * rc.n_elems(Dtype::F32));
     }
 
     #[test]

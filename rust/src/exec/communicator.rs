@@ -1,27 +1,32 @@
 //! `Communicator` — the user-facing handle that executes planned collectives
 //! for real over a shared memory pool.
+//!
+//! The v2 surface is dtype-generic and backend-unified:
+//!
+//! - [`Communicator::collective`] plans (through the internal [`PlanCache`])
+//!   and runs one collective over [`TensorView`] buffers,
+//! - [`Communicator::rank`] hands out per-rank [`crate::exec::RankComm`]
+//!   handles with `begin`/`wait` nonblocking group launches,
+//! - the [`CollectiveBackend`] impl runs a pre-built plan — the same trait
+//!   [`crate::sim::fabric::SimFabric`] implements for virtual time.
+//!
+//! The v1 `&[Vec<f32>]` entry points (`execute`, `all_reduce_f32`, ...)
+//! remain as thin deprecated shims.
 
+use crate::collectives::backend::{validate_views, CollectiveBackend, ExecOutcome};
+use crate::collectives::cache::{PlanCache, PlanKey};
 use crate::collectives::ops::{CollectivePlan, Op};
-use crate::collectives::{builder::plan_collective, CclConfig, Primitive};
+use crate::collectives::{CclConfig, Primitive};
 use crate::doorbell::{DoorbellSet, WaitPolicy};
+use crate::exec::rank::GroupShared;
 use crate::exec::reduce_engine::{ReduceEngine, ScalarReduceEngine};
 use crate::pool::{PoolLayout, ShmPool};
+use crate::tensor::{self, Dtype, TensorView, TensorViewMut};
 use crate::topology::ClusterSpec;
 use anyhow::{bail, Context, Result};
-use std::sync::{Arc, Barrier};
+use std::collections::HashMap;
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
-
-/// View an f32 slice as bytes (both directions are safe for f32: every bit
-/// pattern is a valid f32 and alignment only decreases).
-fn f32_bytes(s: &[f32]) -> &[u8] {
-    // SAFETY: see above.
-    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4) }
-}
-
-fn f32_bytes_mut(s: &mut [f32]) -> &mut [u8] {
-    // SAFETY: see above.
-    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut u8, s.len() * 4) }
-}
 
 /// A live communicator over a shared CXL-style pool.
 pub struct Communicator {
@@ -30,6 +35,16 @@ pub struct Communicator {
     pool: Arc<ShmPool>,
     wait_policy: WaitPolicy,
     engine: Arc<dyn ReduceEngine>,
+    cache: PlanCache,
+    /// In-flight nonblocking groups, keyed by plan shape (see
+    /// [`crate::exec::rank`]).
+    pub(super) groups: Mutex<HashMap<PlanKey, Arc<GroupShared>>>,
+    /// Serializes plan launches: the pool has a single doorbell region
+    /// (reset at launch start) and plans may reuse overlapping pool
+    /// offsets, so at most one collective executes at a time. Concurrent
+    /// `wait()`s of different groups queue here instead of corrupting
+    /// each other. Cross-launch pipelining is ROADMAP work.
+    launch_lock: Mutex<()>,
 }
 
 impl Communicator {
@@ -39,13 +54,7 @@ impl Communicator {
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
         let layout = PoolLayout::from_spec(spec)?;
         let pool = Arc::new(ShmPool::anon(layout.pool_size())?);
-        Ok(Self {
-            spec: spec.clone(),
-            layout,
-            pool,
-            wait_policy: WaitPolicy::default(),
-            engine: Arc::new(ScalarReduceEngine),
-        })
+        Ok(Self::assemble(spec.clone(), layout, pool))
     }
 
     /// File-backed pool (DAX-style, paper Listing 1) at `path`.
@@ -53,13 +62,20 @@ impl Communicator {
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
         let layout = PoolLayout::from_spec(spec)?;
         let pool = Arc::new(ShmPool::dax_file(path, layout.pool_size())?);
-        Ok(Self {
-            spec: spec.clone(),
+        Ok(Self::assemble(spec.clone(), layout, pool))
+    }
+
+    fn assemble(spec: ClusterSpec, layout: PoolLayout, pool: Arc<ShmPool>) -> Self {
+        Self {
+            spec,
             layout,
             pool,
             wait_policy: WaitPolicy::default(),
             engine: Arc::new(ScalarReduceEngine),
-        })
+            cache: PlanCache::new(),
+            groups: Mutex::new(HashMap::new()),
+            launch_lock: Mutex::new(()),
+        }
     }
 
     /// Swap the reduction backend (e.g. the AOT Pallas kernel engine).
@@ -86,56 +102,65 @@ impl Communicator {
         &self.pool
     }
 
-    /// Plan and execute in one call. `n_elems` has Table 2 semantics.
-    pub fn execute(
+    /// The communicator's plan cache (hit/miss counters included), for
+    /// observability in benches and the steady-state tests.
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Plan a collective through the cache: repeated steady-state calls
+    /// with the same `(primitive, cfg, n_elems, dtype)` reuse the plan.
+    pub fn plan(
         &self,
         primitive: Primitive,
         cfg: &CclConfig,
         n_elems: usize,
-        sends: &[Vec<f32>],
-        recvs: &mut [Vec<f32>],
-    ) -> Result<Duration> {
-        let plan = plan_collective(primitive, &self.spec, &self.layout, cfg, n_elems)?;
-        self.run_plan(&plan, sends, recvs)
+        dtype: Dtype,
+    ) -> Result<Arc<CollectivePlan>> {
+        self.cache
+            .get_or_plan(&self.spec, &self.layout, primitive, cfg, n_elems, dtype)
     }
 
-    /// Execute a pre-built plan. Returns the wall-clock duration of the
-    /// collective (all streams joined).
-    pub fn run_plan(
+    /// Plan (cached) and execute one collective over typed views. The
+    /// dtype is taken from the buffers; all views must agree.
+    pub fn collective(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        sends: &[TensorView<'_>],
+        recvs: &mut [TensorViewMut<'_>],
+    ) -> Result<Duration> {
+        let dtype = match sends.first() {
+            Some(v) => v.dtype(),
+            None => bail!("collective needs one send buffer per rank (got none)"),
+        };
+        let plan = self.plan(primitive, cfg, n_elems, dtype)?;
+        self.run_plan_views(&plan, sends, recvs)
+    }
+
+    /// Execute a pre-built plan over typed views. Returns the wall-clock
+    /// duration of the collective (all streams joined).
+    pub fn run_plan_views(
         &self,
         plan: &CollectivePlan,
-        sends: &[Vec<f32>],
-        recvs: &mut [Vec<f32>],
+        sends: &[TensorView<'_>],
+        recvs: &mut [TensorViewMut<'_>],
     ) -> Result<Duration> {
         let nr = self.spec.nranks;
+        let esize = plan.elem_bytes();
         if plan.nranks != nr {
             bail!("plan is for {} ranks, communicator has {nr}", plan.nranks);
         }
-        if sends.len() != nr || recvs.len() != nr {
-            bail!("need one send and one recv buffer per rank");
-        }
-        for (r, s) in sends.iter().enumerate() {
-            if s.len() < plan.send_elems {
-                bail!(
-                    "rank {r} send buffer too small: {} < {} elems",
-                    s.len(),
-                    plan.send_elems
-                );
-            }
-        }
-        for (r, d) in recvs.iter_mut().enumerate() {
-            if d.len() < plan.recv_elems {
-                bail!(
-                    "rank {r} recv buffer too small: {} < {} elems",
-                    d.len(),
-                    plan.recv_elems
-                );
-            }
-            d[..plan.recv_elems].fill(0.0);
+        validate_views(plan, sends, recvs)?;
+        for d in recvs.iter_mut() {
+            d.as_bytes_mut()[..plan.recv_elems * esize].fill(0);
         }
         plan.validate(self.layout.pool_size())
             .map_err(|e| anyhow::anyhow!("invalid plan: {e}"))?;
 
+        // One launch at a time over the shared pool (see `launch_lock`).
+        let _launch = self.launch_lock.lock().unwrap();
         // Quiesce + reset doorbells before any stream starts.
         DoorbellSet::new(&self.pool, self.layout).reset_all()?;
 
@@ -157,8 +182,9 @@ impl Communicator {
                 let layout = self.layout;
                 let policy = self.wait_policy;
                 let engine = Arc::clone(&self.engine);
-                let send_w: &[f32] = send;
-                let send_r: &[f32] = send;
+                let dtype = plan.dtype;
+                let send_bytes: &[u8] = send.as_bytes();
+                let recv_bytes: &mut [u8] = recv.as_bytes_mut();
                 let write_ops = &rank_plan.write_ops;
                 let read_ops = &rank_plan.read_ops;
                 let rank = rank_plan.rank;
@@ -173,7 +199,8 @@ impl Communicator {
                         policy,
                         barrier: &wb,
                         engine: None,
-                        send: send_w,
+                        dtype,
+                        send: send_bytes,
                         recv: None,
                     })
                 }));
@@ -187,8 +214,9 @@ impl Communicator {
                         policy,
                         barrier: &rb,
                         engine: Some(&*engine),
-                        send: send_r,
-                        recv: Some(recv),
+                        dtype,
+                        send: send_bytes,
+                        recv: Some(recv_bytes),
                     })
                 }));
             }
@@ -207,33 +235,73 @@ impl Communicator {
         Ok(start.elapsed())
     }
 
-    // ---- convenience wrappers -------------------------------------------
+    // ---- deprecated v1 shims --------------------------------------------
+
+    /// Plan and execute in one call over whole-cluster f32 buffers.
+    #[deprecated(
+        note = "use `collective` with TensorView buffers, or per-rank \
+                `rank(r).begin(..)` handles"
+    )]
+    pub fn execute(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        sends: &[Vec<f32>],
+        recvs: &mut [Vec<f32>],
+    ) -> Result<Duration> {
+        let send_views = tensor::views_f32(sends);
+        let mut recv_views = tensor::views_f32_mut(recvs);
+        self.collective(primitive, cfg, n_elems, &send_views, &mut recv_views)
+    }
+
+    /// Execute a pre-built plan over whole-cluster f32 buffers.
+    #[deprecated(note = "use `run_plan_views` (or the `CollectiveBackend::run` trait method)")]
+    pub fn run_plan(
+        &self,
+        plan: &CollectivePlan,
+        sends: &[Vec<f32>],
+        recvs: &mut [Vec<f32>],
+    ) -> Result<Duration> {
+        let send_views = tensor::views_f32(sends);
+        let mut recv_views = tensor::views_f32_mut(recvs);
+        self.run_plan_views(plan, &send_views, &mut recv_views)
+    }
 
     /// In-place AllReduce: `bufs[r]` is rank r's contribution on input and
     /// the reduced result on output.
+    #[deprecated(note = "use `collective(Primitive::AllReduce, ..)` with TensorView buffers")]
     pub fn all_reduce_f32(&self, bufs: &mut [Vec<f32>], cfg: &CclConfig) -> Result<Duration> {
         let n = bufs.first().map(|b| b.len()).unwrap_or(0);
         let sends: Vec<Vec<f32>> = bufs.to_vec();
-        let d = self.execute(Primitive::AllReduce, cfg, n, &sends, bufs)?;
-        Ok(d)
+        let send_views = tensor::views_f32(&sends);
+        let mut recv_views = tensor::views_f32_mut(bufs);
+        self.collective(Primitive::AllReduce, cfg, n, &send_views, &mut recv_views)
     }
 
     /// In-place Broadcast of `bufs[cfg.root]` to every rank.
+    #[deprecated(note = "use `collective(Primitive::Broadcast, ..)` with TensorView buffers")]
     pub fn broadcast_f32(&self, bufs: &mut [Vec<f32>], cfg: &CclConfig) -> Result<Duration> {
         let n = bufs.first().map(|b| b.len()).unwrap_or(0);
         let sends: Vec<Vec<f32>> = bufs.to_vec();
-        self.execute(Primitive::Broadcast, cfg, n, &sends, bufs)
+        let send_views = tensor::views_f32(&sends);
+        let mut recv_views = tensor::views_f32_mut(bufs);
+        self.collective(Primitive::Broadcast, cfg, n, &send_views, &mut recv_views)
     }
 
     /// AllGather: returns each rank's concatenated view.
+    #[deprecated(note = "use `collective(Primitive::AllGather, ..)` with TensorView buffers")]
     pub fn all_gather_f32(&self, sends: &[Vec<f32>], cfg: &CclConfig) -> Result<Vec<Vec<f32>>> {
         let n = sends.first().map(|b| b.len()).unwrap_or(0);
         let mut recvs = vec![vec![0.0f32; n * self.spec.nranks]; self.spec.nranks];
-        self.execute(Primitive::AllGather, cfg, n, sends, &mut recvs)?;
+        let send_views = tensor::views_f32(sends);
+        let mut recv_views = tensor::views_f32_mut(&mut recvs);
+        self.collective(Primitive::AllGather, cfg, n, &send_views, &mut recv_views)?;
         Ok(recvs)
     }
 
     /// ReduceScatter: returns each rank's reduced segment (N/nranks elems).
+    #[deprecated(note = "use `collective(Primitive::ReduceScatter, ..)` with TensorView buffers")]
     pub fn reduce_scatter_f32(
         &self,
         sends: &[Vec<f32>],
@@ -241,16 +309,37 @@ impl Communicator {
     ) -> Result<Vec<Vec<f32>>> {
         let n = sends.first().map(|b| b.len()).unwrap_or(0);
         let mut recvs = vec![vec![0.0f32; n / self.spec.nranks]; self.spec.nranks];
-        self.execute(Primitive::ReduceScatter, cfg, n, sends, &mut recvs)?;
+        let send_views = tensor::views_f32(sends);
+        let mut recv_views = tensor::views_f32_mut(&mut recvs);
+        self.collective(Primitive::ReduceScatter, cfg, n, &send_views, &mut recv_views)?;
         Ok(recvs)
     }
 
     /// AllToAll: returns each rank's transposed segments.
+    #[deprecated(note = "use `collective(Primitive::AllToAll, ..)` with TensorView buffers")]
     pub fn all_to_all_f32(&self, sends: &[Vec<f32>], cfg: &CclConfig) -> Result<Vec<Vec<f32>>> {
         let n = sends.first().map(|b| b.len()).unwrap_or(0);
         let mut recvs = vec![vec![0.0f32; n]; self.spec.nranks];
-        self.execute(Primitive::AllToAll, cfg, n, sends, &mut recvs)?;
+        let send_views = tensor::views_f32(sends);
+        let mut recv_views = tensor::views_f32_mut(&mut recvs);
+        self.collective(Primitive::AllToAll, cfg, n, &send_views, &mut recv_views)?;
         Ok(recvs)
+    }
+}
+
+impl CollectiveBackend for Communicator {
+    fn name(&self) -> &'static str {
+        "shm-pool"
+    }
+
+    fn run(
+        &self,
+        plan: &CollectivePlan,
+        sends: &[TensorView<'_>],
+        recvs: &mut [TensorViewMut<'_>],
+    ) -> Result<ExecOutcome> {
+        let wall = self.run_plan_views(plan, sends, recvs)?;
+        Ok(ExecOutcome::Executed { wall })
     }
 }
 
@@ -263,8 +352,9 @@ struct StreamCtx<'a> {
     policy: WaitPolicy,
     barrier: &'a Barrier,
     engine: Option<&'a dyn ReduceEngine>,
-    send: &'a [f32],
-    recv: Option<&'a mut [f32]>,
+    dtype: Dtype,
+    send: &'a [u8],
+    recv: Option<&'a mut [u8]>,
 }
 
 /// Execute one stream's ops in order. On error, keep honouring the
@@ -292,13 +382,16 @@ fn run_stream(mut ctx: StreamCtx<'_>) -> Result<()> {
 }
 
 fn exec_op(ctx: &mut StreamCtx<'_>, dbs: &DoorbellSet<'_>, op: &Op) -> Result<()> {
+    let esize = ctx.dtype.size_bytes();
     match *op {
         Op::Write { pool_off, src_off, len } => {
-            let src = f32_bytes(ctx.send);
-            if src_off + len > src.len() {
-                bail!("send buffer overrun: [{src_off}, +{len}) of {}", src.len());
+            if src_off + len > ctx.send.len() {
+                bail!(
+                    "send buffer overrun: [{src_off}, +{len}) of {}",
+                    ctx.send.len()
+                );
             }
-            ctx.pool.write_bytes(pool_off, &src[src_off..src_off + len])
+            ctx.pool.write_bytes(pool_off, &ctx.send[src_off..src_off + len])
         }
         Op::SetDoorbell { db } => dbs.ring(db),
         Op::WaitDoorbell { db } => dbs.wait(db, &ctx.policy),
@@ -307,43 +400,40 @@ fn exec_op(ctx: &mut StreamCtx<'_>, dbs: &DoorbellSet<'_>, op: &Op) -> Result<()
                 .recv
                 .as_deref_mut()
                 .ok_or_else(|| anyhow::anyhow!("Read op on write stream"))?;
-            let dst = f32_bytes_mut(recv);
-            if dst_off + len > dst.len() {
-                bail!("recv buffer overrun: [{dst_off}, +{len}) of {}", dst.len());
+            if dst_off + len > recv.len() {
+                bail!("recv buffer overrun: [{dst_off}, +{len}) of {}", recv.len());
             }
-            ctx.pool.read_bytes(pool_off, &mut dst[dst_off..dst_off + len])
+            ctx.pool.read_bytes(pool_off, &mut recv[dst_off..dst_off + len])
         }
-        Op::ReduceF32 { pool_off, dst_off, len } => {
+        Op::Reduce { pool_off, dst_off, len } => {
+            let dtype = ctx.dtype;
             let engine = ctx
                 .engine
-                .ok_or_else(|| anyhow::anyhow!("ReduceF32 op on write stream"))?;
+                .ok_or_else(|| anyhow::anyhow!("Reduce op on write stream"))?;
             let recv = ctx
                 .recv
                 .as_deref_mut()
-                .ok_or_else(|| anyhow::anyhow!("ReduceF32 op on write stream"))?;
-            if dst_off % 4 != 0 || len % 4 != 0 {
-                bail!("unaligned reduce: dst_off {dst_off}, len {len}");
+                .ok_or_else(|| anyhow::anyhow!("Reduce op on write stream"))?;
+            if dst_off % esize != 0 || len % esize != 0 {
+                bail!("unaligned reduce for {dtype}: dst_off {dst_off}, len {len}");
             }
-            let lo = dst_off / 4;
-            let n = len / 4;
-            if lo + n > recv.len() {
+            if dst_off + len > recv.len() {
                 bail!("recv buffer overrun in reduce");
             }
-            engine.reduce_into(ctx.pool, pool_off, &mut recv[lo..lo + n])
+            engine.reduce_into_dtype(ctx.pool, pool_off, &mut recv[dst_off..dst_off + len], dtype)
         }
         Op::CopyLocal { src_off, dst_off, len } => {
             let recv = ctx
                 .recv
                 .as_deref_mut()
                 .ok_or_else(|| anyhow::anyhow!("CopyLocal op on write stream"))?;
-            if src_off % 4 != 0 || dst_off % 4 != 0 || len % 4 != 0 {
-                bail!("unaligned CopyLocal");
+            if src_off % esize != 0 || dst_off % esize != 0 || len % esize != 0 {
+                bail!("unaligned CopyLocal for {}", ctx.dtype);
             }
-            let (s0, d0, n) = (src_off / 4, dst_off / 4, len / 4);
-            if s0 + n > ctx.send.len() || d0 + n > recv.len() {
+            if src_off + len > ctx.send.len() || dst_off + len > recv.len() {
                 bail!("CopyLocal out of bounds");
             }
-            recv[d0..d0 + n].copy_from_slice(&ctx.send[s0..s0 + n]);
+            recv[dst_off..dst_off + len].copy_from_slice(&ctx.send[src_off..src_off + len]);
             Ok(())
         }
         Op::Barrier => {
@@ -357,6 +447,7 @@ fn exec_op(ctx: &mut StreamCtx<'_>, dbs: &DoorbellSet<'_>, op: &Op) -> Result<()
 mod tests {
     use super::*;
     use crate::collectives::CclVariant;
+    use crate::tensor::{views_f32, views_f32_mut};
 
     fn comm(nranks: usize) -> Communicator {
         Communicator::shm(&ClusterSpec::new(nranks, 6, 4 << 20)).unwrap()
@@ -365,17 +456,29 @@ mod tests {
     #[test]
     fn allreduce_smoke() {
         let c = comm(3);
-        let mut bufs: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32 + 1.0; 256]).collect();
-        c.all_reduce_f32(&mut bufs, &CclConfig::default_all()).unwrap();
-        for b in &bufs {
+        let sends: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32 + 1.0; 256]).collect();
+        let mut recvs = vec![vec![0.0f32; 256]; 3];
+        let send_views = views_f32(&sends);
+        let mut recv_views = views_f32_mut(&mut recvs);
+        c.collective(
+            Primitive::AllReduce,
+            &CclConfig::default_all(),
+            256,
+            &send_views,
+            &mut recv_views,
+        )
+        .unwrap();
+        drop(recv_views);
+        for b in &recvs {
             assert!(b.iter().all(|v| *v == 6.0));
         }
     }
 
     #[test]
-    fn broadcast_smoke() {
+    fn broadcast_smoke_via_deprecated_shim() {
         let c = comm(3);
         let mut bufs = vec![vec![7.0f32; 64], vec![0.0; 64], vec![0.0; 64]];
+        #[allow(deprecated)]
         c.broadcast_f32(&mut bufs, &CclVariant::Naive.config(1)).unwrap();
         assert!(bufs.iter().all(|b| b.iter().all(|v| *v == 7.0)));
     }
@@ -385,8 +488,16 @@ mod tests {
         let c = comm(3);
         let sends = vec![vec![0.0f32; 16]; 2];
         let mut recvs = vec![vec![0.0f32; 16]; 3];
+        let send_views = views_f32(&sends);
+        let mut recv_views = views_f32_mut(&mut recvs);
         assert!(c
-            .execute(Primitive::AllToAll, &CclConfig::default_all(), 15, &sends, &mut recvs)
+            .collective(
+                Primitive::AllToAll,
+                &CclConfig::default_all(),
+                15,
+                &send_views,
+                &mut recv_views,
+            )
             .is_err());
     }
 
@@ -395,9 +506,97 @@ mod tests {
         let c = comm(3);
         let sends = vec![vec![1.0f32; 12]; 3];
         let mut recvs = vec![vec![0.0f32; 12]; 3]; // allgather needs 36
+        let send_views = views_f32(&sends);
+        let mut recv_views = views_f32_mut(&mut recvs);
         let err = c
-            .execute(Primitive::AllGather, &CclConfig::default_all(), 12, &sends, &mut recvs)
+            .collective(
+                Primitive::AllGather,
+                &CclConfig::default_all(),
+                12,
+                &send_views,
+                &mut recv_views,
+            )
             .unwrap_err();
         assert!(err.to_string().contains("recv buffer too small"));
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let c = comm(3);
+        let plan = c
+            .plan(Primitive::AllGather, &CclConfig::default_all(), 12, Dtype::U8)
+            .unwrap();
+        let sends = vec![vec![1.0f32; 12]; 3];
+        let mut recvs = vec![vec![0.0f32; 36]; 3];
+        let send_views = views_f32(&sends);
+        let mut recv_views = views_f32_mut(&mut recvs);
+        let err = c
+            .run_plan_views(&plan, &send_views, &mut recv_views)
+            .unwrap_err();
+        assert!(err.to_string().contains("dtype"), "{err}");
+    }
+
+    #[test]
+    fn u8_alltoall_moves_raw_bytes() {
+        let c = comm(3);
+        let n = 3 * 64;
+        let sends: Vec<Vec<u8>> = (0..3u8).map(|r| vec![r + 1; n]).collect();
+        let mut recvs: Vec<Vec<u8>> = vec![vec![0u8; n]; 3];
+        let send_views: Vec<TensorView<'_>> =
+            sends.iter().map(|b| TensorView::u8(b)).collect();
+        let mut recv_views: Vec<TensorViewMut<'_>> =
+            recvs.iter_mut().map(|b| TensorViewMut::u8(b)).collect();
+        c.collective(
+            Primitive::AllToAll,
+            &CclConfig::default_all(),
+            n,
+            &send_views,
+            &mut recv_views,
+        )
+        .unwrap();
+        drop(recv_views);
+        let seg = n / 3;
+        for r in 0..3 {
+            for s in 0..3 {
+                assert!(
+                    recvs[r][s * seg..(s + 1) * seg].iter().all(|v| *v == s as u8 + 1),
+                    "rank {r} segment {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reducing_primitive_with_u8_plan_errors_clearly() {
+        let c = comm(3);
+        let n = 3 * 64;
+        let sends: Vec<Vec<u8>> = vec![vec![1u8; n]; 3];
+        let mut recvs: Vec<Vec<u8>> = vec![vec![0u8; n]; 3];
+        let send_views: Vec<TensorView<'_>> =
+            sends.iter().map(|b| TensorView::u8(b)).collect();
+        let mut recv_views: Vec<TensorViewMut<'_>> =
+            recvs.iter_mut().map(|b| TensorViewMut::u8(b)).collect();
+        let err = c
+            .collective(
+                Primitive::AllReduce,
+                &CclConfig::default_all(),
+                n,
+                &send_views,
+                &mut recv_views,
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("only f32"), "{err:#}");
+    }
+
+    #[test]
+    fn plan_cache_counts_steady_state_hits() {
+        let c = comm(3);
+        let cfg = CclConfig::default_all();
+        for _ in 0..3 {
+            let _ = c.plan(Primitive::AllGather, &cfg, 3 * 128, Dtype::F32).unwrap();
+        }
+        let stats = c.plan_cache().stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 2);
     }
 }

@@ -9,7 +9,9 @@
 //! barrier between phases.
 
 pub mod communicator;
+pub mod rank;
 pub mod reduce_engine;
 
 pub use communicator::Communicator;
+pub use rank::{PendingOp, RankComm};
 pub use reduce_engine::{PjrtReduceEngine, ReduceEngine, ScalarReduceEngine};

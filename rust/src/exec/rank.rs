@@ -1,0 +1,495 @@
+//! Per-rank communicator handles and nonblocking group launches.
+//!
+//! Real CCLs don't take whole-cluster buffer arrays: each rank holds its
+//! own communicator handle and enqueues its part of a collective, with
+//! `ncclGroupStart`/`ncclGroupEnd` tying the per-rank calls into one
+//! launch. This module is that surface for the thread-rank executor:
+//!
+//! ```no_run
+//! # use cxl_ccl::prelude::*;
+//! # let comm = Communicator::shm(&ClusterSpec::new(2, 6, 4 << 20)).unwrap();
+//! # let cfg = CclConfig::default_all();
+//! let pending: Vec<PendingOp<'_>> = (0..2)
+//!     .map(|r| {
+//!         comm.rank(r)
+//!             .unwrap()
+//!             .begin(
+//!                 Primitive::AllReduce,
+//!                 &cfg,
+//!                 1024,
+//!                 Tensor::from_f32(&vec![1.0; 1024]),
+//!                 Tensor::zeros(Dtype::F32, 1024),
+//!             )
+//!             .unwrap()
+//!     })
+//!     .collect();
+//! for p in pending {
+//!     let (result, _wall) = p.wait().unwrap();
+//! }
+//! ```
+//!
+//! `begin` never blocks: it resolves the plan through the communicator's
+//! [`crate::collectives::PlanCache`] and parks the rank's owned buffers in
+//! the group. The group *launches* lazily — the first `wait()` after every
+//! rank has begun executes the whole plan (all rank threads), and every
+//! other `wait()` just picks up its result. Waiting before the group is
+//! complete is a usage error and fails fast instead of hanging.
+
+use crate::collectives::cache::PlanKey;
+use crate::collectives::ops::CollectivePlan;
+use crate::collectives::{CclConfig, Primitive};
+use crate::exec::Communicator;
+use crate::tensor::{Tensor, TensorView, TensorViewMut};
+use anyhow::{bail, ensure, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One rank's handle onto a [`Communicator`].
+pub struct RankComm<'c> {
+    comm: &'c Communicator,
+    rank: usize,
+}
+
+/// A launched-but-not-awaited per-rank collective.
+#[must_use = "a PendingOp does nothing until wait()ed"]
+pub struct PendingOp<'c> {
+    comm: &'c Communicator,
+    group: Arc<GroupShared>,
+    rank: usize,
+}
+
+/// Shared state of one nonblocking group (one plan shape, one launch).
+pub(super) struct GroupShared {
+    key: PlanKey,
+    plan: Arc<CollectivePlan>,
+    state: Mutex<GroupState>,
+}
+
+struct GroupState {
+    sends: Vec<Option<Tensor>>,
+    recvs: Vec<Option<Tensor>>,
+    joined: usize,
+    /// `None` until the first post-completion `wait()` runs the plan;
+    /// errors are stringified so every waiter can observe them.
+    outcome: Option<Result<Duration, String>>,
+}
+
+impl GroupShared {
+    fn new(key: PlanKey, plan: Arc<CollectivePlan>) -> Self {
+        let nr = plan.nranks;
+        Self {
+            key,
+            plan,
+            state: Mutex::new(GroupState {
+                sends: (0..nr).map(|_| None).collect(),
+                recvs: (0..nr).map(|_| None).collect(),
+                joined: 0,
+                outcome: None,
+            }),
+        }
+    }
+}
+
+impl Communicator {
+    /// Per-rank handle; `rank` must be within the communicator's span.
+    pub fn rank(&self, rank: usize) -> Result<RankComm<'_>> {
+        ensure!(
+            rank < self.spec().nranks,
+            "rank {rank} out of range ({} ranks)",
+            self.spec().nranks
+        );
+        Ok(RankComm { comm: self, rank })
+    }
+}
+
+impl<'c> RankComm<'c> {
+    pub fn id(&self) -> usize {
+        self.rank
+    }
+
+    /// Begin this rank's part of a collective (nonblocking).
+    ///
+    /// `send`/`recv` are owned, dtype-tagged buffers sized per Table 2
+    /// (`send_elems`/`recv_elems` of the resolved plan). Ranks calling
+    /// `begin` with the same `(primitive, cfg, n_elems, dtype)` join the
+    /// same group; the group becomes launchable when all ranks have begun.
+    pub fn begin(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<PendingOp<'c>> {
+        ensure!(
+            send.dtype() == recv.dtype(),
+            "send dtype {} does not match recv dtype {}",
+            send.dtype(),
+            recv.dtype()
+        );
+        let dtype = send.dtype();
+        let plan = self.comm.plan(primitive, cfg, n_elems, dtype)?;
+        ensure!(
+            send.len() >= plan.send_elems,
+            "rank {} send tensor too small: {} < {} elems",
+            self.rank,
+            send.len(),
+            plan.send_elems
+        );
+        ensure!(
+            recv.len() >= plan.recv_elems,
+            "rank {} recv tensor too small: {} < {} elems",
+            self.rank,
+            recv.len(),
+            plan.recv_elems
+        );
+
+        let key = PlanKey::new(primitive, cfg, self.comm.spec(), n_elems, dtype);
+        let group = loop {
+            let group = Arc::clone(
+                self.comm
+                    .groups
+                    .lock()
+                    .unwrap()
+                    .entry(key)
+                    .or_insert_with(|| Arc::new(GroupShared::new(key, Arc::clone(&plan)))),
+            );
+            let mut st = group.state.lock().unwrap();
+            if st.joined == plan.nranks {
+                // Lost a race with the rank that completed this group: it
+                // detached the key (inside its state critical section, so
+                // by the time we observe completion the map entry is
+                // gone). Retry — the lookup now starts a fresh group.
+                drop(st);
+                continue;
+            }
+            if st.joined == 0 {
+                // Empty group: either fresh (still mapped) or retired by
+                // the last member's withdrawal while we fetched the Arc.
+                // Joining a retired group would strand this rank — retry.
+                let still_mapped = self
+                    .comm
+                    .groups
+                    .lock()
+                    .unwrap()
+                    .get(&key)
+                    .is_some_and(|g| Arc::ptr_eq(g, &group));
+                if !still_mapped {
+                    drop(st);
+                    continue;
+                }
+            }
+            ensure!(
+                st.sends[self.rank].is_none(),
+                "rank {} already has a pending op in this group",
+                self.rank
+            );
+            st.sends[self.rank] = Some(send);
+            st.recvs[self.rank] = Some(recv);
+            st.joined += 1;
+            if st.joined == plan.nranks {
+                // Detach the complete group so the next begin() with the
+                // same shape starts a fresh one (steady-state loops). The
+                // ptr_eq guard keeps a concurrent retry's fresh group safe.
+                let mut groups = self.comm.groups.lock().unwrap();
+                if groups.get(&key).is_some_and(|g| Arc::ptr_eq(g, &group)) {
+                    groups.remove(&key);
+                }
+            }
+            drop(st);
+            break group;
+        };
+        Ok(PendingOp {
+            comm: self.comm,
+            group,
+            rank: self.rank,
+        })
+    }
+}
+
+impl PendingOp<'_> {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The plan this launch will run (already cache-resolved).
+    pub fn plan(&self) -> &CollectivePlan {
+        &self.group.plan
+    }
+
+    /// Block until the group's collective has run; returns this rank's
+    /// recv tensor and the launch's wall-clock duration.
+    ///
+    /// The first waiter of a complete group executes the plan (all rank
+    /// threads); the rest pick up their results. Waiting on an incomplete
+    /// group fails fast instead of deadlocking.
+    pub fn wait(self) -> Result<(Tensor, Duration)> {
+        let plan = &self.group.plan;
+        let mut st = self.group.state.lock().unwrap();
+        if st.outcome.is_none() {
+            ensure!(
+                st.joined == plan.nranks,
+                "collective group incomplete: {}/{} ranks have begun \
+                 (every rank must begin() before any wait())",
+                st.joined,
+                plan.nranks
+            );
+            let sends: Vec<Tensor> = st.sends.iter_mut().map(|s| s.take().unwrap()).collect();
+            let mut recvs: Vec<Tensor> = st.recvs.iter_mut().map(|r| r.take().unwrap()).collect();
+            let result = {
+                let send_views: Vec<TensorView<'_>> = sends.iter().map(Tensor::view).collect();
+                let mut recv_views: Vec<TensorViewMut<'_>> =
+                    recvs.iter_mut().map(Tensor::view_mut).collect();
+                self.comm.run_plan_views(plan, &send_views, &mut recv_views)
+            };
+            match result {
+                Ok(wall) => {
+                    for (slot, t) in st.recvs.iter_mut().zip(recvs) {
+                        *slot = Some(t);
+                    }
+                    st.outcome = Some(Ok(wall));
+                }
+                Err(e) => st.outcome = Some(Err(format!("{e:#}"))),
+            }
+        }
+        match st.outcome.as_ref().unwrap() {
+            Ok(wall) => {
+                let wall = *wall;
+                let tensor = st.recvs[self.rank]
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("rank {} result already taken", self.rank))?;
+                Ok((tensor, wall))
+            }
+            Err(msg) => bail!("collective group failed: {msg}"),
+        }
+    }
+}
+
+impl Drop for PendingOp<'_> {
+    /// Withdraw this rank's slot from a group that has not become
+    /// launchable, so an abandoned partial group (a mid-group `begin`
+    /// failure, a premature `wait`) never wedges the shape: the caller can
+    /// simply retry `begin` on every rank. Once the group is complete its
+    /// parked buffers stay put — the remaining ranks can still `wait()`.
+    fn drop(&mut self) {
+        let mut st = self.group.state.lock().unwrap();
+        let launchable = st.joined == self.group.plan.nranks;
+        if st.outcome.is_some() || launchable || st.sends[self.rank].is_none() {
+            return;
+        }
+        st.sends[self.rank] = None;
+        st.recvs[self.rank] = None;
+        st.joined -= 1;
+        if st.joined == 0 {
+            // Last member gone: retire the empty group from the map (it is
+            // still registered there — only *complete* groups detach).
+            // Same state→groups lock order as completion-detach in begin().
+            let mut groups = self.comm.groups.lock().unwrap();
+            if groups
+                .get(&self.group.key)
+                .is_some_and(|g| Arc::ptr_eq(g, &self.group))
+            {
+                groups.remove(&self.group.key);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CclConfig;
+    use crate::tensor::Dtype;
+    use crate::topology::ClusterSpec;
+
+    fn comm(nranks: usize) -> Communicator {
+        Communicator::shm(&ClusterSpec::new(nranks, 6, 4 << 20)).unwrap()
+    }
+
+    #[test]
+    fn group_allreduce_end_to_end() {
+        let c = comm(3);
+        let cfg = CclConfig::default_all();
+        let n = 256;
+        let pending: Vec<PendingOp<'_>> = (0..3)
+            .map(|r| {
+                c.rank(r)
+                    .unwrap()
+                    .begin(
+                        Primitive::AllReduce,
+                        &cfg,
+                        n,
+                        Tensor::from_f32(&vec![r as f32 + 1.0; n]),
+                        Tensor::zeros(Dtype::F32, n),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for p in pending {
+            let (out, wall) = p.wait().unwrap();
+            assert!(out.to_f32().unwrap().iter().all(|v| *v == 6.0));
+            assert!(wall.as_secs_f64() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn wait_before_group_complete_fails_fast() {
+        let c = comm(3);
+        let cfg = CclConfig::default_all();
+        let p = c
+            .rank(0)
+            .unwrap()
+            .begin(
+                Primitive::AllGather,
+                &cfg,
+                64,
+                Tensor::zeros(Dtype::F32, 64),
+                Tensor::zeros(Dtype::F32, 64 * 3),
+            )
+            .unwrap();
+        let err = p.wait().unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+    }
+
+    #[test]
+    fn double_begin_same_rank_rejected() {
+        let c = comm(2);
+        let cfg = CclConfig::default_all();
+        let r0 = c.rank(0).unwrap();
+        let _p = r0
+            .begin(
+                Primitive::AllGather,
+                &cfg,
+                64,
+                Tensor::zeros(Dtype::F32, 64),
+                Tensor::zeros(Dtype::F32, 128),
+            )
+            .unwrap();
+        let err = r0
+            .begin(
+                Primitive::AllGather,
+                &cfg,
+                64,
+                Tensor::zeros(Dtype::F32, 64),
+                Tensor::zeros(Dtype::F32, 128),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("pending"), "{err}");
+    }
+
+    #[test]
+    fn rank_bounds_and_dtype_mismatch_rejected() {
+        let c = comm(2);
+        assert!(c.rank(2).is_err());
+        let err = c
+            .rank(0)
+            .unwrap()
+            .begin(
+                Primitive::AllGather,
+                &CclConfig::default_all(),
+                64,
+                Tensor::zeros(Dtype::F32, 64),
+                Tensor::zeros(Dtype::U8, 128),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("dtype"), "{err}");
+    }
+
+    #[test]
+    fn undersized_tensors_rejected_at_begin() {
+        let c = comm(2);
+        let err = c
+            .rank(0)
+            .unwrap()
+            .begin(
+                Primitive::AllGather,
+                &CclConfig::default_all(),
+                64,
+                Tensor::zeros(Dtype::F32, 64),
+                Tensor::zeros(Dtype::F32, 64), // needs 128
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("too small"), "{err}");
+    }
+
+    #[test]
+    fn abandoned_partial_group_releases_the_shape() {
+        let c = comm(2);
+        let cfg = CclConfig::default_all();
+        let begin0 = |r: usize| {
+            c.rank(r).unwrap().begin(
+                Primitive::AllReduce,
+                &cfg,
+                128,
+                Tensor::from_f32(&vec![1.0; 128]),
+                Tensor::zeros(Dtype::F32, 128),
+            )
+        };
+        // Rank 0 joins, then the caller abandons the iteration (e.g. rank
+        // 1's buffers failed validation) — dropping the op must withdraw
+        // the slot instead of wedging the shape forever.
+        let p0 = begin0(0).unwrap();
+        drop(p0);
+        // Full retry succeeds.
+        let pending: Vec<PendingOp<'_>> = (0..2).map(|r| begin0(r).unwrap()).collect();
+        for p in pending {
+            let (out, _) = p.wait().unwrap();
+            assert!(out.to_f32().unwrap().iter().all(|v| *v == 2.0));
+        }
+    }
+
+    #[test]
+    fn premature_wait_withdraws_only_the_waiter() {
+        let c = comm(2);
+        let cfg = CclConfig::default_all();
+        let begin0 = |r: usize| {
+            c.rank(r).unwrap().begin(
+                Primitive::AllGather,
+                &cfg,
+                64,
+                Tensor::from_f32(&vec![r as f32; 64]),
+                Tensor::zeros(Dtype::F32, 128),
+            )
+        };
+        let p0 = begin0(0).unwrap();
+        // Waiting before rank 1 begins fails fast — and, because the wait
+        // consumed the op, withdraws rank 0 so the shape is reusable.
+        assert!(p0.wait().unwrap_err().to_string().contains("incomplete"));
+        // Both ranks can rejoin and complete.
+        let p0 = begin0(0).unwrap();
+        let p1 = begin0(1).unwrap();
+        let (out, _) = p1.wait().unwrap();
+        assert_eq!(out.to_f32().unwrap()[64], 1.0);
+        p0.wait().unwrap();
+    }
+
+    #[test]
+    fn steady_state_groups_detach_and_recur() {
+        let c = comm(2);
+        let cfg = CclConfig::default_all();
+        for round in 0..3 {
+            let pending: Vec<PendingOp<'_>> = (0..2)
+                .map(|r| {
+                    c.rank(r)
+                        .unwrap()
+                        .begin(
+                            Primitive::AllReduce,
+                            &cfg,
+                            128,
+                            Tensor::from_f32(&vec![1.0; 128]),
+                            Tensor::zeros(Dtype::F32, 128),
+                        )
+                        .unwrap()
+                })
+                .collect();
+            for p in pending {
+                let (out, _) = p.wait().unwrap();
+                assert!(out.to_f32().unwrap().iter().all(|v| *v == 2.0), "round {round}");
+            }
+        }
+        // One plan, planned once, hit on every later begin.
+        let stats = c.plan_cache().stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 5);
+    }
+}

@@ -12,15 +12,59 @@
 //!   the L3 hot path.
 
 use crate::pool::ShmPool;
-use anyhow::Result;
+use crate::tensor::Dtype;
+use anyhow::{bail, Result};
 
-/// A backend that accumulates pool-resident f32 data into a local buffer.
+/// A backend that accumulates pool-resident data into a local buffer.
 pub trait ReduceEngine: Send + Sync {
     /// `acc[i] += pool_f32[pool_off/4 + i]` for all i.
     fn reduce_into(&self, pool: &ShmPool, pool_off: usize, acc: &mut [f32]) -> Result<()>;
 
     /// Human-readable name for logs/benches.
     fn name(&self) -> &'static str;
+
+    /// Dtype-dispatching entry point the executor calls for `Op::Reduce`.
+    ///
+    /// `acc` is the raw recv-buffer window (`len % dtype.size_bytes() == 0`
+    /// is checked by the caller). The provided implementation reduces F32
+    /// through [`ReduceEngine::reduce_into`] and rejects every other dtype
+    /// with a clear error — plans carrying those dtypes remain valid for
+    /// data movement and simulation, they just cannot *execute* a reducing
+    /// primitive until an engine supports them.
+    fn reduce_into_dtype(
+        &self,
+        pool: &ShmPool,
+        pool_off: usize,
+        acc: &mut [u8],
+        dtype: Dtype,
+    ) -> Result<()> {
+        match dtype {
+            Dtype::F32 => {
+                // SAFETY: f32 accepts every bit pattern; `align_to_mut`
+                // yields a non-empty prefix/suffix only when the buffer is
+                // not 4-byte aligned, in which case we stage through a
+                // copy instead of reinterpreting.
+                let (pre, mid, post) = unsafe { acc.align_to_mut::<f32>() };
+                if pre.is_empty() && post.is_empty() {
+                    return self.reduce_into(pool, pool_off, mid);
+                }
+                let mut tmp: Vec<f32> = acc
+                    .chunks_exact(4)
+                    .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                self.reduce_into(pool, pool_off, &mut tmp)?;
+                for (c, v) in acc.chunks_exact_mut(4).zip(&tmp) {
+                    c.copy_from_slice(&v.to_ne_bytes());
+                }
+                Ok(())
+            }
+            other => bail!(
+                "reduce engine {:?} supports only f32 reductions; a {other} plan can be \
+                 planned and simulated but not executed with a reducing primitive",
+                self.name()
+            ),
+        }
+    }
 }
 
 /// Plain scalar/auto-vectorized accumulation.
@@ -102,5 +146,38 @@ mod tests {
         ScalarReduceEngine.reduce_into(&pool, 256, &mut acc).unwrap();
         assert_eq!(acc, vec![1.5, 2.5, -1.0]);
         assert_eq!(ScalarReduceEngine.name(), "scalar");
+    }
+
+    #[test]
+    fn dtyped_entry_reduces_f32_bytes() {
+        let pool = ShmPool::anon(4096).unwrap();
+        let vals = [2.0f32, -4.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        pool.write_bytes(128, &bytes).unwrap();
+        let mut acc = vec![1.0f32; 2];
+        {
+            let acc_bytes = unsafe {
+                std::slice::from_raw_parts_mut(acc.as_mut_ptr() as *mut u8, 8)
+            };
+            ScalarReduceEngine
+                .reduce_into_dtype(&pool, 128, acc_bytes, Dtype::F32)
+                .unwrap();
+        }
+        assert_eq!(acc, vec![3.0, -3.0]);
+    }
+
+    #[test]
+    fn dtyped_entry_rejects_non_f32() {
+        let pool = ShmPool::anon(4096).unwrap();
+        let mut acc = vec![0u8; 8];
+        for d in [Dtype::F16, Dtype::Bf16, Dtype::U8] {
+            let err = ScalarReduceEngine
+                .reduce_into_dtype(&pool, 0, &mut acc, d)
+                .unwrap_err();
+            assert!(
+                err.to_string().contains("only f32"),
+                "{d}: {err}"
+            );
+        }
     }
 }

@@ -22,8 +22,43 @@
 //!
 //! let topo = ClusterSpec::new(4, 6, 64 << 20); // 4 ranks, 6 CXL devices
 //! let comm = Communicator::shm(&topo).unwrap();
-//! let mut bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 1024]).collect();
-//! comm.all_reduce_f32(&mut bufs, &CclVariant::All.config(4)).unwrap();
+//! let cfg = CclVariant::All.config(4);
+//! // Per-rank nonblocking handles (ncclGroupStart/End-style): each rank
+//! // begins its part; the group launches once all four have joined, and
+//! // repeated launches of the same shape reuse the cached plan.
+//! let pending: Vec<PendingOp<'_>> = (0..4)
+//!     .map(|r| {
+//!         comm.rank(r)
+//!             .unwrap()
+//!             .begin(
+//!                 Primitive::AllReduce,
+//!                 &cfg,
+//!                 1024,
+//!                 Tensor::from_f32(&vec![r as f32; 1024]),
+//!                 Tensor::zeros(Dtype::F32, 1024),
+//!             )
+//!             .unwrap()
+//!     })
+//!     .collect();
+//! for p in pending {
+//!     let (out, _wall) = p.wait().unwrap();
+//!     assert!(out.to_f32().unwrap().iter().all(|v| *v == 6.0));
+//! }
+//! ```
+//!
+//! The same plan runs on either backend through [`collectives::CollectiveBackend`]:
+//!
+//! ```no_run
+//! # use cxl_ccl::prelude::*;
+//! # let topo = ClusterSpec::new(4, 6, 64 << 20);
+//! # let comm = Communicator::shm(&topo).unwrap();
+//! let plan = comm
+//!     .plan(Primitive::AllGather, &CclConfig::default_all(), 1024, Dtype::F32)
+//!     .unwrap();
+//! let fabric = SimFabric::new(*comm.layout());
+//! let real = run_with_scratch(&comm, &plan).unwrap(); // wall-clock over the pool
+//! let virt = run_with_scratch(&fabric, &plan).unwrap(); // calibrated virtual time
+//! println!("{} vs {}", real.seconds(), virt.seconds());
 //! ```
 //!
 //! See `examples/quickstart.rs` for a complete runnable version.
@@ -41,14 +76,19 @@ pub mod interleave;
 pub mod pool;
 pub mod runtime;
 pub mod sim;
+pub mod tensor;
 pub mod topology;
 pub mod train;
 pub mod util;
 
 /// Convenience re-exports for the common API surface.
 pub mod prelude {
-    pub use crate::collectives::{CclConfig, CclVariant, Primitive};
-    pub use crate::exec::Communicator;
+    pub use crate::collectives::{
+        plan_collective, plan_collective_dtype, run_with_scratch, CacheStats, CclConfig,
+        CclVariant, CollectiveBackend, CollectivePlan, ExecOutcome, PlanCache, Primitive,
+    };
+    pub use crate::exec::{Communicator, PendingOp, RankComm};
     pub use crate::sim::fabric::SimFabric;
+    pub use crate::tensor::{Dtype, Tensor, TensorView, TensorViewMut};
     pub use crate::topology::ClusterSpec;
 }

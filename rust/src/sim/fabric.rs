@@ -10,9 +10,11 @@
 //! The input is the *identical* [`CollectivePlan`] the real executor runs —
 //! one algorithm, two backends.
 
+use crate::collectives::backend::{validate_views, CollectiveBackend, ExecOutcome};
 use crate::collectives::ops::{CollectivePlan, Op};
 use crate::pool::PoolLayout;
 use crate::sim::constants as k;
+use crate::tensor::{TensorView, TensorViewMut};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
@@ -248,7 +250,7 @@ impl SimFabric {
                                     s.post_cost = 0.0;
                                     s.phase = Phase::Busy(t + p.memcpy_overhead);
                                 }
-                                Op::ReduceF32 { pool_off, len, .. } => {
+                                Op::Reduce { pool_off, len, .. } => {
                                     s.segs = self.device_segments(pool_off, len);
                                     s.post_cost = len as f64 / p.reduce_bw;
                                     s.phase = Phase::Busy(t + p.memcpy_overhead);
@@ -378,6 +380,35 @@ impl SimFabric {
             device_bytes,
             peak_device_flows: peak_flows,
         })
+    }
+}
+
+impl CollectiveBackend for SimFabric {
+    fn name(&self) -> &'static str {
+        "sim-fabric"
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+
+    /// Time the plan in virtual time. Buffers are never read or written;
+    /// pass `(&[], &mut [])`, or real per-rank views (counts and dtype are
+    /// then validated so backend-generic code fails the same way it would
+    /// on the real executor).
+    fn run(
+        &self,
+        plan: &CollectivePlan,
+        sends: &[TensorView<'_>],
+        recvs: &mut [TensorViewMut<'_>],
+    ) -> Result<ExecOutcome> {
+        if !sends.is_empty() || !recvs.is_empty() {
+            // Same checks (and error strings) as the real executor, so
+            // backend-generic code fails identically on either backend.
+            validate_views(plan, sends, recvs)?;
+        }
+        let report = self.simulate(plan)?;
+        Ok(ExecOutcome::Simulated { report })
     }
 }
 
@@ -539,11 +570,32 @@ mod tests {
             variant: CclVariant::All,
             nranks: 2,
             n_elems: 4,
+            dtype: crate::tensor::Dtype::F32,
             send_elems: 4,
             recv_elems: 4,
             ranks: vec![r0, RankPlan::new(1)],
         };
         let err = fab.simulate(&plan).unwrap_err();
         assert!(err.to_string().contains("deadlock"));
+    }
+
+    #[test]
+    fn backend_trait_runs_without_buffers() {
+        let (spec, layout, fab) = setup(3);
+        let plan = plan_collective(
+            Primitive::AllGather,
+            &spec,
+            &layout,
+            &CclConfig::default_all(),
+            3 << 14,
+        )
+        .unwrap();
+        let out = fab.run(&plan, &[], &mut []).unwrap();
+        assert!(out.is_virtual());
+        assert!(out.seconds() > 0.0);
+        assert_eq!(
+            out.sim_report().unwrap().total_time,
+            fab.simulate(&plan).unwrap().total_time
+        );
     }
 }

@@ -1,0 +1,359 @@
+//! Dtype-carrying tensor buffers — the typed surface every collective entry
+//! point takes since the v2 API redesign.
+//!
+//! Three shapes, mirroring how real CCLs describe device buffers:
+//!
+//! - [`TensorView`] / [`TensorViewMut`] — borrowed, dtype-tagged views over
+//!   caller-owned memory (the `sendbuff`/`recvbuff` + `ncclDataType_t` pair
+//!   of an `ncclAllReduce` call),
+//! - [`Tensor`] — an owned buffer, used by the nonblocking per-rank handle
+//!   API ([`crate::exec::RankComm::begin`]) where the launch outlives the
+//!   caller's stack frame.
+//!
+//! All plan offsets are bytes; the element size of the plan's [`Dtype`] is
+//! threaded through the planner's stride math, so any dtype whose size
+//! divides the 4-byte chunk alignment works for data-movement collectives.
+//! Reductions are engine-dependent: the scalar engine implements `F32` and
+//! rejects the rest with a clear error (see
+//! [`crate::exec::reduce_engine::ReduceEngine::reduce_into_dtype`]).
+
+use anyhow::{bail, Result};
+
+/// Element type of a collective buffer (the `ncclDataType_t` analogue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// 32-bit IEEE float — the only dtype the scalar reduce engine sums.
+    F32,
+    /// 16-bit IEEE float (payload-only here: movable, not yet reducible).
+    F16,
+    /// bfloat16 (payload-only: movable, not yet reducible).
+    Bf16,
+    /// Raw bytes / uint8.
+    U8,
+}
+
+impl Dtype {
+    pub const ALL: [Dtype; 4] = [Dtype::F32, Dtype::F16, Dtype::Bf16, Dtype::U8];
+
+    /// Element size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F16 | Dtype::Bf16 => 2,
+            Dtype::U8 => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F16 => "f16",
+            Dtype::Bf16 => "bf16",
+            Dtype::U8 => "u8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Dtype> {
+        for d in Self::ALL {
+            if d.name().eq_ignore_ascii_case(s) {
+                return Ok(d);
+            }
+        }
+        bail!("unknown dtype {s:?} (expected one of f32|f16|bf16|u8)")
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Borrowed, dtype-tagged read-only buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    bytes: &'a [u8],
+    dtype: Dtype,
+}
+
+impl<'a> TensorView<'a> {
+    /// Tag a raw byte buffer with a dtype. The length must be a whole
+    /// number of elements.
+    pub fn from_bytes(bytes: &'a [u8], dtype: Dtype) -> Result<Self> {
+        if bytes.len() % dtype.size_bytes() != 0 {
+            bail!(
+                "buffer of {} bytes is not a whole number of {dtype} elements",
+                bytes.len()
+            );
+        }
+        Ok(Self { bytes, dtype })
+    }
+
+    /// View an f32 slice (always valid: every f32 has a byte representation
+    /// and the alignment requirement only decreases).
+    pub fn f32(data: &'a [f32]) -> Self {
+        // SAFETY: see above.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        Self {
+            bytes,
+            dtype: Dtype::F32,
+        }
+    }
+
+    /// View a byte slice as a U8 tensor.
+    pub fn u8(data: &'a [u8]) -> Self {
+        Self {
+            bytes: data,
+            dtype: Dtype::U8,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Length in elements.
+    pub fn len(&self) -> usize {
+        self.bytes.len() / self.dtype.size_bytes()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn as_bytes(&self) -> &'a [u8] {
+        self.bytes
+    }
+}
+
+/// Borrowed, dtype-tagged mutable buffer.
+#[derive(Debug)]
+pub struct TensorViewMut<'a> {
+    bytes: &'a mut [u8],
+    dtype: Dtype,
+}
+
+impl<'a> TensorViewMut<'a> {
+    /// Tag a raw mutable byte buffer with a dtype.
+    pub fn from_bytes(bytes: &'a mut [u8], dtype: Dtype) -> Result<Self> {
+        if bytes.len() % dtype.size_bytes() != 0 {
+            bail!(
+                "buffer of {} bytes is not a whole number of {dtype} elements",
+                bytes.len()
+            );
+        }
+        Ok(Self { bytes, dtype })
+    }
+
+    /// View a mutable f32 slice.
+    pub fn f32(data: &'a mut [f32]) -> Self {
+        // SAFETY: as for `TensorView::f32`; exclusive access is inherited
+        // from the &mut borrow.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, data.len() * 4)
+        };
+        Self {
+            bytes,
+            dtype: Dtype::F32,
+        }
+    }
+
+    /// View a mutable byte slice as a U8 tensor.
+    pub fn u8(data: &'a mut [u8]) -> Self {
+        Self {
+            bytes: data,
+            dtype: Dtype::U8,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Length in elements.
+    pub fn len(&self) -> usize {
+        self.bytes.len() / self.dtype.size_bytes()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        self.bytes
+    }
+
+    pub fn as_bytes_mut(&mut self) -> &mut [u8] {
+        self.bytes
+    }
+}
+
+/// Owned, dtype-tagged buffer (for launches that outlive the caller's
+/// frame, e.g. the nonblocking per-rank handle API).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    bytes: Vec<u8>,
+    dtype: Dtype,
+}
+
+impl Tensor {
+    /// Zero-initialized tensor of `n_elems` elements.
+    pub fn zeros(dtype: Dtype, n_elems: usize) -> Self {
+        Self {
+            bytes: vec![0u8; n_elems * dtype.size_bytes()],
+            dtype,
+        }
+    }
+
+    /// Copy an f32 slice into an owned F32 tensor.
+    pub fn from_f32(data: &[f32]) -> Self {
+        Self {
+            bytes: TensorView::f32(data).as_bytes().to_vec(),
+            dtype: Dtype::F32,
+        }
+    }
+
+    /// Copy a byte slice into an owned U8 tensor.
+    pub fn from_u8(data: &[u8]) -> Self {
+        Self {
+            bytes: data.to_vec(),
+            dtype: Dtype::U8,
+        }
+    }
+
+    /// Take ownership of raw bytes under a dtype tag.
+    pub fn from_bytes(bytes: Vec<u8>, dtype: Dtype) -> Result<Self> {
+        if bytes.len() % dtype.size_bytes() != 0 {
+            bail!(
+                "buffer of {} bytes is not a whole number of {dtype} elements",
+                bytes.len()
+            );
+        }
+        Ok(Self { bytes, dtype })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Length in elements.
+    pub fn len(&self) -> usize {
+        self.bytes.len() / self.dtype.size_bytes()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView {
+            bytes: &self.bytes,
+            dtype: self.dtype,
+        }
+    }
+
+    pub fn view_mut(&mut self) -> TensorViewMut<'_> {
+        TensorViewMut {
+            bytes: &mut self.bytes,
+            dtype: self.dtype,
+        }
+    }
+
+    /// Copy out as f32 values (F32 tensors only).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor dtype is {}, not f32", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Wrap a slice of f32 buffers as one view per rank (migration helper for
+/// the ubiquitous `&[Vec<f32>]` call sites).
+pub fn views_f32(bufs: &[Vec<f32>]) -> Vec<TensorView<'_>> {
+    bufs.iter().map(|b| TensorView::f32(b)).collect()
+}
+
+/// Mutable counterpart of [`views_f32`].
+pub fn views_f32_mut(bufs: &mut [Vec<f32>]) -> Vec<TensorViewMut<'_>> {
+    bufs.iter_mut().map(|b| TensorViewMut::f32(b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_sizes_match_spec() {
+        assert_eq!(Dtype::F32.size_bytes(), 4);
+        assert_eq!(Dtype::F16.size_bytes(), 2);
+        assert_eq!(Dtype::Bf16.size_bytes(), 2);
+        assert_eq!(Dtype::U8.size_bytes(), 1);
+    }
+
+    #[test]
+    fn dtype_parse_round_trips() {
+        for d in Dtype::ALL {
+            assert_eq!(Dtype::parse(d.name()).unwrap(), d);
+            assert_eq!(Dtype::parse(&d.name().to_uppercase()).unwrap(), d);
+        }
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn f32_view_round_trips() {
+        let data = [1.0f32, -2.5, 3.25];
+        let v = TensorView::f32(&data);
+        assert_eq!(v.dtype(), Dtype::F32);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.as_bytes().len(), 12);
+        let t = Tensor::from_f32(&data);
+        assert_eq!(t.to_f32().unwrap(), data.to_vec());
+    }
+
+    #[test]
+    fn mut_view_writes_through() {
+        let mut data = vec![0.0f32; 2];
+        {
+            let mut v = TensorViewMut::f32(&mut data);
+            let b = 7.5f32.to_ne_bytes();
+            v.as_bytes_mut()[..4].copy_from_slice(&b);
+        }
+        assert_eq!(data[0], 7.5);
+        assert_eq!(data[1], 0.0);
+    }
+
+    #[test]
+    fn from_bytes_rejects_ragged_lengths() {
+        let b = [0u8; 6];
+        assert!(TensorView::from_bytes(&b, Dtype::F32).is_err());
+        assert!(TensorView::from_bytes(&b, Dtype::F16).is_ok());
+        assert!(TensorView::from_bytes(&b, Dtype::U8).is_ok());
+        assert!(Tensor::from_bytes(vec![0u8; 7], Dtype::Bf16).is_err());
+    }
+
+    #[test]
+    fn owned_tensor_views() {
+        let mut t = Tensor::zeros(Dtype::U8, 8);
+        assert_eq!(t.len(), 8);
+        t.view_mut().as_bytes_mut()[3] = 9;
+        assert_eq!(t.view().as_bytes()[3], 9);
+        assert!(t.to_f32().is_err(), "u8 tensor must refuse f32 export");
+        let t16 = Tensor::zeros(Dtype::Bf16, 5);
+        assert_eq!(t16.as_bytes().len(), 10);
+        assert_eq!(t16.len(), 5);
+    }
+}

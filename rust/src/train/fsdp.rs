@@ -15,12 +15,11 @@
 //! 1.11× end-to-end claim comes from.
 
 use crate::baseline::{collective_time, IbParams};
-use crate::collectives::builder::plan_collective;
-use crate::collectives::{CclConfig, CclVariant, Primitive};
+use crate::collectives::{CclConfig, CclVariant, CollectiveBackend, Primitive};
 use crate::exec::Communicator;
-use crate::pool::PoolLayout;
 use crate::runtime::{AdamUpdate, ModelStep, PjrtRuntime};
 use crate::sim::SimFabric;
+use crate::tensor::{views_f32, views_f32_mut, Dtype};
 use crate::topology::ClusterSpec;
 use crate::train::data::Corpus;
 use crate::util::SplitMix64;
@@ -75,7 +74,6 @@ pub struct FsdpTrainer {
     step_exe: ModelStep,
     adam: AdamUpdate,
     comm: Communicator,
-    spec: ClusterSpec,
     cfg: TrainConfig,
     nranks: usize,
     n_params: usize,
@@ -138,7 +136,6 @@ impl FsdpTrainer {
             step_exe,
             adam,
             comm,
-            spec,
             cfg,
             nranks,
             n_params,
@@ -162,26 +159,19 @@ impl FsdpTrainer {
     }
 
     /// Virtual-time communication cost of one step's collectives (CXL
-    /// fabric vs InfiniBand), for the §5.5 comparison.
+    /// fabric vs InfiniBand), for the §5.5 comparison. The plans come from
+    /// the communicator's cache (shared with the real launches), so the
+    /// steady-state loop replans nothing.
     pub fn sim_step_comm(&self) -> Result<(f64, f64)> {
-        let layout = PoolLayout::from_spec(&self.spec)?;
-        let fab = SimFabric::new(layout);
+        let fab = SimFabric::new(*self.comm.layout());
         let ccl = self.cfg.variant.config(self.cfg.chunks);
-        let ag = plan_collective(
-            Primitive::AllGather,
-            &self.spec,
-            &layout,
-            &ccl,
-            self.shard_len,
-        )?;
-        let rs = plan_collective(
-            Primitive::ReduceScatter,
-            &self.spec,
-            &layout,
-            &ccl,
-            self.padded,
-        )?;
-        let cxl = fab.simulate(&ag)?.total_time + fab.simulate(&rs)?.total_time;
+        let ag = self
+            .comm
+            .plan(Primitive::AllGather, &ccl, self.shard_len, Dtype::F32)?;
+        let rs = self
+            .comm
+            .plan(Primitive::ReduceScatter, &ccl, self.padded, Dtype::F32)?;
+        let cxl = fab.run(&ag, &[], &mut [])?.seconds() + fab.run(&rs, &[], &mut [])?.seconds();
         let ib = IbParams::default();
         let ib_t = collective_time(Primitive::AllGather, self.shard_len * 4, self.nranks, &ib)
             + collective_time(Primitive::ReduceScatter, self.padded * 4, self.nranks, &ib);
@@ -194,8 +184,19 @@ impl FsdpTrainer {
         let ccl: CclConfig = self.cfg.variant.config(self.cfg.chunks);
 
         // (1) AllGather parameter shards -> full (padded) flat params.
+        // Both collectives resolve their plan through the communicator's
+        // cache and launch through the unified backend trait; from step 2
+        // on the loop never replans.
+        let ag_plan = self
+            .comm
+            .plan(Primitive::AllGather, &ccl, self.shard_len, Dtype::F32)?;
         let t0 = Instant::now();
-        let gathered = self.comm.all_gather_f32(&self.shards, &ccl)?;
+        let mut gathered = vec![vec![0.0f32; self.padded]; self.nranks];
+        {
+            let send_views = views_f32(&self.shards);
+            let mut recv_views = views_f32_mut(&mut gathered);
+            self.comm.run(&ag_plan, &send_views, &mut recv_views)?;
+        }
         let mut comm_secs = t0.elapsed().as_secs_f64();
 
         // (2) fwd/bwd per rank on its own micro-batch.
@@ -220,8 +221,16 @@ impl FsdpTrainer {
         let mut compute_secs = t1.elapsed().as_secs_f64();
 
         // (3) ReduceScatter gradients -> per-rank reduced shard.
+        let rs_plan = self
+            .comm
+            .plan(Primitive::ReduceScatter, &ccl, self.padded, Dtype::F32)?;
         let t2 = Instant::now();
-        let grad_shards = self.comm.reduce_scatter_f32(&grads, &ccl)?;
+        let mut grad_shards = vec![vec![0.0f32; self.shard_len]; self.nranks];
+        {
+            let send_views = views_f32(&grads);
+            let mut recv_views = views_f32_mut(&mut grad_shards);
+            self.comm.run(&rs_plan, &send_views, &mut recv_views)?;
+        }
         comm_secs += t2.elapsed().as_secs_f64();
 
         // (4) Adam on the local shard (PJRT artifact).

@@ -1,7 +1,8 @@
 //! Pins the documented public API surface: the `lib.rs` quick-start must
 //! keep compiling and running end-to-end through the `prelude` exactly as
 //! written in the crate docs and README, so CI catches any break of the
-//! documented entry point.
+//! documented entry point. The deprecated v1 shims are pinned separately —
+//! downstream snippets written against them must keep compiling.
 
 use cxl_ccl::prelude::*;
 
@@ -10,12 +11,42 @@ fn doc_quick_start_runs_end_to_end() {
     // Verbatim shape of the lib.rs quick-start (4 ranks, 6 CXL devices).
     let topo = ClusterSpec::new(4, 6, 64 << 20);
     let comm = Communicator::shm(&topo).unwrap();
-    let mut bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 1024]).collect();
-    comm.all_reduce_f32(&mut bufs, &CclVariant::All.config(4)).unwrap();
-    // 0 + 1 + 2 + 3 summed into every rank's buffer.
-    for b in &bufs {
-        assert!(b.iter().all(|v| *v == 6.0));
+    let cfg = CclVariant::All.config(4);
+    let pending: Vec<PendingOp<'_>> = (0..4)
+        .map(|r| {
+            comm.rank(r)
+                .unwrap()
+                .begin(
+                    Primitive::AllReduce,
+                    &cfg,
+                    1024,
+                    Tensor::from_f32(&vec![r as f32; 1024]),
+                    Tensor::zeros(Dtype::F32, 1024),
+                )
+                .unwrap()
+        })
+        .collect();
+    for p in pending {
+        let (out, _wall) = p.wait().unwrap();
+        // 0 + 1 + 2 + 3 summed into every rank's result.
+        assert!(out.to_f32().unwrap().iter().all(|v| *v == 6.0));
     }
+}
+
+#[test]
+fn doc_two_backend_snippet_runs() {
+    // The second lib.rs snippet: one cached plan, both backends.
+    let topo = ClusterSpec::new(4, 6, 64 << 20);
+    let comm = Communicator::shm(&topo).unwrap();
+    let plan = comm
+        .plan(Primitive::AllGather, &CclConfig::default_all(), 1024, Dtype::F32)
+        .unwrap();
+    let fabric = SimFabric::new(*comm.layout());
+    let real = run_with_scratch(&comm, &plan).unwrap();
+    let virt = run_with_scratch(&fabric, &plan).unwrap();
+    assert!(!real.is_virtual());
+    assert!(virt.is_virtual());
+    assert!(real.seconds() > 0.0 && virt.seconds() > 0.0);
 }
 
 #[test]
@@ -26,23 +57,55 @@ fn prelude_exposes_the_documented_names() {
     let cfg: CclConfig = CclVariant::Aggregate.config(8);
     assert_eq!(cfg.chunks, 1, "aggregate is single-chunk by definition");
     assert_eq!(Primitive::ALL.len(), 8);
+    assert_eq!(Dtype::ALL.len(), 4);
     let layout = cxl_ccl::pool::PoolLayout::from_spec(&spec).unwrap();
     let _fabric: SimFabric = SimFabric::new(layout);
+    let cache = PlanCache::new();
+    assert_eq!(cache.stats(), CacheStats::default());
+    let t = Tensor::zeros(Dtype::U8, 4);
+    let _v: TensorView<'_> = t.view();
 }
 
 #[test]
 fn simulate_through_prelude_types() {
-    // The two-backend contract: a plan built once runs on the simulator.
+    // The two-backend contract: a plan built once runs on the simulator
+    // through the same trait the executor implements.
     let spec = ClusterSpec::paper(32 << 20);
     let layout = cxl_ccl::pool::PoolLayout::from_spec(&spec).unwrap();
-    let plan = cxl_ccl::collectives::plan_collective(
+    let plan = plan_collective_dtype(
         Primitive::AllGather,
         &spec,
         &layout,
         &CclVariant::All.config(8),
         3 * 1024,
+        Dtype::F32,
     )
     .unwrap();
-    let rep = SimFabric::new(layout).simulate(&plan).unwrap();
-    assert!(rep.total_time > 0.0);
+    let out = SimFabric::new(layout).run(&plan, &[], &mut []).unwrap();
+    assert!(out.seconds() > 0.0);
+    assert!(out.sim_report().unwrap().total_time > 0.0);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_v1_shims_still_compile_and_run() {
+    // The pre-redesign README snippet, kept alive as thin shims.
+    let topo = ClusterSpec::new(4, 6, 64 << 20);
+    let comm = Communicator::shm(&topo).unwrap();
+    let mut bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 1024]).collect();
+    comm.all_reduce_f32(&mut bufs, &CclVariant::All.config(4)).unwrap();
+    for b in &bufs {
+        assert!(b.iter().all(|v| *v == 6.0));
+    }
+    let sends = bufs.clone();
+    let mut recvs = vec![vec![0.0f32; 1024]; 4];
+    comm.execute(
+        Primitive::Broadcast,
+        &CclConfig::default_all(),
+        1024,
+        &sends,
+        &mut recvs,
+    )
+    .unwrap();
+    assert_eq!(recvs[3], sends[0]);
 }

@@ -4,6 +4,7 @@
 
 use cxl_ccl::collectives::{oracle, CclConfig, CclVariant, Primitive};
 use cxl_ccl::exec::Communicator;
+use cxl_ccl::tensor::{views_f32, views_f32_mut};
 use cxl_ccl::topology::ClusterSpec;
 use cxl_ccl::util::SplitMix64;
 
@@ -33,8 +34,12 @@ fn check(
     let sends = random_sends(rng, primitive, nranks, n);
     let mut recvs: Vec<Vec<f32>> =
         vec![vec![0.0f32; primitive.recv_elems(n, nranks)]; nranks];
-    comm.execute(primitive, cfg, n, &sends, &mut recvs)
-        .unwrap_or_else(|e| panic!("{primitive} {:?} n={n}: {e:#}", cfg.variant));
+    {
+        let send_views = views_f32(&sends);
+        let mut recv_views = views_f32_mut(&mut recvs);
+        comm.collective(primitive, cfg, n, &send_views, &mut recv_views)
+            .unwrap_or_else(|e| panic!("{primitive} {:?} n={n}: {e:#}", cfg.variant));
+    }
     let want = oracle::expected(primitive, &sends, n, cfg.root);
     for r in 0..nranks {
         for (i, (got, exp)) in recvs[r].iter().zip(&want[r]).enumerate() {

@@ -6,6 +6,7 @@ use cxl_ccl::collectives::{CclConfig, CclVariant, Primitive};
 use cxl_ccl::doorbell::WaitPolicy;
 use cxl_ccl::exec::Communicator;
 use cxl_ccl::pool::PoolLayout;
+use cxl_ccl::tensor::{views_f32, views_f32_mut, Dtype};
 use cxl_ccl::topology::ClusterSpec;
 use std::time::Duration;
 
@@ -53,14 +54,17 @@ fn missing_producer_times_out_cleanly() {
         variant: CclVariant::All,
         nranks: 2,
         n_elems: 4,
+        dtype: Dtype::F32,
         send_elems: 4,
         recv_elems: 4,
         ranks: vec![r0, r1],
     };
     let sends = vec![vec![0.0f32; 4]; 2];
     let mut recvs = vec![vec![0.0f32; 4]; 2];
+    let send_views = views_f32(&sends);
+    let mut recv_views = views_f32_mut(&mut recvs);
     let t0 = std::time::Instant::now();
-    let err = comm.run_plan(&plan, &sends, &mut recvs);
+    let err = comm.run_plan_views(&plan, &send_views, &mut recv_views);
     assert!(err.is_err(), "expected timeout error");
     assert!(
         t0.elapsed() < Duration::from_secs(10),
@@ -87,13 +91,19 @@ fn send_buffer_overrun_is_caught() {
         variant: CclVariant::All,
         nranks: 2,
         n_elems: 4,
+        dtype: Dtype::F32,
         send_elems: 4,
         recv_elems: 4,
         ranks: vec![r0, RankPlan::new(1)],
     };
     let sends = vec![vec![0.0f32; 4]; 2];
     let mut recvs = vec![vec![0.0f32; 4]; 2];
-    let msg = format!("{:#}", comm.run_plan(&plan, &sends, &mut recvs).unwrap_err());
+    let send_views = views_f32(&sends);
+    let mut recv_views = views_f32_mut(&mut recvs);
+    let msg = format!(
+        "{:#}",
+        comm.run_plan_views(&plan, &send_views, &mut recv_views).unwrap_err()
+    );
     assert!(msg.contains("overrun"), "{msg}");
 }
 
@@ -132,8 +142,16 @@ fn reduce_scatter_indivisible_size_errors() {
     let comm = Communicator::shm(&spec).unwrap();
     let sends = vec![vec![0.0f32; 100]; 3];
     let mut recvs = vec![vec![0.0f32; 34]; 3];
+    let send_views = views_f32(&sends);
+    let mut recv_views = views_f32_mut(&mut recvs);
     let err = comm
-        .execute(Primitive::ReduceScatter, &CclConfig::default_all(), 100, &sends, &mut recvs)
+        .collective(
+            Primitive::ReduceScatter,
+            &CclConfig::default_all(),
+            100,
+            &send_views,
+            &mut recv_views,
+        )
         .unwrap_err();
     assert!(format!("{err:#}").contains("divisible"));
 }
@@ -156,14 +174,29 @@ fn back_to_back_error_then_success_leaves_pool_usable() {
     let comm = Communicator::shm(&spec).unwrap();
     let sends_bad = vec![vec![0.0f32; 100]; 3];
     let mut recvs_bad = vec![vec![0.0f32; 34]; 3];
-    let _ = comm.execute(
-        Primitive::ReduceScatter,
+    {
+        let send_views = views_f32(&sends_bad);
+        let mut recv_views = views_f32_mut(&mut recvs_bad);
+        let _ = comm.collective(
+            Primitive::ReduceScatter,
+            &CclConfig::default_all(),
+            100,
+            &send_views,
+            &mut recv_views,
+        );
+    }
+    let sends: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32; 300]).collect();
+    let mut bufs = vec![vec![0.0f32; 300]; 3];
+    let send_views = views_f32(&sends);
+    let mut recv_views = views_f32_mut(&mut bufs);
+    comm.collective(
+        Primitive::AllReduce,
         &CclConfig::default_all(),
-        100,
-        &sends_bad,
-        &mut recvs_bad,
-    );
-    let mut bufs: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32; 300]).collect();
-    comm.all_reduce_f32(&mut bufs, &CclConfig::default_all()).unwrap();
+        300,
+        &send_views,
+        &mut recv_views,
+    )
+    .unwrap();
+    drop(recv_views);
     assert!(bufs.iter().all(|b| b.iter().all(|v| *v == 3.0)));
 }

@@ -3,12 +3,13 @@
 //! variants and slicing factors, checking the paper's structural invariants
 //! and executor correctness on every sample.
 
-use cxl_ccl::collectives::builder::plan_collective;
+use cxl_ccl::collectives::builder::{plan_collective, plan_collective_dtype};
 use cxl_ccl::collectives::ops::Op;
-use cxl_ccl::collectives::{oracle, CclVariant, Primitive};
+use cxl_ccl::collectives::{oracle, CclVariant, PlanCache, Primitive};
 use cxl_ccl::exec::Communicator;
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
+use cxl_ccl::tensor::{views_f32, views_f32_mut, Dtype};
 use cxl_ccl::topology::ClusterSpec;
 use cxl_ccl::util::SplitMix64;
 use std::collections::HashSet;
@@ -104,8 +105,12 @@ fn prop_executor_matches_oracle() {
             .collect();
         let mut recvs: Vec<Vec<f32>> =
             vec![vec![0.0f32; p.recv_elems(n, spec.nranks)]; spec.nranks];
-        comm.execute(p, &v.config(chunks), n, &sends, &mut recvs)
-            .unwrap_or_else(|e| panic!("case {case} {p} {v:?} n={n}: {e:#}"));
+        {
+            let send_views = views_f32(&sends);
+            let mut recv_views = views_f32_mut(&mut recvs);
+            comm.collective(p, &v.config(chunks), n, &send_views, &mut recv_views)
+                .unwrap_or_else(|e| panic!("case {case} {p} {v:?} n={n}: {e:#}"));
+        }
         let want = oracle::expected(p, &sends, n, 0);
         for r in 0..spec.nranks {
             for (i, (g, e)) in recvs[r].iter().zip(&want[r]).enumerate() {
@@ -145,6 +150,49 @@ fn prop_sim_conserves_bytes_and_capacity() {
         }
         assert!(rep.total_time.is_finite() && rep.total_time > 0.0);
     }
+}
+
+/// Invariant 6: `PlanCache` hits return plans identical to a fresh
+/// `plan_collective_dtype` across a seeded sweep of
+/// `(primitive, variant, n_elems, dtype)`, and the hit/miss counters add
+/// up (each distinct shape misses once, repeats always hit).
+#[test]
+fn prop_plan_cache_hits_match_fresh_plans() {
+    let mut rng = SplitMix64::new(0xCAC4E);
+    let spec = ClusterSpec::new(3, 6, 16 << 20);
+    let layout = PoolLayout::from_spec(&spec).unwrap();
+    let cache = PlanCache::new();
+    let mut shapes = Vec::new();
+    for _ in 0..40 {
+        let p = Primitive::ALL[rng.range(0, 7)];
+        let v = CclVariant::ALL[rng.range(0, 2)];
+        let chunks = [1usize, 4, 8][rng.range(0, 2)];
+        let n = rng.range(1, 5_000) * spec.nranks;
+        let dtype = Dtype::ALL[rng.range(0, 3)];
+        shapes.push((p, v.config(chunks), n, dtype));
+    }
+    // First pass: every lookup must equal the freshly planned collective.
+    for (p, cfg, n, dtype) in &shapes {
+        let cached = cache
+            .get_or_plan(&spec, &layout, *p, cfg, *n, *dtype)
+            .unwrap();
+        let fresh = plan_collective_dtype(*p, &spec, &layout, cfg, *n, *dtype).unwrap();
+        assert_eq!(*cached, fresh, "{p} {cfg:?} n={n} {dtype}: cached != fresh");
+    }
+    let first = cache.stats();
+    assert_eq!(first.hits + first.misses, shapes.len());
+    assert_eq!(first.misses, cache.len(), "each distinct shape misses exactly once");
+    // Second pass: all hits, still identical to fresh planning.
+    for (p, cfg, n, dtype) in &shapes {
+        let cached = cache
+            .get_or_plan(&spec, &layout, *p, cfg, *n, *dtype)
+            .unwrap();
+        let fresh = plan_collective_dtype(*p, &spec, &layout, cfg, *n, *dtype).unwrap();
+        assert_eq!(*cached, fresh);
+    }
+    let second = cache.stats();
+    assert_eq!(second.misses, first.misses, "second pass must not replan");
+    assert_eq!(second.hits, first.hits + shapes.len());
 }
 
 /// Invariant 5: variant ordering — All never loses badly to Naive on

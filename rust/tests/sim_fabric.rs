@@ -175,5 +175,7 @@ fn executor_and_sim_agree_on_plan_structure() {
     let comm = cxl_ccl::exec::Communicator::shm(&spec).unwrap();
     let sends: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32; n]).collect();
     let mut recvs = vec![vec![0.0f32; n]; 3];
-    comm.run_plan(&plan, &sends, &mut recvs).unwrap();
+    let send_views = cxl_ccl::tensor::views_f32(&sends);
+    let mut recv_views = cxl_ccl::tensor::views_f32_mut(&mut recvs);
+    comm.run_plan_views(&plan, &send_views, &mut recv_views).unwrap();
 }

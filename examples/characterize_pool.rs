@@ -5,7 +5,7 @@
 //! Run: `cargo run --release --example characterize_pool`
 
 use cxl_ccl::bench_util::{banner, pow2_sizes, Table};
-use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
+use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan, ValidPlan};
 use cxl_ccl::collectives::{CclVariant, CollectiveBackend, Primitive};
 use cxl_ccl::pool::{PoolLayout, ShmPool};
 use cxl_ccl::sim::constants as k;
@@ -22,7 +22,7 @@ const DEV_CAP: usize = 4 << 30;
 
 /// Hand-built plan: `streams` ranks each moving `bytes` to/from device 0 or
 /// distinct devices — the §3 concurrency microbenchmarks.
-fn transfer_plan(streams: usize, bytes: usize, same_device: bool, write: bool) -> CollectivePlan {
+fn transfer_plan(streams: usize, bytes: usize, same_device: bool, write: bool) -> ValidPlan {
     let mut ranks = Vec::new();
     for r in 0..streams {
         let mut rp = RankPlan::new(r);
@@ -35,7 +35,7 @@ fn transfer_plan(streams: usize, bytes: usize, same_device: bool, write: bool) -
         }
         ranks.push(rp);
     }
-    CollectivePlan {
+    let plan = CollectivePlan {
         primitive: Primitive::Broadcast,
         variant: CclVariant::All,
         nranks: streams,
@@ -44,7 +44,9 @@ fn transfer_plan(streams: usize, bytes: usize, same_device: bool, write: bool) -
         send_elems: bytes / 4,
         recv_elems: bytes / 4,
         ranks,
-    }
+    };
+    // Hand-built plans enter the launch surface through the ValidPlan gate.
+    ValidPlan::new(plan, 6 * DEV_CAP).expect("synthetic transfer plan is valid")
 }
 
 fn main() -> anyhow::Result<()> {

@@ -119,5 +119,50 @@ fn main() -> anyhow::Result<()> {
     }
     let ib = collective_time(Primitive::AllGather, msg, spec.nranks, &IbParams::default());
     println!("  {:<18} {}", "infiniband-200g", fmt_time(ib));
+
+    // --- 5. v3 process groups: split one world into concurrent subgroups --
+    // (Pool bootstrap — `Bootstrap::pool(path, spec)` — does the same across
+    // OS processes; see `cxl-ccl run --bootstrap pool:<path>`.)
+    let pg = CommWorld::init(
+        Bootstrap::thread_local(ClusterSpec::new(4, 6, 16 << 20)),
+        0,
+        4,
+    )?;
+    let subs = pg.split_all(&[(0, 0), (0, 1), (1, 0), (1, 1)])?;
+    println!("\nsplit 4 ranks into {} subgroups sharing one pool:", subs.len());
+    for sg in &subs {
+        println!(
+            "  ranks {:?} | doorbell slots {:?} | devices {:?}",
+            sg.global_ranks(),
+            sg.doorbell_slot_range(),
+            sg.device_range(),
+        );
+    }
+    // Disjoint doorbell + device windows let the subgroups launch at the
+    // same time without touching each other's slots or data.
+    std::thread::scope(|s| {
+        for sg in &subs {
+            s.spawn(move || {
+                let pending: Vec<GroupPending<'_>> = (0..sg.world_size())
+                    .map(|r| {
+                        sg.begin_rank(
+                            r,
+                            Primitive::AllReduce,
+                            &cfg,
+                            512,
+                            Tensor::from_f32(&vec![1.0; 512]),
+                            Tensor::zeros(Dtype::F32, 512),
+                        )
+                        .unwrap()
+                    })
+                    .collect();
+                for p in pending {
+                    let (out, _) = p.wait().unwrap();
+                    assert!(out.to_f32().unwrap().iter().all(|v| *v == 2.0));
+                }
+            });
+        }
+    });
+    println!("concurrent subgroup AllReduce over one pool ✓");
     Ok(())
 }

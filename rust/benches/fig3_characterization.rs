@@ -15,7 +15,7 @@
 //! Run: `cargo bench --bench fig3_characterization`
 
 use cxl_ccl::bench_util::{banner, pow2_sizes, Table};
-use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
+use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan, ValidPlan};
 use cxl_ccl::collectives::{CclVariant, CollectiveBackend, Primitive};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
@@ -76,7 +76,12 @@ fn main() {
     let fab = SimFabric::new(layout);
     // Hand-built plans run through the same backend trait as everything
     // else; the fabric is a `CollectiveBackend` like the real executor.
-    let sim = |p: CollectivePlan| fab.run(&p, &[], &mut []).unwrap().seconds();
+    // `ValidPlan::new` is the launch gate for plans built outside the
+    // planner (the planner's own output is already sealed).
+    let sim = |p: CollectivePlan| {
+        let p = ValidPlan::new(p, layout.pool_size()).expect("synthetic plan is valid");
+        fab.run(&p, &[], &mut []).unwrap().seconds()
+    };
     let gbps = |bytes: usize, t: f64| bytes as f64 / t / 1e9;
 
     banner("Figure 3a: single-node exclusive bandwidth vs transfer size");

@@ -20,14 +20,15 @@ use crate::collectives::builder::{plan_collective, plan_collective_dtype};
 use crate::collectives::{oracle, run_with_scratch, CclVariant, CollectiveBackend, Primitive};
 use crate::config::{KvFile, RunConfig};
 use crate::exec::Communicator;
+use crate::group::{Bootstrap, CommWorld};
 use crate::pool::PoolLayout;
 use crate::sim::SimFabric;
-use crate::tensor::{views_f32, views_f32_mut, Dtype};
+use crate::tensor::{views_f32, views_f32_mut, Dtype, Tensor};
 use crate::topology::ClusterSpec;
 use crate::train::{FsdpTrainer, TrainConfig};
 use crate::util::size::{fmt_bytes, fmt_time, parse_size};
-use crate::util::SplitMix64;
-use anyhow::{bail, Result};
+use crate::util::{fnv1a64, SplitMix64};
+use anyhow::{bail, Context, Result};
 
 /// Parsed command line.
 pub struct Args {
@@ -101,10 +102,14 @@ fn print_help() {
          info                     topology + artifact summary\n  \
          run    [--config F] [--primitive p] [--variant all|aggregate|naive]\n         \
                 [--size 16M] [--ranks 3] [--devices 6] [--chunks 8] [--iters 3]\n         \
-                [--backend shm|sim] [--dtype f32|f16|bf16|u8]\n  \
+                [--backend shm|sim] [--dtype f32|f16|bf16|u8]\n         \
+                [--bootstrap local|pool:<path> --rank R --world N]\n  \
          sweep  [--primitive p] [--ranks 3] [--max 1G]   virtual-time vs InfiniBand\n  \
          train  [--preset tiny|e2e] [--steps 40] [--variant all] [--chunks 8]\n  \
-         latency                  Table-1 style latency report\n"
+         latency                  Table-1 style latency report\n\n\
+         multi-process: start one `run --bootstrap pool:<path> --rank R --world N`\n\
+         per rank (same path, same sizes); the processes rendezvous through the\n\
+         file-backed pool and print a result digest comparable across ranks.\n"
     );
 }
 
@@ -167,6 +172,13 @@ fn cmd_info() -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    let bootstrap = args.get_or("bootstrap", "local");
+    if let Some(path) = bootstrap.strip_prefix("pool:") {
+        return cmd_run_pool(args, path);
+    }
+    if bootstrap != "local" {
+        bail!("unknown --bootstrap {bootstrap:?} (expected local or pool:<path>)");
+    }
     let rc = build_run_config(args)?;
     let dtype = Dtype::parse(&args.get_or("dtype", "f32"))?;
     let backend_name = args.get_or("backend", "shm");
@@ -190,11 +202,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         "sim" => Box::new(SimFabric::new(layout)),
         other => bail!("unknown backend {other:?} (shm|sim)"),
     };
-    if !backend.is_virtual() && dtype != Dtype::F32 && rc.primitive.reduces() {
+    if !backend.is_virtual() && dtype == Dtype::U8 && rc.primitive.reduces() {
         bail!(
-            "{} with dtype {dtype} cannot execute on the shm backend (the scalar reduce \
-             engine supports only f32 reductions); use --dtype f32, or --backend sim to \
-             time the plan in virtual time",
+            "{} with dtype u8 cannot execute on the shm backend (raw bytes have no \
+             reduction semantics); use a numeric dtype, or --backend sim to time the \
+             plan in virtual time",
             rc.primitive
         );
     }
@@ -246,6 +258,106 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
     }
     println!("verification vs oracle ✓");
+    Ok(())
+}
+
+/// `run --bootstrap pool:<path> --rank R --world N`: this process is ONE
+/// rank of a multi-process communicator. All N processes map the same
+/// file-backed pool, rendezvous through its control-plane header, and
+/// launch the collective together; the final line prints an FNV-64 digest
+/// of this rank's result (for AllGather/Broadcast every rank's digest is
+/// identical, which is what the CI smoke step diffs).
+fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
+    // The pool bootstrap IS the real shm executor spread over processes;
+    // there is no virtual-time variant of it. Reject a conflicting
+    // --backend instead of silently ignoring it.
+    if let Some(b) = args.get("backend") {
+        if b != "shm" {
+            bail!(
+                "--bootstrap pool:<path> always runs the real shm executor; --backend \
+                 {b:?} conflicts (drop it, or use --bootstrap local --backend sim)"
+            );
+        }
+    }
+    let mut rc = build_run_config(args)?;
+    let dtype = Dtype::parse(&args.get_or("dtype", "f32"))?;
+    let world: usize = args
+        .get("world")
+        .context("--bootstrap pool:<path> needs --world N (total ranks)")?
+        .parse()?;
+    let rank: usize = args
+        .get("rank")
+        .context("--bootstrap pool:<path> needs --rank R (this process's rank)")?
+        .parse()?;
+    rc.spec.nranks = world;
+    // Re-apply the capacity growth for the actual world size (every rank
+    // must compute the identical spec — it is part of the layout hash).
+    let worst = rc.spec.nranks * rc.msg_bytes + rc.spec.db_region_size + (1 << 20);
+    if rc.spec.device_capacity < worst {
+        rc.spec.device_capacity = worst.next_power_of_two();
+    }
+    let n = rc.n_elems(dtype);
+    if rc.primitive.reduces() && dtype == Dtype::U8 {
+        bail!("{} cannot reduce u8 buffers (no reduction semantics)", rc.primitive);
+    }
+    banner(&format!(
+        "run[pool:{path}]: rank {rank}/{world} | {} {} {dtype} | {} per rank | {} devices, \
+         {} chunks",
+        rc.primitive,
+        rc.variant.name(),
+        fmt_bytes(n * dtype.size_bytes()),
+        rc.spec.ndevices,
+        rc.chunks
+    ));
+    let ccl = rc.variant.config(rc.chunks).with_root(0);
+    let pg = CommWorld::init(Bootstrap::pool(path, rc.spec.clone()), rank, world)?;
+    println!(
+        "rendezvous complete: {} ranks over {} (doorbells {:?})",
+        pg.world_size(),
+        fmt_bytes(pg.layout().pool_size()),
+        pg.doorbell_slot_range(),
+    );
+    let send_elems = rc.primitive.send_elems(n, world);
+    let recv_elems = rc.primitive.recv_elems(n, world);
+    // Deterministic per-rank payload: any process can recompute any rank's
+    // contribution, so digests are comparable across independent runs.
+    let send = match dtype {
+        Dtype::F32 => {
+            let mut v = vec![0.0f32; send_elems];
+            SplitMix64::new(0xC0FFEE ^ rank as u64).fill_f32(&mut v);
+            Tensor::from_f32(&v)
+        }
+        _ => {
+            let bytes: Vec<u8> = (0..send_elems * dtype.size_bytes())
+                .map(|i| (i as u8).wrapping_mul(31).wrapping_add(rank as u8 + 1))
+                .collect();
+            Tensor::from_bytes(bytes, dtype)?
+        }
+    };
+    let bytes_moved = rc.primitive.bytes_on_wire_dtype(n, world, dtype);
+    let t = Table::new(&[8, 12, 14]);
+    t.header(&["iter", "time", "pool GB/s"]);
+    let mut digest = 0u64;
+    for i in 0..rc.iters {
+        let pending = pg.begin(
+            rc.primitive,
+            &ccl,
+            n,
+            send.clone(),
+            Tensor::zeros(dtype, recv_elems),
+        )?;
+        let (out, wall) = pending.wait()?;
+        t.row(&[
+            i.to_string(),
+            fmt_time(wall.as_secs_f64()),
+            format!("{:.2}", bytes_moved as f64 / wall.as_secs_f64() / 1e9),
+        ]);
+        digest = fnv1a64(out.as_bytes());
+    }
+    println!(
+        "{} result fnv64=0x{digest:016x} ({recv_elems} elems, dtype {dtype})",
+        rc.primitive
+    );
     Ok(())
 }
 

@@ -12,7 +12,7 @@
 //! backend they are handed through this one interface instead of matching
 //! on the backend type.
 
-use crate::collectives::ops::CollectivePlan;
+use crate::collectives::ops::{CollectivePlan, ValidPlan};
 use crate::sim::SimReport;
 use crate::tensor::{Tensor, TensorView, TensorViewMut};
 use anyhow::{bail, Result};
@@ -65,9 +65,14 @@ pub trait CollectiveBackend {
     /// Run `plan` with one send and one recv view per rank. Views must
     /// match the plan's dtype and element counts. Virtual backends also
     /// accept `(&[], &mut [])`.
+    ///
+    /// Only pre-validated [`ValidPlan`]s are accepted: validation happened
+    /// when the planner/cache sealed the plan, so steady-state launches
+    /// perform no per-launch `validate()` work. Hand-built plans enter
+    /// through [`ValidPlan::new`].
     fn run(
         &self,
-        plan: &CollectivePlan,
+        plan: &ValidPlan,
         sends: &[TensorView<'_>],
         recvs: &mut [TensorViewMut<'_>],
     ) -> Result<ExecOutcome>;
@@ -126,7 +131,7 @@ pub fn validate_views(
 /// mode). Virtual backends get no buffers at all.
 pub fn run_with_scratch(
     backend: &dyn CollectiveBackend,
-    plan: &CollectivePlan,
+    plan: &ValidPlan,
 ) -> Result<ExecOutcome> {
     if backend.is_virtual() {
         return backend.run(plan, &[], &mut []);

@@ -4,7 +4,7 @@
 //! computation-driven doorbell indexing (§4.5, Eq. 2).
 
 use crate::chunking::{effective_chunks, publish_order, split_aligned, DoorbellIndexer};
-use crate::collectives::ops::{CollectivePlan, Op, RankPlan};
+use crate::collectives::ops::{CollectivePlan, Op, RankPlan, ValidPlan};
 use crate::collectives::{CclConfig, CclVariant, Primitive};
 use crate::interleave::{self, rotated_peers, rotated_peers_desc, BlockAddr};
 use crate::pool::PoolLayout;
@@ -145,7 +145,7 @@ pub fn plan_collective(
     layout: &PoolLayout,
     cfg: &CclConfig,
     n_elems: usize,
-) -> Result<CollectivePlan> {
+) -> Result<ValidPlan> {
     plan_collective_dtype(primitive, spec, layout, cfg, n_elems, Dtype::F32)
 }
 
@@ -154,6 +154,12 @@ pub fn plan_collective(
 /// buffer is `N × nranks` elements). Any dtype can be planned; reducing
 /// primitives additionally need a reduce engine that supports the dtype at
 /// execution time (the simulator times any plan).
+///
+/// Returns a [`ValidPlan`]: the plan is validated here, once, against the
+/// layout's pool size, so launches never re-validate. Placement interleaves
+/// over the layout's *device window* and doorbells index into its
+/// *doorbell window*, which is how `ProcessGroup::split` subgroups share a
+/// pool without touching each other's slots or devices.
 pub fn plan_collective_dtype(
     primitive: Primitive,
     spec: &ClusterSpec,
@@ -161,13 +167,13 @@ pub fn plan_collective_dtype(
     cfg: &CclConfig,
     n_elems: usize,
     dtype: Dtype,
-) -> Result<CollectivePlan> {
+) -> Result<ValidPlan> {
     spec.validate().map_err(|e| anyhow::anyhow!(e))?;
     if n_elems == 0 {
         bail!("message size must be positive");
     }
     let nr = spec.nranks;
-    let nd = layout.stacking.ndevices;
+    let nd = layout.device_span;
     if cfg.root >= nr {
         bail!("root {} out of range ({nr} ranks)", cfg.root);
     }
@@ -391,7 +397,7 @@ pub fn plan_collective_dtype(
         }
     }
 
-    Ok(CollectivePlan {
+    let plan = CollectivePlan {
         primitive,
         variant: cfg.variant,
         nranks: nr,
@@ -400,7 +406,9 @@ pub fn plan_collective_dtype(
         send_elems: primitive.send_elems(n_elems, nr),
         recv_elems: primitive.recv_elems(n_elems, nr),
         ranks,
-    })
+    };
+    ValidPlan::new(plan, layout.pool_size())
+        .context("planner produced an invalid plan (this is a bug in the builder)")
 }
 
 #[cfg(test)]
@@ -414,7 +422,7 @@ mod tests {
         (spec, layout)
     }
 
-    fn plan(p: Primitive, v: CclVariant, n: usize) -> CollectivePlan {
+    fn plan(p: Primitive, v: CclVariant, n: usize) -> ValidPlan {
         let (spec, layout) = setup();
         plan_collective(p, &spec, &layout, &v.config(4), n).unwrap()
     }
@@ -597,6 +605,49 @@ mod tests {
                 .unwrap();
         p16.validate(layout.pool_size()).unwrap();
         assert_eq!(p16.elem_bytes(), 2);
+    }
+
+    #[test]
+    fn windowed_layout_plans_stay_inside_their_windows() {
+        // A subgroup view: 2 ranks over devices [3, 6) and doorbell slots
+        // [32, 64) of a 6-device pool. Every pool touch and every doorbell
+        // the plan emits must stay inside those windows.
+        let spec = ClusterSpec::new(2, 3, 4 << 20);
+        let full = PoolLayout::new(6, 4 << 20, 4096).unwrap();
+        let layout = full
+            .with_device_window(3, 3)
+            .unwrap()
+            .with_doorbell_window(32, 32)
+            .unwrap();
+        for p in [Primitive::AllGather, Primitive::AllToAll, Primitive::Broadcast] {
+            let pl = plan_collective(p, &spec, &layout, &CclVariant::All.config(2), 2 * 1024)
+                .unwrap();
+            for rp in &pl.ranks {
+                for op in rp.write_ops.iter().chain(rp.read_ops.iter()) {
+                    match *op {
+                        Op::Write { pool_off, len, .. }
+                        | Op::Read { pool_off, len, .. }
+                        | Op::Reduce { pool_off, len, .. } => {
+                            let dev = layout.stacking.device_of(pool_off);
+                            assert!((3..6).contains(&dev), "{p}: device {dev} outside window");
+                            assert_eq!(
+                                layout.stacking.device_of(pool_off + len - 1),
+                                dev,
+                                "{p}: block straddles devices"
+                            );
+                        }
+                        Op::SetDoorbell { db } | Op::WaitDoorbell { db } => {
+                            let abs = layout.doorbell_offset(db).unwrap() / 64;
+                            assert!(
+                                (32..64).contains(&abs),
+                                "{p}: doorbell {db} -> absolute slot {abs} outside window"
+                            );
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
     }
 
     #[test]

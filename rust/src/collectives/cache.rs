@@ -3,21 +3,27 @@
 //! Training steps issue the same collective shape every iteration (the FSDP
 //! loop's per-step AllGather/ReduceScatter); replanning each time is pure
 //! overhead. [`PlanCache`] memoizes [`plan_collective_dtype`] outputs under
-//! a [`PlanKey`] so repeated launches reuse the immutable [`CollectivePlan`]
-//! behind an `Arc`. Hit/miss counters make the reuse observable (and
-//! testable).
+//! a [`PlanKey`] so repeated launches reuse the immutable, pre-validated
+//! [`ValidPlan`] behind an `Arc` — steady-state launches therefore skip
+//! `CollectivePlan::validate` entirely (the v3 launch surface accepts only
+//! `ValidPlan`s). Hit/miss/eviction counters make the behaviour observable
+//! (and testable).
+//!
+//! The cache is **bounded**: at most `capacity` distinct shapes are kept,
+//! evicting the least-recently-used plan when a new shape arrives at a full
+//! cache. Long sweeps over many shapes (the fig. 9/10 harnesses, parameter
+//! searches) therefore cannot grow it without limit.
 
 use crate::collectives::builder::plan_collective_dtype;
-use crate::collectives::ops::CollectivePlan;
+use crate::collectives::ops::ValidPlan;
 use crate::collectives::{CclConfig, CclVariant, Primitive};
 use crate::pool::PoolLayout;
 use crate::tensor::Dtype;
 use crate::topology::ClusterSpec;
 use anyhow::Result;
-use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 
 /// Everything a plan depends on. Two launches with equal keys are
 /// guaranteed identical plans (planning is deterministic).
@@ -68,27 +74,66 @@ impl PlanKey {
     }
 }
 
-/// Cache hit/miss counters (monotonic over the cache's lifetime).
+/// Cache hit/miss/eviction counters (monotonic over the cache's lifetime).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: usize,
     pub misses: usize,
+    /// Plans dropped to keep the cache within its LRU capacity.
+    pub evictions: usize,
 }
 
-/// Thread-safe memo of planned collectives.
-#[derive(Debug, Default)]
+struct LruState {
+    /// Plan + last-touched tick per shape.
+    plans: HashMap<PlanKey, (ValidPlan, u64)>,
+    /// Monotonic access clock.
+    tick: u64,
+}
+
+/// Thread-safe, LRU-bounded memo of planned (and validated) collectives.
 pub struct PlanCache {
-    plans: Mutex<HashMap<PlanKey, Arc<CollectivePlan>>>,
+    state: Mutex<LruState>,
+    capacity: usize,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    evictions: AtomicUsize,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::with_capacity(Self::DEFAULT_CAPACITY)
+    }
 }
 
 impl PlanCache {
+    /// Default bound: generous for steady-state training loops (a handful
+    /// of shapes) while capping sweep-style workloads.
+    pub const DEFAULT_CAPACITY: usize = 128;
+
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Return the cached plan for this shape, planning it on first use.
+    /// A cache holding at most `capacity` plans (min 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(LruState {
+                plans: HashMap::new(),
+                tick: 0,
+            }),
+            capacity: capacity.max(1),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Return the cached plan for this shape, planning (and validating) it
+    /// on first use. A hit refreshes the shape's LRU position.
     pub fn get_or_plan(
         &self,
         spec: &ClusterSpec,
@@ -97,42 +142,60 @@ impl PlanCache {
         cfg: &CclConfig,
         n_elems: usize,
         dtype: Dtype,
-    ) -> Result<Arc<CollectivePlan>> {
+    ) -> Result<ValidPlan> {
         let key = PlanKey::new(primitive, cfg, spec, n_elems, dtype);
-        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::clone(plan));
+        {
+            let mut st = self.state.lock().unwrap();
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some((plan, touched)) = st.plans.get_mut(&key) {
+                *touched = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(plan.clone());
+            }
         }
         // Plan outside the lock: planning can be slow and racing planners
         // produce identical plans, so the first insert simply wins. The
         // insert's vacancy decides hit-vs-miss, keeping the invariant
-        // `misses == number of cached shapes` even under concurrent first
-        // launches.
-        let plan = Arc::new(plan_collective_dtype(
-            primitive, spec, layout, cfg, n_elems, dtype,
-        )?);
-        match self.plans.lock().unwrap().entry(key) {
-            Entry::Occupied(e) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Ok(Arc::clone(e.get()))
-            }
-            Entry::Vacant(e) => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                Ok(Arc::clone(e.insert(plan)))
+        // `misses == number of shapes ever inserted` even under concurrent
+        // first launches.
+        let plan = plan_collective_dtype(primitive, spec, layout, cfg, n_elems, dtype)?;
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some((existing, touched)) = st.plans.get_mut(&key) {
+            *touched = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(existing.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if st.plans.len() >= self.capacity {
+            // Evict the least-recently-used shape to stay within bounds.
+            let victim = st
+                .plans
+                .iter()
+                .min_by_key(|(_, (_, touched))| *touched)
+                .map(|(k, _)| *k);
+            if let Some(old) = victim {
+                st.plans.remove(&old);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
+        st.plans.insert(key, (plan.clone(), tick));
+        Ok(plan)
     }
 
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 
     /// Number of distinct plans currently cached.
     pub fn len(&self) -> usize {
-        self.plans.lock().unwrap().len()
+        self.state.lock().unwrap().plans.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -141,13 +204,24 @@ impl PlanCache {
 
     /// Drop every cached plan (counters are preserved).
     pub fn clear(&self) {
-        self.plans.lock().unwrap().clear();
+        self.state.lock().unwrap().plans.clear();
+    }
+}
+
+impl std::fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanCache")
+            .field("len", &self.len())
+            .field("capacity", &self.capacity)
+            .field("stats", &self.stats())
+            .finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn hits_return_the_same_arc_and_count() {
@@ -161,8 +235,11 @@ mod tests {
         let b = cache
             .get_or_plan(&spec, &layout, Primitive::AllGather, &cfg, 3 * 256, Dtype::F32)
             .unwrap();
-        assert!(Arc::ptr_eq(&a, &b), "second lookup must reuse the plan");
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert!(
+            Arc::ptr_eq(a.as_arc(), b.as_arc()),
+            "second lookup must reuse the plan"
+        );
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
         assert_eq!(cache.len(), 1);
     }
 
@@ -202,5 +279,39 @@ mod tests {
         let key = PlanKey::new(Primitive::Broadcast, &cfg, &spec, 1024, Dtype::F16);
         assert_eq!(key.config(), cfg);
         assert_eq!(key.dtype, Dtype::F16);
+    }
+
+    #[test]
+    fn lru_capacity_bounds_the_cache_and_counts_evictions() {
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let cache = PlanCache::with_capacity(2);
+        let cfg = CclVariant::All.config(4);
+        let plan = |cache: &PlanCache, n: usize| {
+            cache
+                .get_or_plan(&spec, &layout, Primitive::AllGather, &cfg, n, Dtype::F32)
+                .unwrap()
+        };
+        plan(&cache, 3 * 128); // A
+        plan(&cache, 3 * 256); // B
+        assert_eq!(cache.len(), 2);
+        // Touch A so B becomes the LRU entry, then insert C.
+        plan(&cache, 3 * 128);
+        plan(&cache, 3 * 512); // C evicts B
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        // A is still cached (hit), B must replan (miss).
+        let before = cache.stats();
+        plan(&cache, 3 * 128);
+        assert_eq!(cache.stats().hits, before.hits + 1);
+        plan(&cache, 3 * 256);
+        assert_eq!(cache.stats().misses, before.misses + 1);
+        assert_eq!(cache.stats().evictions, 2, "re-inserting B evicts the LRU entry");
+        // A sweep over many shapes never exceeds capacity.
+        for i in 1..=20 {
+            plan(&cache, 3 * 1024 + 3 * i);
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.capacity(), 2);
     }
 }

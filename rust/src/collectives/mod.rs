@@ -25,7 +25,7 @@ pub mod staged;
 pub use backend::{run_with_scratch, CollectiveBackend, ExecOutcome};
 pub use builder::{plan_collective, plan_collective_dtype};
 pub use cache::{CacheStats, PlanCache, PlanKey};
-pub use ops::{CollectivePlan, Op, RankPlan};
+pub use ops::{validate_calls, CollectivePlan, Op, RankPlan, ValidPlan};
 pub use p2p::plan_send_recv;
 pub use staged::simulate_staged_allreduce;
 

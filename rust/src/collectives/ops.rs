@@ -9,6 +9,21 @@
 
 use crate::collectives::{CclVariant, Primitive};
 use crate::tensor::Dtype;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Process-wide count of [`CollectivePlan::validate`] invocations.
+///
+/// Observability only: the v3 launch surface hands out [`ValidPlan`]s so
+/// steady-state launches perform **no** per-launch validation, and the
+/// build-surface test pins that by watching this counter stay flat across
+/// repeated launches of a cached plan.
+static VALIDATE_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+/// How many times any plan has been validated in this process.
+pub fn validate_calls() -> usize {
+    VALIDATE_CALLS.load(Ordering::Relaxed)
+}
 
 /// One operation on a rank's stream. All offsets are **bytes**; `src_off`
 /// indexes the rank's send buffer, `dst_off` its recv buffer, `pool_off`
@@ -115,6 +130,7 @@ impl CollectivePlan {
 
     /// Sanity checks shared by tests and the property harness.
     pub fn validate(&self, pool_size: usize) -> Result<(), String> {
+        VALIDATE_CALLS.fetch_add(1, Ordering::Relaxed);
         if self.ranks.len() != self.nranks {
             return Err("plan rank count mismatch".into());
         }
@@ -191,6 +207,55 @@ impl CollectivePlan {
     }
 }
 
+/// A plan that has passed [`CollectivePlan::validate`] against a concrete
+/// pool size — the only thing the launch surface accepts.
+///
+/// The planner and [`crate::collectives::PlanCache`] hand these out, so
+/// validation happens exactly once per planned shape and steady-state
+/// launches soundly skip it. Hand-built plans (benches, failure-injection
+/// tests) go through [`ValidPlan::new`], which runs the same validation.
+///
+/// Cloning is cheap: the plan itself is shared behind an `Arc`.
+#[derive(Debug, Clone)]
+pub struct ValidPlan {
+    plan: Arc<CollectivePlan>,
+    pool_size: usize,
+}
+
+impl ValidPlan {
+    /// Validate `plan` against `pool_size` and seal it. This is the single
+    /// gate between plan construction and plan execution.
+    pub fn new(plan: CollectivePlan, pool_size: usize) -> anyhow::Result<Self> {
+        Self::from_arc(Arc::new(plan), pool_size)
+    }
+
+    /// [`ValidPlan::new`] for a plan already behind an `Arc`.
+    pub fn from_arc(plan: Arc<CollectivePlan>, pool_size: usize) -> anyhow::Result<Self> {
+        plan.validate(pool_size)
+            .map_err(|e| anyhow::anyhow!("invalid plan: {e}"))?;
+        Ok(Self { plan, pool_size })
+    }
+
+    /// The pool size (bytes) this plan was validated against. Executing it
+    /// over any pool at least this large is in-bounds by construction.
+    pub fn pool_size(&self) -> usize {
+        self.pool_size
+    }
+
+    /// The shared underlying plan.
+    pub fn as_arc(&self) -> &Arc<CollectivePlan> {
+        &self.plan
+    }
+}
+
+impl std::ops::Deref for ValidPlan {
+    type Target = CollectivePlan;
+
+    fn deref(&self) -> &CollectivePlan {
+        &self.plan
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,6 +292,31 @@ mod tests {
         };
         let err = plan.validate(1 << 20).unwrap_err();
         assert!(err.contains("overlapping"));
+    }
+
+    #[test]
+    fn valid_plan_rejects_invalid_and_derefs() {
+        let mut p0 = RankPlan::new(0);
+        p0.write_ops.push(Op::Write { pool_off: 0, src_off: 0, len: 64 });
+        let plan = CollectivePlan {
+            primitive: Primitive::AllGather,
+            variant: CclVariant::All,
+            nranks: 1,
+            n_elems: 16,
+            dtype: Dtype::F32,
+            send_elems: 16,
+            recv_elems: 16,
+            ranks: vec![p0],
+        };
+        // Too small a pool -> rejected at the ValidPlan gate.
+        assert!(ValidPlan::new(plan.clone(), 32).is_err());
+        let vp = ValidPlan::new(plan, 1 << 20).unwrap();
+        assert_eq!(vp.pool_size(), 1 << 20);
+        // Deref exposes the plan's fields and methods.
+        assert_eq!(vp.nranks, 1);
+        assert_eq!(vp.total_pool_bytes(), 64);
+        let vp2 = vp.clone();
+        assert!(Arc::ptr_eq(vp.as_arc(), vp2.as_arc()), "clone shares the plan");
     }
 
     #[test]

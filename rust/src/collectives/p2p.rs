@@ -9,7 +9,7 @@
 //! receiver chases the chunk doorbells.
 
 use crate::chunking::{effective_chunks, split_aligned};
-use crate::collectives::ops::{CollectivePlan, Op, RankPlan};
+use crate::collectives::ops::{CollectivePlan, Op, RankPlan, ValidPlan};
 use crate::collectives::{CclConfig, CclVariant, Primitive};
 use crate::interleave;
 use crate::pool::PoolLayout;
@@ -17,9 +17,9 @@ use crate::topology::ClusterSpec;
 use anyhow::{bail, Result};
 
 /// Plan a single send/recv: `src` rank's `n_elems` f32 buffer lands in
-/// `dst` rank's recv buffer. Returned as a [`CollectivePlan`] so both the
-/// executor and the simulator run it unchanged (non-participating ranks
-/// get empty streams).
+/// `dst` rank's recv buffer. Returned as a sealed [`ValidPlan`] so both
+/// the executor and the simulator run it unchanged (non-participating
+/// ranks get empty streams).
 pub fn plan_send_recv(
     spec: &ClusterSpec,
     layout: &PoolLayout,
@@ -27,7 +27,7 @@ pub fn plan_send_recv(
     src: usize,
     dst: usize,
     n_elems: usize,
-) -> Result<CollectivePlan> {
+) -> Result<ValidPlan> {
     spec.validate().map_err(|e| anyhow::anyhow!(e))?;
     if src >= spec.nranks || dst >= spec.nranks {
         bail!("send/recv ranks ({src} -> {dst}) out of range ({} ranks)", spec.nranks);
@@ -39,7 +39,7 @@ pub fn plan_send_recv(
         bail!("message size must be positive");
     }
     let n_bytes = n_elems * 4;
-    let nd = layout.stacking.ndevices;
+    let nd = layout.device_span;
     // Spread the message across all devices (type-1, data_id = piece).
     let npieces = if cfg.variant == CclVariant::Naive { 1 } else { nd };
     let pieces = split_aligned(n_bytes, npieces);
@@ -76,7 +76,7 @@ pub fn plan_send_recv(
             rp.read_ops.insert(0, Op::Barrier);
         }
     }
-    Ok(CollectivePlan {
+    let plan = CollectivePlan {
         // Reported as Broadcast-shaped for accounting (1 writer, 1 reader).
         primitive: Primitive::Broadcast,
         variant: cfg.variant,
@@ -86,7 +86,8 @@ pub fn plan_send_recv(
         send_elems: n_elems,
         recv_elems: n_elems,
         ranks,
-    })
+    };
+    ValidPlan::new(plan, layout.pool_size())
 }
 
 #[cfg(test)]

@@ -57,11 +57,15 @@ impl<'a> DoorbellSet<'a> {
         self.layout.doorbell_slots()
     }
 
-    /// Reset every doorbell to STALE. Must only run while the communicator
-    /// is quiescent (between collectives).
+    /// Reset every doorbell **in this view's window** to STALE. Must only
+    /// run while the owning group is quiescent (between collectives);
+    /// windows of other process groups sharing the pool are untouched, so
+    /// concurrent subgroups never clobber each other's doorbells.
     pub fn reset_all(&self) -> Result<()> {
-        self.pool.zero(0, self.layout.db_region)?;
-        self.pool.flush(0, self.layout.db_region);
+        let base = self.layout.db_slot_base * DOORBELL_SLOT;
+        let len = self.layout.db_slot_span * DOORBELL_SLOT;
+        self.pool.zero(base, len)?;
+        self.pool.flush(base, len);
         Ok(())
     }
 
@@ -104,6 +108,114 @@ impl<'a> DoorbellSet<'a> {
                 );
             }
             std::thread::yield_now(); // sleep() in Listing 3
+        }
+    }
+}
+
+/// A sense-reversing barrier whose state lives **in the shared pool** — the
+/// cross-process analogue of `std::sync::Barrier` used by pool-rendezvous
+/// process groups (both for launch sequencing and for the plans' `Barrier`
+/// ops under the Naive/Aggregate variants).
+///
+/// `counter_off`/`sense_off` are byte offsets of two u32 words, each living
+/// in its own doorbell slot so the spinning never falsely shares. The
+/// barrier is reusable: each round bumps the sense word, and the counter is
+/// reset *before* the sense is published, so the next round's arrivals —
+/// which can only start after observing the bump — always see a zeroed
+/// counter.
+pub struct PoolBarrier<'a> {
+    pool: &'a ShmPool,
+    counter_off: usize,
+    sense_off: usize,
+    parties: u32,
+    policy: WaitPolicy,
+    /// Optional stale-mapper guard: `(offset, expected)` of a generation
+    /// word checked while spinning; a mismatch means the control plane was
+    /// re-initialized underneath us and waiting would hang forever.
+    guard: Option<(usize, u32)>,
+}
+
+impl<'a> PoolBarrier<'a> {
+    pub fn new(
+        pool: &'a ShmPool,
+        counter_off: usize,
+        sense_off: usize,
+        parties: usize,
+        policy: WaitPolicy,
+    ) -> Result<Self> {
+        if parties == 0 || parties > u32::MAX as usize {
+            bail!("pool barrier needs 1..=u32::MAX parties, got {parties}");
+        }
+        // Validate the offsets eagerly so `wait` cannot fail on bounds.
+        pool.atomic_u32(counter_off)?;
+        pool.atomic_u32(sense_off)?;
+        Ok(Self {
+            pool,
+            counter_off,
+            sense_off,
+            parties: parties as u32,
+            policy,
+            guard: None,
+        })
+    }
+
+    /// Fail waits fast when the u32 at `guard_off` stops matching
+    /// `expected` (the process-group generation stamp).
+    pub fn with_guard(mut self, guard_off: usize, expected: u32) -> Self {
+        self.guard = Some((guard_off, expected));
+        self
+    }
+
+    /// Arrive and wait for all parties. The last arrival releases everyone.
+    pub fn wait(&self) -> Result<()> {
+        let cnt = self.pool.atomic_u32(self.counter_off)?;
+        let sense = self.pool.atomic_u32(self.sense_off)?;
+        let gen = sense.load(Ordering::Acquire);
+        let arrived = cnt.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.parties {
+            // Reset the counter before publishing the sense bump (see the
+            // type-level comment for why this order is load-bearing), and
+            // flush both lines so non-coherent mappers observe them.
+            cnt.store(0, Ordering::Release);
+            self.pool.flush(self.counter_off, 4);
+            sense.store(gen.wrapping_add(1), Ordering::Release);
+            self.pool.flush(self.sense_off, 4);
+            return Ok(());
+        }
+        if arrived > self.parties {
+            bail!(
+                "pool barrier over-subscribed: {arrived} arrivals for {} parties",
+                self.parties
+            );
+        }
+        let start = Instant::now();
+        loop {
+            for _ in 0..self.policy.spin_iters {
+                if sense.load(Ordering::Acquire) != gen {
+                    return Ok(());
+                }
+                std::hint::spin_loop();
+            }
+            self.pool.flush(self.sense_off, 4);
+            if let Some((off, expected)) = self.guard {
+                let cur = self.pool.atomic_u32(off)?.load(Ordering::Acquire);
+                if cur != expected {
+                    bail!(
+                        "pool control plane re-initialized (generation {cur}, joined at \
+                         {expected}): stale mapper must re-bootstrap"
+                    );
+                }
+            }
+            if start.elapsed() > self.policy.timeout {
+                bail!(
+                    "pool barrier timed out after {:?} ({}/{} parties arrived — peer \
+                     process missing or deadlocked)",
+                    self.policy.timeout,
+                    cnt.load(Ordering::Acquire),
+                    self.parties
+                );
+            }
+            std::thread::yield_now();
         }
     }
 }
@@ -184,5 +296,84 @@ mod tests {
         let (pool, layout) = setup();
         let dbs = DoorbellSet::new(&pool, layout);
         assert!(dbs.ring(dbs.slots()).is_err());
+    }
+
+    #[test]
+    fn windowed_reset_leaves_other_windows_alone() {
+        let (pool, layout) = setup();
+        let lo = layout.with_doorbell_window(0, 8).unwrap();
+        let hi = layout.with_doorbell_window(8, 8).unwrap();
+        let dlo = DoorbellSet::new(&pool, lo);
+        let dhi = DoorbellSet::new(&pool, hi);
+        dlo.ring(3).unwrap();
+        dhi.ring(3).unwrap(); // absolute slot 11
+        dlo.reset_all().unwrap();
+        assert!(!dlo.is_ready(3).unwrap(), "own window reset");
+        assert!(dhi.is_ready(3).unwrap(), "neighbour window untouched");
+        // The two views' slot 3 are different absolute slots.
+        assert_ne!(
+            lo.doorbell_offset(3).unwrap(),
+            hi.doorbell_offset(3).unwrap()
+        );
+    }
+
+    #[test]
+    fn pool_barrier_releases_all_parties() {
+        let (pool, _) = setup();
+        pool.zero(0, 256).unwrap();
+        let n = 4usize;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..n {
+                let p = &pool;
+                handles.push(s.spawn(move || {
+                    let b = PoolBarrier::new(p, 0, 64, n, WaitPolicy::default()).unwrap();
+                    for _round in 0..5 {
+                        b.wait().unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        // After the final round the counter is back to 0.
+        assert_eq!(pool.atomic_u32(0).unwrap().load(Ordering::Acquire), 0);
+    }
+
+    #[test]
+    fn pool_barrier_times_out_without_peers() {
+        let (pool, _) = setup();
+        pool.zero(0, 256).unwrap();
+        let policy = WaitPolicy {
+            spin_iters: 8,
+            timeout: Duration::from_millis(50),
+        };
+        let b = PoolBarrier::new(&pool, 0, 64, 2, policy).unwrap();
+        let err = b.wait().unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn pool_barrier_guard_detects_stale_generation() {
+        let (pool, _) = setup();
+        pool.zero(0, 256).unwrap();
+        pool.atomic_u32(128).unwrap().store(7, Ordering::Release);
+        let policy = WaitPolicy {
+            spin_iters: 8,
+            timeout: Duration::from_secs(5),
+        };
+        let b = PoolBarrier::new(&pool, 0, 64, 2, policy)
+            .unwrap()
+            .with_guard(128, 7);
+        // Flip the generation from another thread while the barrier spins.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(20));
+                pool.atomic_u32(128).unwrap().store(8, Ordering::Release);
+            });
+            let err = b.wait().unwrap_err();
+            assert!(err.to_string().contains("re-initialized"), "{err}");
+        });
     }
 }

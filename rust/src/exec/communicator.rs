@@ -15,15 +15,15 @@
 
 use crate::collectives::backend::{validate_views, CollectiveBackend, ExecOutcome};
 use crate::collectives::cache::{PlanCache, PlanKey};
-use crate::collectives::ops::{CollectivePlan, Op};
+use crate::collectives::ops::{CollectivePlan, Op, ValidPlan};
 use crate::collectives::{CclConfig, Primitive};
-use crate::doorbell::{DoorbellSet, WaitPolicy};
+use crate::doorbell::{DoorbellSet, PoolBarrier, WaitPolicy};
 use crate::exec::rank::GroupShared;
 use crate::exec::reduce_engine::{ReduceEngine, ScalarReduceEngine};
 use crate::pool::{PoolLayout, ShmPool};
 use crate::tensor::{self, Dtype, TensorView, TensorViewMut};
 use crate::topology::ClusterSpec;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
@@ -65,6 +65,21 @@ impl Communicator {
         Ok(Self::assemble(spec.clone(), layout, pool))
     }
 
+    /// Communicator over an *existing* pool mapping with an explicit —
+    /// possibly windowed — layout. This is how `CommWorld`/`ProcessGroup`
+    /// stand up thread-local worlds and `split()` subgroups that share one
+    /// pool while owning disjoint doorbell and device windows.
+    pub fn over_pool(spec: &ClusterSpec, layout: PoolLayout, pool: Arc<ShmPool>) -> Result<Self> {
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        ensure!(
+            pool.len() >= layout.pool_size(),
+            "pool mapping is {} bytes but the layout needs {}",
+            pool.len(),
+            layout.pool_size()
+        );
+        Ok(Self::assemble(spec.clone(), layout, pool))
+    }
+
     fn assemble(spec: ClusterSpec, layout: PoolLayout, pool: Arc<ShmPool>) -> Self {
         Self {
             spec,
@@ -90,6 +105,12 @@ impl Communicator {
         self
     }
 
+    /// In-place variant of [`Communicator::with_wait_policy`] (used by
+    /// `ProcessGroup`, which owns its communicator behind an enum).
+    pub fn set_wait_policy(&mut self, policy: WaitPolicy) {
+        self.wait_policy = policy;
+    }
+
     pub fn spec(&self) -> &ClusterSpec {
         &self.spec
     }
@@ -109,14 +130,16 @@ impl Communicator {
     }
 
     /// Plan a collective through the cache: repeated steady-state calls
-    /// with the same `(primitive, cfg, n_elems, dtype)` reuse the plan.
+    /// with the same `(primitive, cfg, n_elems, dtype)` reuse the plan —
+    /// and, because the cache hands out pre-validated [`ValidPlan`]s, they
+    /// also skip validation entirely.
     pub fn plan(
         &self,
         primitive: Primitive,
         cfg: &CclConfig,
         n_elems: usize,
         dtype: Dtype,
-    ) -> Result<Arc<CollectivePlan>> {
+    ) -> Result<ValidPlan> {
         self.cache
             .get_or_plan(&self.spec, &self.layout, primitive, cfg, n_elems, dtype)
     }
@@ -141,9 +164,15 @@ impl Communicator {
 
     /// Execute a pre-built plan over typed views. Returns the wall-clock
     /// duration of the collective (all streams joined).
+    ///
+    /// Takes a [`ValidPlan`], so no per-launch `validate()` runs here: the
+    /// planner/cache (or [`ValidPlan::new`] for hand-built plans) already
+    /// proved the op streams in-bounds and well-formed. The only remaining
+    /// check is O(1): the plan must have been validated against a pool no
+    /// larger than ours.
     pub fn run_plan_views(
         &self,
-        plan: &CollectivePlan,
+        plan: &ValidPlan,
         sends: &[TensorView<'_>],
         recvs: &mut [TensorViewMut<'_>],
     ) -> Result<Duration> {
@@ -152,12 +181,16 @@ impl Communicator {
         if plan.nranks != nr {
             bail!("plan is for {} ranks, communicator has {nr}", plan.nranks);
         }
+        ensure!(
+            plan.pool_size() <= self.layout.pool_size(),
+            "plan was validated for a {}-byte pool, communicator pool is only {}",
+            plan.pool_size(),
+            self.layout.pool_size()
+        );
         validate_views(plan, sends, recvs)?;
         for d in recvs.iter_mut() {
             d.as_bytes_mut()[..plan.recv_elems * esize].fill(0);
         }
-        plan.validate(self.layout.pool_size())
-            .map_err(|e| anyhow::anyhow!("invalid plan: {e}"))?;
 
         // One launch at a time over the shared pool (see `launch_lock`).
         let _launch = self.launch_lock.lock().unwrap();
@@ -197,7 +230,7 @@ impl Communicator {
                         pool: &pool_w,
                         layout,
                         policy,
-                        barrier: &wb,
+                        barrier: StreamSync::Local(&wb),
                         engine: None,
                         dtype,
                         send: send_bytes,
@@ -212,7 +245,7 @@ impl Communicator {
                         pool: &pool_r,
                         layout,
                         policy,
-                        barrier: &rb,
+                        barrier: StreamSync::Local(&rb),
                         engine: Some(&*engine),
                         dtype,
                         send: send_bytes,
@@ -263,9 +296,12 @@ impl Communicator {
         sends: &[Vec<f32>],
         recvs: &mut [Vec<f32>],
     ) -> Result<Duration> {
+        // v1 validated on every launch; sealing a fresh ValidPlan per call
+        // reproduces exactly that behaviour.
+        let plan = ValidPlan::new(plan.clone(), self.layout.pool_size())?;
         let send_views = tensor::views_f32(sends);
         let mut recv_views = tensor::views_f32_mut(recvs);
-        self.run_plan_views(plan, &send_views, &mut recv_views)
+        self.run_plan_views(&plan, &send_views, &mut recv_views)
     }
 
     /// In-place AllReduce: `bufs[r]` is rank r's contribution on input and
@@ -334,7 +370,7 @@ impl CollectiveBackend for Communicator {
 
     fn run(
         &self,
-        plan: &CollectivePlan,
+        plan: &ValidPlan,
         sends: &[TensorView<'_>],
         recvs: &mut [TensorViewMut<'_>],
     ) -> Result<ExecOutcome> {
@@ -343,29 +379,52 @@ impl CollectiveBackend for Communicator {
     }
 }
 
-struct StreamCtx<'a> {
-    rank: usize,
-    stream: &'static str,
-    ops: &'a [Op],
-    pool: &'a ShmPool,
-    layout: PoolLayout,
-    policy: WaitPolicy,
-    barrier: &'a Barrier,
-    engine: Option<&'a dyn ReduceEngine>,
-    dtype: Dtype,
-    send: &'a [u8],
-    recv: Option<&'a mut [u8]>,
+/// How a stream's `Op::Barrier` rendezvouses with its peers: an in-process
+/// `std::sync::Barrier` when all ranks live in one process, or a
+/// pool-resident [`PoolBarrier`] when the group spans OS processes.
+pub(crate) enum StreamSync<'a> {
+    Local(&'a Barrier),
+    Pool(&'a PoolBarrier<'a>),
+}
+
+impl StreamSync<'_> {
+    pub(crate) fn wait(&self) -> Result<()> {
+        match self {
+            StreamSync::Local(b) => {
+                b.wait();
+                Ok(())
+            }
+            StreamSync::Pool(b) => b.wait(),
+        }
+    }
+}
+
+pub(crate) struct StreamCtx<'a> {
+    pub(crate) rank: usize,
+    pub(crate) stream: &'static str,
+    pub(crate) ops: &'a [Op],
+    pub(crate) pool: &'a ShmPool,
+    pub(crate) layout: PoolLayout,
+    pub(crate) policy: WaitPolicy,
+    pub(crate) barrier: StreamSync<'a>,
+    pub(crate) engine: Option<&'a dyn ReduceEngine>,
+    pub(crate) dtype: Dtype,
+    pub(crate) send: &'a [u8],
+    pub(crate) recv: Option<&'a mut [u8]>,
 }
 
 /// Execute one stream's ops in order. On error, keep honouring the
 /// remaining `Barrier` ops so peers don't deadlock, then report.
-fn run_stream(mut ctx: StreamCtx<'_>) -> Result<()> {
+pub(crate) fn run_stream(mut ctx: StreamCtx<'_>) -> Result<()> {
     let dbs = DoorbellSet::new(ctx.pool, ctx.layout);
     let mut failure: Option<anyhow::Error> = None;
     for (i, op) in ctx.ops.iter().enumerate() {
         if failure.is_some() {
             if matches!(op, Op::Barrier) {
-                ctx.barrier.wait();
+                // Best effort: peers blocked at the barrier must still be
+                // released; a barrier failure here (cross-process timeout)
+                // changes nothing — we are already reporting an error.
+                let _ = ctx.barrier.wait();
             }
             continue;
         }
@@ -436,10 +495,7 @@ fn exec_op(ctx: &mut StreamCtx<'_>, dbs: &DoorbellSet<'_>, op: &Op) -> Result<()
             recv[dst_off..dst_off + len].copy_from_slice(&ctx.send[src_off..src_off + len]);
             Ok(())
         }
-        Op::Barrier => {
-            ctx.barrier.wait();
-            Ok(())
-        }
+        Op::Barrier => ctx.barrier.wait(),
     }
 }
 
@@ -585,7 +641,7 @@ mod tests {
                 &mut recv_views,
             )
             .unwrap_err();
-        assert!(format!("{err:#}").contains("only f32"), "{err:#}");
+        assert!(format!("{err:#}").contains("cannot reduce u8"), "{err:#}");
     }
 
     #[test]

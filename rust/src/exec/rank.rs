@@ -36,7 +36,7 @@
 //! complete is a usage error and fails fast instead of hanging.
 
 use crate::collectives::cache::PlanKey;
-use crate::collectives::ops::CollectivePlan;
+use crate::collectives::ops::{CollectivePlan, ValidPlan};
 use crate::collectives::{CclConfig, Primitive};
 use crate::exec::Communicator;
 use crate::tensor::{Tensor, TensorView, TensorViewMut};
@@ -61,7 +61,7 @@ pub struct PendingOp<'c> {
 /// Shared state of one nonblocking group (one plan shape, one launch).
 pub(super) struct GroupShared {
     key: PlanKey,
-    plan: Arc<CollectivePlan>,
+    plan: ValidPlan,
     state: Mutex<GroupState>,
 }
 
@@ -75,7 +75,7 @@ struct GroupState {
 }
 
 impl GroupShared {
-    fn new(key: PlanKey, plan: Arc<CollectivePlan>) -> Self {
+    fn new(key: PlanKey, plan: ValidPlan) -> Self {
         let nr = plan.nranks;
         Self {
             key,
@@ -152,7 +152,7 @@ impl<'c> RankComm<'c> {
                     .lock()
                     .unwrap()
                     .entry(key)
-                    .or_insert_with(|| Arc::new(GroupShared::new(key, Arc::clone(&plan)))),
+                    .or_insert_with(|| Arc::new(GroupShared::new(key, plan.clone()))),
             );
             let mut st = group.state.lock().unwrap();
             if st.joined == plan.nranks {

@@ -12,7 +12,7 @@
 //!   the L3 hot path.
 
 use crate::pool::ShmPool;
-use crate::tensor::Dtype;
+use crate::tensor::{bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, Dtype};
 use anyhow::{bail, Result};
 
 /// A backend that accumulates pool-resident data into a local buffer.
@@ -27,10 +27,13 @@ pub trait ReduceEngine: Send + Sync {
     ///
     /// `acc` is the raw recv-buffer window (`len % dtype.size_bytes() == 0`
     /// is checked by the caller). The provided implementation reduces F32
-    /// through [`ReduceEngine::reduce_into`] and rejects every other dtype
-    /// with a clear error — plans carrying those dtypes remain valid for
-    /// data movement and simulation, they just cannot *execute* a reducing
-    /// primitive until an engine supports them.
+    /// through [`ReduceEngine::reduce_into`]; F16 and Bf16 are summed by
+    /// widening each element to f32, accumulating, and rounding back on
+    /// store (round-to-nearest-even) — the standard mixed-precision
+    /// convention, so 16-bit AllReduce/Reduce/ReduceScatter now execute on
+    /// every engine. U8 has no reduction semantics and is rejected with a
+    /// clear error (such plans remain valid for data movement and
+    /// simulation).
     fn reduce_into_dtype(
         &self,
         pool: &ShmPool,
@@ -39,6 +42,24 @@ pub trait ReduceEngine: Send + Sync {
         dtype: Dtype,
     ) -> Result<()> {
         match dtype {
+            Dtype::F16 | Dtype::Bf16 => {
+                // Stage the pool chunk, then widen-accumulate-round per
+                // element. (The engine-specific fast path only exists for
+                // f32; 16-bit traffic is half the bytes, so the scalar
+                // convert loop is not the bottleneck.)
+                let mut staged = vec![0u8; acc.len()];
+                pool.read_bytes(pool_off, &mut staged)?;
+                let (widen, narrow): (fn(u16) -> f32, fn(f32) -> u16) = match dtype {
+                    Dtype::F16 => (f16_to_f32, f32_to_f16),
+                    _ => (bf16_to_f32, f32_to_bf16),
+                };
+                for (a, p) in acc.chunks_exact_mut(2).zip(staged.chunks_exact(2)) {
+                    let own = widen(u16::from_ne_bytes([a[0], a[1]]));
+                    let peer = widen(u16::from_ne_bytes([p[0], p[1]]));
+                    a.copy_from_slice(&narrow(own + peer).to_ne_bytes());
+                }
+                Ok(())
+            }
             Dtype::F32 => {
                 // SAFETY: f32 accepts every bit pattern; `align_to_mut`
                 // yields a non-empty prefix/suffix only when the buffer is
@@ -58,9 +79,10 @@ pub trait ReduceEngine: Send + Sync {
                 }
                 Ok(())
             }
-            other => bail!(
-                "reduce engine {:?} supports only f32 reductions; a {other} plan can be \
-                 planned and simulated but not executed with a reducing primitive",
+            Dtype::U8 => bail!(
+                "reduce engine {:?} cannot reduce u8 (no reduction semantics for raw \
+                 bytes); a u8 plan can be planned and simulated but not executed with a \
+                 reducing primitive",
                 self.name()
             ),
         }
@@ -167,17 +189,47 @@ mod tests {
     }
 
     #[test]
-    fn dtyped_entry_rejects_non_f32() {
+    fn dtyped_entry_rejects_u8() {
         let pool = ShmPool::anon(4096).unwrap();
         let mut acc = vec![0u8; 8];
-        for d in [Dtype::F16, Dtype::Bf16, Dtype::U8] {
-            let err = ScalarReduceEngine
-                .reduce_into_dtype(&pool, 0, &mut acc, d)
-                .unwrap_err();
-            assert!(
-                err.to_string().contains("only f32"),
-                "{d}: {err}"
-            );
+        let err = ScalarReduceEngine
+            .reduce_into_dtype(&pool, 0, &mut acc, Dtype::U8)
+            .unwrap_err();
+        assert!(err.to_string().contains("cannot reduce u8"), "{err}");
+    }
+
+    #[test]
+    fn dtyped_entry_reduces_f16_and_bf16_via_widening() {
+        let pool = ShmPool::anon(4096).unwrap();
+        for (dtype, widen, narrow) in [
+            (
+                Dtype::F16,
+                f16_to_f32 as fn(u16) -> f32,
+                f32_to_f16 as fn(f32) -> u16,
+            ),
+            (Dtype::Bf16, bf16_to_f32, f32_to_bf16),
+        ] {
+            let pool_vals = [1.5f32, -0.25, 3.0, 0.015625]; // exact in both
+            let acc_vals = [0.5f32, 0.75, -1.0, 2.0];
+            let pool_bytes: Vec<u8> = pool_vals
+                .iter()
+                .flat_map(|v| narrow(*v).to_ne_bytes())
+                .collect();
+            pool.write_bytes(512, &pool_bytes).unwrap();
+            let mut acc: Vec<u8> = acc_vals
+                .iter()
+                .flat_map(|v| narrow(*v).to_ne_bytes())
+                .collect();
+            ScalarReduceEngine
+                .reduce_into_dtype(&pool, 512, &mut acc, dtype)
+                .unwrap();
+            for (i, c) in acc.chunks_exact(2).enumerate() {
+                let got = widen(u16::from_ne_bytes([c[0], c[1]]));
+                // Inputs and sums are exactly representable here, so the
+                // widen-accumulate-round pipeline must be exact.
+                let want = pool_vals[i] + acc_vals[i];
+                assert_eq!(got, want, "{dtype} elem {i}");
+            }
         }
     }
 }

@@ -1,0 +1,443 @@
+//! Pool control plane: the header carved out of the front of a file-backed
+//! pool's doorbell region, through which independent OS processes
+//! rendezvous into one communicator world.
+//!
+//! This is the NCCL-unique-id bootstrap transplanted onto the paper's
+//! substrate: instead of exchanging an id out of band, every process maps
+//! the same DAX-style file (§2.2, Listing 1) and the *pool itself* is the
+//! rendezvous channel. Rank 0 initializes the header — magic, protocol
+//! version, a layout fingerprint, a generation stamp — then every rank
+//! registers in its per-rank slot and bumps the atomic arrival counter;
+//! construction completes when all `world_size` ranks have arrived.
+//!
+//! Safety rails:
+//! - **magic/version/layout-hash**: a joiner mapping a foreign file, or a
+//!   pool created for a different topology, fails with a clear error
+//!   instead of exchanging garbage;
+//! - **generation stamp**: every re-initialization bumps it, and all
+//!   control waits (rendezvous, barriers, launch epochs) recheck it — a
+//!   stale mapper from a previous world fails fast instead of hanging;
+//! - **per-rank join words**: a duplicate `--rank` is detected instead of
+//!   corrupting the arrival count.
+//!
+//! Region layout (64 B doorbell slots, one u32 word per concern):
+//!
+//! ```text
+//! slot 0..8    header: magic, version, layout-hash lo/hi, generation,
+//!              arrivals, world-size, (reserved)
+//! slot 8..64   per-rank slots: join count, split color, split key
+//! slot 64..    group windows; each group's first 8 slots are its launch
+//!              control (launch barrier, stream barrier, epoch), the rest
+//!              are plan doorbells
+//! ```
+
+use crate::doorbell::DOORBELL_SLOT;
+use crate::pool::ShmPool;
+use crate::topology::ClusterSpec;
+use crate::util::fnv1a64;
+use anyhow::{bail, ensure, Result};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// "CCLP" — marks an initialized pool control plane.
+pub const POOL_MAGIC: u32 = 0x4343_4C50;
+/// Bumped with every incompatible control-plane change.
+pub const POOL_PROTO_VERSION: u32 = 3;
+/// Header slots at the very base of the doorbell region.
+pub const HEADER_SLOTS: usize = 8;
+/// One rendezvous slot per global rank.
+pub const MAX_POOL_WORLD: usize = 56;
+/// Total slots reserved for the control plane (header + rank slots).
+pub const CTRL_SLOTS: usize = HEADER_SLOTS + MAX_POOL_WORLD;
+/// Control slots at the front of every group's doorbell window.
+pub const GROUP_CTRL_SLOTS: usize = 8;
+
+// Header word slot indices.
+const W_MAGIC: usize = 0;
+const W_VERSION: usize = 1;
+const W_LAYOUT_LO: usize = 2;
+const W_LAYOUT_HI: usize = 3;
+const W_GENERATION: usize = 4;
+const W_ARRIVALS: usize = 5;
+const W_WORLD: usize = 6;
+
+// Byte offsets of the words within a per-rank slot.
+const R_JOINS: usize = 0;
+const R_COLOR: usize = 4;
+const R_KEY: usize = 8;
+
+// Word indices within a group's control prefix (each in its own slot).
+pub(crate) const GC_LAUNCH_CNT: usize = 0;
+pub(crate) const GC_LAUNCH_SENSE: usize = 1;
+pub(crate) const GC_STREAM_CNT: usize = 2;
+pub(crate) const GC_STREAM_SENSE: usize = 3;
+pub(crate) const GC_EPOCH: usize = 4;
+
+/// Byte offset of group-control word `word` for a group whose doorbell
+/// window starts at absolute slot `window_base_slot`.
+pub(crate) fn group_word_off(window_base_slot: usize, word: usize) -> usize {
+    (window_base_slot + word) * DOORBELL_SLOT
+}
+
+/// Byte offset of the header's generation word (the stale-mapper guard).
+pub fn generation_offset() -> usize {
+    W_GENERATION * DOORBELL_SLOT
+}
+
+const POLL: Duration = Duration::from_millis(2);
+
+/// A joined view of the pool control plane.
+pub(crate) struct PoolControl {
+    pool: Arc<ShmPool>,
+    /// The generation this process joined; all waits recheck it.
+    pub(crate) generation: u32,
+}
+
+impl Clone for PoolControl {
+    /// Subgroups share the parent's joined view (same generation).
+    fn clone(&self) -> Self {
+        Self {
+            pool: Arc::clone(&self.pool),
+            generation: self.generation,
+        }
+    }
+}
+
+impl PoolControl {
+    fn header(&self, slot: usize) -> Result<&AtomicU32> {
+        self.pool.atomic_u32(slot * DOORBELL_SLOT)
+    }
+
+    fn rank_word(&self, rank: usize, byte: usize) -> Result<&AtomicU32> {
+        self.pool.atomic_u32((HEADER_SLOTS + rank) * DOORBELL_SLOT + byte)
+    }
+
+    /// Fingerprint of everything two mappers must agree on before they may
+    /// exchange a single byte through the pool.
+    pub(crate) fn layout_hash(spec: &ClusterSpec, pool_len: usize) -> u64 {
+        let mut buf = [0u8; 48];
+        for (i, v) in [
+            spec.nranks as u64,
+            spec.ndevices as u64,
+            spec.device_capacity as u64,
+            spec.db_region_size as u64,
+            pool_len as u64,
+            POOL_PROTO_VERSION as u64,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            buf[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
+        }
+        fnv1a64(&buf)
+    }
+
+    /// Communicator construction **is itself a collective**: rank 0
+    /// initializes the header, every rank registers and waits for all
+    /// `world` arrivals. Returns the joined control-plane view.
+    pub(crate) fn rendezvous(
+        pool: Arc<ShmPool>,
+        spec: &ClusterSpec,
+        rank: usize,
+        world: usize,
+        timeout: Duration,
+    ) -> Result<Self> {
+        ensure!(
+            world <= MAX_POOL_WORLD,
+            "pool bootstrap supports at most {MAX_POOL_WORLD} ranks, got {world}"
+        );
+        ensure!(rank < world, "rank {rank} out of range ({world} ranks)");
+        let hash = Self::layout_hash(spec, pool.len());
+        let mut ctrl = Self { pool, generation: 0 };
+        ctrl.generation = if rank == 0 {
+            ctrl.initialize(hash, world, spec.db_region_size)?
+        } else {
+            ctrl.await_header(hash, world, timeout)?
+        };
+        ctrl.join(rank, world, timeout)?;
+        Ok(ctrl)
+    }
+
+    /// Rank 0 only: wipe the doorbell region (header, rank slots, every
+    /// group's control words and plan doorbells), stamp a fresh generation
+    /// and publish the magic last so joiners never observe a half-written
+    /// header.
+    fn initialize(&self, hash: u64, world: usize, db_region: usize) -> Result<u32> {
+        let old_gen = self.header(W_GENERATION)?.load(Ordering::Acquire);
+        // Take the magic down first: joiners spin until it reappears.
+        self.header(W_MAGIC)?.store(0, Ordering::Release);
+        self.pool.flush(0, DOORBELL_SLOT);
+        self.pool.zero(0, db_region)?;
+        self.pool.flush(0, db_region);
+        let gen = old_gen.wrapping_add(1).max(1);
+        self.header(W_LAYOUT_LO)?.store(hash as u32, Ordering::Release);
+        self.header(W_LAYOUT_HI)?.store((hash >> 32) as u32, Ordering::Release);
+        self.header(W_GENERATION)?.store(gen, Ordering::Release);
+        self.header(W_WORLD)?.store(world as u32, Ordering::Release);
+        self.header(W_VERSION)?.store(POOL_PROTO_VERSION, Ordering::Release);
+        // Publish: everything above is visible before the magic (Release
+        // store + the joiner's Acquire load of the magic word).
+        self.header(W_MAGIC)?.store(POOL_MAGIC, Ordering::Release);
+        self.pool.flush(0, HEADER_SLOTS * DOORBELL_SLOT);
+        Ok(gen)
+    }
+
+    /// Joiner side: wait for a published header, then verify we mapped the
+    /// world we think we did.
+    fn await_header(&self, hash: u64, world: usize, timeout: Duration) -> Result<u32> {
+        let start = Instant::now();
+        let magic = self.header(W_MAGIC)?;
+        while magic.load(Ordering::Acquire) != POOL_MAGIC {
+            if start.elapsed() > timeout {
+                bail!(
+                    "pool bootstrap timed out after {timeout:?} waiting for rank 0 to \
+                     initialize the control plane (is rank 0 running against this path?)"
+                );
+            }
+            self.pool.flush(0, DOORBELL_SLOT);
+            std::thread::sleep(POLL);
+        }
+        let ver = self.header(W_VERSION)?.load(Ordering::Acquire);
+        ensure!(
+            ver == POOL_PROTO_VERSION,
+            "pool control plane speaks protocol {ver}, this build speaks {POOL_PROTO_VERSION}"
+        );
+        let lo = self.header(W_LAYOUT_LO)?.load(Ordering::Acquire) as u64;
+        let hi = self.header(W_LAYOUT_HI)?.load(Ordering::Acquire) as u64;
+        let found = (hi << 32) | lo;
+        ensure!(
+            found == hash,
+            "pool layout hash mismatch (found {found:#018x}, expected {hash:#018x}): the \
+             file at this path was created for a different topology — every rank must use \
+             identical ranks/devices/capacity/doorbell-region settings"
+        );
+        let w = self.header(W_WORLD)?.load(Ordering::Acquire) as usize;
+        ensure!(
+            w == world,
+            "pool world-size mismatch: rank 0 registered {w} ranks, this process expects \
+             {world}"
+        );
+        Ok(self.header(W_GENERATION)?.load(Ordering::Acquire))
+    }
+
+    /// Register this rank and wait for the full world. Re-joins
+    /// transparently when rank 0 re-initializes mid-wait (crash-restart);
+    /// a rank slot that is already taken *and* never re-initialized is
+    /// reported as a duplicate `--rank`.
+    fn join(&mut self, rank: usize, world: usize, timeout: Duration) -> Result<()> {
+        let start = Instant::now();
+        'rejoin: loop {
+            let gen = self.header(W_GENERATION)?.load(Ordering::Acquire);
+            self.generation = gen;
+            let prev = self.rank_word(rank, R_JOINS)?.fetch_add(1, Ordering::AcqRel);
+            if prev != 0 {
+                // Taken: either a duplicate rank in a live world, or the
+                // residue of a finished/crashed world rank 0 has not wiped
+                // yet. Wait for a re-initialization, then rejoin.
+                loop {
+                    if self.header(W_GENERATION)?.load(Ordering::Acquire) != gen {
+                        continue 'rejoin;
+                    }
+                    if start.elapsed() > timeout {
+                        bail!(
+                            "rank {rank} is already registered in this pool world \
+                             (join count {}): duplicate --rank, or a stale pool file \
+                             rank 0 never re-initialized — remove the file or restart \
+                             rank 0",
+                            prev + 1
+                        );
+                    }
+                    std::thread::sleep(POLL);
+                }
+            }
+            self.header(W_ARRIVALS)?.fetch_add(1, Ordering::AcqRel);
+            self.pool.flush(0, CTRL_SLOTS * DOORBELL_SLOT);
+            loop {
+                if self.header(W_GENERATION)?.load(Ordering::Acquire) != gen {
+                    // Rank 0 restarted underneath us; our registration was
+                    // wiped. Rejoin under the new generation. (A lost
+                    // arrival increment from the old generation can only
+                    // make `arrivals` overshoot, never undershoot — the
+                    // counter is a liveness gate, the launch barrier is the
+                    // actual synchronization point.)
+                    continue 'rejoin;
+                }
+                let a = self.header(W_ARRIVALS)?.load(Ordering::Acquire) as usize;
+                if a >= world {
+                    return Ok(());
+                }
+                if start.elapsed() > timeout {
+                    bail!(
+                        "pool rendezvous timed out after {timeout:?}: {a}/{world} ranks \
+                         arrived (start the missing ranks against the same pool path)"
+                    );
+                }
+                self.pool.flush(0, HEADER_SLOTS * DOORBELL_SLOT);
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+
+    /// Fail fast if the control plane was re-initialized since we joined.
+    pub(crate) fn check_generation(&self) -> Result<()> {
+        let cur = self.header(W_GENERATION)?.load(Ordering::Acquire);
+        if cur != self.generation {
+            bail!(
+                "pool control plane re-initialized (generation {cur}, joined at {}): \
+                 stale mapper must re-bootstrap",
+                self.generation
+            );
+        }
+        Ok(())
+    }
+
+    /// Publish this rank's `(color, key)` for an in-flight `split()`.
+    pub(crate) fn publish_split(&self, rank: usize, color: u32, key: u32) -> Result<()> {
+        self.rank_word(rank, R_COLOR)?.store(color, Ordering::Release);
+        self.rank_word(rank, R_KEY)?.store(key, Ordering::Release);
+        self.pool
+            .flush((HEADER_SLOTS + rank) * DOORBELL_SLOT, DOORBELL_SLOT);
+        Ok(())
+    }
+
+    /// Read a peer's published `(color, key)`.
+    pub(crate) fn read_split(&self, rank: usize) -> Result<(u32, u32)> {
+        Ok((
+            self.rank_word(rank, R_COLOR)?.load(Ordering::Acquire),
+            self.rank_word(rank, R_KEY)?.load(Ordering::Acquire),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ClusterSpec {
+        let mut s = ClusterSpec::new(2, 6, 1 << 20);
+        s.db_region_size = 64 * 128; // 128 slots
+        s
+    }
+
+    fn pool_for(s: &ClusterSpec) -> Arc<ShmPool> {
+        Arc::new(ShmPool::anon(s.ndevices * s.device_capacity).unwrap())
+    }
+
+    #[test]
+    fn two_ranks_rendezvous_over_one_pool() {
+        let s = spec();
+        let pool = pool_for(&s);
+        let (a, b) = std::thread::scope(|sc| {
+            let p0 = Arc::clone(&pool);
+            let p1 = Arc::clone(&pool);
+            let s0 = s.clone();
+            let s1 = s.clone();
+            let h0 = sc.spawn(move || {
+                PoolControl::rendezvous(p0, &s0, 0, 2, Duration::from_secs(10))
+            });
+            let h1 = sc.spawn(move || {
+                PoolControl::rendezvous(p1, &s1, 1, 2, Duration::from_secs(10))
+            });
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.generation, b.generation);
+        assert!(a.generation >= 1);
+        a.check_generation().unwrap();
+        // Split scratch round-trips through the per-rank slots.
+        a.publish_split(0, 7, 3).unwrap();
+        assert_eq!(b.read_split(0).unwrap(), (7, 3));
+    }
+
+    #[test]
+    fn layout_hash_mismatch_fails_the_joiner_fast() {
+        let s = spec();
+        let pool = pool_for(&s);
+        // Rank 0 stands up a world for `s`...
+        let ctrl = init_header(&pool, &s);
+        // ...a joiner that believes in a different topology must be
+        // rejected before exchanging anything.
+        let mut other = s.clone();
+        other.ndevices = 3;
+        other.device_capacity = 2 << 20; // same pool size, different shape
+        let err = PoolControl::rendezvous(
+            Arc::clone(&pool),
+            &other,
+            1,
+            2,
+            Duration::from_millis(300),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("layout hash mismatch"), "{err:#}");
+        drop(ctrl);
+    }
+
+    /// Initialize a header as rank 0 would, without blocking on the join
+    /// (world of 1 is below the ClusterSpec floor, so do it manually).
+    fn init_header(pool: &Arc<ShmPool>, s: &ClusterSpec) -> PoolControl {
+        let ctrl = PoolControl {
+            pool: Arc::clone(pool),
+            generation: 0,
+        };
+        let hash = PoolControl::layout_hash(s, pool.len());
+        let gen = ctrl.initialize(hash, 2, s.db_region_size).unwrap();
+        PoolControl {
+            pool: Arc::clone(pool),
+            generation: gen,
+        }
+    }
+
+    #[test]
+    fn reinitialization_trips_the_generation_guard() {
+        let s = spec();
+        let pool = pool_for(&s);
+        let old = init_header(&pool, &s);
+        old.check_generation().unwrap();
+        // A second world bootstraps over the same file: the stale handle's
+        // next control-plane touch fails fast.
+        let _new = init_header(&pool, &s);
+        let err = old.check_generation().unwrap_err();
+        assert!(format!("{err:#}").contains("re-initialized"), "{err:#}");
+    }
+
+    #[test]
+    fn duplicate_rank_is_reported() {
+        let s = spec();
+        let pool = pool_for(&s);
+        std::thread::scope(|sc| {
+            let p0 = Arc::clone(&pool);
+            let p1 = Arc::clone(&pool);
+            let p1b = Arc::clone(&pool);
+            let s0 = s.clone();
+            let s1 = s.clone();
+            let s1b = s.clone();
+            let h0 = sc.spawn(move || {
+                PoolControl::rendezvous(p0, &s0, 0, 2, Duration::from_secs(10))
+            });
+            let h1 = sc.spawn(move || {
+                PoolControl::rendezvous(p1, &s1, 1, 2, Duration::from_secs(10))
+            });
+            h0.join().unwrap().unwrap();
+            h1.join().unwrap().unwrap();
+            // World complete; a third process claiming rank 1 again must be
+            // told so (short timeout keeps the test fast).
+            let err = PoolControl::rendezvous(p1b, &s1b, 1, 2, Duration::from_millis(200))
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("already registered"), "{err:#}");
+        });
+    }
+
+    #[test]
+    fn hash_covers_every_layout_dimension() {
+        let s = spec();
+        let base = PoolControl::layout_hash(&s, 6 << 20);
+        let mut t = s.clone();
+        t.nranks = 3;
+        assert_ne!(PoolControl::layout_hash(&t, 6 << 20), base);
+        let mut t = s.clone();
+        t.db_region_size = 64 * 256;
+        assert_ne!(PoolControl::layout_hash(&t, 6 << 20), base);
+        assert_ne!(PoolControl::layout_hash(&s, 12 << 20), base);
+    }
+}

@@ -1,0 +1,889 @@
+//! Process-group communicator construction — the v3 API surface.
+//!
+//! The paper's premise is that *independent hosts* can run collectives by
+//! mapping the same `/dev/dax` region (§2.2, Listing 1). This module makes
+//! communicator construction itself a collective over that region:
+//!
+//! ```no_run
+//! # use cxl_ccl::prelude::*;
+//! // Thread-local world (all ranks in this process, today's executor):
+//! let spec = ClusterSpec::new(4, 6, 16 << 20);
+//! let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
+//!
+//! // Pool rendezvous (one process per rank, same file everywhere):
+//! // CommWorld::init(Bootstrap::pool("/dev/shm/ccl_pool", spec), rank, 4)
+//! ```
+//!
+//! - [`Bootstrap::ThreadLocal`] reproduces the in-process executor: one
+//!   [`ProcessGroup`] owns every rank, and `begin_rank(r, ..)` hands out
+//!   the per-rank nonblocking launches.
+//! - [`Bootstrap::Pool`] performs a real rendezvous through a control-plane
+//!   header carved out of the file-backed pool (magic/version/layout-hash
+//!   check, atomic rank-arrival counter, epoch counter, and a generation
+//!   stamp so stale mappers fail fast — see [`control`]). Each OS process
+//!   owns exactly one rank; `begin`/`wait` launches execute that rank's two
+//!   op streams against the shared mapping, synchronized purely through
+//!   in-pool doorbells and pool-resident barriers.
+//! - [`ProcessGroup::split`] (ncclCommSplit-style) builds subgroups that
+//!   share the pool but own **disjoint doorbell-slot windows and disjoint
+//!   device windows**, so two subgroups can launch concurrently without
+//!   touching each other's slots or data — the multi-tenant /
+//!   pipeline-parallel seam.
+//!
+//! Collective-call discipline (the usual CCL contract): every member of a
+//! group must issue the same sequence of group operations (`begin`+`wait`
+//! launches with identical `(primitive, cfg, n_elems, dtype)`, `split`,
+//! `barrier`) in the same order. After a `split`, the parent group's
+//! windows overlap its children's — launch on the children *or* the
+//! parent, not both concurrently.
+
+pub mod control;
+
+use crate::collectives::ops::ValidPlan;
+use crate::collectives::{CclConfig, PlanCache, Primitive};
+use crate::doorbell::{DoorbellSet, PoolBarrier, WaitPolicy};
+use crate::exec::communicator::{run_stream, StreamCtx, StreamSync};
+use crate::exec::reduce_engine::{ReduceEngine, ScalarReduceEngine};
+use crate::exec::{Communicator, PendingOp};
+use crate::pool::{PoolLayout, ShmPool};
+use crate::tensor::{Dtype, Tensor};
+use crate::topology::ClusterSpec;
+use anyhow::{bail, ensure, Context, Result};
+use control::{PoolControl, CTRL_SLOTS, GROUP_CTRL_SLOTS, MAX_POOL_WORLD};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How a [`ProcessGroup`] comes into existence.
+#[derive(Debug, Clone)]
+pub enum Bootstrap {
+    /// All ranks live in this process (thread-per-rank executor over an
+    /// anonymous shared mapping) — the pre-v3 behaviour.
+    ThreadLocal { spec: ClusterSpec },
+    /// Rendezvous through the control-plane header of a file-backed pool
+    /// at `path`: every rank is its own OS process mapping the same file.
+    Pool {
+        path: String,
+        spec: ClusterSpec,
+        /// How long construction may wait for the file / rank 0's header /
+        /// the remaining ranks.
+        join_timeout: Duration,
+    },
+}
+
+impl Bootstrap {
+    pub fn thread_local(spec: ClusterSpec) -> Self {
+        Bootstrap::ThreadLocal { spec }
+    }
+
+    /// Pool rendezvous at `path` (e.g. `/dev/shm/ccl_pool` on a host,
+    /// `/dev/dax0.0`-backed file on real CXL). Default join timeout: 60 s.
+    pub fn pool(path: impl Into<String>, spec: ClusterSpec) -> Self {
+        Bootstrap::Pool {
+            path: path.into(),
+            spec,
+            join_timeout: Duration::from_secs(60),
+        }
+    }
+
+    /// Adjust the pool-rendezvous join timeout (no effect on ThreadLocal).
+    pub fn with_join_timeout(self, join_timeout: Duration) -> Self {
+        match self {
+            Bootstrap::Pool { path, spec, .. } => Bootstrap::Pool { path, spec, join_timeout },
+            tl => tl,
+        }
+    }
+
+    fn spec(&self) -> &ClusterSpec {
+        match self {
+            Bootstrap::ThreadLocal { spec } | Bootstrap::Pool { spec, .. } => spec,
+        }
+    }
+}
+
+/// Entry point of the v3 surface: `CommWorld::init` is the `ncclCommInitRank`
+/// analogue — same `(rank, world_size)` contract, bootstrap selected by
+/// [`Bootstrap`].
+pub struct CommWorld;
+
+impl CommWorld {
+    /// Construct the world group. `world_size` must equal
+    /// `bootstrap.spec().nranks`; `rank` is this caller's rank. With
+    /// [`Bootstrap::ThreadLocal`] the returned group owns *all* ranks (call
+    /// it once per process, usually as rank 0); with [`Bootstrap::Pool`] it
+    /// owns exactly `rank`, and the call blocks until all `world_size`
+    /// processes have arrived at the pool.
+    pub fn init(bootstrap: Bootstrap, rank: usize, world_size: usize) -> Result<ProcessGroup> {
+        let spec = bootstrap.spec();
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        ensure!(
+            world_size == spec.nranks,
+            "world_size {world_size} does not match the topology's {} ranks",
+            spec.nranks
+        );
+        ensure!(rank < world_size, "rank {rank} out of range ({world_size} ranks)");
+        match bootstrap {
+            Bootstrap::ThreadLocal { spec } => Self::init_thread_local(spec, rank),
+            Bootstrap::Pool { path, spec, join_timeout } => {
+                Self::init_pool(&path, spec, rank, world_size, join_timeout)
+            }
+        }
+    }
+
+    fn init_thread_local(spec: ClusterSpec, rank: usize) -> Result<ProcessGroup> {
+        let full = PoolLayout::from_spec(&spec)?;
+        let total = full.doorbell_slots();
+        ensure!(
+            total > GROUP_CTRL_SLOTS,
+            "doorbell region too small: {total} slots cannot fit the {GROUP_CTRL_SLOTS}-slot \
+             group control prefix (grow ClusterSpec::db_region_size)"
+        );
+        let pool = Arc::new(ShmPool::anon(full.pool_size())?);
+        let layout = full.with_doorbell_window(GROUP_CTRL_SLOTS, total - GROUP_CTRL_SLOTS)?;
+        let comm = Communicator::over_pool(&spec, layout, pool)?;
+        Ok(ProcessGroup {
+            inner: GroupImpl::Local(LocalGroup {
+                comm,
+                window: 0..total,
+                members: (0..spec.nranks).collect(),
+            }),
+            bound_rank: rank,
+        })
+    }
+
+    fn init_pool(
+        path: &str,
+        spec: ClusterSpec,
+        rank: usize,
+        world: usize,
+        join_timeout: Duration,
+    ) -> Result<ProcessGroup> {
+        ensure!(
+            world <= MAX_POOL_WORLD,
+            "pool bootstrap supports at most {MAX_POOL_WORLD} ranks, got {world}"
+        );
+        let full = PoolLayout::from_spec(&spec)?;
+        let total = full.doorbell_slots();
+        ensure!(
+            total > CTRL_SLOTS + GROUP_CTRL_SLOTS,
+            "doorbell region too small for pool bootstrap: {total} slots, need more than \
+             {} for the control plane (grow ClusterSpec::db_region_size)",
+            CTRL_SLOTS + GROUP_CTRL_SLOTS
+        );
+        // Rank 0 creates (and owns) the backing file; everyone else
+        // attaches — never creating or truncating — retrying while rank 0
+        // is still standing the file up.
+        let pool = if rank == 0 {
+            Arc::new(ShmPool::dax_file(path, full.pool_size())?)
+        } else {
+            attach_with_retry(path, full.pool_size(), join_timeout)?
+        };
+        let ctrl = PoolControl::rendezvous(Arc::clone(&pool), &spec, rank, world, join_timeout)?;
+        let window = CTRL_SLOTS..total;
+        let layout = full.with_doorbell_window(
+            window.start + GROUP_CTRL_SLOTS,
+            window.end - window.start - GROUP_CTRL_SLOTS,
+        )?;
+        Ok(ProcessGroup {
+            inner: GroupImpl::Pool(PoolGroup {
+                pool,
+                ctrl,
+                spec: spec.clone(),
+                layout,
+                window,
+                members: (0..world).collect(),
+                grank: rank,
+                cache: PlanCache::new(),
+                engine: Arc::new(ScalarReduceEngine),
+                policy: WaitPolicy::default(),
+                epoch: AtomicU32::new(0),
+                op_lock: Mutex::new(()),
+            }),
+            bound_rank: rank,
+        })
+    }
+}
+
+fn attach_with_retry(path: &str, len: usize, timeout: Duration) -> Result<Arc<ShmPool>> {
+    let start = Instant::now();
+    loop {
+        match ShmPool::dax_file_attach(path, len) {
+            Ok(p) => return Ok(Arc::new(p)),
+            Err(e) => {
+                if start.elapsed() > timeout {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "attaching to pool {path} (rank 0 did not create a \
+                             {len}-byte pool within {timeout:?})"
+                        )
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// A communicator group: the world returned by [`CommWorld::init`], or a
+/// subgroup produced by [`ProcessGroup::split`]/[`ProcessGroup::split_all`].
+pub struct ProcessGroup {
+    inner: GroupImpl,
+    bound_rank: usize,
+}
+
+enum GroupImpl {
+    Local(LocalGroup),
+    Pool(PoolGroup),
+}
+
+/// All member ranks live in this process (thread-per-rank execution).
+struct LocalGroup {
+    comm: Communicator,
+    /// Absolute doorbell slots owned (incl. the group-control prefix).
+    window: Range<usize>,
+    /// Global rank of each group rank.
+    members: Vec<usize>,
+}
+
+/// One rank of a pool-rendezvous group, in this process.
+struct PoolGroup {
+    pool: Arc<ShmPool>,
+    ctrl: PoolControl,
+    /// This group's view of the topology (`nranks` = group size).
+    spec: ClusterSpec,
+    /// Plan view: doorbell window minus the control prefix, device window.
+    layout: PoolLayout,
+    /// Absolute doorbell slots owned (incl. the group-control prefix).
+    window: Range<usize>,
+    /// Global rank of each group rank.
+    members: Vec<usize>,
+    /// This process's rank within the group.
+    grank: usize,
+    cache: PlanCache,
+    engine: Arc<dyn ReduceEngine>,
+    policy: WaitPolicy,
+    /// Local launch counter; kept in lockstep with the in-pool epoch word
+    /// by the launch barrier.
+    epoch: AtomicU32,
+    /// Serializes this process's group operations (launch/split/barrier):
+    /// the launch barrier and epoch protocol assume one collective in
+    /// flight per member, so concurrent calls from two threads of one
+    /// process must queue — the pool-mode analogue of
+    /// `Communicator::launch_lock`.
+    op_lock: Mutex<()>,
+}
+
+impl ProcessGroup {
+    /// Number of ranks in this group.
+    pub fn world_size(&self) -> usize {
+        match &self.inner {
+            GroupImpl::Local(g) => g.members.len(),
+            GroupImpl::Pool(g) => g.members.len(),
+        }
+    }
+
+    /// The rank this handle acts as by default (its only local rank in
+    /// pool mode).
+    pub fn rank(&self) -> usize {
+        self.bound_rank
+    }
+
+    /// Global (world) rank of each group rank.
+    pub fn global_ranks(&self) -> &[usize] {
+        match &self.inner {
+            GroupImpl::Local(g) => &g.members,
+            GroupImpl::Pool(g) => &g.members,
+        }
+    }
+
+    /// Whether the group's ranks span OS processes.
+    pub fn is_multiprocess(&self) -> bool {
+        matches!(self.inner, GroupImpl::Pool(_))
+    }
+
+    /// Absolute doorbell slots this group owns (control prefix + plan
+    /// doorbells). Sibling subgroups report disjoint ranges — the
+    /// accounting behind the isolation guarantee.
+    pub fn doorbell_slot_range(&self) -> Range<usize> {
+        match &self.inner {
+            GroupImpl::Local(g) => g.window.clone(),
+            GroupImpl::Pool(g) => g.window.clone(),
+        }
+    }
+
+    /// Absolute device indices this group places data on.
+    pub fn device_range(&self) -> Range<usize> {
+        let l = self.layout();
+        l.device_base..l.device_base + l.device_span
+    }
+
+    /// The group's (windowed) pool layout.
+    pub fn layout(&self) -> &PoolLayout {
+        match &self.inner {
+            GroupImpl::Local(g) => g.comm.layout(),
+            GroupImpl::Pool(g) => &g.layout,
+        }
+    }
+
+    /// The whole-group in-process communicator (ThreadLocal groups only):
+    /// rank handles, typed-view collectives and the `CollectiveBackend`
+    /// impl all hang off it.
+    pub fn local_comm(&self) -> Result<&Communicator> {
+        match &self.inner {
+            GroupImpl::Local(g) => Ok(&g.comm),
+            GroupImpl::Pool(_) => bail!(
+                "pool-bootstrapped groups own a single rank per process; there is no \
+                 whole-world communicator handle"
+            ),
+        }
+    }
+
+    /// The group's plan cache (hit/miss/eviction counters).
+    pub fn plan_cache(&self) -> &PlanCache {
+        match &self.inner {
+            GroupImpl::Local(g) => g.comm.plan_cache(),
+            GroupImpl::Pool(g) => &g.cache,
+        }
+    }
+
+    /// Adjust doorbell/barrier waiting (timeouts for failure injection).
+    pub fn with_wait_policy(mut self, policy: WaitPolicy) -> Self {
+        match &mut self.inner {
+            GroupImpl::Local(g) => g.comm.set_wait_policy(policy),
+            GroupImpl::Pool(g) => g.policy = policy,
+        }
+        self
+    }
+
+    /// Plan (through the group's cache) without launching.
+    pub fn plan(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        dtype: Dtype,
+    ) -> Result<ValidPlan> {
+        match &self.inner {
+            GroupImpl::Local(g) => g.comm.plan(primitive, cfg, n_elems, dtype),
+            GroupImpl::Pool(g) => {
+                g.cache.get_or_plan(&g.spec, &g.layout, primitive, cfg, n_elems, dtype)
+            }
+        }
+    }
+
+    /// Begin the bound rank's part of a collective (nonblocking, NCCL
+    /// group-call style). Every member must begin with identical
+    /// `(primitive, cfg, n_elems, dtype)`; the launch happens on `wait`.
+    pub fn begin(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<GroupPending<'_>> {
+        self.begin_rank(self.bound_rank, primitive, cfg, n_elems, send, recv)
+    }
+
+    /// [`ProcessGroup::begin`] for an explicit group rank. ThreadLocal
+    /// groups accept any rank (they own them all); pool groups only their
+    /// own.
+    pub fn begin_rank(
+        &self,
+        rank: usize,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<GroupPending<'_>> {
+        match &self.inner {
+            GroupImpl::Local(g) => Ok(GroupPending {
+                inner: PendingInner::Local(
+                    g.comm.rank(rank)?.begin(primitive, cfg, n_elems, send, recv)?,
+                ),
+            }),
+            GroupImpl::Pool(g) => {
+                ensure!(
+                    rank == g.grank,
+                    "rank {rank} is not local to this process (pool bootstrap owns only \
+                     rank {})",
+                    g.grank
+                );
+                ensure!(
+                    send.dtype() == recv.dtype(),
+                    "send dtype {} does not match recv dtype {}",
+                    send.dtype(),
+                    recv.dtype()
+                );
+                let plan = self.plan(primitive, cfg, n_elems, send.dtype())?;
+                ensure!(
+                    send.len() >= plan.send_elems,
+                    "rank {rank} send tensor too small: {} < {} elems",
+                    send.len(),
+                    plan.send_elems
+                );
+                ensure!(
+                    recv.len() >= plan.recv_elems,
+                    "rank {rank} recv tensor too small: {} < {} elems",
+                    recv.len(),
+                    plan.recv_elems
+                );
+                Ok(GroupPending {
+                    inner: PendingInner::Pool { group: g, plan, send, recv },
+                })
+            }
+        }
+    }
+
+    /// Group-wide rendezvous. In pool mode this is a real cross-process
+    /// barrier through the group's control slots; thread-local groups are
+    /// trivially synchronized already.
+    pub fn barrier(&self) -> Result<()> {
+        match &self.inner {
+            GroupImpl::Local(_) => Ok(()),
+            GroupImpl::Pool(g) => {
+                let _op = g.op_lock.lock().unwrap();
+                g.ctrl.check_generation()?;
+                g.launch_barrier()?.wait()
+            }
+        }
+    }
+
+    /// ncclCommSplit for pool groups: a **collective** — every member calls
+    /// `split` with its `(color, key)`, the pairs travel through the
+    /// control plane, and each caller gets back the subgroup for its color
+    /// (members ordered by `(key, rank)`). Subgroups partition the parent's
+    /// doorbell window and device window, so sibling subgroups can launch
+    /// concurrently without sharing a single slot or device.
+    pub fn split(&self, color: usize, key: usize) -> Result<ProcessGroup> {
+        let g = match &self.inner {
+            GroupImpl::Local(_) => bail!(
+                "thread-local groups hold every rank in-process: call \
+                 split_all(&[(color, key); world]) once instead"
+            ),
+            GroupImpl::Pool(g) => g,
+        };
+        ensure!(
+            color <= u32::MAX as usize && key <= u32::MAX as usize,
+            "split color/key must fit in u32"
+        );
+        let _op = g.op_lock.lock().unwrap();
+        g.ctrl.check_generation()?;
+        let lb = g.launch_barrier()?;
+        // Round 1: everyone at the split point.
+        lb.wait()?;
+        g.ctrl.publish_split(g.members[g.grank], color as u32, key as u32)?;
+        // Round 2: all (color, key) pairs published.
+        lb.wait()?;
+        let entries: Vec<(usize, usize, usize)> = g
+            .members
+            .iter()
+            .enumerate()
+            .map(|(gr, &global)| -> Result<(usize, usize, usize)> {
+                let (c, k) = g.ctrl.read_split(global)?;
+                Ok((gr, c as usize, k as usize))
+            })
+            .collect::<Result<_>>()?;
+        // Round 3: all pairs read; the scratch slots are reusable.
+        lb.wait()?;
+        let parent_dev = g.layout.device_base..g.layout.device_base + g.layout.device_span;
+        let subs = partition_subgroups(&g.window, parent_dev, &entries)?;
+        // Each subgroup's first member wipes the subgroup window (it may
+        // hold stale plan doorbells from parent launches) before anyone
+        // builds barriers over it.
+        for sub in &subs {
+            if sub.members.first() == Some(&g.grank) {
+                let base = sub.db_window.start * crate::doorbell::DOORBELL_SLOT;
+                let len = sub.db_window.len() * crate::doorbell::DOORBELL_SLOT;
+                g.pool.zero(base, len)?;
+                g.pool.flush(base, len);
+            }
+        }
+        // Round 4: every subgroup window is clean.
+        lb.wait()?;
+        let my = subs
+            .into_iter()
+            .find(|s| s.members.contains(&g.grank))
+            .expect("every caller belongs to exactly one color");
+        let sub_rank = my
+            .members
+            .iter()
+            .position(|r| *r == g.grank)
+            .expect("member list contains the caller");
+        let (sub_spec, layout) = subgroup_view(&g.spec, &g.layout, &my)?;
+        let members: Vec<usize> = my.members.iter().map(|r| g.members[*r]).collect();
+        Ok(ProcessGroup {
+            inner: GroupImpl::Pool(PoolGroup {
+                pool: Arc::clone(&g.pool),
+                ctrl: g.ctrl.clone(),
+                spec: sub_spec,
+                layout,
+                window: my.db_window,
+                members,
+                grank: sub_rank,
+                cache: PlanCache::new(),
+                engine: Arc::clone(&g.engine),
+                policy: g.policy,
+                epoch: AtomicU32::new(0),
+                op_lock: Mutex::new(()),
+            }),
+            bound_rank: sub_rank,
+        })
+    }
+
+    /// The thread-local counterpart of [`ProcessGroup::split`]: one call
+    /// supplies every rank's `(color, key)` (index = group rank) and
+    /// returns one subgroup per distinct color, ascending. Each subgroup
+    /// owns all of its ranks in-process, exactly like the parent.
+    pub fn split_all(&self, assignment: &[(usize, usize)]) -> Result<Vec<ProcessGroup>> {
+        let g = match &self.inner {
+            GroupImpl::Local(g) => g,
+            GroupImpl::Pool(_) => bail!(
+                "pool-bootstrapped groups split collectively: every process calls \
+                 split(color, key)"
+            ),
+        };
+        ensure!(
+            assignment.len() == g.members.len(),
+            "need one (color, key) per rank: got {}, group has {}",
+            assignment.len(),
+            g.members.len()
+        );
+        let entries: Vec<(usize, usize, usize)> = assignment
+            .iter()
+            .enumerate()
+            .map(|(r, (c, k))| (r, *c, *k))
+            .collect();
+        let parent_layout = *g.comm.layout();
+        let parent_dev =
+            parent_layout.device_base..parent_layout.device_base + parent_layout.device_span;
+        let subs = partition_subgroups(&g.window, parent_dev, &entries)?;
+        subs.into_iter()
+            .map(|sub| {
+                let (sub_spec, layout) = subgroup_view(g.comm.spec(), &parent_layout, &sub)?;
+                let comm =
+                    Communicator::over_pool(&sub_spec, layout, Arc::clone(g.comm.pool()))?;
+                let members: Vec<usize> = sub.members.iter().map(|r| g.members[*r]).collect();
+                Ok(ProcessGroup {
+                    inner: GroupImpl::Local(LocalGroup {
+                        comm,
+                        window: sub.db_window,
+                        members,
+                    }),
+                    bound_rank: 0,
+                })
+            })
+            .collect()
+    }
+}
+
+/// A member's share of one subgroup, in parent-group coordinates.
+struct SubgroupPart {
+    /// Parent group ranks, ordered by `(key, rank)` — the subgroup's rank
+    /// order.
+    members: Vec<usize>,
+    /// Absolute doorbell slots (incl. the subgroup's control prefix).
+    db_window: Range<usize>,
+    /// Absolute devices.
+    dev_window: Range<usize>,
+}
+
+/// Deterministic split arithmetic shared by both bootstrap modes: distinct
+/// colors ascending, members ordered by `(key, rank)`, the parent's plan
+/// window and device window divided into equal chunks per color.
+fn partition_subgroups(
+    parent_window: &Range<usize>,
+    parent_dev: Range<usize>,
+    entries: &[(usize, usize, usize)],
+) -> Result<Vec<SubgroupPart>> {
+    let mut colors: Vec<usize> = entries.iter().map(|e| e.1).collect();
+    colors.sort_unstable();
+    colors.dedup();
+    let ncolors = colors.len();
+    let plan_start = parent_window.start + GROUP_CTRL_SLOTS;
+    let plan_span = parent_window.end.saturating_sub(plan_start);
+    let db_chunk = plan_span / ncolors;
+    ensure!(
+        db_chunk > GROUP_CTRL_SLOTS,
+        "doorbell window too small to split {ncolors} ways: {plan_span} plan slots leave \
+         {db_chunk} per subgroup, need more than {GROUP_CTRL_SLOTS} (grow \
+         ClusterSpec::db_region_size)"
+    );
+    let dev_span = parent_dev.end - parent_dev.start;
+    let dev_chunk = dev_span / ncolors;
+    ensure!(
+        dev_chunk >= 1,
+        "cannot split {dev_span} device(s) into {ncolors} subgroups: each subgroup needs \
+         at least one exclusive device for write isolation"
+    );
+    let mut out = Vec::with_capacity(ncolors);
+    for (i, &c) in colors.iter().enumerate() {
+        let mut ordered: Vec<(usize, usize)> = entries
+            .iter()
+            .filter(|e| e.1 == c)
+            .map(|e| (e.2, e.0)) // (key, parent rank)
+            .collect();
+        ordered.sort_unstable();
+        let members: Vec<usize> = ordered.into_iter().map(|(_, r)| r).collect();
+        ensure!(
+            members.len() >= 2,
+            "subgroup color {c} has {} member(s); the executor needs at least 2 ranks \
+             per group",
+            members.len()
+        );
+        let db0 = plan_start + i * db_chunk;
+        let dev0 = parent_dev.start + i * dev_chunk;
+        out.push(SubgroupPart {
+            members,
+            db_window: db0..db0 + db_chunk,
+            dev_window: dev0..dev0 + dev_chunk,
+        });
+    }
+    Ok(out)
+}
+
+/// Build a subgroup's `(spec, layout)` view from its windows.
+fn subgroup_view(
+    parent_spec: &ClusterSpec,
+    parent_layout: &PoolLayout,
+    sub: &SubgroupPart,
+) -> Result<(ClusterSpec, PoolLayout)> {
+    let mut sub_spec = parent_spec.clone();
+    sub_spec.nranks = sub.members.len();
+    sub_spec.ndevices = sub.dev_window.len();
+    let layout = parent_layout
+        .with_doorbell_window(
+            sub.db_window.start + GROUP_CTRL_SLOTS,
+            sub.db_window.len() - GROUP_CTRL_SLOTS,
+        )?
+        .with_device_window(sub.dev_window.start, sub.dev_window.len())?;
+    Ok((sub_spec, layout))
+}
+
+impl PoolGroup {
+    fn ctrl_word(&self, word: usize) -> Result<&AtomicU32> {
+        self.pool
+            .atomic_u32(control::group_word_off(self.window.start, word))
+    }
+
+    fn barrier_over(&self, cnt: usize, sense: usize, parties: usize) -> Result<PoolBarrier<'_>> {
+        Ok(PoolBarrier::new(
+            &self.pool,
+            control::group_word_off(self.window.start, cnt),
+            control::group_word_off(self.window.start, sense),
+            parties,
+            self.policy,
+        )?
+        .with_guard(control::generation_offset(), self.ctrl.generation))
+    }
+
+    /// One party per member process.
+    fn launch_barrier(&self) -> Result<PoolBarrier<'_>> {
+        self.barrier_over(
+            control::GC_LAUNCH_CNT,
+            control::GC_LAUNCH_SENSE,
+            self.members.len(),
+        )
+    }
+
+    /// One party per op stream (two per member) — backs `Op::Barrier`.
+    fn stream_barrier(&self) -> Result<PoolBarrier<'_>> {
+        self.barrier_over(
+            control::GC_STREAM_CNT,
+            control::GC_STREAM_SENSE,
+            2 * self.members.len(),
+        )
+    }
+
+    /// Execute this process's rank of `plan` against the shared pool.
+    ///
+    /// Launch protocol (per collective, all members):
+    /// 1. launch barrier — every member has finished its previous
+    ///    collective and is at this launch;
+    /// 2. group rank 0 resets the group's doorbell window and publishes the
+    ///    launch epoch; everyone else spins on the epoch word;
+    /// 3. each process runs its own rank's write/read streams; doorbells
+    ///    (and, for barrier variants, the pool stream barrier) are the only
+    ///    cross-process synchronization.
+    fn launch(&self, plan: &ValidPlan, send: &[u8], recv: &mut [u8]) -> Result<Duration> {
+        ensure!(
+            plan.nranks == self.members.len(),
+            "plan is for {} ranks, group has {}",
+            plan.nranks,
+            self.members.len()
+        );
+        // One collective in flight per process: concurrent callers queue
+        // here instead of double-arriving at the launch barrier.
+        let _op = self.op_lock.lock().unwrap();
+        self.ctrl.check_generation()?;
+        let my_epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        self.launch_barrier()?.wait()?;
+        let epoch_w = self.ctrl_word(control::GC_EPOCH)?;
+        if self.grank == 0 {
+            DoorbellSet::new(&self.pool, self.layout).reset_all()?;
+            epoch_w.store(my_epoch, Ordering::Release);
+            self.pool.flush(
+                control::group_word_off(self.window.start, control::GC_EPOCH),
+                4,
+            );
+        } else {
+            let start = Instant::now();
+            let epoch_off = control::group_word_off(self.window.start, control::GC_EPOCH);
+            while epoch_w.load(Ordering::Acquire) != my_epoch {
+                // Same discipline as every other cross-process wait: flush
+                // the line between probes (no-op on coherent hosts, load-
+                // bearing on a real non-coherent DAX mapping).
+                self.pool.flush(epoch_off, 4);
+                self.ctrl.check_generation()?;
+                if start.elapsed() > self.policy.timeout {
+                    bail!(
+                        "timed out waiting for group rank 0 to reset doorbells for \
+                         launch {my_epoch} (epoch word at {})",
+                        epoch_w.load(Ordering::Acquire)
+                    );
+                }
+                std::thread::yield_now();
+            }
+        }
+        let esize = plan.elem_bytes();
+        recv[..plan.recv_elems * esize].fill(0);
+        let rank_plan = &plan.ranks[self.grank];
+        let sb = self.stream_barrier()?;
+        let start = Instant::now();
+        let mut errors: Vec<anyhow::Error> = Vec::new();
+        std::thread::scope(|scope| {
+            let pool: &ShmPool = &self.pool;
+            let layout = self.layout;
+            let policy = self.policy;
+            let engine: &dyn ReduceEngine = &*self.engine;
+            let dtype = plan.dtype;
+            let write_ops = &rank_plan.write_ops;
+            let read_ops = &rank_plan.read_ops;
+            let sb = &sb;
+            let grank = self.grank;
+            let send_w: &[u8] = send;
+            let w = scope.spawn(move || {
+                run_stream(StreamCtx {
+                    rank: grank,
+                    stream: "write",
+                    ops: write_ops,
+                    pool,
+                    layout,
+                    policy,
+                    barrier: StreamSync::Pool(sb),
+                    engine: None,
+                    dtype,
+                    send: send_w,
+                    recv: None,
+                })
+            });
+            let r = scope.spawn(move || {
+                run_stream(StreamCtx {
+                    rank: grank,
+                    stream: "read",
+                    ops: read_ops,
+                    pool,
+                    layout,
+                    policy,
+                    barrier: StreamSync::Pool(sb),
+                    engine: Some(engine),
+                    dtype,
+                    send,
+                    recv: Some(recv),
+                })
+            });
+            for h in [w, r] {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => errors.push(e),
+                    Err(_) => errors.push(anyhow::anyhow!("stream thread panicked")),
+                }
+            }
+        });
+        if let Some(e) = errors.into_iter().next() {
+            return Err(e);
+        }
+        Ok(start.elapsed())
+    }
+}
+
+/// A begun-but-not-awaited group launch (either bootstrap mode).
+#[must_use = "a GroupPending does nothing until wait()ed"]
+pub struct GroupPending<'g> {
+    inner: PendingInner<'g>,
+}
+
+enum PendingInner<'g> {
+    Local(PendingOp<'g>),
+    Pool {
+        group: &'g PoolGroup,
+        plan: ValidPlan,
+        send: Tensor,
+        recv: Tensor,
+    },
+}
+
+impl GroupPending<'_> {
+    /// The group rank this launch belongs to.
+    pub fn rank(&self) -> usize {
+        match &self.inner {
+            PendingInner::Local(p) => p.rank(),
+            PendingInner::Pool { group, .. } => group.grank,
+        }
+    }
+
+    /// Block until the group's collective has run; returns this rank's
+    /// recv tensor and the launch's wall-clock duration.
+    pub fn wait(self) -> Result<(Tensor, Duration)> {
+        match self.inner {
+            PendingInner::Local(p) => p.wait(),
+            PendingInner::Pool { group, plan, send, mut recv } => {
+                let wall = {
+                    let mut view = recv.view_mut();
+                    group.launch(&plan, send.as_bytes(), view.as_bytes_mut())?
+                };
+                Ok((recv, wall))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_deterministic_and_disjoint() {
+        // 4 ranks; color 1 holds ranks {0, 2}, color 0 holds {1, 3}; keys
+        // deliberately out of rank order.
+        let entries = vec![(0, 1, 5), (1, 0, 9), (2, 1, 2), (3, 0, 1)];
+        let subs = partition_subgroups(&(64..1024), 0..6, &entries).unwrap();
+        assert_eq!(subs.len(), 2);
+        // Colors ascending; members ordered by (key, rank).
+        assert_eq!(subs[0].members, vec![3, 1], "color 0: key 1 before key 9");
+        assert_eq!(subs[1].members, vec![2, 0], "color 1: key 2 before key 5");
+        // Windows are disjoint and inside the parent's plan window.
+        assert_eq!(subs[0].db_window, 72..548);
+        assert_eq!(subs[1].db_window, 548..1024);
+        assert_eq!(subs[0].dev_window, 0..3);
+        assert_eq!(subs[1].dev_window, 3..6);
+    }
+
+    #[test]
+    fn partition_rejects_starved_subgroups() {
+        // Singleton color: the executor needs >= 2 ranks per group.
+        let entries = vec![(0, 0, 0), (1, 0, 0), (2, 1, 0)];
+        let err = partition_subgroups(&(64..1024), 0..6, &entries).unwrap_err();
+        assert!(err.to_string().contains("at least 2 ranks"), "{err}");
+        // More colors than devices: no exclusive device per subgroup.
+        let entries: Vec<(usize, usize, usize)> = (0..8).map(|r| (r, r / 2, 0)).collect();
+        let err = partition_subgroups(&(64..1024), 0..3, &entries).unwrap_err();
+        assert!(err.to_string().contains("exclusive device"), "{err}");
+        // Doorbell window too small for two control prefixes.
+        let entries = vec![(0, 0, 0), (1, 0, 0), (2, 1, 0), (3, 1, 0)];
+        let err = partition_subgroups(&(64..88), 0..6, &entries).unwrap_err();
+        assert!(err.to_string().contains("doorbell window too small"), "{err}");
+    }
+}

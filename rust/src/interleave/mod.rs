@@ -28,14 +28,17 @@ pub struct BlockAddr {
 
 /// Type-1 placement (Eqs. 1–3). `block_stride` is the uniform per-block
 /// reservation (`block_size` in Eq. 3), which must be ≥ the block's bytes.
+///
+/// `ND` is the layout's *device window* span, so subgroup views interleave
+/// over their own devices only; the reported device is absolute.
 pub fn type1(layout: &PoolLayout, data_id: usize, block_stride: usize) -> Result<BlockAddr> {
-    let nd = layout.stacking.ndevices;
+    let nd = layout.device_span;
     let device_index = data_id % nd; // Eq. (1)
     let device_block_id = data_id / nd; // Eq. (2)
     // Eq. (3)
     let pool_offset = layout.block_location(device_index, device_block_id, block_stride)?;
     Ok(BlockAddr {
-        device: device_index,
+        device: layout.device_base + device_index,
         pool_offset,
     })
 }
@@ -58,7 +61,7 @@ pub fn type2(
     if data_id >= blocks_per_rank {
         bail!("data_id {data_id} >= blocks_per_rank {blocks_per_rank}");
     }
-    let nd = layout.stacking.ndevices;
+    let nd = layout.device_span;
     let dpr = nd / nranks; // Eq. (4): device_per_rank
     let (device_index, device_block_id) = if dpr >= 1 {
         // Exclusive range [rank·dpr, (rank+1)·dpr).
@@ -72,13 +75,14 @@ pub fn type2(
     };
     let pool_offset = layout.block_location(device_index, device_block_id, block_stride)?;
     Ok(BlockAddr {
-        device: device_index,
+        device: layout.device_base + device_index,
         pool_offset,
     })
 }
 
 /// Naive sequential placement: block `global_block_id` at
-/// `DB_offset + global_block_id · block_stride` in *flat* pool space.
+/// `window_base + global_block_id · block_stride` in *flat* pool space
+/// (window base = `DB_offset` for the default whole-pool view).
 /// No device awareness; returns the device of the first byte.
 pub fn naive(
     layout: &PoolLayout,
@@ -86,17 +90,19 @@ pub fn naive(
     block_stride: usize,
 ) -> Result<BlockAddr> {
     let off = layout
-        .db_region
+        .window_data_base()
         .checked_add(
             global_block_id
                 .checked_mul(block_stride)
                 .ok_or_else(|| anyhow::anyhow!("naive offset overflow"))?,
         )
         .ok_or_else(|| anyhow::anyhow!("naive offset overflow"))?;
-    if off + block_stride > layout.pool_size() {
+    if off + block_stride > layout.window_data_end() {
         bail!(
-            "naive placement: block {global_block_id} (stride {block_stride}) exceeds pool size {}",
-            layout.pool_size()
+            "naive placement: block {global_block_id} (stride {block_stride}) exceeds the \
+             view's data window [{}, {})",
+            layout.window_data_base(),
+            layout.window_data_end()
         );
     }
     Ok(BlockAddr {
@@ -216,6 +222,30 @@ mod tests {
     fn naive_rejects_pool_overflow() {
         let l = layout();
         assert!(naive(&l, 100, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn windowed_views_place_only_inside_their_devices() {
+        // Subgroup view over devices [3, 5): all three placement flavours
+        // must stay inside that range and interleave over 2 devices.
+        let l = layout().with_device_window(3, 2).unwrap();
+        for id in 0..8 {
+            let b = type1(&l, id, 1024).unwrap();
+            assert_eq!(b.device, 3 + id % 2);
+            assert!((3..5).contains(&l.stacking.device_of(b.pool_offset)));
+        }
+        for rank in 0..2 {
+            for did in 0..3 {
+                let b = type2(&l, 2, rank, did, 3, 1024).unwrap();
+                assert_eq!(b.device, 3 + rank, "1 device per rank in a 2-device window");
+                assert!((3..5).contains(&l.stacking.device_of(b.pool_offset)));
+            }
+        }
+        let n = naive(&l, 0, 4096).unwrap();
+        assert_eq!(n.device, 3);
+        assert_eq!(n.pool_offset, l.window_data_base());
+        // The window bound, not the pool bound, caps naive placement.
+        assert!(naive(&l, 3, 1 << 20).is_err());
     }
 
     #[test]

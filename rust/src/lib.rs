@@ -15,29 +15,36 @@
 //!   sum-reduction as a Pallas kernel, exported standalone for the rust
 //!   reduce engine.
 //!
-//! ## Quick start
+//! ## Quick start (v3: process groups)
+//!
+//! Communicator construction is itself a collective: [`group::CommWorld::init`]
+//! takes a [`group::Bootstrap`] plus `(rank, world_size)` and returns a
+//! [`group::ProcessGroup`]. `Bootstrap::thread_local` keeps every rank in
+//! this process (the classic thread-per-rank executor); `Bootstrap::pool`
+//! rendezvouses **independent OS processes** through the control-plane
+//! header of a shared file-backed pool — the paper's "map the same
+//! `/dev/dax` region" (§2.2) made into an API.
 //!
 //! ```no_run
 //! use cxl_ccl::prelude::*;
 //!
-//! let topo = ClusterSpec::new(4, 6, 64 << 20); // 4 ranks, 6 CXL devices
-//! let comm = Communicator::shm(&topo).unwrap();
+//! let spec = ClusterSpec::new(4, 6, 64 << 20); // 4 ranks, 6 CXL devices
+//! let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
 //! let cfg = CclVariant::All.config(4);
-//! // Per-rank nonblocking handles (ncclGroupStart/End-style): each rank
+//! // Nonblocking group launches (ncclGroupStart/End-style): each rank
 //! // begins its part; the group launches once all four have joined, and
-//! // repeated launches of the same shape reuse the cached plan.
-//! let pending: Vec<PendingOp<'_>> = (0..4)
+//! // repeated launches of the same shape reuse the cached ValidPlan.
+//! let pending: Vec<GroupPending<'_>> = (0..4)
 //!     .map(|r| {
-//!         comm.rank(r)
-//!             .unwrap()
-//!             .begin(
-//!                 Primitive::AllReduce,
-//!                 &cfg,
-//!                 1024,
-//!                 Tensor::from_f32(&vec![r as f32; 1024]),
-//!                 Tensor::zeros(Dtype::F32, 1024),
-//!             )
-//!             .unwrap()
+//!         pg.begin_rank(
+//!             r,
+//!             Primitive::AllReduce,
+//!             &cfg,
+//!             1024,
+//!             Tensor::from_f32(&vec![r as f32; 1024]),
+//!             Tensor::zeros(Dtype::F32, 1024),
+//!         )
+//!         .unwrap()
 //!     })
 //!     .collect();
 //! for p in pending {
@@ -46,22 +53,46 @@
 //! }
 //! ```
 //!
-//! The same plan runs on either backend through [`collectives::CollectiveBackend`]:
+//! In pool mode every process runs the same two lines with its own rank —
+//! `CommWorld::init(Bootstrap::pool("/dev/shm/ccl", spec), rank, 4)` then
+//! `pg.begin(..)`/`wait()` — and [`group::ProcessGroup::split`] carves
+//! subgroups with disjoint doorbell and device windows for multi-tenant or
+//! pipeline-parallel launches.
+//!
+//! Plans are validated **once**, at planning: the cache hands out
+//! [`collectives::ValidPlan`]s and every launch path accepts only those,
+//! so steady-state launches skip validation. The same sealed plan runs on
+//! either backend through [`collectives::CollectiveBackend`]:
 //!
 //! ```no_run
 //! # use cxl_ccl::prelude::*;
-//! # let topo = ClusterSpec::new(4, 6, 64 << 20);
-//! # let comm = Communicator::shm(&topo).unwrap();
-//! let plan = comm
+//! # let spec = ClusterSpec::new(4, 6, 64 << 20);
+//! # let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
+//! let comm = pg.local_comm().unwrap();
+//! let plan: ValidPlan = comm
 //!     .plan(Primitive::AllGather, &CclConfig::default_all(), 1024, Dtype::F32)
 //!     .unwrap();
 //! let fabric = SimFabric::new(*comm.layout());
-//! let real = run_with_scratch(&comm, &plan).unwrap(); // wall-clock over the pool
+//! let real = run_with_scratch(comm, &plan).unwrap(); // wall-clock over the pool
 //! let virt = run_with_scratch(&fabric, &plan).unwrap(); // calibrated virtual time
 //! println!("{} vs {}", real.seconds(), virt.seconds());
 //! ```
 //!
-//! See `examples/quickstart.rs` for a complete runnable version.
+//! See `examples/quickstart.rs` for a complete runnable version, and the
+//! README for the two-terminal multi-process walkthrough.
+//!
+//! ## v2 → v3 migration
+//!
+//! | v2 | v3 |
+//! |----|----|
+//! | `Communicator::shm(&spec)` | `CommWorld::init(Bootstrap::thread_local(spec), 0, n)` (or keep `Communicator::shm` for the bare executor) |
+//! | — | `CommWorld::init(Bootstrap::pool(path, spec), rank, n)` — true multi-process worlds |
+//! | `comm.rank(r)?.begin(..)` → `PendingOp` | `pg.begin_rank(r, ..)` → `GroupPending` (`comm.rank` still available via `pg.local_comm()`) |
+//! | `comm.plan(..) -> Arc<CollectivePlan>` | `comm.plan(..) -> ValidPlan` (validated once, at planning) |
+//! | `plan_collective[_dtype](..) -> CollectivePlan` | `-> ValidPlan`; hand-built plans seal via `ValidPlan::new(plan, pool_size)` |
+//! | `backend.run(&CollectivePlan, ..)` | `backend.run(&ValidPlan, ..)` — launches never re-validate |
+//! | — | `pg.split(color, key)` / `pg.split_all(..)` — subgroups with disjoint doorbell + device windows |
+//! | `CacheStats { hits, misses }` | gains `evictions`; `PlanCache` is LRU-bounded (`with_capacity`) |
 
 pub mod baseline;
 pub mod bench_util;
@@ -72,6 +103,7 @@ pub mod config;
 pub mod cost;
 pub mod doorbell;
 pub mod exec;
+pub mod group;
 pub mod interleave;
 pub mod pool;
 pub mod runtime;
@@ -86,8 +118,10 @@ pub mod prelude {
     pub use crate::collectives::{
         plan_collective, plan_collective_dtype, run_with_scratch, CacheStats, CclConfig,
         CclVariant, CollectiveBackend, CollectivePlan, ExecOutcome, PlanCache, Primitive,
+        ValidPlan,
     };
     pub use crate::exec::{Communicator, PendingOp, RankComm};
+    pub use crate::group::{Bootstrap, CommWorld, GroupPending, ProcessGroup};
     pub use crate::sim::fabric::SimFabric;
     pub use crate::tensor::{Dtype, Tensor, TensorView, TensorViewMut};
     pub use crate::topology::ClusterSpec;

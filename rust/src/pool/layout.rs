@@ -10,11 +10,26 @@ use crate::pool::address::SequentialStacking;
 use anyhow::{bail, Result};
 
 /// Static layout of the shared pool.
+///
+/// Since the v3 process-group redesign a layout is a *view*: it carries a
+/// doorbell-slot window and a device window so that subgroups produced by
+/// `ProcessGroup::split` share one pool while owning disjoint doorbell
+/// ranges and disjoint device ranges. The default view (every constructor)
+/// spans the whole pool, which reproduces the pre-window behaviour exactly.
 #[derive(Debug, Clone, Copy)]
 pub struct PoolLayout {
+    /// Full-pool device stacking (absolute address math, all devices).
     pub stacking: SequentialStacking,
     /// `DB_offset` — size of the doorbell region at the pool base.
     pub db_region: usize,
+    /// First doorbell slot this view may use (absolute slot index).
+    pub db_slot_base: usize,
+    /// Number of doorbell slots this view owns.
+    pub db_slot_span: usize,
+    /// First device this view places data on (absolute device index).
+    pub device_base: usize,
+    /// Devices this view places data on (`ND` in the placement equations).
+    pub device_span: usize,
 }
 
 impl PoolLayout {
@@ -28,6 +43,10 @@ impl PoolLayout {
         Ok(Self {
             stacking: SequentialStacking::new(ndevices, device_capacity),
             db_region,
+            db_slot_base: 0,
+            db_slot_span: db_region / DOORBELL_SLOT,
+            device_base: 0,
+            device_span: ndevices,
         })
     }
 
@@ -35,17 +54,51 @@ impl PoolLayout {
         Self::new(spec.ndevices, spec.device_capacity, spec.db_region_size)
     }
 
-    /// Number of doorbell slots.
-    pub fn doorbell_slots(&self) -> usize {
-        self.db_region / DOORBELL_SLOT
+    /// Restrict the view to doorbell slots `[base, base + span)` (absolute
+    /// slot indices within the pool's doorbell region).
+    pub fn with_doorbell_window(mut self, base: usize, span: usize) -> Result<Self> {
+        let total = self.db_region / DOORBELL_SLOT;
+        if span == 0 || base + span > total {
+            bail!(
+                "doorbell window [{base}, {base}+{span}) out of range ({total} slots in region)"
+            );
+        }
+        self.db_slot_base = base;
+        self.db_slot_span = span;
+        Ok(self)
     }
 
-    /// Pool byte offset of doorbell `i`'s status word.
-    pub fn doorbell_offset(&self, i: usize) -> Result<usize> {
-        if i >= self.doorbell_slots() {
-            bail!("doorbell index {i} out of range ({} slots)", self.doorbell_slots());
+    /// Restrict the view to devices `[base, base + span)` (absolute device
+    /// indices); placement math then treats the window as `ND` devices.
+    pub fn with_device_window(mut self, base: usize, span: usize) -> Result<Self> {
+        if span == 0 || base + span > self.stacking.ndevices {
+            bail!(
+                "device window [{base}, {base}+{span}) out of range ({} devices)",
+                self.stacking.ndevices
+            );
         }
-        Ok(i * DOORBELL_SLOT)
+        self.device_base = base;
+        self.device_span = span;
+        Ok(self)
+    }
+
+    /// Number of doorbell slots this view owns.
+    pub fn doorbell_slots(&self) -> usize {
+        self.db_slot_span
+    }
+
+    /// Absolute slot range this view owns within the doorbell region.
+    pub fn doorbell_slot_range(&self) -> std::ops::Range<usize> {
+        self.db_slot_base..self.db_slot_base + self.db_slot_span
+    }
+
+    /// Pool byte offset of the view's doorbell `i` status word (`i` is
+    /// relative to the view's window).
+    pub fn doorbell_offset(&self, i: usize) -> Result<usize> {
+        if i >= self.db_slot_span {
+            bail!("doorbell index {i} out of range ({} slots)", self.db_slot_span);
+        }
+        Ok((self.db_slot_base + i) * DOORBELL_SLOT)
     }
 
     /// Paper Eq. (3): absolute pool offset of block `device_block_id` on
@@ -61,8 +114,11 @@ impl PoolLayout {
         device_block_id: usize,
         block_size: usize,
     ) -> Result<usize> {
-        if device_index >= self.stacking.ndevices {
-            bail!("device index {device_index} out of range");
+        if device_index >= self.device_span {
+            bail!(
+                "device index {device_index} out of range ({} devices in window)",
+                self.device_span
+            );
         }
         let intra = self
             .db_region
@@ -79,7 +135,17 @@ impl PoolLayout {
                 self.stacking.device_capacity
             );
         }
-        Ok(device_index * self.stacking.device_capacity + intra)
+        Ok((self.device_base + device_index) * self.stacking.device_capacity + intra)
+    }
+
+    /// First data byte of this view's device window (naive placement base).
+    pub fn window_data_base(&self) -> usize {
+        self.device_base * self.stacking.device_capacity + self.db_region
+    }
+
+    /// One past the last pool byte of this view's device window.
+    pub fn window_data_end(&self) -> usize {
+        (self.device_base + self.device_span) * self.stacking.device_capacity
     }
 
     /// Usable data bytes per device.
@@ -157,5 +223,34 @@ mod tests {
         assert!(PoolLayout::new(6, 1 << 20, 0).is_err());
         assert!(PoolLayout::new(6, 1 << 20, 100).is_err());
         assert!(PoolLayout::new(6, 4096, 4096).is_err());
+    }
+
+    #[test]
+    fn doorbell_window_offsets_and_bounds() {
+        let l = layout().with_doorbell_window(16, 8).unwrap();
+        assert_eq!(l.doorbell_slots(), 8);
+        assert_eq!(l.doorbell_slot_range(), 16..24);
+        // Relative index 0 lands on absolute slot 16.
+        assert_eq!(l.doorbell_offset(0).unwrap(), 16 * 64);
+        assert_eq!(l.doorbell_offset(7).unwrap(), 23 * 64);
+        assert!(l.doorbell_offset(8).is_err());
+        // Window must fit within the region (4096 B = 64 slots).
+        assert!(layout().with_doorbell_window(60, 8).is_err());
+        assert!(layout().with_doorbell_window(0, 0).is_err());
+    }
+
+    #[test]
+    fn device_window_shifts_placement() {
+        let l = layout().with_device_window(3, 2).unwrap();
+        assert_eq!(l.device_span, 2);
+        let ds = 1usize << 20;
+        // Window-relative device 0 is absolute device 3.
+        assert_eq!(l.block_location(0, 0, 1000).unwrap(), 3 * ds + 4096);
+        assert_eq!(l.block_location(1, 2, 1000).unwrap(), 4 * ds + 4096 + 2000);
+        // Indices beyond the window are rejected.
+        assert!(l.block_location(2, 0, 64).is_err());
+        assert_eq!(l.window_data_base(), 3 * ds + 4096);
+        assert_eq!(l.window_data_end(), 5 * ds);
+        assert!(layout().with_device_window(5, 2).is_err());
     }
 }

@@ -64,7 +64,8 @@ impl ShmPool {
     }
 
     /// File-backed pool, mirroring the paper's Listing 1 against a DAX
-    /// device path. Creates (and truncates to `len`) the file if needed.
+    /// device path. Creates (and truncates to `len`) the file if needed;
+    /// the backing file is unlinked when this owning mapping drops.
     pub fn dax_file(path: &str, len: usize) -> Result<Self> {
         if len == 0 {
             bail!("pool length must be positive");
@@ -82,7 +83,59 @@ impl ShmPool {
             unsafe { libc::close(fd) };
             bail!("ftruncate({path}, {len}) failed: {e}");
         }
-        // Listing 1 line 2: map a `len`-byte window MAP_SHARED.
+        // Defence in depth: confirm the kernel really gave us `len` bytes
+        // before touching the mapping (a full tmpfs can say yes to
+        // ftruncate and still fault later on some filesystems).
+        if let Err(e) = Self::verify_size(fd, path, len) {
+            unsafe { libc::close(fd) };
+            return Err(e);
+        }
+        Self::map_fd(fd, path, len, Some(path.to_string()))
+    }
+
+    /// Attach to an *existing* file-backed pool created by another process
+    /// (the non-root side of a pool rendezvous). Never creates, truncates,
+    /// or unlinks: the creator owns the file's lifecycle. The file's actual
+    /// size is checked with `fstat` **before** the mapping is used, so a
+    /// short or foreign file is a clear error instead of a SIGBUS later.
+    pub fn dax_file_attach(path: &str, len: usize) -> Result<Self> {
+        if len == 0 {
+            bail!("pool length must be positive");
+        }
+        let cpath = std::ffi::CString::new(path).context("path contains NUL")?;
+        // SAFETY: cpath is a valid NUL-terminated string.
+        let fd = unsafe { libc::open(cpath.as_ptr(), libc::O_RDWR) };
+        if fd < 0 {
+            bail!("open({path}) failed: {}", std::io::Error::last_os_error());
+        }
+        if let Err(e) = Self::verify_size(fd, path, len) {
+            unsafe { libc::close(fd) };
+            return Err(e);
+        }
+        Self::map_fd(fd, path, len, None)
+    }
+
+    /// `fstat` the descriptor and reject files smaller than the expected
+    /// pool size (short create race, wrong path, foreign file).
+    fn verify_size(fd: i32, path: &str, len: usize) -> Result<()> {
+        // SAFETY: zeroed stat is a valid out-param for fstat.
+        let mut st: libc::stat = unsafe { std::mem::zeroed() };
+        // SAFETY: fd is a valid open descriptor, st points to writable memory.
+        if unsafe { libc::fstat(fd, &mut st) } != 0 {
+            bail!("fstat({path}) failed: {}", std::io::Error::last_os_error());
+        }
+        let actual = st.st_size as u64;
+        if actual < len as u64 {
+            bail!(
+                "pool file {path} is {actual} bytes, expected at least {len}: \
+                 not a (fully created) pool for this topology — refusing to map it"
+            );
+        }
+        Ok(())
+    }
+
+    /// Listing 1 line 2: map a `len`-byte window MAP_SHARED over `fd`.
+    fn map_fd(fd: i32, path: &str, len: usize, owned_path: Option<String>) -> Result<Self> {
         // SAFETY: fd valid, len positive.
         let base = unsafe {
             libc::mmap(
@@ -103,7 +156,7 @@ impl ShmPool {
             base: base.cast(),
             len,
             fd,
-            owned_path: Some(path.to_string()),
+            owned_path,
         })
     }
 
@@ -252,6 +305,41 @@ mod tests {
         drop(a);
         drop(b);
         assert!(!std::path::Path::new(path).exists(), "file unlinked on drop");
+    }
+
+    #[test]
+    fn attach_rejects_short_and_missing_files_cleanly() {
+        let path = format!("/dev/shm/cxl_ccl_test_attach_{}", std::process::id());
+        let _ = std::fs::remove_file(&path);
+        // Missing file: clear open error, nothing created.
+        let err = ShmPool::dax_file_attach(&path, 4096).unwrap_err();
+        assert!(format!("{err:#}").contains("open"), "{err:#}");
+        assert!(!std::path::Path::new(&path).exists(), "attach must not create");
+        // Short / foreign file: fstat check reports it before any fault.
+        std::fs::write(&path, b"not a pool").unwrap();
+        let err = ShmPool::dax_file_attach(&path, 4096).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("expected at least 4096"), "{msg}");
+        assert!(msg.contains("refusing to map"), "{msg}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn attach_shares_but_does_not_own_the_file() {
+        let path = format!("/dev/shm/cxl_ccl_test_attach2_{}", std::process::id());
+        let _ = std::fs::remove_file(&path);
+        let owner = ShmPool::dax_file(&path, 8192).unwrap();
+        let joiner = ShmPool::dax_file_attach(&path, 8192).unwrap();
+        owner.write_bytes(64, b"rendezvous").unwrap();
+        let mut got = vec![0u8; 10];
+        joiner.read_bytes(64, &mut got).unwrap();
+        assert_eq!(&got, b"rendezvous");
+        // Dropping the attached mapping leaves the file in place...
+        drop(joiner);
+        assert!(std::path::Path::new(&path).exists());
+        // ...dropping the owner unlinks it.
+        drop(owner);
+        assert!(!std::path::Path::new(&path).exists());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! one algorithm, two backends.
 
 use crate::collectives::backend::{validate_views, CollectiveBackend, ExecOutcome};
-use crate::collectives::ops::{CollectivePlan, Op};
+use crate::collectives::ops::{CollectivePlan, Op, ValidPlan};
 use crate::pool::PoolLayout;
 use crate::sim::constants as k;
 use crate::tensor::{TensorView, TensorViewMut};
@@ -398,7 +398,7 @@ impl CollectiveBackend for SimFabric {
     /// on the real executor).
     fn run(
         &self,
-        plan: &CollectivePlan,
+        plan: &ValidPlan,
         sends: &[TensorView<'_>],
         recvs: &mut [TensorViewMut<'_>],
     ) -> Result<ExecOutcome> {

@@ -281,6 +281,92 @@ impl Tensor {
     }
 }
 
+// ---- 16-bit float conversion (no `half` crate offline) -----------------
+//
+// The scalar reduce engine sums F16/Bf16 by widening each element to f32,
+// accumulating, and rounding back on store (round-to-nearest-even, the
+// hardware convention). These four conversions are the whole dependency.
+
+/// IEEE binary16 bits -> f32 (exact: every f16 is representable).
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = (bits >> 10) & 0x1f;
+    let mant = (bits & 0x03ff) as u32;
+    match (exp, mant) {
+        (0, 0) => f32::from_bits(sign),
+        (0, m) => {
+            // Subnormal: value = m * 2^-24 (exact in f32).
+            let v = (m as f32) * f32::from_bits(0x3380_0000);
+            if sign != 0 {
+                -v
+            } else {
+                v
+            }
+        }
+        (0x1f, m) => f32::from_bits(sign | 0x7f80_0000 | (m << 13)),
+        (e, m) => f32::from_bits(sign | ((e as u32 - 15 + 127) << 23) | (m << 13)),
+    }
+}
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even; overflow saturates to
+/// infinity, NaN stays NaN.
+pub fn f32_to_f16(v: f32) -> u16 {
+    let x = v.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp32 = (x >> 23) & 0xff;
+    let mant = x & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf / NaN (force a nonzero mantissa for NaN payloads that would
+        // truncate to zero).
+        let m = if mant == 0 { 0 } else { 0x0200 | ((mant >> 13) as u16 & 0x03ff) };
+        return sign | 0x7c00 | m;
+    }
+    let exp = exp32 as i32 - 127 + 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow -> signed zero
+        }
+        // Subnormal result: shift the (implicit-bit) mantissa into place
+        // with round-to-nearest-even.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - exp) as u32;
+        let lsb = (m >> shift) & 1;
+        let rounded = (m + (1 << (shift - 1)) - 1 + lsb) >> shift;
+        return sign | rounded as u16;
+    }
+    // Normal result: RNE on the 13 dropped bits.
+    let lsb = (mant >> 13) & 1;
+    let m = mant + 0x0fff + lsb;
+    if m & 0x0080_0000 != 0 {
+        // Mantissa carry bumps the exponent (mantissa becomes zero).
+        let exp = exp + 1;
+        if exp >= 0x1f {
+            return sign | 0x7c00;
+        }
+        return sign | ((exp as u16) << 10);
+    }
+    sign | ((exp as u16) << 10) | ((m >> 13) as u16 & 0x03ff)
+}
+
+/// bfloat16 bits -> f32 (exact: bf16 is a truncated f32).
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// f32 -> bfloat16 bits, round-to-nearest-even; NaN stays NaN.
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let x = v.to_bits();
+    if v.is_nan() {
+        // Keep sign + a quiet, nonzero mantissa.
+        return ((x >> 16) as u16) | 0x0040;
+    }
+    let lsb = (x >> 16) & 1;
+    (((x + 0x7fff + lsb) >> 16) & 0xffff) as u16
+}
+
 /// Wrap a slice of f32 buffers as one view per rank (migration helper for
 /// the ubiquitous `&[Vec<f32>]` call sites).
 pub fn views_f32(bufs: &[Vec<f32>]) -> Vec<TensorView<'_>> {
@@ -343,6 +429,57 @@ mod tests {
         assert!(TensorView::from_bytes(&b, Dtype::F16).is_ok());
         assert!(TensorView::from_bytes(&b, Dtype::U8).is_ok());
         assert!(Tensor::from_bytes(vec![0u8; 7], Dtype::Bf16).is_err());
+    }
+
+    #[test]
+    fn f16_known_values_and_round_trips() {
+        // Spot values.
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff, "f16 max");
+        assert_eq!(f32_to_f16(65520.0), 0x7c00, "halfway above max rounds to inf (RNE)");
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f16_to_f32(0x3555), 0.333_251_95, "1/3 in f16");
+        // Smallest normal and a subnormal.
+        assert_eq!(f16_to_f32(0x0400), 6.103_515_6e-5);
+        assert_eq!(f16_to_f32(0x0001), f32::from_bits(0x3380_0000));
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // Round-to-nearest-even at the 13-bit boundary: 1 + 2^-11 is
+        // exactly halfway between 1.0 and the next f16; even mantissa wins.
+        assert_eq!(f32_to_f16(1.0 + 2f32.powi(-11)), 0x3c00);
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2f32.powi(-11)), 0x3c02);
+        // Every f16 bit pattern (minus NaNs) survives a round trip.
+        for bits in 0..=u16::MAX {
+            let f = f16_to_f32(bits);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16(f), bits, "f16 round trip of {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_known_values_and_round_trips() {
+        assert_eq!(f32_to_bf16(1.0), 0x3f80);
+        assert_eq!(f32_to_bf16(-1.5), 0xbfc0);
+        assert_eq!(bf16_to_f32(0x4049), 3.140_625, "pi in bf16");
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7f80);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // RNE: 1 + 2^-8 is halfway between 1.0 and the next bf16.
+        assert_eq!(f32_to_bf16(1.0 + 2f32.powi(-8)), 0x3f80);
+        assert_eq!(f32_to_bf16(1.0 + 3.0 * 2f32.powi(-8)), 0x3f82);
+        // Overflow saturates through the rounding add.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x7f7f_ffff)), 0x7f80);
+        for bits in 0..=u16::MAX {
+            let f = bf16_to_f32(bits);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_bf16(f), bits, "bf16 round trip of {bits:#06x}");
+        }
     }
 
     #[test]

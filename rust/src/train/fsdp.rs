@@ -17,6 +17,7 @@
 use crate::baseline::{collective_time, IbParams};
 use crate::collectives::{CclConfig, CclVariant, CollectiveBackend, Primitive};
 use crate::exec::Communicator;
+use crate::group::{Bootstrap, CommWorld, ProcessGroup};
 use crate::runtime::{AdamUpdate, ModelStep, PjrtRuntime};
 use crate::sim::SimFabric;
 use crate::tensor::{views_f32, views_f32_mut, Dtype};
@@ -73,7 +74,10 @@ pub struct StepReport {
 pub struct FsdpTrainer {
     step_exe: ModelStep,
     adam: AdamUpdate,
-    comm: Communicator,
+    /// The communicator world (thread-local bootstrap: every rank is a
+    /// thread of this process; the v3 pool bootstrap is the seam for a
+    /// future process-per-rank trainer).
+    world: ProcessGroup,
     cfg: TrainConfig,
     nranks: usize,
     n_params: usize,
@@ -121,7 +125,7 @@ impl FsdpTrainer {
         // (worst case ~padded×4 bytes of reservation on one device).
         let per_dev = (2 * padded * 4 + (4 << 20)).next_power_of_two();
         let spec = ClusterSpec::new(nranks, cfg.ndevices, per_dev);
-        let comm = Communicator::shm(&spec)?;
+        let world = CommWorld::init(Bootstrap::thread_local(spec), 0, nranks)?;
 
         let shards: Vec<Vec<f32>> = (0..nranks)
             .map(|r| flat[r * shard_len..(r + 1) * shard_len].to_vec())
@@ -135,7 +139,7 @@ impl FsdpTrainer {
         Ok(Self {
             step_exe,
             adam,
-            comm,
+            world,
             cfg,
             nranks,
             n_params,
@@ -158,18 +162,31 @@ impl FsdpTrainer {
         self.n_params
     }
 
+    /// The process group the trainer communicates through.
+    pub fn world(&self) -> &ProcessGroup {
+        &self.world
+    }
+
+    /// The in-process communicator behind the world group (the thread-local
+    /// bootstrap guarantees it exists).
+    fn comm(&self) -> &Communicator {
+        self.world
+            .local_comm()
+            .expect("FSDP world uses the thread-local bootstrap")
+    }
+
     /// Virtual-time communication cost of one step's collectives (CXL
     /// fabric vs InfiniBand), for the §5.5 comparison. The plans come from
     /// the communicator's cache (shared with the real launches), so the
     /// steady-state loop replans nothing.
     pub fn sim_step_comm(&self) -> Result<(f64, f64)> {
-        let fab = SimFabric::new(*self.comm.layout());
+        let fab = SimFabric::new(*self.comm().layout());
         let ccl = self.cfg.variant.config(self.cfg.chunks);
         let ag = self
-            .comm
+            .comm()
             .plan(Primitive::AllGather, &ccl, self.shard_len, Dtype::F32)?;
         let rs = self
-            .comm
+            .comm()
             .plan(Primitive::ReduceScatter, &ccl, self.padded, Dtype::F32)?;
         let cxl = fab.run(&ag, &[], &mut [])?.seconds() + fab.run(&rs, &[], &mut [])?.seconds();
         let ib = IbParams::default();
@@ -188,14 +205,14 @@ impl FsdpTrainer {
         // cache and launch through the unified backend trait; from step 2
         // on the loop never replans.
         let ag_plan = self
-            .comm
+            .comm()
             .plan(Primitive::AllGather, &ccl, self.shard_len, Dtype::F32)?;
         let t0 = Instant::now();
         let mut gathered = vec![vec![0.0f32; self.padded]; self.nranks];
         {
             let send_views = views_f32(&self.shards);
             let mut recv_views = views_f32_mut(&mut gathered);
-            self.comm.run(&ag_plan, &send_views, &mut recv_views)?;
+            self.comm().run(&ag_plan, &send_views, &mut recv_views)?;
         }
         let mut comm_secs = t0.elapsed().as_secs_f64();
 
@@ -222,14 +239,14 @@ impl FsdpTrainer {
 
         // (3) ReduceScatter gradients -> per-rank reduced shard.
         let rs_plan = self
-            .comm
+            .comm()
             .plan(Primitive::ReduceScatter, &ccl, self.padded, Dtype::F32)?;
         let t2 = Instant::now();
         let mut grad_shards = vec![vec![0.0f32; self.shard_len]; self.nranks];
         {
             let send_views = views_f32(&grads);
             let mut recv_views = views_f32_mut(&mut grad_shards);
-            self.comm.run(&rs_plan, &send_views, &mut recv_views)?;
+            self.comm().run(&rs_plan, &send_views, &mut recv_views)?;
         }
         comm_secs += t2.elapsed().as_secs_f64();
 

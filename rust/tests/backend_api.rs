@@ -163,7 +163,7 @@ fn cached_steady_state_is_bitwise_identical_u8_alltoall() {
 }
 
 #[test]
-fn f16_payloads_move_but_refuse_to_reduce() {
+fn f16_payloads_move_and_reduce() {
     let spec = spec3();
     let comm = Communicator::shm(&spec).unwrap();
     let n = 3 * 256;
@@ -186,12 +186,34 @@ fn f16_payloads_move_but_refuse_to_reduce() {
             assert_eq!(&r.as_bytes()[s * n * 2..(s + 1) * n * 2], &bytes[..]);
         }
     }
-    // ...while reducing primitives are planned but rejected at execution.
-    let plan = comm.plan(Primitive::AllReduce, &cfg, n, Dtype::Bf16).unwrap();
+    // ...and since the v3 redesign, reducing primitives execute too: the
+    // engine widens to f32, accumulates, and rounds back on store. With
+    // exactly-representable inputs the 3-rank sum is exact.
+    let one_bf16 = cxl_ccl::tensor::f32_to_bf16(1.25f32).to_ne_bytes();
+    let send_bytes: Vec<u8> = std::iter::repeat(one_bf16).take(n).flatten().collect();
+    let sends: Vec<Tensor> = (0..3)
+        .map(|_| Tensor::from_bytes(send_bytes.clone(), Dtype::Bf16).unwrap())
+        .collect();
+    let mut recvs: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(Dtype::Bf16, n)).collect();
+    {
+        let send_views: Vec<TensorView<'_>> = sends.iter().map(Tensor::view).collect();
+        let mut recv_views: Vec<TensorViewMut<'_>> =
+            recvs.iter_mut().map(Tensor::view_mut).collect();
+        comm.collective(Primitive::AllReduce, &cfg, n, &send_views, &mut recv_views)
+            .unwrap();
+    }
+    for r in &recvs {
+        for chunk in r.as_bytes().chunks_exact(2) {
+            let v = cxl_ccl::tensor::bf16_to_f32(u16::from_ne_bytes([chunk[0], chunk[1]]));
+            assert_eq!(v, 3.75, "3 x 1.25 summed in bf16");
+        }
+    }
+    // U8 keeps the clear rejection (no reduction semantics for raw bytes).
+    let plan = comm.plan(Primitive::AllReduce, &cfg, n, Dtype::U8).unwrap();
     let fabric = SimFabric::new(*comm.layout());
     assert!(run_with_scratch(&fabric, &plan).unwrap().is_virtual(), "sim times any plan");
     let err = run_with_scratch(&comm, &plan).unwrap_err();
-    assert!(format!("{err:#}").contains("only f32"), "{err:#}");
+    assert!(format!("{err:#}").contains("cannot reduce u8"), "{err:#}");
 }
 
 #[test]

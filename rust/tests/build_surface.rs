@@ -8,22 +8,21 @@ use cxl_ccl::prelude::*;
 
 #[test]
 fn doc_quick_start_runs_end_to_end() {
-    // Verbatim shape of the lib.rs quick-start (4 ranks, 6 CXL devices).
-    let topo = ClusterSpec::new(4, 6, 64 << 20);
-    let comm = Communicator::shm(&topo).unwrap();
+    // Verbatim shape of the lib.rs v3 quick-start (4 ranks, 6 CXL devices).
+    let spec = ClusterSpec::new(4, 6, 64 << 20);
+    let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
     let cfg = CclVariant::All.config(4);
-    let pending: Vec<PendingOp<'_>> = (0..4)
+    let pending: Vec<GroupPending<'_>> = (0..4)
         .map(|r| {
-            comm.rank(r)
-                .unwrap()
-                .begin(
-                    Primitive::AllReduce,
-                    &cfg,
-                    1024,
-                    Tensor::from_f32(&vec![r as f32; 1024]),
-                    Tensor::zeros(Dtype::F32, 1024),
-                )
-                .unwrap()
+            pg.begin_rank(
+                r,
+                Primitive::AllReduce,
+                &cfg,
+                1024,
+                Tensor::from_f32(&vec![r as f32; 1024]),
+                Tensor::zeros(Dtype::F32, 1024),
+            )
+            .unwrap()
         })
         .collect();
     for p in pending {
@@ -35,14 +34,15 @@ fn doc_quick_start_runs_end_to_end() {
 
 #[test]
 fn doc_two_backend_snippet_runs() {
-    // The second lib.rs snippet: one cached plan, both backends.
-    let topo = ClusterSpec::new(4, 6, 64 << 20);
-    let comm = Communicator::shm(&topo).unwrap();
-    let plan = comm
+    // The second lib.rs snippet: one cached ValidPlan, both backends.
+    let spec = ClusterSpec::new(4, 6, 64 << 20);
+    let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
+    let comm = pg.local_comm().unwrap();
+    let plan: ValidPlan = comm
         .plan(Primitive::AllGather, &CclConfig::default_all(), 1024, Dtype::F32)
         .unwrap();
     let fabric = SimFabric::new(*comm.layout());
-    let real = run_with_scratch(&comm, &plan).unwrap();
+    let real = run_with_scratch(comm, &plan).unwrap();
     let virt = run_with_scratch(&fabric, &plan).unwrap();
     assert!(!real.is_virtual());
     assert!(virt.is_virtual());
@@ -64,6 +64,20 @@ fn prelude_exposes_the_documented_names() {
     assert_eq!(cache.stats(), CacheStats::default());
     let t = Tensor::zeros(Dtype::U8, 4);
     let _v: TensorView<'_> = t.view();
+    // v3 names: the bootstrap enum, the world initializer, process groups.
+    let _b: Bootstrap = Bootstrap::thread_local(spec.clone());
+    let _b2: Bootstrap = Bootstrap::pool("/dev/shm/unused", spec);
+    let pg: ProcessGroup = CommWorld::init(
+        Bootstrap::thread_local(ClusterSpec::new(2, 6, 4 << 20)),
+        0,
+        2,
+    )
+    .unwrap();
+    assert_eq!(pg.world_size(), 2);
+    assert!(!pg.is_multiprocess());
+    // The old per-rank handle surface is still reachable underneath.
+    let comm: &Communicator = pg.local_comm().unwrap();
+    let _rank: RankComm<'_> = comm.rank(1).unwrap();
 }
 
 #[test]
@@ -72,7 +86,7 @@ fn simulate_through_prelude_types() {
     // through the same trait the executor implements.
     let spec = ClusterSpec::paper(32 << 20);
     let layout = cxl_ccl::pool::PoolLayout::from_spec(&spec).unwrap();
-    let plan = plan_collective_dtype(
+    let plan: ValidPlan = plan_collective_dtype(
         Primitive::AllGather,
         &spec,
         &layout,

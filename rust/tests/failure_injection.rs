@@ -32,7 +32,7 @@ fn missing_producer_times_out_cleanly() {
     // Hand-craft a plan whose reader waits on a doorbell nobody rings,
     // with a tight timeout: the executor must return an error (and release
     // all threads), not deadlock.
-    use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
+    use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan, ValidPlan};
     let spec = ClusterSpec::new(2, 6, 4 << 20);
     let comm = Communicator::shm(&spec)
         .unwrap()
@@ -42,7 +42,8 @@ fn missing_producer_times_out_cleanly() {
         });
     // Circular dependency: each rank's ring is gated on the other's —
     // the classic producer-missing deadlock, expressed so the static plan
-    // validator (every wait has a matching set) still passes.
+    // validator (every wait has a matching set) still passes and the plan
+    // can be sealed as a ValidPlan.
     let mut r0 = RankPlan::new(0);
     r0.write_ops.push(Op::WaitDoorbell { db: 12 });
     r0.write_ops.push(Op::SetDoorbell { db: 11 });
@@ -59,6 +60,7 @@ fn missing_producer_times_out_cleanly() {
         recv_elems: 4,
         ranks: vec![r0, r1],
     };
+    let plan = ValidPlan::new(plan, comm.layout().pool_size()).unwrap();
     let sends = vec![vec![0.0f32; 4]; 2];
     let mut recvs = vec![vec![0.0f32; 4]; 2];
     let send_views = views_f32(&sends);
@@ -77,7 +79,7 @@ fn missing_producer_times_out_cleanly() {
 
 #[test]
 fn send_buffer_overrun_is_caught() {
-    use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan};
+    use cxl_ccl::collectives::ops::{CollectivePlan, Op, RankPlan, ValidPlan};
     let spec = ClusterSpec::new(2, 6, 4 << 20);
     let comm = Communicator::shm(&spec).unwrap();
     let mut r0 = RankPlan::new(0);
@@ -96,6 +98,9 @@ fn send_buffer_overrun_is_caught() {
         recv_elems: 4,
         ranks: vec![r0, RankPlan::new(1)],
     };
+    // Statically in-bounds of the pool (so it seals), but over-running the
+    // rank's send buffer — an execution-time failure by design.
+    let plan = ValidPlan::new(plan, comm.layout().pool_size()).unwrap();
     let sends = vec![vec![0.0f32; 4]; 2];
     let mut recvs = vec![vec![0.0f32; 4]; 2];
     let send_views = views_f32(&sends);

@@ -1,0 +1,241 @@
+//! Integration tests for the v3 process-group surface, thread-hosted:
+//! pool rendezvous between independent mappers of one file, bootstrap
+//! safety rails, and subgroup isolation under concurrent launches (the
+//! doorbell-range accounting the `split` design promises). The fork-based
+//! cross-OS-process acceptance test lives in `process_group_fork.rs`.
+
+use cxl_ccl::collectives::Op;
+use cxl_ccl::prelude::*;
+use std::time::Duration;
+
+fn pool_path(tag: &str) -> String {
+    format!("/dev/shm/cxl_ccl_pg_{}_{}", tag, std::process::id())
+}
+
+/// Small pool: 512 doorbell slots cover the 64-slot control plane plus
+/// plenty of plan doorbells.
+fn small_spec(nranks: usize) -> ClusterSpec {
+    let mut s = ClusterSpec::new(nranks, 6, 1 << 20);
+    s.db_region_size = 64 * 512;
+    s
+}
+
+#[test]
+fn pool_bootstrap_two_mappers_allgather_and_allreduce() {
+    let path = pool_path("two");
+    let _ = std::fs::remove_file(&path);
+    let n = 2 * 256;
+    let run_rank = |rank: usize| -> anyhow::Result<(Vec<u8>, Vec<f32>)> {
+        let boot = Bootstrap::pool(&path, small_spec(2))
+            .with_join_timeout(Duration::from_secs(20));
+        let pg = CommWorld::init(boot, rank, 2)?;
+        assert!(pg.is_multiprocess());
+        assert_eq!(pg.world_size(), 2);
+        let cfg = CclConfig::default_all();
+        let mine = vec![rank as f32 + 1.0; n];
+        // AllGather of distinct payloads...
+        let p = pg.begin(
+            Primitive::AllGather,
+            &cfg,
+            n,
+            Tensor::from_f32(&mine),
+            Tensor::zeros(Dtype::F32, 2 * n),
+        )?;
+        let (gathered, _) = p.wait()?;
+        // ...then an AllReduce on the same group (steady-state: the second
+        // launch of each shape hits this process's plan cache).
+        let p = pg.begin(
+            Primitive::AllReduce,
+            &cfg,
+            n,
+            Tensor::from_f32(&mine),
+            Tensor::zeros(Dtype::F32, n),
+        )?;
+        let (reduced, _) = p.wait()?;
+        Ok((gathered.into_bytes(), reduced.to_f32()?))
+    };
+    let (a, b) = std::thread::scope(|s| {
+        let h0 = s.spawn(|| run_rank(0));
+        let h1 = s.spawn(|| run_rank(1));
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let (ag0, ar0) = a.unwrap();
+    let (ag1, ar1) = b.unwrap();
+    assert_eq!(ag0, ag1, "AllGather result identical on every rank");
+    let mut expect = Vec::with_capacity(2 * n * 4);
+    for v in std::iter::repeat(1.0f32).take(n).chain(std::iter::repeat(2.0f32).take(n)) {
+        expect.extend_from_slice(&v.to_ne_bytes());
+    }
+    assert_eq!(ag0, expect, "concatenation of both ranks' payloads");
+    assert!(ar0.iter().all(|v| *v == 3.0), "1 + 2 reduced everywhere");
+    assert_eq!(ar0, ar1);
+    assert!(
+        !std::path::Path::new(&path).exists(),
+        "rank 0 unlinks the pool file on drop"
+    );
+}
+
+#[test]
+fn pool_bootstrap_rejects_layout_mismatch() {
+    let path = pool_path("hash");
+    let _ = std::fs::remove_file(&path);
+    // Rank 0 stands up a 6-device world; the joiner believes in 3 devices
+    // of double capacity — same pool bytes, different layout hash.
+    let (r0, r1) = std::thread::scope(|s| {
+        let p0 = path.clone();
+        let p1 = path.clone();
+        let h0 = s.spawn(move || {
+            let b = Bootstrap::pool(p0, small_spec(2))
+                .with_join_timeout(Duration::from_secs(2));
+            CommWorld::init(b, 0, 2).map(|_| ())
+        });
+        let h1 = s.spawn(move || {
+            let mut other = small_spec(2);
+            other.ndevices = 3;
+            other.device_capacity = 2 << 20;
+            let b = Bootstrap::pool(p1, other).with_join_timeout(Duration::from_secs(2));
+            CommWorld::init(b, 1, 2).map(|_| ())
+        });
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let e1 = r1.unwrap_err();
+    assert!(format!("{e1:#}").contains("layout hash mismatch"), "{e1:#}");
+    // Rank 0's rendezvous can never complete: it times out cleanly.
+    let e0 = r0.unwrap_err();
+    assert!(format!("{e0:#}").contains("timed out"), "{e0:#}");
+}
+
+#[test]
+fn split_subgroups_are_isolated_and_launch_concurrently() {
+    let spec = ClusterSpec::new(4, 6, 4 << 20);
+    let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
+    let subs = pg.split_all(&[(7, 0), (7, 1), (2, 0), (2, 1)]).unwrap();
+    assert_eq!(subs.len(), 2);
+    // Colors ascending: color 2 holds global ranks {2, 3}, color 7 {0, 1}.
+    assert_eq!(subs[0].global_ranks(), &[2, 3]);
+    assert_eq!(subs[1].global_ranks(), &[0, 1]);
+    // Doorbell-range accounting: disjoint windows inside the parent's.
+    let parent = pg.doorbell_slot_range();
+    let (w0, w1) = (subs[0].doorbell_slot_range(), subs[1].doorbell_slot_range());
+    assert!(
+        w0.end <= w1.start || w1.end <= w0.start,
+        "doorbell windows overlap: {w0:?} vs {w1:?}"
+    );
+    for w in [&w0, &w1] {
+        assert!(
+            w.start >= parent.start && w.end <= parent.end,
+            "window {w:?} outside parent {parent:?}"
+        );
+    }
+    // Device accounting too: write isolation needs disjoint devices.
+    let (d0, d1) = (subs[0].device_range(), subs[1].device_range());
+    assert!(
+        d0.end <= d1.start || d1.end <= d0.start,
+        "device windows overlap: {d0:?} vs {d1:?}"
+    );
+    // Every doorbell the subgroup plans actually touch stays inside its
+    // own window — checked against the emitted op streams.
+    let cfg = CclConfig::default_all();
+    let n = 2 * 512;
+    for sg in &subs {
+        let plan = sg.plan(Primitive::AllGather, &cfg, n, Dtype::F32).unwrap();
+        let layout = sg.layout();
+        let win = sg.doorbell_slot_range();
+        let mut rang = 0usize;
+        for rp in &plan.ranks {
+            for op in rp.write_ops.iter().chain(rp.read_ops.iter()) {
+                if let Op::SetDoorbell { db } | Op::WaitDoorbell { db } = *op {
+                    let abs = layout.doorbell_offset(db).unwrap() / 64;
+                    assert!(win.contains(&abs), "doorbell slot {abs} outside {win:?}");
+                    rang += 1;
+                }
+            }
+        }
+        assert!(rang > 0, "overlapped plans must use doorbells");
+    }
+    // Concurrent launches: both subgroups hammer their own windows at
+    // once; every result stays correct (no cross-talk through doorbells,
+    // devices, or plan caches).
+    std::thread::scope(|s| {
+        let handles: Vec<_> = subs
+            .iter()
+            .enumerate()
+            .map(|(gi, sg)| {
+                s.spawn(move || {
+                    for round in 0..8 {
+                        let fill = (gi * 10 + round) as f32 + 1.0;
+                        let pending: Vec<GroupPending<'_>> = (0..sg.world_size())
+                            .map(|r| {
+                                sg.begin_rank(
+                                    r,
+                                    Primitive::AllReduce,
+                                    &cfg,
+                                    n,
+                                    Tensor::from_f32(&vec![fill; n]),
+                                    Tensor::zeros(Dtype::F32, n),
+                                )
+                                .unwrap()
+                            })
+                            .collect();
+                        for p in pending {
+                            let (out, _) = p.wait().unwrap();
+                            assert!(
+                                out.to_f32().unwrap().iter().all(|v| *v == 2.0 * fill),
+                                "subgroup {gi} round {round}"
+                            );
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    // Steady state inside each subgroup: one miss, hits thereafter.
+    for sg in &subs {
+        let stats = sg.plan_cache().stats();
+        assert_eq!(stats.misses, 2, "AllGather probe + AllReduce loop");
+        assert!(stats.hits >= 8, "launch loop reuses the cached plan");
+    }
+}
+
+#[test]
+fn pool_split_is_a_collective_and_subgroups_run_concurrently() {
+    let path = pool_path("split");
+    let _ = std::fs::remove_file(&path);
+    let n = 2 * 128;
+    let run_rank = |rank: usize| -> anyhow::Result<(Vec<usize>, Vec<f32>)> {
+        let boot = Bootstrap::pool(&path, small_spec(4))
+            .with_join_timeout(Duration::from_secs(20));
+        let pg = CommWorld::init(boot, rank, 4)?;
+        // ncclCommSplit shape: every rank passes its (color, key).
+        let sub = pg.split(rank / 2, rank % 2)?;
+        assert_eq!(sub.world_size(), 2);
+        let cfg = CclConfig::default_all();
+        let fill = (rank / 2 + 1) as f32;
+        let p = sub.begin(
+            Primitive::AllReduce,
+            &cfg,
+            n,
+            Tensor::from_f32(&vec![fill; n]),
+            Tensor::zeros(Dtype::F32, n),
+        )?;
+        let (out, _) = p.wait()?;
+        Ok((sub.global_ranks().to_vec(), out.to_f32()?))
+    };
+    let results: Vec<anyhow::Result<(Vec<usize>, Vec<f32>)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4).map(|r| s.spawn(move || run_rank(r))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (rank, res) in results.into_iter().enumerate() {
+        let (members, reduced) = res.unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
+        let color = rank / 2;
+        assert_eq!(members, vec![2 * color, 2 * color + 1], "rank {rank} membership");
+        let want = 2.0 * (color + 1) as f32;
+        assert!(
+            reduced.iter().all(|v| *v == want),
+            "rank {rank}: subgroup sum isolated from the sibling subgroup"
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Fork-based acceptance test: AllGather and Broadcast run across **two OS
+//! processes** rendezvousing through a file-backed pool, and every byte
+//! matches the single-process executor's result.
+//!
+//! This file deliberately holds a single `#[test]`: forking is only safe
+//! while the process has no other active test threads, and one test keeps
+//! the binary minimal at fork time. The child re-enters the library as
+//! rank 1, never unwinds across the fork boundary, and reports via its
+//! exit status.
+
+use cxl_ccl::prelude::*;
+use std::time::Duration;
+
+const N: usize = 2 * 384;
+
+fn spec() -> ClusterSpec {
+    ClusterSpec::new(2, 6, 2 << 20)
+}
+
+/// Deterministic, irregular per-rank payload (bit-exact by construction).
+fn payload(rank: usize) -> Vec<f32> {
+    (0..N)
+        .map(|i| (i as f32) * 0.5 + (rank as f32) * 1000.0 - 17.25)
+        .collect()
+}
+
+/// Run this process's rank of the two collectives over the shared pool.
+fn run_pool_rank(path: &str, rank: usize) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
+    let boot = Bootstrap::pool(path, spec()).with_join_timeout(Duration::from_secs(30));
+    let pg = CommWorld::init(boot, rank, 2)?;
+    let cfg = CclConfig::default_all();
+    let p = pg.begin(
+        Primitive::AllGather,
+        &cfg,
+        N,
+        Tensor::from_f32(&payload(rank)),
+        Tensor::zeros(Dtype::F32, 2 * N),
+    )?;
+    let (ag, _) = p.wait()?;
+    let p = pg.begin(
+        Primitive::Broadcast,
+        &cfg,
+        N,
+        Tensor::from_f32(&payload(rank)),
+        Tensor::zeros(Dtype::F32, N),
+    )?;
+    let (bc, _) = p.wait()?;
+    Ok((ag.into_bytes(), bc.into_bytes()))
+}
+
+/// The same two collectives in one process (thread-per-rank world);
+/// returns `[rank0, rank1]` results for both primitives.
+fn single_process_reference() -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let pg = CommWorld::init(Bootstrap::thread_local(spec()), 0, 2).unwrap();
+    let cfg = CclConfig::default_all();
+    let collect = |primitive: Primitive, recv_elems: usize| -> Vec<Vec<u8>> {
+        let pending: Vec<GroupPending<'_>> = (0..2)
+            .map(|r| {
+                pg.begin_rank(
+                    r,
+                    primitive,
+                    &cfg,
+                    N,
+                    Tensor::from_f32(&payload(r)),
+                    Tensor::zeros(Dtype::F32, recv_elems),
+                )
+                .unwrap()
+            })
+            .collect();
+        pending.into_iter().map(|p| p.wait().unwrap().0.into_bytes()).collect()
+    };
+    (collect(Primitive::AllGather, 2 * N), collect(Primitive::Broadcast, N))
+}
+
+#[test]
+fn multiprocess_collectives_match_single_process_bitwise() {
+    let path = format!("/dev/shm/cxl_ccl_fork_{}", std::process::id());
+    let _ = std::fs::remove_file(&path);
+    // Compute the reference before forking: the child inherits it and can
+    // verify its own rank's bytes without any extra IPC.
+    let (ref_ag, ref_bc) = single_process_reference();
+    assert_eq!(ref_ag[0], ref_ag[1], "AllGather is rank-symmetric");
+
+    match unsafe { libc::fork() } {
+        -1 => panic!("fork failed: {}", std::io::Error::last_os_error()),
+        0 => {
+            // Child process: rank 1. Never unwind back into the harness —
+            // report through the exit status only.
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let (ag, bc) = run_pool_rank(&path, 1).expect("child rank 1 failed");
+                assert_eq!(ag, ref_ag[1], "child AllGather bitwise");
+                assert_eq!(bc, ref_bc[1], "child Broadcast bitwise");
+            }))
+            .is_ok();
+            unsafe { libc::_exit(if ok { 0 } else { 1 }) };
+        }
+        child => {
+            // Parent process: rank 0 (creates and owns the pool file).
+            let result = run_pool_rank(&path, 0);
+            // Reap the child before asserting so a parent-side failure
+            // never leaks a zombie.
+            let mut status = 0i32;
+            let reaped = unsafe { libc::waitpid(child, &mut status, 0) };
+            assert_eq!(reaped, child, "waitpid failed");
+            let (ag, bc) = result.expect("parent rank 0 failed");
+            assert_eq!(
+                ag, ref_ag[0],
+                "pool-mode AllGather must match the single-process result bitwise"
+            );
+            assert_eq!(
+                bc, ref_bc[0],
+                "pool-mode Broadcast must match the single-process result bitwise"
+            );
+            assert!(
+                libc::WIFEXITED(status) && libc::WEXITSTATUS(status) == 0,
+                "child rank failed (status {status:#x})"
+            );
+        }
+    }
+}

@@ -177,7 +177,7 @@ fn prop_plan_cache_hits_match_fresh_plans() {
             .get_or_plan(&spec, &layout, *p, cfg, *n, *dtype)
             .unwrap();
         let fresh = plan_collective_dtype(*p, &spec, &layout, cfg, *n, *dtype).unwrap();
-        assert_eq!(*cached, fresh, "{p} {cfg:?} n={n} {dtype}: cached != fresh");
+        assert_eq!(*cached, *fresh, "{p} {cfg:?} n={n} {dtype}: cached != fresh");
     }
     let first = cache.stats();
     assert_eq!(first.hits + first.misses, shapes.len());
@@ -188,11 +188,84 @@ fn prop_plan_cache_hits_match_fresh_plans() {
             .get_or_plan(&spec, &layout, *p, cfg, *n, *dtype)
             .unwrap();
         let fresh = plan_collective_dtype(*p, &spec, &layout, cfg, *n, *dtype).unwrap();
-        assert_eq!(*cached, fresh);
+        assert_eq!(*cached, *fresh);
     }
     let second = cache.stats();
     assert_eq!(second.misses, first.misses, "second pass must not replan");
     assert_eq!(second.hits, first.hits + shapes.len());
+}
+
+/// Invariant 7 (v3): F16/Bf16 reductions execute on the scalar engine via
+/// widen-to-f32 accumulate / round-on-store, and across random shapes the
+/// result tracks an f32 reference within rounding tolerance.
+#[test]
+fn prop_16bit_reductions_track_f32_reference() {
+    use cxl_ccl::tensor::{
+        bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, Tensor, TensorView, TensorViewMut,
+    };
+    let mut rng = SplitMix64::new(0x16B17);
+    for case in 0..8 {
+        let nranks = rng.range(2, 4);
+        let spec = ClusterSpec::new(nranks, 6, 16 << 20);
+        let comm = Communicator::shm(&spec).unwrap();
+        let n = rng.range(1, 1500) * nranks;
+        let p = [Primitive::AllReduce, Primitive::ReduceScatter, Primitive::Reduce]
+            [rng.range(0, 2)];
+        for (dtype, widen, narrow, tol) in [
+            (
+                Dtype::F16,
+                f16_to_f32 as fn(u16) -> f32,
+                f32_to_f16 as fn(f32) -> u16,
+                0.02f32,
+            ),
+            (Dtype::Bf16, bf16_to_f32, f32_to_bf16, 0.1),
+        ] {
+            // Random payloads squeezed through the 16-bit format so every
+            // input is exactly representable; the f32 reference then only
+            // differs by the per-step round-on-store.
+            let sends_f32: Vec<Vec<f32>> = (0..nranks)
+                .map(|_| {
+                    let mut v = vec![0.0f32; p.send_elems(n, nranks)];
+                    rng.fill_f32(&mut v);
+                    v.iter().map(|x| widen(narrow(*x))).collect()
+                })
+                .collect();
+            let sends: Vec<Tensor> = sends_f32
+                .iter()
+                .map(|v| {
+                    let bytes: Vec<u8> =
+                        v.iter().flat_map(|x| narrow(*x).to_ne_bytes()).collect();
+                    Tensor::from_bytes(bytes, dtype).unwrap()
+                })
+                .collect();
+            let recv_elems = p.recv_elems(n, nranks);
+            let mut recvs: Vec<Tensor> =
+                (0..nranks).map(|_| Tensor::zeros(dtype, recv_elems)).collect();
+            {
+                let send_views: Vec<TensorView<'_>> =
+                    sends.iter().map(Tensor::view).collect();
+                let mut recv_views: Vec<TensorViewMut<'_>> =
+                    recvs.iter_mut().map(Tensor::view_mut).collect();
+                comm.collective(p, &CclVariant::All.config(4), n, &send_views, &mut recv_views)
+                    .unwrap_or_else(|e| panic!("case {case} {p} {dtype} n={n}: {e:#}"));
+            }
+            let want = oracle::expected(p, &sends_f32, n, 0);
+            for r in 0..nranks {
+                for (i, (chunk, e)) in recvs[r]
+                    .as_bytes()
+                    .chunks_exact(2)
+                    .zip(&want[r])
+                    .enumerate()
+                {
+                    let got = widen(u16::from_ne_bytes([chunk[0], chunk[1]]));
+                    assert!(
+                        (got - e).abs() <= tol * e.abs().max(1.0),
+                        "case {case} {p} {dtype} rank {r} elem {i}: {got} vs f32 ref {e}"
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// Invariant 5: variant ordering — All never loses badly to Naive on

@@ -1,0 +1,79 @@
+//! Pins the v3 launch contract (acceptance criterion): plans are validated
+//! exactly once — when the planner/cache seals them into a [`ValidPlan`] —
+//! and steady-state launches perform **no** per-launch `validate()` call.
+//!
+//! This file deliberately holds a single `#[test]` so the process-wide
+//! validation counter is not perturbed by parallel tests in the same
+//! binary.
+
+use cxl_ccl::collectives::validate_calls;
+use cxl_ccl::prelude::*;
+use cxl_ccl::tensor::{views_f32, views_f32_mut};
+
+#[test]
+fn steady_state_launches_never_revalidate() {
+    let spec = ClusterSpec::new(3, 6, 8 << 20);
+    let comm = Communicator::shm(&spec).unwrap();
+    let cfg = CclConfig::default_all();
+    let n = 3 * 512;
+
+    // Planning validates exactly once, inside the ValidPlan gate.
+    let before_plan = validate_calls();
+    let plan = comm.plan(Primitive::AllGather, &cfg, n, Dtype::F32).unwrap();
+    assert_eq!(
+        validate_calls(),
+        before_plan + 1,
+        "planning seals the plan with exactly one validation"
+    );
+
+    let sends: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32; n]).collect();
+    let mut recvs = vec![vec![0.0f32; n * 3]; 3];
+
+    let before = validate_calls();
+    // Steady-state loop 1: the backend trait over cached views.
+    for _ in 0..5 {
+        let send_views = views_f32(&sends);
+        let mut recv_views = views_f32_mut(&mut recvs);
+        comm.run(&plan, &send_views, &mut recv_views).unwrap();
+    }
+    // Steady-state loop 2: per-rank nonblocking handles (cache hits).
+    for _ in 0..3 {
+        let pending: Vec<PendingOp<'_>> = (0..3)
+            .map(|r| {
+                comm.rank(r)
+                    .unwrap()
+                    .begin(
+                        Primitive::AllGather,
+                        &cfg,
+                        n,
+                        Tensor::from_f32(&sends[r]),
+                        Tensor::zeros(Dtype::F32, n * 3),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for p in pending {
+            p.wait().unwrap();
+        }
+    }
+    // Steady-state loop 3: the virtual-time backend.
+    let fab = SimFabric::new(*comm.layout());
+    for _ in 0..3 {
+        run_with_scratch(&fab, &plan).unwrap();
+    }
+    assert_eq!(
+        validate_calls(),
+        before,
+        "steady-state launches must not call CollectivePlan::validate"
+    );
+
+    // Hand-built plans still pay exactly one validation at the gate.
+    let inner: CollectivePlan = (**plan.as_arc()).clone();
+    let before_gate = validate_calls();
+    let sealed = ValidPlan::new(inner, comm.layout().pool_size()).unwrap();
+    assert_eq!(validate_calls(), before_gate + 1);
+    // ...and launching the re-sealed plan is again validation-free.
+    let before_run = validate_calls();
+    run_with_scratch(&comm, &sealed).unwrap();
+    assert_eq!(validate_calls(), before_run);
+}

@@ -1,8 +1,8 @@
 //! Quickstart: stand up the paper's topology (3 nodes, 6 CXL devices),
-//! run collectives through the v2 API — typed tensor views, per-rank
-//! nonblocking handles, and the one `CollectiveBackend` trait that drives
-//! both the real pool executor and the virtual-time fabric — and verify
-//! the numerics.
+//! run collectives through the current API — typed tensor views, per-rank
+//! nonblocking handles, process groups with typed pipelined launches, and
+//! the one `CollectiveBackend` trait that drives both the real pool
+//! executor and the virtual-time fabric — and verify the numerics.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -139,13 +139,14 @@ fn main() -> anyhow::Result<()> {
         );
     }
     // Disjoint doorbell + device windows let the subgroups launch at the
-    // same time without touching each other's slots or data.
+    // same time without touching each other's slots or data. Launches use
+    // the v4 typed nonblocking surface: issue, hold the futures, wait.
     std::thread::scope(|s| {
         for sg in &subs {
             s.spawn(move || {
-                let pending: Vec<GroupPending<'_>> = (0..sg.world_size())
+                let futures: Vec<CollectiveFuture<'_>> = (0..sg.world_size())
                     .map(|r| {
-                        sg.begin_rank(
+                        sg.collective_rank(
                             r,
                             Primitive::AllReduce,
                             &cfg,
@@ -156,13 +157,54 @@ fn main() -> anyhow::Result<()> {
                         .unwrap()
                     })
                     .collect();
-                for p in pending {
-                    let (out, _) = p.wait().unwrap();
+                for f in futures {
+                    let (out, _) = f.wait().unwrap();
                     assert!(out.to_f32().unwrap().iter().all(|v| *v == 2.0));
                 }
             });
         }
     });
     println!("concurrent subgroup AllReduce over one pool ✓");
+
+    // --- 6. v4: pipelined launches over even/odd epoch halves --------------
+    // Hold launch N's futures while issuing launch N+1: with the default
+    // depth 2, publication of N+1 overlaps the drain of N on disjoint
+    // doorbell slots and devices.
+    let world = CommWorld::init(
+        Bootstrap::thread_local(ClusterSpec::new(2, 6, 16 << 20)),
+        0,
+        2,
+    )?;
+    fn issue<'g>(
+        world: &'g ProcessGroup,
+        cfg: &CclConfig,
+        fill: f32,
+    ) -> anyhow::Result<Vec<CollectiveFuture<'g>>> {
+        (0..2)
+            .map(|r| {
+                world.collective_rank(
+                    r,
+                    Primitive::AllReduce,
+                    cfg,
+                    1024,
+                    Tensor::from_f32(&vec![fill; 1024]),
+                    Tensor::zeros(Dtype::F32, 1024),
+                )
+            })
+            .collect()
+    }
+    let first = issue(&world, &cfg, 1.0)?;
+    let second = issue(&world, &cfg, 10.0)?; // in flight while `first` drains
+    for (futs, want) in [(first, 2.0f32), (second, 20.0)] {
+        for f in futs {
+            let (out, _) = f.wait()?;
+            assert!(out.to_f32()?.iter().all(|v| *v == want));
+        }
+    }
+    world.flush()?;
+    println!(
+        "pipelined launches (depth {}) over epoch halves ✓",
+        world.pipeline_depth()
+    );
     Ok(())
 }

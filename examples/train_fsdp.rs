@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
         chunks: arg("--chunks", "8").parse()?,
         seed: arg("--seed", "0").parse()?,
         ndevices: arg("--devices", "6").parse()?,
+        comm_buckets: arg("--buckets", "2").parse()?,
     };
     println!(
         "FSDP case study: preset={} steps={} variant={:?} chunks={}",

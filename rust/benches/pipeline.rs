@@ -1,0 +1,154 @@
+//! Cross-launch pipelining bench: makespan of K steady-state launches at
+//! pipeline depth 1 (serialized) vs depth 2 (double-buffered epoch
+//! halves), wall-clock over the real shm executor and virtual-time on the
+//! calibrated fabric.
+//!
+//! Run: `cargo bench --bench pipeline`
+//! Env: `PIPE_LAUNCHES` (default 8), `PIPE_MB` per-rank MiB (default 4),
+//!      `BENCH_JSON=1` to also emit `BENCH_pipeline.json`.
+
+use cxl_ccl::bench_util::{banner, write_bench_json, Table};
+use cxl_ccl::collectives::builder::plan_collective;
+use cxl_ccl::collectives::{CclConfig, CollectivePlan, Primitive, ValidPlan};
+use cxl_ccl::group::{Bootstrap, CollectiveFuture, CommWorld};
+use cxl_ccl::pool::PoolLayout;
+use cxl_ccl::sim::SimFabric;
+use cxl_ccl::tensor::{Dtype, Tensor};
+use cxl_ccl::topology::ClusterSpec;
+use cxl_ccl::util::size::fmt_time;
+use std::time::Instant;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Wall-clock makespan of `k` AllGather launches at `depth` over a fresh
+/// thread-local world.
+fn real_makespan(spec: &ClusterSpec, n: usize, k: usize, depth: usize) -> anyhow::Result<f64> {
+    let nr = spec.nranks;
+    let pg = CommWorld::init(Bootstrap::thread_local(spec.clone()), 0, nr)?
+        .with_pipeline_depth(depth)?;
+    let cfg = CclConfig::default_all();
+    let sends: Vec<Tensor> = (0..nr).map(|r| Tensor::from_f32(&vec![r as f32; n])).collect();
+    // Warm the per-half plan caches so the measured loop never plans.
+    for _ in 0..2 {
+        let futs: Vec<CollectiveFuture<'_>> = (0..nr)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    sends[r].clone(),
+                    Tensor::zeros(Dtype::F32, n * nr),
+                )
+            })
+            .collect::<anyhow::Result<_>>()?;
+        for f in futs {
+            f.wait()?;
+        }
+    }
+    let t0 = Instant::now();
+    let mut all: Vec<Vec<CollectiveFuture<'_>>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let futs: Vec<CollectiveFuture<'_>> = (0..nr)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    sends[r].clone(),
+                    Tensor::zeros(Dtype::F32, n * nr),
+                )
+            })
+            .collect::<anyhow::Result<_>>()?;
+        all.push(futs);
+    }
+    for futs in all {
+        for f in futs {
+            f.wait()?;
+        }
+    }
+    pg.flush()?;
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+fn main() -> anyhow::Result<()> {
+    let k = env_usize("PIPE_LAUNCHES", 8);
+    let mb = env_usize("PIPE_MB", 4);
+    let nranks = 3usize;
+    let n = mb * (1 << 20) / 4; // f32 elems per rank
+    let dev_cap = ((nranks * n * 4 * 2) + (8 << 20)).next_power_of_two();
+    let spec = ClusterSpec::new(nranks, 6, dev_cap);
+    banner(&format!(
+        "cross-launch pipelining: {k} x AllGather, {mb} MiB per rank, {nranks} ranks"
+    ));
+
+    // Virtual time: each launch planned on the epoch half it runs on.
+    let layout = PoolLayout::from_spec(&spec)?;
+    let halves = layout.pipeline_halves()?;
+    let plans: Vec<ValidPlan> = (0..k)
+        .map(|i| {
+            plan_collective(
+                Primitive::AllGather,
+                &spec,
+                &halves[i % 2],
+                &CclConfig::default_all(),
+                n,
+            )
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let refs: Vec<&CollectivePlan> = plans.iter().map(|p| &**p).collect();
+    let fab = SimFabric::new(layout);
+    let sim_d1 = fab.simulate_pipelined(&refs, 1)?.total_time;
+    let sim_d2 = fab.simulate_pipelined(&refs, 2)?.total_time;
+
+    // Wall clock over the real executor.
+    let real_d1 = real_makespan(&spec, n, k, 1)?;
+    let real_d2 = real_makespan(&spec, n, k, 2)?;
+
+    let t = Table::new(&[8, 16, 16, 10]);
+    t.header(&["depth", "real makespan", "sim makespan", "sim x"]);
+    t.row(&[
+        "1".into(),
+        fmt_time(real_d1),
+        fmt_time(sim_d1),
+        "1.00".into(),
+    ]);
+    t.row(&[
+        "2".into(),
+        fmt_time(real_d2),
+        fmt_time(sim_d2),
+        format!("{:.2}", sim_d1 / sim_d2),
+    ]);
+    println!(
+        "wall-clock speedup {:.2}x | virtual-time speedup {:.2}x",
+        real_d1 / real_d2,
+        sim_d1 / sim_d2
+    );
+
+    if std::env::var("BENCH_JSON").as_deref() == Ok("1") {
+        write_bench_json(
+            "BENCH_pipeline.json",
+            "pipeline",
+            &[
+                ("nranks", nranks.to_string()),
+                ("launches", k.to_string()),
+                ("mb_per_rank", mb.to_string()),
+            ],
+            &[
+                format!(
+                    "{{\"depth\": 1, \"real_makespan_s\": {real_d1:.6}, \
+                     \"sim_makespan_s\": {sim_d1:.9}}}"
+                ),
+                format!(
+                    "{{\"depth\": 2, \"real_makespan_s\": {real_d2:.6}, \
+                     \"sim_makespan_s\": {sim_d2:.9}}}"
+                ),
+            ],
+        )?;
+        println!("wrote BENCH_pipeline.json");
+    }
+    Ok(())
+}

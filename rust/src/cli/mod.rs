@@ -17,10 +17,12 @@
 use crate::baseline::{collective_time, IbParams};
 use crate::bench_util::{banner, Table};
 use crate::collectives::builder::{plan_collective, plan_collective_dtype};
-use crate::collectives::{oracle, run_with_scratch, CclVariant, CollectiveBackend, Primitive};
+use crate::collectives::{
+    oracle, run_with_scratch, CclVariant, CollectiveBackend, CollectivePlan, Primitive, ValidPlan,
+};
 use crate::config::{KvFile, RunConfig};
 use crate::exec::Communicator;
-use crate::group::{Bootstrap, CommWorld};
+use crate::group::{Bootstrap, CollectiveFuture, CommWorld};
 use crate::pool::PoolLayout;
 use crate::sim::SimFabric;
 use crate::tensor::{views_f32, views_f32_mut, Dtype, Tensor};
@@ -28,7 +30,9 @@ use crate::topology::ClusterSpec;
 use crate::train::{FsdpTrainer, TrainConfig};
 use crate::util::size::{fmt_bytes, fmt_time, parse_size};
 use crate::util::{fnv1a64, SplitMix64};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
 
 /// Parsed command line.
 pub struct Args {
@@ -102,10 +106,10 @@ fn print_help() {
          info                     topology + artifact summary\n  \
          run    [--config F] [--primitive p] [--variant all|aggregate|naive]\n         \
                 [--size 16M] [--ranks 3] [--devices 6] [--chunks 8] [--iters 3]\n         \
-                [--backend shm|sim] [--dtype f32|f16|bf16|u8]\n         \
+                [--backend shm|sim] [--dtype f32|f16|bf16|u8] [--pipeline-depth 1|2]\n         \
                 [--bootstrap local|pool:<path> --rank R --world N]\n  \
          sweep  [--primitive p] [--ranks 3] [--max 1G]   virtual-time vs InfiniBand\n  \
-         train  [--preset tiny|e2e] [--steps 40] [--variant all] [--chunks 8]\n  \
+         train  [--preset tiny|e2e] [--steps 40] [--variant all] [--chunks 8] [--buckets 2]\n  \
          latency                  Table-1 style latency report\n\n\
          multi-process: start one `run --bootstrap pool:<path> --rank R --world N`\n\
          per rank (same path, same sizes); the processes rendezvous through the\n\
@@ -182,6 +186,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let rc = build_run_config(args)?;
     let dtype = Dtype::parse(&args.get_or("dtype", "f32"))?;
     let backend_name = args.get_or("backend", "shm");
+    if let Some(d) = args.get("pipeline-depth") {
+        let depth: usize = d.parse().context("--pipeline-depth must be an integer")?;
+        return cmd_run_pipelined(&rc, dtype, &backend_name, depth);
+    }
     // `--size` is bytes; the element count depends on the dtype.
     let n = rc.n_elems(dtype);
     banner(&format!(
@@ -261,6 +269,210 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `run --pipeline-depth D` (local bootstrap): drive `--iters` launches
+/// through the typed nonblocking group surface with up to `D` in flight.
+/// On the shm backend this measures the real makespan (and verifies the
+/// last iteration against the f32 oracle); on the sim backend it reports
+/// the virtual-time makespan of the pipelined sequence vs the serialized
+/// chain.
+fn cmd_run_pipelined(
+    rc: &RunConfig,
+    dtype: Dtype,
+    backend_name: &str,
+    depth: usize,
+) -> Result<()> {
+    ensure!(rc.iters > 0, "--pipeline-depth needs --iters >= 1");
+    // Pipelined launches place data on *half* device windows, doubling the
+    // per-device reservation pressure vs the plain run path.
+    let mut rc = rc.clone();
+    let worst = 2 * rc.spec.nranks * rc.msg_bytes + rc.spec.db_region_size + (1 << 20);
+    if rc.spec.device_capacity < worst {
+        rc.spec.device_capacity = worst.next_power_of_two();
+    }
+    let rc = &rc;
+    let n = rc.n_elems(dtype);
+    let ccl = rc.variant.config(rc.chunks).with_root(0);
+    let nr = rc.spec.nranks;
+    banner(&format!(
+        "run[{backend_name}, pipeline x{depth}]: {} {} {dtype} | {} per rank | {} iters | \
+         {} ranks, {} devices",
+        rc.primitive,
+        rc.variant.name(),
+        fmt_bytes(n * dtype.size_bytes()),
+        rc.iters,
+        nr,
+        rc.spec.ndevices
+    ));
+    if backend_name == "sim" {
+        // Virtual time: plan each launch against the epoch half it runs
+        // on (adjacent launches own disjoint doorbells + devices).
+        let layout = PoolLayout::from_spec(&rc.spec)?;
+        let halves = layout
+            .pipeline_halves()
+            .context("--pipeline-depth needs a window large enough to halve")?;
+        let plans: Vec<ValidPlan> = (0..rc.iters)
+            .map(|i| {
+                plan_collective_dtype(rc.primitive, &rc.spec, &halves[i % 2], &ccl, n, dtype)
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&CollectivePlan> = plans.iter().map(|p| &**p).collect();
+        let fab = SimFabric::new(layout);
+        let serial = fab.simulate_pipelined(&refs, 1)?.total_time;
+        let piped = fab.simulate_pipelined(&refs, depth)?.total_time;
+        println!(
+            "virtual makespan over {} launches: depth 1 = {}, depth {depth} = {} ({:.2}x)",
+            rc.iters,
+            fmt_time(serial),
+            fmt_time(piped),
+            serial / piped
+        );
+        return Ok(());
+    }
+    ensure!(
+        backend_name == "shm",
+        "unknown backend {backend_name:?} (shm|sim)"
+    );
+    if dtype == Dtype::U8 && rc.primitive.reduces() {
+        bail!(
+            "{} with dtype u8 cannot execute on the shm backend; use a numeric dtype, or \
+             --backend sim",
+            rc.primitive
+        );
+    }
+    let pg = CommWorld::init(Bootstrap::thread_local(rc.spec.clone()), 0, nr)?;
+    pg.set_pipeline_depth(depth)?;
+    let send_elems = rc.primitive.send_elems(n, nr);
+    let recv_elems = rc.primitive.recv_elems(n, nr);
+    let sends: Vec<Tensor> = (0..nr)
+        .map(|r| deterministic_payload(r, send_elems, dtype))
+        .collect::<Result<_>>()?;
+    // Keep up to `depth` iterations in flight (matching what the group can
+    // actually overlap) instead of issuing everything up front — bounds
+    // buffer memory and parked launch threads to the pipeline depth. The
+    // elapsed time over the whole sequence is the pipelined makespan.
+    let t0 = Instant::now();
+    let mut in_flight: VecDeque<(usize, Vec<CollectiveFuture<'_>>)> =
+        VecDeque::with_capacity(depth + 1);
+    let mut last: Vec<Tensor> = Vec::new();
+    for i in 0..rc.iters {
+        let futs: Vec<CollectiveFuture<'_>> = (0..nr)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    rc.primitive,
+                    &ccl,
+                    n,
+                    sends[r].clone(),
+                    Tensor::zeros(dtype, recv_elems),
+                )
+            })
+            .collect::<Result<_>>()?;
+        in_flight.push_back((i, futs));
+        while in_flight.len() > depth {
+            reap_iteration(rc.iters, in_flight.pop_front().unwrap(), &mut last)?;
+        }
+    }
+    while let Some(entry) = in_flight.pop_front() {
+        reap_iteration(rc.iters, entry, &mut last)?;
+    }
+    pg.flush()?;
+    let makespan = t0.elapsed().as_secs_f64();
+    let bytes = rc.primitive.bytes_on_wire_dtype(n, nr, dtype) * nr;
+    println!(
+        "makespan over {} launches: {} ({} per launch, {:.2} GB/s aggregate)",
+        rc.iters,
+        fmt_time(makespan),
+        fmt_time(makespan / rc.iters as f64),
+        (bytes * rc.iters) as f64 / makespan / 1e9
+    );
+    if dtype == Dtype::F32 {
+        let send_f32: Vec<Vec<f32>> =
+            sends.iter().map(|t| t.to_f32()).collect::<Result<_>>()?;
+        let want = oracle::expected(rc.primitive, &send_f32, n, 0);
+        for (r, out) in last.iter().enumerate() {
+            for (g, e) in out.to_f32()?.iter().zip(&want[r]) {
+                ensure!(
+                    (g - e).abs() <= 1e-4 * e.abs().max(1.0),
+                    "verification failed at rank {r}"
+                );
+            }
+        }
+        println!("verification vs oracle ✓");
+    } else {
+        println!(
+            "rank 0 result fnv64=0x{:016x} ({recv_elems} elems, dtype {dtype})",
+            fnv1a64(last[0].as_bytes())
+        );
+    }
+    Ok(())
+}
+
+/// Reap one pipelined local iteration: wait every rank's future, keeping
+/// the final iteration's results for verification.
+fn reap_iteration(
+    iters: usize,
+    entry: (usize, Vec<CollectiveFuture<'_>>),
+    last: &mut Vec<Tensor>,
+) -> Result<()> {
+    let (i, futs) = entry;
+    let mut outs = Vec::with_capacity(futs.len());
+    for f in futs {
+        let (out, _wall) = f.wait()?;
+        outs.push(out);
+    }
+    if i + 1 == iters {
+        *last = outs;
+    }
+    Ok(())
+}
+
+/// Reap one pool-mode iteration: report its timing row and check that the
+/// result digest matches every earlier iteration's (pipelined launches
+/// must never change the bytes).
+fn settle_pool_iter(
+    t: &Table,
+    bytes_moved: usize,
+    i: usize,
+    fut: CollectiveFuture<'_>,
+    digest: &mut u64,
+) -> Result<()> {
+    let (out, wall) = fut.wait()?;
+    t.row(&[
+        i.to_string(),
+        fmt_time(wall.as_secs_f64()),
+        format!("{:.2}", bytes_moved as f64 / wall.as_secs_f64() / 1e9),
+    ]);
+    let d = fnv1a64(out.as_bytes());
+    if i > 0 {
+        ensure!(
+            d == *digest,
+            "iteration {i} produced digest 0x{d:016x}, previous iterations 0x{digest:016x} \
+             — pipelined launches corrupted the result"
+        );
+    }
+    *digest = d;
+    Ok(())
+}
+
+/// Deterministic per-rank payload shared by the pipelined runners: any
+/// process can recompute any rank's contribution, so digests are
+/// comparable across depths, runs, and machines.
+fn deterministic_payload(rank: usize, elems: usize, dtype: Dtype) -> Result<Tensor> {
+    match dtype {
+        Dtype::F32 => {
+            let mut v = vec![0.0f32; elems];
+            SplitMix64::new(0xC0FFEE ^ rank as u64).fill_f32(&mut v);
+            Ok(Tensor::from_f32(&v))
+        }
+        _ => {
+            let bytes: Vec<u8> = (0..elems * dtype.size_bytes())
+                .map(|i| (i as u8).wrapping_mul(31).wrapping_add(rank as u8 + 1))
+                .collect();
+            Tensor::from_bytes(bytes, dtype)
+        }
+    }
+}
+
 /// `run --bootstrap pool:<path> --rank R --world N`: this process is ONE
 /// rank of a multi-process communicator. All N processes map the same
 /// file-backed pool, rendezvous through its control-plane header, and
@@ -310,50 +522,46 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
         rc.chunks
     ));
     let ccl = rc.variant.config(rc.chunks).with_root(0);
+    // Pipelined launches are opt-in at the CLI (the library defaults to
+    // depth 2): depth 1 serializes, depth 2 keeps two launches in flight
+    // over the even/odd epoch halves. Results are identical either way —
+    // CI diffs the digests to pin exactly that.
+    let depth: usize = args.get_or("pipeline-depth", "1").parse()?;
     let pg = CommWorld::init(Bootstrap::pool(path, rc.spec.clone()), rank, world)?;
+    pg.set_pipeline_depth(depth)?;
     println!(
-        "rendezvous complete: {} ranks over {} (doorbells {:?})",
+        "rendezvous complete: {} ranks over {} (doorbells {:?}, pipeline x{depth})",
         pg.world_size(),
         fmt_bytes(pg.layout().pool_size()),
         pg.doorbell_slot_range(),
     );
     let send_elems = rc.primitive.send_elems(n, world);
     let recv_elems = rc.primitive.recv_elems(n, world);
-    // Deterministic per-rank payload: any process can recompute any rank's
-    // contribution, so digests are comparable across independent runs.
-    let send = match dtype {
-        Dtype::F32 => {
-            let mut v = vec![0.0f32; send_elems];
-            SplitMix64::new(0xC0FFEE ^ rank as u64).fill_f32(&mut v);
-            Tensor::from_f32(&v)
-        }
-        _ => {
-            let bytes: Vec<u8> = (0..send_elems * dtype.size_bytes())
-                .map(|i| (i as u8).wrapping_mul(31).wrapping_add(rank as u8 + 1))
-                .collect();
-            Tensor::from_bytes(bytes, dtype)?
-        }
-    };
+    let send = deterministic_payload(rank, send_elems, dtype)?;
     let bytes_moved = rc.primitive.bytes_on_wire_dtype(n, world, dtype);
     let t = Table::new(&[8, 12, 14]);
     t.header(&["iter", "time", "pool GB/s"]);
     let mut digest = 0u64;
+    let mut in_flight: VecDeque<(usize, CollectiveFuture<'_>)> = VecDeque::new();
     for i in 0..rc.iters {
-        let pending = pg.begin(
+        let fut = pg.collective(
             rc.primitive,
             &ccl,
             n,
             send.clone(),
             Tensor::zeros(dtype, recv_elems),
         )?;
-        let (out, wall) = pending.wait()?;
-        t.row(&[
-            i.to_string(),
-            fmt_time(wall.as_secs_f64()),
-            format!("{:.2}", bytes_moved as f64 / wall.as_secs_f64() / 1e9),
-        ]);
-        digest = fnv1a64(out.as_bytes());
+        in_flight.push_back((i, fut));
+        // Keep up to `depth` launches outstanding before reaping.
+        while in_flight.len() > depth {
+            let (j, fut) = in_flight.pop_front().unwrap();
+            settle_pool_iter(&t, bytes_moved, j, fut, &mut digest)?;
+        }
     }
+    while let Some((j, fut)) = in_flight.pop_front() {
+        settle_pool_iter(&t, bytes_moved, j, fut, &mut digest)?;
+    }
+    pg.flush()?;
     println!(
         "{} result fnv64=0x{digest:016x} ({recv_elems} elems, dtype {dtype})",
         rc.primitive
@@ -402,6 +610,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         chunks: args.get_or("chunks", "8").parse()?,
         seed: args.get_or("seed", "0").parse()?,
         ndevices: args.get_or("devices", "6").parse()?,
+        comm_buckets: args.get_or("buckets", "2").parse()?,
     };
     banner(&format!("FSDP training: {:?}", cfg));
     let mut trainer = FsdpTrainer::new(cfg.clone())?;

@@ -40,6 +40,14 @@ pub struct PlanKey {
     /// them.
     pub device_capacity: usize,
     pub db_region_size: usize,
+    /// The layout *windows* the plan was placed into (doorbell slots and
+    /// devices). Since the v4 pipelined launch surface, one group plans the
+    /// same shape against its even and odd epoch-half views — two distinct
+    /// plans — so the window is part of the key.
+    pub db_slot_base: usize,
+    pub db_slot_span: usize,
+    pub device_base: usize,
+    pub device_span: usize,
     pub n_elems: usize,
     pub dtype: Dtype,
 }
@@ -49,6 +57,7 @@ impl PlanKey {
         primitive: Primitive,
         cfg: &CclConfig,
         spec: &ClusterSpec,
+        layout: &PoolLayout,
         n_elems: usize,
         dtype: Dtype,
     ) -> Self {
@@ -61,6 +70,10 @@ impl PlanKey {
             ndevices: spec.ndevices,
             device_capacity: spec.device_capacity,
             db_region_size: spec.db_region_size,
+            db_slot_base: layout.db_slot_base,
+            db_slot_span: layout.db_slot_span,
+            device_base: layout.device_base,
+            device_span: layout.device_span,
             n_elems,
             dtype,
         }
@@ -143,7 +156,7 @@ impl PlanCache {
         n_elems: usize,
         dtype: Dtype,
     ) -> Result<ValidPlan> {
-        let key = PlanKey::new(primitive, cfg, spec, n_elems, dtype);
+        let key = PlanKey::new(primitive, cfg, spec, layout, n_elems, dtype);
         {
             let mut st = self.state.lock().unwrap();
             st.tick += 1;
@@ -275,10 +288,38 @@ mod tests {
     #[test]
     fn key_reconstructs_config() {
         let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
         let cfg = CclVariant::All.config(8).with_root(2);
-        let key = PlanKey::new(Primitive::Broadcast, &cfg, &spec, 1024, Dtype::F16);
+        let key = PlanKey::new(Primitive::Broadcast, &cfg, &spec, &layout, 1024, Dtype::F16);
         assert_eq!(key.config(), cfg);
         assert_eq!(key.dtype, Dtype::F16);
+    }
+
+    #[test]
+    fn layout_windows_are_part_of_the_key() {
+        // The same shape planned against the even and odd epoch halves must
+        // occupy two cache entries: the plans differ (disjoint windows).
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let [even, odd] = layout.pipeline_halves().unwrap();
+        let cfg = CclVariant::All.config(4);
+        let k_even = PlanKey::new(Primitive::AllGather, &cfg, &spec, &even, 3 * 256, Dtype::F32);
+        let k_odd = PlanKey::new(Primitive::AllGather, &cfg, &spec, &odd, 3 * 256, Dtype::F32);
+        assert_ne!(k_even, k_odd);
+        let cache = PlanCache::new();
+        cache
+            .get_or_plan(&spec, &even, Primitive::AllGather, &cfg, 3 * 256, Dtype::F32)
+            .unwrap();
+        cache
+            .get_or_plan(&spec, &odd, Primitive::AllGather, &cfg, 3 * 256, Dtype::F32)
+            .unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().misses, 2);
+        // Steady state: each half hits its own entry.
+        cache
+            .get_or_plan(&spec, &even, Primitive::AllGather, &cfg, 3 * 256, Dtype::F32)
+            .unwrap();
+        assert_eq!(cache.stats().hits, 1);
     }
 
     #[test]

@@ -39,11 +39,13 @@ pub struct Communicator {
     /// In-flight nonblocking groups, keyed by plan shape (see
     /// [`crate::exec::rank`]).
     pub(super) groups: Mutex<HashMap<PlanKey, Arc<GroupShared>>>,
-    /// Serializes plan launches: the pool has a single doorbell region
-    /// (reset at launch start) and plans may reuse overlapping pool
-    /// offsets, so at most one collective executes at a time. Concurrent
-    /// `wait()`s of different groups queue here instead of corrupting
-    /// each other. Cross-launch pipelining is ROADMAP work.
+    /// Serializes plan launches over the communicator's (single) window:
+    /// plans may reuse overlapping pool offsets, so at most one collective
+    /// executes over it at a time. Concurrent `wait()`s of different
+    /// groups queue here instead of corrupting each other. Pipelined
+    /// `ProcessGroup` launches run through `run_plan_views_on` against
+    /// disjoint epoch-half windows and deliberately bypass this lock (the
+    /// pipeline depth gate orders same-half launches instead).
     launch_lock: Mutex<()>,
 }
 
@@ -176,26 +178,62 @@ impl Communicator {
         sends: &[TensorView<'_>],
         recvs: &mut [TensorViewMut<'_>],
     ) -> Result<Duration> {
+        self.run_plan_views_inner(self.layout, plan, sends, recvs, true)
+    }
+
+    /// [`Communicator::run_plan_views`] against an explicit layout view and
+    /// **without** taking the communicator-wide launch lock. This is the
+    /// pipelined launch path: `ProcessGroup` runs launch `N` on one epoch
+    /// half while launch `N+1` runs on the other — the two half views own
+    /// disjoint doorbell slots and disjoint devices, so the global lock
+    /// (which exists to serialize launches over one shared window) must not
+    /// serialize them. Callers are responsible for never running two
+    /// launches over the *same* half concurrently (the pipeline's depth
+    /// gate enforces this).
+    pub(crate) fn run_plan_views_on(
+        &self,
+        layout: PoolLayout,
+        plan: &ValidPlan,
+        sends: &[TensorView<'_>],
+        recvs: &mut [TensorViewMut<'_>],
+    ) -> Result<Duration> {
+        self.run_plan_views_inner(layout, plan, sends, recvs, false)
+    }
+
+    fn run_plan_views_inner(
+        &self,
+        layout: PoolLayout,
+        plan: &ValidPlan,
+        sends: &[TensorView<'_>],
+        recvs: &mut [TensorViewMut<'_>],
+        take_launch_lock: bool,
+    ) -> Result<Duration> {
         let nr = self.spec.nranks;
         let esize = plan.elem_bytes();
         if plan.nranks != nr {
             bail!("plan is for {} ranks, communicator has {nr}", plan.nranks);
         }
         ensure!(
-            plan.pool_size() <= self.layout.pool_size(),
+            plan.pool_size() <= layout.pool_size(),
             "plan was validated for a {}-byte pool, communicator pool is only {}",
             plan.pool_size(),
-            self.layout.pool_size()
+            layout.pool_size()
         );
         validate_views(plan, sends, recvs)?;
         for d in recvs.iter_mut() {
             d.as_bytes_mut()[..plan.recv_elems * esize].fill(0);
         }
 
-        // One launch at a time over the shared pool (see `launch_lock`).
-        let _launch = self.launch_lock.lock().unwrap();
-        // Quiesce + reset doorbells before any stream starts.
-        DoorbellSet::new(&self.pool, self.layout).reset_all()?;
+        // One launch at a time over the shared window (see `launch_lock`);
+        // pipelined half-window launches synchronize via the depth gate
+        // instead and skip the lock.
+        let _launch = if take_launch_lock {
+            Some(self.launch_lock.lock().unwrap())
+        } else {
+            None
+        };
+        // Quiesce + reset this view's doorbells before any stream starts.
+        DoorbellSet::new(&self.pool, layout).reset_all()?;
 
         let barrier = Arc::new(Barrier::new(2 * nr));
         let start = Instant::now();
@@ -212,7 +250,6 @@ impl Communicator {
                 let rb = Arc::clone(&barrier);
                 let pool_w = Arc::clone(&self.pool);
                 let pool_r = Arc::clone(&self.pool);
-                let layout = self.layout;
                 let policy = self.wait_policy;
                 let engine = Arc::clone(&self.engine);
                 let dtype = plan.dtype;

@@ -144,7 +144,8 @@ impl<'c> RankComm<'c> {
             plan.recv_elems
         );
 
-        let key = PlanKey::new(primitive, cfg, self.comm.spec(), n_elems, dtype);
+        let key =
+            PlanKey::new(primitive, cfg, self.comm.spec(), self.comm.layout(), n_elems, dtype);
         let group = loop {
             let group = Arc::clone(
                 self.comm

@@ -26,9 +26,11 @@
 //! slot 0..8    header: magic, version, layout-hash lo/hi, generation,
 //!              arrivals, world-size, (reserved)
 //! slot 8..64   per-rank slots: join count, split color, split key
-//! slot 64..    group windows; each group's first 8 slots are its launch
-//!              control (launch barrier, stream barrier, epoch), the rest
-//!              are plan doorbells
+//! slot 64..    group windows; each group's first 16 slots are its launch
+//!              control — an in-flight ring of two epoch halves (per-half
+//!              launch barrier, stream barrier, and epoch word) plus the
+//!              whole-group barrier — the rest are plan doorbells, split
+//!              into even/odd halves for pipelined launches
 //! ```
 
 use crate::doorbell::DOORBELL_SLOT;
@@ -42,16 +44,20 @@ use std::time::{Duration, Instant};
 
 /// "CCLP" — marks an initialized pool control plane.
 pub const POOL_MAGIC: u32 = 0x4343_4C50;
-/// Bumped with every incompatible control-plane change.
-pub const POOL_PROTO_VERSION: u32 = 3;
+/// Bumped with every incompatible control-plane change. v4: the group
+/// control prefix doubled to hold an in-flight ring of two epoch halves
+/// (per-half launch/stream barriers + epoch words) for cross-launch
+/// pipelining.
+pub const POOL_PROTO_VERSION: u32 = 4;
 /// Header slots at the very base of the doorbell region.
 pub const HEADER_SLOTS: usize = 8;
 /// One rendezvous slot per global rank.
 pub const MAX_POOL_WORLD: usize = 56;
 /// Total slots reserved for the control plane (header + rank slots).
 pub const CTRL_SLOTS: usize = HEADER_SLOTS + MAX_POOL_WORLD;
-/// Control slots at the front of every group's doorbell window.
-pub const GROUP_CTRL_SLOTS: usize = 8;
+/// Control slots at the front of every group's doorbell window (v4: two
+/// epoch halves × [`GC_HALF_WORDS`] words, then the whole-group barrier).
+pub const GROUP_CTRL_SLOTS: usize = 16;
 
 // Header word slot indices.
 const W_MAGIC: usize = 0;
@@ -68,16 +74,58 @@ const R_COLOR: usize = 4;
 const R_KEY: usize = 8;
 
 // Word indices within a group's control prefix (each in its own slot).
+//
+// The prefix is an in-flight ring of two *epoch halves*: launch `seq` of a
+// group runs entirely on half `seq % 2` — its own launch barrier, its own
+// stream barrier (for the plans' `Op::Barrier`), and its own epoch word —
+// so launch N+1's publication can proceed on one half while launch N's
+// retrieval drains on the other. Words 12/13 are the whole-group barrier
+// backing `ProcessGroup::barrier()` and the `split()` rounds, which must be
+// independent of either half.
 pub(crate) const GC_LAUNCH_CNT: usize = 0;
 pub(crate) const GC_LAUNCH_SENSE: usize = 1;
 pub(crate) const GC_STREAM_CNT: usize = 2;
 pub(crate) const GC_STREAM_SENSE: usize = 3;
 pub(crate) const GC_EPOCH: usize = 4;
+/// Stride between the two halves' word blocks (5 words used + 1 reserved).
+pub(crate) const GC_HALF_WORDS: usize = 6;
+pub(crate) const GC_GROUP_CNT: usize = 12;
+pub(crate) const GC_GROUP_SENSE: usize = 13;
 
 /// Byte offset of group-control word `word` for a group whose doorbell
 /// window starts at absolute slot `window_base_slot`.
 pub(crate) fn group_word_off(window_base_slot: usize, word: usize) -> usize {
     (window_base_slot + word) * DOORBELL_SLOT
+}
+
+/// Word index of per-half control word `word` for epoch half `half`.
+pub(crate) fn half_word(half: usize, word: usize) -> usize {
+    debug_assert!(half < 2 && word < GC_HALF_WORDS);
+    half * GC_HALF_WORDS + word
+}
+
+/// The epoch word published for the `k`-th launch on an epoch half
+/// (`k = seq / 2`). The word is the wrapping-truncated counter plus one so
+/// that the very first launch (`k = 0`) publishes a value distinct from the
+/// zero-initialized word.
+pub(crate) fn epoch_word(k: u64) -> u32 {
+    (k as u32).wrapping_add(1)
+}
+
+/// `(previous, next)` epoch words for launch `seq` (half `seq % 2`, per-half
+/// launch count `k = seq / 2`). Waiters spin while the half's epoch word
+/// still equals `previous` — an **inequality** test, never `== next` alone:
+/// the u64 sequence and the u32 word both wrap, and only "the word moved
+/// off the old value" is unconditionally correct. Adjacent same-half
+/// launches always produce distinct words (their `k`s differ by exactly 1),
+/// and the formulas stay consistent across the u64 wrap: the launch before
+/// `seq = 0` on either half is `k = u64::MAX / 2` whose word is
+/// `epoch_word(0x7fff_ffff_ffff_ffff) = 0` — exactly the `previous` that
+/// `epoch_pair(0)`/`epoch_pair(1)` report for a fresh half.
+pub(crate) fn epoch_pair(seq: u64) -> (u32, u32) {
+    let k = seq / 2;
+    let prev = if k == 0 { 0 } else { epoch_word(k - 1) };
+    (prev, epoch_word(k))
 }
 
 /// Byte offset of the header's generation word (the stale-mapper guard).
@@ -426,6 +474,48 @@ mod tests {
                 .unwrap_err();
             assert!(format!("{err:#}").contains("already registered"), "{err:#}");
         });
+    }
+
+    #[test]
+    fn epoch_words_wrap_without_ambiguity() {
+        // Fresh half: previous is the zeroed word, next is distinct.
+        assert_eq!(epoch_pair(0), (0, 1));
+        assert_eq!(epoch_pair(1), (0, 1));
+        assert_eq!(epoch_pair(2), (1, 2));
+        assert_eq!(epoch_pair(3), (1, 2));
+        // Adjacent same-half launches always publish distinct words, even
+        // where the u32 truncation wraps...
+        let k_wrap = u32::MAX as u64; // epoch_word(k_wrap) == 0
+        for seq in [2 * k_wrap - 2, 2 * k_wrap, 2 * k_wrap + 2] {
+            let (prev, next) = epoch_pair(seq);
+            assert_ne!(prev, next, "seq {seq}");
+            assert_eq!(epoch_pair(seq + 2).0, next, "chain continuity at {seq}");
+        }
+        assert_eq!(epoch_word(k_wrap), 0);
+        assert_eq!(epoch_word(k_wrap + 1), 1);
+        // ...and across the u64 sequence wrap itself: the launch preceding
+        // seq 0 (seq u64::MAX - 1 on half 0, u64::MAX on half 1) publishes
+        // word 0, which is exactly what epoch_pair reports as `previous`
+        // for a fresh half — a seeded counter can run straight through the
+        // wrap (pinned end-to-end in group::tests).
+        assert_eq!(epoch_pair(u64::MAX - 1), (epoch_pair(u64::MAX - 3).1, 0));
+        assert_eq!(epoch_pair(u64::MAX), (epoch_pair(u64::MAX - 2).1, 0));
+        assert_eq!(epoch_pair(0).0, epoch_pair(u64::MAX - 1).1);
+        assert_eq!(epoch_pair(1).0, epoch_pair(u64::MAX).1);
+    }
+
+    #[test]
+    fn half_words_do_not_collide() {
+        let mut seen = std::collections::HashSet::new();
+        for h in 0..2 {
+            for w in [GC_LAUNCH_CNT, GC_LAUNCH_SENSE, GC_STREAM_CNT, GC_STREAM_SENSE, GC_EPOCH] {
+                assert!(seen.insert(half_word(h, w)));
+            }
+        }
+        seen.insert(GC_GROUP_CNT);
+        seen.insert(GC_GROUP_SENSE);
+        assert_eq!(seen.len(), 12);
+        assert!(seen.iter().all(|w| *w < GROUP_CTRL_SLOTS));
     }
 
     #[test]

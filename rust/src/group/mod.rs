@@ -1,4 +1,5 @@
-//! Process-group communicator construction — the v3 API surface.
+//! Process-group communicator construction and the typed, nonblocking
+//! collective surface — the v4 API.
 //!
 //! The paper's premise is that *independent hosts* can run collectives by
 //! mapping the same `/dev/dax` region (§2.2, Listing 1). This module makes
@@ -14,46 +15,68 @@
 //! // CommWorld::init(Bootstrap::pool("/dev/shm/ccl_pool", spec), rank, 4)
 //! ```
 //!
+//! Collectives are issued through **typed per-primitive methods** —
+//! [`ProcessGroup::all_gather`], [`ProcessGroup::broadcast`],
+//! [`ProcessGroup::reduce`], … — each returning a
+//! [`CollectiveFuture`] that may be held while the next collective is
+//! issued. Launches are **pipelined**: the group's doorbell window and
+//! device window are split into even/odd *epoch halves* and launch `N`
+//! runs on half `N % 2`, so launch `N+1`'s publication proceeds while
+//! launch `N`'s retrieval drains (pipeline depth 2 by default — the §5
+//! bandwidth-saturation argument). [`ProcessGroup::flush`] drains
+//! everything in flight.
+//!
 //! - [`Bootstrap::ThreadLocal`] reproduces the in-process executor: one
-//!   [`ProcessGroup`] owns every rank, and `begin_rank(r, ..)` hands out
-//!   the per-rank nonblocking launches.
+//!   [`ProcessGroup`] owns every rank; `collective_rank(r, ..)` (or the
+//!   typed methods for the bound rank) issues per-rank parts and the
+//!   launch spawns when the last member joins.
 //! - [`Bootstrap::Pool`] performs a real rendezvous through a control-plane
 //!   header carved out of the file-backed pool (magic/version/layout-hash
-//!   check, atomic rank-arrival counter, epoch counter, and a generation
-//!   stamp so stale mappers fail fast — see [`control`]). Each OS process
-//!   owns exactly one rank; `begin`/`wait` launches execute that rank's two
-//!   op streams against the shared mapping, synchronized purely through
-//!   in-pool doorbells and pool-resident barriers.
+//!   check, atomic rank-arrival counter, per-half epoch ring, and a
+//!   generation stamp so stale mappers fail fast — see [`control`]). Each
+//!   OS process owns exactly one rank; every launch executes that rank's
+//!   two op streams on a background thread against the shared mapping,
+//!   synchronized purely through in-pool doorbells and per-half
+//!   pool-resident barriers.
 //! - [`ProcessGroup::split`] (ncclCommSplit-style) builds subgroups that
 //!   share the pool but own **disjoint doorbell-slot windows and disjoint
-//!   device windows**, so two subgroups can launch concurrently without
-//!   touching each other's slots or data — the multi-tenant /
-//!   pipeline-parallel seam.
+//!   device windows**, carved proportionally to subgroup rank count, so
+//!   two subgroups can launch concurrently without touching each other's
+//!   slots or data — the multi-tenant / pipeline-parallel seam.
 //!
 //! Collective-call discipline (the usual CCL contract): every member of a
-//! group must issue the same sequence of group operations (`begin`+`wait`
-//! launches with identical `(primitive, cfg, n_elems, dtype)`, `split`,
-//! `barrier`) in the same order. After a `split`, the parent group's
-//! windows overlap its children's — launch on the children *or* the
-//! parent, not both concurrently.
+//! group must issue the same sequence of group operations (typed launches
+//! with identical `(primitive, cfg, n_elems, dtype)`, `split`, `barrier`)
+//! in the same order. After a `split`, the parent group's windows overlap
+//! its children's — launch on the children *or* the parent, not both
+//! concurrently.
 
 pub mod control;
+pub mod pipeline;
 
 use crate::collectives::ops::ValidPlan;
 use crate::collectives::{CclConfig, PlanCache, Primitive};
-use crate::doorbell::{DoorbellSet, PoolBarrier, WaitPolicy};
-use crate::exec::communicator::{run_stream, StreamCtx, StreamSync};
+use crate::doorbell::{PoolBarrier, WaitPolicy};
 use crate::exec::reduce_engine::{ReduceEngine, ScalarReduceEngine};
-use crate::exec::{Communicator, PendingOp};
+use crate::exec::Communicator;
 use crate::pool::{PoolLayout, ShmPool};
 use crate::tensor::{Dtype, Tensor};
 use crate::topology::ClusterSpec;
 use anyhow::{bail, ensure, Context, Result};
 use control::{PoolControl, CTRL_SLOTS, GROUP_CTRL_SLOTS, MAX_POOL_WORLD};
+pub use pipeline::CollectiveFuture;
+use pipeline::{Forming, LaunchCell, LocalJob, PipeState, PoolJob};
 use std::ops::Range;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Launches a group keeps in flight by default: double-buffered over the
+/// two epoch halves.
+pub const DEFAULT_PIPELINE_DEPTH: usize = 2;
+/// The control plane rings two epoch halves, so at most two launches can
+/// be in flight per group.
+pub const MAX_PIPELINE_DEPTH: usize = 2;
 
 /// How a [`ProcessGroup`] comes into existence.
 #[derive(Debug, Clone)]
@@ -102,9 +125,9 @@ impl Bootstrap {
     }
 }
 
-/// Entry point of the v3 surface: `CommWorld::init` is the `ncclCommInitRank`
-/// analogue — same `(rank, world_size)` contract, bootstrap selected by
-/// [`Bootstrap`].
+/// Entry point of the group surface: `CommWorld::init` is the
+/// `ncclCommInitRank` analogue — same `(rank, world_size)` contract,
+/// bootstrap selected by [`Bootstrap`].
 pub struct CommWorld;
 
 impl CommWorld {
@@ -141,15 +164,15 @@ impl CommWorld {
         );
         let pool = Arc::new(ShmPool::anon(full.pool_size())?);
         let layout = full.with_doorbell_window(GROUP_CTRL_SLOTS, total - GROUP_CTRL_SLOTS)?;
-        let comm = Communicator::over_pool(&spec, layout, pool)?;
-        Ok(ProcessGroup {
-            inner: GroupImpl::Local(LocalGroup {
+        let comm = Arc::new(Communicator::over_pool(&spec, layout, pool)?);
+        Ok(ProcessGroup::from_parts(
+            GroupImpl::Local(LocalGroup {
                 comm,
                 window: 0..total,
                 members: (0..spec.nranks).collect(),
             }),
-            bound_rank: rank,
-        })
+            rank,
+        ))
     }
 
     fn init_pool(
@@ -185,8 +208,8 @@ impl CommWorld {
             window.start + GROUP_CTRL_SLOTS,
             window.end - window.start - GROUP_CTRL_SLOTS,
         )?;
-        Ok(ProcessGroup {
-            inner: GroupImpl::Pool(PoolGroup {
+        Ok(ProcessGroup::from_parts(
+            GroupImpl::Pool(PoolGroup {
                 pool,
                 ctrl,
                 spec: spec.clone(),
@@ -197,11 +220,10 @@ impl CommWorld {
                 cache: PlanCache::new(),
                 engine: Arc::new(ScalarReduceEngine),
                 policy: WaitPolicy::default(),
-                epoch: AtomicU32::new(0),
                 op_lock: Mutex::new(()),
             }),
-            bound_rank: rank,
-        })
+            rank,
+        ))
     }
 }
 
@@ -230,6 +252,12 @@ fn attach_with_retry(path: &str, len: usize, timeout: Duration) -> Result<Arc<Sh
 pub struct ProcessGroup {
     inner: GroupImpl,
     bound_rank: usize,
+    /// Even/odd epoch-half views of the plan window (doorbells + devices),
+    /// when the window is large enough to halve. `None` disables
+    /// pipelining: every launch runs over the undivided window at depth 1.
+    halves: Option<[PoolLayout; 2]>,
+    depth: AtomicUsize,
+    pipe: Mutex<PipeState>,
 }
 
 enum GroupImpl {
@@ -239,7 +267,7 @@ enum GroupImpl {
 
 /// All member ranks live in this process (thread-per-rank execution).
 struct LocalGroup {
-    comm: Communicator,
+    comm: Arc<Communicator>,
     /// Absolute doorbell slots owned (incl. the group-control prefix).
     window: Range<usize>,
     /// Global rank of each group rank.
@@ -263,18 +291,28 @@ struct PoolGroup {
     cache: PlanCache,
     engine: Arc<dyn ReduceEngine>,
     policy: WaitPolicy,
-    /// Local launch counter; kept in lockstep with the in-pool epoch word
-    /// by the launch barrier.
-    epoch: AtomicU32,
-    /// Serializes this process's group operations (launch/split/barrier):
-    /// the launch barrier and epoch protocol assume one collective in
-    /// flight per member, so concurrent calls from two threads of one
-    /// process must queue — the pool-mode analogue of
-    /// `Communicator::launch_lock`.
+    /// Serializes this process's blocking group operations (split/barrier)
+    /// against each other; launches are ordered by the pipeline state.
     op_lock: Mutex<()>,
 }
 
 impl ProcessGroup {
+    fn from_parts(inner: GroupImpl, bound_rank: usize) -> Self {
+        let base = match &inner {
+            GroupImpl::Local(g) => *g.comm.layout(),
+            GroupImpl::Pool(g) => g.layout,
+        };
+        let halves = base.pipeline_halves().ok();
+        let depth = if halves.is_some() { DEFAULT_PIPELINE_DEPTH } else { 1 };
+        Self {
+            inner,
+            bound_rank,
+            halves,
+            depth: AtomicUsize::new(depth),
+            pipe: Mutex::new(PipeState::new()),
+        }
+    }
+
     /// Number of ranks in this group.
     pub fn world_size(&self) -> usize {
         match &self.inner {
@@ -318,7 +356,7 @@ impl ProcessGroup {
         l.device_base..l.device_base + l.device_span
     }
 
-    /// The group's (windowed) pool layout.
+    /// The group's (windowed) pool layout — the undivided plan view.
     pub fn layout(&self) -> &PoolLayout {
         match &self.inner {
             GroupImpl::Local(g) => g.comm.layout(),
@@ -326,9 +364,89 @@ impl ProcessGroup {
         }
     }
 
+    /// The even/odd epoch-half views pipelined launches run on, when the
+    /// group's window is large enough to halve (launch `seq` uses half
+    /// `seq % 2`). `None` means launches are serialized over
+    /// [`ProcessGroup::layout`].
+    pub fn pipeline_layouts(&self) -> Option<&[PoolLayout; 2]> {
+        self.halves.as_ref()
+    }
+
+    /// Launches this group keeps in flight (1 = serialized, 2 = the
+    /// double-buffered default when the window could be halved).
+    pub fn pipeline_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Set the in-flight launch bound. Depth 2 requires the halved epoch
+    /// windows; depth 1 serializes (launches still alternate halves, so
+    /// results are bitwise identical across depths). Depth is local
+    /// pacing — members of one pool group may run different depths.
+    /// Drains in-flight launches first, so a depth change never overlaps
+    /// launches planned under different in-flight assumptions.
+    pub fn set_pipeline_depth(&self, depth: usize) -> Result<()> {
+        ensure!(
+            (1..=MAX_PIPELINE_DEPTH).contains(&depth),
+            "pipeline depth must be 1..={MAX_PIPELINE_DEPTH} (the epoch ring has 2 halves), \
+             got {depth}"
+        );
+        if depth > 1 {
+            ensure!(
+                self.halves.is_some(),
+                "pipeline depth {depth} unavailable: the group's doorbell/device window is \
+                 too small to halve (need >= 2 plan doorbell slots and >= 2 devices)"
+            );
+        }
+        let _ = self.drain_launches();
+        self.depth.store(depth, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Builder-style [`ProcessGroup::set_pipeline_depth`].
+    pub fn with_pipeline_depth(self, depth: usize) -> Result<Self> {
+        self.set_pipeline_depth(depth)?;
+        Ok(self)
+    }
+
+    /// Pre-position the launch sequence counter (failure-injection / test
+    /// hook — pins epoch-word wraparound). Every member of a pool group
+    /// must seed the identical value before its first launch; reseeding
+    /// with launches in flight is rejected.
+    #[doc(hidden)]
+    pub fn seed_launch_seq(&self, seq: u64) -> Result<()> {
+        let mut ps = self.pipe.lock().unwrap();
+        ensure!(
+            ps.inflight.is_empty() && ps.forming.is_none(),
+            "cannot reseed the launch sequence with launches in flight or forming"
+        );
+        ps.seq = seq;
+        if let GroupImpl::Pool(g) = &self.inner {
+            // Make the physical epoch chain consistent with the seeded
+            // logical one: write each half's word to the value its previous
+            // (pre-seed) launch would have published, so waiters of the
+            // first seeded launch still observe a transition.
+            for half in 0..2usize {
+                let first = if seq % 2 == half as u64 { seq } else { seq.wrapping_add(1) };
+                let (prev, _) = control::epoch_pair(first);
+                let off = control::group_word_off(
+                    g.window.start,
+                    control::half_word(half, control::GC_EPOCH),
+                );
+                g.pool.atomic_u32(off)?.store(prev, Ordering::Release);
+                g.pool.flush(off, 4);
+            }
+        }
+        Ok(())
+    }
+
     /// The whole-group in-process communicator (ThreadLocal groups only):
     /// rank handles, typed-view collectives and the `CollectiveBackend`
     /// impl all hang off it.
+    ///
+    /// The communicator's own launch paths run over the group's *whole*
+    /// window; do not run them concurrently with this group's pipelined
+    /// typed launches (which own the even/odd halves of the same window) —
+    /// `flush()` first, the same discipline as parent-vs-subgroup windows.
     pub fn local_comm(&self) -> Result<&Communicator> {
         match &self.inner {
             GroupImpl::Local(g) => Ok(&g.comm),
@@ -339,7 +457,10 @@ impl ProcessGroup {
         }
     }
 
-    /// The group's plan cache (hit/miss/eviction counters).
+    /// The group's plan cache (hit/miss/eviction counters). Pipelined
+    /// launches plan each shape once per epoch half (the window is part of
+    /// the [`crate::collectives::PlanKey`]), so a steady-state loop costs
+    /// two misses per shape and hits thereafter.
     pub fn plan_cache(&self) -> &PlanCache {
         match &self.inner {
             GroupImpl::Local(g) => g.comm.plan_cache(),
@@ -348,15 +469,21 @@ impl ProcessGroup {
     }
 
     /// Adjust doorbell/barrier waiting (timeouts for failure injection).
+    /// Drains in-flight launches first: the communicator can only be
+    /// reconfigured while no launch thread holds a handle to it.
     pub fn with_wait_policy(mut self, policy: WaitPolicy) -> Self {
+        let _ = self.drain_launches();
         match &mut self.inner {
-            GroupImpl::Local(g) => g.comm.set_wait_policy(policy),
+            GroupImpl::Local(g) => Arc::get_mut(&mut g.comm)
+                .expect("launch threads were just joined; no other handle can remain")
+                .set_wait_policy(policy),
             GroupImpl::Pool(g) => g.policy = policy,
         }
         self
     }
 
-    /// Plan (through the group's cache) without launching.
+    /// Plan (through the group's cache) without launching, against the
+    /// undivided window view.
     pub fn plan(
         &self,
         primitive: Primitive,
@@ -372,24 +499,127 @@ impl ProcessGroup {
         }
     }
 
-    /// Begin the bound rank's part of a collective (nonblocking, NCCL
-    /// group-call style). Every member must begin with identical
-    /// `(primitive, cfg, n_elems, dtype)`; the launch happens on `wait`.
-    pub fn begin(
+    /// The layout view launch `seq` runs on.
+    fn launch_layout(&self, seq: u64) -> PoolLayout {
+        match &self.halves {
+            Some(h) => h[(seq % 2) as usize],
+            None => *self.layout(),
+        }
+    }
+
+    // ---- typed nonblocking collectives (the v4 launch surface) ----------
+
+    /// AllGather: every rank contributes `n_elems`, every rank receives
+    /// all `world_size × n_elems` (Table 2). Nonblocking — see
+    /// [`CollectiveFuture`].
+    pub fn all_gather(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        self.collective(Primitive::AllGather, cfg, n_elems, send, recv)
+    }
+
+    /// AllReduce: element-wise sum across ranks, result everywhere.
+    pub fn all_reduce(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        self.collective(Primitive::AllReduce, cfg, n_elems, send, recv)
+    }
+
+    /// ReduceScatter: element-wise sum, each rank keeps its
+    /// `n_elems / world_size` segment.
+    pub fn reduce_scatter(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        self.collective(Primitive::ReduceScatter, cfg, n_elems, send, recv)
+    }
+
+    /// AllToAll: rank `r`'s segment `s` lands in rank `s`'s segment `r`.
+    pub fn all_to_all(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        self.collective(Primitive::AllToAll, cfg, n_elems, send, recv)
+    }
+
+    /// Broadcast from `cfg.root` to every rank.
+    pub fn broadcast(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        self.collective(Primitive::Broadcast, cfg, n_elems, send, recv)
+    }
+
+    /// Gather every rank's `n_elems` at `cfg.root`.
+    pub fn gather(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        self.collective(Primitive::Gather, cfg, n_elems, send, recv)
+    }
+
+    /// Scatter `cfg.root`'s `world_size × n_elems` segments, one per rank.
+    pub fn scatter(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        self.collective(Primitive::Scatter, cfg, n_elems, send, recv)
+    }
+
+    /// Reduce: element-wise sum across ranks, result at `cfg.root` only.
+    pub fn reduce(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        self.collective(Primitive::Reduce, cfg, n_elems, send, recv)
+    }
+
+    /// Issue the bound rank's part of `primitive` (the generic typed entry
+    /// the per-primitive methods delegate to).
+    pub fn collective(
         &self,
         primitive: Primitive,
         cfg: &CclConfig,
         n_elems: usize,
         send: Tensor,
         recv: Tensor,
-    ) -> Result<GroupPending<'_>> {
-        self.begin_rank(self.bound_rank, primitive, cfg, n_elems, send, recv)
+    ) -> Result<CollectiveFuture<'_>> {
+        self.collective_rank(self.bound_rank, primitive, cfg, n_elems, send, recv)
     }
 
-    /// [`ProcessGroup::begin`] for an explicit group rank. ThreadLocal
-    /// groups accept any rank (they own them all); pool groups only their
-    /// own.
-    pub fn begin_rank(
+    /// [`ProcessGroup::collective`] for an explicit group rank. ThreadLocal
+    /// groups accept any rank (they own them all) and spawn the launch when
+    /// the last member joins; pool groups only their own rank, spawning
+    /// immediately. Every member must issue the same `(primitive, cfg,
+    /// n_elems, dtype)`; the launch overlaps up to
+    /// [`ProcessGroup::pipeline_depth`] deep with its predecessors.
+    pub fn collective_rank(
         &self,
         rank: usize,
         primitive: Primitive,
@@ -397,56 +627,304 @@ impl ProcessGroup {
         n_elems: usize,
         send: Tensor,
         recv: Tensor,
-    ) -> Result<GroupPending<'_>> {
+    ) -> Result<CollectiveFuture<'_>> {
+        ensure!(
+            send.dtype() == recv.dtype(),
+            "send dtype {} does not match recv dtype {}",
+            send.dtype(),
+            recv.dtype()
+        );
+        let dtype = send.dtype();
         match &self.inner {
-            GroupImpl::Local(g) => Ok(GroupPending {
-                inner: PendingInner::Local(
-                    g.comm.rank(rank)?.begin(primitive, cfg, n_elems, send, recv)?,
-                ),
-            }),
+            GroupImpl::Local(g) => {
+                self.issue_local(g, rank, primitive, cfg, n_elems, dtype, send, recv)
+            }
             GroupImpl::Pool(g) => {
-                ensure!(
-                    rank == g.grank,
-                    "rank {rank} is not local to this process (pool bootstrap owns only \
-                     rank {})",
-                    g.grank
-                );
-                ensure!(
-                    send.dtype() == recv.dtype(),
-                    "send dtype {} does not match recv dtype {}",
-                    send.dtype(),
-                    recv.dtype()
-                );
-                let plan = self.plan(primitive, cfg, n_elems, send.dtype())?;
-                ensure!(
-                    send.len() >= plan.send_elems,
-                    "rank {rank} send tensor too small: {} < {} elems",
-                    send.len(),
-                    plan.send_elems
-                );
-                ensure!(
-                    recv.len() >= plan.recv_elems,
-                    "rank {rank} recv tensor too small: {} < {} elems",
-                    recv.len(),
-                    plan.recv_elems
-                );
-                Ok(GroupPending {
-                    inner: PendingInner::Pool { group: g, plan, send, recv },
-                })
+                self.issue_pool(g, rank, primitive, cfg, n_elems, dtype, send, recv)
             }
         }
     }
 
-    /// Group-wide rendezvous. In pool mode this is a real cross-process
-    /// barrier through the group's control slots; thread-local groups are
-    /// trivially synchronized already.
+    #[allow(clippy::too_many_arguments)]
+    fn issue_local(
+        &self,
+        g: &LocalGroup,
+        rank: usize,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        dtype: Dtype,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        let nranks = g.members.len();
+        ensure!(rank < nranks, "rank {rank} out of range ({nranks} ranks)");
+        let mut ps = self.pipe.lock().unwrap();
+        if ps.forming.is_none() {
+            // First member of the next launch: resolve the plan for the
+            // epoch half this launch will run on (`ps.seq` is its sequence
+            // number — only the spawn advances it). A *serialized* local
+            // group (depth 1) falls back to the undivided window when the
+            // shape cannot be placed in a half — v3 capacity parity; pool
+            // groups never fall back, because their layout choice must be
+            // a pure function of `seq` that every member computes alike.
+            let seq = ps.seq;
+            let mut layout = self.launch_layout(seq);
+            let mut plan = g
+                .comm
+                .plan_cache()
+                .get_or_plan(g.comm.spec(), &layout, primitive, cfg, n_elems, dtype);
+            if plan.is_err() && self.halves.is_some() && self.pipeline_depth() == 1 {
+                layout = *self.layout();
+                plan = g
+                    .comm
+                    .plan_cache()
+                    .get_or_plan(g.comm.spec(), &layout, primitive, cfg, n_elems, dtype);
+            }
+            let plan = plan.with_context(|| {
+                half_plan_hint(self.halves.is_some() && self.pipeline_depth() > 1, seq)
+            })?;
+            ps.forming = Some(Forming {
+                primitive,
+                cfg: *cfg,
+                n_elems,
+                dtype,
+                layout,
+                plan,
+                sends: (0..nranks).map(|_| None).collect(),
+                recvs: (0..nranks).map(|_| None).collect(),
+                joined: 0,
+                cell: LaunchCell::new(nranks),
+            });
+        }
+        let f = ps.forming.as_mut().unwrap();
+        let first_joiner = f.joined == 0;
+        let validated = (|| -> Result<()> {
+            ensure!(
+                f.primitive == primitive
+                    && f.cfg == *cfg
+                    && f.n_elems == n_elems
+                    && f.dtype == dtype,
+                "collective mismatch: the forming launch is {} ({} elems, {}), this rank \
+                 issued {} ({} elems, {}) — every member must issue the same sequence of \
+                 collectives",
+                f.primitive,
+                f.n_elems,
+                f.dtype,
+                primitive,
+                n_elems,
+                dtype
+            );
+            ensure!(
+                f.sends[rank].is_none(),
+                "rank {rank} already has a pending op in this launch"
+            );
+            ensure!(
+                send.len() >= f.plan.send_elems,
+                "rank {rank} send tensor too small: {} < {} elems",
+                send.len(),
+                f.plan.send_elems
+            );
+            ensure!(
+                recv.len() >= f.plan.recv_elems,
+                "rank {rank} recv tensor too small: {} < {} elems",
+                recv.len(),
+                f.plan.recv_elems
+            );
+            Ok(())
+        })();
+        if let Err(e) = validated {
+            // Never leave behind an empty forming launch (e.g. the very
+            // first issuer failed validation): it would pin its shape on
+            // the sequence with no member able to withdraw it.
+            if first_joiner {
+                ps.forming = None;
+            }
+            return Err(e);
+        }
+        let f = ps.forming.as_mut().unwrap();
+        f.sends[rank] = Some(send);
+        f.recvs[rank] = Some(recv);
+        f.joined += 1;
+        let cell = Arc::clone(&f.cell);
+        if f.joined == nranks {
+            // Launch complete: spawn it against its epoch half. The gate
+            // (same-half predecessor at depth 2, immediate predecessor at
+            // depth 1) is awaited inside the spawned thread, so issuing
+            // never blocks.
+            let f = ps.forming.take().unwrap();
+            let seq = ps.seq;
+            ps.seq = ps.seq.wrapping_add(1);
+            let gate = ps.gate_for(seq, self.pipeline_depth());
+            ps.track(seq, Arc::clone(&f.cell));
+            ps.reap_finished_threads();
+            let handle = pipeline::spawn_local(LocalJob {
+                comm: Arc::clone(&g.comm),
+                layout: f.layout,
+                plan: f.plan,
+                sends: f.sends.into_iter().map(Option::unwrap).collect(),
+                recvs: f.recvs.into_iter().map(Option::unwrap).collect(),
+                cell: f.cell,
+                gate,
+            });
+            ps.threads.push(handle);
+        }
+        Ok(CollectiveFuture {
+            group: self,
+            cell,
+            rank,
+            slot: rank,
+            consumed: false,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn issue_pool(
+        &self,
+        g: &PoolGroup,
+        rank: usize,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        dtype: Dtype,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<CollectiveFuture<'_>> {
+        ensure!(
+            rank == g.grank,
+            "rank {rank} is not local to this process (pool bootstrap owns only rank {})",
+            g.grank
+        );
+        let mut ps = self.pipe.lock().unwrap();
+        g.ctrl.check_generation()?;
+        let seq = ps.seq;
+        let layout = self.launch_layout(seq);
+        let plan = g
+            .cache
+            .get_or_plan(&g.spec, &layout, primitive, cfg, n_elems, dtype)
+            .with_context(|| half_plan_hint(self.halves.is_some(), seq))?;
+        ensure!(
+            send.len() >= plan.send_elems,
+            "rank {rank} send tensor too small: {} < {} elems",
+            send.len(),
+            plan.send_elems
+        );
+        ensure!(
+            recv.len() >= plan.recv_elems,
+            "rank {rank} recv tensor too small: {} < {} elems",
+            recv.len(),
+            plan.recv_elems
+        );
+        ps.seq = ps.seq.wrapping_add(1);
+        let cell = LaunchCell::new(1);
+        let gate = ps.gate_for(seq, self.pipeline_depth());
+        ps.track(seq, Arc::clone(&cell));
+        ps.reap_finished_threads();
+        let handle = pipeline::spawn_pool(PoolJob {
+            pool: Arc::clone(&g.pool),
+            generation: g.ctrl.generation,
+            window_start: g.window.start,
+            seq,
+            layout,
+            nmembers: g.members.len(),
+            grank: g.grank,
+            policy: g.policy,
+            engine: Arc::clone(&g.engine),
+            plan,
+            send,
+            recv,
+            cell: Arc::clone(&cell),
+            gate,
+        });
+        ps.threads.push(handle);
+        Ok(CollectiveFuture {
+            group: self,
+            cell,
+            rank: g.grank,
+            slot: 0,
+            consumed: false,
+        })
+    }
+
+    /// Drain every launch this group still has in flight — results *and*
+    /// launch threads (after a flush no background thread of this group is
+    /// alive) — and retire the drained launches from the pipeline state.
+    /// Returns the first failure among the launches drained by *this* call
+    /// (each failure also surfaces in its own future's `wait()`); a
+    /// subsequent `flush()` starts clean.
+    pub fn flush(&self) -> Result<()> {
+        match self.drain_launches() {
+            Some(msg) => bail!("pipelined launch failed: {msg}"),
+            None => Ok(()),
+        }
+    }
+
+    /// The draining half of [`ProcessGroup::flush`]: wait every tracked
+    /// launch, join its thread, drop it from the pipeline state, and return
+    /// the first error observed (already-retired launches never re-report).
+    fn drain_launches(&self) -> Option<String> {
+        let (cells, threads) = {
+            let mut ps = self.pipe.lock().unwrap();
+            let cells: Vec<Arc<LaunchCell>> =
+                ps.inflight.iter().map(|(_, c)| Arc::clone(c)).collect();
+            (cells, std::mem::take(&mut ps.threads))
+        };
+        let mut first_err = None;
+        for c in &cells {
+            c.wait_done();
+            if first_err.is_none() {
+                first_err = c.error();
+            }
+        }
+        for t in threads {
+            let _ = t.join();
+        }
+        // Retire what we drained: all of it is done, so no future launch's
+        // depth gate can need it, stale errors stop re-reporting, and
+        // `seed_launch_seq` sees a quiescent group again. (Launches issued
+        // concurrently with the drain stay tracked.)
+        let mut ps = self.pipe.lock().unwrap();
+        ps.inflight
+            .retain(|(_, c)| !cells.iter().any(|d| Arc::ptr_eq(c, d)));
+        first_err
+    }
+
+    /// Withdraw `rank` from the still-forming launch owning `cell`, if it
+    /// is still forming. Returns `(remaining_joined, nranks)` when the
+    /// withdrawal happened; `None` when the launch already spawned.
+    pub(crate) fn withdraw_forming(
+        &self,
+        cell: &Arc<LaunchCell>,
+        rank: usize,
+    ) -> Option<(usize, usize)> {
+        let mut ps = self.pipe.lock().unwrap();
+        let f = ps.forming.as_mut()?;
+        if !Arc::ptr_eq(&f.cell, cell) || f.sends[rank].is_none() {
+            return None;
+        }
+        f.sends[rank] = None;
+        f.recvs[rank] = None;
+        f.joined -= 1;
+        let res = (f.joined, f.sends.len());
+        if f.joined == 0 {
+            ps.forming = None;
+        }
+        Some(res)
+    }
+
+    /// Group-wide rendezvous: drains this process's in-flight launches,
+    /// then (pool mode) meets every member at the whole-group barrier —
+    /// independent of either epoch half. Launch failures do not block the
+    /// rendezvous (they were already reported by `wait()`/`flush()`);
+    /// every member can always resynchronize here.
     pub fn barrier(&self) -> Result<()> {
+        let _ = self.drain_launches();
         match &self.inner {
             GroupImpl::Local(_) => Ok(()),
             GroupImpl::Pool(g) => {
                 let _op = g.op_lock.lock().unwrap();
                 g.ctrl.check_generation()?;
-                g.launch_barrier()?.wait()
+                g.group_barrier()?.wait()
             }
         }
     }
@@ -455,9 +933,15 @@ impl ProcessGroup {
     /// `split` with its `(color, key)`, the pairs travel through the
     /// control plane, and each caller gets back the subgroup for its color
     /// (members ordered by `(key, rank)`). Subgroups partition the parent's
-    /// doorbell window and device window, so sibling subgroups can launch
-    /// concurrently without sharing a single slot or device.
+    /// doorbell window and device window **proportionally to their rank
+    /// counts**, so a 4-rank subgroup gets twice the doorbell slots and
+    /// devices of its 2-rank sibling, and siblings can launch concurrently
+    /// without sharing a single slot or device.
     pub fn split(&self, color: usize, key: usize) -> Result<ProcessGroup> {
+        // Quiesce without failing: split is a fresh collective and every
+        // member must be able to reach its rounds even after a failed
+        // launch (whose error wait()/flush() already reported).
+        let _ = self.drain_launches();
         let g = match &self.inner {
             GroupImpl::Local(_) => bail!(
                 "thread-local groups hold every rank in-process: call \
@@ -471,12 +955,12 @@ impl ProcessGroup {
         );
         let _op = g.op_lock.lock().unwrap();
         g.ctrl.check_generation()?;
-        let lb = g.launch_barrier()?;
-        // Round 1: everyone at the split point.
-        lb.wait()?;
+        let gb = g.group_barrier()?;
+        // Round 1: everyone at the split point (all members flushed).
+        gb.wait()?;
         g.ctrl.publish_split(g.members[g.grank], color as u32, key as u32)?;
         // Round 2: all (color, key) pairs published.
-        lb.wait()?;
+        gb.wait()?;
         let entries: Vec<(usize, usize, usize)> = g
             .members
             .iter()
@@ -487,12 +971,12 @@ impl ProcessGroup {
             })
             .collect::<Result<_>>()?;
         // Round 3: all pairs read; the scratch slots are reusable.
-        lb.wait()?;
+        gb.wait()?;
         let parent_dev = g.layout.device_base..g.layout.device_base + g.layout.device_span;
         let subs = partition_subgroups(&g.window, parent_dev, &entries)?;
         // Each subgroup's first member wipes the subgroup window (it may
-        // hold stale plan doorbells from parent launches) before anyone
-        // builds barriers over it.
+        // hold stale plan doorbells and epoch words from parent launches)
+        // before anyone builds barriers over it.
         for sub in &subs {
             if sub.members.first() == Some(&g.grank) {
                 let base = sub.db_window.start * crate::doorbell::DOORBELL_SLOT;
@@ -502,7 +986,7 @@ impl ProcessGroup {
             }
         }
         // Round 4: every subgroup window is clean.
-        lb.wait()?;
+        gb.wait()?;
         let my = subs
             .into_iter()
             .find(|s| s.members.contains(&g.grank))
@@ -514,8 +998,8 @@ impl ProcessGroup {
             .expect("member list contains the caller");
         let (sub_spec, layout) = subgroup_view(&g.spec, &g.layout, &my)?;
         let members: Vec<usize> = my.members.iter().map(|r| g.members[*r]).collect();
-        Ok(ProcessGroup {
-            inner: GroupImpl::Pool(PoolGroup {
+        Ok(ProcessGroup::from_parts(
+            GroupImpl::Pool(PoolGroup {
                 pool: Arc::clone(&g.pool),
                 ctrl: g.ctrl.clone(),
                 spec: sub_spec,
@@ -526,18 +1010,19 @@ impl ProcessGroup {
                 cache: PlanCache::new(),
                 engine: Arc::clone(&g.engine),
                 policy: g.policy,
-                epoch: AtomicU32::new(0),
                 op_lock: Mutex::new(()),
             }),
-            bound_rank: sub_rank,
-        })
+            sub_rank,
+        ))
     }
 
     /// The thread-local counterpart of [`ProcessGroup::split`]: one call
     /// supplies every rank's `(color, key)` (index = group rank) and
     /// returns one subgroup per distinct color, ascending. Each subgroup
-    /// owns all of its ranks in-process, exactly like the parent.
+    /// owns all of its ranks in-process, exactly like the parent, and its
+    /// share of the parent's windows is proportional to its rank count.
     pub fn split_all(&self, assignment: &[(usize, usize)]) -> Result<Vec<ProcessGroup>> {
+        let _ = self.drain_launches();
         let g = match &self.inner {
             GroupImpl::Local(g) => g,
             GroupImpl::Pool(_) => bail!(
@@ -563,19 +1048,118 @@ impl ProcessGroup {
         subs.into_iter()
             .map(|sub| {
                 let (sub_spec, layout) = subgroup_view(g.comm.spec(), &parent_layout, &sub)?;
-                let comm =
-                    Communicator::over_pool(&sub_spec, layout, Arc::clone(g.comm.pool()))?;
+                let comm = Arc::new(Communicator::over_pool(
+                    &sub_spec,
+                    layout,
+                    Arc::clone(g.comm.pool()),
+                )?);
                 let members: Vec<usize> = sub.members.iter().map(|r| g.members[*r]).collect();
-                Ok(ProcessGroup {
-                    inner: GroupImpl::Local(LocalGroup {
+                Ok(ProcessGroup::from_parts(
+                    GroupImpl::Local(LocalGroup {
                         comm,
                         window: sub.db_window,
                         members,
                     }),
-                    bound_rank: 0,
-                })
+                    0,
+                ))
             })
             .collect()
+    }
+
+    // ---- deprecated v3 shims --------------------------------------------
+
+    /// Begin the bound rank's part of a collective.
+    #[deprecated(
+        note = "use the typed per-primitive methods (`all_gather`, `all_reduce`, …) or \
+                `collective(primitive, ..)`, which return a `CollectiveFuture`"
+    )]
+    pub fn begin(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<GroupPending<'_>> {
+        Ok(GroupPending {
+            inner: self.collective(primitive, cfg, n_elems, send, recv)?,
+        })
+    }
+
+    /// [`ProcessGroup::begin`] for an explicit group rank.
+    #[deprecated(
+        note = "use `collective_rank(rank, primitive, ..)`, which returns a `CollectiveFuture`"
+    )]
+    pub fn begin_rank(
+        &self,
+        rank: usize,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        send: Tensor,
+        recv: Tensor,
+    ) -> Result<GroupPending<'_>> {
+        Ok(GroupPending {
+            inner: self.collective_rank(rank, primitive, cfg, n_elems, send, recv)?,
+        })
+    }
+}
+
+impl PoolGroup {
+    /// The whole-group barrier (split rounds, `ProcessGroup::barrier`) —
+    /// its words are outside both epoch halves.
+    fn group_barrier(&self) -> Result<PoolBarrier<'_>> {
+        Ok(PoolBarrier::new(
+            &self.pool,
+            control::group_word_off(self.window.start, control::GC_GROUP_CNT),
+            control::group_word_off(self.window.start, control::GC_GROUP_SENSE),
+            self.members.len(),
+            self.policy,
+        )?
+        .with_guard(control::generation_offset(), self.ctrl.generation))
+    }
+}
+
+/// A begun-but-not-awaited group launch — the deprecated v3 handle, now a
+/// thin wrapper over [`CollectiveFuture`].
+#[deprecated(note = "use the typed methods on `ProcessGroup` returning `CollectiveFuture`")]
+#[must_use = "a GroupPending does nothing until wait()ed"]
+pub struct GroupPending<'g> {
+    inner: CollectiveFuture<'g>,
+}
+
+#[allow(deprecated)]
+impl<'g> GroupPending<'g> {
+    /// The group rank this launch belongs to.
+    pub fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    /// Block until the group's collective has run; returns this rank's
+    /// recv tensor and the launch's wall-clock duration.
+    pub fn wait(self) -> Result<(Tensor, Duration)> {
+        self.inner.wait()
+    }
+
+    /// The future this shim wraps.
+    pub fn into_future(self) -> CollectiveFuture<'g> {
+        self.inner
+    }
+}
+
+/// Context line for a failed launch planning attempt: when the launch was
+/// bound for an epoch half, say so and name the remedies.
+fn half_plan_hint(on_half: bool, seq: u64) -> String {
+    if on_half {
+        format!(
+            "planning launch seq {seq} on epoch half {} — pipelined collectives must fit \
+             half the group's doorbell/device window; grow ClusterSpec::device_capacity or \
+             db_region_size (thread-local groups at depth 1 fall back to the undivided \
+             window automatically)",
+            seq % 2
+        )
+    } else {
+        format!("planning launch seq {seq}")
     }
 }
 
@@ -590,9 +1174,43 @@ struct SubgroupPart {
     dev_window: Range<usize>,
 }
 
+/// Divide `total` units among colors proportionally to `weights` (member
+/// counts): floor shares first, the remainder unit-by-unit to the largest
+/// fractional parts (ties broken by color order), then deficient shares
+/// raised to `min_each` by taking from the largest share. Deterministic —
+/// every member computes the identical partition.
+fn weighted_shares(total: usize, weights: &[usize], min_each: usize) -> Option<Vec<usize>> {
+    let n = weights.len();
+    let wsum: usize = weights.iter().sum();
+    if total < n * min_each || wsum == 0 {
+        return None;
+    }
+    let mut shares: Vec<usize> = weights.iter().map(|w| total * w / wsum).collect();
+    let mut rem = total - shares.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(total * weights[i] % wsum), i));
+    for &i in &order {
+        if rem == 0 {
+            break;
+        }
+        shares[i] += 1;
+        rem -= 1;
+    }
+    // Raise any share below the floor by taking from the largest; total >=
+    // n * min_each guarantees progress and termination.
+    while let Some(i) = shares.iter().position(|s| *s < min_each) {
+        let j = (0..n).max_by_key(|&j| shares[j]).unwrap();
+        debug_assert!(shares[j] > min_each);
+        shares[j] -= 1;
+        shares[i] += 1;
+    }
+    Some(shares)
+}
+
 /// Deterministic split arithmetic shared by both bootstrap modes: distinct
 /// colors ascending, members ordered by `(key, rank)`, the parent's plan
-/// window and device window divided into equal chunks per color.
+/// window and device window divided proportionally to each color's rank
+/// count (ROADMAP "weighted splits").
 fn partition_subgroups(
     parent_window: &Range<usize>,
     parent_dev: Range<usize>,
@@ -602,24 +1220,8 @@ fn partition_subgroups(
     colors.sort_unstable();
     colors.dedup();
     let ncolors = colors.len();
-    let plan_start = parent_window.start + GROUP_CTRL_SLOTS;
-    let plan_span = parent_window.end.saturating_sub(plan_start);
-    let db_chunk = plan_span / ncolors;
-    ensure!(
-        db_chunk > GROUP_CTRL_SLOTS,
-        "doorbell window too small to split {ncolors} ways: {plan_span} plan slots leave \
-         {db_chunk} per subgroup, need more than {GROUP_CTRL_SLOTS} (grow \
-         ClusterSpec::db_region_size)"
-    );
-    let dev_span = parent_dev.end - parent_dev.start;
-    let dev_chunk = dev_span / ncolors;
-    ensure!(
-        dev_chunk >= 1,
-        "cannot split {dev_span} device(s) into {ncolors} subgroups: each subgroup needs \
-         at least one exclusive device for write isolation"
-    );
-    let mut out = Vec::with_capacity(ncolors);
-    for (i, &c) in colors.iter().enumerate() {
+    let mut member_lists: Vec<Vec<usize>> = Vec::with_capacity(ncolors);
+    for &c in &colors {
         let mut ordered: Vec<(usize, usize)> = entries
             .iter()
             .filter(|e| e.1 == c)
@@ -633,12 +1235,40 @@ fn partition_subgroups(
              per group",
             members.len()
         );
-        let db0 = plan_start + i * db_chunk;
-        let dev0 = parent_dev.start + i * dev_chunk;
+        member_lists.push(members);
+    }
+    let weights: Vec<usize> = member_lists.iter().map(Vec::len).collect();
+    let plan_start = parent_window.start + GROUP_CTRL_SLOTS;
+    let plan_span = parent_window.end.saturating_sub(plan_start);
+    // Each subgroup needs its own control prefix plus at least one plan
+    // doorbell slot.
+    let db_shares =
+        weighted_shares(plan_span, &weights, GROUP_CTRL_SLOTS + 1).ok_or_else(|| {
+            anyhow::anyhow!(
+                "doorbell window too small to split {ncolors} ways: {plan_span} plan slots \
+                 cannot give every subgroup its {GROUP_CTRL_SLOTS}-slot control prefix plus \
+                 a plan doorbell (grow ClusterSpec::db_region_size)"
+            )
+        })?;
+    let dev_span = parent_dev.end - parent_dev.start;
+    let dev_shares = weighted_shares(dev_span, &weights, 1).ok_or_else(|| {
+        anyhow::anyhow!(
+            "cannot split {dev_span} device(s) into {ncolors} subgroups: each subgroup \
+             needs at least one exclusive device for write isolation"
+        )
+    })?;
+    let mut out = Vec::with_capacity(ncolors);
+    let mut db_cursor = plan_start;
+    let mut dev_cursor = parent_dev.start;
+    for (i, members) in member_lists.into_iter().enumerate() {
+        let db_window = db_cursor..db_cursor + db_shares[i];
+        let dev_window = dev_cursor..dev_cursor + dev_shares[i];
+        db_cursor = db_window.end;
+        dev_cursor = dev_window.end;
         out.push(SubgroupPart {
             members,
-            db_window: db0..db0 + db_chunk,
-            dev_window: dev0..dev0 + dev_chunk,
+            db_window,
+            dev_window,
         });
     }
     Ok(out)
@@ -662,194 +1292,6 @@ fn subgroup_view(
     Ok((sub_spec, layout))
 }
 
-impl PoolGroup {
-    fn ctrl_word(&self, word: usize) -> Result<&AtomicU32> {
-        self.pool
-            .atomic_u32(control::group_word_off(self.window.start, word))
-    }
-
-    fn barrier_over(&self, cnt: usize, sense: usize, parties: usize) -> Result<PoolBarrier<'_>> {
-        Ok(PoolBarrier::new(
-            &self.pool,
-            control::group_word_off(self.window.start, cnt),
-            control::group_word_off(self.window.start, sense),
-            parties,
-            self.policy,
-        )?
-        .with_guard(control::generation_offset(), self.ctrl.generation))
-    }
-
-    /// One party per member process.
-    fn launch_barrier(&self) -> Result<PoolBarrier<'_>> {
-        self.barrier_over(
-            control::GC_LAUNCH_CNT,
-            control::GC_LAUNCH_SENSE,
-            self.members.len(),
-        )
-    }
-
-    /// One party per op stream (two per member) — backs `Op::Barrier`.
-    fn stream_barrier(&self) -> Result<PoolBarrier<'_>> {
-        self.barrier_over(
-            control::GC_STREAM_CNT,
-            control::GC_STREAM_SENSE,
-            2 * self.members.len(),
-        )
-    }
-
-    /// Execute this process's rank of `plan` against the shared pool.
-    ///
-    /// Launch protocol (per collective, all members):
-    /// 1. launch barrier — every member has finished its previous
-    ///    collective and is at this launch;
-    /// 2. group rank 0 resets the group's doorbell window and publishes the
-    ///    launch epoch; everyone else spins on the epoch word;
-    /// 3. each process runs its own rank's write/read streams; doorbells
-    ///    (and, for barrier variants, the pool stream barrier) are the only
-    ///    cross-process synchronization.
-    fn launch(&self, plan: &ValidPlan, send: &[u8], recv: &mut [u8]) -> Result<Duration> {
-        ensure!(
-            plan.nranks == self.members.len(),
-            "plan is for {} ranks, group has {}",
-            plan.nranks,
-            self.members.len()
-        );
-        // One collective in flight per process: concurrent callers queue
-        // here instead of double-arriving at the launch barrier.
-        let _op = self.op_lock.lock().unwrap();
-        self.ctrl.check_generation()?;
-        let my_epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
-        self.launch_barrier()?.wait()?;
-        let epoch_w = self.ctrl_word(control::GC_EPOCH)?;
-        if self.grank == 0 {
-            DoorbellSet::new(&self.pool, self.layout).reset_all()?;
-            epoch_w.store(my_epoch, Ordering::Release);
-            self.pool.flush(
-                control::group_word_off(self.window.start, control::GC_EPOCH),
-                4,
-            );
-        } else {
-            let start = Instant::now();
-            let epoch_off = control::group_word_off(self.window.start, control::GC_EPOCH);
-            while epoch_w.load(Ordering::Acquire) != my_epoch {
-                // Same discipline as every other cross-process wait: flush
-                // the line between probes (no-op on coherent hosts, load-
-                // bearing on a real non-coherent DAX mapping).
-                self.pool.flush(epoch_off, 4);
-                self.ctrl.check_generation()?;
-                if start.elapsed() > self.policy.timeout {
-                    bail!(
-                        "timed out waiting for group rank 0 to reset doorbells for \
-                         launch {my_epoch} (epoch word at {})",
-                        epoch_w.load(Ordering::Acquire)
-                    );
-                }
-                std::thread::yield_now();
-            }
-        }
-        let esize = plan.elem_bytes();
-        recv[..plan.recv_elems * esize].fill(0);
-        let rank_plan = &plan.ranks[self.grank];
-        let sb = self.stream_barrier()?;
-        let start = Instant::now();
-        let mut errors: Vec<anyhow::Error> = Vec::new();
-        std::thread::scope(|scope| {
-            let pool: &ShmPool = &self.pool;
-            let layout = self.layout;
-            let policy = self.policy;
-            let engine: &dyn ReduceEngine = &*self.engine;
-            let dtype = plan.dtype;
-            let write_ops = &rank_plan.write_ops;
-            let read_ops = &rank_plan.read_ops;
-            let sb = &sb;
-            let grank = self.grank;
-            let send_w: &[u8] = send;
-            let w = scope.spawn(move || {
-                run_stream(StreamCtx {
-                    rank: grank,
-                    stream: "write",
-                    ops: write_ops,
-                    pool,
-                    layout,
-                    policy,
-                    barrier: StreamSync::Pool(sb),
-                    engine: None,
-                    dtype,
-                    send: send_w,
-                    recv: None,
-                })
-            });
-            let r = scope.spawn(move || {
-                run_stream(StreamCtx {
-                    rank: grank,
-                    stream: "read",
-                    ops: read_ops,
-                    pool,
-                    layout,
-                    policy,
-                    barrier: StreamSync::Pool(sb),
-                    engine: Some(engine),
-                    dtype,
-                    send,
-                    recv: Some(recv),
-                })
-            });
-            for h in [w, r] {
-                match h.join() {
-                    Ok(Ok(())) => {}
-                    Ok(Err(e)) => errors.push(e),
-                    Err(_) => errors.push(anyhow::anyhow!("stream thread panicked")),
-                }
-            }
-        });
-        if let Some(e) = errors.into_iter().next() {
-            return Err(e);
-        }
-        Ok(start.elapsed())
-    }
-}
-
-/// A begun-but-not-awaited group launch (either bootstrap mode).
-#[must_use = "a GroupPending does nothing until wait()ed"]
-pub struct GroupPending<'g> {
-    inner: PendingInner<'g>,
-}
-
-enum PendingInner<'g> {
-    Local(PendingOp<'g>),
-    Pool {
-        group: &'g PoolGroup,
-        plan: ValidPlan,
-        send: Tensor,
-        recv: Tensor,
-    },
-}
-
-impl GroupPending<'_> {
-    /// The group rank this launch belongs to.
-    pub fn rank(&self) -> usize {
-        match &self.inner {
-            PendingInner::Local(p) => p.rank(),
-            PendingInner::Pool { group, .. } => group.grank,
-        }
-    }
-
-    /// Block until the group's collective has run; returns this rank's
-    /// recv tensor and the launch's wall-clock duration.
-    pub fn wait(self) -> Result<(Tensor, Duration)> {
-        match self.inner {
-            PendingInner::Local(p) => p.wait(),
-            PendingInner::Pool { group, plan, send, mut recv } => {
-                let wall = {
-                    let mut view = recv.view_mut();
-                    group.launch(&plan, send.as_bytes(), view.as_bytes_mut())?
-                };
-                Ok((recv, wall))
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -857,7 +1299,8 @@ mod tests {
     #[test]
     fn partition_is_deterministic_and_disjoint() {
         // 4 ranks; color 1 holds ranks {0, 2}, color 0 holds {1, 3}; keys
-        // deliberately out of rank order.
+        // deliberately out of rank order. Equal member counts -> equal
+        // halves of the plan window (64+16=80 .. 1024) and devices.
         let entries = vec![(0, 1, 5), (1, 0, 9), (2, 1, 2), (3, 0, 1)];
         let subs = partition_subgroups(&(64..1024), 0..6, &entries).unwrap();
         assert_eq!(subs.len(), 2);
@@ -865,10 +1308,42 @@ mod tests {
         assert_eq!(subs[0].members, vec![3, 1], "color 0: key 1 before key 9");
         assert_eq!(subs[1].members, vec![2, 0], "color 1: key 2 before key 5");
         // Windows are disjoint and inside the parent's plan window.
-        assert_eq!(subs[0].db_window, 72..548);
-        assert_eq!(subs[1].db_window, 548..1024);
+        assert_eq!(subs[0].db_window, 80..552);
+        assert_eq!(subs[1].db_window, 552..1024);
         assert_eq!(subs[0].dev_window, 0..3);
         assert_eq!(subs[1].dev_window, 3..6);
+    }
+
+    #[test]
+    fn partition_weighs_windows_by_rank_count() {
+        // 6 ranks: color 0 holds 4, color 1 holds 2 -> 2:1 window split.
+        let entries: Vec<(usize, usize, usize)> =
+            (0..6).map(|r| (r, usize::from(r >= 4), r)).collect();
+        let subs = partition_subgroups(&(64..1024), 0..6, &entries).unwrap();
+        assert_eq!(subs[0].members.len(), 4);
+        assert_eq!(subs[1].members.len(), 2);
+        // Plan window: 944 slots -> floors 629 + 314; the remainder slot
+        // goes to color 1 (larger fractional part: .67 vs .33).
+        assert_eq!(subs[0].db_window.len() + subs[1].db_window.len(), 944);
+        assert_eq!(subs[0].db_window.len(), 629);
+        assert_eq!(subs[1].db_window.len(), 315);
+        // Devices 2:1.
+        assert_eq!(subs[0].dev_window, 0..4);
+        assert_eq!(subs[1].dev_window, 4..6);
+        // Accounting: contiguous, disjoint, covering.
+        assert_eq!(subs[0].db_window.end, subs[1].db_window.start);
+        assert_eq!(subs[1].db_window.end, 1024);
+    }
+
+    #[test]
+    fn partition_raises_starved_shares_to_the_floor() {
+        // 8 ranks over 3 devices: colors weigh 6:2, the floor share of the
+        // light color (3*2/8 = 0) must be raised to one exclusive device.
+        let entries: Vec<(usize, usize, usize)> =
+            (0..8).map(|r| (r, usize::from(r >= 6), r)).collect();
+        let subs = partition_subgroups(&(64..1024), 0..3, &entries).unwrap();
+        assert_eq!(subs[0].dev_window.len(), 2);
+        assert_eq!(subs[1].dev_window.len(), 1);
     }
 
     #[test]
@@ -883,7 +1358,355 @@ mod tests {
         assert!(err.to_string().contains("exclusive device"), "{err}");
         // Doorbell window too small for two control prefixes.
         let entries = vec![(0, 0, 0), (1, 0, 0), (2, 1, 0), (3, 1, 0)];
-        let err = partition_subgroups(&(64..88), 0..6, &entries).unwrap_err();
+        let err = partition_subgroups(&(64..104), 0..6, &entries).unwrap_err();
         assert!(err.to_string().contains("doorbell window too small"), "{err}");
+    }
+
+    #[test]
+    fn weighted_shares_are_exact_and_deterministic() {
+        assert_eq!(weighted_shares(10, &[1, 1], 1), Some(vec![5, 5]));
+        assert_eq!(weighted_shares(9, &[2, 1], 1), Some(vec![6, 3]));
+        // Remainder goes to the largest fractional part (color 0: 7*2/3 =
+        // 4.67 -> 5; color 1: 2.33 -> 2).
+        assert_eq!(weighted_shares(7, &[2, 1], 1), Some(vec![5, 2]));
+        // Floor-zero share raised to the minimum.
+        assert_eq!(weighted_shares(3, &[5, 1], 1), Some(vec![2, 1]));
+        // Infeasible.
+        assert_eq!(weighted_shares(1, &[1, 1], 1), None);
+        // Shares always sum to the total.
+        for total in [5usize, 17, 100] {
+            for w in [[1usize, 1, 1], [3, 2, 1], [10, 1, 1]] {
+                let s = weighted_shares(total, &w, 1).unwrap();
+                assert_eq!(s.iter().sum::<usize>(), total, "{total} {w:?}");
+                assert!(s.iter().all(|x| *x >= 1));
+            }
+        }
+    }
+
+    #[test]
+    fn typed_launches_pipeline_and_match_serialized() {
+        // The in-module version of the determinism contract (full matrix in
+        // tests/pipeline.rs): depth 2 and depth 1 produce identical bytes.
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let n = 3 * 256;
+        let cfg = CclConfig::default_all();
+        let run = |depth: usize| -> Vec<Vec<u8>> {
+            let pg = CommWorld::init(Bootstrap::thread_local(spec.clone()), 0, 3)
+                .unwrap()
+                .with_pipeline_depth(depth)
+                .unwrap();
+            let mut out = Vec::new();
+            for round in 0..4 {
+                let futs: Vec<CollectiveFuture<'_>> = (0..3)
+                    .map(|r| {
+                        pg.collective_rank(
+                            r,
+                            Primitive::AllReduce,
+                            &cfg,
+                            n,
+                            Tensor::from_f32(&vec![(r + round) as f32 + 0.5; n]),
+                            Tensor::zeros(Dtype::F32, n),
+                        )
+                        .unwrap()
+                    })
+                    .collect();
+                for f in futs {
+                    out.push(f.wait().unwrap().0.into_bytes());
+                }
+            }
+            pg.flush().unwrap();
+            out
+        };
+        assert_eq!(run(2), run(1));
+    }
+
+    #[test]
+    fn futures_may_be_held_across_launches() {
+        // Issue launch N+1 while holding launch N's futures — the typed
+        // nonblocking contract. Inputs differ per launch so cross-launch
+        // corruption would be visible.
+        let spec = ClusterSpec::new(2, 6, 4 << 20);
+        let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
+        assert_eq!(pg.pipeline_depth(), 2);
+        let cfg = CclConfig::default_all();
+        let n = 2 * 128;
+        let a: Vec<CollectiveFuture<'_>> = (0..2)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    Tensor::from_f32(&vec![1.0 + r as f32; n]),
+                    Tensor::zeros(Dtype::F32, 2 * n),
+                )
+                .unwrap()
+            })
+            .collect();
+        let b: Vec<CollectiveFuture<'_>> = (0..2)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    Tensor::from_f32(&vec![10.0 + r as f32; n]),
+                    Tensor::zeros(Dtype::F32, 2 * n),
+                )
+                .unwrap()
+            })
+            .collect();
+        for (i, f) in b.into_iter().enumerate() {
+            let (out, _) = f.wait().unwrap();
+            let v = out.to_f32().unwrap();
+            assert!(v[..n].iter().all(|x| *x == 10.0), "launch B rank {i} first half");
+            assert!(v[n..].iter().all(|x| *x == 11.0), "launch B rank {i} second half");
+        }
+        for f in a {
+            let (out, _) = f.wait().unwrap();
+            let v = out.to_f32().unwrap();
+            assert!(v[..n].iter().all(|x| *x == 1.0));
+            assert!(v[n..].iter().all(|x| *x == 2.0));
+        }
+    }
+
+    #[test]
+    fn mismatched_collective_sequence_is_rejected() {
+        let spec = ClusterSpec::new(2, 6, 4 << 20);
+        let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
+        let cfg = CclConfig::default_all();
+        let _f = pg
+            .collective_rank(
+                0,
+                Primitive::AllGather,
+                &cfg,
+                64,
+                Tensor::zeros(Dtype::F32, 64),
+                Tensor::zeros(Dtype::F32, 128),
+            )
+            .unwrap();
+        let err = pg
+            .collective_rank(
+                1,
+                Primitive::AllReduce,
+                &cfg,
+                64,
+                Tensor::zeros(Dtype::F32, 64),
+                Tensor::zeros(Dtype::F32, 64),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("collective mismatch"), "{err}");
+    }
+
+    #[test]
+    fn abandoned_and_premature_futures_release_the_sequence() {
+        let spec = ClusterSpec::new(2, 6, 4 << 20);
+        let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
+        let cfg = CclConfig::default_all();
+        let issue = |r: usize| {
+            pg.collective_rank(
+                r,
+                Primitive::AllReduce,
+                &cfg,
+                128,
+                Tensor::from_f32(&vec![1.0; 128]),
+                Tensor::zeros(Dtype::F32, 128),
+            )
+        };
+        // Dropping an un-launched future withdraws the rank.
+        let f0 = issue(0).unwrap();
+        drop(f0);
+        // Premature wait fails fast and withdraws too.
+        let f0 = issue(0).unwrap();
+        let err = f0.wait().unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+        // Full retry succeeds.
+        let futs: Vec<CollectiveFuture<'_>> = (0..2).map(|r| issue(r).unwrap()).collect();
+        for f in futs {
+            let (out, _) = f.wait().unwrap();
+            assert!(out.to_f32().unwrap().iter().all(|v| *v == 2.0));
+        }
+    }
+
+    #[test]
+    fn depth_validation_and_unpipelined_fallback() {
+        let spec = ClusterSpec::new(2, 6, 4 << 20);
+        let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
+        assert!(pg.pipeline_layouts().is_some());
+        assert!(pg.set_pipeline_depth(0).is_err());
+        assert!(pg.set_pipeline_depth(3).is_err());
+        pg.set_pipeline_depth(1).unwrap();
+        assert_eq!(pg.pipeline_depth(), 1);
+        // A single-device world cannot halve its device window: pipelining
+        // falls back to serialized launches and depth 2 is rejected.
+        let pg1 = CommWorld::init(
+            Bootstrap::thread_local(ClusterSpec::new(2, 1, 4 << 20)),
+            0,
+            2,
+        )
+        .unwrap();
+        assert!(pg1.pipeline_layouts().is_none());
+        assert_eq!(pg1.pipeline_depth(), 1);
+        assert!(pg1.set_pipeline_depth(2).is_err());
+        let cfg = CclConfig::default_all();
+        let futs: Vec<CollectiveFuture<'_>> = (0..2)
+            .map(|r| {
+                pg1.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    128,
+                    Tensor::from_f32(&vec![r as f32; 128]),
+                    Tensor::zeros(Dtype::F32, 256),
+                )
+                .unwrap()
+            })
+            .collect();
+        for f in futs {
+            f.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn pool_epoch_ring_survives_a_seeded_u64_wraparound() {
+        // Both members seed the launch sequence just below u64::MAX and run
+        // enough launches to cross it: the per-half epoch words keep
+        // transitioning (wrapping truncation + inequality spin), so every
+        // launch completes and the results stay correct across the wrap.
+        let mut spec = ClusterSpec::new(2, 6, 1 << 20);
+        spec.db_region_size = 64 * 512;
+        let path = format!("/dev/shm/cxl_ccl_wrap_{}", std::process::id());
+        let _ = std::fs::remove_file(&path);
+        let seed = u64::MAX - 3;
+        let n = 2 * 64;
+        let run_rank = |rank: usize| -> Result<Vec<Vec<f32>>> {
+            let boot = Bootstrap::pool(&path, spec.clone())
+                .with_join_timeout(Duration::from_secs(20));
+            let pg = CommWorld::init(boot, rank, 2)?;
+            pg.seed_launch_seq(seed)?;
+            let cfg = CclConfig::default_all();
+            let mut outs = Vec::new();
+            for round in 0..8u64 {
+                let f = pg.all_reduce(
+                    &cfg,
+                    n,
+                    Tensor::from_f32(&vec![(rank as f32 + 1.0) * (round as f32 + 1.0); n]),
+                    Tensor::zeros(Dtype::F32, n),
+                )?;
+                outs.push(f.wait()?.0.to_f32()?);
+            }
+            pg.flush()?;
+            Ok(outs)
+        };
+        let (a, b) = std::thread::scope(|s| {
+            let h0 = s.spawn(|| run_rank(0));
+            let h1 = s.spawn(|| run_rank(1));
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        let (a, b) = (a.unwrap(), b.unwrap());
+        for round in 0..8usize {
+            let want = 3.0 * (round as f32 + 1.0); // (1 + 2) * (round + 1)
+            assert!(
+                a[round].iter().all(|v| *v == want),
+                "round {round} crossed the wrap incorrectly"
+            );
+            assert_eq!(a[round], b[round]);
+        }
+    }
+
+    #[test]
+    fn serialized_local_groups_fall_back_to_the_full_window() {
+        // Capacity chosen so a 1 MiB-per-rank AllGather fits the whole
+        // 6-device window (two 512 KiB blocks per rank) but NOT a 3-device
+        // epoch half (one 1 MiB block on top of the doorbell region
+        // overflows the 1 MiB device): depth 2 must fail with the
+        // half-window hint, depth 1 must fall back and succeed — v3
+        // capacity parity for serialized groups.
+        let mut spec = ClusterSpec::new(3, 6, 1 << 20);
+        spec.db_region_size = 64 * 1024; // 1024 slots
+        let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 3).unwrap();
+        let cfg = CclConfig::default_all();
+        let n = 262_144; // 1 MiB of f32 per rank
+        let issue0 = |pg: &ProcessGroup| {
+            pg.collective_rank(
+                0,
+                Primitive::AllGather,
+                &cfg,
+                n,
+                Tensor::zeros(Dtype::F32, n),
+                Tensor::zeros(Dtype::F32, 3 * n),
+            )
+        };
+        assert_eq!(pg.pipeline_depth(), 2);
+        let err = issue0(&pg).unwrap_err();
+        assert!(format!("{err:#}").contains("epoch half"), "{err:#}");
+        pg.set_pipeline_depth(1).unwrap();
+        let futs: Vec<CollectiveFuture<'_>> = (0..3)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    Tensor::from_f32(&vec![r as f32; n]),
+                    Tensor::zeros(Dtype::F32, 3 * n),
+                )
+                .unwrap()
+            })
+            .collect();
+        for f in futs {
+            let (out, _) = f.wait().unwrap();
+            let v = out.to_f32().unwrap();
+            assert!(v[..n].iter().all(|x| *x == 0.0));
+            assert!(v[2 * n..].iter().all(|x| *x == 2.0));
+        }
+        pg.flush().unwrap();
+    }
+
+    #[test]
+    fn flush_retires_launches_and_unblocks_reseeding() {
+        let spec = ClusterSpec::new(2, 6, 4 << 20);
+        let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
+        let cfg = CclConfig::default_all();
+        let futs: Vec<CollectiveFuture<'_>> = (0..2)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    128,
+                    Tensor::from_f32(&vec![r as f32; 128]),
+                    Tensor::zeros(Dtype::F32, 256),
+                )
+                .unwrap()
+            })
+            .collect();
+        for f in futs {
+            f.wait().unwrap();
+        }
+        // Flush drains, joins, and retires: the group is quiescent again,
+        // so reseeding the sequence counter is permitted.
+        pg.flush().unwrap();
+        pg.seed_launch_seq(42).unwrap();
+        // And repeated flushes stay clean (nothing left to re-report).
+        pg.flush().unwrap();
+    }
+
+    #[test]
+    fn seeding_with_inflight_launches_is_rejected() {
+        let spec = ClusterSpec::new(2, 6, 4 << 20);
+        let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
+        let cfg = CclConfig::default_all();
+        let _f = pg
+            .collective_rank(
+                0,
+                Primitive::AllGather,
+                &cfg,
+                64,
+                Tensor::zeros(Dtype::F32, 64),
+                Tensor::zeros(Dtype::F32, 128),
+            )
+            .unwrap();
+        assert!(pg.seed_launch_seq(7).is_err(), "forming launch blocks reseed");
     }
 }

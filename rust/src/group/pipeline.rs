@@ -1,0 +1,518 @@
+//! Cross-launch pipelining: the nonblocking machinery behind the typed
+//! v4 collective surface.
+//!
+//! A [`super::ProcessGroup`] no longer executes a collective inside
+//! `wait()`: every launch runs on a dedicated background thread against one
+//! of the group's two *epoch-half* views (launch `seq` uses half
+//! `seq % 2`, which owns half the doorbell window and half the device
+//! window — see [`crate::pool::PoolLayout::pipeline_halves`]). Because the
+//! halves are disjoint, launch `N+1` publishes its data while launch `N`'s
+//! retrieval is still draining — the §5 parallelization argument made into
+//! an API. The *depth gate* bounds the overlap: the thread for launch `seq`
+//! first waits for launch `seq - depth` (its same-half predecessor at the
+//! default depth 2) to finish, so a half is never reused while in flight.
+//!
+//! [`CollectiveFuture`] is the handle: hold it while issuing the next
+//! collective, `wait()` it to collect this rank's result, or
+//! [`super::ProcessGroup::flush`] to drain everything.
+
+use crate::collectives::ops::ValidPlan;
+use crate::doorbell::{DoorbellSet, PoolBarrier, WaitPolicy};
+use crate::exec::communicator::{run_stream, StreamCtx, StreamSync};
+use crate::exec::reduce_engine::ReduceEngine;
+use crate::exec::Communicator;
+use crate::group::control::{
+    epoch_pair, generation_offset, group_word_off, half_word, GC_EPOCH, GC_LAUNCH_CNT,
+    GC_LAUNCH_SENSE, GC_STREAM_CNT, GC_STREAM_SENSE,
+};
+use crate::group::ProcessGroup;
+use crate::pool::{PoolLayout, ShmPool};
+use crate::tensor::{Dtype, Tensor, TensorView, TensorViewMut};
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shared completion cell of one launched (or still-forming) collective.
+/// Futures of the launch and the depth gate both hang off it.
+pub(crate) struct LaunchCell {
+    state: Mutex<CellState>,
+    cv: Condvar,
+}
+
+struct CellState {
+    done: bool,
+    /// `Ok(wall)` or the stringified error, set exactly once.
+    outcome: Option<Result<Duration, String>>,
+    /// One slot per group rank (pool mode: a single slot), filled on
+    /// success and taken by each rank's `wait()`.
+    recvs: Vec<Option<Tensor>>,
+}
+
+impl LaunchCell {
+    pub(crate) fn new(nranks: usize) -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(CellState {
+                done: false,
+                outcome: None,
+                recvs: (0..nranks).map(|_| None).collect(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn complete(&self, outcome: Result<(Vec<Tensor>, Duration), String>) {
+        let mut st = self.state.lock().unwrap();
+        if st.done {
+            return;
+        }
+        match outcome {
+            Ok((recvs, wall)) => {
+                st.recvs = recvs.into_iter().map(Some).collect();
+                st.outcome = Some(Ok(wall));
+            }
+            Err(msg) => st.outcome = Some(Err(msg)),
+        }
+        st.done = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until the launch finished (successfully or not). The launch
+    /// thread always completes the cell — barrier and doorbell waits inside
+    /// it are themselves timeout-bounded, and a panic trips the completion
+    /// guard — so this wait needs no timeout of its own.
+    pub(crate) fn wait_done(&self) {
+        let mut st = self.state.lock().unwrap();
+        while !st.done {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// The launch's error, if it failed (None while running or on success).
+    pub(crate) fn error(&self) -> Option<String> {
+        let st = self.state.lock().unwrap();
+        match &st.outcome {
+            Some(Err(msg)) => Some(msg.clone()),
+            _ => None,
+        }
+    }
+
+    fn take_result(&self, rank: usize) -> Result<(Tensor, Duration)> {
+        let mut st = self.state.lock().unwrap();
+        while !st.done {
+            st = self.cv.wait(st).unwrap();
+        }
+        match st.outcome.as_ref().unwrap() {
+            Ok(wall) => {
+                let wall = *wall;
+                let tensor = st.recvs[rank]
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("rank {rank} result already taken"))?;
+                Ok((tensor, wall))
+            }
+            Err(msg) => bail!("collective launch failed: {msg}"),
+        }
+    }
+}
+
+/// Completes the cell with an error if the launch thread unwinds without
+/// reaching its normal completion call.
+struct CompleteGuard(Arc<LaunchCell>);
+
+impl Drop for CompleteGuard {
+    fn drop(&mut self) {
+        // `complete` is idempotent: a no-op after normal completion.
+        self.0.complete(Err("launch thread panicked".into()));
+    }
+}
+
+/// Per-group pipeline bookkeeping, behind the group's pipe mutex.
+pub(crate) struct PipeState {
+    /// Sequence number of the next launch (wrapping; half = `seq % 2`).
+    pub(crate) seq: u64,
+    /// `(seq, cell)` of the most recent launches, oldest first. Only the
+    /// last two are retained: the depth gate of launch `s` needs at most
+    /// `s - 2`, and by the time `s` is issued everything older is done
+    /// (its successor's gate already waited on it).
+    pub(crate) inflight: VecDeque<(u64, Arc<LaunchCell>)>,
+    /// Join handles of every spawned launch thread since the last flush.
+    /// `wait()` only observes the completion *cell*; `flush()` additionally
+    /// joins the threads so a flushed group has no launch thread alive at
+    /// all (fork-safety: the fork-based tests fork right after a flush).
+    pub(crate) threads: Vec<std::thread::JoinHandle<()>>,
+    /// Thread-local groups: the launch currently collecting member ranks.
+    pub(crate) forming: Option<Forming>,
+}
+
+impl PipeState {
+    pub(crate) fn new() -> Self {
+        Self {
+            seq: 0,
+            inflight: VecDeque::new(),
+            threads: Vec::new(),
+            forming: None,
+        }
+    }
+
+    /// The gate cell for a launch at `seq` under `depth` (the launch that
+    /// must fully drain before this one may start), if it is still
+    /// tracked. Wrapping arithmetic: a seeded counter may sit anywhere.
+    pub(crate) fn gate_for(&self, seq: u64, depth: usize) -> Option<Arc<LaunchCell>> {
+        let want = seq.wrapping_sub(depth as u64);
+        self.inflight
+            .iter()
+            .find(|(s, _)| *s == want)
+            .map(|(_, c)| Arc::clone(c))
+    }
+
+    pub(crate) fn track(&mut self, seq: u64, cell: Arc<LaunchCell>) {
+        self.inflight.push_back((seq, cell));
+        while self.inflight.len() > 2 {
+            self.inflight.pop_front();
+        }
+    }
+
+    /// Join (not just drop) every launch thread that has already exited its
+    /// body, so a flushless steady-state loop cannot accumulate handles
+    /// without bound — and never detaches a thread that might still be
+    /// tearing down while holding clones of the group's Arcs.
+    pub(crate) fn reap_finished_threads(&mut self) {
+        let mut live = Vec::new();
+        for h in std::mem::take(&mut self.threads) {
+            if h.is_finished() {
+                let _ = h.join();
+            } else {
+                live.push(h);
+            }
+        }
+        self.threads = live;
+    }
+}
+
+/// A still-forming thread-local launch: the shape every member must match
+/// plus the parked per-rank buffers.
+pub(crate) struct Forming {
+    pub(crate) primitive: crate::collectives::Primitive,
+    pub(crate) cfg: crate::collectives::CclConfig,
+    pub(crate) n_elems: usize,
+    pub(crate) dtype: Dtype,
+    /// The layout view `plan` was placed into (an epoch half, or the
+    /// undivided window after the serialized-depth capacity fallback);
+    /// the spawned launch must run on exactly this view.
+    pub(crate) layout: PoolLayout,
+    pub(crate) plan: ValidPlan,
+    pub(crate) sends: Vec<Option<Tensor>>,
+    pub(crate) recvs: Vec<Option<Tensor>>,
+    pub(crate) joined: usize,
+    pub(crate) cell: Arc<LaunchCell>,
+}
+
+/// A typed, nonblocking collective launch — the v4 handle.
+///
+/// Returned by the per-primitive methods on [`ProcessGroup`]
+/// (`all_gather`, `broadcast`, …). The launch runs on a background thread;
+/// hold the future while issuing the next collective (up to the group's
+/// pipeline depth overlap for real), then [`CollectiveFuture::wait`] for
+/// this rank's recv tensor. Dropping an un-launched future (a thread-local
+/// group some member never joined) withdraws this rank so the group is
+/// reusable; dropping a launched one simply detaches — the launch still
+/// completes and [`ProcessGroup::flush`] can observe its error.
+#[must_use = "a CollectiveFuture's launch error surfaces in wait() or flush()"]
+pub struct CollectiveFuture<'g> {
+    pub(crate) group: &'g ProcessGroup,
+    pub(crate) cell: Arc<LaunchCell>,
+    /// The group rank this launch acts as (reporting).
+    pub(crate) rank: usize,
+    /// This rank's index into the launch's recv slots (== `rank` for
+    /// thread-local groups; 0 for pool groups, whose launches carry one
+    /// rank per process).
+    pub(crate) slot: usize,
+    pub(crate) consumed: bool,
+}
+
+impl CollectiveFuture<'_> {
+    /// The group rank this launch belongs to.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Whether the launch has completed (never blocks).
+    pub fn is_done(&self) -> bool {
+        self.cell.state.lock().unwrap().done
+    }
+
+    /// Block until the collective has run; returns this rank's recv tensor
+    /// and the launch's wall-clock duration (execution only — time spent
+    /// queued behind the depth gate is not billed to the launch).
+    ///
+    /// Waiting on a thread-local launch that never became complete (some
+    /// member rank has not issued) fails fast instead of deadlocking, and
+    /// withdraws this rank so every member can simply re-issue.
+    pub fn wait(mut self) -> Result<(Tensor, Duration)> {
+        self.consumed = true;
+        if let Some((joined, nranks)) = self.group.withdraw_forming(&self.cell, self.slot) {
+            bail!(
+                "collective group incomplete: {}/{nranks} ranks have issued \
+                 (every rank must issue before any wait())",
+                joined + 1
+            );
+        }
+        self.cell.take_result(self.slot)
+    }
+}
+
+impl Drop for CollectiveFuture<'_> {
+    fn drop(&mut self) {
+        if !self.consumed {
+            // Withdraw from a launch that never became launchable so an
+            // abandoned partial group cannot wedge the sequence.
+            let _ = self.group.withdraw_forming(&self.cell, self.slot);
+        }
+    }
+}
+
+// ---- launch jobs -------------------------------------------------------
+
+/// Background execution of one thread-local (whole-group) launch.
+pub(crate) struct LocalJob {
+    pub(crate) comm: Arc<Communicator>,
+    /// The epoch-half view this launch runs on.
+    pub(crate) layout: PoolLayout,
+    pub(crate) plan: ValidPlan,
+    pub(crate) sends: Vec<Tensor>,
+    pub(crate) recvs: Vec<Tensor>,
+    pub(crate) cell: Arc<LaunchCell>,
+    pub(crate) gate: Option<Arc<LaunchCell>>,
+}
+
+pub(crate) fn spawn_local(job: LocalJob) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let guard = CompleteGuard(Arc::clone(&job.cell));
+        if let Some(gate) = &job.gate {
+            gate.wait_done();
+        }
+        let LocalJob { comm, layout, plan, sends, mut recvs, cell, .. } = job;
+        let result = {
+            let send_views: Vec<TensorView<'_>> = sends.iter().map(Tensor::view).collect();
+            let mut recv_views: Vec<TensorViewMut<'_>> =
+                recvs.iter_mut().map(Tensor::view_mut).collect();
+            comm.run_plan_views_on(layout, &plan, &send_views, &mut recv_views)
+        };
+        match result {
+            Ok(wall) => cell.complete(Ok((recvs, wall))),
+            Err(e) => cell.complete(Err(format!("{e:#}"))),
+        }
+        drop(guard);
+    })
+}
+
+/// Background execution of this process's rank of one pool-mode launch.
+pub(crate) struct PoolJob {
+    pub(crate) pool: Arc<ShmPool>,
+    /// Generation stamp this process joined at (stale-mapper guard).
+    pub(crate) generation: u32,
+    /// Absolute doorbell slot where the group's control prefix starts.
+    pub(crate) window_start: usize,
+    pub(crate) seq: u64,
+    /// The epoch-half view this launch runs on.
+    pub(crate) layout: PoolLayout,
+    pub(crate) nmembers: usize,
+    pub(crate) grank: usize,
+    pub(crate) policy: WaitPolicy,
+    pub(crate) engine: Arc<dyn ReduceEngine>,
+    pub(crate) plan: ValidPlan,
+    pub(crate) send: Tensor,
+    pub(crate) recv: Tensor,
+    pub(crate) cell: Arc<LaunchCell>,
+    pub(crate) gate: Option<Arc<LaunchCell>>,
+}
+
+pub(crate) fn spawn_pool(job: PoolJob) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let guard = CompleteGuard(Arc::clone(&job.cell));
+        if let Some(gate) = &job.gate {
+            gate.wait_done();
+        }
+        let cell = Arc::clone(&job.cell);
+        match run_pool_job(job) {
+            Ok((recv, wall)) => cell.complete(Ok((vec![recv], wall))),
+            Err(e) => cell.complete(Err(format!("{e:#}"))),
+        }
+        drop(guard);
+    })
+}
+
+/// Per-half pool barrier over the group-control words.
+#[allow(clippy::too_many_arguments)]
+fn half_barrier<'a>(
+    pool: &'a ShmPool,
+    window_start: usize,
+    half: usize,
+    cnt: usize,
+    sense: usize,
+    parties: usize,
+    policy: WaitPolicy,
+    generation: u32,
+) -> Result<PoolBarrier<'a>> {
+    Ok(PoolBarrier::new(
+        pool,
+        group_word_off(window_start, half_word(half, cnt)),
+        group_word_off(window_start, half_word(half, sense)),
+        parties,
+        policy,
+    )?
+    .with_guard(generation_offset(), generation))
+}
+
+/// Execute this rank of `job.plan` against the shared pool on epoch half
+/// `seq % 2`.
+///
+/// Launch protocol (per collective, all members, per half):
+/// 1. half launch barrier — every member's launch `seq` thread has arrived,
+///    which (via each member's depth gate) implies every member finished
+///    launch `seq - 2`, the previous tenant of this half;
+/// 2. group rank 0 resets the half's doorbell window and publishes the
+///    half's epoch word (wrapping u64 launch count, truncated — see
+///    [`epoch_pair`]); everyone else spins until the word moves **off the
+///    previous launch's value onto this launch's**, flushing the line
+///    every probe;
+/// 3. each process runs its own rank's two op streams; doorbells (and, for
+///    barrier variants, the half's pool stream barrier) are the only
+///    cross-process synchronization. The other half runs launch `seq ± 1`
+///    concurrently — disjoint doorbells, disjoint devices.
+fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
+    let pool = Arc::clone(&job.pool);
+    let half = (job.seq % 2) as usize;
+    let gen_w = pool.atomic_u32(generation_offset())?;
+    let check_gen = || -> Result<()> {
+        let cur = gen_w.load(Ordering::Acquire);
+        if cur != job.generation {
+            bail!(
+                "pool control plane re-initialized (generation {cur}, joined at {}): \
+                 stale mapper must re-bootstrap",
+                job.generation
+            );
+        }
+        Ok(())
+    };
+    check_gen()?;
+    half_barrier(
+        &pool,
+        job.window_start,
+        half,
+        GC_LAUNCH_CNT,
+        GC_LAUNCH_SENSE,
+        job.nmembers,
+        job.policy,
+        job.generation,
+    )?
+    .wait()?;
+
+    let (prev, next) = epoch_pair(job.seq);
+    let epoch_off = group_word_off(job.window_start, half_word(half, GC_EPOCH));
+    let epoch_w = pool.atomic_u32(epoch_off)?;
+    if job.grank == 0 {
+        DoorbellSet::new(&pool, job.layout).reset_all()?;
+        epoch_w.store(next, Ordering::Release);
+        pool.flush(epoch_off, 4);
+    } else {
+        let start = Instant::now();
+        loop {
+            // Flush before probing: on a non-coherent mapping even the
+            // first read may be serving a stale cached line.
+            pool.flush(epoch_off, 4);
+            if epoch_w.load(Ordering::Acquire) == next {
+                break;
+            }
+            check_gen()?;
+            if start.elapsed() > job.policy.timeout {
+                bail!(
+                    "timed out waiting for group rank 0 to open epoch half {half} for \
+                     launch seq {} (epoch word {}, expected {next}, previous {prev})",
+                    job.seq,
+                    epoch_w.load(Ordering::Acquire)
+                );
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    let plan = &job.plan;
+    let esize = plan.elem_bytes();
+    {
+        let mut view = job.recv.view_mut();
+        view.as_bytes_mut()[..plan.recv_elems * esize].fill(0);
+    }
+    let sb = half_barrier(
+        &pool,
+        job.window_start,
+        half,
+        GC_STREAM_CNT,
+        GC_STREAM_SENSE,
+        2 * job.nmembers,
+        job.policy,
+        job.generation,
+    )?;
+    let rank_plan = &plan.ranks[job.grank];
+    let start = Instant::now();
+    let mut errors: Vec<anyhow::Error> = Vec::new();
+    {
+        let mut recv_view = job.recv.view_mut();
+        let recv_bytes: &mut [u8] = recv_view.as_bytes_mut();
+        std::thread::scope(|scope| {
+            let pool: &ShmPool = &pool;
+            let layout = job.layout;
+            let policy = job.policy;
+            let engine: &dyn ReduceEngine = &*job.engine;
+            let dtype = plan.dtype;
+            let write_ops = &rank_plan.write_ops;
+            let read_ops = &rank_plan.read_ops;
+            let sb = &sb;
+            let grank = job.grank;
+            let send_bytes: &[u8] = job.send.as_bytes();
+            let w = scope.spawn(move || {
+                run_stream(StreamCtx {
+                    rank: grank,
+                    stream: "write",
+                    ops: write_ops,
+                    pool,
+                    layout,
+                    policy,
+                    barrier: StreamSync::Pool(sb),
+                    engine: None,
+                    dtype,
+                    send: send_bytes,
+                    recv: None,
+                })
+            });
+            let r = scope.spawn(move || {
+                run_stream(StreamCtx {
+                    rank: grank,
+                    stream: "read",
+                    ops: read_ops,
+                    pool,
+                    layout,
+                    policy,
+                    barrier: StreamSync::Pool(sb),
+                    engine: Some(engine),
+                    dtype,
+                    send: send_bytes,
+                    recv: Some(recv_bytes),
+                })
+            });
+            for h in [w, r] {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => errors.push(e),
+                    Err(_) => errors.push(anyhow::anyhow!("stream thread panicked")),
+                }
+            }
+        });
+    }
+    if let Some(e) = errors.into_iter().next() {
+        return Err(e);
+    }
+    let wall = start.elapsed();
+    Ok((job.recv, wall))
+}

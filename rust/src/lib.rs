@@ -15,7 +15,7 @@
 //!   sum-reduction as a Pallas kernel, exported standalone for the rust
 //!   reduce engine.
 //!
-//! ## Quick start (v3: process groups)
+//! ## Quick start (v4: typed, pipelined collectives)
 //!
 //! Communicator construction is itself a collective: [`group::CommWorld::init`]
 //! takes a [`group::Bootstrap`] plus `(rank, world_size)` and returns a
@@ -25,18 +25,27 @@
 //! header of a shared file-backed pool — the paper's "map the same
 //! `/dev/dax` region" (§2.2) made into an API.
 //!
+//! Collectives are issued through **typed per-primitive methods** —
+//! `all_gather`, `all_reduce`, `broadcast`, `gather`, `scatter`, `reduce`,
+//! `reduce_scatter`, `all_to_all` — each returning a
+//! [`group::CollectiveFuture`] that runs on a background thread and may be
+//! held while the next collective is issued. Launches are **double-buffered**
+//! over even/odd epoch halves of the group's doorbell + device windows
+//! (pipeline depth 2 by default), so launch `N+1` publishes while launch
+//! `N`'s retrieval drains:
+//!
 //! ```no_run
 //! use cxl_ccl::prelude::*;
 //!
 //! let spec = ClusterSpec::new(4, 6, 64 << 20); // 4 ranks, 6 CXL devices
 //! let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
 //! let cfg = CclVariant::All.config(4);
-//! // Nonblocking group launches (ncclGroupStart/End-style): each rank
-//! // begins its part; the group launches once all four have joined, and
-//! // repeated launches of the same shape reuse the cached ValidPlan.
-//! let pending: Vec<GroupPending<'_>> = (0..4)
+//! // Typed nonblocking launches: each rank issues its part; the launch
+//! // spawns once all four joined, and repeated launches of the same shape
+//! // reuse the cached ValidPlan of their epoch half.
+//! let futures: Vec<CollectiveFuture<'_>> = (0..4)
 //!     .map(|r| {
-//!         pg.begin_rank(
+//!         pg.collective_rank(
 //!             r,
 //!             Primitive::AllReduce,
 //!             &cfg,
@@ -47,17 +56,20 @@
 //!         .unwrap()
 //!     })
 //!     .collect();
-//! for p in pending {
-//!     let (out, _wall) = p.wait().unwrap();
+//! // Issue the NEXT collective here while these drain, then:
+//! for f in futures {
+//!     let (out, _wall) = f.wait().unwrap();
 //!     assert!(out.to_f32().unwrap().iter().all(|v| *v == 6.0));
 //! }
+//! pg.flush().unwrap(); // or drain everything still in flight
 //! ```
 //!
-//! In pool mode every process runs the same two lines with its own rank —
+//! In pool mode every process runs the same flow with its own rank —
 //! `CommWorld::init(Bootstrap::pool("/dev/shm/ccl", spec), rank, 4)` then
-//! `pg.begin(..)`/`wait()` — and [`group::ProcessGroup::split`] carves
-//! subgroups with disjoint doorbell and device windows for multi-tenant or
-//! pipeline-parallel launches.
+//! `pg.all_gather(..)` / `pg.all_reduce(..)` for that rank only — and
+//! [`group::ProcessGroup::split`] carves subgroups with disjoint doorbell
+//! and device windows (proportional to subgroup rank count) for
+//! multi-tenant or pipeline-parallel launches.
 //!
 //! Plans are validated **once**, at planning: the cache hands out
 //! [`collectives::ValidPlan`]s and every launch path accepts only those,
@@ -81,18 +93,19 @@
 //! See `examples/quickstart.rs` for a complete runnable version, and the
 //! README for the two-terminal multi-process walkthrough.
 //!
-//! ## v2 → v3 migration
+//! ## v3 → v4 migration
 //!
-//! | v2 | v3 |
+//! | v3 | v4 |
 //! |----|----|
-//! | `Communicator::shm(&spec)` | `CommWorld::init(Bootstrap::thread_local(spec), 0, n)` (or keep `Communicator::shm` for the bare executor) |
-//! | — | `CommWorld::init(Bootstrap::pool(path, spec), rank, n)` — true multi-process worlds |
-//! | `comm.rank(r)?.begin(..)` → `PendingOp` | `pg.begin_rank(r, ..)` → `GroupPending` (`comm.rank` still available via `pg.local_comm()`) |
-//! | `comm.plan(..) -> Arc<CollectivePlan>` | `comm.plan(..) -> ValidPlan` (validated once, at planning) |
-//! | `plan_collective[_dtype](..) -> CollectivePlan` | `-> ValidPlan`; hand-built plans seal via `ValidPlan::new(plan, pool_size)` |
-//! | `backend.run(&CollectivePlan, ..)` | `backend.run(&ValidPlan, ..)` — launches never re-validate |
-//! | — | `pg.split(color, key)` / `pg.split_all(..)` — subgroups with disjoint doorbell + device windows |
-//! | `CacheStats { hits, misses }` | gains `evictions`; `PlanCache` is LRU-bounded (`with_capacity`) |
+//! | `pg.begin(primitive, cfg, n, send, recv)` → `GroupPending` | typed methods: `pg.all_gather(cfg, n, send, recv)`, `pg.broadcast(..)`, `pg.gather(..)`, `pg.scatter(..)`, `pg.reduce(..)`, … → [`group::CollectiveFuture`] (generic: `pg.collective(primitive, ..)`) |
+//! | `pg.begin_rank(r, ..)` | `pg.collective_rank(r, ..)` (`begin`/`begin_rank` remain as `#[deprecated]` shims) |
+//! | `GroupPending::wait()` | `CollectiveFuture::wait()` — same `(Tensor, Duration)`; futures may be **held across launches** |
+//! | wait-runs-the-launch (serialized, one epoch at a time) | launches run on background threads over even/odd epoch halves; `--pipeline-depth`/`set_pipeline_depth` bounds in-flight launches (default 2, halves permitting) |
+//! | — | `pg.flush()` — drain every launch in flight |
+//! | `split` carves equal windows per color | windows weighted by subgroup rank count |
+//! | `PlanKey` ignored the layout window | window is part of the key: pipelined steady state costs two misses per shape (one per half), hits thereafter |
+//! | pool control plane v3 (8-slot group prefix, one epoch word) | v4 (16-slot prefix: per-half launch/stream barriers + epoch-word ring + whole-group barrier); mixed-version mappers are rejected by the layout hash |
+//! | collectives sized for the whole device window | pipelined launches must fit **half** the device window (grow `device_capacity` if tight); serialized thread-local groups (depth 1) fall back to the undivided window automatically |
 
 pub mod baseline;
 pub mod bench_util;
@@ -121,7 +134,9 @@ pub mod prelude {
         ValidPlan,
     };
     pub use crate::exec::{Communicator, PendingOp, RankComm};
-    pub use crate::group::{Bootstrap, CommWorld, GroupPending, ProcessGroup};
+    pub use crate::group::{Bootstrap, CollectiveFuture, CommWorld, ProcessGroup};
+    #[allow(deprecated)]
+    pub use crate::group::GroupPending;
     pub use crate::sim::fabric::SimFabric;
     pub use crate::tensor::{Dtype, Tensor, TensorView, TensorViewMut};
     pub use crate::topology::ClusterSpec;

@@ -82,6 +82,40 @@ impl PoolLayout {
         Ok(self)
     }
 
+    /// Split this view into the two epoch-half views backing cross-launch
+    /// pipelining (v4): each half owns half of the doorbell window and half
+    /// of the device window, so a collective launched on half 0 shares no
+    /// doorbell slot and no device with one in flight on half 1. Launch
+    /// `seq` runs on half `seq % 2`.
+    ///
+    /// Errors when the view is too small to halve (fewer than 2 doorbell
+    /// slots or fewer than 2 devices) — callers fall back to serialized
+    /// launches over the undivided view.
+    pub fn pipeline_halves(&self) -> Result<[PoolLayout; 2]> {
+        if self.db_slot_span < 2 {
+            bail!(
+                "doorbell window of {} slot(s) cannot be halved for pipelining",
+                self.db_slot_span
+            );
+        }
+        if self.device_span < 2 {
+            bail!(
+                "device window of {} device(s) cannot be halved for pipelining \
+                 (each epoch half needs exclusive devices)",
+                self.device_span
+            );
+        }
+        let db_half = self.db_slot_span / 2;
+        let dev_half = self.device_span / 2;
+        let even = self
+            .with_doorbell_window(self.db_slot_base, db_half)?
+            .with_device_window(self.device_base, dev_half)?;
+        let odd = self
+            .with_doorbell_window(self.db_slot_base + db_half, self.db_slot_span - db_half)?
+            .with_device_window(self.device_base + dev_half, self.device_span - dev_half)?;
+        Ok([even, odd])
+    }
+
     /// Number of doorbell slots this view owns.
     pub fn doorbell_slots(&self) -> usize {
         self.db_slot_span
@@ -237,6 +271,32 @@ mod tests {
         // Window must fit within the region (4096 B = 64 slots).
         assert!(layout().with_doorbell_window(60, 8).is_err());
         assert!(layout().with_doorbell_window(0, 0).is_err());
+    }
+
+    #[test]
+    fn pipeline_halves_partition_both_windows() {
+        let l = layout(); // 64 slots, 6 devices
+        let [even, odd] = l.pipeline_halves().unwrap();
+        // Doorbell windows: disjoint, adjacent, covering the parent.
+        assert_eq!(even.doorbell_slot_range(), 0..32);
+        assert_eq!(odd.doorbell_slot_range(), 32..64);
+        // Device windows: disjoint halves of the parent's.
+        assert_eq!((even.device_base, even.device_span), (0, 3));
+        assert_eq!((odd.device_base, odd.device_span), (3, 3));
+        // Halving a windowed (subgroup) view stays inside that view.
+        let sub = l
+            .with_doorbell_window(16, 17)
+            .unwrap()
+            .with_device_window(1, 5)
+            .unwrap();
+        let [e2, o2] = sub.pipeline_halves().unwrap();
+        assert_eq!(e2.doorbell_slot_range(), 16..24);
+        assert_eq!(o2.doorbell_slot_range(), 24..33);
+        assert_eq!((e2.device_base, e2.device_span), (1, 2));
+        assert_eq!((o2.device_base, o2.device_span), (3, 3));
+        // Too small to halve.
+        assert!(l.with_device_window(0, 1).unwrap().pipeline_halves().is_err());
+        assert!(l.with_doorbell_window(0, 1).unwrap().pipeline_halves().is_err());
     }
 
     #[test]

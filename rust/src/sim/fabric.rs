@@ -85,6 +85,8 @@ pub struct SimFabric {
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum Phase {
+    /// Waiting for the gate launch (the one `depth` behind) to drain.
+    Gated,
     /// Ready to issue the next op.
     Ready,
     /// Fixed-cost busy period until the given virtual time.
@@ -105,6 +107,12 @@ struct Stream<'p> {
     ops: &'p [Op],
     pc: usize,
     phase: Phase,
+    /// Which launch of the pipelined sequence this stream belongs to
+    /// (always 0 for a single simulated collective). Doorbell ids and
+    /// `Op::Barrier` rendezvous are scoped per launch.
+    launch: usize,
+    /// Launch index that must fully drain before this stream may start.
+    gate: Option<usize>,
     /// Remaining per-device segments of the current transfer (device,
     /// bytes), executed sequentially in address order.
     segs: Vec<(usize, f64)>,
@@ -157,32 +165,70 @@ impl SimFabric {
 
     /// Simulate a plan to completion in virtual time.
     pub fn simulate(&self, plan: &CollectivePlan) -> Result<SimReport> {
+        self.simulate_multi(&[plan], 1)
+    }
+
+    /// Virtual-time makespan of a pipelined launch *sequence* — the §5
+    /// cross-launch model backing the depth-2 overlap claim. `plans[k]` is
+    /// launch `k` (plan it against the epoch-half view `k % 2` runs on, as
+    /// the real group does, so adjacent launches target disjoint doorbells
+    /// and devices); launch `k` may start only once launch `k - depth` has
+    /// fully drained (the depth gate + launch barrier, modelled as the
+    /// fixed barrier cost). `depth == 1` reproduces today's serialized
+    /// launch loop; `depth == 2` overlaps launch `N+1`'s publication with
+    /// launch `N`'s retrieval.
+    pub fn simulate_pipelined(
+        &self,
+        plans: &[&CollectivePlan],
+        depth: usize,
+    ) -> Result<SimReport> {
+        if depth == 0 {
+            bail!("pipeline depth must be at least 1");
+        }
+        self.simulate_multi(plans, depth)
+    }
+
+    fn simulate_multi(&self, plans: &[&CollectivePlan], depth: usize) -> Result<SimReport> {
         let p = self.params;
-        let nr = plan.nranks;
-        let mut streams: Vec<Stream> = Vec::with_capacity(2 * nr);
-        for rp in &plan.ranks {
-            for is_write in [true, false] {
-                streams.push(Stream {
-                    rank: rp.rank,
-                    is_write,
-                    ops: if is_write { &rp.write_ops } else { &rp.read_ops },
-                    pc: 0,
-                    phase: Phase::Ready,
-                    segs: Vec::new(),
-                    post_cost: 0.0,
-                    finish: 0.0,
-                });
+        let Some(first) = plans.first() else {
+            bail!("nothing to simulate: empty launch sequence");
+        };
+        let nr = first.nranks;
+        if plans.iter().any(|pl| pl.nranks != nr) {
+            bail!("every launch of a pipelined sequence must have the same rank count");
+        }
+        let nlaunches = plans.len();
+        let mut streams: Vec<Stream> = Vec::with_capacity(2 * nr * nlaunches);
+        for (launch, plan) in plans.iter().enumerate() {
+            let gate = if launch >= depth { Some(launch - depth) } else { None };
+            for rp in &plan.ranks {
+                for is_write in [true, false] {
+                    streams.push(Stream {
+                        rank: rp.rank,
+                        is_write,
+                        ops: if is_write { &rp.write_ops } else { &rp.read_ops },
+                        pc: 0,
+                        phase: if gate.is_some() { Phase::Gated } else { Phase::Ready },
+                        launch,
+                        gate,
+                        segs: Vec::new(),
+                        post_cost: 0.0,
+                        finish: 0.0,
+                    });
+                }
             }
         }
+        let streams_per_launch = 2 * nr;
+        let mut done_per_launch = vec![0usize; nlaunches];
 
         let ndev = self.layout.stacking.ndevices;
         let mut flows: Vec<Flow> = Vec::new();
-        let mut db_set_at: HashMap<usize, f64> = HashMap::new();
+        let mut db_set_at: HashMap<(usize, usize), f64> = HashMap::new();
         let mut device_bytes = vec![0usize; ndev];
         let mut peak_flows = 0usize;
         let mut t = 0.0f64;
         let total_ops: usize = streams.iter().map(|s| s.ops.len()).sum();
-        let max_iters = 60 * total_ops + 10_000;
+        let max_iters = 60 * total_ops + 10_000 * nlaunches;
 
         for _iter in 0..max_iters {
             // --- issue phase: drive every stream as far as it can go at
@@ -192,6 +238,15 @@ impl SimFabric {
                 progressed = false;
                 for si in 0..streams.len() {
                     match streams[si].phase {
+                        Phase::Gated => {
+                            let gate = streams[si].gate.expect("gated streams carry a gate");
+                            if done_per_launch[gate] == streams_per_launch {
+                                // The half is free again: pay the launch
+                                // barrier + doorbell reset before issuing.
+                                streams[si].phase = Phase::Busy(t + p.barrier_cost);
+                                progressed = true;
+                            }
+                        }
                         Phase::Busy(until) if until <= t + 1e-15 => {
                             let s = &mut streams[si];
                             s.phase = if s.segs.is_empty() && s.post_cost == 0.0 {
@@ -202,7 +257,8 @@ impl SimFabric {
                             progressed = true;
                         }
                         Phase::Blocked(db) => {
-                            if let Some(&ts) = db_set_at.get(&db) {
+                            let key = (streams[si].launch, db);
+                            if let Some(&ts) = db_set_at.get(&key) {
                                 if ts <= t {
                                     streams[si].phase = Phase::Busy(t + p.doorbell_poll);
                                     progressed = true;
@@ -238,6 +294,7 @@ impl SimFabric {
                             if streams[si].pc >= streams[si].ops.len() {
                                 streams[si].phase = Phase::Done;
                                 streams[si].finish = t;
+                                done_per_launch[streams[si].launch] += 1;
                                 continue;
                             }
                             let op = streams[si].ops[streams[si].pc];
@@ -261,10 +318,12 @@ impl SimFabric {
                                     );
                                 }
                                 Op::SetDoorbell { db } => {
-                                    db_set_at.entry(db).or_insert(t + p.doorbell_ring);
+                                    db_set_at
+                                        .entry((s.launch, db))
+                                        .or_insert(t + p.doorbell_ring);
                                     s.phase = Phase::Busy(t + p.doorbell_ring);
                                 }
-                                Op::WaitDoorbell { db } => match db_set_at.get(&db) {
+                                Op::WaitDoorbell { db } => match db_set_at.get(&(s.launch, db)) {
                                     Some(&ts) if ts <= t => {
                                         s.phase = Phase::Busy(t + p.doorbell_check);
                                     }
@@ -278,20 +337,26 @@ impl SimFabric {
                         _ => {}
                     }
                 }
-                // Barrier release: all live streams parked.
-                let arrived = streams.iter().filter(|s| s.phase == Phase::AtBarrier).count();
-                if arrived > 0
-                    && streams
-                        .iter()
-                        .all(|s| matches!(s.phase, Phase::AtBarrier | Phase::Done))
-                {
-                    let release = t + p.barrier_cost;
-                    for s in streams.iter_mut() {
-                        if s.phase == Phase::AtBarrier {
-                            s.phase = Phase::Busy(release);
+                // Barrier release, scoped per launch: a launch's barrier
+                // opens when all of *its* live streams are parked (other
+                // launches of the pipeline proceed independently).
+                for launch in 0..nlaunches {
+                    let mine = streams.iter().filter(|s| s.launch == launch);
+                    let arrived =
+                        mine.clone().filter(|s| s.phase == Phase::AtBarrier).count();
+                    if arrived > 0
+                        && mine
+                            .clone()
+                            .all(|s| matches!(s.phase, Phase::AtBarrier | Phase::Done))
+                    {
+                        let release = t + p.barrier_cost;
+                        for s in streams.iter_mut() {
+                            if s.launch == launch && s.phase == Phase::AtBarrier {
+                                s.phase = Phase::Busy(release);
+                            }
                         }
+                        progressed = true;
                     }
-                    progressed = true;
                 }
             }
 
@@ -317,7 +382,7 @@ impl SimFabric {
                 match s.phase {
                     Phase::Busy(until) => t_next = t_next.min(until),
                     Phase::Blocked(db) => {
-                        if let Some(&ts) = db_set_at.get(&db) {
+                        if let Some(&ts) = db_set_at.get(&(s.launch, db)) {
                             t_next = t_next.min(ts);
                         }
                     }
@@ -335,7 +400,8 @@ impl SimFabric {
                     .filter(|s| s.phase != Phase::Done)
                     .map(|s| {
                         format!(
-                            "rank {} {} pc {} {:?}",
+                            "launch {} rank {} {} pc {} {:?}",
+                            s.launch,
                             s.rank,
                             if s.is_write { "write" } else { "read" },
                             s.pc,
@@ -577,6 +643,63 @@ mod tests {
         };
         let err = fab.simulate(&plan).unwrap_err();
         assert!(err.to_string().contains("deadlock"));
+    }
+
+    #[test]
+    fn pipelined_depth2_makespan_beats_serialized() {
+        // The §5 overlap claim in virtual time: K launches over the two
+        // epoch-half views, depth 2, finish strictly faster than K x the
+        // single-launch time (and strictly faster than the depth-1 chain).
+        let (spec, layout, fab) = setup(3);
+        let [even, odd] = layout.pipeline_halves().unwrap();
+        let n = 12 << 20;
+        let cfg = CclConfig::default_all();
+        let plan_even =
+            plan_collective(Primitive::AllGather, &spec, &even, &cfg, n).unwrap();
+        let plan_odd = plan_collective(Primitive::AllGather, &spec, &odd, &cfg, n).unwrap();
+        let k = 6usize;
+        let seq: Vec<&CollectivePlan> = (0..k)
+            .map(|i| if i % 2 == 0 { &*plan_even } else { &*plan_odd })
+            .collect();
+        let single = fab
+            .simulate(&plan_even)
+            .unwrap()
+            .total_time
+            .max(fab.simulate(&plan_odd).unwrap().total_time);
+        let d1 = fab.simulate_pipelined(&seq, 1).unwrap().total_time;
+        let d2 = fab.simulate_pipelined(&seq, 2).unwrap().total_time;
+        assert!(
+            d2 < k as f64 * single,
+            "depth-2 makespan {d2} must beat {k} x single-launch {single}"
+        );
+        assert!(d2 < d1, "depth-2 {d2} must beat the serialized chain {d1}");
+        // Adjacent launches run on disjoint devices, so depth 2 approaches
+        // the ideal two-wide pipeline; leave slack for barrier costs.
+        assert!(
+            d2 < 0.7 * d1,
+            "depth-2 {d2} should approach half the serialized chain {d1}"
+        );
+        // Serialized chain is at least K back-to-back launches.
+        assert!(d1 >= k as f64 * single * 0.9, "d1 {d1} vs {k} x {single}");
+    }
+
+    #[test]
+    fn single_launch_pipeline_matches_plain_simulate() {
+        let (spec, layout, fab) = setup(3);
+        let plan = plan_collective(
+            Primitive::AllReduce,
+            &spec,
+            &layout,
+            &CclConfig::default_all(),
+            3 << 16,
+        )
+        .unwrap();
+        let a = fab.simulate(&plan).unwrap();
+        let b = fab.simulate_pipelined(&[&plan], 1).unwrap();
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.device_bytes, b.device_bytes);
+        assert!(fab.simulate_pipelined(&[], 1).is_err());
+        assert!(fab.simulate_pipelined(&[&plan], 0).is_err());
     }
 
     #[test]

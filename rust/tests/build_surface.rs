@@ -8,13 +8,13 @@ use cxl_ccl::prelude::*;
 
 #[test]
 fn doc_quick_start_runs_end_to_end() {
-    // Verbatim shape of the lib.rs v3 quick-start (4 ranks, 6 CXL devices).
+    // Verbatim shape of the lib.rs v4 quick-start (4 ranks, 6 CXL devices).
     let spec = ClusterSpec::new(4, 6, 64 << 20);
     let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
     let cfg = CclVariant::All.config(4);
-    let pending: Vec<GroupPending<'_>> = (0..4)
+    let futures: Vec<CollectiveFuture<'_>> = (0..4)
         .map(|r| {
-            pg.begin_rank(
+            pg.collective_rank(
                 r,
                 Primitive::AllReduce,
                 &cfg,
@@ -25,11 +25,69 @@ fn doc_quick_start_runs_end_to_end() {
             .unwrap()
         })
         .collect();
-    for p in pending {
-        let (out, _wall) = p.wait().unwrap();
+    for f in futures {
+        let (out, _wall) = f.wait().unwrap();
         // 0 + 1 + 2 + 3 summed into every rank's result.
         assert!(out.to_f32().unwrap().iter().all(|v| *v == 6.0));
     }
+    pg.flush().unwrap();
+}
+
+#[test]
+fn typed_per_primitive_methods_are_pinned() {
+    // Every typed launch method the docs promise must stay callable with
+    // the same shape; exercised on the bound rank of a 2-rank world where
+    // both ranks are driven via collective_rank.
+    let spec = ClusterSpec::new(2, 6, 16 << 20);
+    let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
+    let cfg = CclConfig::default_all();
+    let n = 2 * 64;
+    type IssueFn = for<'a> fn(
+        &'a ProcessGroup,
+        &CclConfig,
+        usize,
+        Tensor,
+        Tensor,
+    ) -> anyhow::Result<CollectiveFuture<'a>>;
+    let methods: [(Primitive, IssueFn); 8] = [
+        (Primitive::AllGather, ProcessGroup::all_gather),
+        (Primitive::AllReduce, ProcessGroup::all_reduce),
+        (Primitive::ReduceScatter, ProcessGroup::reduce_scatter),
+        (Primitive::AllToAll, ProcessGroup::all_to_all),
+        (Primitive::Broadcast, ProcessGroup::broadcast),
+        (Primitive::Gather, ProcessGroup::gather),
+        (Primitive::Scatter, ProcessGroup::scatter),
+        (Primitive::Reduce, ProcessGroup::reduce),
+    ];
+    for (primitive, issue) in methods {
+        let send_elems = primitive.send_elems(n, 2);
+        let recv_elems = primitive.recv_elems(n, 2);
+        // Rank 0 through the typed method, rank 1 through the generic
+        // entry — both join the same launch.
+        let f0 = issue(
+            &pg,
+            &cfg,
+            n,
+            Tensor::from_f32(&vec![1.0; send_elems]),
+            Tensor::zeros(Dtype::F32, recv_elems),
+        )
+        .unwrap();
+        let f1 = pg
+            .collective_rank(
+                1,
+                primitive,
+                &cfg,
+                n,
+                Tensor::from_f32(&vec![2.0; send_elems]),
+                Tensor::zeros(Dtype::F32, recv_elems),
+            )
+            .unwrap();
+        for f in [f0, f1] {
+            let (out, _) = f.wait().unwrap();
+            assert_eq!(out.len(), recv_elems, "{primitive}");
+        }
+    }
+    pg.flush().unwrap();
 }
 
 #[test]
@@ -98,6 +156,48 @@ fn simulate_through_prelude_types() {
     let out = SimFabric::new(layout).run(&plan, &[], &mut []).unwrap();
     assert!(out.seconds() > 0.0);
     assert!(out.sim_report().unwrap().total_time > 0.0);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_v3_begin_shims_still_compile_and_run() {
+    // Downstream code written against the v3 begin/wait surface must keep
+    // working: the shims route through the typed future machinery.
+    let spec = ClusterSpec::new(3, 6, 16 << 20);
+    let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 3).unwrap();
+    let cfg = CclConfig::default_all();
+    let pending: Vec<GroupPending<'_>> = (0..3)
+        .map(|r| {
+            pg.begin_rank(
+                r,
+                Primitive::AllReduce,
+                &cfg,
+                256,
+                Tensor::from_f32(&vec![1.0; 256]),
+                Tensor::zeros(Dtype::F32, 256),
+            )
+            .unwrap()
+        })
+        .collect();
+    for p in pending {
+        let (out, _) = p.wait().unwrap();
+        assert!(out.to_f32().unwrap().iter().all(|v| *v == 3.0));
+    }
+    // begin() addresses the bound rank; a GroupPending converts into the
+    // future it wraps.
+    let p = pg
+        .begin(
+            Primitive::AllGather,
+            &cfg,
+            64,
+            Tensor::zeros(Dtype::F32, 64),
+            Tensor::zeros(Dtype::F32, 192),
+        )
+        .unwrap();
+    assert_eq!(p.rank(), 0);
+    let fut: CollectiveFuture<'_> = p.into_future();
+    drop(fut); // withdraws the lone rank; the group stays usable
+    pg.flush().unwrap();
 }
 
 #[test]

@@ -1,0 +1,220 @@
+//! Pipelined-launch determinism (v4 acceptance): a depth-2 steady-state
+//! loop must be **bitwise identical** to the serialized depth-1 loop, for
+//! F32 and F16 payloads, on both bootstrap modes. Launch `seq` alternates
+//! epoch halves at either depth, so the plans are the same — the only
+//! difference is how many launches are in flight, which must never change
+//! a byte.
+
+use cxl_ccl::prelude::*;
+use std::time::Duration;
+
+const ROUNDS: usize = 6;
+
+/// Per-round, per-rank payload with an irregular bit pattern (dtype-sized
+/// raw bytes, so the same generator serves F32 and F16).
+fn payload(dtype: Dtype, rank: usize, round: usize, elems: usize) -> Tensor {
+    match dtype {
+        Dtype::F32 => Tensor::from_f32(
+            &(0..elems)
+                .map(|i| (i as f32) * 0.25 + (rank as f32) * 100.0 - (round as f32) * 3.5)
+                .collect::<Vec<_>>(),
+        ),
+        _ => {
+            let bytes: Vec<u8> = (0..elems * dtype.size_bytes())
+                .map(|i| {
+                    (i as u8)
+                        .wrapping_mul(37)
+                        .wrapping_add(rank as u8 * 11)
+                        .wrapping_add(round as u8 * 5)
+                })
+                .collect();
+            // Clear each f16 exponent to keep values finite and ordinary
+            // (determinism must not hide behind NaN propagation quirks).
+            let bytes = if dtype == Dtype::F16 {
+                bytes
+                    .chunks_exact(2)
+                    .flat_map(|c| [c[0], c[1] & 0b1011_1111])
+                    .collect()
+            } else {
+                bytes
+            };
+            Tensor::from_bytes(bytes, dtype).unwrap()
+        }
+    }
+}
+
+/// Run ROUNDS AllReduce launches + ROUNDS AllGather launches on a
+/// thread-local world at `depth`, returning every result's raw bytes in
+/// issue order.
+fn thread_local_transcript(depth: usize, dtype: Dtype) -> Vec<Vec<u8>> {
+    let nr = 3usize;
+    let n = nr * 128;
+    let pg = CommWorld::init(Bootstrap::thread_local(ClusterSpec::new(nr, 6, 4 << 20)), 0, nr)
+        .unwrap()
+        .with_pipeline_depth(depth)
+        .unwrap();
+    let cfg = CclConfig::default_all();
+    let mut out = Vec::new();
+    for round in 0..ROUNDS {
+        for (primitive, recv_elems) in
+            [(Primitive::AllReduce, n), (Primitive::AllGather, n * nr)]
+        {
+            let futs: Vec<CollectiveFuture<'_>> = (0..nr)
+                .map(|r| {
+                    pg.collective_rank(
+                        r,
+                        primitive,
+                        &cfg,
+                        n,
+                        payload(dtype, r, round, n),
+                        Tensor::zeros(dtype, recv_elems),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            for f in futs {
+                out.push(f.wait().unwrap().0.into_bytes());
+            }
+        }
+    }
+    pg.flush().unwrap();
+    out
+}
+
+/// The same transcript over a pool bootstrap (two thread-hosted mappers of
+/// one /dev/shm file), launches held two-deep when `depth == 2`.
+fn pool_transcript(depth: usize, dtype: Dtype, tag: &str) -> Vec<Vec<u8>> {
+    let nr = 2usize;
+    let n = nr * 128;
+    let mut spec = ClusterSpec::new(nr, 6, 1 << 20);
+    spec.db_region_size = 64 * 512;
+    let path = format!("/dev/shm/cxl_ccl_pipe_{}_{tag}_{}", depth, std::process::id());
+    let _ = std::fs::remove_file(&path);
+    let run_rank = |rank: usize| -> anyhow::Result<Vec<Vec<u8>>> {
+        let boot =
+            Bootstrap::pool(&path, spec.clone()).with_join_timeout(Duration::from_secs(20));
+        let pg = CommWorld::init(boot, rank, nr)?;
+        pg.set_pipeline_depth(depth)?;
+        let cfg = CclConfig::default_all();
+        let mut futs = std::collections::VecDeque::new();
+        let mut outs = Vec::new();
+        for round in 0..ROUNDS {
+            for (primitive, recv_elems) in
+                [(Primitive::AllReduce, n), (Primitive::AllGather, n * nr)]
+            {
+                futs.push_back(pg.collective(
+                    primitive,
+                    &cfg,
+                    n,
+                    payload(dtype, rank, round, n),
+                    Tensor::zeros(dtype, recv_elems),
+                )?);
+                while futs.len() > depth {
+                    outs.push(futs.pop_front().unwrap().wait()?.0.into_bytes());
+                }
+            }
+        }
+        while let Some(f) = futs.pop_front() {
+            outs.push(f.wait()?.0.into_bytes());
+        }
+        pg.flush()?;
+        Ok(outs)
+    };
+    let (a, b) = std::thread::scope(|s| {
+        let h0 = s.spawn(|| run_rank(0));
+        let h1 = s.spawn(|| run_rank(1));
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let (a, b) = (a.unwrap(), b.unwrap());
+    // Interleave rank transcripts deterministically: rank 0's bytes then
+    // rank 1's, per launch.
+    a.into_iter().zip(b).flat_map(|(x, y)| [x, y]).collect()
+}
+
+#[test]
+fn thread_local_depth2_is_bitwise_identical_to_depth1_f32() {
+    assert_eq!(thread_local_transcript(2, Dtype::F32), thread_local_transcript(1, Dtype::F32));
+}
+
+#[test]
+fn thread_local_depth2_is_bitwise_identical_to_depth1_f16() {
+    assert_eq!(thread_local_transcript(2, Dtype::F16), thread_local_transcript(1, Dtype::F16));
+}
+
+#[test]
+fn pool_depth2_is_bitwise_identical_to_depth1_f32() {
+    assert_eq!(
+        pool_transcript(2, Dtype::F32, "f32"),
+        pool_transcript(1, Dtype::F32, "f32")
+    );
+}
+
+#[test]
+fn pool_depth2_is_bitwise_identical_to_depth1_f16() {
+    assert_eq!(
+        pool_transcript(2, Dtype::F16, "f16"),
+        pool_transcript(1, Dtype::F16, "f16")
+    );
+}
+
+#[test]
+fn depth2_wall_clock_beats_k_times_single_launch() {
+    // The wall-clock side of the overlap acceptance (the deterministic
+    // virtual-time pin lives in the SimFabric tests): K pipelined launches
+    // must finish faster than K times the measured single-launch time.
+    // Generous margin — CI machines are noisy; the virtual-time test is
+    // the strict one.
+    let nr = 2usize;
+    let n = 512 << 10; // 2 MiB per rank, big enough to dwarf thread spawn
+    let pg = CommWorld::init(Bootstrap::thread_local(ClusterSpec::new(nr, 6, 32 << 20)), 0, nr)
+        .unwrap();
+    let cfg = CclConfig::default_all();
+    let issue_all = |round: usize| {
+        (0..nr)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    payload(Dtype::F32, r, round, n),
+                    Tensor::zeros(Dtype::F32, n * nr),
+                )
+                .unwrap()
+            })
+            .collect::<Vec<CollectiveFuture<'_>>>()
+    };
+    // Warm both halves' plans + threads.
+    for round in 0..2 {
+        for f in issue_all(round) {
+            f.wait().unwrap();
+        }
+    }
+    // Measure a serialized single launch (median of 3).
+    let mut singles = Vec::new();
+    for round in 0..3 {
+        let t0 = std::time::Instant::now();
+        for f in issue_all(round) {
+            f.wait().unwrap();
+        }
+        singles.push(t0.elapsed().as_secs_f64());
+    }
+    singles.sort_by(f64::total_cmp);
+    let single = singles[1];
+    // Pipelined makespan over K launches.
+    let k = 6usize;
+    let t0 = std::time::Instant::now();
+    let all: Vec<Vec<CollectiveFuture<'_>>> = (0..k).map(issue_all).collect();
+    for futs in all {
+        for f in futs {
+            f.wait().unwrap();
+        }
+    }
+    let makespan = t0.elapsed().as_secs_f64();
+    pg.flush().unwrap();
+    assert!(
+        makespan < k as f64 * single * 1.5,
+        "pipelined makespan {makespan:.6}s should not blow past {k} x single \
+         {single:.6}s (overlap regressed badly)"
+    );
+}

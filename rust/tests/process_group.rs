@@ -1,8 +1,10 @@
-//! Integration tests for the v3 process-group surface, thread-hosted:
+//! Integration tests for the process-group surface, thread-hosted:
 //! pool rendezvous between independent mappers of one file, bootstrap
-//! safety rails, and subgroup isolation under concurrent launches (the
-//! doorbell-range accounting the `split` design promises). The fork-based
-//! cross-OS-process acceptance test lives in `process_group_fork.rs`.
+//! safety rails, weighted subgroup isolation under concurrent launches
+//! (the doorbell-range accounting the `split` design promises), and the
+//! typed v4 launch surface in pool mode. The fork-based cross-OS-process
+//! acceptance test lives in `process_group_fork.rs`; the depth-1 vs
+//! depth-2 determinism matrix in `pipeline.rs`.
 
 use cxl_ccl::collectives::Op;
 use cxl_ccl::prelude::*;
@@ -13,7 +15,7 @@ fn pool_path(tag: &str) -> String {
 }
 
 /// Small pool: 512 doorbell slots cover the 64-slot control plane plus
-/// plenty of plan doorbells.
+/// plenty of plan doorbells (and their even/odd halves).
 fn small_spec(nranks: usize) -> ClusterSpec {
     let mut s = ClusterSpec::new(nranks, 6, 1 << 20);
     s.db_region_size = 64 * 512;
@@ -31,27 +33,27 @@ fn pool_bootstrap_two_mappers_allgather_and_allreduce() {
         let pg = CommWorld::init(boot, rank, 2)?;
         assert!(pg.is_multiprocess());
         assert_eq!(pg.world_size(), 2);
+        assert_eq!(pg.pipeline_depth(), 2, "halvable window defaults to depth 2");
         let cfg = CclConfig::default_all();
         let mine = vec![rank as f32 + 1.0; n];
-        // AllGather of distinct payloads...
-        let p = pg.begin(
-            Primitive::AllGather,
+        // AllGather of distinct payloads through the typed surface...
+        let f = pg.all_gather(
             &cfg,
             n,
             Tensor::from_f32(&mine),
             Tensor::zeros(Dtype::F32, 2 * n),
         )?;
-        let (gathered, _) = p.wait()?;
-        // ...then an AllReduce on the same group (steady-state: the second
-        // launch of each shape hits this process's plan cache).
-        let p = pg.begin(
-            Primitive::AllReduce,
+        let (gathered, _) = f.wait()?;
+        // ...then an AllReduce on the same group (each shape planned once
+        // per epoch half; this process's cache serves the repeats).
+        let f = pg.all_reduce(
             &cfg,
             n,
             Tensor::from_f32(&mine),
             Tensor::zeros(Dtype::F32, n),
         )?;
-        let (reduced, _) = p.wait()?;
+        let (reduced, _) = f.wait()?;
+        pg.flush()?;
         Ok((gathered.into_bytes(), reduced.to_f32()?))
     };
     let (a, b) = std::thread::scope(|s| {
@@ -73,6 +75,53 @@ fn pool_bootstrap_two_mappers_allgather_and_allreduce() {
         !std::path::Path::new(&path).exists(),
         "rank 0 unlinks the pool file on drop"
     );
+}
+
+#[test]
+fn pool_pipelined_launches_overlap_and_stay_correct() {
+    // Two mappers keep two launches in flight (typed futures held across
+    // issues) with per-round payloads: any cross-launch doorbell or data
+    // leakage between the epoch halves would corrupt a round.
+    let path = pool_path("pipe");
+    let _ = std::fs::remove_file(&path);
+    let n = 2 * 128;
+    let rounds = 6usize;
+    let run_rank = |rank: usize| -> anyhow::Result<Vec<Vec<f32>>> {
+        let boot = Bootstrap::pool(&path, small_spec(2))
+            .with_join_timeout(Duration::from_secs(20));
+        let pg = CommWorld::init(boot, rank, 2)?;
+        let cfg = CclConfig::default_all();
+        let mut futs = std::collections::VecDeque::new();
+        let mut outs = Vec::new();
+        for round in 0..rounds {
+            let fill = (rank + 1) as f32 * (round + 1) as f32;
+            futs.push_back(pg.all_reduce(
+                &cfg,
+                n,
+                Tensor::from_f32(&vec![fill; n]),
+                Tensor::zeros(Dtype::F32, n),
+            )?);
+            while futs.len() > 2 {
+                outs.push(futs.pop_front().unwrap().wait()?.0.to_f32()?);
+            }
+        }
+        while let Some(f) = futs.pop_front() {
+            outs.push(f.wait()?.0.to_f32()?);
+        }
+        pg.barrier()?;
+        Ok(outs)
+    };
+    let (a, b) = std::thread::scope(|s| {
+        let h0 = s.spawn(|| run_rank(0));
+        let h1 = s.spawn(|| run_rank(1));
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let (a, b) = (a.unwrap(), b.unwrap());
+    for round in 0..rounds {
+        let want = 3.0 * (round + 1) as f32; // (1 + 2) * (round+1)
+        assert!(a[round].iter().all(|v| *v == want), "round {round}: {:?}", &a[round][..4]);
+        assert_eq!(a[round], b[round], "round {round} differs across ranks");
+    }
 }
 
 #[test]
@@ -127,6 +176,8 @@ fn split_subgroups_are_isolated_and_launch_concurrently() {
             "window {w:?} outside parent {parent:?}"
         );
     }
+    // Equal member counts -> equal shares of the parent's windows.
+    assert_eq!(w0.len(), w1.len(), "equal-weight colors share equally");
     // Device accounting too: write isolation needs disjoint devices.
     let (d0, d1) = (subs[0].device_range(), subs[1].device_range());
     assert!(
@@ -134,28 +185,45 @@ fn split_subgroups_are_isolated_and_launch_concurrently() {
         "device windows overlap: {d0:?} vs {d1:?}"
     );
     // Every doorbell the subgroup plans actually touch stays inside its
-    // own window — checked against the emitted op streams.
+    // own window — checked against the emitted op streams, on the
+    // undivided view and on both epoch halves.
     let cfg = CclConfig::default_all();
     let n = 2 * 512;
     for sg in &subs {
-        let plan = sg.plan(Primitive::AllGather, &cfg, n, Dtype::F32).unwrap();
-        let layout = sg.layout();
         let win = sg.doorbell_slot_range();
+        let mut layouts = vec![*sg.layout()];
+        let halves = sg.pipeline_layouts().expect("subgroup windows are halvable");
+        layouts.extend(halves.iter().copied());
         let mut rang = 0usize;
-        for rp in &plan.ranks {
-            for op in rp.write_ops.iter().chain(rp.read_ops.iter()) {
-                if let Op::SetDoorbell { db } | Op::WaitDoorbell { db } = *op {
-                    let abs = layout.doorbell_offset(db).unwrap() / 64;
-                    assert!(win.contains(&abs), "doorbell slot {abs} outside {win:?}");
-                    rang += 1;
+        for layout in &layouts {
+            let plan = cxl_ccl::collectives::plan_collective_dtype(
+                Primitive::AllGather,
+                &ClusterSpec {
+                    nranks: sg.world_size(),
+                    ndevices: layout.device_span,
+                    ..ClusterSpec::new(2, 6, 4 << 20)
+                },
+                layout,
+                &cfg,
+                n,
+                Dtype::F32,
+            )
+            .unwrap();
+            for rp in &plan.ranks {
+                for op in rp.write_ops.iter().chain(rp.read_ops.iter()) {
+                    if let Op::SetDoorbell { db } | Op::WaitDoorbell { db } = *op {
+                        let abs = layout.doorbell_offset(db).unwrap() / 64;
+                        assert!(win.contains(&abs), "doorbell slot {abs} outside {win:?}");
+                        rang += 1;
+                    }
                 }
             }
         }
         assert!(rang > 0, "overlapped plans must use doorbells");
     }
     // Concurrent launches: both subgroups hammer their own windows at
-    // once; every result stays correct (no cross-talk through doorbells,
-    // devices, or plan caches).
+    // once, through the typed pipelined surface; every result stays
+    // correct (no cross-talk through doorbells, devices, or plan caches).
     std::thread::scope(|s| {
         let handles: Vec<_> = subs
             .iter()
@@ -164,9 +232,9 @@ fn split_subgroups_are_isolated_and_launch_concurrently() {
                 s.spawn(move || {
                     for round in 0..8 {
                         let fill = (gi * 10 + round) as f32 + 1.0;
-                        let pending: Vec<GroupPending<'_>> = (0..sg.world_size())
+                        let futs: Vec<CollectiveFuture<'_>> = (0..sg.world_size())
                             .map(|r| {
-                                sg.begin_rank(
+                                sg.collective_rank(
                                     r,
                                     Primitive::AllReduce,
                                     &cfg,
@@ -177,14 +245,15 @@ fn split_subgroups_are_isolated_and_launch_concurrently() {
                                 .unwrap()
                             })
                             .collect();
-                        for p in pending {
-                            let (out, _) = p.wait().unwrap();
+                        for f in futs {
+                            let (out, _) = f.wait().unwrap();
                             assert!(
                                 out.to_f32().unwrap().iter().all(|v| *v == 2.0 * fill),
                                 "subgroup {gi} round {round}"
                             );
                         }
                     }
+                    sg.flush().unwrap();
                 })
             })
             .collect();
@@ -192,50 +261,73 @@ fn split_subgroups_are_isolated_and_launch_concurrently() {
             h.join().unwrap();
         }
     });
-    // Steady state inside each subgroup: one miss, hits thereafter.
+    // Steady state inside each subgroup: one miss per epoch half for the
+    // launched shape, hits for every later round.
     for sg in &subs {
         let stats = sg.plan_cache().stats();
-        assert_eq!(stats.misses, 2, "AllGather probe + AllReduce loop");
-        assert!(stats.hits >= 8, "launch loop reuses the cached plan");
+        assert_eq!(stats.misses, 2, "one planned AllReduce per epoch half");
+        assert!(stats.hits >= 6, "launch loop reuses the per-half plans: {stats:?}");
     }
 }
 
 #[test]
-fn pool_split_is_a_collective_and_subgroups_run_concurrently() {
+fn pool_split_is_weighted_and_subgroups_run_concurrently() {
+    // 6 ranks split 4:2 — the heavy color gets proportionally more
+    // doorbell slots and devices (ROADMAP weighted-split item), and both
+    // subgroups launch concurrently through the typed surface.
     let path = pool_path("split");
     let _ = std::fs::remove_file(&path);
     let n = 2 * 128;
-    let run_rank = |rank: usize| -> anyhow::Result<(Vec<usize>, Vec<f32>)> {
-        let boot = Bootstrap::pool(&path, small_spec(4))
+    let run_rank = |rank: usize| -> anyhow::Result<(Vec<usize>, usize, usize, Vec<f32>)> {
+        let boot = Bootstrap::pool(&path, small_spec(6))
             .with_join_timeout(Duration::from_secs(20));
-        let pg = CommWorld::init(boot, rank, 4)?;
-        // ncclCommSplit shape: every rank passes its (color, key).
-        let sub = pg.split(rank / 2, rank % 2)?;
-        assert_eq!(sub.world_size(), 2);
+        let pg = CommWorld::init(boot, rank, 6)?;
+        // ncclCommSplit shape: ranks 0..3 -> color 0, ranks 4..5 -> color 1.
+        let color = usize::from(rank >= 4);
+        let sub = pg.split(color, rank)?;
         let cfg = CclConfig::default_all();
-        let fill = (rank / 2 + 1) as f32;
-        let p = sub.begin(
-            Primitive::AllReduce,
+        let fill = if color == 0 { 1.0f32 } else { 3.0 };
+        let f = sub.all_reduce(
             &cfg,
             n,
             Tensor::from_f32(&vec![fill; n]),
             Tensor::zeros(Dtype::F32, n),
         )?;
-        let (out, _) = p.wait()?;
-        Ok((sub.global_ranks().to_vec(), out.to_f32()?))
+        let (out, _) = f.wait()?;
+        sub.flush()?;
+        Ok((
+            sub.global_ranks().to_vec(),
+            sub.doorbell_slot_range().len(),
+            sub.device_range().len(),
+            out.to_f32()?,
+        ))
     };
-    let results: Vec<anyhow::Result<(Vec<usize>, Vec<f32>)>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..4).map(|r| s.spawn(move || run_rank(r))).collect();
+    let results: Vec<anyhow::Result<_>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6).map(|r| s.spawn(move || run_rank(r))).collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
+    let mut slots = [0usize; 2];
+    let mut devs = [0usize; 2];
     for (rank, res) in results.into_iter().enumerate() {
-        let (members, reduced) = res.unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
-        let color = rank / 2;
-        assert_eq!(members, vec![2 * color, 2 * color + 1], "rank {rank} membership");
-        let want = 2.0 * (color + 1) as f32;
+        let (members, db_slots, ndev, reduced) =
+            res.unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
+        let color = usize::from(rank >= 4);
+        let want_members: Vec<usize> =
+            if color == 0 { vec![0, 1, 2, 3] } else { vec![4, 5] };
+        assert_eq!(members, want_members, "rank {rank} membership");
+        slots[color] = db_slots;
+        devs[color] = ndev;
+        let want = if color == 0 { 4.0 } else { 6.0 }; // 4 x 1.0 | 2 x 3.0
         assert!(
             reduced.iter().all(|v| *v == want),
             "rank {rank}: subgroup sum isolated from the sibling subgroup"
         );
     }
+    // Weighted accounting: the 4-rank color owns twice the devices and
+    // roughly twice the doorbell slots of the 2-rank color.
+    assert_eq!(devs, [4, 2], "device windows weighted 2:1");
+    assert!(
+        slots[0] > slots[1] && slots[0] <= 2 * slots[1] + 64,
+        "doorbell windows roughly 2:1: {slots:?}"
+    );
 }

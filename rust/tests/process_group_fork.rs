@@ -24,27 +24,28 @@ fn payload(rank: usize) -> Vec<f32> {
         .collect()
 }
 
-/// Run this process's rank of the two collectives over the shared pool.
+/// Run this process's rank of the two collectives over the shared pool —
+/// through the typed nonblocking surface, with both launches issued before
+/// either is waited (the depth-2 pipeline holds them in flight together).
 fn run_pool_rank(path: &str, rank: usize) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
     let boot = Bootstrap::pool(path, spec()).with_join_timeout(Duration::from_secs(30));
     let pg = CommWorld::init(boot, rank, 2)?;
     let cfg = CclConfig::default_all();
-    let p = pg.begin(
-        Primitive::AllGather,
+    let f_ag = pg.all_gather(
         &cfg,
         N,
         Tensor::from_f32(&payload(rank)),
         Tensor::zeros(Dtype::F32, 2 * N),
     )?;
-    let (ag, _) = p.wait()?;
-    let p = pg.begin(
-        Primitive::Broadcast,
+    let f_bc = pg.broadcast(
         &cfg,
         N,
         Tensor::from_f32(&payload(rank)),
         Tensor::zeros(Dtype::F32, N),
     )?;
-    let (bc, _) = p.wait()?;
+    let (ag, _) = f_ag.wait()?;
+    let (bc, _) = f_bc.wait()?;
+    pg.flush()?;
     Ok((ag.into_bytes(), bc.into_bytes()))
 }
 
@@ -54,9 +55,9 @@ fn single_process_reference() -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
     let pg = CommWorld::init(Bootstrap::thread_local(spec()), 0, 2).unwrap();
     let cfg = CclConfig::default_all();
     let collect = |primitive: Primitive, recv_elems: usize| -> Vec<Vec<u8>> {
-        let pending: Vec<GroupPending<'_>> = (0..2)
+        let futures: Vec<CollectiveFuture<'_>> = (0..2)
             .map(|r| {
-                pg.begin_rank(
+                pg.collective_rank(
                     r,
                     primitive,
                     &cfg,
@@ -67,9 +68,13 @@ fn single_process_reference() -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
                 .unwrap()
             })
             .collect();
-        pending.into_iter().map(|p| p.wait().unwrap().0.into_bytes()).collect()
+        futures.into_iter().map(|f| f.wait().unwrap().0.into_bytes()).collect()
     };
-    (collect(Primitive::AllGather, 2 * N), collect(Primitive::Broadcast, N))
+    let out = (collect(Primitive::AllGather, 2 * N), collect(Primitive::Broadcast, N));
+    // Join the launch threads too: the caller forks right after this, and
+    // forking while a launch thread is still exiting is not fork-safe.
+    pg.flush().unwrap();
+    out
 }
 
 #[test]

@@ -67,6 +67,49 @@ fn steady_state_launches_never_revalidate() {
         "steady-state launches must not call CollectivePlan::validate"
     );
 
+    // Steady-state loop 4: the v4 typed future surface. The group plans
+    // each shape once per epoch half (two sealing validations, paid in the
+    // warm-up round); every pipelined launch after that is validation-free.
+    let pg = CommWorld::init(Bootstrap::thread_local(spec.clone()), 0, 3).unwrap();
+    let cfg2 = CclConfig::default_all();
+    let issue_round = |pg: &ProcessGroup| {
+        let futs: Vec<CollectiveFuture<'_>> = (0..3)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg2,
+                    n,
+                    Tensor::from_f32(&sends[r]),
+                    Tensor::zeros(Dtype::F32, n * 3),
+                )
+                .unwrap()
+            })
+            .collect();
+        for f in futs {
+            f.wait().unwrap();
+        }
+    };
+    let before_warm = validate_calls();
+    for _ in 0..2 {
+        issue_round(&pg); // warm both epoch halves
+    }
+    assert_eq!(
+        validate_calls(),
+        before_warm + 2,
+        "one sealing validation per epoch half"
+    );
+    let before_futures = validate_calls();
+    for _ in 0..4 {
+        issue_round(&pg);
+    }
+    pg.flush().unwrap();
+    assert_eq!(
+        validate_calls(),
+        before_futures,
+        "pipelined future launches must not call CollectivePlan::validate"
+    );
+
     // Hand-built plans still pay exactly one validation at the gate.
     let inner: CollectivePlan = (**plan.as_arc()).clone();
     let before_gate = validate_calls();

@@ -166,10 +166,11 @@ fn main() -> anyhow::Result<()> {
     });
     println!("concurrent subgroup AllReduce over one pool ✓");
 
-    // --- 6. v4: pipelined launches over even/odd epoch halves --------------
+    // --- 6. pipelined launches over the epoch ring -------------------------
     // Hold launch N's futures while issuing launch N+1: with the default
-    // depth 2, publication of N+1 overlaps the drain of N on disjoint
-    // doorbell slots and devices.
+    // ring depth 2, publication of N+1 overlaps the drain of N on disjoint
+    // doorbell slots and devices (deeper rings via
+    // Bootstrap::with_pipeline_depth).
     let world = CommWorld::init(
         Bootstrap::thread_local(ClusterSpec::new(2, 6, 16 << 20)),
         0,
@@ -203,7 +204,7 @@ fn main() -> anyhow::Result<()> {
     }
     world.flush()?;
     println!(
-        "pipelined launches (depth {}) over epoch halves ✓",
+        "pipelined launches (depth {}) over the epoch ring ✓",
         world.pipeline_depth()
     );
     Ok(())

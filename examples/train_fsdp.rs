@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         seed: arg("--seed", "0").parse()?,
         ndevices: arg("--devices", "6").parse()?,
         comm_buckets: arg("--buckets", "2").parse()?,
+        pipeline_depth: arg("--pipeline-depth", "2").parse()?,
     };
     println!(
         "FSDP case study: preset={} steps={} variant={:?} chunks={}",

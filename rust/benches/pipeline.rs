@@ -1,10 +1,11 @@
 //! Cross-launch pipelining bench: makespan of K steady-state launches at
-//! pipeline depth 1 (serialized) vs depth 2 (double-buffered epoch
-//! halves), wall-clock over the real shm executor and virtual-time on the
-//! calibrated fabric.
+//! pipeline depths 1 (serialized), 2 (double-buffered) and 4 (four-slice
+//! epoch ring), wall-clock over the real shm executor and virtual-time on
+//! the calibrated fabric.
 //!
 //! Run: `cargo bench --bench pipeline`
 //! Env: `PIPE_LAUNCHES` (default 8), `PIPE_MB` per-rank MiB (default 4),
+//!      `PIPE_DEPTHS` comma-separated depth sweep (default "1,2,4"),
 //!      `BENCH_JSON=1` to also emit `BENCH_pipeline.json`.
 
 use cxl_ccl::bench_util::{banner, write_bench_json, Table};
@@ -16,56 +17,73 @@ use cxl_ccl::sim::SimFabric;
 use cxl_ccl::tensor::{Dtype, Tensor};
 use cxl_ccl::topology::ClusterSpec;
 use cxl_ccl::util::size::fmt_time;
+use std::collections::VecDeque;
 use std::time::Instant;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-/// Wall-clock makespan of `k` AllGather launches at `depth` over a fresh
-/// thread-local world.
+fn env_depths() -> Vec<usize> {
+    std::env::var("PIPE_DEPTHS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|d| d.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
+/// Issue one AllGather launch train round (every rank's part) on `pg`.
+fn issue_round<'g>(
+    pg: &'g cxl_ccl::group::ProcessGroup,
+    cfg: &CclConfig,
+    sends: &[Tensor],
+    n: usize,
+) -> anyhow::Result<Vec<CollectiveFuture<'g>>> {
+    (0..sends.len())
+        .map(|r| {
+            pg.collective_rank(
+                r,
+                Primitive::AllGather,
+                cfg,
+                n,
+                sends[r].clone(),
+                Tensor::zeros(Dtype::F32, n * sends.len()),
+            )
+        })
+        .collect()
+}
+
+/// Wall-clock makespan of `k` AllGather launches over a fresh thread-local
+/// world bootstrapped with a `depth`-slice epoch ring. In flight launches
+/// are bounded to `depth`, mirroring the CLI runner.
 fn real_makespan(spec: &ClusterSpec, n: usize, k: usize, depth: usize) -> anyhow::Result<f64> {
     let nr = spec.nranks;
-    let pg = CommWorld::init(Bootstrap::thread_local(spec.clone()), 0, nr)?
-        .with_pipeline_depth(depth)?;
+    let boot = Bootstrap::thread_local(spec.clone()).with_pipeline_depth(depth);
+    let pg = CommWorld::init(boot, 0, nr)?;
+    anyhow::ensure!(
+        pg.pipeline_ring().len() == depth,
+        "bench world cannot ring {depth} deep (got {})",
+        pg.pipeline_ring().len()
+    );
     let cfg = CclConfig::default_all();
     let sends: Vec<Tensor> = (0..nr).map(|r| Tensor::from_f32(&vec![r as f32; n])).collect();
-    // Warm the per-half plan caches so the measured loop never plans.
-    for _ in 0..2 {
-        let futs: Vec<CollectiveFuture<'_>> = (0..nr)
-            .map(|r| {
-                pg.collective_rank(
-                    r,
-                    Primitive::AllGather,
-                    &cfg,
-                    n,
-                    sends[r].clone(),
-                    Tensor::zeros(Dtype::F32, n * nr),
-                )
-            })
-            .collect::<anyhow::Result<_>>()?;
-        for f in futs {
+    // Warm every slice's plan cache entry so the measured loop never plans.
+    for _ in 0..depth {
+        for f in issue_round(&pg, &cfg, &sends, n)? {
             f.wait()?;
         }
     }
     let t0 = Instant::now();
-    let mut all: Vec<Vec<CollectiveFuture<'_>>> = Vec::with_capacity(k);
+    let mut in_flight: VecDeque<Vec<CollectiveFuture<'_>>> = VecDeque::with_capacity(depth + 1);
     for _ in 0..k {
-        let futs: Vec<CollectiveFuture<'_>> = (0..nr)
-            .map(|r| {
-                pg.collective_rank(
-                    r,
-                    Primitive::AllGather,
-                    &cfg,
-                    n,
-                    sends[r].clone(),
-                    Tensor::zeros(Dtype::F32, n * nr),
-                )
-            })
-            .collect::<anyhow::Result<_>>()?;
-        all.push(futs);
+        in_flight.push_back(issue_round(&pg, &cfg, &sends, n)?);
+        while in_flight.len() > depth {
+            for f in in_flight.pop_front().unwrap() {
+                f.wait()?;
+            }
+        }
     }
-    for futs in all {
+    while let Some(futs) = in_flight.pop_front() {
         for f in futs {
             f.wait()?;
         }
@@ -77,56 +95,63 @@ fn real_makespan(spec: &ClusterSpec, n: usize, k: usize, depth: usize) -> anyhow
 fn main() -> anyhow::Result<()> {
     let k = env_usize("PIPE_LAUNCHES", 8);
     let mb = env_usize("PIPE_MB", 4);
+    let depths = env_depths();
+    let max_depth = depths.iter().copied().max().unwrap_or(1);
     let nranks = 3usize;
     let n = mb * (1 << 20) / 4; // f32 elems per rank
-    let dev_cap = ((nranks * n * 4 * 2) + (8 << 20)).next_power_of_two();
+    // Deepest ring shrinks the per-launch device window the most; size the
+    // devices so every depth in the sweep places its plans.
+    let dev_cap = ((nranks * n * 4 * max_depth) + (8 << 20)).next_power_of_two();
     let spec = ClusterSpec::new(nranks, 6, dev_cap);
     banner(&format!(
-        "cross-launch pipelining: {k} x AllGather, {mb} MiB per rank, {nranks} ranks"
+        "cross-launch pipelining: {k} x AllGather, {mb} MiB per rank, {nranks} ranks, \
+         depths {depths:?}"
     ));
 
-    // Virtual time: each launch planned on the epoch half it runs on.
     let layout = PoolLayout::from_spec(&spec)?;
-    let halves = layout.pipeline_halves()?;
-    let plans: Vec<ValidPlan> = (0..k)
-        .map(|i| {
-            plan_collective(
-                Primitive::AllGather,
-                &spec,
-                &halves[i % 2],
-                &CclConfig::default_all(),
-                n,
-            )
-        })
-        .collect::<anyhow::Result<_>>()?;
-    let refs: Vec<&CollectivePlan> = plans.iter().map(|p| &**p).collect();
     let fab = SimFabric::new(layout);
-    let sim_d1 = fab.simulate_pipelined(&refs, 1)?.total_time;
-    let sim_d2 = fab.simulate_pipelined(&refs, 2)?.total_time;
-
-    // Wall clock over the real executor.
-    let real_d1 = real_makespan(&spec, n, k, 1)?;
-    let real_d2 = real_makespan(&spec, n, k, 2)?;
-
+    // Depth-1 virtual-time baseline for the speedup column, computed
+    // explicitly so the column stays meaningful whatever PIPE_DEPTHS says.
+    let base_plan = plan_collective(
+        Primitive::AllGather,
+        &spec,
+        &layout,
+        &CclConfig::default_all(),
+        n,
+    )?;
+    let base_refs: Vec<&CollectivePlan> = (0..k).map(|_| &*base_plan).collect();
+    let sim_serial = fab.simulate_pipelined(&base_refs, 1)?.total_time;
     let t = Table::new(&[8, 16, 16, 10]);
-    t.header(&["depth", "real makespan", "sim makespan", "sim x"]);
-    t.row(&[
-        "1".into(),
-        fmt_time(real_d1),
-        fmt_time(sim_d1),
-        "1.00".into(),
-    ]);
-    t.row(&[
-        "2".into(),
-        fmt_time(real_d2),
-        fmt_time(sim_d2),
-        format!("{:.2}", sim_d1 / sim_d2),
-    ]);
-    println!(
-        "wall-clock speedup {:.2}x | virtual-time speedup {:.2}x",
-        real_d1 / real_d2,
-        sim_d1 / sim_d2
-    );
+    t.header(&["depth", "real makespan", "sim makespan", "sim x vs d1"]);
+    let mut json_rows = Vec::with_capacity(depths.len());
+    for &depth in &depths {
+        // Virtual time: each launch planned on the epoch slice it runs on.
+        let slices = layout.pipeline_slices(depth)?;
+        let plans: Vec<ValidPlan> = (0..k)
+            .map(|i| {
+                plan_collective(
+                    Primitive::AllGather,
+                    &spec,
+                    &slices[i % depth],
+                    &CclConfig::default_all(),
+                    n,
+                )
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let refs: Vec<&CollectivePlan> = plans.iter().map(|p| &**p).collect();
+        let sim = fab.simulate_pipelined(&refs, depth)?.total_time;
+        let real = real_makespan(&spec, n, k, depth)?;
+        t.row(&[
+            depth.to_string(),
+            fmt_time(real),
+            fmt_time(sim),
+            format!("{:.2}", sim_serial / sim),
+        ]);
+        json_rows.push(format!(
+            "{{\"depth\": {depth}, \"real_makespan_s\": {real:.6}, \
+             \"sim_makespan_s\": {sim:.9}}}"
+        ));
+    }
 
     if std::env::var("BENCH_JSON").as_deref() == Ok("1") {
         write_bench_json(
@@ -136,17 +161,9 @@ fn main() -> anyhow::Result<()> {
                 ("nranks", nranks.to_string()),
                 ("launches", k.to_string()),
                 ("mb_per_rank", mb.to_string()),
+                ("depths", format!("{depths:?}")),
             ],
-            &[
-                format!(
-                    "{{\"depth\": 1, \"real_makespan_s\": {real_d1:.6}, \
-                     \"sim_makespan_s\": {sim_d1:.9}}}"
-                ),
-                format!(
-                    "{{\"depth\": 2, \"real_makespan_s\": {real_d2:.6}, \
-                     \"sim_makespan_s\": {sim_d2:.9}}}"
-                ),
-            ],
+            &json_rows,
         )?;
         println!("wrote BENCH_pipeline.json");
     }

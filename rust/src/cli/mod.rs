@@ -106,10 +106,11 @@ fn print_help() {
          info                     topology + artifact summary\n  \
          run    [--config F] [--primitive p] [--variant all|aggregate|naive]\n         \
                 [--size 16M] [--ranks 3] [--devices 6] [--chunks 8] [--iters 3]\n         \
-                [--backend shm|sim] [--dtype f32|f16|bf16|u8] [--pipeline-depth 1|2]\n         \
+                [--backend shm|sim] [--dtype f32|f16|bf16|u8] [--pipeline-depth N]\n         \
                 [--bootstrap local|pool:<path> --rank R --world N]\n  \
          sweep  [--primitive p] [--ranks 3] [--max 1G]   virtual-time vs InfiniBand\n  \
-         train  [--preset tiny|e2e] [--steps 40] [--variant all] [--chunks 8] [--buckets 2]\n  \
+         train  [--preset tiny|e2e] [--steps 40] [--variant all] [--chunks 8]\n         \
+                [--buckets 2] [--pipeline-depth 2]\n  \
          latency                  Table-1 style latency report\n\n\
          multi-process: start one `run --bootstrap pool:<path> --rank R --world N`\n\
          per rank (same path, same sizes); the processes rendezvous through the\n\
@@ -270,11 +271,11 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 /// `run --pipeline-depth D` (local bootstrap): drive `--iters` launches
-/// through the typed nonblocking group surface with up to `D` in flight.
-/// On the shm backend this measures the real makespan (and verifies the
-/// last iteration against the f32 oracle); on the sim backend it reports
-/// the virtual-time makespan of the pipelined sequence vs the serialized
-/// chain.
+/// through the typed nonblocking group surface with up to `D` in flight
+/// over a D-slice epoch ring. On the shm backend this measures the real
+/// makespan (and verifies the last iteration against the f32 oracle); on
+/// the sim backend it reports the virtual-time makespan of the pipelined
+/// sequence vs the serialized chain.
 fn cmd_run_pipelined(
     rc: &RunConfig,
     dtype: Dtype,
@@ -282,10 +283,11 @@ fn cmd_run_pipelined(
     depth: usize,
 ) -> Result<()> {
     ensure!(rc.iters > 0, "--pipeline-depth needs --iters >= 1");
-    // Pipelined launches place data on *half* device windows, doubling the
-    // per-device reservation pressure vs the plain run path.
+    ensure!(depth >= 1, "--pipeline-depth must be at least 1");
+    // Pipelined launches place data on 1/depth device windows, multiplying
+    // the per-device reservation pressure vs the plain run path.
     let mut rc = rc.clone();
-    let worst = 2 * rc.spec.nranks * rc.msg_bytes + rc.spec.db_region_size + (1 << 20);
+    let worst = depth * rc.spec.nranks * rc.msg_bytes + rc.spec.db_region_size + (1 << 20);
     if rc.spec.device_capacity < worst {
         rc.spec.device_capacity = worst.next_power_of_two();
     }
@@ -304,15 +306,25 @@ fn cmd_run_pipelined(
         rc.spec.ndevices
     ));
     if backend_name == "sim" {
-        // Virtual time: plan each launch against the epoch half it runs
-        // on (adjacent launches own disjoint doorbells + devices).
+        // Virtual time: plan each launch against the epoch slice it runs
+        // on (neighbouring launches own disjoint doorbells + devices).
         let layout = PoolLayout::from_spec(&rc.spec)?;
-        let halves = layout
-            .pipeline_halves()
-            .context("--pipeline-depth needs a window large enough to halve")?;
+        let slices = layout.pipeline_slices(depth).with_context(|| {
+            format!(
+                "--pipeline-depth {depth} needs a window carvable {depth} ways (grow \
+                 --devices / device capacity, or lower the depth)"
+            )
+        })?;
         let plans: Vec<ValidPlan> = (0..rc.iters)
             .map(|i| {
-                plan_collective_dtype(rc.primitive, &rc.spec, &halves[i % 2], &ccl, n, dtype)
+                plan_collective_dtype(
+                    rc.primitive,
+                    &rc.spec,
+                    &slices[i % slices.len()],
+                    &ccl,
+                    n,
+                    dtype,
+                )
             })
             .collect::<Result<_>>()?;
         let refs: Vec<&CollectivePlan> = plans.iter().map(|p| &**p).collect();
@@ -339,8 +351,15 @@ fn cmd_run_pipelined(
             rc.primitive
         );
     }
-    let pg = CommWorld::init(Bootstrap::thread_local(rc.spec.clone()), 0, nr)?;
-    pg.set_pipeline_depth(depth)?;
+    let boot = Bootstrap::thread_local(rc.spec.clone()).with_pipeline_depth(depth);
+    let pg = CommWorld::init(boot, 0, nr)?;
+    if pg.pipeline_ring().len() < depth {
+        println!(
+            "note: the window cannot be carved into {depth} epoch slices; running \
+             serialized (depth 1) — grow --devices / device capacity for real overlap"
+        );
+    }
+    let depth = pg.pipeline_depth();
     let send_elems = rc.primitive.send_elems(n, nr);
     let recv_elems = rc.primitive.recv_elems(n, nr);
     let sends: Vec<Tensor> = (0..nr)
@@ -502,9 +521,13 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
         .context("--bootstrap pool:<path> needs --rank R (this process's rank)")?
         .parse()?;
     rc.spec.nranks = world;
-    // Re-apply the capacity growth for the actual world size (every rank
-    // must compute the identical spec — it is part of the layout hash).
-    let worst = rc.spec.nranks * rc.msg_bytes + rc.spec.db_region_size + (1 << 20);
+    // Re-apply the capacity growth for the actual world size and the
+    // configured pipeline depth — a depth-N ring places each launch on
+    // 1/N of the device window (every rank must compute the identical
+    // spec; it and the depth are part of the layout hash).
+    let depth: usize = args.get_or("pipeline-depth", "1").parse()?;
+    ensure!(depth >= 1, "--pipeline-depth must be at least 1");
+    let worst = depth * rc.spec.nranks * rc.msg_bytes + rc.spec.db_region_size + (1 << 20);
     if rc.spec.device_capacity < worst {
         rc.spec.device_capacity = worst.next_power_of_two();
     }
@@ -522,13 +545,15 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
         rc.chunks
     ));
     let ccl = rc.variant.config(rc.chunks).with_root(0);
-    // Pipelined launches are opt-in at the CLI (the library defaults to
-    // depth 2): depth 1 serializes, depth 2 keeps two launches in flight
-    // over the even/odd epoch halves. Results are identical either way —
-    // CI diffs the digests to pin exactly that.
-    let depth: usize = args.get_or("pipeline-depth", "1").parse()?;
-    let pg = CommWorld::init(Bootstrap::pool(path, rc.spec.clone()), rank, world)?;
-    pg.set_pipeline_depth(depth)?;
+    // Pipelined launches are opt-in at the CLI: depth 1 serializes over
+    // the undivided window, depth N keeps N launches in flight over an
+    // N-slice epoch ring. Results are identical at every depth — CI diffs
+    // the digests to pin exactly that. The configured depth is part of the
+    // pool layout hash, so EVERY rank must pass the same value; an
+    // unsupported depth is rejected here, up front, with the
+    // grow-capacity/lower-depth hint (never mid-train).
+    let boot = Bootstrap::pool(path, rc.spec.clone()).with_pipeline_depth(depth);
+    let pg = CommWorld::init(boot, rank, world)?;
     println!(
         "rendezvous complete: {} ranks over {} (doorbells {:?}, pipeline x{depth})",
         pg.world_size(),
@@ -611,6 +636,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get_or("seed", "0").parse()?,
         ndevices: args.get_or("devices", "6").parse()?,
         comm_buckets: args.get_or("buckets", "2").parse()?,
+        pipeline_depth: args.get_or("pipeline-depth", "2").parse()?,
     };
     banner(&format!("FSDP training: {:?}", cfg));
     let mut trainer = FsdpTrainer::new(cfg.clone())?;

@@ -41,8 +41,8 @@ pub struct PlanKey {
     pub device_capacity: usize,
     pub db_region_size: usize,
     /// The layout *windows* the plan was placed into (doorbell slots and
-    /// devices). Since the v4 pipelined launch surface, one group plans the
-    /// same shape against its even and odd epoch-half views — two distinct
+    /// devices). Since the pipelined launch surface, one group plans the
+    /// same shape against each of its N epoch-slice views — N distinct
     /// plans — so the window is part of the key.
     pub db_slot_base: usize,
     pub db_slot_span: usize,
@@ -320,6 +320,118 @@ mod tests {
             .get_or_plan(&spec, &even, Primitive::AllGather, &cfg, 3 * 256, Dtype::F32)
             .unwrap();
         assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn multi_slice_rings_occupy_one_entry_per_slice() {
+        // A depth-N ring plans the same shape once per slice window: N
+        // entries, N misses, and steady state hits each slice's own entry.
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let cfg = CclVariant::All.config(4);
+        for n_slices in [2usize, 3] {
+            let slices = layout.pipeline_slices(n_slices).unwrap();
+            let cache = PlanCache::new();
+            for shape in [3 * 128usize, 3 * 256] {
+                for s in &slices {
+                    cache
+                        .get_or_plan(&spec, s, Primitive::AllGather, &cfg, shape, Dtype::F32)
+                        .unwrap();
+                }
+            }
+            assert_eq!(cache.len(), 2 * n_slices, "ring depth {n_slices}");
+            assert_eq!(cache.stats().misses, 2 * n_slices);
+            assert_eq!(cache.stats().hits, 0);
+            // One steady-state launch train over the ring: all hits.
+            for s in &slices {
+                cache
+                    .get_or_plan(&spec, s, Primitive::AllGather, &cfg, 3 * 128, Dtype::F32)
+                    .unwrap();
+            }
+            assert_eq!(cache.stats().hits, n_slices);
+            assert_eq!(cache.stats().misses, 2 * n_slices);
+        }
+    }
+
+    #[test]
+    fn capacity_one_short_of_ring_times_shapes_evicts_the_lru_slice_only() {
+        // N slices x S shapes at capacity N*S - 1: the last insert evicts
+        // exactly the least-recently-used (slice, shape) entry; every other
+        // slice entry of that shape survives.
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let cfg = CclVariant::All.config(4);
+        let slices = layout.pipeline_slices(3).unwrap();
+        let shapes = [3 * 128usize, 3 * 256];
+        let cache = PlanCache::with_capacity(3 * shapes.len() - 1); // 5
+        for shape in shapes {
+            for s in &slices {
+                cache
+                    .get_or_plan(&spec, s, Primitive::AllGather, &cfg, shape, Dtype::F32)
+                    .unwrap();
+            }
+        }
+        assert_eq!(cache.len(), 5);
+        assert_eq!(
+            cache.stats(),
+            CacheStats { hits: 0, misses: 6, evictions: 1 },
+            "the 6th insert evicts exactly one entry"
+        );
+        // The victim was the oldest entry: (shape A, slice 0). Every other
+        // (shape, slice) entry is still cached — probing them is pure hits
+        // (hits never evict), which proves exactly one entry was dropped.
+        let before = cache.stats();
+        for shape in shapes {
+            for s in &slices {
+                if shape == shapes[0] && s.db_slot_base == slices[0].db_slot_base {
+                    continue;
+                }
+                cache
+                    .get_or_plan(&spec, s, Primitive::AllGather, &cfg, shape, Dtype::F32)
+                    .unwrap();
+            }
+        }
+        assert_eq!(
+            cache.stats(),
+            CacheStats { hits: before.hits + 5, misses: before.misses, evictions: 1 },
+            "all five survivors hit; nothing else was evicted"
+        );
+        // Only the evicted slice replans: one miss (plus the LRU eviction
+        // that makes room for it at full capacity).
+        cache
+            .get_or_plan(&spec, &slices[0], Primitive::AllGather, &cfg, shapes[0], Dtype::F32)
+            .unwrap();
+        assert_eq!(cache.stats().misses, before.misses + 1);
+        assert_eq!(cache.len(), 5);
+    }
+
+    #[test]
+    fn stats_stay_exact_across_a_mixed_depth_workload() {
+        // One cache serving a depth-1 (undivided), depth-2, and depth-3
+        // view of the same shape: 1 + 2 + 3 = 6 distinct windows. Replaying
+        // the whole workload R more times adds exactly 6*R hits.
+        let spec = ClusterSpec::new(3, 6, 4 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let cfg = CclVariant::All.config(4);
+        let mut views = vec![layout];
+        views.extend(layout.pipeline_slices(2).unwrap());
+        views.extend(layout.pipeline_slices(3).unwrap());
+        assert_eq!(views.len(), 6);
+        let cache = PlanCache::new();
+        let replay = |cache: &PlanCache| {
+            for v in &views {
+                cache
+                    .get_or_plan(&spec, v, Primitive::AllReduce, &cfg, 3 * 128, Dtype::F32)
+                    .unwrap();
+            }
+        };
+        replay(&cache);
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 6, evictions: 0 });
+        for _ in 0..4 {
+            replay(&cache);
+        }
+        assert_eq!(cache.stats(), CacheStats { hits: 24, misses: 6, evictions: 0 });
+        assert_eq!(cache.len(), 6);
     }
 
     #[test]

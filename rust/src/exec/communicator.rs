@@ -44,8 +44,8 @@ pub struct Communicator {
     /// executes over it at a time. Concurrent `wait()`s of different
     /// groups queue here instead of corrupting each other. Pipelined
     /// `ProcessGroup` launches run through `run_plan_views_on` against
-    /// disjoint epoch-half windows and deliberately bypass this lock (the
-    /// pipeline depth gate orders same-half launches instead).
+    /// disjoint epoch-slice windows and deliberately bypass this lock (the
+    /// pipeline's slice-tenant gate orders same-slice launches instead).
     launch_lock: Mutex<()>,
 }
 
@@ -183,13 +183,13 @@ impl Communicator {
 
     /// [`Communicator::run_plan_views`] against an explicit layout view and
     /// **without** taking the communicator-wide launch lock. This is the
-    /// pipelined launch path: `ProcessGroup` runs launch `N` on one epoch
-    /// half while launch `N+1` runs on the other — the two half views own
-    /// disjoint doorbell slots and disjoint devices, so the global lock
-    /// (which exists to serialize launches over one shared window) must not
-    /// serialize them. Callers are responsible for never running two
-    /// launches over the *same* half concurrently (the pipeline's depth
-    /// gate enforces this).
+    /// pipelined launch path: `ProcessGroup` runs up to `depth` launches
+    /// concurrently, each on its own epoch slice of the ring — the slice
+    /// views own disjoint doorbell slots and disjoint devices, so the
+    /// global lock (which exists to serialize launches over one shared
+    /// window) must not serialize them. Callers are responsible for never
+    /// running two launches over the *same* slice concurrently (the
+    /// pipeline's slice-tenant gate enforces this).
     pub(crate) fn run_plan_views_on(
         &self,
         layout: PoolLayout,
@@ -225,8 +225,8 @@ impl Communicator {
         }
 
         // One launch at a time over the shared window (see `launch_lock`);
-        // pipelined half-window launches synchronize via the depth gate
-        // instead and skip the lock.
+        // pipelined slice-window launches synchronize via the pipeline
+        // gates instead and skip the lock.
         let _launch = if take_launch_lock {
             Some(self.launch_lock.lock().unwrap())
         } else {

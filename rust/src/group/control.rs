@@ -26,11 +26,13 @@
 //! slot 0..8    header: magic, version, layout-hash lo/hi, generation,
 //!              arrivals, world-size, (reserved)
 //! slot 8..64   per-rank slots: join count, split color, split key
-//! slot 64..    group windows; each group's first 16 slots are its launch
-//!              control — an in-flight ring of two epoch halves (per-half
-//!              launch barrier, stream barrier, and epoch word) plus the
-//!              whole-group barrier — the rest are plan doorbells, split
-//!              into even/odd halves for pipelined launches
+//! slot 64..    group windows; each group's first 64 slots are its launch
+//!              control — an in-flight ring of up to [`MAX_PIPELINE_DEPTH`]
+//!              epoch slices (per-slice launch barrier, stream barrier, and
+//!              epoch word) plus the whole-group barrier — the rest are
+//!              plan doorbells, carved into N epoch slices for pipelined
+//!              launches (the configured ring depth N is part of the
+//!              layout hash, so mixed-depth mappers fail fast)
 //! ```
 
 use crate::doorbell::DOORBELL_SLOT;
@@ -44,20 +46,27 @@ use std::time::{Duration, Instant};
 
 /// "CCLP" — marks an initialized pool control plane.
 pub const POOL_MAGIC: u32 = 0x4343_4C50;
-/// Bumped with every incompatible control-plane change. v4: the group
-/// control prefix doubled to hold an in-flight ring of two epoch halves
-/// (per-half launch/stream barriers + epoch words) for cross-launch
-/// pipelining.
-pub const POOL_PROTO_VERSION: u32 = 4;
+/// Bumped with every incompatible control-plane change. v5: the group
+/// control prefix grew from two epoch halves to an N-deep ring of up to
+/// [`MAX_PIPELINE_DEPTH`] epoch slices (per-slice launch/stream barriers +
+/// a wrapping epoch-word ring), and the layout hash covers the configured
+/// ring depth.
+pub const POOL_PROTO_VERSION: u32 = 5;
 /// Header slots at the very base of the doorbell region.
 pub const HEADER_SLOTS: usize = 8;
 /// One rendezvous slot per global rank.
 pub const MAX_POOL_WORLD: usize = 56;
 /// Total slots reserved for the control plane (header + rank slots).
 pub const CTRL_SLOTS: usize = HEADER_SLOTS + MAX_POOL_WORLD;
-/// Control slots at the front of every group's doorbell window (v4: two
-/// epoch halves × [`GC_HALF_WORDS`] words, then the whole-group barrier).
-pub const GROUP_CTRL_SLOTS: usize = 16;
+/// Deepest epoch ring the fixed-size group control prefix can hold. Pool
+/// bootstraps reject deeper configured depths up front; thread-local
+/// groups are not bound by it (their launch sync never touches these
+/// words).
+pub const MAX_PIPELINE_DEPTH: usize = 8;
+/// Control slots at the front of every group's doorbell window (v5: up to
+/// [`MAX_PIPELINE_DEPTH`] epoch slices × [`GC_SLICE_WORDS`] words, the
+/// whole-group barrier, and reserved headroom).
+pub const GROUP_CTRL_SLOTS: usize = 64;
 
 // Header word slot indices.
 const W_MAGIC: usize = 0;
@@ -75,22 +84,23 @@ const R_KEY: usize = 8;
 
 // Word indices within a group's control prefix (each in its own slot).
 //
-// The prefix is an in-flight ring of two *epoch halves*: launch `seq` of a
-// group runs entirely on half `seq % 2` — its own launch barrier, its own
-// stream barrier (for the plans' `Op::Barrier`), and its own epoch word —
-// so launch N+1's publication can proceed on one half while launch N's
-// retrieval drains on the other. Words 12/13 are the whole-group barrier
-// backing `ProcessGroup::barrier()` and the `split()` rounds, which must be
-// independent of either half.
+// The prefix is an in-flight ring of N *epoch slices* (N = the group's
+// configured pipeline depth, at most [`MAX_PIPELINE_DEPTH`]): launch `seq`
+// of a group runs entirely on slice `seq % N` — its own launch barrier,
+// its own stream barrier (for the plans' `Op::Barrier`), and its own epoch
+// word — so up to N launches' publications and retrievals proceed on
+// disjoint slices concurrently. Words 48/49 are the whole-group barrier
+// backing `ProcessGroup::barrier()` and the `split()` rounds, which must
+// be independent of every slice.
 pub(crate) const GC_LAUNCH_CNT: usize = 0;
 pub(crate) const GC_LAUNCH_SENSE: usize = 1;
 pub(crate) const GC_STREAM_CNT: usize = 2;
 pub(crate) const GC_STREAM_SENSE: usize = 3;
 pub(crate) const GC_EPOCH: usize = 4;
-/// Stride between the two halves' word blocks (5 words used + 1 reserved).
-pub(crate) const GC_HALF_WORDS: usize = 6;
-pub(crate) const GC_GROUP_CNT: usize = 12;
-pub(crate) const GC_GROUP_SENSE: usize = 13;
+/// Stride between consecutive slices' word blocks (5 words + 1 reserved).
+pub(crate) const GC_SLICE_WORDS: usize = 6;
+pub(crate) const GC_GROUP_CNT: usize = MAX_PIPELINE_DEPTH * GC_SLICE_WORDS;
+pub(crate) const GC_GROUP_SENSE: usize = GC_GROUP_CNT + 1;
 
 /// Byte offset of group-control word `word` for a group whose doorbell
 /// window starts at absolute slot `window_base_slot`.
@@ -98,34 +108,28 @@ pub(crate) fn group_word_off(window_base_slot: usize, word: usize) -> usize {
     (window_base_slot + word) * DOORBELL_SLOT
 }
 
-/// Word index of per-half control word `word` for epoch half `half`.
-pub(crate) fn half_word(half: usize, word: usize) -> usize {
-    debug_assert!(half < 2 && word < GC_HALF_WORDS);
-    half * GC_HALF_WORDS + word
+/// Word index of per-slice control word `word` for epoch slice `slice`.
+pub(crate) fn slice_word(slice: usize, word: usize) -> usize {
+    debug_assert!(slice < MAX_PIPELINE_DEPTH && word < GC_SLICE_WORDS);
+    slice * GC_SLICE_WORDS + word
 }
 
-/// The epoch word published for the `k`-th launch on an epoch half
-/// (`k = seq / 2`). The word is the wrapping-truncated counter plus one so
-/// that the very first launch (`k = 0`) publishes a value distinct from the
-/// zero-initialized word.
-pub(crate) fn epoch_word(k: u64) -> u32 {
-    (k as u32).wrapping_add(1)
-}
-
-/// `(previous, next)` epoch words for launch `seq` (half `seq % 2`, per-half
-/// launch count `k = seq / 2`). Waiters spin while the half's epoch word
-/// still equals `previous` — an **inequality** test, never `== next` alone:
-/// the u64 sequence and the u32 word both wrap, and only "the word moved
-/// off the old value" is unconditionally correct. Adjacent same-half
-/// launches always produce distinct words (their `k`s differ by exactly 1),
-/// and the formulas stay consistent across the u64 wrap: the launch before
-/// `seq = 0` on either half is `k = u64::MAX / 2` whose word is
-/// `epoch_word(0x7fff_ffff_ffff_ffff) = 0` — exactly the `previous` that
-/// `epoch_pair(0)`/`epoch_pair(1)` report for a fresh half.
-pub(crate) fn epoch_pair(seq: u64) -> (u32, u32) {
-    let k = seq / 2;
-    let prev = if k == 0 { 0 } else { epoch_word(k - 1) };
-    (prev, epoch_word(k))
+/// The epoch word published on a slice for launch `seq`: the
+/// wrapping-truncated **global** launch sequence plus one (so the very
+/// first launch, `seq = 0`, publishes a value distinct from the
+/// zero-initialized word).
+///
+/// Keying the word off the global sequence — not a per-slice launch count —
+/// is what makes the ring wrap-robust at every depth: consecutive launches
+/// on one slice are exactly N apart in `seq` in steady state, and between
+/// 1 and `2N − 1` apart around the u64 sequence wrap when the ring depth
+/// does not divide 2^64 ("slice-index drift": N = 3 runs `u64::MAX` and
+/// `0` back-to-back on slice 0 while stretching slice 1's gap to 4). Every
+/// gap in `1..=2N-1` stays nonzero under u32 truncation
+/// (`2N − 1 < 2^32`), so adjacent same-slice launches always publish
+/// distinct words.
+pub(crate) fn epoch_word_for(seq: u64) -> u32 {
+    (seq as u32).wrapping_add(1)
 }
 
 /// Byte offset of the header's generation word (the stale-mapper guard).
@@ -162,9 +166,13 @@ impl PoolControl {
     }
 
     /// Fingerprint of everything two mappers must agree on before they may
-    /// exchange a single byte through the pool.
-    pub(crate) fn layout_hash(spec: &ClusterSpec, pool_len: usize) -> u64 {
-        let mut buf = [0u8; 48];
+    /// exchange a single byte through the pool. Since v5 that includes the
+    /// configured pipeline ring depth: slice windows and the `seq % N`
+    /// slice assignment are pure functions of it, so mappers configured
+    /// with different depths would desync silently — the hash makes them
+    /// fail fast instead.
+    pub(crate) fn layout_hash(spec: &ClusterSpec, pool_len: usize, ring_depth: usize) -> u64 {
+        let mut buf = [0u8; 56];
         for (i, v) in [
             spec.nranks as u64,
             spec.ndevices as u64,
@@ -172,6 +180,7 @@ impl PoolControl {
             spec.db_region_size as u64,
             pool_len as u64,
             POOL_PROTO_VERSION as u64,
+            ring_depth as u64,
         ]
         .into_iter()
         .enumerate()
@@ -189,6 +198,7 @@ impl PoolControl {
         spec: &ClusterSpec,
         rank: usize,
         world: usize,
+        ring_depth: usize,
         timeout: Duration,
     ) -> Result<Self> {
         ensure!(
@@ -196,7 +206,7 @@ impl PoolControl {
             "pool bootstrap supports at most {MAX_POOL_WORLD} ranks, got {world}"
         );
         ensure!(rank < world, "rank {rank} out of range ({world} ranks)");
-        let hash = Self::layout_hash(spec, pool.len());
+        let hash = Self::layout_hash(spec, pool.len(), ring_depth);
         let mut ctrl = Self { pool, generation: 0 };
         ctrl.generation = if rank == 0 {
             ctrl.initialize(hash, world, spec.db_region_size)?
@@ -382,10 +392,10 @@ mod tests {
             let s0 = s.clone();
             let s1 = s.clone();
             let h0 = sc.spawn(move || {
-                PoolControl::rendezvous(p0, &s0, 0, 2, Duration::from_secs(10))
+                PoolControl::rendezvous(p0, &s0, 0, 2, 2, Duration::from_secs(10))
             });
             let h1 = sc.spawn(move || {
-                PoolControl::rendezvous(p1, &s1, 1, 2, Duration::from_secs(10))
+                PoolControl::rendezvous(p1, &s1, 1, 2, 2, Duration::from_secs(10))
             });
             (h0.join().unwrap(), h1.join().unwrap())
         });
@@ -414,6 +424,19 @@ mod tests {
             &other,
             1,
             2,
+            2,
+            Duration::from_millis(300),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("layout hash mismatch"), "{err:#}");
+        // A joiner configured with a different pipeline ring depth is a
+        // layout mismatch too: the `seq % N` slice assignment would desync.
+        let err = PoolControl::rendezvous(
+            Arc::clone(&pool),
+            &s,
+            1,
+            2,
+            3,
             Duration::from_millis(300),
         )
         .unwrap_err();
@@ -428,7 +451,7 @@ mod tests {
             pool: Arc::clone(pool),
             generation: 0,
         };
-        let hash = PoolControl::layout_hash(s, pool.len());
+        let hash = PoolControl::layout_hash(s, pool.len(), 2);
         let gen = ctrl.initialize(hash, 2, s.db_region_size).unwrap();
         PoolControl {
             pool: Arc::clone(pool),
@@ -461,73 +484,107 @@ mod tests {
             let s1 = s.clone();
             let s1b = s.clone();
             let h0 = sc.spawn(move || {
-                PoolControl::rendezvous(p0, &s0, 0, 2, Duration::from_secs(10))
+                PoolControl::rendezvous(p0, &s0, 0, 2, 2, Duration::from_secs(10))
             });
             let h1 = sc.spawn(move || {
-                PoolControl::rendezvous(p1, &s1, 1, 2, Duration::from_secs(10))
+                PoolControl::rendezvous(p1, &s1, 1, 2, 2, Duration::from_secs(10))
             });
             h0.join().unwrap().unwrap();
             h1.join().unwrap().unwrap();
             // World complete; a third process claiming rank 1 again must be
             // told so (short timeout keeps the test fast).
-            let err = PoolControl::rendezvous(p1b, &s1b, 1, 2, Duration::from_millis(200))
+            let err = PoolControl::rendezvous(p1b, &s1b, 1, 2, 2, Duration::from_millis(200))
                 .unwrap_err();
             assert!(format!("{err:#}").contains("already registered"), "{err:#}");
         });
     }
 
-    #[test]
-    fn epoch_words_wrap_without_ambiguity() {
-        // Fresh half: previous is the zeroed word, next is distinct.
-        assert_eq!(epoch_pair(0), (0, 1));
-        assert_eq!(epoch_pair(1), (0, 1));
-        assert_eq!(epoch_pair(2), (1, 2));
-        assert_eq!(epoch_pair(3), (1, 2));
-        // Adjacent same-half launches always publish distinct words, even
-        // where the u32 truncation wraps...
-        let k_wrap = u32::MAX as u64; // epoch_word(k_wrap) == 0
-        for seq in [2 * k_wrap - 2, 2 * k_wrap, 2 * k_wrap + 2] {
-            let (prev, next) = epoch_pair(seq);
-            assert_ne!(prev, next, "seq {seq}");
-            assert_eq!(epoch_pair(seq + 2).0, next, "chain continuity at {seq}");
+    /// The most recent launch before `seq` landing on `seq`'s slice, by
+    /// walking the actual issue order backwards — the reference model for
+    /// "adjacent same-slice launches" that slice-index drift cannot fool.
+    fn prev_same_slice(seq: u64, ring: u64) -> u64 {
+        let slice = seq % ring;
+        let mut s = seq.wrapping_sub(1);
+        loop {
+            if s % ring == slice {
+                return s;
+            }
+            s = s.wrapping_sub(1);
         }
-        assert_eq!(epoch_word(k_wrap), 0);
-        assert_eq!(epoch_word(k_wrap + 1), 1);
-        // ...and across the u64 sequence wrap itself: the launch preceding
-        // seq 0 (seq u64::MAX - 1 on half 0, u64::MAX on half 1) publishes
-        // word 0, which is exactly what epoch_pair reports as `previous`
-        // for a fresh half — a seeded counter can run straight through the
-        // wrap (pinned end-to-end in group::tests).
-        assert_eq!(epoch_pair(u64::MAX - 1), (epoch_pair(u64::MAX - 3).1, 0));
-        assert_eq!(epoch_pair(u64::MAX), (epoch_pair(u64::MAX - 2).1, 0));
-        assert_eq!(epoch_pair(0).0, epoch_pair(u64::MAX - 1).1);
-        assert_eq!(epoch_pair(1).0, epoch_pair(u64::MAX).1);
     }
 
     #[test]
-    fn half_words_do_not_collide() {
+    fn epoch_words_wrap_without_ambiguity_at_every_depth() {
+        // Fresh slice: the zero-initialized word never equals the first
+        // launch's target.
+        for seq in 0..8u64 {
+            assert_ne!(epoch_word_for(seq), 0);
+        }
+        // Adjacent same-slice launches always publish distinct words —
+        // through the u32 truncation wrap, and through the u64 sequence
+        // wrap itself, where rings whose depth does not divide 2^64 drift
+        // (N = 3: seq u64::MAX and seq 0 land on slice 0 back-to-back; even
+        // depths mask this because they divide 2^64 exactly).
+        for ring in [1u64, 2, 3, 4, 5, 8] {
+            let probes = [
+                0u64,
+                1,
+                ring,
+                u32::MAX as u64,
+                (u32::MAX as u64) + 1,
+                u64::MAX - 2 * ring,
+                u64::MAX - 1,
+                u64::MAX,
+            ];
+            for &seq in &probes {
+                for step in 0..2 * ring {
+                    let s = seq.wrapping_add(step);
+                    let prev = prev_same_slice(s, ring);
+                    assert_ne!(
+                        epoch_word_for(s),
+                        epoch_word_for(prev),
+                        "ring {ring}: seq {s} vs its slice predecessor {prev}"
+                    );
+                }
+            }
+        }
+        // The drift case itself, explicitly: at N = 3 the wrap puts two
+        // consecutive launches on slice 0 with distinct words.
+        assert_eq!(u64::MAX % 3, 0);
+        assert_eq!(0u64 % 3, 0);
+        assert_ne!(epoch_word_for(u64::MAX), epoch_word_for(0));
+        assert_eq!(epoch_word_for(u64::MAX), 0); // mid-stream zero is fine…
+        assert_eq!(epoch_word_for(0), 1); // …its successor moves off it.
+    }
+
+    #[test]
+    fn slice_words_do_not_collide() {
         let mut seen = std::collections::HashSet::new();
-        for h in 0..2 {
+        for s in 0..MAX_PIPELINE_DEPTH {
             for w in [GC_LAUNCH_CNT, GC_LAUNCH_SENSE, GC_STREAM_CNT, GC_STREAM_SENSE, GC_EPOCH] {
-                assert!(seen.insert(half_word(h, w)));
+                assert!(seen.insert(slice_word(s, w)));
             }
         }
         seen.insert(GC_GROUP_CNT);
         seen.insert(GC_GROUP_SENSE);
-        assert_eq!(seen.len(), 12);
+        assert_eq!(seen.len(), 5 * MAX_PIPELINE_DEPTH + 2);
         assert!(seen.iter().all(|w| *w < GROUP_CTRL_SLOTS));
     }
 
     #[test]
     fn hash_covers_every_layout_dimension() {
         let s = spec();
-        let base = PoolControl::layout_hash(&s, 6 << 20);
+        let base = PoolControl::layout_hash(&s, 6 << 20, 2);
         let mut t = s.clone();
         t.nranks = 3;
-        assert_ne!(PoolControl::layout_hash(&t, 6 << 20), base);
+        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2), base);
         let mut t = s.clone();
         t.db_region_size = 64 * 256;
-        assert_ne!(PoolControl::layout_hash(&t, 6 << 20), base);
-        assert_ne!(PoolControl::layout_hash(&s, 12 << 20), base);
+        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2), base);
+        assert_ne!(PoolControl::layout_hash(&s, 12 << 20, 2), base);
+        // v5: the configured ring depth is a layout dimension.
+        for depth in [1usize, 3, 4, 8] {
+            assert_ne!(PoolControl::layout_hash(&s, 6 << 20, depth), base, "depth {depth}");
+        }
     }
 }

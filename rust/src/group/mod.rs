@@ -19,12 +19,13 @@
 //! [`ProcessGroup::all_gather`], [`ProcessGroup::broadcast`],
 //! [`ProcessGroup::reduce`], … — each returning a
 //! [`CollectiveFuture`] that may be held while the next collective is
-//! issued. Launches are **pipelined**: the group's doorbell window and
-//! device window are split into even/odd *epoch halves* and launch `N`
-//! runs on half `N % 2`, so launch `N+1`'s publication proceeds while
-//! launch `N`'s retrieval drains (pipeline depth 2 by default — the §5
-//! bandwidth-saturation argument). [`ProcessGroup::flush`] drains
-//! everything in flight.
+//! issued. Launches are **pipelined** over an N-deep epoch ring: the
+//! group's doorbell window and device window are carved into N *epoch
+//! slices* ([`Bootstrap::with_pipeline_depth`], default 2) and launch
+//! `seq` runs on slice `seq % N`, so up to N launches' publications and
+//! retrievals overlap on disjoint doorbells and devices (the §5
+//! bandwidth-saturation argument, deepened for small-message launch
+//! trains). [`ProcessGroup::flush`] drains everything in flight.
 //!
 //! - [`Bootstrap::ThreadLocal`] reproduces the in-process executor: one
 //!   [`ProcessGroup`] owns every rank; `collective_rank(r, ..)` (or the
@@ -32,12 +33,13 @@
 //!   launch spawns when the last member joins.
 //! - [`Bootstrap::Pool`] performs a real rendezvous through a control-plane
 //!   header carved out of the file-backed pool (magic/version/layout-hash
-//!   check, atomic rank-arrival counter, per-half epoch ring, and a
-//!   generation stamp so stale mappers fail fast — see [`control`]). Each
-//!   OS process owns exactly one rank; every launch executes that rank's
-//!   two op streams on a background thread against the shared mapping,
-//!   synchronized purely through in-pool doorbells and per-half
-//!   pool-resident barriers.
+//!   check — the hash covers the configured ring depth, so mixed-depth
+//!   mappers fail fast — atomic rank-arrival counter, per-slice epoch
+//!   ring, and a generation stamp so stale mappers fail fast — see
+//!   [`control`]). Each OS process owns exactly one rank; every launch
+//!   executes that rank's two op streams on a background thread against
+//!   the shared mapping, synchronized purely through in-pool doorbells and
+//!   per-slice pool-resident barriers.
 //! - [`ProcessGroup::split`] (ncclCommSplit-style) builds subgroups that
 //!   share the pool but own **disjoint doorbell-slot windows and disjoint
 //!   device windows**, carved proportionally to subgroup rank count, so
@@ -62,8 +64,10 @@ use crate::exec::Communicator;
 use crate::pool::{PoolLayout, ShmPool};
 use crate::tensor::{Dtype, Tensor};
 use crate::topology::ClusterSpec;
+use crate::util::weighted_shares;
 use anyhow::{bail, ensure, Context, Result};
 use control::{PoolControl, CTRL_SLOTS, GROUP_CTRL_SLOTS, MAX_POOL_WORLD};
+pub use control::MAX_PIPELINE_DEPTH;
 pub use pipeline::CollectiveFuture;
 use pipeline::{Forming, LaunchCell, LocalJob, PipeState, PoolJob};
 use std::ops::Range;
@@ -71,19 +75,25 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Launches a group keeps in flight by default: double-buffered over the
-/// two epoch halves.
+/// Epoch-ring depth a group is configured with by default: double-buffered
+/// over two epoch slices (the v4 behaviour). Deeper rings are opt-in via
+/// [`Bootstrap::with_pipeline_depth`].
 pub const DEFAULT_PIPELINE_DEPTH: usize = 2;
-/// The control plane rings two epoch halves, so at most two launches can
-/// be in flight per group.
-pub const MAX_PIPELINE_DEPTH: usize = 2;
 
 /// How a [`ProcessGroup`] comes into existence.
 #[derive(Debug, Clone)]
 pub enum Bootstrap {
     /// All ranks live in this process (thread-per-rank executor over an
     /// anonymous shared mapping) — the pre-v3 behaviour.
-    ThreadLocal { spec: ClusterSpec },
+    ThreadLocal {
+        spec: ClusterSpec,
+        /// Configured epoch-ring depth (in-flight launch bound); `None` =
+        /// best-effort default ([`DEFAULT_PIPELINE_DEPTH`]). When the
+        /// group's window cannot be carved that many ways, thread-local
+        /// groups fall back to serialized launches over the undivided
+        /// window (depth 1) either way.
+        depth: Option<usize>,
+    },
     /// Rendezvous through the control-plane header of a file-backed pool
     /// at `path`: every rank is its own OS process mapping the same file.
     Pool {
@@ -92,12 +102,21 @@ pub enum Bootstrap {
         /// How long construction may wait for the file / rank 0's header /
         /// the remaining ranks.
         join_timeout: Duration,
+        /// Configured epoch-ring depth. `None` (the default) is
+        /// best-effort: double-buffer when the window can be carved,
+        /// serialize otherwise — a pure function of the spec, so every
+        /// mapper resolves it identically (v4 parity). `Some(n)` is
+        /// strict: validated up front, and a depth the window cannot
+        /// support fails construction fast instead of surfacing a
+        /// planning error mid-train. The *resolved* depth is part of the
+        /// pool layout hash — every rank must configure compatibly.
+        depth: Option<usize>,
     },
 }
 
 impl Bootstrap {
     pub fn thread_local(spec: ClusterSpec) -> Self {
-        Bootstrap::ThreadLocal { spec }
+        Bootstrap::ThreadLocal { spec, depth: None }
     }
 
     /// Pool rendezvous at `path` (e.g. `/dev/shm/ccl_pool` on a host,
@@ -107,20 +126,39 @@ impl Bootstrap {
             path: path.into(),
             spec,
             join_timeout: Duration::from_secs(60),
+            depth: None,
         }
     }
 
     /// Adjust the pool-rendezvous join timeout (no effect on ThreadLocal).
     pub fn with_join_timeout(self, join_timeout: Duration) -> Self {
         match self {
-            Bootstrap::Pool { path, spec, .. } => Bootstrap::Pool { path, spec, join_timeout },
+            Bootstrap::Pool { path, spec, depth, .. } => {
+                Bootstrap::Pool { path, spec, join_timeout, depth }
+            }
             tl => tl,
+        }
+    }
+
+    /// Explicitly configure the epoch-ring depth `n` (`n >= 1`; 1
+    /// serializes over the undivided window). Pool bootstraps additionally
+    /// cap it at [`MAX_PIPELINE_DEPTH`] and reject an unsupported explicit
+    /// depth at construction; thread-local bootstraps fall back to
+    /// serialized.
+    pub fn with_pipeline_depth(self, n: usize) -> Self {
+        match self {
+            Bootstrap::ThreadLocal { spec, .. } => {
+                Bootstrap::ThreadLocal { spec, depth: Some(n) }
+            }
+            Bootstrap::Pool { path, spec, join_timeout, .. } => {
+                Bootstrap::Pool { path, spec, join_timeout, depth: Some(n) }
+            }
         }
     }
 
     fn spec(&self) -> &ClusterSpec {
         match self {
-            Bootstrap::ThreadLocal { spec } | Bootstrap::Pool { spec, .. } => spec,
+            Bootstrap::ThreadLocal { spec, .. } | Bootstrap::Pool { spec, .. } => spec,
         }
     }
 }
@@ -147,14 +185,20 @@ impl CommWorld {
         );
         ensure!(rank < world_size, "rank {rank} out of range ({world_size} ranks)");
         match bootstrap {
-            Bootstrap::ThreadLocal { spec } => Self::init_thread_local(spec, rank),
-            Bootstrap::Pool { path, spec, join_timeout } => {
-                Self::init_pool(&path, spec, rank, world_size, join_timeout)
+            Bootstrap::ThreadLocal { spec, depth } => Self::init_thread_local(spec, rank, depth),
+            Bootstrap::Pool { path, spec, join_timeout, depth } => {
+                Self::init_pool(&path, spec, rank, world_size, join_timeout, depth)
             }
         }
     }
 
-    fn init_thread_local(spec: ClusterSpec, rank: usize) -> Result<ProcessGroup> {
+    fn init_thread_local(
+        spec: ClusterSpec,
+        rank: usize,
+        depth: Option<usize>,
+    ) -> Result<ProcessGroup> {
+        let depth = depth.unwrap_or(DEFAULT_PIPELINE_DEPTH);
+        ensure!(depth >= 1, "pipeline depth must be at least 1, got {depth}");
         let full = PoolLayout::from_spec(&spec)?;
         let total = full.doorbell_slots();
         ensure!(
@@ -172,6 +216,7 @@ impl CommWorld {
                 members: (0..spec.nranks).collect(),
             }),
             rank,
+            depth,
         ))
     }
 
@@ -181,6 +226,7 @@ impl CommWorld {
         rank: usize,
         world: usize,
         join_timeout: Duration,
+        depth: Option<usize>,
     ) -> Result<ProcessGroup> {
         ensure!(
             world <= MAX_POOL_WORLD,
@@ -194,6 +240,44 @@ impl CommWorld {
              {} for the control plane (grow ClusterSpec::db_region_size)",
             CTRL_SLOTS + GROUP_CTRL_SLOTS
         );
+        let window = CTRL_SLOTS..total;
+        let layout = full.with_doorbell_window(
+            window.start + GROUP_CTRL_SLOTS,
+            window.end - window.start - GROUP_CTRL_SLOTS,
+        )?;
+        // Resolve the ring depth — BEFORE touching the pool file. An
+        // *explicit* depth the window cannot support fails fast here (pool
+        // groups never fall back per launch: the slice assignment must be
+        // a pure function of `seq` every member computes identically), so
+        // it never surfaces as a planning error mid-train. The
+        // unconfigured default stays best-effort, exactly like v4: carve
+        // the default ring when possible, serialize otherwise — a pure
+        // function of the spec, so every mapper resolves the same depth,
+        // and the resolved value is what the layout hash covers.
+        let depth = match depth {
+            Some(d) => {
+                ensure!(
+                    (1..=MAX_PIPELINE_DEPTH).contains(&d),
+                    "pool bootstrap pipeline depth must be 1..={MAX_PIPELINE_DEPTH} (the \
+                     group control prefix rings at most {MAX_PIPELINE_DEPTH} epoch \
+                     slices), got {d}"
+                );
+                if d > 1 {
+                    layout.pipeline_slices(d).with_context(|| {
+                        format!(
+                            "pool bootstrap cannot run at pipeline depth {d}: grow \
+                             ClusterSpec::db_region_size / ndevices, or lower \
+                             --pipeline-depth"
+                        )
+                    })?;
+                }
+                d
+            }
+            None if layout.pipeline_slices(DEFAULT_PIPELINE_DEPTH).is_ok() => {
+                DEFAULT_PIPELINE_DEPTH
+            }
+            None => 1,
+        };
         // Rank 0 creates (and owns) the backing file; everyone else
         // attaches — never creating or truncating — retrying while rank 0
         // is still standing the file up.
@@ -202,11 +286,13 @@ impl CommWorld {
         } else {
             attach_with_retry(path, full.pool_size(), join_timeout)?
         };
-        let ctrl = PoolControl::rendezvous(Arc::clone(&pool), &spec, rank, world, join_timeout)?;
-        let window = CTRL_SLOTS..total;
-        let layout = full.with_doorbell_window(
-            window.start + GROUP_CTRL_SLOTS,
-            window.end - window.start - GROUP_CTRL_SLOTS,
+        let ctrl = PoolControl::rendezvous(
+            Arc::clone(&pool),
+            &spec,
+            rank,
+            world,
+            depth,
+            join_timeout,
         )?;
         Ok(ProcessGroup::from_parts(
             GroupImpl::Pool(PoolGroup {
@@ -223,6 +309,7 @@ impl CommWorld {
                 op_lock: Mutex::new(()),
             }),
             rank,
+            depth,
         ))
     }
 }
@@ -252,10 +339,12 @@ fn attach_with_retry(path: &str, len: usize, timeout: Duration) -> Result<Arc<Sh
 pub struct ProcessGroup {
     inner: GroupImpl,
     bound_rank: usize,
-    /// Even/odd epoch-half views of the plan window (doorbells + devices),
-    /// when the window is large enough to halve. `None` disables
-    /// pipelining: every launch runs over the undivided window at depth 1.
-    halves: Option<[PoolLayout; 2]>,
+    /// The epoch ring: N disjoint slice views of the plan window
+    /// (doorbells + devices); launch `seq` runs on `ring[seq % N]`. A ring
+    /// of length 1 is the serialized case — every launch runs over the
+    /// undivided window.
+    ring: Vec<PoolLayout>,
+    /// In-flight launch bound (pacing), `1..=ring.len()`.
     depth: AtomicUsize,
     pipe: Mutex<PipeState>,
 }
@@ -297,17 +386,27 @@ struct PoolGroup {
 }
 
 impl ProcessGroup {
-    fn from_parts(inner: GroupImpl, bound_rank: usize) -> Self {
+    /// Assemble a group configured for an epoch ring of `ring_depth`
+    /// slices. When the window cannot be carved that many ways the ring
+    /// deterministically falls back to length 1 (serialized over the
+    /// undivided window) — acceptable for thread-local groups and for
+    /// subgroups (every pool member computes the identical fallback from
+    /// the identical windows); pool *world* construction validates the
+    /// depth up front and never reaches the fallback.
+    fn from_parts(inner: GroupImpl, bound_rank: usize, ring_depth: usize) -> Self {
         let base = match &inner {
             GroupImpl::Local(g) => *g.comm.layout(),
             GroupImpl::Pool(g) => g.layout,
         };
-        let halves = base.pipeline_halves().ok();
-        let depth = if halves.is_some() { DEFAULT_PIPELINE_DEPTH } else { 1 };
+        let ring = match base.pipeline_slices(ring_depth.max(1)) {
+            Ok(slices) => slices,
+            Err(_) => vec![base],
+        };
+        let depth = ring.len();
         Self {
             inner,
             bound_rank,
-            halves,
+            ring,
             depth: AtomicUsize::new(depth),
             pipe: Mutex::new(PipeState::new()),
         }
@@ -364,39 +463,36 @@ impl ProcessGroup {
         }
     }
 
-    /// The even/odd epoch-half views pipelined launches run on, when the
-    /// group's window is large enough to halve (launch `seq` uses half
-    /// `seq % 2`). `None` means launches are serialized over
-    /// [`ProcessGroup::layout`].
-    pub fn pipeline_layouts(&self) -> Option<&[PoolLayout; 2]> {
-        self.halves.as_ref()
+    /// The epoch-ring slice views pipelined launches run on (launch `seq`
+    /// uses `ring[seq % N]`). A single-element ring means launches are
+    /// serialized over the undivided [`ProcessGroup::layout`].
+    pub fn pipeline_ring(&self) -> &[PoolLayout] {
+        &self.ring
     }
 
-    /// Launches this group keeps in flight (1 = serialized, 2 = the
-    /// double-buffered default when the window could be halved).
+    /// Launches this group keeps in flight (the pacing bound; 1 =
+    /// serialized, up to the ring depth). Defaults to the configured ring
+    /// depth.
     pub fn pipeline_depth(&self) -> usize {
         self.depth.load(Ordering::Relaxed)
     }
 
-    /// Set the in-flight launch bound. Depth 2 requires the halved epoch
-    /// windows; depth 1 serializes (launches still alternate halves, so
-    /// results are bitwise identical across depths). Depth is local
-    /// pacing — members of one pool group may run different depths.
+    /// Set the in-flight launch bound (pacing) within the configured epoch
+    /// ring. Pacing never changes which slice a launch runs on — launch
+    /// `seq` always uses slice `seq % ring` — so results are bitwise
+    /// identical across pacing depths, and members of one pool group may
+    /// pace differently. The ring depth itself is fixed at bootstrap
+    /// ([`Bootstrap::with_pipeline_depth`]); ask for a deeper ring there.
     /// Drains in-flight launches first, so a depth change never overlaps
     /// launches planned under different in-flight assumptions.
     pub fn set_pipeline_depth(&self, depth: usize) -> Result<()> {
+        let ring = self.ring.len();
         ensure!(
-            (1..=MAX_PIPELINE_DEPTH).contains(&depth),
-            "pipeline depth must be 1..={MAX_PIPELINE_DEPTH} (the epoch ring has 2 halves), \
+            (1..=ring).contains(&depth),
+            "pipeline depth must be 1..={ring} (this group's epoch ring has {ring} \
+             slice(s); configure a deeper ring with Bootstrap::with_pipeline_depth), \
              got {depth}"
         );
-        if depth > 1 {
-            ensure!(
-                self.halves.is_some(),
-                "pipeline depth {depth} unavailable: the group's doorbell/device window is \
-                 too small to halve (need >= 2 plan doorbell slots and >= 2 devices)"
-            );
-        }
         let _ = self.drain_launches();
         self.depth.store(depth, Ordering::Relaxed);
         Ok(())
@@ -422,15 +518,24 @@ impl ProcessGroup {
         ps.seq = seq;
         if let GroupImpl::Pool(g) = &self.inner {
             // Make the physical epoch chain consistent with the seeded
-            // logical one: write each half's word to the value its previous
-            // (pre-seed) launch would have published, so waiters of the
-            // first seeded launch still observe a transition.
-            for half in 0..2usize {
-                let first = if seq % 2 == half as u64 { seq } else { seq.wrapping_add(1) };
-                let (prev, _) = control::epoch_pair(first);
+            // logical one: write each slice's word to a value distinct from
+            // what its first post-seed launch will publish, so waiters of
+            // that launch still observe a transition. The first launch per
+            // slice is found by scanning forward (not by modular
+            // arithmetic): near the u64 wrap a drifting ring visits slices
+            // unevenly, but 2×ring consecutive sequence numbers always
+            // cover every slice at least once.
+            let ring = self.ring.len() as u64;
+            for slice in 0..self.ring.len() {
+                let first = (0..2 * ring)
+                    .map(|k| seq.wrapping_add(k))
+                    .find(|s| (*s % ring) as usize == slice)
+                    .expect("2*ring consecutive seqs cover every slice");
+                let prev = control::epoch_word_for(first.wrapping_sub(ring));
+                debug_assert_ne!(prev, control::epoch_word_for(first));
                 let off = control::group_word_off(
                     g.window.start,
-                    control::half_word(half, control::GC_EPOCH),
+                    control::slice_word(slice, control::GC_EPOCH),
                 );
                 g.pool.atomic_u32(off)?.store(prev, Ordering::Release);
                 g.pool.flush(off, 4);
@@ -445,7 +550,7 @@ impl ProcessGroup {
     ///
     /// The communicator's own launch paths run over the group's *whole*
     /// window; do not run them concurrently with this group's pipelined
-    /// typed launches (which own the even/odd halves of the same window) —
+    /// typed launches (which own the epoch slices of the same window) —
     /// `flush()` first, the same discipline as parent-vs-subgroup windows.
     pub fn local_comm(&self) -> Result<&Communicator> {
         match &self.inner {
@@ -458,9 +563,9 @@ impl ProcessGroup {
     }
 
     /// The group's plan cache (hit/miss/eviction counters). Pipelined
-    /// launches plan each shape once per epoch half (the window is part of
-    /// the [`crate::collectives::PlanKey`]), so a steady-state loop costs
-    /// two misses per shape and hits thereafter.
+    /// launches plan each shape once per epoch slice (the window is part
+    /// of the [`crate::collectives::PlanKey`]), so a steady-state loop
+    /// costs `ring` misses per shape and hits thereafter.
     pub fn plan_cache(&self) -> &PlanCache {
         match &self.inner {
             GroupImpl::Local(g) => g.comm.plan_cache(),
@@ -501,10 +606,7 @@ impl ProcessGroup {
 
     /// The layout view launch `seq` runs on.
     fn launch_layout(&self, seq: u64) -> PoolLayout {
-        match &self.halves {
-            Some(h) => h[(seq % 2) as usize],
-            None => *self.layout(),
-        }
+        self.ring[(seq % self.ring.len() as u64) as usize]
     }
 
     // ---- typed nonblocking collectives (the v4 launch surface) ----------
@@ -662,19 +764,20 @@ impl ProcessGroup {
         let mut ps = self.pipe.lock().unwrap();
         if ps.forming.is_none() {
             // First member of the next launch: resolve the plan for the
-            // epoch half this launch will run on (`ps.seq` is its sequence
+            // epoch slice this launch will run on (`ps.seq` is its sequence
             // number — only the spawn advances it). A *serialized* local
-            // group (depth 1) falls back to the undivided window when the
-            // shape cannot be placed in a half — v3 capacity parity; pool
-            // groups never fall back, because their layout choice must be
-            // a pure function of `seq` that every member computes alike.
+            // group (pacing 1 over a multi-slice ring) falls back to the
+            // undivided window when the shape cannot be placed in a 1/N
+            // slice — v3 capacity parity; pool groups never fall back,
+            // because their layout choice must be a pure function of `seq`
+            // that every member computes alike.
             let seq = ps.seq;
             let mut layout = self.launch_layout(seq);
             let mut plan = g
                 .comm
                 .plan_cache()
                 .get_or_plan(g.comm.spec(), &layout, primitive, cfg, n_elems, dtype);
-            if plan.is_err() && self.halves.is_some() && self.pipeline_depth() == 1 {
+            if plan.is_err() && self.ring.len() > 1 && self.pipeline_depth() == 1 {
                 layout = *self.layout();
                 plan = g
                     .comm
@@ -682,7 +785,11 @@ impl ProcessGroup {
                     .get_or_plan(g.comm.spec(), &layout, primitive, cfg, n_elems, dtype);
             }
             let plan = plan.with_context(|| {
-                half_plan_hint(self.halves.is_some() && self.pipeline_depth() > 1, seq)
+                slice_plan_hint(
+                    self.ring.len() > 1 && self.pipeline_depth() > 1,
+                    seq,
+                    self.ring.len(),
+                )
             })?;
             ps.forming = Some(Forming {
                 primitive,
@@ -748,15 +855,14 @@ impl ProcessGroup {
         f.joined += 1;
         let cell = Arc::clone(&f.cell);
         if f.joined == nranks {
-            // Launch complete: spawn it against its epoch half. The gate
-            // (same-half predecessor at depth 2, immediate predecessor at
-            // depth 1) is awaited inside the spawned thread, so issuing
-            // never blocks.
+            // Launch complete: spawn it against its epoch slice. The gates
+            // (pacing predecessor + slice tenant) are awaited inside the
+            // spawned thread, so issuing never blocks.
             let f = ps.forming.take().unwrap();
             let seq = ps.seq;
             ps.seq = ps.seq.wrapping_add(1);
-            let gate = ps.gate_for(seq, self.pipeline_depth());
-            ps.track(seq, Arc::clone(&f.cell));
+            let gates = ps.gates_for(seq, self.ring.len(), self.pipeline_depth());
+            ps.track(seq, Arc::clone(&f.cell), self.ring.len());
             ps.reap_finished_threads();
             let handle = pipeline::spawn_local(LocalJob {
                 comm: Arc::clone(&g.comm),
@@ -765,7 +871,7 @@ impl ProcessGroup {
                 sends: f.sends.into_iter().map(Option::unwrap).collect(),
                 recvs: f.recvs.into_iter().map(Option::unwrap).collect(),
                 cell: f.cell,
-                gate,
+                gates,
             });
             ps.threads.push(handle);
         }
@@ -802,7 +908,7 @@ impl ProcessGroup {
         let plan = g
             .cache
             .get_or_plan(&g.spec, &layout, primitive, cfg, n_elems, dtype)
-            .with_context(|| half_plan_hint(self.halves.is_some(), seq))?;
+            .with_context(|| slice_plan_hint(self.ring.len() > 1, seq, self.ring.len()))?;
         ensure!(
             send.len() >= plan.send_elems,
             "rank {rank} send tensor too small: {} < {} elems",
@@ -817,14 +923,15 @@ impl ProcessGroup {
         );
         ps.seq = ps.seq.wrapping_add(1);
         let cell = LaunchCell::new(1);
-        let gate = ps.gate_for(seq, self.pipeline_depth());
-        ps.track(seq, Arc::clone(&cell));
+        let gates = ps.gates_for(seq, self.ring.len(), self.pipeline_depth());
+        ps.track(seq, Arc::clone(&cell), self.ring.len());
         ps.reap_finished_threads();
         let handle = pipeline::spawn_pool(PoolJob {
             pool: Arc::clone(&g.pool),
             generation: g.ctrl.generation,
             window_start: g.window.start,
             seq,
+            ring: self.ring.len(),
             layout,
             nmembers: g.members.len(),
             grank: g.grank,
@@ -834,7 +941,7 @@ impl ProcessGroup {
             send,
             recv,
             cell: Arc::clone(&cell),
-            gate,
+            gates,
         });
         ps.threads.push(handle);
         Ok(CollectiveFuture {
@@ -914,7 +1021,7 @@ impl ProcessGroup {
 
     /// Group-wide rendezvous: drains this process's in-flight launches,
     /// then (pool mode) meets every member at the whole-group barrier —
-    /// independent of either epoch half. Launch failures do not block the
+    /// independent of every epoch slice. Launch failures do not block the
     /// rendezvous (they were already reported by `wait()`/`flush()`);
     /// every member can always resynchronize here.
     pub fn barrier(&self) -> Result<()> {
@@ -998,6 +1105,10 @@ impl ProcessGroup {
             .expect("member list contains the caller");
         let (sub_spec, layout) = subgroup_view(&g.spec, &g.layout, &my)?;
         let members: Vec<usize> = my.members.iter().map(|r| g.members[*r]).collect();
+        // Subgroups inherit the parent's configured ring depth; if a
+        // subgroup window is too small to carve, every member computes the
+        // identical serialized fallback (from_parts is deterministic in
+        // the windows, which the split rounds just agreed on).
         Ok(ProcessGroup::from_parts(
             GroupImpl::Pool(PoolGroup {
                 pool: Arc::clone(&g.pool),
@@ -1013,6 +1124,7 @@ impl ProcessGroup {
                 op_lock: Mutex::new(()),
             }),
             sub_rank,
+            self.ring.len(),
         ))
     }
 
@@ -1061,6 +1173,7 @@ impl ProcessGroup {
                         members,
                     }),
                     0,
+                    self.ring.len(),
                 ))
             })
             .collect()
@@ -1107,7 +1220,7 @@ impl ProcessGroup {
 
 impl PoolGroup {
     /// The whole-group barrier (split rounds, `ProcessGroup::barrier`) —
-    /// its words are outside both epoch halves.
+    /// its words are outside every epoch slice.
     fn group_barrier(&self) -> Result<PoolBarrier<'_>> {
         Ok(PoolBarrier::new(
             &self.pool,
@@ -1148,15 +1261,16 @@ impl<'g> GroupPending<'g> {
 }
 
 /// Context line for a failed launch planning attempt: when the launch was
-/// bound for an epoch half, say so and name the remedies.
-fn half_plan_hint(on_half: bool, seq: u64) -> String {
-    if on_half {
+/// bound for an epoch slice, say so and name the remedies.
+fn slice_plan_hint(on_slice: bool, seq: u64, ring: usize) -> String {
+    if on_slice {
         format!(
-            "planning launch seq {seq} on epoch half {} — pipelined collectives must fit \
-             half the group's doorbell/device window; grow ClusterSpec::device_capacity or \
-             db_region_size (thread-local groups at depth 1 fall back to the undivided \
-             window automatically)",
-            seq % 2
+            "planning launch seq {seq} on epoch slice {} of {ring} — pipelined \
+             collectives must fit 1/{ring} of the group's doorbell/device window; grow \
+             ClusterSpec::device_capacity or db_region_size, or lower the pipeline depth \
+             (thread-local groups pacing at depth 1 fall back to the undivided window \
+             automatically)",
+            seq % ring as u64
         )
     } else {
         format!("planning launch seq {seq}")
@@ -1172,39 +1286,6 @@ struct SubgroupPart {
     db_window: Range<usize>,
     /// Absolute devices.
     dev_window: Range<usize>,
-}
-
-/// Divide `total` units among colors proportionally to `weights` (member
-/// counts): floor shares first, the remainder unit-by-unit to the largest
-/// fractional parts (ties broken by color order), then deficient shares
-/// raised to `min_each` by taking from the largest share. Deterministic —
-/// every member computes the identical partition.
-fn weighted_shares(total: usize, weights: &[usize], min_each: usize) -> Option<Vec<usize>> {
-    let n = weights.len();
-    let wsum: usize = weights.iter().sum();
-    if total < n * min_each || wsum == 0 {
-        return None;
-    }
-    let mut shares: Vec<usize> = weights.iter().map(|w| total * w / wsum).collect();
-    let mut rem = total - shares.iter().sum::<usize>();
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by_key(|&i| (std::cmp::Reverse(total * weights[i] % wsum), i));
-    for &i in &order {
-        if rem == 0 {
-            break;
-        }
-        shares[i] += 1;
-        rem -= 1;
-    }
-    // Raise any share below the floor by taking from the largest; total >=
-    // n * min_each guarantees progress and termination.
-    while let Some(i) = shares.iter().position(|s| *s < min_each) {
-        let j = (0..n).max_by_key(|&j| shares[j]).unwrap();
-        debug_assert!(shares[j] > min_each);
-        shares[j] -= 1;
-        shares[i] += 1;
-    }
-    Some(shares)
 }
 
 /// Deterministic split arithmetic shared by both bootstrap modes: distinct
@@ -1300,7 +1381,7 @@ mod tests {
     fn partition_is_deterministic_and_disjoint() {
         // 4 ranks; color 1 holds ranks {0, 2}, color 0 holds {1, 3}; keys
         // deliberately out of rank order. Equal member counts -> equal
-        // halves of the plan window (64+16=80 .. 1024) and devices.
+        // halves of the plan window (64+64=128 .. 1024) and devices.
         let entries = vec![(0, 1, 5), (1, 0, 9), (2, 1, 2), (3, 0, 1)];
         let subs = partition_subgroups(&(64..1024), 0..6, &entries).unwrap();
         assert_eq!(subs.len(), 2);
@@ -1308,8 +1389,8 @@ mod tests {
         assert_eq!(subs[0].members, vec![3, 1], "color 0: key 1 before key 9");
         assert_eq!(subs[1].members, vec![2, 0], "color 1: key 2 before key 5");
         // Windows are disjoint and inside the parent's plan window.
-        assert_eq!(subs[0].db_window, 80..552);
-        assert_eq!(subs[1].db_window, 552..1024);
+        assert_eq!(subs[0].db_window, 128..576);
+        assert_eq!(subs[1].db_window, 576..1024);
         assert_eq!(subs[0].dev_window, 0..3);
         assert_eq!(subs[1].dev_window, 3..6);
     }
@@ -1322,11 +1403,11 @@ mod tests {
         let subs = partition_subgroups(&(64..1024), 0..6, &entries).unwrap();
         assert_eq!(subs[0].members.len(), 4);
         assert_eq!(subs[1].members.len(), 2);
-        // Plan window: 944 slots -> floors 629 + 314; the remainder slot
+        // Plan window: 896 slots -> floors 597 + 298; the remainder slot
         // goes to color 1 (larger fractional part: .67 vs .33).
-        assert_eq!(subs[0].db_window.len() + subs[1].db_window.len(), 944);
-        assert_eq!(subs[0].db_window.len(), 629);
-        assert_eq!(subs[1].db_window.len(), 315);
+        assert_eq!(subs[0].db_window.len() + subs[1].db_window.len(), 896);
+        assert_eq!(subs[0].db_window.len(), 597);
+        assert_eq!(subs[1].db_window.len(), 299);
         // Devices 2:1.
         assert_eq!(subs[0].dev_window, 0..4);
         assert_eq!(subs[1].dev_window, 4..6);
@@ -1363,38 +1444,20 @@ mod tests {
     }
 
     #[test]
-    fn weighted_shares_are_exact_and_deterministic() {
-        assert_eq!(weighted_shares(10, &[1, 1], 1), Some(vec![5, 5]));
-        assert_eq!(weighted_shares(9, &[2, 1], 1), Some(vec![6, 3]));
-        // Remainder goes to the largest fractional part (color 0: 7*2/3 =
-        // 4.67 -> 5; color 1: 2.33 -> 2).
-        assert_eq!(weighted_shares(7, &[2, 1], 1), Some(vec![5, 2]));
-        // Floor-zero share raised to the minimum.
-        assert_eq!(weighted_shares(3, &[5, 1], 1), Some(vec![2, 1]));
-        // Infeasible.
-        assert_eq!(weighted_shares(1, &[1, 1], 1), None);
-        // Shares always sum to the total.
-        for total in [5usize, 17, 100] {
-            for w in [[1usize, 1, 1], [3, 2, 1], [10, 1, 1]] {
-                let s = weighted_shares(total, &w, 1).unwrap();
-                assert_eq!(s.iter().sum::<usize>(), total, "{total} {w:?}");
-                assert!(s.iter().all(|x| *x >= 1));
-            }
-        }
-    }
-
-    #[test]
     fn typed_launches_pipeline_and_match_serialized() {
         // The in-module version of the determinism contract (full matrix in
-        // tests/pipeline.rs): depth 2 and depth 1 produce identical bytes.
+        // tests/pipeline.rs): every ring depth produces identical bytes.
         let spec = ClusterSpec::new(3, 6, 4 << 20);
         let n = 3 * 256;
         let cfg = CclConfig::default_all();
         let run = |depth: usize| -> Vec<Vec<u8>> {
-            let pg = CommWorld::init(Bootstrap::thread_local(spec.clone()), 0, 3)
-                .unwrap()
-                .with_pipeline_depth(depth)
-                .unwrap();
+            let pg = CommWorld::init(
+                Bootstrap::thread_local(spec.clone()).with_pipeline_depth(depth),
+                0,
+                3,
+            )
+            .unwrap();
+            assert_eq!(pg.pipeline_ring().len(), depth);
             let mut out = Vec::new();
             for round in 0..4 {
                 let futs: Vec<CollectiveFuture<'_>> = (0..3)
@@ -1417,7 +1480,10 @@ mod tests {
             pg.flush().unwrap();
             out
         };
-        assert_eq!(run(2), run(1));
+        let baseline = run(1);
+        for depth in [2usize, 3] {
+            assert_eq!(run(depth), baseline, "ring depth {depth} vs serialized");
+        }
     }
 
     #[test]
@@ -1531,23 +1597,48 @@ mod tests {
     #[test]
     fn depth_validation_and_unpipelined_fallback() {
         let spec = ClusterSpec::new(2, 6, 4 << 20);
-        let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
-        assert!(pg.pipeline_layouts().is_some());
+        let pg = CommWorld::init(Bootstrap::thread_local(spec.clone()), 0, 2).unwrap();
+        // Default ring: two epoch slices, pacing 2.
+        assert_eq!(pg.pipeline_ring().len(), 2);
         assert!(pg.set_pipeline_depth(0).is_err());
+        // Pacing beyond the configured ring is rejected (the ring depth is
+        // a bootstrap-time choice).
         assert!(pg.set_pipeline_depth(3).is_err());
         pg.set_pipeline_depth(1).unwrap();
         assert_eq!(pg.pipeline_depth(), 1);
-        // A single-device world cannot halve its device window: pipelining
-        // falls back to serialized launches and depth 2 is rejected.
+        // A deeper ring is a bootstrap knob: 4 slices over 6 devices.
+        let pg4 = CommWorld::init(
+            Bootstrap::thread_local(spec).with_pipeline_depth(4),
+            0,
+            2,
+        )
+        .unwrap();
+        assert_eq!(pg4.pipeline_ring().len(), 4);
+        assert_eq!(pg4.pipeline_depth(), 4);
+        pg4.set_pipeline_depth(3).unwrap();
+        assert!(pg4.set_pipeline_depth(5).is_err());
+        // A single-device world cannot carve its device window: pipelining
+        // falls back to serialized launches and deeper pacing is rejected.
         let pg1 = CommWorld::init(
             Bootstrap::thread_local(ClusterSpec::new(2, 1, 4 << 20)),
             0,
             2,
         )
         .unwrap();
-        assert!(pg1.pipeline_layouts().is_none());
+        assert_eq!(pg1.pipeline_ring().len(), 1);
         assert_eq!(pg1.pipeline_depth(), 1);
         assert!(pg1.set_pipeline_depth(2).is_err());
+        // An explicitly requested unsupported depth also falls back to
+        // serialized for thread-local groups (pool bootstraps reject it
+        // instead — see pool_bootstrap_rejects_unsupported_depth_up_front).
+        let pg_deep = CommWorld::init(
+            Bootstrap::thread_local(ClusterSpec::new(2, 1, 4 << 20)).with_pipeline_depth(4),
+            0,
+            2,
+        )
+        .unwrap();
+        assert_eq!(pg_deep.pipeline_ring().len(), 1, "serialized fallback");
+        assert_eq!(pg_deep.pipeline_depth(), 1);
         let cfg = CclConfig::default_all();
         let futs: Vec<CollectiveFuture<'_>> = (0..2)
             .map(|r| {
@@ -1568,11 +1659,77 @@ mod tests {
     }
 
     #[test]
+    fn default_pool_bootstrap_serializes_when_the_window_cannot_carve() {
+        // v4 parity for callers that never configured a depth: a pool
+        // world whose window cannot be carved into the DEFAULT ring (one
+        // device here) resolves to serialized launches instead of failing
+        // construction — deterministically, so both mappers agree (the
+        // resolved depth feeds the layout hash). Only an EXPLICIT
+        // unsupported depth is rejected (next test).
+        let mut spec = ClusterSpec::new(2, 1, 1 << 20);
+        spec.db_region_size = 64 * 512;
+        let path = format!("/dev/shm/cxl_ccl_serfb_{}", std::process::id());
+        let _ = std::fs::remove_file(&path);
+        let n = 2 * 64;
+        let run_rank = |rank: usize| -> Result<Vec<f32>> {
+            let boot = Bootstrap::pool(&path, spec.clone())
+                .with_join_timeout(Duration::from_secs(20));
+            let pg = CommWorld::init(boot, rank, 2)?;
+            ensure!(pg.pipeline_ring().len() == 1, "expected the serialized fallback");
+            ensure!(pg.pipeline_depth() == 1);
+            let f = pg.all_gather(
+                &CclConfig::default_all(),
+                n,
+                Tensor::from_f32(&vec![rank as f32 + 1.0; n]),
+                Tensor::zeros(Dtype::F32, 2 * n),
+            )?;
+            let out = f.wait()?.0.to_f32()?;
+            pg.flush()?;
+            Ok(out)
+        };
+        let (a, b) = std::thread::scope(|s| {
+            let h0 = s.spawn(|| run_rank(0));
+            let h1 = s.spawn(|| run_rank(1));
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a, b);
+        assert!(a[..n].iter().all(|v| *v == 1.0) && a[n..].iter().all(|v| *v == 2.0));
+    }
+
+    #[test]
+    fn pool_bootstrap_rejects_unsupported_depth_up_front() {
+        // 6 devices cannot be carved into 8 epoch slices: construction must
+        // fail fast — with the grow-capacity/lower-depth hint and WITHOUT
+        // creating the pool file — instead of surfacing a planning error
+        // mid-train. Depths beyond the control prefix's ring are rejected
+        // by the depth bound itself.
+        let mut spec = ClusterSpec::new(2, 6, 1 << 20);
+        spec.db_region_size = 64 * 512;
+        let path = format!("/dev/shm/cxl_ccl_depthchk_{}", std::process::id());
+        let _ = std::fs::remove_file(&path);
+        let boot = Bootstrap::pool(&path, spec.clone()).with_pipeline_depth(8);
+        let err = CommWorld::init(boot, 0, 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("lower --pipeline-depth"), "{msg}");
+        assert!(
+            !std::path::Path::new(&path).exists(),
+            "an invalid depth must be rejected before the pool file is created"
+        );
+        let boot = Bootstrap::pool(&path, spec).with_pipeline_depth(MAX_PIPELINE_DEPTH + 1);
+        let err = CommWorld::init(boot, 0, 2).unwrap_err();
+        let want = format!("1..={MAX_PIPELINE_DEPTH}");
+        assert!(format!("{err:#}").contains(&want), "{err:#}");
+    }
+
+    #[test]
     fn pool_epoch_ring_survives_a_seeded_u64_wraparound() {
         // Both members seed the launch sequence just below u64::MAX and run
-        // enough launches to cross it: the per-half epoch words keep
-        // transitioning (wrapping truncation + inequality spin), so every
-        // launch completes and the results stay correct across the wrap.
+        // enough launches to cross it: the per-slice epoch words keep
+        // transitioning (wrapping truncation of the global sequence), so
+        // every launch completes and the results stay correct across the
+        // wrap. Ring depth 2 divides 2^64, so there is no slice drift here;
+        // the odd-depth drift case is pinned in tests/pipeline.rs.
         let mut spec = ClusterSpec::new(2, 6, 1 << 20);
         spec.db_region_size = 64 * 512;
         let path = format!("/dev/shm/cxl_ccl_wrap_{}", std::process::id());
@@ -1618,9 +1775,9 @@ mod tests {
     fn serialized_local_groups_fall_back_to_the_full_window() {
         // Capacity chosen so a 1 MiB-per-rank AllGather fits the whole
         // 6-device window (two 512 KiB blocks per rank) but NOT a 3-device
-        // epoch half (one 1 MiB block on top of the doorbell region
-        // overflows the 1 MiB device): depth 2 must fail with the
-        // half-window hint, depth 1 must fall back and succeed — v3
+        // epoch slice (one 1 MiB block on top of the doorbell region
+        // overflows the 1 MiB device): pacing 2 must fail with the
+        // slice-window hint, pacing 1 must fall back and succeed — v3
         // capacity parity for serialized groups.
         let mut spec = ClusterSpec::new(3, 6, 1 << 20);
         spec.db_region_size = 64 * 1024; // 1024 slots
@@ -1639,7 +1796,7 @@ mod tests {
         };
         assert_eq!(pg.pipeline_depth(), 2);
         let err = issue0(&pg).unwrap_err();
-        assert!(format!("{err:#}").contains("epoch half"), "{err:#}");
+        assert!(format!("{err:#}").contains("epoch slice"), "{err:#}");
         pg.set_pipeline_depth(1).unwrap();
         let futs: Vec<CollectiveFuture<'_>> = (0..3)
             .map(|r| {

@@ -1,16 +1,20 @@
 //! Cross-launch pipelining: the nonblocking machinery behind the typed
-//! v4 collective surface.
+//! collective surface.
 //!
 //! A [`super::ProcessGroup`] no longer executes a collective inside
 //! `wait()`: every launch runs on a dedicated background thread against one
-//! of the group's two *epoch-half* views (launch `seq` uses half
-//! `seq % 2`, which owns half the doorbell window and half the device
-//! window — see [`crate::pool::PoolLayout::pipeline_halves`]). Because the
-//! halves are disjoint, launch `N+1` publishes its data while launch `N`'s
+//! of the group's N *epoch-slice* views (launch `seq` uses slice
+//! `seq % N`, which owns 1/N of the doorbell window and of the device
+//! window — see [`crate::pool::PoolLayout::pipeline_slices`]). Because the
+//! slices are disjoint, launch `N+1` publishes its data while launch `N`'s
 //! retrieval is still draining — the §5 parallelization argument made into
-//! an API. The *depth gate* bounds the overlap: the thread for launch `seq`
-//! first waits for launch `seq - depth` (its same-half predecessor at the
-//! default depth 2) to finish, so a half is never reused while in flight.
+//! an API. Two *gates* bound the overlap, both found by walking the actual
+//! issue order (never `seq` arithmetic, which slice-index drift at the u64
+//! sequence wrap would fool): the **pacing gate** waits for the launch
+//! `depth` issues back, keeping at most `depth` launches in flight; the
+//! **tenant gate** waits for the most recent launch on the same slice, so
+//! a slice is never reused while its previous tenant is still draining
+//! (they coincide when `depth` equals the ring depth).
 //!
 //! [`CollectiveFuture`] is the handle: hold it while issuing the next
 //! collective, `wait()` it to collect this rank's result, or
@@ -22,7 +26,7 @@ use crate::exec::communicator::{run_stream, StreamCtx, StreamSync};
 use crate::exec::reduce_engine::ReduceEngine;
 use crate::exec::Communicator;
 use crate::group::control::{
-    epoch_pair, generation_offset, group_word_off, half_word, GC_EPOCH, GC_LAUNCH_CNT,
+    epoch_word_for, generation_offset, group_word_off, slice_word, GC_EPOCH, GC_LAUNCH_CNT,
     GC_LAUNCH_SENSE, GC_STREAM_CNT, GC_STREAM_SENSE,
 };
 use crate::group::ProcessGroup;
@@ -129,12 +133,24 @@ impl Drop for CompleteGuard {
 
 /// Per-group pipeline bookkeeping, behind the group's pipe mutex.
 pub(crate) struct PipeState {
-    /// Sequence number of the next launch (wrapping; half = `seq % 2`).
+    /// Sequence number of the next launch (wrapping; slice = `seq % ring`).
     pub(crate) seq: u64,
-    /// `(seq, cell)` of the most recent launches, oldest first. Only the
-    /// last two are retained: the depth gate of launch `s` needs at most
-    /// `s - 2`, and by the time `s` is issued everything older is done
-    /// (its successor's gate already waited on it).
+    /// `(seq, cell)` of the most recent launches, issue order, oldest
+    /// first. The last `2 × ring` are retained: the pacing gate of launch
+    /// `s` needs at most the launch `ring` issues back (pacing depth never
+    /// exceeds the ring depth), and the tenant gate's same-slice
+    /// predecessor is normally `ring` issues back — but under slice-index
+    /// drift at the u64 sequence wrap the gap stretches to
+    /// `ring + (2^64 mod ring)` issues (up to `2·ring − 1`; e.g. 4 at ring
+    /// 3, where slice-1 launches `u64::MAX − 2` and `1` are four issues
+    /// apart), so retaining only `ring` entries would evict the tenant
+    /// exactly where it matters most. NOTE the invariant is "an evicted
+    /// entry can never be *demanded* by a future gate" (no pacing gate
+    /// reaches past `ring` issues back, no tenant gate past `2·ring − 1`)
+    /// — NOT "an evicted entry is drained": issuing never blocks, so a
+    /// burst of issues can evict a launch that is still gated or running;
+    /// its cell stays alive through the `Arc`s held by its future, its
+    /// thread handle, and any gates already pointing at it.
     pub(crate) inflight: VecDeque<(u64, Arc<LaunchCell>)>,
     /// Join handles of every spawned launch thread since the last flush.
     /// `wait()` only observes the completion *cell*; `flush()` additionally
@@ -155,20 +171,42 @@ impl PipeState {
         }
     }
 
-    /// The gate cell for a launch at `seq` under `depth` (the launch that
-    /// must fully drain before this one may start), if it is still
-    /// tracked. Wrapping arithmetic: a seeded counter may sit anywhere.
-    pub(crate) fn gate_for(&self, seq: u64, depth: usize) -> Option<Arc<LaunchCell>> {
-        let want = seq.wrapping_sub(depth as u64);
-        self.inflight
+    /// The gates a launch at `seq` must await before running: the *pacing*
+    /// gate (the launch `depth` issues back — bounds in-flight overlap) and
+    /// the *tenant* gate (the most recent launch on the same epoch slice —
+    /// a slice is never reused while in flight). Both are found by walking
+    /// the tracked issue order rather than by `seq - k` arithmetic: at ring
+    /// depths that do not divide 2^64 the slice assignment `seq % ring`
+    /// drifts across the u64 sequence wrap (two consecutive launches can
+    /// land on one slice, and a same-slice gap can stretch to
+    /// `2·ring − 1` issues), and only the issue-order walk stays correct
+    /// there. Deduplicated; in steady state at `depth == ring` they
+    /// coincide (around the drift window the tenant can be older than the
+    /// pacing gate, which is why both are awaited).
+    pub(crate) fn gates_for(&self, seq: u64, ring: usize, depth: usize) -> Vec<Arc<LaunchCell>> {
+        let mut gates: Vec<Arc<LaunchCell>> = Vec::with_capacity(2);
+        if depth >= 1 && self.inflight.len() >= depth {
+            gates.push(Arc::clone(&self.inflight[self.inflight.len() - depth].1));
+        }
+        let slice = seq % ring as u64;
+        if let Some((_, tenant)) = self
+            .inflight
             .iter()
-            .find(|(s, _)| *s == want)
-            .map(|(_, c)| Arc::clone(c))
+            .rev()
+            .find(|(s, _)| *s % ring as u64 == slice)
+        {
+            if !gates.iter().any(|g| Arc::ptr_eq(g, tenant)) {
+                gates.push(Arc::clone(tenant));
+            }
+        }
+        gates
     }
 
-    pub(crate) fn track(&mut self, seq: u64, cell: Arc<LaunchCell>) {
+    pub(crate) fn track(&mut self, seq: u64, cell: Arc<LaunchCell>, ring: usize) {
         self.inflight.push_back((seq, cell));
-        while self.inflight.len() > 2 {
+        // 2 × ring, not ring: see the `inflight` field doc — the drift at
+        // the u64 wrap stretches same-slice gaps up to 2·ring − 1 issues.
+        while self.inflight.len() > 2 * ring {
             self.inflight.pop_front();
         }
     }
@@ -197,7 +235,7 @@ pub(crate) struct Forming {
     pub(crate) cfg: crate::collectives::CclConfig,
     pub(crate) n_elems: usize,
     pub(crate) dtype: Dtype,
-    /// The layout view `plan` was placed into (an epoch half, or the
+    /// The layout view `plan` was placed into (an epoch slice, or the
     /// undivided window after the serialized-depth capacity fallback);
     /// the spawned launch must run on exactly this view.
     pub(crate) layout: PoolLayout,
@@ -277,19 +315,20 @@ impl Drop for CollectiveFuture<'_> {
 /// Background execution of one thread-local (whole-group) launch.
 pub(crate) struct LocalJob {
     pub(crate) comm: Arc<Communicator>,
-    /// The epoch-half view this launch runs on.
+    /// The epoch-slice view this launch runs on.
     pub(crate) layout: PoolLayout,
     pub(crate) plan: ValidPlan,
     pub(crate) sends: Vec<Tensor>,
     pub(crate) recvs: Vec<Tensor>,
     pub(crate) cell: Arc<LaunchCell>,
-    pub(crate) gate: Option<Arc<LaunchCell>>,
+    /// Pacing + slice-tenant gates (see [`PipeState::gates_for`]).
+    pub(crate) gates: Vec<Arc<LaunchCell>>,
 }
 
 pub(crate) fn spawn_local(job: LocalJob) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         let guard = CompleteGuard(Arc::clone(&job.cell));
-        if let Some(gate) = &job.gate {
+        for gate in &job.gates {
             gate.wait_done();
         }
         let LocalJob { comm, layout, plan, sends, mut recvs, cell, .. } = job;
@@ -315,7 +354,10 @@ pub(crate) struct PoolJob {
     /// Absolute doorbell slot where the group's control prefix starts.
     pub(crate) window_start: usize,
     pub(crate) seq: u64,
-    /// The epoch-half view this launch runs on.
+    /// Configured epoch-ring depth (slice = `seq % ring`); identical on
+    /// every member — the layout hash pins it at rendezvous.
+    pub(crate) ring: usize,
+    /// The epoch-slice view this launch runs on.
     pub(crate) layout: PoolLayout,
     pub(crate) nmembers: usize,
     pub(crate) grank: usize,
@@ -325,13 +367,14 @@ pub(crate) struct PoolJob {
     pub(crate) send: Tensor,
     pub(crate) recv: Tensor,
     pub(crate) cell: Arc<LaunchCell>,
-    pub(crate) gate: Option<Arc<LaunchCell>>,
+    /// Pacing + slice-tenant gates (see [`PipeState::gates_for`]).
+    pub(crate) gates: Vec<Arc<LaunchCell>>,
 }
 
 pub(crate) fn spawn_pool(job: PoolJob) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         let guard = CompleteGuard(Arc::clone(&job.cell));
-        if let Some(gate) = &job.gate {
+        for gate in &job.gates {
             gate.wait_done();
         }
         let cell = Arc::clone(&job.cell);
@@ -343,12 +386,12 @@ pub(crate) fn spawn_pool(job: PoolJob) -> std::thread::JoinHandle<()> {
     })
 }
 
-/// Per-half pool barrier over the group-control words.
+/// Per-slice pool barrier over the group-control words.
 #[allow(clippy::too_many_arguments)]
-fn half_barrier<'a>(
+fn slice_barrier<'a>(
     pool: &'a ShmPool,
     window_start: usize,
-    half: usize,
+    slice: usize,
     cnt: usize,
     sense: usize,
     parties: usize,
@@ -357,33 +400,32 @@ fn half_barrier<'a>(
 ) -> Result<PoolBarrier<'a>> {
     Ok(PoolBarrier::new(
         pool,
-        group_word_off(window_start, half_word(half, cnt)),
-        group_word_off(window_start, half_word(half, sense)),
+        group_word_off(window_start, slice_word(slice, cnt)),
+        group_word_off(window_start, slice_word(slice, sense)),
         parties,
         policy,
     )?
     .with_guard(generation_offset(), generation))
 }
 
-/// Execute this rank of `job.plan` against the shared pool on epoch half
-/// `seq % 2`.
+/// Execute this rank of `job.plan` against the shared pool on epoch slice
+/// `seq % ring`.
 ///
-/// Launch protocol (per collective, all members, per half):
-/// 1. half launch barrier — every member's launch `seq` thread has arrived,
-///    which (via each member's depth gate) implies every member finished
-///    launch `seq - 2`, the previous tenant of this half;
-/// 2. group rank 0 resets the half's doorbell window and publishes the
-///    half's epoch word (wrapping u64 launch count, truncated — see
-///    [`epoch_pair`]); everyone else spins until the word moves **off the
-///    previous launch's value onto this launch's**, flushing the line
-///    every probe;
+/// Launch protocol (per collective, all members, per slice):
+/// 1. slice launch barrier — every member's launch `seq` thread has
+///    arrived, which (via each member's slice-tenant gate) implies every
+///    member finished the slice's previous tenant launch;
+/// 2. group rank 0 resets the slice's doorbell window and publishes the
+///    slice's epoch word (wrapping-truncated global launch sequence — see
+///    [`epoch_word_for`]); everyone else spins until the word moves onto
+///    this launch's value, flushing the line every probe;
 /// 3. each process runs its own rank's two op streams; doorbells (and, for
-///    barrier variants, the half's pool stream barrier) are the only
-///    cross-process synchronization. The other half runs launch `seq ± 1`
-///    concurrently — disjoint doorbells, disjoint devices.
+///    barrier variants, the slice's pool stream barrier) are the only
+///    cross-process synchronization. The other slices run neighbouring
+///    launches concurrently — disjoint doorbells, disjoint devices.
 fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
     let pool = Arc::clone(&job.pool);
-    let half = (job.seq % 2) as usize;
+    let slice = (job.seq % job.ring as u64) as usize;
     let gen_w = pool.atomic_u32(generation_offset())?;
     let check_gen = || -> Result<()> {
         let cur = gen_w.load(Ordering::Acquire);
@@ -397,10 +439,10 @@ fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
         Ok(())
     };
     check_gen()?;
-    half_barrier(
+    slice_barrier(
         &pool,
         job.window_start,
-        half,
+        slice,
         GC_LAUNCH_CNT,
         GC_LAUNCH_SENSE,
         job.nmembers,
@@ -409,8 +451,8 @@ fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
     )?
     .wait()?;
 
-    let (prev, next) = epoch_pair(job.seq);
-    let epoch_off = group_word_off(job.window_start, half_word(half, GC_EPOCH));
+    let next = epoch_word_for(job.seq);
+    let epoch_off = group_word_off(job.window_start, slice_word(slice, GC_EPOCH));
     let epoch_w = pool.atomic_u32(epoch_off)?;
     if job.grank == 0 {
         DoorbellSet::new(&pool, job.layout).reset_all()?;
@@ -428,8 +470,8 @@ fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
             check_gen()?;
             if start.elapsed() > job.policy.timeout {
                 bail!(
-                    "timed out waiting for group rank 0 to open epoch half {half} for \
-                     launch seq {} (epoch word {}, expected {next}, previous {prev})",
+                    "timed out waiting for group rank 0 to open epoch slice {slice} for \
+                     launch seq {} (epoch word {}, expected {next})",
                     job.seq,
                     epoch_w.load(Ordering::Acquire)
                 );
@@ -444,10 +486,10 @@ fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
         let mut view = job.recv.view_mut();
         view.as_bytes_mut()[..plan.recv_elems * esize].fill(0);
     }
-    let sb = half_barrier(
+    let sb = slice_barrier(
         &pool,
         job.window_start,
-        half,
+        slice,
         GC_STREAM_CNT,
         GC_STREAM_SENSE,
         2 * job.nmembers,
@@ -515,4 +557,44 @@ fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
     }
     let wall = start.elapsed();
     Ok((job.recv, wall))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The retention-bound pin behind the slice-tenant gate: under
+    /// slice-index drift at the u64 wrap, a same-slice gap stretches to
+    /// `ring + (2^64 mod ring)` issues (4 at ring 3 — slice 1 runs
+    /// `u64::MAX - 2` and then `1`), so the tracked window must hold more
+    /// than `ring` entries or the tenant is evicted exactly where slice
+    /// exclusivity matters most.
+    #[test]
+    fn tenant_gate_survives_slice_drift_at_the_wrap() {
+        for ring in [1usize, 2, 3, 4, 5, 8] {
+            let mut ps = PipeState::new();
+            let mut issued: Vec<(u64, Arc<LaunchCell>)> = Vec::new();
+            let mut seq = u64::MAX.wrapping_sub(2 * ring as u64);
+            for step in 0..6 * ring {
+                let slice = seq % ring as u64;
+                let gates = ps.gates_for(seq, ring, ring);
+                // Reference model: the most recent launch on this slice,
+                // over the FULL issue history.
+                if let Some((s, tenant)) =
+                    issued.iter().rev().find(|(s, _)| *s % ring as u64 == slice)
+                {
+                    assert!(
+                        gates.iter().any(|g| Arc::ptr_eq(g, tenant)),
+                        "ring {ring} step {step} (seq {seq}): tenant gate for \
+                         predecessor seq {s} was evicted from the tracked window"
+                    );
+                }
+                let cell = LaunchCell::new(1);
+                ps.track(seq, Arc::clone(&cell), ring);
+                issued.push((seq, cell));
+                seq = seq.wrapping_add(1);
+            }
+            assert!(ps.inflight.len() <= 2 * ring, "retention bound");
+        }
+    }
 }

@@ -15,7 +15,7 @@
 //!   sum-reduction as a Pallas kernel, exported standalone for the rust
 //!   reduce engine.
 //!
-//! ## Quick start (v4: typed, pipelined collectives)
+//! ## Quick start (v5: typed collectives over an N-deep epoch ring)
 //!
 //! Communicator construction is itself a collective: [`group::CommWorld::init`]
 //! takes a [`group::Bootstrap`] plus `(rank, world_size)` and returns a
@@ -29,10 +29,13 @@
 //! `all_gather`, `all_reduce`, `broadcast`, `gather`, `scatter`, `reduce`,
 //! `reduce_scatter`, `all_to_all` — each returning a
 //! [`group::CollectiveFuture`] that runs on a background thread and may be
-//! held while the next collective is issued. Launches are **double-buffered**
-//! over even/odd epoch halves of the group's doorbell + device windows
-//! (pipeline depth 2 by default), so launch `N+1` publishes while launch
-//! `N`'s retrieval drains:
+//! held while the next collective is issued. Launches are **pipelined over
+//! an N-deep epoch ring**: the group's doorbell + device windows are
+//! carved into N disjoint slices (`Bootstrap::with_pipeline_depth(N)`,
+//! default 2, pool mode up to `MAX_PIPELINE_DEPTH` = 8) and launch `seq`
+//! runs on slice `seq % N`, so up to N launches' publications and
+//! retrievals overlap — the knob that keeps the pool saturated once
+//! small-message launch trains stop hiding barrier latency at depth 2:
 //!
 //! ```no_run
 //! use cxl_ccl::prelude::*;
@@ -42,7 +45,7 @@
 //! let cfg = CclVariant::All.config(4);
 //! // Typed nonblocking launches: each rank issues its part; the launch
 //! // spawns once all four joined, and repeated launches of the same shape
-//! // reuse the cached ValidPlan of their epoch half.
+//! // reuse the cached ValidPlan of their epoch slice.
 //! let futures: Vec<CollectiveFuture<'_>> = (0..4)
 //!     .map(|r| {
 //!         pg.collective_rank(
@@ -93,19 +96,20 @@
 //! See `examples/quickstart.rs` for a complete runnable version, and the
 //! README for the two-terminal multi-process walkthrough.
 //!
-//! ## v3 → v4 migration
+//! ## v4 → v5 migration
 //!
-//! | v3 | v4 |
+//! The typed launch surface is unchanged; what generalized is the pipeline
+//! underneath it — two hardcoded epoch halves became an N-deep ring:
+//!
+//! | v4 | v5 |
 //! |----|----|
-//! | `pg.begin(primitive, cfg, n, send, recv)` → `GroupPending` | typed methods: `pg.all_gather(cfg, n, send, recv)`, `pg.broadcast(..)`, `pg.gather(..)`, `pg.scatter(..)`, `pg.reduce(..)`, … → [`group::CollectiveFuture`] (generic: `pg.collective(primitive, ..)`) |
-//! | `pg.begin_rank(r, ..)` | `pg.collective_rank(r, ..)` (`begin`/`begin_rank` remain as `#[deprecated]` shims) |
-//! | `GroupPending::wait()` | `CollectiveFuture::wait()` — same `(Tensor, Duration)`; futures may be **held across launches** |
-//! | wait-runs-the-launch (serialized, one epoch at a time) | launches run on background threads over even/odd epoch halves; `--pipeline-depth`/`set_pipeline_depth` bounds in-flight launches (default 2, halves permitting) |
-//! | — | `pg.flush()` — drain every launch in flight |
-//! | `split` carves equal windows per color | windows weighted by subgroup rank count |
-//! | `PlanKey` ignored the layout window | window is part of the key: pipelined steady state costs two misses per shape (one per half), hits thereafter |
-//! | pool control plane v3 (8-slot group prefix, one epoch word) | v4 (16-slot prefix: per-half launch/stream barriers + epoch-word ring + whole-group barrier); mixed-version mappers are rejected by the layout hash |
-//! | collectives sized for the whole device window | pipelined launches must fit **half** the device window (grow `device_capacity` if tight); serialized thread-local groups (depth 1) fall back to the undivided window automatically |
+//! | `PoolLayout::pipeline_halves()` (exactly 2) | `PoolLayout::pipeline_slices(n)` — N slice views carved with the weighted-shares fixup (`pipeline_halves` remains as the `n = 2` convenience) |
+//! | depth fixed at 1 or 2; `set_pipeline_depth(2)` the ceiling | ring depth configured at bootstrap: `Bootstrap::with_pipeline_depth(n)` (`n >= 1`; pool mode caps at `group::MAX_PIPELINE_DEPTH` = 8); `set_pipeline_depth` now paces `1..=ring` without changing slice assignment |
+//! | `pg.pipeline_layouts() -> Option<&[PoolLayout; 2]>` | `pg.pipeline_ring() -> &[PoolLayout]` (length 1 = serialized) |
+//! | pool control plane v4 (16-slot group prefix: 2 epoch halves) | v5 (64-slot prefix: up to 8 per-slice launch/stream barriers + epoch words, whole-group barrier); epoch words are the wrapping-truncated **global** launch sequence, which stays unambiguous under the slice-index drift odd depths exhibit at the u64 wrap |
+//! | layout hash: topology + pool + protocol | also covers the **configured ring depth** — mappers configured with different `--pipeline-depth`s fail fast at rendezvous instead of desyncing |
+//! | unsupported depth surfaced as a planning error mid-train | validated up front: pool bootstraps reject an *explicitly configured* unsupported depth at `CommWorld::init` with a grow-capacity/lower-depth hint (the unconfigured default still resolves best-effort to serialized, as in v4); thread-local bootstraps always fall back to serialized |
+//! | steady state: two plan-cache misses per shape | N misses per shape (one per slice), hits thereafter |
 
 pub mod baseline;
 pub mod bench_util;

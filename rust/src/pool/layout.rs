@@ -82,38 +82,63 @@ impl PoolLayout {
         Ok(self)
     }
 
-    /// Split this view into the two epoch-half views backing cross-launch
-    /// pipelining (v4): each half owns half of the doorbell window and half
-    /// of the device window, so a collective launched on half 0 shares no
-    /// doorbell slot and no device with one in flight on half 1. Launch
-    /// `seq` runs on half `seq % 2`.
+    /// Carve this view into `n` epoch-slice views backing cross-launch
+    /// pipelining (v5): slice `s` owns a contiguous share of the doorbell
+    /// window and of the device window, so a collective launched on slice
+    /// `s` shares no doorbell slot and no device with one in flight on any
+    /// other slice. Launch `seq` runs on slice `seq % n`.
     ///
-    /// Errors when the view is too small to halve (fewer than 2 doorbell
-    /// slots or fewer than 2 devices) — callers fall back to serialized
-    /// launches over the undivided view.
+    /// Shares are carved by the deterministic weighted-shares fixup
+    /// ([`crate::util::weighted_shares`] with equal weights): floors first,
+    /// the remainder to the lowest slice indices, every slice at least one
+    /// slot and one device. `n == 1` returns the undivided view.
+    ///
+    /// Errors when the view is too small to carve (fewer than `n` doorbell
+    /// slots or fewer than `n` devices) — thread-local callers fall back to
+    /// serialized launches over the undivided view, pool bootstraps reject
+    /// the depth up front.
+    pub fn pipeline_slices(&self, n: usize) -> Result<Vec<PoolLayout>> {
+        if n == 0 {
+            bail!("pipeline ring depth must be at least 1");
+        }
+        if n == 1 {
+            return Ok(vec![*self]);
+        }
+        let db_shares =
+            crate::util::weighted_shares(self.db_slot_span, &vec![1; n], 1).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "doorbell window of {} slot(s) cannot be carved into {n} epoch slices",
+                    self.db_slot_span
+                )
+            })?;
+        let dev_shares =
+            crate::util::weighted_shares(self.device_span, &vec![1; n], 1).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "device window of {} device(s) cannot be carved into {n} epoch slices \
+                     (each slice needs exclusive devices)",
+                    self.device_span
+                )
+            })?;
+        let mut out = Vec::with_capacity(n);
+        let mut db_cursor = self.db_slot_base;
+        let mut dev_cursor = self.device_base;
+        for s in 0..n {
+            out.push(
+                self.with_doorbell_window(db_cursor, db_shares[s])?
+                    .with_device_window(dev_cursor, dev_shares[s])?,
+            );
+            db_cursor += db_shares[s];
+            dev_cursor += dev_shares[s];
+        }
+        Ok(out)
+    }
+
+    /// The two-deep special case of [`PoolLayout::pipeline_slices`] — the
+    /// v4 even/odd epoch halves, kept for callers that only ever
+    /// double-buffer.
     pub fn pipeline_halves(&self) -> Result<[PoolLayout; 2]> {
-        if self.db_slot_span < 2 {
-            bail!(
-                "doorbell window of {} slot(s) cannot be halved for pipelining",
-                self.db_slot_span
-            );
-        }
-        if self.device_span < 2 {
-            bail!(
-                "device window of {} device(s) cannot be halved for pipelining \
-                 (each epoch half needs exclusive devices)",
-                self.device_span
-            );
-        }
-        let db_half = self.db_slot_span / 2;
-        let dev_half = self.device_span / 2;
-        let even = self
-            .with_doorbell_window(self.db_slot_base, db_half)?
-            .with_device_window(self.device_base, dev_half)?;
-        let odd = self
-            .with_doorbell_window(self.db_slot_base + db_half, self.db_slot_span - db_half)?
-            .with_device_window(self.device_base + dev_half, self.device_span - dev_half)?;
-        Ok([even, odd])
+        let s = self.pipeline_slices(2)?;
+        Ok([s[0], s[1]])
     }
 
     /// Number of doorbell slots this view owns.
@@ -283,20 +308,60 @@ mod tests {
         // Device windows: disjoint halves of the parent's.
         assert_eq!((even.device_base, even.device_span), (0, 3));
         assert_eq!((odd.device_base, odd.device_span), (3, 3));
-        // Halving a windowed (subgroup) view stays inside that view.
+        // Halving a windowed (subgroup) view stays inside that view; odd
+        // remainders land on the lowest slice (the weighted-shares rule).
         let sub = l
             .with_doorbell_window(16, 17)
             .unwrap()
             .with_device_window(1, 5)
             .unwrap();
         let [e2, o2] = sub.pipeline_halves().unwrap();
-        assert_eq!(e2.doorbell_slot_range(), 16..24);
-        assert_eq!(o2.doorbell_slot_range(), 24..33);
-        assert_eq!((e2.device_base, e2.device_span), (1, 2));
-        assert_eq!((o2.device_base, o2.device_span), (3, 3));
+        assert_eq!(e2.doorbell_slot_range(), 16..25);
+        assert_eq!(o2.doorbell_slot_range(), 25..33);
+        assert_eq!((e2.device_base, e2.device_span), (1, 3));
+        assert_eq!((o2.device_base, o2.device_span), (4, 2));
         // Too small to halve.
         assert!(l.with_device_window(0, 1).unwrap().pipeline_halves().is_err());
         assert!(l.with_doorbell_window(0, 1).unwrap().pipeline_halves().is_err());
+    }
+
+    #[test]
+    fn pipeline_slices_partition_both_windows_at_any_depth() {
+        let l = layout(); // 64 slots, 6 devices
+        for n in 1..=6usize {
+            let slices = l.pipeline_slices(n).unwrap();
+            assert_eq!(slices.len(), n);
+            // Doorbell windows: adjacent, disjoint, covering the parent.
+            let mut db_cursor = 0usize;
+            let mut dev_cursor = 0usize;
+            for s in &slices {
+                assert_eq!(s.db_slot_base, db_cursor, "n={n}");
+                assert!(s.db_slot_span >= 1);
+                assert_eq!(s.device_base, dev_cursor, "n={n}");
+                assert!(s.device_span >= 1);
+                db_cursor += s.db_slot_span;
+                dev_cursor += s.device_span;
+            }
+            assert_eq!(db_cursor, 64, "n={n}: doorbell slots covered");
+            assert_eq!(dev_cursor, 6, "n={n}: devices covered");
+        }
+        // n == 1 is the undivided view.
+        let one = l.pipeline_slices(1).unwrap();
+        assert_eq!(one[0].doorbell_slot_range(), l.doorbell_slot_range());
+        assert_eq!(one[0].device_span, l.device_span);
+        // The two-deep case matches pipeline_halves exactly.
+        let [e, o] = l.pipeline_halves().unwrap();
+        let two = l.pipeline_slices(2).unwrap();
+        assert_eq!(two[0].doorbell_slot_range(), e.doorbell_slot_range());
+        assert_eq!(two[1].doorbell_slot_range(), o.doorbell_slot_range());
+        // Remainders: 6 devices over 4 slices -> [2, 2, 1, 1].
+        let four = l.pipeline_slices(4).unwrap();
+        let spans: Vec<usize> = four.iter().map(|s| s.device_span).collect();
+        assert_eq!(spans, vec![2, 2, 1, 1]);
+        // Infeasible depths are rejected.
+        assert!(l.pipeline_slices(0).is_err());
+        assert!(l.pipeline_slices(7).is_err(), "only 6 devices");
+        assert!(l.with_doorbell_window(0, 3).unwrap().pipeline_slices(4).is_err());
     }
 
     #[test]

@@ -17,9 +17,11 @@
 //! Since v4 the two collectives are issued through the group's typed
 //! nonblocking surface in `comm_buckets` pieces: the shard (and the
 //! gradient) is split into buckets, each bucket is its own launch, and the
-//! group's depth-2 pipeline overlaps bucket `N+1`'s publication with
-//! bucket `N`'s retrieval — the flat-parameter analogue of overlapping the
-//! next layer's all-gather with the current reduce.
+//! group's pipeline (an epoch ring `pipeline_depth` slices deep, default
+//! 2) overlaps bucket `N+1`'s publication with bucket `N`'s retrieval —
+//! the flat-parameter analogue of overlapping the next layer's all-gather
+//! with the current reduce. Deeper rings keep more buckets in flight,
+//! which is what hides barrier latency once buckets get small.
 
 use crate::baseline::{collective_time, IbParams};
 use crate::collectives::{CclConfig, CclVariant, CollectiveBackend, Primitive};
@@ -47,9 +49,13 @@ pub struct TrainConfig {
     pub seed: u64,
     /// CXL devices in the pool (paper testbed: 6).
     pub ndevices: usize,
-    /// Buckets each collective is split into; with the group's depth-2
-    /// pipeline, adjacent bucket launches overlap. 1 = monolithic.
+    /// Buckets each collective is split into; with the group's pipeline,
+    /// adjacent bucket launches overlap. 1 = monolithic.
     pub comm_buckets: usize,
+    /// Epoch-ring depth the communicator world is bootstrapped with (how
+    /// many bucket launches can be in flight). Falls back to serialized
+    /// when the window cannot be carved that many ways.
+    pub pipeline_depth: usize,
 }
 
 impl Default for TrainConfig {
@@ -62,6 +68,7 @@ impl Default for TrainConfig {
             seed: 0,
             ndevices: 6,
             comm_buckets: 2,
+            pipeline_depth: 2,
         }
     }
 }
@@ -145,10 +152,12 @@ impl FsdpTrainer {
         // Pool sized so every placement fits: the ReduceScatter lays nranks
         // segment-blocks per rank device range (worst case ~padded×4 bytes
         // of reservation on one device), and pipelined bucket launches run
-        // on *half* device windows, doubling the per-device pressure.
-        let per_dev = (4 * padded * 4 + (4 << 20)).next_power_of_two();
+        // on 1/depth device windows, multiplying the per-device pressure.
+        let depth = cfg.pipeline_depth.max(1);
+        let per_dev = (2 * padded * 4 * depth.max(2) + (4 << 20)).next_power_of_two();
         let spec = ClusterSpec::new(nranks, cfg.ndevices, per_dev);
-        let world = CommWorld::init(Bootstrap::thread_local(spec), 0, nranks)?;
+        let boot = Bootstrap::thread_local(spec).with_pipeline_depth(depth);
+        let world = CommWorld::init(boot, 0, nranks)?;
 
         let shards: Vec<Vec<f32>> = (0..nranks)
             .map(|r| flat[r * shard_len..(r + 1) * shard_len].to_vec())

@@ -23,9 +23,46 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Divide `total` units among parties proportionally to `weights`: floor
+/// shares first, the remainder unit-by-unit to the largest fractional
+/// parts (ties broken by index order), then deficient shares raised to
+/// `min_each` by taking from the largest share. Returns `None` when
+/// `total < weights.len() * min_each` or all weights are zero.
+///
+/// Deterministic — every caller computes the identical partition, which is
+/// what lets independent pool mappers agree on `split()` windows and on
+/// the per-depth epoch-slice carving without exchanging a byte.
+pub fn weighted_shares(total: usize, weights: &[usize], min_each: usize) -> Option<Vec<usize>> {
+    let n = weights.len();
+    let wsum: usize = weights.iter().sum();
+    if total < n * min_each || wsum == 0 {
+        return None;
+    }
+    let mut shares: Vec<usize> = weights.iter().map(|w| total * w / wsum).collect();
+    let mut rem = total - shares.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(total * weights[i] % wsum), i));
+    for &i in &order {
+        if rem == 0 {
+            break;
+        }
+        shares[i] += 1;
+        rem -= 1;
+    }
+    // Raise any share below the floor by taking from the largest; total >=
+    // n * min_each guarantees progress and termination.
+    while let Some(i) = shares.iter().position(|s| *s < min_each) {
+        let j = (0..n).max_by_key(|&j| shares[j]).unwrap();
+        debug_assert!(shares[j] > min_each);
+        shares[j] -= 1;
+        shares[i] += 1;
+    }
+    Some(shares)
+}
+
 #[cfg(test)]
 mod tests {
-    use super::fnv1a64;
+    use super::{fnv1a64, weighted_shares, SplitMix64};
 
     #[test]
     fn fnv1a64_matches_reference_vectors() {
@@ -34,5 +71,63 @@ mod tests {
         assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
         assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
         assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+    }
+
+    #[test]
+    fn weighted_shares_are_exact_and_deterministic() {
+        assert_eq!(weighted_shares(10, &[1, 1], 1), Some(vec![5, 5]));
+        assert_eq!(weighted_shares(9, &[2, 1], 1), Some(vec![6, 3]));
+        // Remainder goes to the largest fractional part (party 0: 7*2/3 =
+        // 4.67 -> 5; party 1: 2.33 -> 2).
+        assert_eq!(weighted_shares(7, &[2, 1], 1), Some(vec![5, 2]));
+        // Floor-zero share raised to the minimum.
+        assert_eq!(weighted_shares(3, &[5, 1], 1), Some(vec![2, 1]));
+        // Equal weights tie on fractional part; the remainder lands on the
+        // lowest indices — the rule the epoch-slice carving relies on.
+        assert_eq!(weighted_shares(17, &[1, 1, 1], 1), Some(vec![6, 6, 5]));
+        // Infeasible.
+        assert_eq!(weighted_shares(1, &[1, 1], 1), None);
+        assert_eq!(weighted_shares(10, &[0, 0], 1), None);
+    }
+
+    /// The property sweep formerly run as a Python side-channel script, now
+    /// enforced by tier-1: ~20k SplitMix64-driven cases covering exact sum,
+    /// the per-share minimum, and determinism (two evaluations of the same
+    /// case agree element-wise).
+    #[test]
+    fn weighted_shares_property_sweep_20k() {
+        let mut rng = SplitMix64::new(0x5EED_5EED);
+        let mut feasible = 0usize;
+        for case in 0..20_000 {
+            let n = rng.range(1, 8);
+            let weights: Vec<usize> = (0..n).map(|_| rng.range(0, 12)).collect();
+            let min_each = rng.range(0, 4);
+            let total = rng.range(0, 4096);
+            let got = weighted_shares(total, &weights, min_each);
+            let wsum: usize = weights.iter().sum();
+            if total < n * min_each || wsum == 0 {
+                assert!(got.is_none(), "case {case}: expected infeasible");
+                continue;
+            }
+            feasible += 1;
+            let shares = got.unwrap_or_else(|| panic!("case {case}: expected shares"));
+            assert_eq!(shares.len(), n, "case {case}: one share per weight");
+            assert_eq!(
+                shares.iter().sum::<usize>(),
+                total,
+                "case {case}: shares must sum exactly to the total"
+            );
+            assert!(
+                shares.iter().all(|s| *s >= min_each),
+                "case {case}: every share >= {min_each}: {shares:?}"
+            );
+            // Determinism: same inputs, same partition.
+            assert_eq!(
+                weighted_shares(total, &weights, min_each),
+                Some(shares),
+                "case {case}: recomputation must agree"
+            );
+        }
+        assert!(feasible > 10_000, "sweep degenerated: only {feasible} feasible cases");
     }
 }

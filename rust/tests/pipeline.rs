@@ -1,14 +1,20 @@
-//! Pipelined-launch determinism (v4 acceptance): a depth-2 steady-state
-//! loop must be **bitwise identical** to the serialized depth-1 loop, for
-//! F32 and F16 payloads, on both bootstrap modes. Launch `seq` alternates
-//! epoch halves at either depth, so the plans are the same — the only
-//! difference is how many launches are in flight, which must never change
-//! a byte.
+//! Depth-parametric pipelined-launch conformance suite (v5 acceptance).
+//!
+//! A steady-state launch train over an N-deep epoch ring must be **bitwise
+//! identical** to the serialized depth-1 loop for every N — the ring
+//! changes where blocks land and how many launches are in flight, never a
+//! byte of any result. Pinned for N ∈ {2, 3, 4} (3 exercises the
+//! slice-index drift that even depths mask at the u64 wrap), for F32 and
+//! F16 payloads, on both bootstrap modes; plus the epoch-ring wraparound
+//! at depth 3, the capacity-boundary fallback (a shape that fits 1/2 of
+//! the window but not 1/N), and the dropped-future regression.
 
 use cxl_ccl::prelude::*;
+use std::collections::VecDeque;
 use std::time::Duration;
 
 const ROUNDS: usize = 6;
+const DEPTHS: [usize; 3] = [2, 3, 4];
 
 /// Per-round, per-rank payload with an irregular bit pattern (dtype-sized
 /// raw bytes, so the same generator serves F32 and F16).
@@ -44,16 +50,18 @@ fn payload(dtype: Dtype, rank: usize, round: usize, elems: usize) -> Tensor {
 }
 
 /// Run ROUNDS AllReduce launches + ROUNDS AllGather launches on a
-/// thread-local world at `depth`, returning every result's raw bytes in
-/// issue order.
+/// thread-local world bootstrapped with a `depth`-slice epoch ring,
+/// holding up to `depth` launches in flight, returning every result's raw
+/// bytes in issue order.
 fn thread_local_transcript(depth: usize, dtype: Dtype) -> Vec<Vec<u8>> {
     let nr = 3usize;
     let n = nr * 128;
-    let pg = CommWorld::init(Bootstrap::thread_local(ClusterSpec::new(nr, 6, 4 << 20)), 0, nr)
-        .unwrap()
-        .with_pipeline_depth(depth)
-        .unwrap();
+    let boot = Bootstrap::thread_local(ClusterSpec::new(nr, 6, 4 << 20))
+        .with_pipeline_depth(depth);
+    let pg = CommWorld::init(boot, 0, nr).unwrap();
+    assert_eq!(pg.pipeline_ring().len(), depth, "ring must be {depth} deep");
     let cfg = CclConfig::default_all();
+    let mut in_flight: VecDeque<Vec<CollectiveFuture<'_>>> = VecDeque::new();
     let mut out = Vec::new();
     for round in 0..ROUNDS {
         for (primitive, recv_elems) in
@@ -72,9 +80,17 @@ fn thread_local_transcript(depth: usize, dtype: Dtype) -> Vec<Vec<u8>> {
                     .unwrap()
                 })
                 .collect();
-            for f in futs {
-                out.push(f.wait().unwrap().0.into_bytes());
+            in_flight.push_back(futs);
+            while in_flight.len() > depth {
+                for f in in_flight.pop_front().unwrap() {
+                    out.push(f.wait().unwrap().0.into_bytes());
+                }
             }
+        }
+    }
+    while let Some(futs) = in_flight.pop_front() {
+        for f in futs {
+            out.push(f.wait().unwrap().0.into_bytes());
         }
     }
     pg.flush().unwrap();
@@ -82,7 +98,8 @@ fn thread_local_transcript(depth: usize, dtype: Dtype) -> Vec<Vec<u8>> {
 }
 
 /// The same transcript over a pool bootstrap (two thread-hosted mappers of
-/// one /dev/shm file), launches held two-deep when `depth == 2`.
+/// one /dev/shm file) rung `depth` deep, launches held `depth`-deep in
+/// flight.
 fn pool_transcript(depth: usize, dtype: Dtype, tag: &str) -> Vec<Vec<u8>> {
     let nr = 2usize;
     let n = nr * 128;
@@ -91,12 +108,13 @@ fn pool_transcript(depth: usize, dtype: Dtype, tag: &str) -> Vec<Vec<u8>> {
     let path = format!("/dev/shm/cxl_ccl_pipe_{}_{tag}_{}", depth, std::process::id());
     let _ = std::fs::remove_file(&path);
     let run_rank = |rank: usize| -> anyhow::Result<Vec<Vec<u8>>> {
-        let boot =
-            Bootstrap::pool(&path, spec.clone()).with_join_timeout(Duration::from_secs(20));
+        let boot = Bootstrap::pool(&path, spec.clone())
+            .with_join_timeout(Duration::from_secs(20))
+            .with_pipeline_depth(depth);
         let pg = CommWorld::init(boot, rank, nr)?;
-        pg.set_pipeline_depth(depth)?;
+        anyhow::ensure!(pg.pipeline_ring().len() == depth);
         let cfg = CclConfig::default_all();
-        let mut futs = std::collections::VecDeque::new();
+        let mut futs = VecDeque::new();
         let mut outs = Vec::new();
         for round in 0..ROUNDS {
             for (primitive, recv_elems) in
@@ -132,42 +150,342 @@ fn pool_transcript(depth: usize, dtype: Dtype, tag: &str) -> Vec<Vec<u8>> {
 }
 
 #[test]
-fn thread_local_depth2_is_bitwise_identical_to_depth1_f32() {
-    assert_eq!(thread_local_transcript(2, Dtype::F32), thread_local_transcript(1, Dtype::F32));
+fn thread_local_depth_n_is_bitwise_identical_to_depth1_f32() {
+    let baseline = thread_local_transcript(1, Dtype::F32);
+    for depth in DEPTHS {
+        assert_eq!(
+            thread_local_transcript(depth, Dtype::F32),
+            baseline,
+            "ring depth {depth} diverged from the serialized baseline (f32)"
+        );
+    }
 }
 
 #[test]
-fn thread_local_depth2_is_bitwise_identical_to_depth1_f16() {
-    assert_eq!(thread_local_transcript(2, Dtype::F16), thread_local_transcript(1, Dtype::F16));
+fn thread_local_depth_n_is_bitwise_identical_to_depth1_f16() {
+    let baseline = thread_local_transcript(1, Dtype::F16);
+    for depth in DEPTHS {
+        assert_eq!(
+            thread_local_transcript(depth, Dtype::F16),
+            baseline,
+            "ring depth {depth} diverged from the serialized baseline (f16)"
+        );
+    }
 }
 
 #[test]
-fn pool_depth2_is_bitwise_identical_to_depth1_f32() {
-    assert_eq!(
-        pool_transcript(2, Dtype::F32, "f32"),
-        pool_transcript(1, Dtype::F32, "f32")
-    );
+fn pool_depth_n_is_bitwise_identical_to_depth1_f32() {
+    let baseline = pool_transcript(1, Dtype::F32, "f32");
+    for depth in DEPTHS {
+        assert_eq!(
+            pool_transcript(depth, Dtype::F32, "f32"),
+            baseline,
+            "ring depth {depth} diverged from the serialized baseline (f32, pool)"
+        );
+    }
 }
 
 #[test]
-fn pool_depth2_is_bitwise_identical_to_depth1_f16() {
-    assert_eq!(
-        pool_transcript(2, Dtype::F16, "f16"),
-        pool_transcript(1, Dtype::F16, "f16")
-    );
+fn pool_depth_n_is_bitwise_identical_to_depth1_f16() {
+    let baseline = pool_transcript(1, Dtype::F16, "f16");
+    for depth in DEPTHS {
+        assert_eq!(
+            pool_transcript(depth, Dtype::F16, "f16"),
+            baseline,
+            "ring depth {depth} diverged from the serialized baseline (f16, pool)"
+        );
+    }
 }
 
 #[test]
-fn depth2_wall_clock_beats_k_times_single_launch() {
+fn pool_epoch_ring_wraparound_at_depth3() {
+    // Depth 3 does not divide 2^64, so `seq % 3` DRIFTS across the u64
+    // sequence wrap: u64::MAX and 0 are consecutive launches on the SAME
+    // slice (u64::MAX % 3 == 0), and slice 1 goes unvisited for a step.
+    // Even depths mask this (they divide 2^64 exactly). Both members seed
+    // just below the wrap and run a train straight through it: every
+    // launch must complete, every result must stay correct, and the two
+    // mappers must agree bitwise.
+    assert_eq!(u64::MAX % 3, 0, "the drift precondition this test relies on");
+    let nr = 2usize;
+    let mut spec = ClusterSpec::new(nr, 6, 1 << 20);
+    spec.db_region_size = 64 * 512;
+    let path = format!("/dev/shm/cxl_ccl_wrap3_{}", std::process::id());
+    let _ = std::fs::remove_file(&path);
+    let seed = u64::MAX - 4;
+    let n = nr * 64;
+    let rounds = 10u64;
+    let run_rank = |rank: usize| -> anyhow::Result<Vec<Vec<f32>>> {
+        let boot = Bootstrap::pool(&path, spec.clone())
+            .with_join_timeout(Duration::from_secs(20))
+            .with_pipeline_depth(3);
+        let pg = CommWorld::init(boot, rank, nr)?;
+        anyhow::ensure!(pg.pipeline_ring().len() == 3);
+        pg.seed_launch_seq(seed)?;
+        let cfg = CclConfig::default_all();
+        let mut futs = VecDeque::new();
+        let mut outs = Vec::new();
+        for round in 0..rounds {
+            futs.push_back(pg.all_reduce(
+                &cfg,
+                n,
+                Tensor::from_f32(&vec![(rank as f32 + 1.0) * (round as f32 + 1.0); n]),
+                Tensor::zeros(Dtype::F32, n),
+            )?);
+            while futs.len() > 3 {
+                outs.push(futs.pop_front().unwrap().wait()?.0.to_f32()?);
+            }
+        }
+        while let Some(f) = futs.pop_front() {
+            outs.push(f.wait()?.0.to_f32()?);
+        }
+        pg.flush()?;
+        Ok(outs)
+    };
+    let (a, b) = std::thread::scope(|s| {
+        let h0 = s.spawn(|| run_rank(0));
+        let h1 = s.spawn(|| run_rank(1));
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let (a, b) = (a.unwrap(), b.unwrap());
+    for round in 0..rounds as usize {
+        let want = 3.0 * (round as f32 + 1.0); // (1 + 2) * (round + 1)
+        assert!(
+            a[round].iter().all(|v| *v == want),
+            "round {round} crossed the drifting wrap incorrectly"
+        );
+        assert_eq!(a[round], b[round], "round {round} differs across ranks");
+    }
+}
+
+/// Shape chosen so a 448 KiB-per-rank AllGather fits a HALF window (ring
+/// 2: 3 devices per slice, one 448 KiB block on a rank's own device) and
+/// the 2-device quarter slices (two blocks share a device: 64 KiB
+/// doorbells + 2 x 448 KiB = 960 KiB <= 1 MiB), but NOT the 1-device
+/// quarter slices (three blocks: 64 KiB + 3 x 448 KiB > 1 MiB).
+const BOUNDARY_ELEMS: usize = 114_688; // 448 KiB of f32
+
+fn boundary_spec() -> ClusterSpec {
+    let mut spec = ClusterSpec::new(3, 6, 1 << 20);
+    spec.db_region_size = 64 * 1024; // 64 KiB
+    spec
+}
+
+fn boundary_train(pg: &ProcessGroup, launches: usize) -> Vec<Vec<u8>> {
+    let cfg = CclConfig::default_all();
+    let n = BOUNDARY_ELEMS;
+    let mut out = Vec::new();
+    for round in 0..launches {
+        let futs: Vec<CollectiveFuture<'_>> = (0..3)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    Tensor::from_f32(&vec![(r * 7 + round) as f32; n]),
+                    Tensor::zeros(Dtype::F32, 3 * n),
+                )
+                .unwrap()
+            })
+            .collect();
+        for f in futs {
+            out.push(f.wait().unwrap().0.into_bytes());
+        }
+    }
+    pg.flush().unwrap();
+    out
+}
+
+#[test]
+fn capacity_boundary_shape_fits_half_but_not_quarter() {
+    let cfg = CclConfig::default_all();
+    let n = BOUNDARY_ELEMS;
+    // Ring 2: every launch fits its half window — the whole train runs.
+    let pg2 = CommWorld::init(
+        Bootstrap::thread_local(boundary_spec()).with_pipeline_depth(2),
+        0,
+        3,
+    )
+    .unwrap();
+    assert_eq!(pg2.pipeline_ring().len(), 2);
+    let reference = boundary_train(&pg2, 4);
+    // Ring 4 at full pacing: launches 0 and 1 land on the 2-device slices
+    // and plan fine; launch 2's 1-device slice cannot hold the shape, and
+    // the error arrives with the slice hint (pool groups surface exactly
+    // this error; thread-local groups only fall back when serialized).
+    let pg4 = CommWorld::init(
+        Bootstrap::thread_local(boundary_spec()).with_pipeline_depth(4),
+        0,
+        3,
+    )
+    .unwrap();
+    assert_eq!(pg4.pipeline_ring().len(), 4);
+    let issue0 = |pg: &ProcessGroup| {
+        pg.collective_rank(
+            0,
+            Primitive::AllGather,
+            &cfg,
+            n,
+            Tensor::zeros(Dtype::F32, n),
+            Tensor::zeros(Dtype::F32, 3 * n),
+        )
+    };
+    for launch in 0..2 {
+        let futs: Vec<CollectiveFuture<'_>> = (0..3)
+            .map(|r| {
+                pg4.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    Tensor::zeros(Dtype::F32, n),
+                    Tensor::zeros(Dtype::F32, 3 * n),
+                )
+                .unwrap()
+            })
+            .collect();
+        for f in futs {
+            f.wait().unwrap_or_else(|e| panic!("launch {launch} should fit: {e:#}"));
+        }
+    }
+    let err = issue0(&pg4).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("epoch slice 2 of 4"), "{msg}");
+    assert!(msg.contains("1/4"), "{msg}");
+    pg4.flush().unwrap();
+    // Serialized pacing over the same 4-slice ring falls back to the
+    // undivided window for the slices that cannot hold the shape — and the
+    // whole train is bitwise identical to the ring-2 run.
+    pg4.set_pipeline_depth(1).unwrap();
+    // Launches 0 and 1 already consumed seqs 0 and 1; reseed for a clean
+    // 0..4 train matching the reference.
+    pg4.seed_launch_seq(0).unwrap();
+    assert_eq!(boundary_train(&pg4, 4), reference);
+}
+
+#[test]
+fn pool_groups_surface_the_slice_capacity_error_fast() {
+    // Pool mode never falls back (slice choice must be a pure function of
+    // seq): a shape that fits the full window but not a half must fail the
+    // issue fast — with the grow-capacity/lower-depth hint — on every
+    // member, without wedging either mapper.
+    let nr = 2usize;
+    let mut spec = ClusterSpec::new(nr, 6, 1 << 20);
+    spec.db_region_size = 64 * 512;
+    let n = 393_216; // 1.5 MiB of f32: full window yes, 3-device half no
+    let path = format!("/dev/shm/cxl_ccl_capfast_{}", std::process::id());
+    let _ = std::fs::remove_file(&path);
+    let run_rank = |rank: usize| -> anyhow::Result<String> {
+        let boot = Bootstrap::pool(&path, spec.clone())
+            .with_join_timeout(Duration::from_secs(20))
+            .with_pipeline_depth(2);
+        let pg = CommWorld::init(boot, rank, nr)?;
+        let cfg = CclConfig::default_all();
+        let err = pg
+            .all_gather(
+                &cfg,
+                n,
+                Tensor::zeros(Dtype::F32, n),
+                Tensor::zeros(Dtype::F32, nr * n),
+            )
+            .unwrap_err();
+        pg.barrier()?;
+        Ok(format!("{err:#}"))
+    };
+    let (a, b) = std::thread::scope(|s| {
+        let h0 = s.spawn(|| run_rank(0));
+        let h1 = s.spawn(|| run_rank(1));
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    for msg in [a.unwrap(), b.unwrap()] {
+        assert!(msg.contains("epoch slice"), "{msg}");
+        assert!(msg.contains("1/2"), "{msg}");
+    }
+}
+
+#[test]
+fn dropped_futures_neither_wedge_the_ring_nor_leak_threads() {
+    // Regression: a CollectiveFuture dropped WITHOUT wait() at depth > 1
+    // detaches from a launched collective. The ring must keep cycling, a
+    // later flush() must drain cleanly (joining every launch thread), and
+    // the next launch train must be bitwise correct.
+    let nr = 2usize;
+    let n = nr * 128;
+    let boot = Bootstrap::thread_local(ClusterSpec::new(nr, 6, 4 << 20))
+        .with_pipeline_depth(3);
+    let pg = CommWorld::init(boot, 0, nr).unwrap();
+    assert_eq!(pg.pipeline_ring().len(), 3);
+    let cfg = CclConfig::default_all();
+    let issue_round = |round: usize| {
+        (0..nr)
+            .map(|r| {
+                pg.collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    payload(Dtype::F32, r, round, n),
+                    Tensor::zeros(Dtype::F32, nr * n),
+                )
+                .unwrap()
+            })
+            .collect::<Vec<CollectiveFuture<'_>>>()
+    };
+    // Five launched rounds, every future dropped on the floor.
+    for round in 0..5 {
+        drop(issue_round(round));
+    }
+    // The ring is not wedged: flush drains results AND joins the launch
+    // threads (flush's contract), and reseeding proves the group is
+    // quiescent afterwards.
+    pg.flush().unwrap();
+    pg.seed_launch_seq(0).unwrap();
+    // The next train is bitwise-correct, matching a fresh serialized world
+    // fed the same payloads.
+    let after: Vec<Vec<u8>> = issue_round(7)
+        .into_iter()
+        .map(|f| f.wait().unwrap().0.into_bytes())
+        .collect();
+    pg.flush().unwrap();
+    let fresh = CommWorld::init(
+        Bootstrap::thread_local(ClusterSpec::new(nr, 6, 4 << 20)).with_pipeline_depth(1),
+        0,
+        nr,
+    )
+    .unwrap();
+    let want: Vec<Vec<u8>> = (0..nr)
+        .map(|r| {
+            fresh
+                .collective_rank(
+                    r,
+                    Primitive::AllGather,
+                    &cfg,
+                    n,
+                    payload(Dtype::F32, r, 7, n),
+                    Tensor::zeros(Dtype::F32, nr * n),
+                )
+                .unwrap()
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|f| f.wait().unwrap().0.into_bytes())
+        .collect();
+    assert_eq!(after, want);
+}
+
+#[test]
+fn deep_ring_wall_clock_beats_k_times_single_launch() {
     // The wall-clock side of the overlap acceptance (the deterministic
     // virtual-time pin lives in the SimFabric tests): K pipelined launches
-    // must finish faster than K times the measured single-launch time.
-    // Generous margin — CI machines are noisy; the virtual-time test is
-    // the strict one.
+    // at ring depth 3 must finish faster than K times the measured
+    // single-launch time. Generous margin — CI machines are noisy; the
+    // virtual-time test is the strict one.
     let nr = 2usize;
     let n = 512 << 10; // 2 MiB per rank, big enough to dwarf thread spawn
-    let pg = CommWorld::init(Bootstrap::thread_local(ClusterSpec::new(nr, 6, 32 << 20)), 0, nr)
-        .unwrap();
+    let boot = Bootstrap::thread_local(ClusterSpec::new(nr, 6, 64 << 20))
+        .with_pipeline_depth(3);
+    let pg = CommWorld::init(boot, 0, nr).unwrap();
     let cfg = CclConfig::default_all();
     let issue_all = |round: usize| {
         (0..nr)
@@ -184,8 +502,8 @@ fn depth2_wall_clock_beats_k_times_single_launch() {
             })
             .collect::<Vec<CollectiveFuture<'_>>>()
     };
-    // Warm both halves' plans + threads.
-    for round in 0..2 {
+    // Warm every slice's plans + threads.
+    for round in 0..3 {
         for f in issue_all(round) {
             f.wait().unwrap();
         }

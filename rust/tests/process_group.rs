@@ -14,11 +14,14 @@ fn pool_path(tag: &str) -> String {
     format!("/dev/shm/cxl_ccl_pg_{}_{}", tag, std::process::id())
 }
 
-/// Small pool: 512 doorbell slots cover the 64-slot control plane plus
-/// plenty of plan doorbells (and their even/odd halves).
+/// Small pool: 1024 doorbell slots cover the 64-slot control plane and the
+/// 64-slot group control prefix plus plenty of plan doorbells (and their
+/// epoch slices — the weighted split's 4-rank subgroup still needs
+/// `4 x max(nranks, nd) x chunks` slots per half after losing its own
+/// 64-slot prefix).
 fn small_spec(nranks: usize) -> ClusterSpec {
     let mut s = ClusterSpec::new(nranks, 6, 1 << 20);
-    s.db_region_size = 64 * 512;
+    s.db_region_size = 64 * 1024;
     s
 }
 
@@ -186,14 +189,15 @@ fn split_subgroups_are_isolated_and_launch_concurrently() {
     );
     // Every doorbell the subgroup plans actually touch stays inside its
     // own window — checked against the emitted op streams, on the
-    // undivided view and on both epoch halves.
+    // undivided view and on every epoch slice of the inherited ring.
     let cfg = CclConfig::default_all();
     let n = 2 * 512;
     for sg in &subs {
         let win = sg.doorbell_slot_range();
         let mut layouts = vec![*sg.layout()];
-        let halves = sg.pipeline_layouts().expect("subgroup windows are halvable");
-        layouts.extend(halves.iter().copied());
+        let ring = sg.pipeline_ring();
+        assert_eq!(ring.len(), 2, "subgroups inherit the parent's ring depth");
+        layouts.extend(ring.iter().copied());
         let mut rang = 0usize;
         for layout in &layouts {
             let plan = cxl_ccl::collectives::plan_collective_dtype(

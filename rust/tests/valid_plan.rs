@@ -67,9 +67,10 @@ fn steady_state_launches_never_revalidate() {
         "steady-state launches must not call CollectivePlan::validate"
     );
 
-    // Steady-state loop 4: the v4 typed future surface. The group plans
-    // each shape once per epoch half (two sealing validations, paid in the
-    // warm-up round); every pipelined launch after that is validation-free.
+    // Steady-state loop 4: the typed future surface. The group plans each
+    // shape once per epoch slice (default ring depth 2 -> two sealing
+    // validations, paid in the warm-up rounds); every pipelined launch
+    // after that is validation-free.
     let pg = CommWorld::init(Bootstrap::thread_local(spec.clone()), 0, 3).unwrap();
     let cfg2 = CclConfig::default_all();
     let issue_round = |pg: &ProcessGroup| {
@@ -97,7 +98,7 @@ fn steady_state_launches_never_revalidate() {
     assert_eq!(
         validate_calls(),
         before_warm + 2,
-        "one sealing validation per epoch half"
+        "one sealing validation per epoch slice of the default 2-deep ring"
     );
     let before_futures = validate_calls();
     for _ in 0..4 {

@@ -11,7 +11,7 @@
 
 use cxl_ccl::baseline::{collective_time, IbParams};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{run_with_scratch, CclConfig, Primitive};
+use cxl_ccl::collectives::{run_with_scratch, CclVariant, Primitive};
 use cxl_ccl::exec::{Communicator, PendingOp};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     let d_model = arg("--dmodel", 64);
     let spec = ClusterSpec::new(nranks, 6, 64 << 20);
     let comm = Communicator::shm(&spec)?;
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
 
     // Capacity-factor routing: each rank sends tokens_per_rank/nranks
     // tokens to every expert (the balanced MoE dispatch the paper's

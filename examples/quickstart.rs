@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             v
         })
         .collect();
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let mut recvs = vec![vec![0.0f32; n]; spec.nranks];
     let wall = {
         let send_views = views_f32(&sends);

@@ -6,12 +6,12 @@
 //! cost ratio).
 //!
 //! Run: `cargo run --release --example train_fsdp -- [--preset tiny|e2e]
-//!      [--steps N] [--variant all|aggregate|naive] [--chunks K]`
+//!      [--steps N] [--variant auto|all|aggregate|naive] [--chunks K]`
 //!
 //! The run recorded in EXPERIMENTS.md used `--preset e2e --steps 120` (a
 //! 10.8M-parameter model; DESIGN.md documents the scale substitution).
 
-use cxl_ccl::collectives::CclVariant;
+use cxl_ccl::config::parse_ccl;
 use cxl_ccl::cost;
 use cxl_ccl::train::{FsdpTrainer, TrainConfig};
 use cxl_ccl::util::size::fmt_time;
@@ -29,16 +29,17 @@ fn main() -> anyhow::Result<()> {
     let cfg = TrainConfig {
         preset: arg("--preset", "tiny"),
         steps: arg("--steps", "40").parse()?,
-        variant: CclVariant::parse(&arg("--variant", "all"))?,
-        chunks: arg("--chunks", "8").parse()?,
+        ccl: parse_ccl(Some(&arg("--variant", "auto")), arg("--chunks", "8").parse()?)?,
         seed: arg("--seed", "0").parse()?,
         ndevices: arg("--devices", "6").parse()?,
         comm_buckets: arg("--buckets", "2").parse()?,
         pipeline_depth: arg("--pipeline-depth", "2").parse()?,
     };
     println!(
-        "FSDP case study: preset={} steps={} variant={:?} chunks={}",
-        cfg.preset, cfg.steps, cfg.variant, cfg.chunks
+        "FSDP case study: preset={} steps={} ccl={}",
+        cfg.preset,
+        cfg.steps,
+        cfg.ccl.describe()
     );
 
     // The trainer needs the PJRT runtime (AOT artifacts + `pjrt` wiring);

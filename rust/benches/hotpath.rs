@@ -7,7 +7,7 @@
 
 use cxl_ccl::bench_util::{banner, measure, Table};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclConfig, CclVariant, CollectiveBackend, PlanCache, Primitive};
+use cxl_ccl::collectives::{CclVariant, CollectiveBackend, PlanCache, Primitive};
 use cxl_ccl::doorbell::{DoorbellSet, WaitPolicy};
 use cxl_ccl::exec::{Communicator, ReduceEngine, ScalarReduceEngine};
 use cxl_ccl::pool::{PoolLayout, ShmPool};
@@ -83,13 +83,13 @@ fn main() {
     let playout = PoolLayout::from_spec(&spec).unwrap();
     for p in [Primitive::AllGather, Primitive::AllToAll] {
         let s = measure(10, 200, || {
-            let _ = plan_collective(p, &spec, &playout, &CclConfig::default_all(), 3 << 20)
+            let _ = plan_collective(p, &spec, &playout, &CclVariant::All.config(8), 3 << 20)
                 .unwrap();
         });
         let cache = PlanCache::new();
         let c = measure(10, 200, || {
             let _ = cache
-                .get_or_plan(&spec, &playout, p, &CclConfig::default_all(), 3 << 20, Dtype::F32)
+                .get_or_plan(&spec, &playout, p, &CclVariant::All.config(8), 3 << 20, Dtype::F32)
                 .unwrap();
         });
         println!(

@@ -10,7 +10,7 @@
 
 use cxl_ccl::bench_util::{banner, write_bench_json, Table};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclConfig, CollectivePlan, Primitive, ValidPlan};
+use cxl_ccl::collectives::{CclConfig, CclVariant, CollectivePlan, Primitive, ValidPlan};
 use cxl_ccl::group::{Bootstrap, CollectiveFuture, CommWorld};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
@@ -65,7 +65,7 @@ fn real_makespan(spec: &ClusterSpec, n: usize, k: usize, depth: usize) -> anyhow
         "bench world cannot ring {depth} deep (got {})",
         pg.pipeline_ring().len()
     );
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let sends: Vec<Tensor> = (0..nr).map(|r| Tensor::from_f32(&vec![r as f32; n])).collect();
     // Warm every slice's plan cache entry so the measured loop never plans.
     for _ in 0..depth {
@@ -116,7 +116,7 @@ fn main() -> anyhow::Result<()> {
         Primitive::AllGather,
         &spec,
         &layout,
-        &CclConfig::default_all(),
+        &CclVariant::All.config(8),
         n,
     )?;
     let base_refs: Vec<&CollectivePlan> = (0..k).map(|_| &*base_plan).collect();
@@ -133,7 +133,7 @@ fn main() -> anyhow::Result<()> {
                     Primitive::AllGather,
                     &spec,
                     &slices[i % depth],
-                    &CclConfig::default_all(),
+                    &CclVariant::All.config(8),
                     n,
                 )
             })

@@ -1,0 +1,160 @@
+//! **Tuned vs fixed** — the autotuner's acceptance bench: for every
+//! primitive × message size × ring depth cell, resolve the `auto` choice
+//! through [`tune_decision`] and compare its sim-predicted per-launch time
+//! against every fixed (variant, chunks) candidate swept through the same
+//! cost model.
+//!
+//! Two invariants are asserted per cell (CI runs this as a smoke gate):
+//!
+//! 1. the auto choice is never worse than the **worst** fixed candidate;
+//! 2. the auto choice is within 5% of the **best** fixed candidate
+//!    (argmin by construction, so the margin catches cost-model drift
+//!    between the sweep and this harness).
+//!
+//! Run: `cargo bench --bench tuner`
+//! Env: `TUNER_MAX_MB` (default 64) caps the size sweep; `BENCH_JSON=1`
+//! additionally writes machine-readable `BENCH_tuner.json` (per-cell
+//! choice + auto/best/worst predicted latency) for the CI perf trajectory.
+
+use cxl_ccl::bench_util::{banner, write_bench_json, Table};
+use cxl_ccl::collectives::tuner::{predict_launch_secs, tune_decision, CHUNK_SWEEP};
+use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::pool::PoolLayout;
+use cxl_ccl::topology::ClusterSpec;
+use cxl_ccl::tensor::Dtype;
+use cxl_ccl::util::size::{fmt_bytes, fmt_time};
+
+/// One measured cell for the JSON artifact.
+struct JsonRow {
+    primitive: Primitive,
+    size_bytes: usize,
+    depth: usize,
+    choice: String,
+    auto_ns: f64,
+    best_fixed_ns: f64,
+    worst_fixed_ns: f64,
+}
+
+fn write_json(nranks: usize, rows: &[JsonRow]) {
+    let rendered: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"primitive\": \"{}\", \"size_bytes\": {}, \"depth\": {}, \
+                 \"choice\": \"{}\", \"auto_ns\": {:.1}, \"best_fixed_ns\": {:.1}, \
+                 \"worst_fixed_ns\": {:.1}}}",
+                r.primitive,
+                r.size_bytes,
+                r.depth,
+                r.choice,
+                r.auto_ns,
+                r.best_fixed_ns,
+                r.worst_fixed_ns
+            )
+        })
+        .collect();
+    let meta = [("nranks", nranks.to_string())];
+    match write_bench_json("BENCH_tuner.json", "tuner", &meta, &rendered) {
+        Ok(()) => println!("\nwrote BENCH_tuner.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("\nfailed to write BENCH_tuner.json: {e}"),
+    }
+}
+
+fn main() {
+    let max_mb: usize = std::env::var("TUNER_MAX_MB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let emit_json = std::env::var("BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    let nranks = 3;
+    let sizes_mb: Vec<usize> = [1, 4, 16, 64].into_iter().filter(|m| *m <= max_mb).collect();
+    let depths = [1usize, 2];
+
+    banner("tuned vs fixed: auto resolution against the full fixed sweep (3 ranks)");
+    println!("(both sides share the virtual-time cost model; auto must be argmin over it)");
+
+    let mut json_rows: Vec<JsonRow> = Vec::new();
+    let mut cells = 0usize;
+    for prim in Primitive::ALL {
+        banner(&format!("tuner panel: {prim}"));
+        let t = Table::new(&[10, 7, 14, 12, 12, 12, 10]);
+        t.header(&["size", "depth", "auto choice", "auto", "best fixed", "worst fixed", "margin"]);
+        for &mb in &sizes_mb {
+            let msg_bytes = mb << 20;
+            let n_elems = (msg_bytes / 4 / nranks) * nranks;
+            for depth in depths {
+                // Same capacity growth as the pipelined run path: a
+                // depth-N ring places each launch on a 1/N device window.
+                let dev_cap =
+                    (depth * nranks * msg_bytes + (8 << 20)).next_power_of_two();
+                let spec = ClusterSpec::new(nranks, 6, dev_cap);
+                let layout = PoolLayout::from_spec(&spec).expect("layout");
+                let ring = if depth > 1 {
+                    layout.pipeline_slices(depth).expect("ring")
+                } else {
+                    Vec::new()
+                };
+                let d = tune_decision(&spec, &layout, &ring, prim, 0, n_elems, Dtype::F32)
+                    .expect("tune");
+                let (mut best, mut worst) = (f64::INFINITY, 0.0f64);
+                for v in CclVariant::ALL {
+                    let chunk_candidates: &[usize] = match v {
+                        CclVariant::All => &CHUNK_SWEEP,
+                        CclVariant::Aggregate | CclVariant::Naive => &CHUNK_SWEEP[..1],
+                    };
+                    for &chunks in chunk_candidates {
+                        let cfg = v.config(chunks);
+                        if let Ok(secs) = predict_launch_secs(
+                            &spec, &layout, &ring, prim, &cfg, n_elems, Dtype::F32,
+                        ) {
+                            best = best.min(secs);
+                            worst = worst.max(secs);
+                        }
+                    }
+                }
+                assert!(best.is_finite(), "{prim} {mb}MB depth {depth}: no feasible candidate");
+                assert!(
+                    d.predicted_secs <= worst,
+                    "{prim} {mb}MB depth {depth}: auto {} worse than worst fixed {}",
+                    d.predicted_secs,
+                    worst
+                );
+                assert!(
+                    d.predicted_secs <= best * 1.05,
+                    "{prim} {mb}MB depth {depth}: auto {} misses best fixed {} by >5%",
+                    d.predicted_secs,
+                    best
+                );
+                cells += 1;
+                t.row(&[
+                    fmt_bytes(msg_bytes),
+                    depth.to_string(),
+                    d.cfg.describe(),
+                    fmt_time(d.predicted_secs),
+                    fmt_time(best),
+                    fmt_time(worst),
+                    format!("{:.2}x", worst / d.predicted_secs),
+                ]);
+                if emit_json {
+                    json_rows.push(JsonRow {
+                        primitive: prim,
+                        size_bytes: msg_bytes,
+                        depth,
+                        choice: d.cfg.describe(),
+                        auto_ns: d.predicted_secs * 1e9,
+                        best_fixed_ns: best * 1e9,
+                        worst_fixed_ns: worst * 1e9,
+                    });
+                }
+            }
+        }
+    }
+    println!(
+        "\n{cells} cells: auto matched the best fixed candidate within 5% and never \
+         chose worse than the worst"
+    );
+
+    if emit_json {
+        write_json(nranks, &json_rows);
+    }
+}

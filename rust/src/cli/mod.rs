@@ -3,24 +3,31 @@
 //!
 //! ```text
 //! cxl-ccl info                         # topology + artifact summary
-//! cxl-ccl run [--config ccl.conf] [--primitive p] [--variant v]
+//! cxl-ccl run [--config ccl.conf] [--primitive p] [--variant auto|v]
 //!             [--size 16M] [--ranks 3] [--devices 6] [--chunks 8]
 //!             [--iters 3] [--backend shm|sim] [--dtype f32|f16|bf16|u8]
+//! cxl-ccl tune [--ranks 3] [--sizes 64K,1M,16M] [--depths 1,2]
 //! cxl-ccl sweep [--primitive p] ...    # virtual-time size sweep vs IB
-//! cxl-ccl train [--preset tiny] [--steps 40] [--variant all]
+//! cxl-ccl train [--preset tiny] [--steps 40] [--variant auto]
 //! cxl-ccl latency                      # Table-1 style report
 //! ```
 //!
 //! `run` drives either backend — the real shm-pool executor or the
 //! virtual-time fabric — through the one [`CollectiveBackend`] trait.
+//! `--variant auto` (the default) defers the (variant, chunks) choice to
+//! the [tuner](crate::collectives::tuner); `tune` prints the full offline
+//! decision matrix for a topology so the choices can be inspected — or
+//! pinned — before a run.
 
 use crate::baseline::{collective_time, IbParams};
 use crate::bench_util::{banner, Table};
 use crate::collectives::builder::{plan_collective, plan_collective_dtype};
+use crate::collectives::tuner::{predict_launch_secs, tune_decision, TunedDecision, CHUNK_SWEEP};
 use crate::collectives::{
-    oracle, run_with_scratch, CclVariant, CollectiveBackend, CollectivePlan, Primitive, ValidPlan,
+    oracle, run_with_scratch, CclConfig, CclVariant, CollectiveBackend, CollectivePlan, Primitive,
+    ValidPlan,
 };
-use crate::config::{KvFile, RunConfig};
+use crate::config::{parse_ccl, KvFile, RunConfig};
 use crate::exec::Communicator;
 use crate::group::{Bootstrap, CollectiveFuture, CommWorld};
 use crate::pool::PoolLayout;
@@ -85,6 +92,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     match args.cmd.as_str() {
         "info" => cmd_info(),
         "run" => cmd_run(&args),
+        "tune" => cmd_tune(&args),
         "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "latency" => cmd_latency(),
@@ -104,14 +112,18 @@ fn print_help() {
         "cxl-ccl — collective communication over a CXL shared memory pool\n\n\
          subcommands:\n  \
          info                     topology + artifact summary\n  \
-         run    [--config F] [--primitive p] [--variant all|aggregate|naive]\n         \
+         run    [--config F] [--primitive p] [--variant auto|all|aggregate|naive]\n         \
                 [--size 16M] [--ranks 3] [--devices 6] [--chunks 8] [--iters 3]\n         \
                 [--backend shm|sim] [--dtype f32|f16|bf16|u8] [--pipeline-depth N]\n         \
                 [--bootstrap local|pool:<path> --rank R --world N]\n  \
+         tune   [--ranks 3] [--devices 6] [--dtype f32] [--sizes 64K,1M,16M]\n         \
+                [--depths 1,2]          offline tuner decision matrix\n  \
          sweep  [--primitive p] [--ranks 3] [--max 1G]   virtual-time vs InfiniBand\n  \
-         train  [--preset tiny|e2e] [--steps 40] [--variant all] [--chunks 8]\n         \
+         train  [--preset tiny|e2e] [--steps 40] [--variant auto] [--chunks 8]\n         \
                 [--buckets 2] [--pipeline-depth 2]\n  \
          latency                  Table-1 style latency report\n\n\
+         --variant auto (the default) resolves the (variant, chunks) pair through\n\
+         the sim-backed tuner per launch shape; pin a fixed variant to bypass it.\n\n\
          multi-process: start one `run --bootstrap pool:<path> --rank R --world N`\n\
          per rank (same path, same sizes); the processes rendezvous through the\n\
          file-backed pool and print a result digest comparable across ranks.\n"
@@ -127,7 +139,7 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
         rc.primitive = Primitive::parse(p)?;
     }
     if let Some(v) = args.get("variant") {
-        rc.variant = CclVariant::parse(v)?;
+        rc.ccl = parse_ccl(Some(v), rc.ccl.chunks)?;
     }
     if let Some(s) = args.get("size") {
         rc.msg_bytes = parse_size(s).map_err(|e| anyhow::anyhow!(e))?;
@@ -139,7 +151,13 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
         rc.spec.ndevices = d.parse()?;
     }
     if let Some(c) = args.get("chunks") {
-        rc.chunks = c.parse()?;
+        let chunks: usize = c.parse()?;
+        ensure!(
+            !rc.ccl.is_auto(),
+            "--chunks only applies to a pinned variant (the tuner sweeps its own chunk \
+             counts); pin one, e.g. --variant all --chunks {chunks}"
+        );
+        rc.ccl = rc.ccl.variant.config(chunks).with_root(rc.ccl.root);
     }
     if let Some(i) = args.get("iters") {
         rc.iters = i.parse()?;
@@ -150,6 +168,37 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
         rc.spec.device_capacity = worst.next_power_of_two();
     }
     Ok(rc)
+}
+
+/// Resolve the launcher's launch config against a concrete layout/ring:
+/// fixed configs pass through; `auto` runs the tuner sweep (announcing
+/// the winner) — the identical resolution a `ProcessGroup` performs
+/// internally, surfaced here for the single-process paths that plan by
+/// hand.
+fn resolve_cli_ccl(
+    rc: &RunConfig,
+    layout: &PoolLayout,
+    ring: &[PoolLayout],
+    n: usize,
+    dtype: Dtype,
+) -> Result<CclConfig> {
+    if !rc.ccl.is_auto() {
+        return Ok(rc.ccl);
+    }
+    let d = tune_decision(&rc.spec, layout, ring, rc.primitive, rc.ccl.root, n, dtype)?;
+    announce_decision(&d);
+    Ok(d.cfg)
+}
+
+/// One line of tuner introspection: what `auto` resolved to and why.
+fn announce_decision(d: &TunedDecision) {
+    println!(
+        "tuner: auto -> {} (predicted {}/launch at depth {}, {} candidates feasible)",
+        d.cfg.describe(),
+        fmt_time(d.predicted_secs),
+        d.ring_depth,
+        d.feasible
+    );
 }
 
 fn cmd_info() -> Result<()> {
@@ -194,16 +243,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     // `--size` is bytes; the element count depends on the dtype.
     let n = rc.n_elems(dtype);
     banner(&format!(
-        "run[{backend_name}]: {} {} {dtype} | {} per rank | {} ranks, {} devices, {} chunks",
+        "run[{backend_name}]: {} {} {dtype} | {} per rank | {} ranks, {} devices",
         rc.primitive,
-        rc.variant.name(),
+        rc.ccl.describe(),
         fmt_bytes(n * dtype.size_bytes()),
         rc.spec.nranks,
         rc.spec.ndevices,
-        rc.chunks
     ));
-    let ccl = rc.variant.config(rc.chunks).with_root(0);
     let layout = PoolLayout::from_spec(&rc.spec)?;
+    let ccl = resolve_cli_ccl(&rc, &layout, &[], n, dtype)?;
     // One plan, one trait: the shm executor and the virtual-time fabric
     // are interchangeable behind `CollectiveBackend`.
     let backend: Box<dyn CollectiveBackend> = match backend_name.as_str() {
@@ -293,13 +341,12 @@ fn cmd_run_pipelined(
     }
     let rc = &rc;
     let n = rc.n_elems(dtype);
-    let ccl = rc.variant.config(rc.chunks).with_root(0);
     let nr = rc.spec.nranks;
     banner(&format!(
         "run[{backend_name}, pipeline x{depth}]: {} {} {dtype} | {} per rank | {} iters | \
          {} ranks, {} devices",
         rc.primitive,
-        rc.variant.name(),
+        rc.ccl.describe(),
         fmt_bytes(n * dtype.size_bytes()),
         rc.iters,
         nr,
@@ -315,6 +362,9 @@ fn cmd_run_pipelined(
                  --devices / device capacity, or lower the depth)"
             )
         })?;
+        // Auto-tuning models the same ring the launches run on, so the
+        // resolved candidate is the one the makespans below are made of.
+        let ccl = resolve_cli_ccl(rc, &layout, &slices, n, dtype)?;
         let plans: Vec<ValidPlan> = (0..rc.iters)
             .map(|i| {
                 plan_collective_dtype(
@@ -360,6 +410,12 @@ fn cmd_run_pipelined(
         );
     }
     let depth = pg.pipeline_depth();
+    if rc.ccl.is_auto() {
+        // Resolve (and memoize) the decision up front so the launch loop
+        // below hits the group's decision cache, and the choice is
+        // visible before the first makespan row.
+        announce_decision(&pg.resolve_auto(rc.primitive, &rc.ccl, n, dtype)?);
+    }
     let send_elems = rc.primitive.send_elems(n, nr);
     let recv_elems = rc.primitive.recv_elems(n, nr);
     let sends: Vec<Tensor> = (0..nr)
@@ -379,7 +435,7 @@ fn cmd_run_pipelined(
                 pg.collective_rank(
                     r,
                     rc.primitive,
-                    &ccl,
+                    &rc.ccl,
                     n,
                     sends[r].clone(),
                     Tensor::zeros(dtype, recv_elems),
@@ -536,15 +592,12 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
         bail!("{} cannot reduce u8 buffers (no reduction semantics)", rc.primitive);
     }
     banner(&format!(
-        "run[pool:{path}]: rank {rank}/{world} | {} {} {dtype} | {} per rank | {} devices, \
-         {} chunks",
+        "run[pool:{path}]: rank {rank}/{world} | {} {} {dtype} | {} per rank | {} devices",
         rc.primitive,
-        rc.variant.name(),
+        rc.ccl.describe(),
         fmt_bytes(n * dtype.size_bytes()),
         rc.spec.ndevices,
-        rc.chunks
     ));
-    let ccl = rc.variant.config(rc.chunks).with_root(0);
     // Pipelined launches are opt-in at the CLI: depth 1 serializes over
     // the undivided window, depth N keeps N launches in flight over an
     // N-slice epoch ring. Results are identical at every depth — CI diffs
@@ -560,6 +613,13 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
         fmt_bytes(pg.layout().pool_size()),
         pg.doorbell_slot_range(),
     );
+    if rc.ccl.is_auto() {
+        // Every process resolves this identically from its own mapping
+        // (the tuner is a pure function of the spec, which the layout
+        // hash already pinned at rendezvous) — printed per rank so the
+        // logs can be diffed like the result digests.
+        announce_decision(&pg.resolve_auto(rc.primitive, &rc.ccl, n, dtype)?);
+    }
     let send_elems = rc.primitive.send_elems(n, world);
     let recv_elems = rc.primitive.recv_elems(n, world);
     let send = deterministic_payload(rank, send_elems, dtype)?;
@@ -571,7 +631,7 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
     for i in 0..rc.iters {
         let fut = pg.collective(
             rc.primitive,
-            &ccl,
+            &rc.ccl,
             n,
             send.clone(),
             Tensor::zeros(dtype, recv_elems),
@@ -594,13 +654,115 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
     Ok(())
 }
 
+/// Worst sim-predicted per-launch time over every *feasible* fixed
+/// (variant, chunks) candidate — the bound the tuner's choice is measured
+/// against in the `tune` matrix and the tuner bench.
+fn worst_fixed_secs(
+    spec: &ClusterSpec,
+    layout: &PoolLayout,
+    ring: &[PoolLayout],
+    primitive: Primitive,
+    n: usize,
+    dtype: Dtype,
+) -> Option<f64> {
+    let mut worst: Option<f64> = None;
+    for variant in CclVariant::ALL {
+        let chunk_candidates: &[usize] = match variant {
+            CclVariant::All => &CHUNK_SWEEP,
+            CclVariant::Aggregate | CclVariant::Naive => &CHUNK_SWEEP[..1],
+        };
+        for &chunks in chunk_candidates {
+            let cfg = variant.config(chunks);
+            if let Ok(secs) = predict_launch_secs(spec, layout, ring, primitive, &cfg, n, dtype)
+            {
+                if worst.is_none_or(|w| secs > w) {
+                    worst = Some(secs);
+                }
+            }
+        }
+    }
+    worst
+}
+
+/// `tune`: the offline decision matrix. For every primitive × size ×
+/// ring depth, print what `--variant auto` resolves to, the predicted
+/// per-launch virtual time, and the margin vs the worst fixed candidate —
+/// the same sweep a `ProcessGroup` runs lazily at first launch, run ahead
+/// of time so choices can be inspected (or pinned) before a job.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let nranks: usize = args.get_or("ranks", "3").parse()?;
+    let ndevices: usize = args.get_or("devices", "6").parse()?;
+    let dtype = Dtype::parse(&args.get_or("dtype", "f32"))?;
+    let sizes: Vec<usize> = args
+        .get_or("sizes", "64K,1M,16M")
+        .split(',')
+        .map(|s| parse_size(s.trim()).map_err(|e| anyhow::anyhow!(e)))
+        .collect::<Result<_>>()?;
+    let depths: Vec<usize> = args
+        .get_or("depths", "1,2")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("--depths must be integers"))
+        .collect::<Result<_>>()?;
+    ensure!(depths.iter().all(|d| *d >= 1), "--depths entries must be at least 1");
+    banner(&format!(
+        "tuner decision matrix: {nranks} ranks, {ndevices} devices, dtype {dtype}"
+    ));
+    let t = Table::new(&[14, 10, 7, 14, 12, 10]);
+    t.header(&["primitive", "size", "depth", "auto choice", "predicted", "vs worst"]);
+    for primitive in Primitive::ALL {
+        for &bytes in &sizes {
+            for &depth in &depths {
+                let n = (bytes / dtype.size_bytes() / nranks).max(1) * nranks;
+                // Same capacity growth as the pipelined run path: a
+                // depth-N ring places each launch on a 1/N device window.
+                let mut spec = ClusterSpec::new(nranks, ndevices, 64 << 20);
+                let worst_cap = depth * nranks * bytes + spec.db_region_size + (1 << 20);
+                if spec.device_capacity < worst_cap {
+                    spec.device_capacity = worst_cap.next_power_of_two();
+                }
+                let layout = PoolLayout::from_spec(&spec)?;
+                let ring = if depth > 1 {
+                    match layout.pipeline_slices(depth) {
+                        Ok(slices) => slices,
+                        Err(_) => {
+                            t.row(&[
+                                primitive.to_string(),
+                                fmt_bytes(bytes),
+                                depth.to_string(),
+                                "- (ring uncarvable)".into(),
+                                "-".into(),
+                                "-".into(),
+                            ]);
+                            continue;
+                        }
+                    }
+                } else {
+                    Vec::new()
+                };
+                let d = tune_decision(&spec, &layout, &ring, primitive, 0, n, dtype)?;
+                let worst = worst_fixed_secs(&spec, &layout, &ring, primitive, n, dtype)
+                    .expect("tune_decision succeeded, so at least one candidate is feasible");
+                t.row(&[
+                    primitive.to_string(),
+                    fmt_bytes(bytes),
+                    depth.to_string(),
+                    d.cfg.describe(),
+                    fmt_time(d.predicted_secs),
+                    format!("{:.2}x", worst / d.predicted_secs),
+                ]);
+            }
+        }
+    }
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let primitive = Primitive::parse(&args.get_or("primitive", "allgather"))?;
     let nranks: usize = args.get_or("ranks", "3").parse()?;
     let max = parse_size(&args.get_or("max", "1G")).map_err(|e| anyhow::anyhow!(e))?;
     banner(&format!("virtual-time sweep: {primitive}, {nranks} ranks vs InfiniBand"));
-    let t = Table::new(&[10, 12, 12, 12, 10]);
-    t.header(&["size", "all", "naive", "IB", "all-vs-IB"]);
+    let t = Table::new(&[10, 18, 12, 12, 12, 10]);
+    t.header(&["size", "auto", "all", "naive", "IB", "all-vs-IB"]);
     let ib = IbParams::default();
     let mut bytes = 1 << 20;
     while bytes <= max {
@@ -615,8 +777,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             plan_collective(primitive, &spec, &layout, &CclVariant::Naive.config(1), n)?;
         let t_naive = fab.run(&naive_plan, &[], &mut [])?.seconds();
         let t_ib = collective_time(primitive, n * 4, nranks, &ib);
+        // What `--variant auto` would pick at this size (per-launch cost
+        // model; the fixed columns time a single un-pipelined launch).
+        let d = tune_decision(&spec, &layout, &[], primitive, 0, n, Dtype::F32)?;
         t.row(&[
             fmt_bytes(bytes),
+            d.cfg.describe(),
             fmt_time(t_all),
             fmt_time(t_naive),
             fmt_time(t_ib),
@@ -631,8 +797,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig {
         preset: args.get_or("preset", "tiny"),
         steps: args.get_or("steps", "40").parse()?,
-        variant: CclVariant::parse(&args.get_or("variant", "all"))?,
-        chunks: args.get_or("chunks", "8").parse()?,
+        ccl: parse_ccl(args.get("variant"), args.get_or("chunks", "8").parse()?)?,
         seed: args.get_or("seed", "0").parse()?,
         ndevices: args.get_or("devices", "6").parse()?,
         comm_buckets: args.get_or("buckets", "2").parse()?,

@@ -530,7 +530,7 @@ mod tests {
             Primitive::ReduceScatter,
             &spec,
             &layout,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             1000, // not divisible by 3
         )
         .unwrap_err();

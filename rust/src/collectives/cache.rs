@@ -276,7 +276,7 @@ mod tests {
         let spec = ClusterSpec::new(3, 6, 4 << 20);
         let layout = PoolLayout::from_spec(&spec).unwrap();
         let cache = PlanCache::new();
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         // Not divisible by nranks -> plan error.
         assert!(cache
             .get_or_plan(&spec, &layout, Primitive::AllToAll, &cfg, 1000, Dtype::F32)

@@ -21,6 +21,7 @@ pub mod oracle;
 pub mod ops;
 pub mod p2p;
 pub mod staged;
+pub mod tuner;
 
 pub use backend::{run_with_scratch, CollectiveBackend, ExecOutcome};
 pub use builder::{plan_collective, plan_collective_dtype};
@@ -28,6 +29,7 @@ pub use cache::{CacheStats, PlanCache, PlanKey};
 pub use ops::{validate_calls, CollectivePlan, Op, RankPlan, ValidPlan};
 pub use p2p::plan_send_recv;
 pub use staged::simulate_staged_allreduce;
+pub use tuner::{tune_decision, DecisionCache, DecisionKey, TunedDecision};
 
 use crate::tensor::Dtype;
 use anyhow::{bail, Result};
@@ -77,7 +79,7 @@ impl Primitive {
             }
         }
         bail!(
-            "unknown primitive {s:?} (expected one of allreduce|broadcast|reduce|allgather|\
+            "unknown primitive {s:?} (accepted names: allreduce|broadcast|reduce|allgather|\
              reducescatter|gather|scatter|alltoall)"
         )
     }
@@ -167,12 +169,25 @@ impl CclVariant {
         }
     }
 
+    /// Parse a *fixed* variant name. The `auto` spelling is not a fixed
+    /// variant — it defers the (variant, chunks) choice to the tuner — so
+    /// callers that accept `auto` (the CLI, config files) must check for it
+    /// before calling this and route through [`CclConfig::auto`].
     pub fn parse(s: &str) -> Result<CclVariant> {
         match s.to_ascii_lowercase().as_str() {
             "all" | "cxl-ccl-all" => Ok(CclVariant::All),
             "aggregate" | "cxl-ccl-aggregate" => Ok(CclVariant::Aggregate),
             "naive" | "cxl-ccl-naive" => Ok(CclVariant::Naive),
-            _ => bail!("unknown variant {s:?} (all|aggregate|naive)"),
+            "auto" => bail!(
+                "variant \"auto\" is not a fixed variant: it defers the choice to the \
+                 tuner — use CclConfig::auto() (accepted fixed names: all|cxl-ccl-all|\
+                 aggregate|cxl-ccl-aggregate|naive|cxl-ccl-naive)"
+            ),
+            _ => bail!(
+                "unknown variant {s:?} (accepted names: auto|all|cxl-ccl-all|aggregate|\
+                 cxl-ccl-aggregate|naive|cxl-ccl-naive; \"auto\" defers the choice to \
+                 the tuner)"
+            ),
         }
     }
 
@@ -183,6 +198,18 @@ impl CclVariant {
     }
 }
 
+/// How a launch's (variant, chunks) pair was chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TuneMode {
+    /// The caller pinned `variant`/`chunks` explicitly.
+    Fixed,
+    /// Defer the choice to [`tuner::tune_decision`] at launch time: the
+    /// launch surface resolves the config into a concrete `Fixed` one
+    /// (a pure function of the cluster spec and launch shape) before any
+    /// plan-cache lookup or member-agreement comparison sees it.
+    Auto,
+}
+
 /// Configuration of one collective invocation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CclConfig {
@@ -191,6 +218,10 @@ pub struct CclConfig {
     pub chunks: usize,
     /// Root rank for the root-based primitives.
     pub root: usize,
+    /// `Fixed` for explicitly pinned configs; `Auto` defers the
+    /// variant/chunks choice to the tuner at launch. `variant`/`chunks`
+    /// of an `Auto` config are placeholders (never planned against).
+    pub mode: TuneMode,
 }
 
 impl CclConfig {
@@ -205,6 +236,7 @@ impl CclConfig {
             variant,
             chunks,
             root: 0,
+            mode: TuneMode::Fixed,
         }
     }
 
@@ -213,7 +245,38 @@ impl CclConfig {
         self
     }
 
+    /// Defer the (variant, chunks) choice to the tuner: the launch surface
+    /// resolves this config through [`tuner::tune_decision`] — a pure
+    /// function of the cluster spec, pipeline ring, and launch shape, so
+    /// every rank of a pool-mode group resolves identically. Pair with
+    /// [`CclConfig::with_root`] for root-based primitives. Inspect the
+    /// resolved choice via `ProcessGroup::resolve_auto`.
+    pub fn auto() -> Self {
+        Self {
+            variant: CclVariant::All,
+            chunks: 8,
+            root: 0,
+            mode: TuneMode::Auto,
+        }
+    }
+
+    /// Whether this config defers to the tuner at launch.
+    pub fn is_auto(&self) -> bool {
+        self.mode == TuneMode::Auto
+    }
+
+    /// Human-readable label for banners and reports: the pinned
+    /// variant + chunk count, or `auto` before the tuner has resolved it.
+    pub fn describe(&self) -> String {
+        match self.mode {
+            TuneMode::Auto => "auto".to_string(),
+            TuneMode::Fixed => format!("{} x{}", self.variant.name(), self.chunks),
+        }
+    }
+
     /// Paper default: the §5.4 sweet spot.
+    #[deprecated(note = "use `CclConfig::auto()` (tuner-resolved) or pin a variant with \
+                         `CclVariant::All.config(8)`")]
     pub fn default_all() -> Self {
         CclConfig::new(CclVariant::All, 8)
     }
@@ -271,6 +334,41 @@ mod tests {
             CclVariant::parse("CXL-CCL-Naive").unwrap(),
             CclVariant::Naive
         );
-        assert!(CclVariant::parse("turbo").is_err());
+        // Unknown spellings enumerate every accepted name, auto included.
+        let err = CclVariant::parse("turbo").unwrap_err().to_string();
+        for name in ["auto", "all", "aggregate", "naive", "cxl-ccl-all"] {
+            assert!(err.contains(name), "{err:?} should mention {name:?}");
+        }
+        // `auto` is not a fixed variant; the error routes to the config
+        // entry point instead.
+        let err = CclVariant::parse("auto").unwrap_err().to_string();
+        assert!(err.contains("CclConfig::auto()"), "{err:?}");
+    }
+
+    #[test]
+    fn primitive_parse_error_enumerates_names() {
+        let err = Primitive::parse("sendrecv").unwrap_err().to_string();
+        for p in Primitive::ALL {
+            assert!(err.contains(p.name()), "{err:?} should mention {:?}", p.name());
+        }
+    }
+
+    #[test]
+    fn auto_config_is_marked_and_fixed_configs_are_not() {
+        let auto = CclConfig::auto();
+        assert!(auto.is_auto());
+        assert_eq!(auto.mode, TuneMode::Auto);
+        assert!(auto.with_root(2).is_auto(), "with_root keeps the mode");
+        assert_eq!(auto.with_root(2).root, 2);
+        for v in CclVariant::ALL {
+            assert!(!v.config(4).is_auto());
+            assert_eq!(v.config(4).mode, TuneMode::Fixed);
+        }
+        // The deprecated paper-default constructor still resolves to the
+        // pinned §5.4 sweet spot, not to auto.
+        #[allow(deprecated)]
+        let legacy = CclConfig::default_all();
+        assert_eq!(legacy, CclVariant::All.config(8));
+        assert!(!legacy.is_auto());
     }
 }

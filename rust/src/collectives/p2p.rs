@@ -101,7 +101,7 @@ mod tests {
         let spec = ClusterSpec::new(3, 6, 8 << 20);
         let comm = Communicator::shm(&spec).unwrap();
         let layout = *comm.layout();
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let n = 3 * 4099; // ragged
         let plan = plan_send_recv(&spec, &layout, &cfg, 2, 0, n).unwrap();
         plan.validate(layout.pool_size()).unwrap();
@@ -123,7 +123,7 @@ mod tests {
         let spec = ClusterSpec::new(2, 6, 8 << 20);
         let layout = PoolLayout::from_spec(&spec).unwrap();
         let plan =
-            plan_send_recv(&spec, &layout, &CclConfig::default_all(), 0, 1, 6 * 65536).unwrap();
+            plan_send_recv(&spec, &layout, &CclVariant::All.config(8), 0, 1, 6 * 65536).unwrap();
         let devices: std::collections::HashSet<usize> = plan.ranks[0]
             .write_ops
             .iter()
@@ -139,7 +139,7 @@ mod tests {
     fn invalid_pairs_rejected() {
         let spec = ClusterSpec::new(2, 6, 8 << 20);
         let layout = PoolLayout::from_spec(&spec).unwrap();
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         assert!(plan_send_recv(&spec, &layout, &cfg, 0, 0, 64).is_err());
         assert!(plan_send_recv(&spec, &layout, &cfg, 0, 5, 64).is_err());
         assert!(plan_send_recv(&spec, &layout, &cfg, 0, 1, 0).is_err());

@@ -92,7 +92,7 @@ mod tests {
             })
             .collect();
         let want = oracle::expected(Primitive::AllReduce, &bufs, n, 0);
-        comm.all_reduce_staged_f32(&mut bufs, &CclConfig::default_all())
+        comm.all_reduce_staged_f32(&mut bufs, &CclVariant::All.config(8))
             .unwrap();
         for r in 0..4 {
             for (g, e) in bufs[r].iter().zip(&want[r]) {
@@ -127,7 +127,7 @@ mod tests {
         let comm = Communicator::shm(&spec).unwrap();
         let mut bufs = vec![vec![0.0f32; 1001]; 4];
         assert!(comm
-            .all_reduce_staged_f32(&mut bufs, &CclConfig::default_all())
+            .all_reduce_staged_f32(&mut bufs, &CclVariant::All.config(8))
             .is_err());
     }
 }

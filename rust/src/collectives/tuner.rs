@@ -1,0 +1,502 @@
+//! Size/topology-aware algorithm autotuning (the `Auto` launch surface).
+//!
+//! The paper's gains come from picking the right (variant, chunk count)
+//! pair per collective and message size (§4–§5): interleaving + chunking
+//! wins on large bandwidth-bound transfers, while small latency-critical
+//! launches can prefer coarser configurations whose plans carry less
+//! doorbell/bookkeeping overhead. Hardcoding one [`CclConfig`] per call
+//! site does not survive a sweep over shapes — so the launch surface lets
+//! callers opt out of choosing: a config built with [`CclConfig::auto`]
+//! resolves through [`tune_decision`] at launch.
+//!
+//! [`tune_decision`] sweeps [`CclVariant::ALL`] × chunk counts
+//! ([`CHUNK_SWEEP`]) through [`SimFabric`]'s virtual-time model — planning
+//! one candidate launch per epoch-ring slice and simulating the train at
+//! the ring's depth — and picks the candidate with the smallest predicted
+//! per-launch time. The sweep is a **pure function** of the cluster spec,
+//! the (deterministically derived) pipeline ring, and the launch shape:
+//! no wall clock, no RNG, no machine state. Every rank of a pool-mode
+//! group therefore resolves the identical decision from its own mapping —
+//! the same discipline as the v5 pipeline-depth resolution — and the
+//! inputs it depends on (spec fields, ring depth, tuner algorithm
+//! version) are exactly the fields fingerprinted by the pool layout hash,
+//! so mappers from incompatible builds fail rendezvous instead of running
+//! divergent auto-resolved plans.
+//!
+//! Decisions are memoized in a [`DecisionCache`] (one per
+//! communicator/group, beside its `PlanCache`), keyed by [`DecisionKey`]
+//! — a [`PlanKey`](crate::collectives::PlanKey) minus the variant fields
+//! (`variant`, `chunks`) plus the ring depth the prediction assumed.
+//! Candidate planning inside the sweep goes straight through
+//! [`plan_collective_dtype`], **never** through a `PlanCache`: tuning a
+//! shape must not inflate plan-cache miss counters (the PR 2 invariant
+//! `misses == distinct cached shapes` stays intact) nor evict live plans.
+
+use crate::collectives::builder::plan_collective_dtype;
+use crate::collectives::ops::{CollectivePlan, ValidPlan};
+use crate::collectives::{CclConfig, CclVariant, Primitive};
+use crate::pool::PoolLayout;
+use crate::sim::fabric::SimFabric;
+use crate::tensor::Dtype;
+use crate::topology::ClusterSpec;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Version of the tuning algorithm (sweep space + cost model + tie-break).
+/// Folded into the pool layout hash: every mapper of a pool world must
+/// resolve `auto` launches identically, so a sweep-space change is a
+/// rendezvous-breaking protocol change.
+pub const TUNER_ALGO_VERSION: u64 = 1;
+
+/// Chunk counts swept for [`CclVariant::All`] (§5.4 puts the sweet spot at
+/// 4–8; 1 and 2 cover the small-message regime where chunking overhead
+/// dominates). `Aggregate`/`Naive` are single-chunk by definition.
+pub const CHUNK_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Everything a tuning decision depends on: a
+/// [`PlanKey`](crate::collectives::PlanKey) minus the variant fields
+/// (`variant`, `chunks` — those are the tuner's *outputs*), plus the
+/// pipeline-ring depth the prediction assumed. The layout window fields
+/// are the group's **undivided** plan view; the ring slices are derived
+/// from it deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DecisionKey {
+    pub primitive: Primitive,
+    pub root: usize,
+    pub nranks: usize,
+    pub ndevices: usize,
+    pub device_capacity: usize,
+    pub db_region_size: usize,
+    pub db_slot_base: usize,
+    pub db_slot_span: usize,
+    pub device_base: usize,
+    pub device_span: usize,
+    /// Epoch-ring depth (number of slices) the prediction modelled.
+    pub ring_depth: usize,
+    pub n_elems: usize,
+    pub dtype: Dtype,
+}
+
+impl DecisionKey {
+    pub fn new(
+        primitive: Primitive,
+        root: usize,
+        spec: &ClusterSpec,
+        layout: &PoolLayout,
+        ring_depth: usize,
+        n_elems: usize,
+        dtype: Dtype,
+    ) -> Self {
+        Self {
+            primitive,
+            root,
+            nranks: spec.nranks,
+            ndevices: spec.ndevices,
+            device_capacity: spec.device_capacity,
+            db_region_size: spec.db_region_size,
+            db_slot_base: layout.db_slot_base,
+            db_slot_span: layout.db_slot_span,
+            device_base: layout.device_base,
+            device_span: layout.device_span,
+            ring_depth: ring_depth.max(1),
+            n_elems,
+            dtype,
+        }
+    }
+}
+
+/// A resolved tuning decision: the concrete config an `auto` launch runs
+/// with, plus the prediction it was chosen on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunedDecision {
+    /// The winning config (`TuneMode::Fixed`; `root` preserved from the
+    /// request).
+    pub cfg: CclConfig,
+    /// Sim-predicted virtual seconds per launch for the winner (makespan
+    /// of a ring-depth launch train divided by its length).
+    pub predicted_secs: f64,
+    /// Ring depth the prediction modelled.
+    pub ring_depth: usize,
+    /// How many (variant, chunks) candidates could be planned for this
+    /// shape (the rest were infeasible on the ring's slice windows).
+    pub feasible: usize,
+}
+
+/// Sim-predicted virtual seconds per launch for one fixed candidate
+/// config on this ring: plan one launch per slice (the exact plans a
+/// steady-state launch train uses) and simulate the train at the ring's
+/// depth. Errors if the shape cannot be planned on some slice.
+pub fn predict_launch_secs(
+    spec: &ClusterSpec,
+    layout: &PoolLayout,
+    ring: &[PoolLayout],
+    primitive: Primitive,
+    cfg: &CclConfig,
+    n_elems: usize,
+    dtype: Dtype,
+) -> Result<f64> {
+    let slices: &[PoolLayout] = if ring.is_empty() {
+        std::slice::from_ref(layout)
+    } else {
+        ring
+    };
+    let depth = slices.len();
+    let plans: Vec<ValidPlan> = slices
+        .iter()
+        .map(|s| plan_collective_dtype(primitive, spec, s, cfg, n_elems, dtype))
+        .collect::<Result<_>>()?;
+    let refs: Vec<&CollectivePlan> = plans.iter().map(|p| &**p).collect();
+    let makespan = SimFabric::new(*layout).simulate_pipelined(&refs, depth)?.total_time;
+    Ok(makespan / depth as f64)
+}
+
+/// Resolve the best (variant, chunks) pair for one launch shape: sweep
+/// [`CclVariant::ALL`] × [`CHUNK_SWEEP`] through the virtual-time model
+/// and return the candidate with the smallest predicted per-launch time.
+/// Ties keep the earliest candidate in sweep order (`All` before
+/// `Aggregate` before `Naive`, small chunk counts first) — a total,
+/// deterministic order, so every process resolves alike. Candidates that
+/// cannot be planned (the shape does not fit a 1/N slice window) are
+/// skipped; if *no* candidate fits, the error reports the last planning
+/// failure.
+pub fn tune_decision(
+    spec: &ClusterSpec,
+    layout: &PoolLayout,
+    ring: &[PoolLayout],
+    primitive: Primitive,
+    root: usize,
+    n_elems: usize,
+    dtype: Dtype,
+) -> Result<TunedDecision> {
+    let ring_depth = if ring.is_empty() { 1 } else { ring.len() };
+    let mut best: Option<(CclConfig, f64)> = None;
+    let mut feasible = 0usize;
+    let mut last_err = None;
+    for variant in CclVariant::ALL {
+        let chunk_candidates: &[usize] = match variant {
+            CclVariant::All => &CHUNK_SWEEP,
+            // config() forces chunks = 1 for these; sweeping more would
+            // re-evaluate the same candidate.
+            CclVariant::Aggregate | CclVariant::Naive => &CHUNK_SWEEP[..1],
+        };
+        for &chunks in chunk_candidates {
+            let cfg = variant.config(chunks).with_root(root);
+            match predict_launch_secs(spec, layout, ring, primitive, &cfg, n_elems, dtype) {
+                Ok(secs) => {
+                    feasible += 1;
+                    // Strictly-less keeps the first candidate on ties.
+                    if best.is_none_or(|(_, b)| secs < b) {
+                        best = Some((cfg, secs));
+                    }
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+    }
+    match best {
+        Some((cfg, predicted_secs)) => Ok(TunedDecision {
+            cfg,
+            predicted_secs,
+            ring_depth,
+            feasible,
+        }),
+        None => match last_err {
+            Some(e) => Err(e.context(format!(
+                "auto-tuning {primitive} ({n_elems} elems, {dtype}): no candidate \
+                 (variant, chunks) pair fits the ring's slice windows"
+            ))),
+            None => bail!("auto-tuning {primitive}: empty candidate sweep"),
+        },
+    }
+}
+
+struct LruState {
+    /// Decision + last-touched tick per shape.
+    decisions: HashMap<DecisionKey, (TunedDecision, u64)>,
+    /// Monotonic access clock.
+    tick: u64,
+}
+
+/// Thread-safe, LRU-bounded memo of tuning decisions — the same
+/// structure and counter discipline as
+/// [`PlanCache`](crate::collectives::PlanCache): the insert's vacancy
+/// decides hit-vs-miss (`misses == distinct shapes ever tuned`), the
+/// sweep itself runs outside the lock, and racing first resolutions
+/// produce identical decisions so the first insert wins.
+pub struct DecisionCache {
+    state: Mutex<LruState>,
+    capacity: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    evictions: AtomicUsize,
+}
+
+impl Default for DecisionCache {
+    fn default() -> Self {
+        Self::with_capacity(Self::DEFAULT_CAPACITY)
+    }
+}
+
+impl DecisionCache {
+    /// Same bound as `PlanCache`: generous for steady-state loops, capped
+    /// for sweeps.
+    pub const DEFAULT_CAPACITY: usize = 128;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cache holding at most `capacity` decisions (min 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(LruState {
+                decisions: HashMap::new(),
+                tick: 0,
+            }),
+            capacity: capacity.max(1),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Return the cached decision for this shape, running the tuning
+    /// sweep on first use. A hit refreshes the shape's LRU position.
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_or_tune(
+        &self,
+        spec: &ClusterSpec,
+        layout: &PoolLayout,
+        ring: &[PoolLayout],
+        primitive: Primitive,
+        root: usize,
+        n_elems: usize,
+        dtype: Dtype,
+    ) -> Result<TunedDecision> {
+        let ring_depth = if ring.is_empty() { 1 } else { ring.len() };
+        let key = DecisionKey::new(primitive, root, spec, layout, ring_depth, n_elems, dtype);
+        {
+            let mut st = self.state.lock().unwrap();
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some((d, touched)) = st.decisions.get_mut(&key) {
+                *touched = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(*d);
+            }
+        }
+        // Sweep outside the lock (it simulates every candidate); racing
+        // resolvers compute identical decisions, so the first insert wins
+        // and its vacancy decides hit-vs-miss.
+        let d = tune_decision(spec, layout, ring, primitive, root, n_elems, dtype)?;
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some((existing, touched)) = st.decisions.get_mut(&key) {
+            *touched = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(*existing);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if st.decisions.len() >= self.capacity {
+            let victim = st
+                .decisions
+                .iter()
+                .min_by_key(|(_, (_, touched))| *touched)
+                .map(|(k, _)| *k);
+            if let Some(old) = victim {
+                st.decisions.remove(&old);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        st.decisions.insert(key, (d, tick));
+        Ok(d)
+    }
+
+    /// Introspect a cached decision without touching the LRU clock or the
+    /// hit/miss counters (`None` if this shape was never tuned here).
+    pub fn peek(&self, key: &DecisionKey) -> Option<TunedDecision> {
+        self.state
+            .lock()
+            .unwrap()
+            .decisions
+            .get(key)
+            .map(|(d, _)| *d)
+    }
+
+    pub fn stats(&self) -> super::CacheStats {
+        super::CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of distinct decisions currently cached.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().decisions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached decision (counters are preserved).
+    pub fn clear(&self) {
+        self.state.lock().unwrap().decisions.clear();
+    }
+}
+
+impl std::fmt::Debug for DecisionCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DecisionCache")
+            .field("len", &self.len())
+            .field("capacity", &self.capacity)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{CacheStats, TuneMode};
+
+    fn paper_setup() -> (ClusterSpec, PoolLayout) {
+        let spec = ClusterSpec::new(3, 6, 8 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        (spec, layout)
+    }
+
+    #[test]
+    fn decision_beats_or_matches_every_fixed_candidate() {
+        // The acceptance bar: the auto choice is never worse than any
+        // fixed (variant, chunks) candidate under the same cost model —
+        // argmin by construction, pinned here per primitive.
+        let (spec, layout) = paper_setup();
+        for primitive in Primitive::ALL {
+            let n = 3 * 4096;
+            let d = tune_decision(&spec, &layout, &[], primitive, 0, n, Dtype::F32).unwrap();
+            assert_eq!(d.cfg.mode, TuneMode::Fixed);
+            assert!(d.predicted_secs > 0.0);
+            for v in CclVariant::ALL {
+                for chunks in CHUNK_SWEEP {
+                    let cfg = v.config(chunks);
+                    let secs = predict_launch_secs(
+                        &spec, &layout, &[], primitive, &cfg, n, Dtype::F32,
+                    )
+                    .unwrap();
+                    assert!(
+                        d.predicted_secs <= secs,
+                        "{primitive}: auto {:?} ({}) predicted {} > fixed {:?} at {}",
+                        d.cfg.variant,
+                        d.cfg.chunks,
+                        d.predicted_secs,
+                        v,
+                        secs
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resolution_is_deterministic() {
+        let (spec, layout) = paper_setup();
+        let ring = layout.pipeline_slices(2).unwrap();
+        for primitive in [Primitive::AllReduce, Primitive::AllGather, Primitive::Broadcast] {
+            let a = tune_decision(&spec, &layout, &ring, primitive, 0, 3 * 2048, Dtype::F32)
+                .unwrap();
+            let b = tune_decision(&spec, &layout, &ring, primitive, 0, 3 * 2048, Dtype::F32)
+                .unwrap();
+            assert_eq!(a, b);
+            assert_eq!(a.ring_depth, 2);
+        }
+    }
+
+    #[test]
+    fn root_is_preserved_and_keyed() {
+        let (spec, layout) = paper_setup();
+        let d = tune_decision(&spec, &layout, &[], Primitive::Broadcast, 2, 3 * 512, Dtype::F32)
+            .unwrap();
+        assert_eq!(d.cfg.root, 2);
+        let k0 = DecisionKey::new(Primitive::Broadcast, 0, &spec, &layout, 1, 3 * 512, Dtype::F32);
+        let k2 = DecisionKey::new(Primitive::Broadcast, 2, &spec, &layout, 1, 3 * 512, Dtype::F32);
+        assert_ne!(k0, k2);
+    }
+
+    #[test]
+    fn cache_counts_one_miss_per_shape_and_peek_is_free() {
+        let (spec, layout) = paper_setup();
+        let cache = DecisionCache::new();
+        let d1 = cache
+            .get_or_tune(&spec, &layout, &[], Primitive::AllGather, 0, 3 * 256, Dtype::F32)
+            .unwrap();
+        let d2 = cache
+            .get_or_tune(&spec, &layout, &[], Primitive::AllGather, 0, 3 * 256, Dtype::F32)
+            .unwrap();
+        assert_eq!(d1, d2);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
+        assert_eq!(cache.len(), 1);
+        let key =
+            DecisionKey::new(Primitive::AllGather, 0, &spec, &layout, 1, 3 * 256, Dtype::F32);
+        assert_eq!(cache.peek(&key), Some(d1));
+        assert_eq!(
+            cache.stats(),
+            CacheStats { hits: 1, misses: 1, evictions: 0 },
+            "peek must not move the counters"
+        );
+        assert_eq!(
+            cache.peek(&DecisionKey {
+                n_elems: 3 * 512,
+                ..key
+            }),
+            None
+        );
+    }
+
+    #[test]
+    fn ring_depth_is_part_of_the_key() {
+        let (spec, layout) = paper_setup();
+        let ring2 = layout.pipeline_slices(2).unwrap();
+        let cache = DecisionCache::new();
+        for ring in [&[][..], &ring2[..]] {
+            cache
+                .get_or_tune(&spec, &layout, ring, Primitive::AllReduce, 0, 3 * 1024, Dtype::F32)
+                .unwrap();
+        }
+        assert_eq!(cache.len(), 2, "depth-1 and depth-2 decisions are distinct shapes");
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn lru_bound_holds() {
+        let (spec, layout) = paper_setup();
+        let cache = DecisionCache::with_capacity(2);
+        for i in 1..=4usize {
+            cache
+                .get_or_tune(&spec, &layout, &[], Primitive::AllGather, 0, 3 * 128 * i, Dtype::F32)
+                .unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 4, evictions: 2 });
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let (spec, layout) = paper_setup();
+        let cache = DecisionCache::new();
+        // Not divisible by nranks -> every candidate fails to plan.
+        assert!(cache
+            .get_or_tune(&spec, &layout, &[], Primitive::AllToAll, 0, 1000, Dtype::F32)
+            .is_err());
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().misses, 0);
+    }
+}

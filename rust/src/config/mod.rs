@@ -10,12 +10,12 @@
 //! device_capacity = 64M
 //! # collective
 //! primitive = allgather
-//! variant   = all
-//! chunks    = 8
+//! variant   = auto      # tuner-resolved; or pin: all | aggregate | naive
+//! chunks    = 8         # fixed variants only (the tuner sweeps its own)
 //! msg_size  = 16M
 //! ```
 
-use crate::collectives::{CclVariant, Primitive};
+use crate::collectives::{CclConfig, CclVariant, Primitive};
 use crate::tensor::Dtype;
 use crate::topology::ClusterSpec;
 use crate::util::size::parse_size;
@@ -70,13 +70,26 @@ impl KvFile {
     }
 }
 
+/// Parse a `variant = ...` / `--variant ...` value into a launch config.
+/// `auto` — the launcher default when no variant is given — defers the
+/// (variant, chunk-count) choice to the tuner; a fixed name pins the
+/// algorithm with `chunks` pipeline chunks (the tuner is bypassed).
+pub fn parse_ccl(variant: Option<&str>, chunks: usize) -> Result<CclConfig> {
+    match variant {
+        None => Ok(CclConfig::auto()),
+        Some(v) if v.eq_ignore_ascii_case("auto") => Ok(CclConfig::auto()),
+        Some(v) => Ok(CclVariant::parse(v)?.config(chunks)),
+    }
+}
+
 /// Full launcher configuration for one collective run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub spec: ClusterSpec,
     pub primitive: Primitive,
-    pub variant: CclVariant,
-    pub chunks: usize,
+    /// `CclConfig::auto()` (the default: tuner-resolved per launch shape)
+    /// or a pinned variant + chunk count.
+    pub ccl: CclConfig,
     /// Message size in bytes (`N × 4`).
     pub msg_bytes: usize,
     pub iters: usize,
@@ -87,8 +100,7 @@ impl Default for RunConfig {
         Self {
             spec: ClusterSpec::paper(64 << 20),
             primitive: Primitive::AllGather,
-            variant: CclVariant::All,
-            chunks: 8,
+            ccl: CclConfig::auto(),
             msg_bytes: 4 << 20,
             iters: 3,
         }
@@ -111,11 +123,7 @@ impl RunConfig {
                 Some(p) => Primitive::parse(p)?,
                 None => d.primitive,
             },
-            variant: match kv.get("variant") {
-                Some(v) => CclVariant::parse(v)?,
-                None => d.variant,
-            },
-            chunks: kv.usize_or("chunks", d.chunks)?,
+            ccl: parse_ccl(kv.get("variant"), kv.usize_or("chunks", 8)?)?,
             msg_bytes: kv.size_or("msg_size", d.msg_bytes)?,
             iters: kv.usize_or("iters", d.iters)?,
         })
@@ -142,7 +150,8 @@ mod tests {
         assert_eq!(rc.spec.nranks, 4);
         assert_eq!(rc.spec.device_capacity, 64 << 20);
         assert_eq!(rc.primitive, Primitive::AllToAll);
-        assert_eq!(rc.variant, CclVariant::Naive);
+        assert!(!rc.ccl.is_auto());
+        assert_eq!(rc.ccl.variant, CclVariant::Naive);
         assert_eq!(rc.msg_bytes, 2 << 20);
         assert_eq!(rc.n_elems(Dtype::F32) % 4, 0);
         // Same byte budget, element count scales with the dtype.
@@ -167,6 +176,17 @@ mod tests {
     fn defaults_apply() {
         let rc = RunConfig::from_kv(&KvFile::parse("").unwrap()).unwrap();
         assert_eq!(rc.spec.nranks, 3);
-        assert_eq!(rc.chunks, 8);
+        // No variant key → the tuner-resolved auto path is the default.
+        assert!(rc.ccl.is_auto());
+    }
+
+    #[test]
+    fn variant_key_routes_auto_vs_fixed() {
+        let auto = RunConfig::from_kv(&KvFile::parse("variant = auto\n").unwrap()).unwrap();
+        assert!(auto.ccl.is_auto());
+        let fixed =
+            RunConfig::from_kv(&KvFile::parse("variant = all\nchunks = 4\n").unwrap()).unwrap();
+        assert_eq!(fixed.ccl, CclVariant::All.config(4));
+        assert!(RunConfig::from_kv(&KvFile::parse("variant = warp\n").unwrap()).is_err());
     }
 }

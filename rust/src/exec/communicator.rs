@@ -10,18 +10,22 @@
 //! - the [`CollectiveBackend`] impl runs a pre-built plan — the same trait
 //!   [`crate::sim::fabric::SimFabric`] implements for virtual time.
 //!
-//! The v1 `&[Vec<f32>]` entry points (`execute`, `all_reduce_f32`, ...)
-//! remain as thin deprecated shims.
+//! Configs built with [`CclConfig::auto`] resolve through the communicator's
+//! [`DecisionCache`] (beside its [`PlanCache`]) before planning: the tuner
+//! picks (variant, chunks) from the virtual-time model, deterministically
+//! per shape. (The v1 `&[Vec<f32>]` entry points — `execute`,
+//! `all_reduce_f32`, ... — were removed with the v6 surface.)
 
 use crate::collectives::backend::{validate_views, CollectiveBackend, ExecOutcome};
 use crate::collectives::cache::{PlanCache, PlanKey};
-use crate::collectives::ops::{CollectivePlan, Op, ValidPlan};
+use crate::collectives::ops::{Op, ValidPlan};
+use crate::collectives::tuner::DecisionCache;
 use crate::collectives::{CclConfig, Primitive};
 use crate::doorbell::{DoorbellSet, PoolBarrier, WaitPolicy};
 use crate::exec::rank::GroupShared;
 use crate::exec::reduce_engine::{ReduceEngine, ScalarReduceEngine};
 use crate::pool::{PoolLayout, ShmPool};
-use crate::tensor::{self, Dtype, TensorView, TensorViewMut};
+use crate::tensor::{Dtype, TensorView, TensorViewMut};
 use crate::topology::ClusterSpec;
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
@@ -36,6 +40,10 @@ pub struct Communicator {
     wait_policy: WaitPolicy,
     engine: Arc<dyn ReduceEngine>,
     cache: PlanCache,
+    /// Tuning decisions for `auto` configs, beside the plan cache. Tuner
+    /// sweeps plan their candidates directly (never through `cache`), so
+    /// resolving `auto` shapes cannot inflate plan-cache miss counters.
+    decisions: DecisionCache,
     /// In-flight nonblocking groups, keyed by plan shape (see
     /// [`crate::exec::rank`]).
     pub(super) groups: Mutex<HashMap<PlanKey, Arc<GroupShared>>>,
@@ -90,6 +98,7 @@ impl Communicator {
             wait_policy: WaitPolicy::default(),
             engine: Arc::new(ScalarReduceEngine),
             cache: PlanCache::new(),
+            decisions: DecisionCache::new(),
             groups: Mutex::new(HashMap::new()),
             launch_lock: Mutex::new(()),
         }
@@ -131,10 +140,40 @@ impl Communicator {
         &self.cache
     }
 
+    /// The communicator's tuning-decision cache (beside the plan cache):
+    /// one entry per `auto`-resolved shape, with the same hit/miss
+    /// counter discipline as [`Communicator::plan_cache`].
+    pub fn decision_cache(&self) -> &DecisionCache {
+        &self.decisions
+    }
+
+    /// Resolve a config for one launch shape: fixed configs pass through
+    /// unchanged; [`CclConfig::auto`] configs resolve through the tuner
+    /// (cached in [`Communicator::decision_cache`]) into the concrete
+    /// (variant, chunks) pair the virtual-time model predicts fastest
+    /// over this communicator's undivided window. Pure function of the
+    /// spec, layout, and shape — repeated calls resolve identically.
+    pub fn resolve_config(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        dtype: Dtype,
+    ) -> Result<CclConfig> {
+        if !cfg.is_auto() {
+            return Ok(*cfg);
+        }
+        Ok(self
+            .decisions
+            .get_or_tune(&self.spec, &self.layout, &[], primitive, cfg.root, n_elems, dtype)?
+            .cfg)
+    }
+
     /// Plan a collective through the cache: repeated steady-state calls
     /// with the same `(primitive, cfg, n_elems, dtype)` reuse the plan —
     /// and, because the cache hands out pre-validated [`ValidPlan`]s, they
-    /// also skip validation entirely.
+    /// also skip validation entirely. `auto` configs resolve through the
+    /// tuner first, so the plan cache only ever sees concrete configs.
     pub fn plan(
         &self,
         primitive: Primitive,
@@ -142,8 +181,9 @@ impl Communicator {
         n_elems: usize,
         dtype: Dtype,
     ) -> Result<ValidPlan> {
+        let cfg = self.resolve_config(primitive, cfg, n_elems, dtype)?;
         self.cache
-            .get_or_plan(&self.spec, &self.layout, primitive, cfg, n_elems, dtype)
+            .get_or_plan(&self.spec, &self.layout, primitive, &cfg, n_elems, dtype)
     }
 
     /// Plan (cached) and execute one collective over typed views. The
@@ -304,100 +344,6 @@ impl Communicator {
         }
         Ok(start.elapsed())
     }
-
-    // ---- deprecated v1 shims --------------------------------------------
-
-    /// Plan and execute in one call over whole-cluster f32 buffers.
-    #[deprecated(
-        note = "use `collective` with TensorView buffers, or per-rank \
-                `rank(r).begin(..)` handles"
-    )]
-    pub fn execute(
-        &self,
-        primitive: Primitive,
-        cfg: &CclConfig,
-        n_elems: usize,
-        sends: &[Vec<f32>],
-        recvs: &mut [Vec<f32>],
-    ) -> Result<Duration> {
-        let send_views = tensor::views_f32(sends);
-        let mut recv_views = tensor::views_f32_mut(recvs);
-        self.collective(primitive, cfg, n_elems, &send_views, &mut recv_views)
-    }
-
-    /// Execute a pre-built plan over whole-cluster f32 buffers.
-    #[deprecated(note = "use `run_plan_views` (or the `CollectiveBackend::run` trait method)")]
-    pub fn run_plan(
-        &self,
-        plan: &CollectivePlan,
-        sends: &[Vec<f32>],
-        recvs: &mut [Vec<f32>],
-    ) -> Result<Duration> {
-        // v1 validated on every launch; sealing a fresh ValidPlan per call
-        // reproduces exactly that behaviour.
-        let plan = ValidPlan::new(plan.clone(), self.layout.pool_size())?;
-        let send_views = tensor::views_f32(sends);
-        let mut recv_views = tensor::views_f32_mut(recvs);
-        self.run_plan_views(&plan, &send_views, &mut recv_views)
-    }
-
-    /// In-place AllReduce: `bufs[r]` is rank r's contribution on input and
-    /// the reduced result on output.
-    #[deprecated(note = "use `collective(Primitive::AllReduce, ..)` with TensorView buffers")]
-    pub fn all_reduce_f32(&self, bufs: &mut [Vec<f32>], cfg: &CclConfig) -> Result<Duration> {
-        let n = bufs.first().map(|b| b.len()).unwrap_or(0);
-        let sends: Vec<Vec<f32>> = bufs.to_vec();
-        let send_views = tensor::views_f32(&sends);
-        let mut recv_views = tensor::views_f32_mut(bufs);
-        self.collective(Primitive::AllReduce, cfg, n, &send_views, &mut recv_views)
-    }
-
-    /// In-place Broadcast of `bufs[cfg.root]` to every rank.
-    #[deprecated(note = "use `collective(Primitive::Broadcast, ..)` with TensorView buffers")]
-    pub fn broadcast_f32(&self, bufs: &mut [Vec<f32>], cfg: &CclConfig) -> Result<Duration> {
-        let n = bufs.first().map(|b| b.len()).unwrap_or(0);
-        let sends: Vec<Vec<f32>> = bufs.to_vec();
-        let send_views = tensor::views_f32(&sends);
-        let mut recv_views = tensor::views_f32_mut(bufs);
-        self.collective(Primitive::Broadcast, cfg, n, &send_views, &mut recv_views)
-    }
-
-    /// AllGather: returns each rank's concatenated view.
-    #[deprecated(note = "use `collective(Primitive::AllGather, ..)` with TensorView buffers")]
-    pub fn all_gather_f32(&self, sends: &[Vec<f32>], cfg: &CclConfig) -> Result<Vec<Vec<f32>>> {
-        let n = sends.first().map(|b| b.len()).unwrap_or(0);
-        let mut recvs = vec![vec![0.0f32; n * self.spec.nranks]; self.spec.nranks];
-        let send_views = tensor::views_f32(sends);
-        let mut recv_views = tensor::views_f32_mut(&mut recvs);
-        self.collective(Primitive::AllGather, cfg, n, &send_views, &mut recv_views)?;
-        Ok(recvs)
-    }
-
-    /// ReduceScatter: returns each rank's reduced segment (N/nranks elems).
-    #[deprecated(note = "use `collective(Primitive::ReduceScatter, ..)` with TensorView buffers")]
-    pub fn reduce_scatter_f32(
-        &self,
-        sends: &[Vec<f32>],
-        cfg: &CclConfig,
-    ) -> Result<Vec<Vec<f32>>> {
-        let n = sends.first().map(|b| b.len()).unwrap_or(0);
-        let mut recvs = vec![vec![0.0f32; n / self.spec.nranks]; self.spec.nranks];
-        let send_views = tensor::views_f32(sends);
-        let mut recv_views = tensor::views_f32_mut(&mut recvs);
-        self.collective(Primitive::ReduceScatter, cfg, n, &send_views, &mut recv_views)?;
-        Ok(recvs)
-    }
-
-    /// AllToAll: returns each rank's transposed segments.
-    #[deprecated(note = "use `collective(Primitive::AllToAll, ..)` with TensorView buffers")]
-    pub fn all_to_all_f32(&self, sends: &[Vec<f32>], cfg: &CclConfig) -> Result<Vec<Vec<f32>>> {
-        let n = sends.first().map(|b| b.len()).unwrap_or(0);
-        let mut recvs = vec![vec![0.0f32; n]; self.spec.nranks];
-        let send_views = tensor::views_f32(sends);
-        let mut recv_views = tensor::views_f32_mut(&mut recvs);
-        self.collective(Primitive::AllToAll, cfg, n, &send_views, &mut recv_views)?;
-        Ok(recvs)
-    }
 }
 
 impl CollectiveBackend for Communicator {
@@ -555,7 +501,7 @@ mod tests {
         let mut recv_views = views_f32_mut(&mut recvs);
         c.collective(
             Primitive::AllReduce,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             256,
             &send_views,
             &mut recv_views,
@@ -568,12 +514,43 @@ mod tests {
     }
 
     #[test]
-    fn broadcast_smoke_via_deprecated_shim() {
+    fn broadcast_smoke() {
         let c = comm(3);
-        let mut bufs = vec![vec![7.0f32; 64], vec![0.0; 64], vec![0.0; 64]];
-        #[allow(deprecated)]
-        c.broadcast_f32(&mut bufs, &CclVariant::Naive.config(1)).unwrap();
-        assert!(bufs.iter().all(|b| b.iter().all(|v| *v == 7.0)));
+        let sends = vec![vec![7.0f32; 64], vec![0.0; 64], vec![0.0; 64]];
+        let mut recvs = vec![vec![0.0f32; 64]; 3];
+        let send_views = views_f32(&sends);
+        let mut recv_views = views_f32_mut(&mut recvs);
+        c.collective(
+            Primitive::Broadcast,
+            &CclVariant::Naive.config(1),
+            64,
+            &send_views,
+            &mut recv_views,
+        )
+        .unwrap();
+        drop(recv_views);
+        assert!(recvs.iter().all(|b| b.iter().all(|v| *v == 7.0)));
+    }
+
+    #[test]
+    fn auto_config_resolves_through_the_decision_cache_not_the_plan_cache() {
+        let c = comm(3);
+        let auto = CclConfig::auto();
+        let resolved = c
+            .resolve_config(Primitive::AllGather, &auto, 3 * 256, Dtype::F32)
+            .unwrap();
+        assert!(!resolved.is_auto());
+        // Resolution tuned one shape (sweeping candidates through the
+        // planner directly) without touching the plan cache.
+        assert_eq!(c.decision_cache().stats().misses, 1);
+        assert_eq!(c.plan_cache().stats().misses, 0);
+        // Planning with `auto` lands on the identical cache entry as
+        // planning with the resolved config explicitly.
+        let via_auto = c.plan(Primitive::AllGather, &auto, 3 * 256, Dtype::F32).unwrap();
+        let explicit = c.plan(Primitive::AllGather, &resolved, 3 * 256, Dtype::F32).unwrap();
+        assert!(std::sync::Arc::ptr_eq(via_auto.as_arc(), explicit.as_arc()));
+        assert_eq!(c.plan_cache().stats().misses, 1, "one concrete shape planned");
+        assert_eq!(c.decision_cache().stats().misses, 1, "decision reused");
     }
 
     #[test]
@@ -586,7 +563,7 @@ mod tests {
         assert!(c
             .collective(
                 Primitive::AllToAll,
-                &CclConfig::default_all(),
+                &CclVariant::All.config(8),
                 15,
                 &send_views,
                 &mut recv_views,
@@ -604,7 +581,7 @@ mod tests {
         let err = c
             .collective(
                 Primitive::AllGather,
-                &CclConfig::default_all(),
+                &CclVariant::All.config(8),
                 12,
                 &send_views,
                 &mut recv_views,
@@ -617,7 +594,7 @@ mod tests {
     fn dtype_mismatch_rejected() {
         let c = comm(3);
         let plan = c
-            .plan(Primitive::AllGather, &CclConfig::default_all(), 12, Dtype::U8)
+            .plan(Primitive::AllGather, &CclVariant::All.config(8), 12, Dtype::U8)
             .unwrap();
         let sends = vec![vec![1.0f32; 12]; 3];
         let mut recvs = vec![vec![0.0f32; 36]; 3];
@@ -641,7 +618,7 @@ mod tests {
             recvs.iter_mut().map(|b| TensorViewMut::u8(b)).collect();
         c.collective(
             Primitive::AllToAll,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             n,
             &send_views,
             &mut recv_views,
@@ -672,7 +649,7 @@ mod tests {
         let err = c
             .collective(
                 Primitive::AllReduce,
-                &CclConfig::default_all(),
+                &CclVariant::All.config(8),
                 n,
                 &send_views,
                 &mut recv_views,
@@ -684,7 +661,7 @@ mod tests {
     #[test]
     fn plan_cache_counts_steady_state_hits() {
         let c = comm(3);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         for _ in 0..3 {
             let _ = c.plan(Primitive::AllGather, &cfg, 3 * 128, Dtype::F32).unwrap();
         }

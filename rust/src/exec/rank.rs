@@ -8,7 +8,7 @@
 //! ```no_run
 //! # use cxl_ccl::prelude::*;
 //! # let comm = Communicator::shm(&ClusterSpec::new(2, 6, 4 << 20)).unwrap();
-//! # let cfg = CclConfig::default_all();
+//! # let cfg = CclVariant::All.config(8);
 //! let pending: Vec<PendingOp<'_>> = (0..2)
 //!     .map(|r| {
 //!         comm.rank(r)
@@ -113,6 +113,9 @@ impl<'c> RankComm<'c> {
     /// (`send_elems`/`recv_elems` of the resolved plan). Ranks calling
     /// `begin` with the same `(primitive, cfg, n_elems, dtype)` join the
     /// same group; the group becomes launchable when all ranks have begun.
+    /// `auto` configs resolve through the communicator's tuner first, so
+    /// ranks mixing `CclConfig::auto()` with the explicitly resolved
+    /// config still join one group.
     pub fn begin(
         &self,
         primitive: Primitive,
@@ -128,6 +131,7 @@ impl<'c> RankComm<'c> {
             recv.dtype()
         );
         let dtype = send.dtype();
+        let cfg = &self.comm.resolve_config(primitive, cfg, n_elems, dtype)?;
         let plan = self.comm.plan(primitive, cfg, n_elems, dtype)?;
         ensure!(
             send.len() >= plan.send_elems,
@@ -310,7 +314,7 @@ mod tests {
     #[test]
     fn group_allreduce_end_to_end() {
         let c = comm(3);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let n = 256;
         let pending: Vec<PendingOp<'_>> = (0..3)
             .map(|r| {
@@ -336,7 +340,7 @@ mod tests {
     #[test]
     fn wait_before_group_complete_fails_fast() {
         let c = comm(3);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let p = c
             .rank(0)
             .unwrap()
@@ -355,7 +359,7 @@ mod tests {
     #[test]
     fn double_begin_same_rank_rejected() {
         let c = comm(2);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let r0 = c.rank(0).unwrap();
         let _p = r0
             .begin(
@@ -387,7 +391,7 @@ mod tests {
             .unwrap()
             .begin(
                 Primitive::AllGather,
-                &CclConfig::default_all(),
+                &CclVariant::All.config(8),
                 64,
                 Tensor::zeros(Dtype::F32, 64),
                 Tensor::zeros(Dtype::U8, 128),
@@ -404,7 +408,7 @@ mod tests {
             .unwrap()
             .begin(
                 Primitive::AllGather,
-                &CclConfig::default_all(),
+                &CclVariant::All.config(8),
                 64,
                 Tensor::zeros(Dtype::F32, 64),
                 Tensor::zeros(Dtype::F32, 64), // needs 128
@@ -416,7 +420,7 @@ mod tests {
     #[test]
     fn abandoned_partial_group_releases_the_shape() {
         let c = comm(2);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let begin0 = |r: usize| {
             c.rank(r).unwrap().begin(
                 Primitive::AllReduce,
@@ -442,7 +446,7 @@ mod tests {
     #[test]
     fn premature_wait_withdraws_only_the_waiter() {
         let c = comm(2);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let begin0 = |r: usize| {
             c.rank(r).unwrap().begin(
                 Primitive::AllGather,
@@ -467,7 +471,7 @@ mod tests {
     #[test]
     fn steady_state_groups_detach_and_recur() {
         let c = comm(2);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         for round in 0..3 {
             let pending: Vec<PendingOp<'_>> = (0..2)
                 .map(|r| {

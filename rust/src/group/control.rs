@@ -50,8 +50,10 @@ pub const POOL_MAGIC: u32 = 0x4343_4C50;
 /// control prefix grew from two epoch halves to an N-deep ring of up to
 /// [`MAX_PIPELINE_DEPTH`] epoch slices (per-slice launch/stream barriers +
 /// a wrapping epoch-word ring), and the layout hash covers the configured
-/// ring depth.
-pub const POOL_PROTO_VERSION: u32 = 5;
+/// ring depth. v6: the layout hash additionally covers the tuner algorithm
+/// version, so builds whose `CclConfig::auto()` resolution could diverge
+/// fail rendezvous instead of desyncing mid-launch.
+pub const POOL_PROTO_VERSION: u32 = 6;
 /// Header slots at the very base of the doorbell region.
 pub const HEADER_SLOTS: usize = 8;
 /// One rendezvous slot per global rank.
@@ -170,9 +172,13 @@ impl PoolControl {
     /// configured pipeline ring depth: slice windows and the `seq % N`
     /// slice assignment are pure functions of it, so mappers configured
     /// with different depths would desync silently — the hash makes them
-    /// fail fast instead.
+    /// fail fast instead. Since v6 it also covers
+    /// [`TUNER_ALGO_VERSION`](crate::collectives::tuner::TUNER_ALGO_VERSION):
+    /// `CclConfig::auto()` resolves per rank through the tuner, so two
+    /// builds whose tuners could pick different plans for the same spec
+    /// must never rendezvous.
     pub(crate) fn layout_hash(spec: &ClusterSpec, pool_len: usize, ring_depth: usize) -> u64 {
-        let mut buf = [0u8; 56];
+        let mut buf = [0u8; 64];
         for (i, v) in [
             spec.nranks as u64,
             spec.ndevices as u64,
@@ -181,6 +187,7 @@ impl PoolControl {
             pool_len as u64,
             POOL_PROTO_VERSION as u64,
             ring_depth as u64,
+            crate::collectives::tuner::TUNER_ALGO_VERSION,
         ]
         .into_iter()
         .enumerate()
@@ -586,5 +593,32 @@ mod tests {
         for depth in [1usize, 3, 4, 8] {
             assert_ne!(PoolControl::layout_hash(&s, 6 << 20, depth), base, "depth {depth}");
         }
+    }
+
+    /// v6: the tuner algorithm version is folded into the fingerprint, so a
+    /// build with a different sweep (which could resolve `auto` launches to
+    /// different plans) fails rendezvous. Pinned by mirroring the hash input
+    /// byte-for-byte: bump `TUNER_ALGO_VERSION` and this stays green, but
+    /// drop it from the buffer and this catches the regression.
+    #[test]
+    fn hash_covers_the_tuner_algorithm_version() {
+        let s = spec();
+        let mut buf = [0u8; 64];
+        for (i, v) in [
+            s.nranks as u64,
+            s.ndevices as u64,
+            s.device_capacity as u64,
+            s.db_region_size as u64,
+            6u64 << 20,
+            POOL_PROTO_VERSION as u64,
+            2u64,
+            crate::collectives::tuner::TUNER_ALGO_VERSION,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            buf[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(PoolControl::layout_hash(&s, 6 << 20, 2), crate::util::fnv1a64(&buf));
     }
 }

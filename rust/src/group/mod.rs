@@ -57,6 +57,7 @@ pub mod control;
 pub mod pipeline;
 
 use crate::collectives::ops::ValidPlan;
+use crate::collectives::tuner::{DecisionCache, TunedDecision};
 use crate::collectives::{CclConfig, PlanCache, Primitive};
 use crate::doorbell::{PoolBarrier, WaitPolicy};
 use crate::exec::reduce_engine::{ReduceEngine, ScalarReduceEngine};
@@ -304,6 +305,7 @@ impl CommWorld {
                 members: (0..world).collect(),
                 grank: rank,
                 cache: PlanCache::new(),
+                decisions: DecisionCache::new(),
                 engine: Arc::new(ScalarReduceEngine),
                 policy: WaitPolicy::default(),
                 op_lock: Mutex::new(()),
@@ -378,6 +380,11 @@ struct PoolGroup {
     /// This process's rank within the group.
     grank: usize,
     cache: PlanCache,
+    /// Tuning decisions for `auto` launches, beside the plan cache. Every
+    /// member computes identical decisions from its own mapping (the
+    /// sweep is a pure function of the spec + ring), so per-process
+    /// caches never diverge.
+    decisions: DecisionCache,
     engine: Arc<dyn ReduceEngine>,
     policy: WaitPolicy,
     /// Serializes this process's blocking group operations (split/barrier)
@@ -573,6 +580,78 @@ impl ProcessGroup {
         }
     }
 
+    /// The group's tuning-decision cache (beside the plan cache): one
+    /// entry per `auto`-resolved shape, with the same hit/miss counter
+    /// discipline. Tuner sweeps plan their candidates directly — never
+    /// through [`ProcessGroup::plan_cache`] — so resolving `auto` shapes
+    /// cannot inflate plan-cache miss counters.
+    pub fn decision_cache(&self) -> &DecisionCache {
+        match &self.inner {
+            GroupImpl::Local(g) => g.comm.decision_cache(),
+            GroupImpl::Pool(g) => &g.decisions,
+        }
+    }
+
+    /// The tuner's decision for one launch shape — what a
+    /// [`CclConfig::auto`] launch of this shape resolves to, exposed for
+    /// introspection (the chosen config plus its sim-predicted time).
+    ///
+    /// Resolution is a pure function of the group's spec, its epoch ring
+    /// (fixed at bootstrap — runtime pacing via
+    /// [`ProcessGroup::set_pipeline_depth`] does not re-tune), and the
+    /// `(primitive, root, n_elems, dtype)` shape: every rank of a
+    /// pool-mode group resolves identically, the same discipline as the
+    /// v5 pipeline-depth resolution. The inputs it depends on are covered
+    /// by the pool layout hash (spec fields, ring depth, tuner algorithm
+    /// version), so incompatible builds fail rendezvous instead of
+    /// resolving divergent plans. Serialized thread-local groups (pacing
+    /// 1 over a multi-slice ring) mirror the launch path's fallback to
+    /// the undivided window when a shape fits no 1/N slice.
+    pub fn resolve_auto(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        dtype: Dtype,
+    ) -> Result<TunedDecision> {
+        let (spec, layout) = match &self.inner {
+            GroupImpl::Local(g) => (g.comm.spec(), g.comm.layout()),
+            GroupImpl::Pool(g) => (&g.spec, &g.layout),
+        };
+        let cache = self.decision_cache();
+        let tuned =
+            cache.get_or_tune(spec, layout, &self.ring, primitive, cfg.root, n_elems, dtype);
+        if tuned.is_err()
+            && matches!(self.inner, GroupImpl::Local(_))
+            && self.ring.len() > 1
+            && self.pipeline_depth() == 1
+        {
+            // The same undivided-window fallback issue_local applies to
+            // fixed configs that fit no 1/N slice (v3 capacity parity;
+            // pool groups never fall back).
+            return cache.get_or_tune(spec, layout, &[], primitive, cfg.root, n_elems, dtype);
+        }
+        tuned
+    }
+
+    /// Resolve a config for one launch shape: fixed configs pass through
+    /// unchanged, `auto` configs resolve via [`ProcessGroup::resolve_auto`].
+    /// The launch surface calls this before any member-agreement check or
+    /// plan-cache lookup, so forming launches and `PlanKey`s only ever see
+    /// concrete configs.
+    pub fn resolve_config(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        dtype: Dtype,
+    ) -> Result<CclConfig> {
+        if !cfg.is_auto() {
+            return Ok(*cfg);
+        }
+        Ok(self.resolve_auto(primitive, cfg, n_elems, dtype)?.cfg)
+    }
+
     /// Adjust doorbell/barrier waiting (timeouts for failure injection).
     /// Drains in-flight launches first: the communicator can only be
     /// reconfigured while no launch thread holds a handle to it.
@@ -588,7 +667,9 @@ impl ProcessGroup {
     }
 
     /// Plan (through the group's cache) without launching, against the
-    /// undivided window view.
+    /// undivided window view. `auto` configs resolve through the group's
+    /// tuner first (at the group's ring depth — the launch decision), so
+    /// the plan cache only ever sees concrete configs.
     pub fn plan(
         &self,
         primitive: Primitive,
@@ -596,6 +677,7 @@ impl ProcessGroup {
         n_elems: usize,
         dtype: Dtype,
     ) -> Result<ValidPlan> {
+        let cfg = &self.resolve_config(primitive, cfg, n_elems, dtype)?;
         match &self.inner {
             GroupImpl::Local(g) => g.comm.plan(primitive, cfg, n_elems, dtype),
             GroupImpl::Pool(g) => {
@@ -721,6 +803,12 @@ impl ProcessGroup {
     /// immediately. Every member must issue the same `(primitive, cfg,
     /// n_elems, dtype)`; the launch overlaps up to
     /// [`ProcessGroup::pipeline_depth`] deep with its predecessors.
+    ///
+    /// `auto` configs resolve through [`ProcessGroup::resolve_config`]
+    /// before the member-agreement check, so every member resolves the
+    /// identical concrete config — members may even mix
+    /// [`CclConfig::auto`] with the explicitly resolved config and still
+    /// join one launch.
     pub fn collective_rank(
         &self,
         rank: usize,
@@ -737,6 +825,7 @@ impl ProcessGroup {
             recv.dtype()
         );
         let dtype = send.dtype();
+        let cfg = &self.resolve_config(primitive, cfg, n_elems, dtype)?;
         match &self.inner {
             GroupImpl::Local(g) => {
                 self.issue_local(g, rank, primitive, cfg, n_elems, dtype, send, recv)
@@ -1119,6 +1208,7 @@ impl ProcessGroup {
                 members,
                 grank: sub_rank,
                 cache: PlanCache::new(),
+                decisions: DecisionCache::new(),
                 engine: Arc::clone(&g.engine),
                 policy: g.policy,
                 op_lock: Mutex::new(()),
@@ -1178,44 +1268,6 @@ impl ProcessGroup {
             })
             .collect()
     }
-
-    // ---- deprecated v3 shims --------------------------------------------
-
-    /// Begin the bound rank's part of a collective.
-    #[deprecated(
-        note = "use the typed per-primitive methods (`all_gather`, `all_reduce`, …) or \
-                `collective(primitive, ..)`, which return a `CollectiveFuture`"
-    )]
-    pub fn begin(
-        &self,
-        primitive: Primitive,
-        cfg: &CclConfig,
-        n_elems: usize,
-        send: Tensor,
-        recv: Tensor,
-    ) -> Result<GroupPending<'_>> {
-        Ok(GroupPending {
-            inner: self.collective(primitive, cfg, n_elems, send, recv)?,
-        })
-    }
-
-    /// [`ProcessGroup::begin`] for an explicit group rank.
-    #[deprecated(
-        note = "use `collective_rank(rank, primitive, ..)`, which returns a `CollectiveFuture`"
-    )]
-    pub fn begin_rank(
-        &self,
-        rank: usize,
-        primitive: Primitive,
-        cfg: &CclConfig,
-        n_elems: usize,
-        send: Tensor,
-        recv: Tensor,
-    ) -> Result<GroupPending<'_>> {
-        Ok(GroupPending {
-            inner: self.collective_rank(rank, primitive, cfg, n_elems, send, recv)?,
-        })
-    }
 }
 
 impl PoolGroup {
@@ -1230,33 +1282,6 @@ impl PoolGroup {
             self.policy,
         )?
         .with_guard(control::generation_offset(), self.ctrl.generation))
-    }
-}
-
-/// A begun-but-not-awaited group launch — the deprecated v3 handle, now a
-/// thin wrapper over [`CollectiveFuture`].
-#[deprecated(note = "use the typed methods on `ProcessGroup` returning `CollectiveFuture`")]
-#[must_use = "a GroupPending does nothing until wait()ed"]
-pub struct GroupPending<'g> {
-    inner: CollectiveFuture<'g>,
-}
-
-#[allow(deprecated)]
-impl<'g> GroupPending<'g> {
-    /// The group rank this launch belongs to.
-    pub fn rank(&self) -> usize {
-        self.inner.rank()
-    }
-
-    /// Block until the group's collective has run; returns this rank's
-    /// recv tensor and the launch's wall-clock duration.
-    pub fn wait(self) -> Result<(Tensor, Duration)> {
-        self.inner.wait()
-    }
-
-    /// The future this shim wraps.
-    pub fn into_future(self) -> CollectiveFuture<'g> {
-        self.inner
     }
 }
 
@@ -1449,7 +1474,7 @@ mod tests {
         // tests/pipeline.rs): every ring depth produces identical bytes.
         let spec = ClusterSpec::new(3, 6, 4 << 20);
         let n = 3 * 256;
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let run = |depth: usize| -> Vec<Vec<u8>> {
             let pg = CommWorld::init(
                 Bootstrap::thread_local(spec.clone()).with_pipeline_depth(depth),
@@ -1494,7 +1519,7 @@ mod tests {
         let spec = ClusterSpec::new(2, 6, 4 << 20);
         let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
         assert_eq!(pg.pipeline_depth(), 2);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let n = 2 * 128;
         let a: Vec<CollectiveFuture<'_>> = (0..2)
             .map(|r| {
@@ -1540,7 +1565,7 @@ mod tests {
     fn mismatched_collective_sequence_is_rejected() {
         let spec = ClusterSpec::new(2, 6, 4 << 20);
         let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let _f = pg
             .collective_rank(
                 0,
@@ -1568,7 +1593,7 @@ mod tests {
     fn abandoned_and_premature_futures_release_the_sequence() {
         let spec = ClusterSpec::new(2, 6, 4 << 20);
         let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let issue = |r: usize| {
             pg.collective_rank(
                 r,
@@ -1639,7 +1664,7 @@ mod tests {
         .unwrap();
         assert_eq!(pg_deep.pipeline_ring().len(), 1, "serialized fallback");
         assert_eq!(pg_deep.pipeline_depth(), 1);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let futs: Vec<CollectiveFuture<'_>> = (0..2)
             .map(|r| {
                 pg1.collective_rank(
@@ -1678,7 +1703,7 @@ mod tests {
             ensure!(pg.pipeline_ring().len() == 1, "expected the serialized fallback");
             ensure!(pg.pipeline_depth() == 1);
             let f = pg.all_gather(
-                &CclConfig::default_all(),
+                &CclVariant::All.config(8),
                 n,
                 Tensor::from_f32(&vec![rank as f32 + 1.0; n]),
                 Tensor::zeros(Dtype::F32, 2 * n),
@@ -1741,7 +1766,7 @@ mod tests {
                 .with_join_timeout(Duration::from_secs(20));
             let pg = CommWorld::init(boot, rank, 2)?;
             pg.seed_launch_seq(seed)?;
-            let cfg = CclConfig::default_all();
+            let cfg = CclVariant::All.config(8);
             let mut outs = Vec::new();
             for round in 0..8u64 {
                 let f = pg.all_reduce(
@@ -1782,7 +1807,7 @@ mod tests {
         let mut spec = ClusterSpec::new(3, 6, 1 << 20);
         spec.db_region_size = 64 * 1024; // 1024 slots
         let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 3).unwrap();
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let n = 262_144; // 1 MiB of f32 per rank
         let issue0 = |pg: &ProcessGroup| {
             pg.collective_rank(
@@ -1824,7 +1849,7 @@ mod tests {
     fn flush_retires_launches_and_unblocks_reseeding() {
         let spec = ClusterSpec::new(2, 6, 4 << 20);
         let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let futs: Vec<CollectiveFuture<'_>> = (0..2)
             .map(|r| {
                 pg.collective_rank(
@@ -1853,7 +1878,7 @@ mod tests {
     fn seeding_with_inflight_launches_is_rejected() {
         let spec = ClusterSpec::new(2, 6, 4 << 20);
         let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let _f = pg
             .collective_rank(
                 0,

@@ -15,7 +15,7 @@
 //!   sum-reduction as a Pallas kernel, exported standalone for the rust
 //!   reduce engine.
 //!
-//! ## Quick start (v5: typed collectives over an N-deep epoch ring)
+//! ## Quick start (v6: tuner-resolved `auto` launches)
 //!
 //! Communicator construction is itself a collective: [`group::CommWorld::init`]
 //! takes a [`group::Bootstrap`] plus `(rank, world_size)` and returns a
@@ -42,7 +42,11 @@
 //!
 //! let spec = ClusterSpec::new(4, 6, 64 << 20); // 4 ranks, 6 CXL devices
 //! let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
-//! let cfg = CclVariant::All.config(4);
+//! // `auto` defers the (variant, chunk-count) choice to the tuner, which
+//! // sweeps every algorithm through the calibrated fabric simulator for
+//! // this exact (topology, primitive, size, dtype) and caches the winner.
+//! // Pin a variant instead (`CclVariant::All.config(4)`) to bypass it.
+//! let cfg = CclConfig::auto();
 //! // Typed nonblocking launches: each rank issues its part; the launch
 //! // spawns once all four joined, and repeated launches of the same shape
 //! // reuse the cached ValidPlan of their epoch slice.
@@ -85,7 +89,7 @@
 //! # let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
 //! let comm = pg.local_comm().unwrap();
 //! let plan: ValidPlan = comm
-//!     .plan(Primitive::AllGather, &CclConfig::default_all(), 1024, Dtype::F32)
+//!     .plan(Primitive::AllGather, &CclVariant::All.config(8), 1024, Dtype::F32)
 //!     .unwrap();
 //! let fabric = SimFabric::new(*comm.layout());
 //! let real = run_with_scratch(comm, &plan).unwrap(); // wall-clock over the pool
@@ -96,20 +100,21 @@
 //! See `examples/quickstart.rs` for a complete runnable version, and the
 //! README for the two-terminal multi-process walkthrough.
 //!
-//! ## v4 → v5 migration
+//! ## Current surface (v6)
 //!
-//! The typed launch surface is unchanged; what generalized is the pipeline
-//! underneath it — two hardcoded epoch halves became an N-deep ring:
+//! One table instead of per-version migration diffs — this is the whole
+//! supported launch surface today (the v1 `*_f32` helpers, `execute` /
+//! `run_plan`, and the v3 `begin` / `GroupPending` shims are gone):
 //!
-//! | v4 | v5 |
-//! |----|----|
-//! | `PoolLayout::pipeline_halves()` (exactly 2) | `PoolLayout::pipeline_slices(n)` — N slice views carved with the weighted-shares fixup (`pipeline_halves` remains as the `n = 2` convenience) |
-//! | depth fixed at 1 or 2; `set_pipeline_depth(2)` the ceiling | ring depth configured at bootstrap: `Bootstrap::with_pipeline_depth(n)` (`n >= 1`; pool mode caps at `group::MAX_PIPELINE_DEPTH` = 8); `set_pipeline_depth` now paces `1..=ring` without changing slice assignment |
-//! | `pg.pipeline_layouts() -> Option<&[PoolLayout; 2]>` | `pg.pipeline_ring() -> &[PoolLayout]` (length 1 = serialized) |
-//! | pool control plane v4 (16-slot group prefix: 2 epoch halves) | v5 (64-slot prefix: up to 8 per-slice launch/stream barriers + epoch words, whole-group barrier); epoch words are the wrapping-truncated **global** launch sequence, which stays unambiguous under the slice-index drift odd depths exhibit at the u64 wrap |
-//! | layout hash: topology + pool + protocol | also covers the **configured ring depth** — mappers configured with different `--pipeline-depth`s fail fast at rendezvous instead of desyncing |
-//! | unsupported depth surfaced as a planning error mid-train | validated up front: pool bootstraps reject an *explicitly configured* unsupported depth at `CommWorld::init` with a grow-capacity/lower-depth hint (the unconfigured default still resolves best-effort to serialized, as in v4); thread-local bootstraps always fall back to serialized |
-//! | steady state: two plan-cache misses per shape | N misses per shape (one per slice), hits thereafter |
+//! | Concern | Surface |
+//! |---------|---------|
+//! | Bootstrap | `CommWorld::init(Bootstrap::thread_local(spec) \| Bootstrap::pool(path, spec), rank, n)`; `Bootstrap::with_pipeline_depth(n)` configures the epoch ring (pool mode caps at `group::MAX_PIPELINE_DEPTH` = 8) |
+//! | Algorithm choice | `CclConfig::auto()` — the tuner sweeps `CclVariant::ALL` × chunk counts through `SimFabric` and caches the winner per (topology, primitive, size, dtype, ring depth) in a `DecisionCache`; or pin one: `CclVariant::All.config(8).with_root(r)` |
+//! | Launch | typed per-primitive methods (`all_gather`, `all_reduce`, `broadcast`, `gather`, `scatter`, `reduce`, `reduce_scatter`, `all_to_all`) or `collective(_rank)` — all return a nonblocking [`group::CollectiveFuture`]; `flush()` drains |
+//! | Pipelining | launch `seq` runs on epoch-ring slice `seq % depth`; `set_pipeline_depth` paces `1..=ring` at runtime without re-tuning or re-slicing |
+//! | Plans | validated once at planning into [`collectives::ValidPlan`]s, cached per epoch slice in `PlanCache` (misses == distinct shapes); tuner sweeps never touch it |
+//! | Introspection | `pg.resolve_config(..)` / `pg.resolve_auto(..)` expose the tuner's decision; `pg.plan_cache()` / `pg.decision_cache()` expose hit/miss/eviction stats |
+//! | Subgroups | `pg.split(..)` carves disjoint doorbell + device windows; pool rendezvous layout-hashes topology, protocol, ring depth, and tuner algorithm version, so incompatible builds fail fast instead of desyncing |
 
 pub mod baseline;
 pub mod bench_util;
@@ -133,14 +138,12 @@ pub mod util;
 /// Convenience re-exports for the common API surface.
 pub mod prelude {
     pub use crate::collectives::{
-        plan_collective, plan_collective_dtype, run_with_scratch, CacheStats, CclConfig,
-        CclVariant, CollectiveBackend, CollectivePlan, ExecOutcome, PlanCache, Primitive,
-        ValidPlan,
+        plan_collective, plan_collective_dtype, run_with_scratch, tune_decision, CacheStats,
+        CclConfig, CclVariant, CollectiveBackend, CollectivePlan, DecisionCache, DecisionKey,
+        ExecOutcome, PlanCache, Primitive, TuneMode, TunedDecision, ValidPlan,
     };
     pub use crate::exec::{Communicator, PendingOp, RankComm};
     pub use crate::group::{Bootstrap, CollectiveFuture, CommWorld, ProcessGroup};
-    #[allow(deprecated)]
-    pub use crate::group::GroupPending;
     pub use crate::sim::fabric::SimFabric;
     pub use crate::tensor::{Dtype, Tensor, TensorView, TensorViewMut};
     pub use crate::topology::ClusterSpec;

@@ -490,7 +490,7 @@ impl CollectiveBackend for SimFabric {
 mod tests {
     use super::*;
     use crate::collectives::builder::plan_collective;
-    use crate::collectives::{CclConfig, CclVariant, Primitive};
+    use crate::collectives::{CclVariant, Primitive};
     use crate::topology::ClusterSpec;
 
     fn setup(nranks: usize) -> (ClusterSpec, PoolLayout, SimFabric) {
@@ -538,7 +538,7 @@ mod tests {
             Primitive::Gather,
             &spec1,
             &layout1,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             16 << 20,
         )
         .unwrap();
@@ -549,7 +549,7 @@ mod tests {
             Primitive::Gather,
             &spec6,
             &layout6,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             16 << 20,
         )
         .unwrap();
@@ -599,7 +599,7 @@ mod tests {
         let (spec, layout, fab) = setup(3);
         for p in Primitive::ALL {
             let plan =
-                plan_collective(p, &spec, &layout, &CclConfig::default_all(), 3 << 14).unwrap();
+                plan_collective(p, &spec, &layout, &CclVariant::All.config(8), 3 << 14).unwrap();
             let rep = fab.simulate(&plan).unwrap();
             let expected: usize = plan.total_pool_bytes();
             let simulated: usize = rep.device_bytes.iter().sum();
@@ -621,7 +621,7 @@ mod tests {
             Primitive::AllReduce,
             &spec,
             &layout,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             3 << 16,
         )
         .unwrap();
@@ -661,7 +661,7 @@ mod tests {
         let (spec, layout, fab) = setup(3);
         let [even, odd] = layout.pipeline_halves().unwrap();
         let n = 12 << 20;
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let plan_even =
             plan_collective(Primitive::AllGather, &spec, &even, &cfg, n).unwrap();
         let plan_odd = plan_collective(Primitive::AllGather, &spec, &odd, &cfg, n).unwrap();
@@ -704,7 +704,7 @@ mod tests {
         // is impossible there; the fluid model would even show it
         // backfiring through same-device contention in the gate chain.)
         let (spec, layout, fab) = setup(3);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let n = 12 << 20;
         let k = 6usize;
         let ring3 = layout.pipeline_slices(3).unwrap();
@@ -752,7 +752,7 @@ mod tests {
             Primitive::AllReduce,
             &spec,
             &layout,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             3 << 16,
         )
         .unwrap();
@@ -771,7 +771,7 @@ mod tests {
             Primitive::AllGather,
             &spec,
             &layout,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             3 << 14,
         )
         .unwrap();

@@ -24,7 +24,7 @@
 //! which is what hides barrier latency once buckets get small.
 
 use crate::baseline::{collective_time, IbParams};
-use crate::collectives::{CclConfig, CclVariant, CollectiveBackend, Primitive};
+use crate::collectives::{CclConfig, CollectiveBackend, Primitive};
 use crate::exec::Communicator;
 use crate::group::{Bootstrap, CollectiveFuture, CommWorld, ProcessGroup};
 use crate::runtime::{AdamUpdate, ModelStep, PjrtRuntime};
@@ -43,9 +43,11 @@ pub struct TrainConfig {
     /// Model preset name (must exist in the artifact manifest).
     pub preset: String,
     pub steps: usize,
-    /// CXL-CCL variant + slicing factor for both collectives.
-    pub variant: CclVariant,
-    pub chunks: usize,
+    /// Launch config for both collectives: `CclConfig::auto()` (the
+    /// default — the tuner resolves a (variant, chunks) pair per bucket
+    /// shape, memoized in the group's decision cache) or a pinned
+    /// variant.
+    pub ccl: CclConfig,
     pub seed: u64,
     /// CXL devices in the pool (paper testbed: 6).
     pub ndevices: usize,
@@ -63,8 +65,7 @@ impl Default for TrainConfig {
         Self {
             preset: "tiny".into(),
             steps: 20,
-            variant: CclVariant::All,
-            chunks: 8,
+            ccl: CclConfig::auto(),
             seed: 0,
             ndevices: 6,
             comm_buckets: 2,
@@ -213,7 +214,10 @@ impl FsdpTrainer {
     /// steady-state loop replans nothing.
     pub fn sim_step_comm(&self) -> Result<(f64, f64)> {
         let fab = SimFabric::new(*self.comm().layout());
-        let ccl = self.cfg.variant.config(self.cfg.chunks);
+        // An auto config resolves inside `Communicator::plan` (through its
+        // decision cache), so the virtual-time columns report the same
+        // tuner choice the launches run with.
+        let ccl = self.cfg.ccl;
         let ag = self
             .comm()
             .plan(Primitive::AllGather, &ccl, self.shard_len, Dtype::F32)?;
@@ -230,7 +234,10 @@ impl FsdpTrainer {
     /// Run one FSDP step.
     pub fn step(&mut self) -> Result<StepReport> {
         self.step_count += 1;
-        let ccl: CclConfig = self.cfg.variant.config(self.cfg.chunks);
+        // Passed straight through: `collective_rank` resolves an auto
+        // config per bucket shape via the group's decision cache, so
+        // bucketed AG and RS launches each get their own tuned choice.
+        let ccl: CclConfig = self.cfg.ccl;
         let buckets = bucket_ranges(self.shard_len, self.cfg.comm_buckets);
 
         // (1) AllGather parameter shards -> full (padded) flat params,

@@ -18,7 +18,7 @@ fn both_backends_run_the_same_plan_through_the_trait() {
     let comm = Communicator::shm(&spec).unwrap();
     let fabric = SimFabric::new(*comm.layout());
     let plan = comm
-        .plan(Primitive::AllGather, &CclConfig::default_all(), 3 * 512, Dtype::F32)
+        .plan(Primitive::AllGather, &CclVariant::All.config(8), 3 * 512, Dtype::F32)
         .unwrap();
 
     let backends: [&dyn CollectiveBackend; 2] = [&comm, &fabric];
@@ -47,7 +47,7 @@ fn trait_run_moves_real_data_on_the_executor() {
         .collect();
     let mut recvs = vec![vec![0.0f32; n]; 3];
     let plan = comm
-        .plan(Primitive::AllReduce, &CclConfig::default_all(), n, Dtype::F32)
+        .plan(Primitive::AllReduce, &CclVariant::All.config(8), n, Dtype::F32)
         .unwrap();
     {
         let send_views = views_f32(&sends);
@@ -71,7 +71,7 @@ fn trait_run_moves_real_data_on_the_executor() {
 fn cached_loop_matches_uncached(dtype: Dtype, primitive: Primitive) {
     let spec = spec3();
     let n = 3 * 1024;
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let esize = dtype.size_bytes();
 
     // Deterministic per-rank payloads (raw bytes work for every dtype; for
@@ -167,7 +167,7 @@ fn f16_payloads_move_and_reduce() {
     let spec = spec3();
     let comm = Communicator::shm(&spec).unwrap();
     let n = 3 * 256;
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     // Movement primitives work for 16-bit payloads...
     let bytes: Vec<u8> = (0..n * 2).map(|i| i as u8).collect();
     let sends: Vec<Tensor> = (0..3)
@@ -223,7 +223,7 @@ fn backends_reject_bad_buffers_identically() {
     let fabric = SimFabric::new(*comm.layout());
     let n = 3 * 64;
     let plan = comm
-        .plan(Primitive::AllGather, &CclConfig::default_all(), n, Dtype::F32)
+        .plan(Primitive::AllGather, &CclVariant::All.config(8), n, Dtype::F32)
         .unwrap();
     let sends: Vec<Vec<f32>> = vec![vec![0.0; n]; 3];
     let mut short: Vec<Vec<f32>> = vec![vec![0.0; n]; 3]; // allgather needs 3n
@@ -248,7 +248,7 @@ fn concurrent_group_launches_serialize_safely() {
     // pool executions (one doorbell region) so both stay correct.
     let spec = spec3();
     let comm = Communicator::shm(&spec).unwrap();
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let n = 3 * 256;
     std::thread::scope(|s| {
         let comm = &comm;

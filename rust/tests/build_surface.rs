@@ -1,17 +1,18 @@
 //! Pins the documented public API surface: the `lib.rs` quick-start must
 //! keep compiling and running end-to-end through the `prelude` exactly as
 //! written in the crate docs and README, so CI catches any break of the
-//! documented entry point. The deprecated v1 shims are pinned separately —
-//! downstream snippets written against them must keep compiling.
+//! documented entry point. (The v1/v3 deprecated shims were removed with
+//! the v6 auto surface; only the current surface is pinned.)
 
 use cxl_ccl::prelude::*;
 
 #[test]
 fn doc_quick_start_runs_end_to_end() {
-    // Verbatim shape of the lib.rs v4 quick-start (4 ranks, 6 CXL devices).
+    // Verbatim shape of the lib.rs v6 quick-start (4 ranks, 6 CXL devices,
+    // tuner-resolved auto config).
     let spec = ClusterSpec::new(4, 6, 64 << 20);
     let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
-    let cfg = CclVariant::All.config(4);
+    let cfg = CclConfig::auto();
     let futures: Vec<CollectiveFuture<'_>> = (0..4)
         .map(|r| {
             pg.collective_rank(
@@ -40,7 +41,7 @@ fn typed_per_primitive_methods_are_pinned() {
     // both ranks are driven via collective_rank.
     let spec = ClusterSpec::new(2, 6, 16 << 20);
     let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let n = 2 * 64;
     type IssueFn = for<'a> fn(
         &'a ProcessGroup,
@@ -97,7 +98,7 @@ fn doc_two_backend_snippet_runs() {
     let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 4).unwrap();
     let comm = pg.local_comm().unwrap();
     let plan: ValidPlan = comm
-        .plan(Primitive::AllGather, &CclConfig::default_all(), 1024, Dtype::F32)
+        .plan(Primitive::AllGather, &CclVariant::All.config(8), 1024, Dtype::F32)
         .unwrap();
     let fabric = SimFabric::new(*comm.layout());
     let real = run_with_scratch(comm, &plan).unwrap();
@@ -159,67 +160,36 @@ fn simulate_through_prelude_types() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn deprecated_v3_begin_shims_still_compile_and_run() {
-    // Downstream code written against the v3 begin/wait surface must keep
-    // working: the shims route through the typed future machinery.
-    let spec = ClusterSpec::new(3, 6, 16 << 20);
-    let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 3).unwrap();
-    let cfg = CclConfig::default_all();
-    let pending: Vec<GroupPending<'_>> = (0..3)
-        .map(|r| {
-            pg.begin_rank(
-                r,
-                Primitive::AllReduce,
-                &cfg,
-                256,
-                Tensor::from_f32(&vec![1.0; 256]),
-                Tensor::zeros(Dtype::F32, 256),
-            )
-            .unwrap()
-        })
-        .collect();
-    for p in pending {
-        let (out, _) = p.wait().unwrap();
-        assert!(out.to_f32().unwrap().iter().all(|v| *v == 3.0));
-    }
-    // begin() addresses the bound rank; a GroupPending converts into the
-    // future it wraps.
-    let p = pg
-        .begin(
-            Primitive::AllGather,
-            &cfg,
-            64,
-            Tensor::zeros(Dtype::F32, 64),
-            Tensor::zeros(Dtype::F32, 192),
-        )
-        .unwrap();
-    assert_eq!(p.rank(), 0);
-    let fut: CollectiveFuture<'_> = p.into_future();
-    drop(fut); // withdraws the lone rank; the group stays usable
-    pg.flush().unwrap();
-}
-
-#[test]
-#[allow(deprecated)]
-fn deprecated_v1_shims_still_compile_and_run() {
-    // The pre-redesign README snippet, kept alive as thin shims.
-    let topo = ClusterSpec::new(4, 6, 64 << 20);
-    let comm = Communicator::shm(&topo).unwrap();
-    let mut bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 1024]).collect();
-    comm.all_reduce_f32(&mut bufs, &CclVariant::All.config(4)).unwrap();
-    for b in &bufs {
-        assert!(b.iter().all(|v| *v == 6.0));
-    }
-    let sends = bufs.clone();
-    let mut recvs = vec![vec![0.0f32; 1024]; 4];
-    comm.execute(
-        Primitive::Broadcast,
-        &CclConfig::default_all(),
-        1024,
-        &sends,
-        &mut recvs,
+fn tuner_surface_is_pinned() {
+    // The v6 names the docs promise: TuneMode, CclConfig::auto(), the
+    // decision cache + key, and the pure tuning entry point — all through
+    // the prelude.
+    let spec = ClusterSpec::paper(16 << 20);
+    let layout = cxl_ccl::pool::PoolLayout::from_spec(&spec).unwrap();
+    let auto = CclConfig::auto();
+    assert!(auto.is_auto());
+    assert_eq!(auto.mode, TuneMode::Auto);
+    assert_eq!(CclVariant::All.config(8).mode, TuneMode::Fixed);
+    let d: TunedDecision =
+        tune_decision(&spec, &layout, &[], Primitive::AllGather, 0, 3 * 256, Dtype::F32)
+            .unwrap();
+    assert!(!d.cfg.is_auto(), "a resolved decision is a concrete config");
+    let cache = DecisionCache::new();
+    assert_eq!(cache.stats(), CacheStats::default());
+    let key = DecisionKey::new(Primitive::AllGather, 0, &spec, &layout, 1, 3 * 256, Dtype::F32);
+    assert_eq!(cache.peek(&key), None);
+    // Group-level introspection: resolution is exposed, not hidden.
+    let pg = CommWorld::init(
+        Bootstrap::thread_local(ClusterSpec::new(2, 6, 4 << 20)),
+        0,
+        2,
     )
     .unwrap();
-    assert_eq!(recvs[3], sends[0]);
+    let resolved = pg.resolve_config(Primitive::AllGather, &auto, 2 * 64, Dtype::F32).unwrap();
+    assert!(!resolved.is_auto());
+    assert_eq!(
+        pg.resolve_config(Primitive::AllGather, &resolved, 2 * 64, Dtype::F32).unwrap(),
+        resolved,
+        "fixed configs pass through resolution untouched"
+    );
 }

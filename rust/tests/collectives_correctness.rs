@@ -86,12 +86,12 @@ fn ragged_message_sizes() {
             Primitive::Scatter,
             Primitive::Reduce,
         ] {
-            check(&comm, p, &CclConfig::default_all(), n, &mut rng);
+            check(&comm, p, &CclVariant::All.config(8), n, &mut rng);
         }
     }
     for n in [3usize, 99, 3 * 4097] {
-        check(&comm, Primitive::ReduceScatter, &CclConfig::default_all(), n, &mut rng);
-        check(&comm, Primitive::AllToAll, &CclConfig::default_all(), n, &mut rng);
+        check(&comm, Primitive::ReduceScatter, &CclVariant::All.config(8), n, &mut rng);
+        check(&comm, Primitive::AllToAll, &CclVariant::All.config(8), n, &mut rng);
     }
 }
 
@@ -101,7 +101,7 @@ fn more_ranks_than_devices() {
     let comm = Communicator::shm(&ClusterSpec::new(8, 6, 8 << 20)).unwrap();
     let mut rng = SplitMix64::new(13);
     for p in Primitive::ALL {
-        check(&comm, p, &CclConfig::default_all(), 8 * 256, &mut rng);
+        check(&comm, p, &CclVariant::All.config(8), 8 * 256, &mut rng);
         check(&comm, p, &CclVariant::Naive.config(1), 8 * 256, &mut rng);
     }
 }
@@ -124,7 +124,7 @@ fn single_device_pool() {
     let comm = Communicator::shm(&ClusterSpec::new(3, 1, 16 << 20)).unwrap();
     let mut rng = SplitMix64::new(31);
     for p in Primitive::ALL {
-        check(&comm, p, &CclConfig::default_all(), 3 * 512, &mut rng);
+        check(&comm, p, &CclVariant::All.config(8), 3 * 512, &mut rng);
     }
 }
 
@@ -150,8 +150,8 @@ fn large_message_multi_megabyte() {
     let comm = Communicator::shm(&ClusterSpec::new(3, 6, 32 << 20)).unwrap();
     let mut rng = SplitMix64::new(41);
     // 12 MiB per rank through the pool.
-    check(&comm, Primitive::AllGather, &CclConfig::default_all(), 3 << 20, &mut rng);
-    check(&comm, Primitive::AllReduce, &CclConfig::default_all(), 3 << 20, &mut rng);
+    check(&comm, Primitive::AllGather, &CclVariant::All.config(8), 3 << 20, &mut rng);
+    check(&comm, Primitive::AllReduce, &CclVariant::All.config(8), 3 << 20, &mut rng);
 }
 
 #[test]
@@ -163,7 +163,7 @@ fn repeated_collectives_reuse_pool() {
         check(
             &comm,
             if i % 2 == 0 { Primitive::AllReduce } else { Primitive::AllToAll },
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             3 * 512,
             &mut rng,
         );
@@ -177,5 +177,5 @@ fn dax_file_backed_pool() {
     let spec = ClusterSpec::new(3, 6, 4 << 20);
     let comm = Communicator::shm_dax(&spec, path).unwrap();
     let mut rng = SplitMix64::new(47);
-    check(&comm, Primitive::AllGather, &CclConfig::default_all(), 3 * 256, &mut rng);
+    check(&comm, Primitive::AllGather, &CclVariant::All.config(8), 3 * 256, &mut rng);
 }

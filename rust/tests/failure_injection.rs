@@ -2,7 +2,7 @@
 //! hangs, corruption, or silent truncation.
 
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclConfig, CclVariant, Primitive};
+use cxl_ccl::collectives::{CclVariant, Primitive};
 use cxl_ccl::doorbell::WaitPolicy;
 use cxl_ccl::exec::Communicator;
 use cxl_ccl::pool::PoolLayout;
@@ -19,7 +19,7 @@ fn pool_too_small_is_a_plan_error() {
         Primitive::AllGather,
         &spec,
         &layout,
-        &CclConfig::default_all(),
+        &CclVariant::All.config(8),
         3 * (2 << 20),
     )
     .unwrap_err();
@@ -152,7 +152,7 @@ fn reduce_scatter_indivisible_size_errors() {
     let err = comm
         .collective(
             Primitive::ReduceScatter,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             100,
             &send_views,
             &mut recv_views,
@@ -184,7 +184,7 @@ fn back_to_back_error_then_success_leaves_pool_usable() {
         let mut recv_views = views_f32_mut(&mut recvs_bad);
         let _ = comm.collective(
             Primitive::ReduceScatter,
-            &CclConfig::default_all(),
+            &CclVariant::All.config(8),
             100,
             &send_views,
             &mut recv_views,
@@ -196,7 +196,7 @@ fn back_to_back_error_then_success_leaves_pool_usable() {
     let mut recv_views = views_f32_mut(&mut bufs);
     comm.collective(
         Primitive::AllReduce,
-        &CclConfig::default_all(),
+        &CclVariant::All.config(8),
         300,
         &send_views,
         &mut recv_views,

@@ -60,7 +60,7 @@ fn thread_local_transcript(depth: usize, dtype: Dtype) -> Vec<Vec<u8>> {
         .with_pipeline_depth(depth);
     let pg = CommWorld::init(boot, 0, nr).unwrap();
     assert_eq!(pg.pipeline_ring().len(), depth, "ring must be {depth} deep");
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let mut in_flight: VecDeque<Vec<CollectiveFuture<'_>>> = VecDeque::new();
     let mut out = Vec::new();
     for round in 0..ROUNDS {
@@ -113,7 +113,7 @@ fn pool_transcript(depth: usize, dtype: Dtype, tag: &str) -> Vec<Vec<u8>> {
             .with_pipeline_depth(depth);
         let pg = CommWorld::init(boot, rank, nr)?;
         anyhow::ensure!(pg.pipeline_ring().len() == depth);
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let mut futs = VecDeque::new();
         let mut outs = Vec::new();
         for round in 0..ROUNDS {
@@ -222,7 +222,7 @@ fn pool_epoch_ring_wraparound_at_depth3() {
         let pg = CommWorld::init(boot, rank, nr)?;
         anyhow::ensure!(pg.pipeline_ring().len() == 3);
         pg.seed_launch_seq(seed)?;
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let mut futs = VecDeque::new();
         let mut outs = Vec::new();
         for round in 0..rounds {
@@ -272,7 +272,7 @@ fn boundary_spec() -> ClusterSpec {
 }
 
 fn boundary_train(pg: &ProcessGroup, launches: usize) -> Vec<Vec<u8>> {
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let n = BOUNDARY_ELEMS;
     let mut out = Vec::new();
     for round in 0..launches {
@@ -299,7 +299,7 @@ fn boundary_train(pg: &ProcessGroup, launches: usize) -> Vec<Vec<u8>> {
 
 #[test]
 fn capacity_boundary_shape_fits_half_but_not_quarter() {
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let n = BOUNDARY_ELEMS;
     // Ring 2: every launch fits its half window — the whole train runs.
     let pg2 = CommWorld::init(
@@ -381,7 +381,7 @@ fn pool_groups_surface_the_slice_capacity_error_fast() {
             .with_join_timeout(Duration::from_secs(20))
             .with_pipeline_depth(2);
         let pg = CommWorld::init(boot, rank, nr)?;
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let err = pg
             .all_gather(
                 &cfg,
@@ -416,7 +416,7 @@ fn dropped_futures_neither_wedge_the_ring_nor_leak_threads() {
         .with_pipeline_depth(3);
     let pg = CommWorld::init(boot, 0, nr).unwrap();
     assert_eq!(pg.pipeline_ring().len(), 3);
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let issue_round = |round: usize| {
         (0..nr)
             .map(|r| {
@@ -486,7 +486,7 @@ fn deep_ring_wall_clock_beats_k_times_single_launch() {
     let boot = Bootstrap::thread_local(ClusterSpec::new(nr, 6, 64 << 20))
         .with_pipeline_depth(3);
     let pg = CommWorld::init(boot, 0, nr).unwrap();
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let issue_all = |round: usize| {
         (0..nr)
             .map(|r| {

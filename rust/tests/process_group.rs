@@ -37,7 +37,7 @@ fn pool_bootstrap_two_mappers_allgather_and_allreduce() {
         assert!(pg.is_multiprocess());
         assert_eq!(pg.world_size(), 2);
         assert_eq!(pg.pipeline_depth(), 2, "halvable window defaults to depth 2");
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let mine = vec![rank as f32 + 1.0; n];
         // AllGather of distinct payloads through the typed surface...
         let f = pg.all_gather(
@@ -93,7 +93,7 @@ fn pool_pipelined_launches_overlap_and_stay_correct() {
         let boot = Bootstrap::pool(&path, small_spec(2))
             .with_join_timeout(Duration::from_secs(20));
         let pg = CommWorld::init(boot, rank, 2)?;
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let mut futs = std::collections::VecDeque::new();
         let mut outs = Vec::new();
         for round in 0..rounds {
@@ -190,7 +190,7 @@ fn split_subgroups_are_isolated_and_launch_concurrently() {
     // Every doorbell the subgroup plans actually touch stays inside its
     // own window — checked against the emitted op streams, on the
     // undivided view and on every epoch slice of the inherited ring.
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let n = 2 * 512;
     for sg in &subs {
         let win = sg.doorbell_slot_range();
@@ -289,7 +289,7 @@ fn pool_split_is_weighted_and_subgroups_run_concurrently() {
         // ncclCommSplit shape: ranks 0..3 -> color 0, ranks 4..5 -> color 1.
         let color = usize::from(rank >= 4);
         let sub = pg.split(color, rank)?;
-        let cfg = CclConfig::default_all();
+        let cfg = CclVariant::All.config(8);
         let fill = if color == 0 { 1.0f32 } else { 3.0 };
         let f = sub.all_reduce(
             &cfg,

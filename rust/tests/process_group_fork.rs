@@ -30,7 +30,7 @@ fn payload(rank: usize) -> Vec<f32> {
 fn run_pool_rank(path: &str, rank: usize) -> anyhow::Result<(Vec<u8>, Vec<u8>)> {
     let boot = Bootstrap::pool(path, spec()).with_join_timeout(Duration::from_secs(30));
     let pg = CommWorld::init(boot, rank, 2)?;
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let f_ag = pg.all_gather(
         &cfg,
         N,
@@ -53,7 +53,7 @@ fn run_pool_rank(path: &str, rank: usize) -> anyhow::Result<(Vec<u8>, Vec<u8>)> 
 /// returns `[rank0, rank1]` results for both primitives.
 fn single_process_reference() -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
     let pg = CommWorld::init(Bootstrap::thread_local(spec()), 0, 2).unwrap();
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let collect = |primitive: Primitive, recv_elems: usize| -> Vec<Vec<u8>> {
         let futures: Vec<CollectiveFuture<'_>> = (0..2)
             .map(|r| {

@@ -3,7 +3,7 @@
 
 use cxl_ccl::baseline::{collective_time, IbParams};
 use cxl_ccl::collectives::builder::plan_collective;
-use cxl_ccl::collectives::{CclConfig, CclVariant, Primitive};
+use cxl_ccl::collectives::{CclVariant, Primitive};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::constants as k;
 use cxl_ccl::sim::{SimFabric, SimParams};
@@ -142,7 +142,7 @@ fn custom_params_scale_results() {
     let (spec, layout, _) = fabric(3, 1 << 30);
     let n = (256 << 20) / 4 / 3 * 3;
     let plan =
-        plan_collective(Primitive::AllGather, &spec, &layout, &CclConfig::default_all(), n)
+        plan_collective(Primitive::AllGather, &spec, &layout, &CclVariant::All.config(8), n)
             .unwrap();
     let base = SimFabric::new(layout).simulate(&plan).unwrap().total_time;
     let fast = SimFabric::new(layout)
@@ -165,7 +165,7 @@ fn executor_and_sim_agree_on_plan_structure() {
     let (spec, layout, fab) = fabric(3, 32 << 20);
     let n = 3 * 4096;
     let plan =
-        plan_collective(Primitive::AllToAll, &spec, &layout, &CclConfig::default_all(), n)
+        plan_collective(Primitive::AllToAll, &spec, &layout, &CclVariant::All.config(8), n)
             .unwrap();
     let rep = fab.simulate(&plan).unwrap();
     assert_eq!(

@@ -1,0 +1,251 @@
+//! Tuner acceptance suite (v6): the `auto` launch surface end-to-end.
+//!
+//! Two contracts are pinned here, at the process-group level, on both
+//! bootstrap modes:
+//!
+//! 1. **Determinism** — tuner resolution is a pure function of the launch
+//!    shape and the group's spec/ring: two independently-bootstrapped pool
+//!    mappers of one /dev/shm file resolve bitwise-identical
+//!    [`TunedDecision`]s for every shape, and re-resolving (through the
+//!    decision cache) never changes the answer.
+//! 2. **Conformance** — an `auto` launch is bitwise identical to the same
+//!    launch with the resolved config passed explicitly (F32 and F16,
+//!    ThreadLocal and Pool), including launches whose members mix `auto`
+//!    and resolved-explicit configs: resolution precedes the forming
+//!    comparison, so they join the same launch.
+//!
+//! Plus the counter-isolation regression: resolving `auto` shapes sweeps
+//! candidates through the tuner's own planner, so plan-cache misses keep
+//! meaning "distinct cached shapes" — never tuner traffic.
+
+use cxl_ccl::prelude::*;
+use std::time::Duration;
+
+/// Per-launch, per-rank payload with an irregular bit pattern (dtype-sized
+/// raw bytes, so the same generator serves F32 and F16) — the pipeline
+/// suite's generator.
+fn payload(dtype: Dtype, rank: usize, round: usize, elems: usize) -> Tensor {
+    match dtype {
+        Dtype::F32 => Tensor::from_f32(
+            &(0..elems)
+                .map(|i| (i as f32) * 0.25 + (rank as f32) * 100.0 - (round as f32) * 3.5)
+                .collect::<Vec<_>>(),
+        ),
+        _ => {
+            let bytes: Vec<u8> = (0..elems * dtype.size_bytes())
+                .map(|i| {
+                    (i as u8)
+                        .wrapping_mul(37)
+                        .wrapping_add(rank as u8 * 11)
+                        .wrapping_add(round as u8 * 5)
+                })
+                .collect();
+            // Clear each f16 exponent to keep values finite and ordinary.
+            let bytes = if dtype == Dtype::F16 {
+                bytes
+                    .chunks_exact(2)
+                    .flat_map(|c| [c[0], c[1] & 0b1011_1111])
+                    .collect()
+            } else {
+                bytes
+            };
+            Tensor::from_bytes(bytes, dtype).unwrap()
+        }
+    }
+}
+
+#[test]
+fn pool_mappers_resolve_identical_decisions() {
+    // Property: same spec + same shm seed => identical decision on every
+    // mapper, for a spread of (primitive, size, dtype) shapes, at ring
+    // depth 2 (so slice-parametric planning is part of what must agree).
+    let nr = 2usize;
+    let depth = 2usize;
+    let mut spec = ClusterSpec::new(nr, 6, 1 << 20);
+    spec.db_region_size = 64 * 512;
+    let shapes: [(Primitive, usize, Dtype); 4] = [
+        (Primitive::AllReduce, nr * 128, Dtype::F32),
+        (Primitive::AllGather, nr * 64, Dtype::F16),
+        (Primitive::ReduceScatter, nr * 128, Dtype::F32),
+        (Primitive::Broadcast, nr * 256, Dtype::F32),
+    ];
+    let path = format!("/dev/shm/cxl_ccl_tuner_det_{}", std::process::id());
+    let _ = std::fs::remove_file(&path);
+    let run_rank = |rank: usize| -> anyhow::Result<Vec<TunedDecision>> {
+        let boot = Bootstrap::pool(&path, spec.clone())
+            .with_join_timeout(Duration::from_secs(20))
+            .with_pipeline_depth(depth);
+        let pg = CommWorld::init(boot, rank, nr)?;
+        let auto = CclConfig::auto();
+        let mut out = Vec::new();
+        for (primitive, n, dtype) in shapes {
+            let d = pg.resolve_auto(primitive, &auto, n, dtype)?;
+            anyhow::ensure!(!d.cfg.is_auto(), "a decision must be a concrete config");
+            anyhow::ensure!(d.ring_depth == depth, "decision tuned at the group's ring depth");
+            anyhow::ensure!(d.feasible >= 1, "at least one candidate must plan");
+            // Re-resolution (a decision-cache hit) must be the same answer.
+            anyhow::ensure!(pg.resolve_auto(primitive, &auto, n, dtype)? == d);
+            out.push(d);
+        }
+        pg.barrier()?;
+        Ok(out)
+    };
+    let (a, b) = std::thread::scope(|s| {
+        let h0 = s.spawn(|| run_rank(0));
+        let h1 = s.spawn(|| run_rank(1));
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let (a, b) = (a.unwrap(), b.unwrap());
+    assert_eq!(a, b, "independently-bootstrapped mappers diverged on a tuning decision");
+}
+
+#[test]
+fn auto_matches_resolved_explicit_bitwise_thread_local() {
+    // Conformance: with identical payloads, an auto launch, the same
+    // launch with the resolved config explicit, and a launch whose members
+    // MIX auto and resolved-explicit all produce identical bytes. F32
+    // exercises the reduction path, F16 the raw-byte gather path.
+    let nr = 3usize;
+    let n = nr * 128;
+    let pg =
+        CommWorld::init(Bootstrap::thread_local(ClusterSpec::new(nr, 6, 4 << 20)), 0, nr).unwrap();
+    let auto = CclConfig::auto();
+    for (primitive, dtype) in
+        [(Primitive::AllReduce, Dtype::F32), (Primitive::AllGather, Dtype::F16)]
+    {
+        let send_elems = primitive.send_elems(n, nr);
+        let recv_elems = primitive.recv_elems(n, nr);
+        let explicit = pg.resolve_config(primitive, &auto, n, dtype).unwrap();
+        assert!(!explicit.is_auto());
+        let run = |cfg_of: &dyn Fn(usize) -> CclConfig| -> Vec<Vec<u8>> {
+            let futs: Vec<CollectiveFuture<'_>> = (0..nr)
+                .map(|r| {
+                    pg.collective_rank(
+                        r,
+                        primitive,
+                        &cfg_of(r),
+                        n,
+                        payload(dtype, r, 0, send_elems),
+                        Tensor::zeros(dtype, recv_elems),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            futs.into_iter().map(|f| f.wait().unwrap().0.into_bytes()).collect()
+        };
+        let auto_bytes = run(&|_| auto);
+        let explicit_bytes = run(&|_| explicit);
+        let mixed_bytes = run(&|r| if r == 0 { auto } else { explicit });
+        assert_eq!(auto_bytes, explicit_bytes, "{primitive} {dtype}: auto vs explicit");
+        assert_eq!(auto_bytes, mixed_bytes, "{primitive} {dtype}: mixed-member launch");
+    }
+    pg.flush().unwrap();
+}
+
+/// Pool-mode half of the conformance pin: both mappers run the same
+/// payload through three launches — both-auto, both-explicit, and mixed
+/// (rank 0 auto, rank 1 the resolved config) — and every result must be
+/// bitwise identical, within a rank and across ranks.
+fn pool_conformance(primitive: Primitive, dtype: Dtype, tag: &str) {
+    let nr = 2usize;
+    let n = nr * 128;
+    let mut spec = ClusterSpec::new(nr, 6, 1 << 20);
+    spec.db_region_size = 64 * 512;
+    let path = format!("/dev/shm/cxl_ccl_tuner_conf_{tag}_{}", std::process::id());
+    let _ = std::fs::remove_file(&path);
+    let run_rank = |rank: usize| -> anyhow::Result<Vec<Vec<u8>>> {
+        let boot =
+            Bootstrap::pool(&path, spec.clone()).with_join_timeout(Duration::from_secs(20));
+        let pg = CommWorld::init(boot, rank, nr)?;
+        let auto = CclConfig::auto();
+        let explicit = pg.resolve_config(primitive, &auto, n, dtype)?;
+        anyhow::ensure!(!explicit.is_auto());
+        let send_elems = primitive.send_elems(n, nr);
+        let recv_elems = primitive.recv_elems(n, nr);
+        let mixed = if rank == 0 { auto } else { explicit };
+        let mut outs = Vec::new();
+        for cfg in [auto, explicit, mixed] {
+            let f = pg.collective(
+                primitive,
+                &cfg,
+                n,
+                payload(dtype, rank, 0, send_elems),
+                Tensor::zeros(dtype, recv_elems),
+            )?;
+            outs.push(f.wait()?.0.into_bytes());
+        }
+        pg.flush()?;
+        Ok(outs)
+    };
+    let (a, b) = std::thread::scope(|s| {
+        let h0 = s.spawn(|| run_rank(0));
+        let h1 = s.spawn(|| run_rank(1));
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let (a, b) = (a.unwrap(), b.unwrap());
+    assert_eq!(a[0], a[1], "{primitive} {dtype}: auto vs explicit diverged");
+    assert_eq!(a[0], a[2], "{primitive} {dtype}: mixed-member launch diverged");
+    // AllReduce and AllGather land the same bytes on every rank.
+    assert_eq!(a, b, "{primitive} {dtype}: ranks disagree");
+}
+
+#[test]
+fn auto_matches_resolved_explicit_bitwise_pool_f32() {
+    pool_conformance(Primitive::AllReduce, Dtype::F32, "f32");
+}
+
+#[test]
+fn auto_matches_resolved_explicit_bitwise_pool_f16() {
+    pool_conformance(Primitive::AllGather, Dtype::F16, "f16");
+}
+
+#[test]
+fn auto_resolution_counts_decision_misses_not_plan_misses() {
+    // Counter isolation: a train of auto launches over one shape is ONE
+    // decision-cache miss (then hits) and ONE plan-cache miss — the tuner's
+    // candidate sweep plans directly, so plan-cache misses keep counting
+    // distinct cached shapes. A second shape moves each counter by one.
+    let nr = 3usize;
+    let n = nr * 128;
+    let pg =
+        CommWorld::init(Bootstrap::thread_local(ClusterSpec::new(nr, 6, 4 << 20)), 0, nr).unwrap();
+    let auto = CclConfig::auto();
+    let plan0 = pg.plan_cache().stats();
+    let dec0 = pg.decision_cache().stats();
+    let train = |n_elems: usize, rounds: usize| {
+        for round in 0..rounds {
+            let futs: Vec<CollectiveFuture<'_>> = (0..nr)
+                .map(|r| {
+                    pg.collective_rank(
+                        r,
+                        Primitive::AllReduce,
+                        &auto,
+                        n_elems,
+                        payload(Dtype::F32, r, round, n_elems),
+                        Tensor::zeros(Dtype::F32, n_elems),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            for f in futs {
+                f.wait().unwrap();
+            }
+        }
+    };
+    train(n, 3);
+    let plan1 = pg.plan_cache().stats();
+    let dec1 = pg.decision_cache().stats();
+    assert_eq!(dec1.misses - dec0.misses, 1, "one distinct auto shape == one decision miss");
+    assert_eq!(dec1.hits - dec0.hits, nr * 3 - 1, "every later resolution is a hit");
+    assert_eq!(
+        plan1.misses - plan0.misses,
+        1,
+        "tuner candidate sweeps must not inflate plan-cache misses"
+    );
+    train(2 * n, 1);
+    let plan2 = pg.plan_cache().stats();
+    let dec2 = pg.decision_cache().stats();
+    assert_eq!(dec2.misses - dec1.misses, 1, "a new shape is exactly one more decision miss");
+    assert_eq!(plan2.misses - plan1.misses, 1, "and exactly one more plan miss");
+    pg.flush().unwrap();
+}

@@ -14,7 +14,7 @@ use cxl_ccl::tensor::{views_f32, views_f32_mut};
 fn steady_state_launches_never_revalidate() {
     let spec = ClusterSpec::new(3, 6, 8 << 20);
     let comm = Communicator::shm(&spec).unwrap();
-    let cfg = CclConfig::default_all();
+    let cfg = CclVariant::All.config(8);
     let n = 3 * 512;
 
     // Planning validates exactly once, inside the ValidPlan gate.
@@ -72,7 +72,7 @@ fn steady_state_launches_never_revalidate() {
     // validations, paid in the warm-up rounds); every pipelined launch
     // after that is validation-free.
     let pg = CommWorld::init(Bootstrap::thread_local(spec.clone()), 0, 3).unwrap();
-    let cfg2 = CclConfig::default_all();
+    let cfg2 = CclVariant::All.config(8);
     let issue_round = |pg: &ProcessGroup| {
         let futs: Vec<CollectiveFuture<'_>> = (0..3)
             .map(|r| {

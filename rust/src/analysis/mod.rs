@@ -1,0 +1,818 @@
+//! Static race & aliasing analysis for collective plans and the pool
+//! control plane.
+//!
+//! The collectives in this crate synchronize through hand-rolled protocol
+//! over non-coherent shared memory — doorbell publishes, sense-reversing
+//! barriers, epoch-ring slice tenancy — so a plan that *executes* is not
+//! automatically a plan that is *correct under every interleaving*. This
+//! module builds a happens-before model of a [`CollectivePlan`]'s per-rank
+//! op streams and checks the invariants the runtime otherwise only
+//! exercises dynamically:
+//!
+//! 1. **Data-race freedom** ([`DiagnosticKind::WriteWriteRace`],
+//!    [`DiagnosticKind::ReadBeforePublish`]): any two pool accesses to
+//!    overlapping byte ranges from different streams, at least one of them
+//!    a write, must be ordered by the happens-before relation (program
+//!    order within a stream, `SetDoorbell -> WaitDoorbell` publication
+//!    edges, and barrier rendezvous phases).
+//! 2. **Window containment** ([`DiagnosticKind::WindowEscape`]): every op
+//!    stays inside the layout view it was planned against — data bytes on
+//!    the view's devices (no device straddles, never inside the per-device
+//!    doorbell-region reserve), doorbell indices within the view's slot
+//!    window. This is the `split`/`pipeline_slices` isolation invariant.
+//! 3. **Cross-slice exclusivity** ([`DiagnosticKind::CrossSliceAlias`]):
+//!    two in-flight launches of an epoch ring share no doorbell slot, no
+//!    device, and never touch the group-control words (launch/stream
+//!    barrier counters, epoch words) carved in front of the plan window.
+//! 4. **Publication uniqueness** ([`DiagnosticKind::DoorbellReuse`]): a
+//!    doorbell slot is set at most once per barrier phase — doorbells are
+//!    only reset between launches, so a second set in the same phase is a
+//!    publish collision a reader cannot distinguish.
+//!
+//! The happens-before model is deliberately conservative: a `SetDoorbell`
+//! edge is drawn to **every** wait on that slot, and cyclic wait graphs
+//! (which deadlock at runtime and are exercised on purpose by the
+//! failure-injection tests) are tolerated — reachability is computed by
+//! graph search, not topological order, so analysis always terminates.
+//!
+//! Wiring (see the README "Static analysis" section):
+//! - [`ValidPlan`](crate::collectives::ValidPlan) sealing runs
+//!   [`check_plan`] under `cfg(debug_assertions)` — every debug test run
+//!   audits every plan it executes, release builds pay nothing;
+//! - the planner runs [`check_windows`] on its output (also debug-only);
+//! - [`ProcessGroup`](crate::group::ProcessGroup) construction audits its
+//!   epoch ring with [`check_slice_windows`];
+//! - `ccl analyze` sweeps the full variant × chunk × dtype × size × depth
+//!   matrix (every autotuner candidate) and exits nonzero on any finding;
+//! - [`mutations`] seeds known-bad plans proving the analyzer catches each
+//!   diagnostic category (pinned by `tests/analysis.rs`).
+
+use crate::collectives::ops::{CollectivePlan, Op};
+use crate::pool::PoolLayout;
+use std::collections::BTreeMap;
+use std::fmt;
+
+pub mod mutations;
+
+/// Which of a rank's two streams an op belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamKind {
+    /// The rank's `write_ops` stream.
+    Write,
+    /// The rank's `read_ops` stream.
+    Read,
+}
+
+impl fmt::Display for StreamKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StreamKind::Write => write!(f, "write"),
+            StreamKind::Read => write!(f, "read"),
+        }
+    }
+}
+
+/// Location of one op: which launch of the analyzed ring (0 for
+/// single-plan analysis), which rank, which stream, which index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpSite {
+    pub launch: usize,
+    pub rank: usize,
+    pub stream: StreamKind,
+    pub op_index: usize,
+}
+
+impl fmt::Display for OpSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "launch {} rank {} {}-stream op {}",
+            self.launch, self.rank, self.stream, self.op_index
+        )
+    }
+}
+
+/// The invariant a [`Diagnostic`] reports a violation of.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiagnosticKind {
+    /// Two unordered writes to overlapping pool bytes.
+    WriteWriteRace,
+    /// A read/reduce of pool bytes not ordered after the write that
+    /// publishes them (no doorbell or barrier edge in between).
+    ReadBeforePublish,
+    /// An op touches doorbell slots or device bytes outside the layout
+    /// window it was planned against.
+    WindowEscape,
+    /// Two in-flight ring launches share a doorbell slot, a device, or a
+    /// group-control word.
+    CrossSliceAlias,
+    /// A doorbell slot set twice within one barrier phase (no reset edge
+    /// between the publishes).
+    DoorbellReuse,
+}
+
+impl fmt::Display for DiagnosticKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DiagnosticKind::WriteWriteRace => "write-write race",
+            DiagnosticKind::ReadBeforePublish => "read-before-publish",
+            DiagnosticKind::WindowEscape => "window escape",
+            DiagnosticKind::CrossSliceAlias => "cross-slice alias",
+            DiagnosticKind::DoorbellReuse => "doorbell reuse",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One structured finding. `site` is the offending op (absent only for
+/// layout-level findings that involve no op, e.g. two ring slices whose
+/// windows overlap before any plan exists); `other` is the second access
+/// of a pair (the racing write, the earlier publish, the aliased op of
+/// the other launch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub kind: DiagnosticKind,
+    pub site: Option<OpSite>,
+    pub other: Option<OpSite>,
+    pub detail: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}]", self.kind)?;
+        if let Some(site) = &self.site {
+            write!(f, " at {site}")?;
+        }
+        if let Some(other) = &self.other {
+            write!(f, " (vs {other})")?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
+/// Render findings as one line each (empty string for none).
+pub fn report(diags: &[Diagnostic]) -> String {
+    diags.iter().map(|d| format!("{d}\n")).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Happens-before model
+// ---------------------------------------------------------------------------
+
+/// One stream of one rank, flattened for node numbering.
+struct Stream<'a> {
+    rank: usize,
+    kind: StreamKind,
+    ops: &'a [Op],
+    /// Node id of this stream's first op.
+    base: usize,
+}
+
+/// Transitive reachability over the happens-before graph, as bitset rows.
+/// Built by per-source graph search, so cyclic graphs (deadlocking plans
+/// the failure-injection suite seals on purpose) are handled, not assumed
+/// away.
+struct Reach {
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl Reach {
+    fn closure(n: usize, edges: &[Vec<u32>]) -> Self {
+        let words = n.div_ceil(64).max(1);
+        let mut bits = vec![0u64; n * words];
+        let mut stack: Vec<u32> = Vec::new();
+        for src in 0..n {
+            let row = src * words;
+            stack.extend(&edges[src]);
+            while let Some(v) = stack.pop() {
+                let (w, b) = ((v / 64) as usize, v % 64);
+                if bits[row + w] >> b & 1 == 0 {
+                    bits[row + w] |= 1 << b;
+                    stack.extend(&edges[v as usize]);
+                }
+            }
+        }
+        Self { words, bits }
+    }
+
+    /// Whether `a` happens-before `b` (strictly: `a -> ... -> b`).
+    fn ordered(&self, a: usize, b: usize) -> bool {
+        self.bits[a * self.words + b / 64] >> (b % 64) & 1 == 1
+    }
+}
+
+/// A pool byte-range access, ready for the race pair scan.
+struct Access {
+    node: usize,
+    stream_ix: usize,
+    site: OpSite,
+    lo: usize,
+    hi: usize,
+    write: bool,
+}
+
+fn collect_streams(plan: &CollectivePlan) -> Vec<Stream<'_>> {
+    let mut streams = Vec::with_capacity(plan.ranks.len() * 2);
+    let mut base = 0usize;
+    for rp in &plan.ranks {
+        for (kind, ops) in [
+            (StreamKind::Write, rp.write_ops.as_slice()),
+            (StreamKind::Read, rp.read_ops.as_slice()),
+        ] {
+            streams.push(Stream { rank: rp.rank, kind, ops, base });
+            base += ops.len();
+        }
+    }
+    streams
+}
+
+/// Build the happens-before closure over all ops of `plan` plus one
+/// rendezvous node per barrier phase. Edges: program order within each
+/// stream; every `SetDoorbell { db }` to every `WaitDoorbell { db }`; the
+/// k-th `Barrier` of each stream into global rendezvous node `k`, which
+/// releases into each stream's first post-barrier op.
+fn build_hb(streams: &[Stream<'_>]) -> (Reach, usize) {
+    let n_ops: usize = streams.iter().map(|s| s.ops.len()).sum();
+    let max_barriers = streams
+        .iter()
+        .map(|s| s.ops.iter().filter(|o| matches!(o, Op::Barrier)).count())
+        .max()
+        .unwrap_or(0);
+    let n = n_ops + max_barriers;
+    let mut edges: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut setters: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    let mut waiters: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for s in streams {
+        let mut phase = 0usize;
+        for (i, op) in s.ops.iter().enumerate() {
+            let node = s.base + i;
+            if i + 1 < s.ops.len() {
+                edges[node].push((node + 1) as u32);
+            }
+            match op {
+                Op::SetDoorbell { db } => setters.entry(*db).or_default().push(node),
+                Op::WaitDoorbell { db } => waiters.entry(*db).or_default().push(node),
+                Op::Barrier => {
+                    let rendezvous = n_ops + phase;
+                    edges[node].push(rendezvous as u32);
+                    if i + 1 < s.ops.len() {
+                        edges[rendezvous].push((node + 1) as u32);
+                    }
+                    phase += 1;
+                }
+                _ => {}
+            }
+        }
+    }
+    for (db, sets) in &setters {
+        if let Some(waits) = waiters.get(db) {
+            for &s in sets {
+                for &w in waits {
+                    edges[s].push(w as u32);
+                }
+            }
+        }
+    }
+    (Reach::closure(n, &edges), n_ops)
+}
+
+// ---------------------------------------------------------------------------
+// (a) + (d): plan-level checks (no layout needed)
+// ---------------------------------------------------------------------------
+
+/// Check one plan for races (a) and doorbell reuse (d): the layout-free
+/// subset, safe to run on any sealable plan — including the hand-built
+/// circular-wait and overrun plans the failure-injection suite seals on
+/// purpose (those violate *dynamic* properties, not these invariants).
+/// This is what `ValidPlan` sealing runs under `debug_assertions`.
+pub fn check_plan(plan: &CollectivePlan) -> Vec<Diagnostic> {
+    check_plan_at(plan, 0)
+}
+
+fn check_plan_at(plan: &CollectivePlan, launch: usize) -> Vec<Diagnostic> {
+    let streams = collect_streams(plan);
+    let (reach, _) = build_hb(&streams);
+    let mut diags = Vec::new();
+
+    // (a) unordered conflicting accesses to overlapping pool ranges.
+    let mut accesses: Vec<Access> = Vec::new();
+    for (six, s) in streams.iter().enumerate() {
+        for (i, op) in s.ops.iter().enumerate() {
+            let (lo, len, write) = match *op {
+                Op::Write { pool_off, len, .. } => (pool_off, len, true),
+                Op::Read { pool_off, len, .. } | Op::Reduce { pool_off, len, .. } => {
+                    (pool_off, len, false)
+                }
+                _ => continue,
+            };
+            if len == 0 {
+                continue;
+            }
+            accesses.push(Access {
+                node: s.base + i,
+                stream_ix: six,
+                site: OpSite { launch, rank: s.rank, stream: s.kind, op_index: i },
+                lo,
+                hi: lo.saturating_add(len),
+                write,
+            });
+        }
+    }
+    for (i, a) in accesses.iter().enumerate() {
+        for b in &accesses[i + 1..] {
+            if a.stream_ix == b.stream_ix
+                || (!a.write && !b.write)
+                || a.hi <= b.lo
+                || b.hi <= a.lo
+                || reach.ordered(a.node, b.node)
+                || reach.ordered(b.node, a.node)
+            {
+                continue;
+            }
+            let overlap_lo = a.lo.max(b.lo);
+            let overlap_hi = a.hi.min(b.hi);
+            if a.write && b.write {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::WriteWriteRace,
+                    site: Some(b.site),
+                    other: Some(a.site),
+                    detail: format!(
+                        "unordered writes both cover pool bytes [{overlap_lo}, {overlap_hi})"
+                    ),
+                });
+            } else {
+                // Exactly one side writes; report the reader as the site.
+                let (r, w) = if a.write { (b, a) } else { (a, b) };
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::ReadBeforePublish,
+                    site: Some(r.site),
+                    other: Some(w.site),
+                    detail: format!(
+                        "read of pool bytes [{overlap_lo}, {overlap_hi}) is not ordered \
+                         after the write publishing them (no doorbell/barrier edge)"
+                    ),
+                });
+            }
+        }
+    }
+
+    // (d) doorbell slot set twice within one barrier phase.
+    let mut sets_by_db: BTreeMap<usize, Vec<(OpSite, usize)>> = BTreeMap::new();
+    for s in &streams {
+        let mut phase = 0usize;
+        for (i, op) in s.ops.iter().enumerate() {
+            match op {
+                Op::Barrier => phase += 1,
+                Op::SetDoorbell { db } => sets_by_db.entry(*db).or_default().push((
+                    OpSite { launch, rank: s.rank, stream: s.kind, op_index: i },
+                    phase,
+                )),
+                _ => {}
+            }
+        }
+    }
+    for (db, sets) in &sets_by_db {
+        for (i, (site_a, phase_a)) in sets.iter().enumerate() {
+            for (site_b, phase_b) in &sets[i + 1..] {
+                if phase_a == phase_b {
+                    diags.push(Diagnostic {
+                        kind: DiagnosticKind::DoorbellReuse,
+                        site: Some(*site_b),
+                        other: Some(*site_a),
+                        detail: format!(
+                            "doorbell slot {db} set twice in barrier phase {phase_a} \
+                             (slots reset only between launches)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------------
+// (b): window containment
+// ---------------------------------------------------------------------------
+
+/// Check that every op of `plan` stays inside the `layout` view it was
+/// planned against: data ops on the view's devices (no boundary
+/// straddles, never inside a device's doorbell-region reserve, never past
+/// the pool), doorbell indices within the view's slot span. The planner
+/// runs this on its own output under `debug_assertions`.
+pub fn check_windows(plan: &CollectivePlan, layout: &PoolLayout) -> Vec<Diagnostic> {
+    check_windows_at(plan, layout, 0)
+}
+
+fn check_windows_at(plan: &CollectivePlan, layout: &PoolLayout, launch: usize) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let cap = layout.stacking.device_capacity;
+    let dev_lo = layout.device_base;
+    let dev_hi = layout.device_base + layout.device_span;
+    let mut push = |site: OpSite, detail: String| {
+        diags.push(Diagnostic {
+            kind: DiagnosticKind::WindowEscape,
+            site: Some(site),
+            other: None,
+            detail,
+        });
+    };
+    for s in collect_streams(plan) {
+        for (i, op) in s.ops.iter().enumerate() {
+            let site = OpSite { launch, rank: s.rank, stream: s.kind, op_index: i };
+            match *op {
+                Op::Write { pool_off, len, .. }
+                | Op::Read { pool_off, len, .. }
+                | Op::Reduce { pool_off, len, .. } => {
+                    if len == 0 {
+                        continue;
+                    }
+                    let Some(end) = pool_off.checked_add(len) else {
+                        push(site, format!("pool range [{pool_off}, +{len}) overflows"));
+                        continue;
+                    };
+                    if end > layout.pool_size() {
+                        push(
+                            site,
+                            format!(
+                                "pool range [{pool_off}, {end}) runs past the pool \
+                                 ({} bytes)",
+                                layout.pool_size()
+                            ),
+                        );
+                        continue;
+                    }
+                    let dev = pool_off / cap;
+                    let dev_last = (end - 1) / cap;
+                    if dev != dev_last {
+                        push(
+                            site,
+                            format!(
+                                "pool range [{pool_off}, {end}) straddles devices \
+                                 {dev}..{dev_last} (transfers are per-device)"
+                            ),
+                        );
+                    } else if dev < dev_lo || dev >= dev_hi {
+                        push(
+                            site,
+                            format!(
+                                "device {dev} outside the view's device window \
+                                 [{dev_lo}, {dev_hi})"
+                            ),
+                        );
+                    } else if pool_off % cap < layout.db_region {
+                        push(
+                            site,
+                            format!(
+                                "data at intra-device offset {} inside the {}-byte \
+                                 doorbell-region reserve",
+                                pool_off % cap,
+                                layout.db_region
+                            ),
+                        );
+                    }
+                }
+                Op::SetDoorbell { db } | Op::WaitDoorbell { db } => {
+                    if db >= layout.db_slot_span {
+                        push(
+                            site,
+                            format!(
+                                "doorbell index {db} beyond the view's {}-slot window",
+                                layout.db_slot_span
+                            ),
+                        );
+                    }
+                }
+                Op::CopyLocal { .. } | Op::Barrier => {}
+            }
+        }
+    }
+    diags
+}
+
+/// [`check_plan`] + [`check_windows`] for one launch.
+pub fn analyze_plan(plan: &CollectivePlan, layout: &PoolLayout) -> Vec<Diagnostic> {
+    let mut diags = check_plan(plan);
+    diags.extend(check_windows(plan, layout));
+    diags
+}
+
+// ---------------------------------------------------------------------------
+// (c): cross-slice aliasing over an epoch ring
+// ---------------------------------------------------------------------------
+
+/// Layout-level slice audit, run at ring construction (before any plan
+/// exists): pairwise-disjoint doorbell and device windows, and no slice
+/// window covering a group-control word (`ctrl_slots` is the absolute
+/// slot index of every live control word, empty when the ring has no
+/// control prefix). [`ProcessGroup`](crate::group::ProcessGroup) asserts
+/// this on every ring it carves, in debug builds.
+pub fn check_slice_windows(slices: &[PoolLayout], ctrl_slots: &[usize]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut alias = |detail: String| {
+        diags.push(Diagnostic {
+            kind: DiagnosticKind::CrossSliceAlias,
+            site: None,
+            other: None,
+            detail,
+        });
+    };
+    for (i, a) in slices.iter().enumerate() {
+        for (j, b) in slices.iter().enumerate().skip(i + 1) {
+            let (ar, br) = (a.doorbell_slot_range(), b.doorbell_slot_range());
+            if ar.start < br.end && br.start < ar.end {
+                alias(format!(
+                    "slices {i} and {j} share doorbell slots [{}, {})",
+                    ar.start.max(br.start),
+                    ar.end.min(br.end)
+                ));
+            }
+            let ad = a.device_base..a.device_base + a.device_span;
+            let bd = b.device_base..b.device_base + b.device_span;
+            if ad.start < bd.end && bd.start < ad.end {
+                alias(format!(
+                    "slices {i} and {j} share devices [{}, {})",
+                    ad.start.max(bd.start),
+                    ad.end.min(bd.end)
+                ));
+            }
+        }
+        for &w in ctrl_slots {
+            if a.doorbell_slot_range().contains(&w) {
+                alias(format!(
+                    "slice {i}'s doorbell window covers group-control word at slot {w}"
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// Full ring audit: per-launch [`check_plan`] + [`check_windows`] (sites
+/// stamped with their launch index), the layout-level
+/// [`check_slice_windows`], and op-level cross-launch aliasing — two
+/// launches touching the same absolute doorbell slot or the same device,
+/// or any launch ringing a group-control word. `plans[i]` must be planned
+/// against `slices[i]`.
+pub fn check_ring(
+    plans: &[&CollectivePlan],
+    slices: &[PoolLayout],
+    ctrl_slots: &[usize],
+) -> Vec<Diagnostic> {
+    assert_eq!(plans.len(), slices.len(), "one slice layout per ring launch");
+    let mut diags = check_slice_windows(slices, ctrl_slots);
+    // First op to touch each absolute doorbell slot / device, per launch.
+    let mut slot_users: Vec<BTreeMap<usize, OpSite>> = Vec::with_capacity(plans.len());
+    let mut dev_users: Vec<BTreeMap<usize, OpSite>> = Vec::with_capacity(plans.len());
+    for (launch, (plan, layout)) in plans.iter().zip(slices).enumerate() {
+        diags.extend(check_plan_at(plan, launch));
+        diags.extend(check_windows_at(plan, layout, launch));
+        let mut slots: BTreeMap<usize, OpSite> = BTreeMap::new();
+        let mut devs: BTreeMap<usize, OpSite> = BTreeMap::new();
+        let cap = layout.stacking.device_capacity;
+        for s in collect_streams(plan) {
+            for (i, op) in s.ops.iter().enumerate() {
+                let site = OpSite { launch, rank: s.rank, stream: s.kind, op_index: i };
+                match *op {
+                    Op::SetDoorbell { db } | Op::WaitDoorbell { db } => {
+                        // Out-of-window indices were already reported as
+                        // escapes; their absolute slot is undefined.
+                        if db < layout.db_slot_span {
+                            slots.entry(layout.db_slot_base + db).or_insert(site);
+                        }
+                    }
+                    Op::Write { pool_off, len, .. }
+                    | Op::Read { pool_off, len, .. }
+                    | Op::Reduce { pool_off, len, .. } => {
+                        let in_pool =
+                            pool_off.checked_add(len).is_some_and(|e| e <= layout.pool_size());
+                        if len > 0 && in_pool {
+                            devs.entry(pool_off / cap).or_insert(site);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for (&slot, &site) in &slots {
+            if ctrl_slots.contains(&slot) {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::CrossSliceAlias,
+                    site: Some(site),
+                    other: None,
+                    detail: format!("op rings group-control word at absolute slot {slot}"),
+                });
+            }
+        }
+        slot_users.push(slots);
+        dev_users.push(devs);
+    }
+    for i in 0..plans.len() {
+        for j in i + 1..plans.len() {
+            for (&slot, &site_j) in &slot_users[j] {
+                if let Some(&site_i) = slot_users[i].get(&slot) {
+                    diags.push(Diagnostic {
+                        kind: DiagnosticKind::CrossSliceAlias,
+                        site: Some(site_j),
+                        other: Some(site_i),
+                        detail: format!(
+                            "launches {i} and {j} both use absolute doorbell slot {slot}"
+                        ),
+                    });
+                }
+            }
+            for (&dev, &site_j) in &dev_users[j] {
+                if let Some(&site_i) = dev_users[i].get(&dev) {
+                    diags.push(Diagnostic {
+                        kind: DiagnosticKind::CrossSliceAlias,
+                        site: Some(site_j),
+                        other: Some(site_i),
+                        detail: format!("launches {i} and {j} both place data on device {dev}"),
+                    });
+                }
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ops::{RankPlan, ValidPlan};
+    use crate::collectives::{CclVariant, Primitive};
+    use crate::tensor::Dtype;
+
+    fn two_rank_plan(r0: RankPlan, r1: RankPlan) -> CollectivePlan {
+        CollectivePlan {
+            primitive: Primitive::Broadcast,
+            variant: CclVariant::All,
+            nranks: 2,
+            n_elems: 64,
+            dtype: Dtype::F32,
+            send_elems: 64,
+            recv_elems: 64,
+            ranks: vec![r0, r1],
+        }
+    }
+
+    #[test]
+    fn doorbell_gated_read_is_ordered() {
+        let mut r0 = RankPlan::new(0);
+        r0.write_ops.push(Op::Write { pool_off: 4096, src_off: 0, len: 256 });
+        r0.write_ops.push(Op::SetDoorbell { db: 0 });
+        let mut r1 = RankPlan::new(1);
+        r1.read_ops.push(Op::WaitDoorbell { db: 0 });
+        r1.read_ops.push(Op::Read { pool_off: 4096, dst_off: 0, len: 256 });
+        assert!(check_plan(&two_rank_plan(r0, r1)).is_empty());
+    }
+
+    #[test]
+    fn ungated_read_is_a_race() {
+        let mut r0 = RankPlan::new(0);
+        r0.write_ops.push(Op::Write { pool_off: 4096, src_off: 0, len: 256 });
+        let mut r1 = RankPlan::new(1);
+        r1.read_ops.push(Op::Read { pool_off: 4096, dst_off: 0, len: 256 });
+        let diags = check_plan(&two_rank_plan(r0, r1));
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].kind, DiagnosticKind::ReadBeforePublish);
+        let site = diags[0].site.unwrap();
+        assert_eq!((site.rank, site.stream, site.op_index), (1, StreamKind::Read, 0));
+    }
+
+    #[test]
+    fn barrier_orders_across_phases() {
+        // Naive shape: writes before the barrier, reads after it.
+        let mut r0 = RankPlan::new(0);
+        r0.write_ops.push(Op::Write { pool_off: 4096, src_off: 0, len: 256 });
+        r0.write_ops.push(Op::Barrier);
+        r0.read_ops.push(Op::Barrier);
+        let mut r1 = RankPlan::new(1);
+        r1.write_ops.push(Op::Barrier);
+        r1.read_ops.push(Op::Barrier);
+        r1.read_ops.push(Op::Read { pool_off: 4096, dst_off: 0, len: 256 });
+        assert!(check_plan(&two_rank_plan(r0, r1)).is_empty());
+    }
+
+    #[test]
+    fn wrong_doorbell_gate_still_races() {
+        // The reader waits on a doorbell set *before* the write it needs.
+        let mut r0 = RankPlan::new(0);
+        r0.write_ops.push(Op::SetDoorbell { db: 0 });
+        r0.write_ops.push(Op::Write { pool_off: 4096, src_off: 0, len: 256 });
+        let mut r1 = RankPlan::new(1);
+        r1.read_ops.push(Op::WaitDoorbell { db: 0 });
+        r1.read_ops.push(Op::Read { pool_off: 4096, dst_off: 0, len: 256 });
+        let diags = check_plan(&two_rank_plan(r0, r1));
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].kind, DiagnosticKind::ReadBeforePublish);
+    }
+
+    #[test]
+    fn circular_waits_terminate_and_stay_clean() {
+        // The failure-injection deadlock shape: an HB *cycle*. No memory
+        // ops, so no race findings — and the closure must not hang.
+        let mut r0 = RankPlan::new(0);
+        r0.write_ops.push(Op::WaitDoorbell { db: 12 });
+        r0.write_ops.push(Op::SetDoorbell { db: 11 });
+        let mut r1 = RankPlan::new(1);
+        r1.write_ops.push(Op::WaitDoorbell { db: 11 });
+        r1.write_ops.push(Op::SetDoorbell { db: 12 });
+        assert!(check_plan(&two_rank_plan(r0, r1)).is_empty());
+    }
+
+    #[test]
+    fn double_set_same_phase_flagged_across_barrier_not() {
+        let mut r0 = RankPlan::new(0);
+        r0.write_ops.push(Op::SetDoorbell { db: 3 });
+        r0.write_ops.push(Op::SetDoorbell { db: 3 });
+        let mut r1 = RankPlan::new(1);
+        r1.read_ops.push(Op::WaitDoorbell { db: 3 });
+        let diags = check_plan(&two_rank_plan(r0, r1));
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].kind, DiagnosticKind::DoorbellReuse);
+        assert_eq!(diags[0].site.unwrap().op_index, 1);
+
+        // Same two sets separated by a barrier phase: allowed.
+        let mut r0 = RankPlan::new(0);
+        r0.write_ops.push(Op::SetDoorbell { db: 3 });
+        r0.write_ops.push(Op::Barrier);
+        r0.write_ops.push(Op::SetDoorbell { db: 3 });
+        r0.read_ops.push(Op::Barrier);
+        let mut r1 = RankPlan::new(1);
+        r1.write_ops.push(Op::Barrier);
+        r1.read_ops.push(Op::Barrier);
+        r1.read_ops.push(Op::WaitDoorbell { db: 3 });
+        assert!(check_plan(&two_rank_plan(r0, r1))
+            .iter()
+            .all(|d| d.kind != DiagnosticKind::DoorbellReuse));
+    }
+
+    #[test]
+    fn window_checks_catch_every_escape_class() {
+        let layout = PoolLayout::new(6, 1 << 20, 4096)
+            .unwrap()
+            .with_doorbell_window(8, 8)
+            .unwrap()
+            .with_device_window(2, 2)
+            .unwrap();
+        let mk = |op: Op| {
+            let mut r0 = RankPlan::new(0);
+            r0.write_ops.push(op);
+            two_rank_plan(r0, RankPlan::new(1))
+        };
+        let cases: Vec<(Op, &str)> = vec![
+            (Op::Write { pool_off: 6 << 20, src_off: 0, len: 64 }, "past the pool"),
+            (
+                Op::Write { pool_off: (3 << 20) - 32, src_off: 0, len: 64 },
+                "straddles devices",
+            ),
+            (Op::Write { pool_off: (1 << 20) + 8192, src_off: 0, len: 64 }, "outside"),
+            (Op::Write { pool_off: (2 << 20) + 64, src_off: 0, len: 64 }, "reserve"),
+            (Op::SetDoorbell { db: 8 }, "beyond the view's 8-slot window"),
+        ];
+        for (op, needle) in cases {
+            let diags = check_windows(&mk(op), &layout);
+            assert_eq!(diags.len(), 1, "{op:?}");
+            assert_eq!(diags[0].kind, DiagnosticKind::WindowEscape);
+            assert!(diags[0].detail.contains(needle), "{op:?}: {}", diags[0].detail);
+        }
+        // A well-placed op is silent: device 2, clear of the reserve.
+        let ok = mk(Op::Write { pool_off: (2 << 20) + 4096, src_off: 0, len: 64 });
+        assert!(check_windows(&ok, &layout).is_empty());
+    }
+
+    #[test]
+    fn disjoint_ring_clean_aliased_ring_flagged() {
+        let layout = PoolLayout::new(6, 1 << 20, 4096).unwrap();
+        let slices = layout.pipeline_slices(2).unwrap();
+        assert!(check_slice_windows(&slices, &[]).is_empty());
+        let aliased = vec![slices[0], slices[0]];
+        let diags = check_slice_windows(&aliased, &[]);
+        assert!(diags.iter().any(|d| d.kind == DiagnosticKind::CrossSliceAlias));
+        // Control words inside a slice window are flagged too.
+        let diags = check_slice_windows(&slices, &[slices[1].db_slot_base]);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].detail.contains("group-control word"));
+    }
+
+    #[test]
+    fn sealed_builder_plans_audit_clean_end_to_end() {
+        // ValidPlan::new runs check_plan in debug builds; a builder plan
+        // sealing successfully *is* the zero-findings assertion. Run the
+        // full analyzer on it too.
+        let spec = crate::topology::ClusterSpec::new(3, 6, 8 << 20);
+        let layout = PoolLayout::from_spec(&spec).unwrap();
+        let plan = crate::collectives::builder::plan_collective(
+            Primitive::AllReduce,
+            &spec,
+            &layout,
+            &CclVariant::All.config(8),
+            3 * 1024,
+        )
+        .unwrap();
+        assert!(analyze_plan(&plan, &layout).is_empty());
+        let _resealed = ValidPlan::new((**plan.as_arc()).clone(), layout.pool_size()).unwrap();
+    }
+}

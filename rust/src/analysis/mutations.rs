@@ -1,0 +1,140 @@
+//! Seeded plan mutations — the corpus proving the analyzer is not
+//! vacuous.
+//!
+//! Each function takes a correct plan (typically straight out of the
+//! planner) and plants one specific bug from the categories the analyzer
+//! claims to catch, returning the mutated plan together with the
+//! [`OpSite`] the analyzer is expected to report. The mutants deliberately
+//! bypass [`ValidPlan`](crate::collectives::ops::ValidPlan) sealing (which
+//! would reject most of them); `tests/analysis.rs` runs the checks
+//! directly and pins, per category, both the diagnostic kind and the
+//! offending rank/op index.
+//!
+//! Returns `None` when the input plan does not contain the ops the
+//! mutation needs (e.g. no doorbells in a barrier-variant plan).
+
+use super::{OpSite, StreamKind};
+use crate::collectives::ops::{CollectivePlan, Op};
+use crate::pool::PoolLayout;
+
+/// Category "overlap": shift one rank's first pool write onto another
+/// rank's write range. Expected: [`super::DiagnosticKind::WriteWriteRace`]
+/// citing the returned site.
+pub fn shift_write_into_neighbor(plan: &CollectivePlan) -> Option<(CollectivePlan, OpSite)> {
+    let mut writers = plan.ranks.iter().filter_map(|rp| {
+        rp.write_ops.iter().enumerate().find_map(|(i, op)| match op {
+            Op::Write { pool_off, .. } => Some((rp.rank, i, *pool_off)),
+            _ => None,
+        })
+    });
+    let (_, _, target_off) = writers.next()?;
+    let (victim_rank, victim_ix, _) = writers.next()?;
+    let mut mutant = plan.clone();
+    let rp = mutant.ranks.iter_mut().find(|rp| rp.rank == victim_rank)?;
+    match &mut rp.write_ops[victim_ix] {
+        Op::Write { pool_off, .. } => *pool_off = target_off,
+        _ => return None,
+    }
+    let site = OpSite {
+        launch: 0,
+        rank: victim_rank,
+        stream: StreamKind::Write,
+        op_index: victim_ix,
+    };
+    Some((mutant, site))
+}
+
+/// Category "missing sync edge": remove the synchronization op gating a
+/// read — a read-stream `Barrier` (Naive/Aggregate plans) or the
+/// `WaitDoorbell` directly before a read (All plans). Expected:
+/// [`super::DiagnosticKind::ReadBeforePublish`] citing the returned site
+/// (the read left unordered, at its post-removal index).
+pub fn drop_sync_edge(plan: &CollectivePlan) -> Option<(CollectivePlan, OpSite)> {
+    let mut mutant = plan.clone();
+    for rp in &mut mutant.ranks {
+        let has_data = rp
+            .read_ops
+            .iter()
+            .any(|op| matches!(op, Op::Read { .. } | Op::Reduce { .. }));
+        if !has_data {
+            continue;
+        }
+        if let Some(bi) = rp.read_ops.iter().position(|op| matches!(op, Op::Barrier)) {
+            rp.read_ops.remove(bi);
+            let ri = rp
+                .read_ops
+                .iter()
+                .position(|op| matches!(op, Op::Read { .. } | Op::Reduce { .. }))?;
+            let site =
+                OpSite { launch: 0, rank: rp.rank, stream: StreamKind::Read, op_index: ri };
+            return Some((mutant, site));
+        }
+        let gated = rp.read_ops.windows(2).position(|w| {
+            matches!(w[0], Op::WaitDoorbell { .. })
+                && matches!(w[1], Op::Read { .. } | Op::Reduce { .. })
+        });
+        if let Some(wi) = gated {
+            rp.read_ops.remove(wi);
+            let site =
+                OpSite { launch: 0, rank: rp.rank, stream: StreamKind::Read, op_index: wi };
+            return Some((mutant, site));
+        }
+    }
+    None
+}
+
+/// Category "window escape": widen the last read of some read stream so
+/// it runs past its device (and thus out of the layout window it was
+/// planned against). Expected: [`super::DiagnosticKind::WindowEscape`]
+/// citing the returned site, from [`super::check_windows`] against the
+/// same layout.
+pub fn widen_read_past_window(
+    plan: &CollectivePlan,
+    layout: &PoolLayout,
+) -> Option<(CollectivePlan, OpSite)> {
+    let cap = layout.stacking.device_capacity;
+    let mut mutant = plan.clone();
+    for rp in &mut mutant.ranks {
+        let last = rp.read_ops.iter().rposition(|op| matches!(op, Op::Read { .. }));
+        if let Some(i) = last {
+            if let Op::Read { pool_off, len, .. } = &mut rp.read_ops[i] {
+                // Stretch to one cache line past the device's end.
+                *len = (cap - *pool_off % cap) + 64;
+                let site =
+                    OpSite { launch: 0, rank: rp.rank, stream: StreamKind::Read, op_index: i };
+                return Some((mutant, site));
+            }
+        }
+    }
+    None
+}
+
+/// Category "missing reset edge": duplicate a doorbell publish within the
+/// same barrier phase. Expected: [`super::DiagnosticKind::DoorbellReuse`]
+/// citing the returned site (the second set).
+pub fn reuse_doorbell(plan: &CollectivePlan) -> Option<(CollectivePlan, OpSite)> {
+    let mut mutant = plan.clone();
+    for rp in &mut mutant.ranks {
+        let set = rp.write_ops.iter().position(|op| matches!(op, Op::SetDoorbell { .. }));
+        if let Some(i) = set {
+            let dup = rp.write_ops[i];
+            rp.write_ops.insert(i + 1, dup);
+            let site =
+                OpSite { launch: 0, rank: rp.rank, stream: StreamKind::Write, op_index: i + 1 };
+            return Some((mutant, site));
+        }
+    }
+    None
+}
+
+/// Category "slice alias": collapse a ring so two launches run on the
+/// same slice windows. Expected: [`super::DiagnosticKind::CrossSliceAlias`]
+/// from [`super::check_slice_windows`] / [`super::check_ring`].
+pub fn alias_ring_slices(slices: &[PoolLayout]) -> Option<Vec<PoolLayout>> {
+    if slices.len() < 2 {
+        return None;
+    }
+    let mut aliased = slices.to_vec();
+    aliased[1] = aliased[0];
+    Some(aliased)
+}

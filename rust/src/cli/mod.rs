@@ -7,6 +7,7 @@
 //!             [--size 16M] [--ranks 3] [--devices 6] [--chunks 8]
 //!             [--iters 3] [--backend shm|sim] [--dtype f32|f16|bf16|u8]
 //! cxl-ccl tune [--ranks 3] [--sizes 64K,1M,16M] [--depths 1,2]
+//! cxl-ccl analyze [--ranks 3] [--sizes 64K,1M,16M] [--depths 1,2,4]
 //! cxl-ccl sweep [--primitive p] ...    # virtual-time size sweep vs IB
 //! cxl-ccl train [--preset tiny] [--steps 40] [--variant auto]
 //! cxl-ccl latency                      # Table-1 style report
@@ -17,18 +18,24 @@
 //! `--variant auto` (the default) defers the (variant, chunks) choice to
 //! the [tuner](crate::collectives::tuner); `tune` prints the full offline
 //! decision matrix for a topology so the choices can be inspected — or
-//! pinned — before a run.
+//! pinned — before a run. `analyze` runs the [static
+//! analyzer](crate::analysis) over every plan that matrix can emit and
+//! exits nonzero on any race, window escape, or ring-aliasing finding.
 
+use crate::analysis;
 use crate::baseline::{collective_time, IbParams};
 use crate::bench_util::{banner, Table};
 use crate::collectives::builder::{plan_collective, plan_collective_dtype};
-use crate::collectives::tuner::{predict_launch_secs, tune_decision, TunedDecision, CHUNK_SWEEP};
+use crate::collectives::tuner::{
+    candidate_configs, predict_launch_secs, tune_decision, TunedDecision,
+};
 use crate::collectives::{
     oracle, run_with_scratch, CclConfig, CclVariant, CollectiveBackend, CollectivePlan, Primitive,
     ValidPlan,
 };
 use crate::config::{parse_ccl, KvFile, RunConfig};
 use crate::exec::Communicator;
+use crate::group::control::{control_word_slots, GROUP_CTRL_SLOTS};
 use crate::group::{Bootstrap, CollectiveFuture, CommWorld};
 use crate::pool::PoolLayout;
 use crate::sim::SimFabric;
@@ -93,6 +100,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "info" => cmd_info(),
         "run" => cmd_run(&args),
         "tune" => cmd_tune(&args),
+        "analyze" => cmd_analyze(&args),
         "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "latency" => cmd_latency(),
@@ -118,6 +126,10 @@ fn print_help() {
                 [--bootstrap local|pool:<path> --rank R --world N]\n  \
          tune   [--ranks 3] [--devices 6] [--dtype f32] [--sizes 64K,1M,16M]\n         \
                 [--depths 1,2]          offline tuner decision matrix\n  \
+         analyze [--ranks 3] [--devices 6] [--sizes 64K,1M,16M] [--depths 1,2,4]\n         \
+                [--dtypes f32,f16,bf16,u8]   static race/window/alias audit over\n         \
+                every primitive x size x depth x dtype x tuner candidate;\n         \
+                exits nonzero on any finding\n  \
          sweep  [--primitive p] [--ranks 3] [--max 1G]   virtual-time vs InfiniBand\n  \
          train  [--preset tiny|e2e] [--steps 40] [--variant auto] [--chunks 8]\n         \
                 [--buckets 2] [--pipeline-depth 2]\n  \
@@ -666,18 +678,10 @@ fn worst_fixed_secs(
     dtype: Dtype,
 ) -> Option<f64> {
     let mut worst: Option<f64> = None;
-    for variant in CclVariant::ALL {
-        let chunk_candidates: &[usize] = match variant {
-            CclVariant::All => &CHUNK_SWEEP,
-            CclVariant::Aggregate | CclVariant::Naive => &CHUNK_SWEEP[..1],
-        };
-        for &chunks in chunk_candidates {
-            let cfg = variant.config(chunks);
-            if let Ok(secs) = predict_launch_secs(spec, layout, ring, primitive, &cfg, n, dtype)
-            {
-                if worst.is_none_or(|w| secs > w) {
-                    worst = Some(secs);
-                }
+    for cfg in candidate_configs(0) {
+        if let Ok(secs) = predict_launch_secs(spec, layout, ring, primitive, &cfg, n, dtype) {
+            if worst.is_none_or(|w| secs > w) {
+                worst = Some(secs);
             }
         }
     }
@@ -753,6 +757,112 @@ fn cmd_tune(args: &Args) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// `analyze`: run the [static analyzer](crate::analysis) over every plan
+/// the planners can emit for a topology — primitive × size × ring depth ×
+/// dtype × every autotuner candidate from
+/// [`candidate_configs`](crate::collectives::tuner::candidate_configs) —
+/// each depth-D cell planned per epoch slice and audited as a ring
+/// (races, window escapes, cross-slice aliasing, doorbell reuse, and
+/// collisions with the group-control words). Exits nonzero on any
+/// finding; CI runs this as the machine-checked record that in-tree
+/// plans are clean.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let nranks: usize = args.get_or("ranks", "3").parse()?;
+    let ndevices: usize = args.get_or("devices", "6").parse()?;
+    let sizes: Vec<usize> = args
+        .get_or("sizes", "64K,1M,16M")
+        .split(',')
+        .map(|s| parse_size(s.trim()).map_err(|e| anyhow::anyhow!(e)))
+        .collect::<Result<_>>()?;
+    let depths: Vec<usize> = args
+        .get_or("depths", "1,2,4")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("--depths must be integers"))
+        .collect::<Result<_>>()?;
+    ensure!(depths.iter().all(|d| *d >= 1), "--depths entries must be at least 1");
+    let dtypes: Vec<Dtype> = args
+        .get_or("dtypes", "f32,f16,bf16,u8")
+        .split(',')
+        .map(|s| Dtype::parse(s.trim()))
+        .collect::<Result<_>>()?;
+    banner(&format!("static plan audit: {nranks} ranks, {ndevices} devices"));
+    let mut cells = 0usize;
+    let mut plans_checked = 0usize;
+    let mut skipped = 0usize;
+    let mut findings: Vec<analysis::Diagnostic> = Vec::new();
+    for primitive in Primitive::ALL {
+        for &bytes in &sizes {
+            for &depth in &depths {
+                // Same capacity growth as the pipelined run path: a
+                // depth-N ring places each launch on a 1/N device window.
+                let mut spec = ClusterSpec::new(nranks, ndevices, 64 << 20);
+                let worst_cap = depth * nranks * bytes + spec.db_region_size + (1 << 20);
+                if spec.device_capacity < worst_cap {
+                    spec.device_capacity = worst_cap.next_power_of_two();
+                }
+                // Plan on the same view a process group would carve: the
+                // GROUP_CTRL_SLOTS control prefix sits below the doorbell
+                // window, exactly as in thread-local group construction.
+                let full = PoolLayout::from_spec(&spec)?;
+                let total = full.doorbell_slots();
+                ensure!(total > GROUP_CTRL_SLOTS, "doorbell region too small");
+                let layout = full.with_doorbell_window(GROUP_CTRL_SLOTS, total - GROUP_CTRL_SLOTS)?;
+                let slices = match layout.pipeline_slices(depth) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        skipped += 1;
+                        continue;
+                    }
+                };
+                // Audit against the control-word map a process group
+                // would carve below the doorbell window for this ring.
+                let prefix = layout.db_slot_base.saturating_sub(GROUP_CTRL_SLOTS);
+                let ctrl = control_word_slots(prefix, depth);
+                for &dtype in &dtypes {
+                    let n = (bytes / dtype.size_bytes() / nranks).max(1) * nranks;
+                    for cfg in candidate_configs(0) {
+                        cells += 1;
+                        let planned: Result<Vec<ValidPlan>> = slices
+                            .iter()
+                            .map(|sl| plan_collective_dtype(primitive, &spec, sl, &cfg, n, dtype))
+                            .collect();
+                        let plans = match planned {
+                            Ok(p) => p,
+                            Err(_) => {
+                                // Infeasible cell (e.g. chunk count vs
+                                // message shape); counted, never silent.
+                                skipped += 1;
+                                continue;
+                            }
+                        };
+                        let refs: Vec<&CollectivePlan> = plans.iter().map(|p| &**p).collect();
+                        plans_checked += refs.len();
+                        let diags = analysis::check_ring(&refs, &slices, &ctrl);
+                        if !diags.is_empty() {
+                            println!(
+                                "FINDINGS: {primitive} {} {dtype} {} depth {depth}",
+                                cfg.describe(),
+                                fmt_bytes(bytes)
+                            );
+                            findings.extend(diags);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "audited {plans_checked} plans over {cells} matrix cells ({skipped} infeasible cells \
+         skipped)"
+    );
+    if !findings.is_empty() {
+        print!("{}", analysis::report(&findings));
+        bail!("static analysis found {} diagnostic(s)", findings.len());
+    }
+    println!("static analysis clean ✓");
     Ok(())
 }
 

@@ -407,6 +407,19 @@ pub fn plan_collective_dtype(
         recv_elems: primitive.recv_elems(n_elems, nr),
         ranks,
     };
+    // Debug builds audit the planner's output against the layout view it
+    // was planned for (the window-containment half of the static
+    // analyzer; sealing below runs the layout-free race/reuse half).
+    #[cfg(debug_assertions)]
+    {
+        let diags = crate::analysis::check_windows(&plan, layout);
+        if !diags.is_empty() {
+            anyhow::bail!(
+                "planner emitted ops outside its layout window (builder bug):\n{}",
+                crate::analysis::report(&diags)
+            );
+        }
+    }
     ValidPlan::new(plan, layout.pool_size())
         .context("planner produced an invalid plan (this is a bug in the builder)")
 }

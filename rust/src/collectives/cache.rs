@@ -13,6 +13,10 @@
 //! evicting the least-recently-used plan when a new shape arrives at a full
 //! cache. Long sweeps over many shapes (the fig. 9/10 harnesses, parameter
 //! searches) therefore cannot grow it without limit.
+//!
+//! Because cached plans are sealed [`ValidPlan`]s, a cache hit also reuses
+//! the [`crate::analysis`] audit that sealing ran (in debug builds): the
+//! static race/reuse checks happen once per shape, never per launch.
 
 use crate::collectives::builder::plan_collective_dtype;
 use crate::collectives::ops::ValidPlan;

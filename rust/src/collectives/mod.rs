@@ -13,6 +13,12 @@
 //! either executed for real by [`crate::exec::Communicator`] or timed in
 //! virtual time by [`crate::sim::fabric::SimFabric`]. One algorithm, two
 //! backends.
+//!
+//! Plans are also *statically audited*: [`crate::analysis`] builds a
+//! happens-before model of the op streams and checks race freedom,
+//! window containment, cross-slice exclusivity, and doorbell-publish
+//! uniqueness. [`ValidPlan`] sealing runs the plan-level checks under
+//! `debug_assertions`; `ccl analyze` sweeps the whole candidate matrix.
 
 pub mod backend;
 pub mod builder;

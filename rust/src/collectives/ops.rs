@@ -230,9 +230,24 @@ impl ValidPlan {
     }
 
     /// [`ValidPlan::new`] for a plan already behind an `Arc`.
+    ///
+    /// Debug builds additionally run the layout-free half of the static
+    /// analyzer ([`crate::analysis::check_plan`]) here, so every plan a
+    /// test run seals is audited for data races and doorbell reuse.
+    /// Release builds pay nothing — sealing stays exactly one `validate`.
     pub fn from_arc(plan: Arc<CollectivePlan>, pool_size: usize) -> anyhow::Result<Self> {
         plan.validate(pool_size)
             .map_err(|e| anyhow::anyhow!("invalid plan: {e}"))?;
+        #[cfg(debug_assertions)]
+        {
+            let diags = crate::analysis::check_plan(&plan);
+            if !diags.is_empty() {
+                anyhow::bail!(
+                    "static analysis rejected plan:\n{}",
+                    crate::analysis::report(&diags)
+                );
+            }
+        }
         Ok(Self { plan, pool_size })
     }
 

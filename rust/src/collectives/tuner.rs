@@ -55,6 +55,26 @@ pub const TUNER_ALGO_VERSION: u64 = 1;
 /// dominates). `Aggregate`/`Naive` are single-chunk by definition.
 pub const CHUNK_SWEEP: [usize; 4] = [1, 2, 4, 8];
 
+/// The tuner's candidate space, in sweep order: every `(variant, chunks)`
+/// pair [`tune_decision`] evaluates for one launch shape, with `root`
+/// applied. Shared by the CLI's fixed-config sweeps and by `ccl analyze`
+/// (which audits every candidate the tuner could ever pick).
+pub fn candidate_configs(root: usize) -> Vec<CclConfig> {
+    let mut out = Vec::new();
+    for variant in CclVariant::ALL {
+        let chunk_candidates: &[usize] = match variant {
+            CclVariant::All => &CHUNK_SWEEP,
+            // config() forces chunks = 1 for these; sweeping more would
+            // re-evaluate the same candidate.
+            CclVariant::Aggregate | CclVariant::Naive => &CHUNK_SWEEP[..1],
+        };
+        for &chunks in chunk_candidates {
+            out.push(variant.config(chunks).with_root(root));
+        }
+    }
+    out
+}
+
 /// Everything a tuning decision depends on: a
 /// [`PlanKey`](crate::collectives::PlanKey) minus the variant fields
 /// (`variant`, `chunks` — those are the tuner's *outputs*), plus the
@@ -174,25 +194,16 @@ pub fn tune_decision(
     let mut best: Option<(CclConfig, f64)> = None;
     let mut feasible = 0usize;
     let mut last_err = None;
-    for variant in CclVariant::ALL {
-        let chunk_candidates: &[usize] = match variant {
-            CclVariant::All => &CHUNK_SWEEP,
-            // config() forces chunks = 1 for these; sweeping more would
-            // re-evaluate the same candidate.
-            CclVariant::Aggregate | CclVariant::Naive => &CHUNK_SWEEP[..1],
-        };
-        for &chunks in chunk_candidates {
-            let cfg = variant.config(chunks).with_root(root);
-            match predict_launch_secs(spec, layout, ring, primitive, &cfg, n_elems, dtype) {
-                Ok(secs) => {
-                    feasible += 1;
-                    // Strictly-less keeps the first candidate on ties.
-                    if best.is_none_or(|(_, b)| secs < b) {
-                        best = Some((cfg, secs));
-                    }
+    for cfg in candidate_configs(root) {
+        match predict_launch_secs(spec, layout, ring, primitive, &cfg, n_elems, dtype) {
+            Ok(secs) => {
+                feasible += 1;
+                // Strictly-less keeps the first candidate on ties.
+                if best.is_none_or(|(_, b)| secs < b) {
+                    best = Some((cfg, secs));
                 }
-                Err(e) => last_err = Some(e),
             }
+            Err(e) => last_err = Some(e),
         }
     }
     match best {

@@ -134,6 +134,9 @@ impl ReduceEngine for PjrtReduceEngine {
             let n = (acc.len() - i).min(tile);
             if n == tile {
                 // Full tile: read pool bytes, run the Pallas kernel.
+                // SAFETY: chunk owns exactly `tile` f32s (tile * 4 bytes), the
+                // u8 view covers that allocation exactly, u8 has no validity
+                // requirements, and the f32 view is not used until it ends.
                 let bytes = unsafe {
                     std::slice::from_raw_parts_mut(chunk.as_mut_ptr() as *mut u8, tile * 4)
                 };
@@ -178,6 +181,8 @@ mod tests {
         pool.write_bytes(128, &bytes).unwrap();
         let mut acc = vec![1.0f32; 2];
         {
+            // SAFETY: acc owns two f32s (8 bytes); the u8 view covers that
+            // allocation exactly and ends before acc is read again.
             let acc_bytes = unsafe {
                 std::slice::from_raw_parts_mut(acc.as_mut_ptr() as *mut u8, 8)
             };

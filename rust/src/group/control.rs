@@ -94,15 +94,22 @@ const R_KEY: usize = 8;
 // disjoint slices concurrently. Words 48/49 are the whole-group barrier
 // backing `ProcessGroup::barrier()` and the `split()` rounds, which must
 // be independent of every slice.
-pub(crate) const GC_LAUNCH_CNT: usize = 0;
-pub(crate) const GC_LAUNCH_SENSE: usize = 1;
-pub(crate) const GC_STREAM_CNT: usize = 2;
-pub(crate) const GC_STREAM_SENSE: usize = 3;
-pub(crate) const GC_EPOCH: usize = 4;
+/// Per-slice launch-barrier arrival counter.
+pub const GC_LAUNCH_CNT: usize = 0;
+/// Per-slice launch-barrier sense word.
+pub const GC_LAUNCH_SENSE: usize = 1;
+/// Per-slice stream-barrier arrival counter (backs the plans' `Op::Barrier`).
+pub const GC_STREAM_CNT: usize = 2;
+/// Per-slice stream-barrier sense word.
+pub const GC_STREAM_SENSE: usize = 3;
+/// Per-slice epoch word (the launch-sequence publication).
+pub const GC_EPOCH: usize = 4;
 /// Stride between consecutive slices' word blocks (5 words + 1 reserved).
-pub(crate) const GC_SLICE_WORDS: usize = 6;
-pub(crate) const GC_GROUP_CNT: usize = MAX_PIPELINE_DEPTH * GC_SLICE_WORDS;
-pub(crate) const GC_GROUP_SENSE: usize = GC_GROUP_CNT + 1;
+pub const GC_SLICE_WORDS: usize = 6;
+/// Whole-group barrier arrival counter (slice-independent).
+pub const GC_GROUP_CNT: usize = MAX_PIPELINE_DEPTH * GC_SLICE_WORDS;
+/// Whole-group barrier sense word.
+pub const GC_GROUP_SENSE: usize = GC_GROUP_CNT + 1;
 
 /// Byte offset of group-control word `word` for a group whose doorbell
 /// window starts at absolute slot `window_base_slot`.
@@ -111,9 +118,27 @@ pub(crate) fn group_word_off(window_base_slot: usize, word: usize) -> usize {
 }
 
 /// Word index of per-slice control word `word` for epoch slice `slice`.
-pub(crate) fn slice_word(slice: usize, word: usize) -> usize {
+pub fn slice_word(slice: usize, word: usize) -> usize {
     debug_assert!(slice < MAX_PIPELINE_DEPTH && word < GC_SLICE_WORDS);
     slice * GC_SLICE_WORDS + word
+}
+
+/// The group control-word map, exposed for the static analyzer: absolute
+/// doorbell-slot index of every *live* control word of a group whose
+/// control prefix starts at `prefix_base_slot` and whose epoch ring is
+/// `depth` slices deep. Plan windows (and every epoch slice carved from
+/// them) must never cover any of these slots — the
+/// [`crate::analysis`] ring checks take this list as their `ctrl_slots`.
+pub fn control_word_slots(prefix_base_slot: usize, depth: usize) -> Vec<usize> {
+    let mut slots = Vec::with_capacity(depth.min(MAX_PIPELINE_DEPTH) * 5 + 2);
+    for slice in 0..depth.min(MAX_PIPELINE_DEPTH) {
+        for word in [GC_LAUNCH_CNT, GC_LAUNCH_SENSE, GC_STREAM_CNT, GC_STREAM_SENSE, GC_EPOCH] {
+            slots.push(prefix_base_slot + slice_word(slice, word));
+        }
+    }
+    slots.push(prefix_base_slot + GC_GROUP_CNT);
+    slots.push(prefix_base_slot + GC_GROUP_SENSE);
+    slots
 }
 
 /// The epoch word published on a slice for launch `seq`: the

@@ -409,6 +409,21 @@ impl ProcessGroup {
             Ok(slices) => slices,
             Err(_) => vec![base],
         };
+        // Debug builds audit every ring this group will launch on: slices
+        // pairwise disjoint (doorbells and devices) and clear of the
+        // group-control words carved in front of the plan window — the
+        // static analyzer's cross-slice aliasing invariant (category (c)).
+        #[cfg(debug_assertions)]
+        {
+            let prefix = base.db_slot_base.saturating_sub(GROUP_CTRL_SLOTS);
+            let ctrl = control::control_word_slots(prefix, ring.len());
+            let diags = crate::analysis::check_slice_windows(&ring, &ctrl);
+            debug_assert!(
+                diags.is_empty(),
+                "epoch ring fails the static slice audit:\n{}",
+                crate::analysis::report(&diags)
+            );
+        }
         let depth = ring.len();
         Self {
             inner,

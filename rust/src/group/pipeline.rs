@@ -19,6 +19,12 @@
 //! [`CollectiveFuture`] is the handle: hold it while issuing the next
 //! collective, `wait()` it to collect this rank's result, or
 //! [`super::ProcessGroup::flush`] to drain everything.
+//!
+//! The slice-disjointness this module's overlap argument rests on is not
+//! just asserted prose: group construction audits every carved ring with
+//! [`crate::analysis::check_slice_windows`] (pairwise-disjoint doorbell
+//! and device windows, no slice covering a group-control word), and
+//! `ccl analyze` re-checks whole rings of planned launches op-by-op.
 
 use crate::collectives::ops::ValidPlan;
 use crate::doorbell::{DoorbellSet, PoolBarrier, WaitPolicy};

@@ -116,6 +116,9 @@
 //! | Introspection | `pg.resolve_config(..)` / `pg.resolve_auto(..)` expose the tuner's decision; `pg.plan_cache()` / `pg.decision_cache()` expose hit/miss/eviction stats |
 //! | Subgroups | `pg.split(..)` carves disjoint doorbell + device windows; pool rendezvous layout-hashes topology, protocol, ring depth, and tuner algorithm version, so incompatible builds fail fast instead of desyncing |
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod baseline;
 pub mod bench_util;
 pub mod chunking;

@@ -97,6 +97,11 @@ impl PoolLayout {
     /// slots or fewer than `n` devices) — thread-local callers fall back to
     /// serialized launches over the undivided view, pool bootstraps reject
     /// the depth up front.
+    ///
+    /// Disjointness is audited, not assumed: group construction runs
+    /// [`crate::analysis::check_slice_windows`] over every carved ring
+    /// (debug builds), and `ccl analyze` audits planned launches on their
+    /// slices op-by-op.
     pub fn pipeline_slices(&self, n: usize) -> Result<Vec<PoolLayout>> {
         if n == 0 {
             bail!("pipeline ring depth must be at least 1");

@@ -80,6 +80,7 @@ impl ShmPool {
         // SAFETY: fd is valid.
         if unsafe { libc::ftruncate(fd, len as libc::off_t) } != 0 {
             let e = std::io::Error::last_os_error();
+            // SAFETY: fd is open and owned here; closed exactly once on this error path.
             unsafe { libc::close(fd) };
             bail!("ftruncate({path}, {len}) failed: {e}");
         }
@@ -87,6 +88,7 @@ impl ShmPool {
         // before touching the mapping (a full tmpfs can say yes to
         // ftruncate and still fault later on some filesystems).
         if let Err(e) = Self::verify_size(fd, path, len) {
+            // SAFETY: fd is open and owned here; closed exactly once on this error path.
             unsafe { libc::close(fd) };
             return Err(e);
         }
@@ -109,6 +111,7 @@ impl ShmPool {
             bail!("open({path}) failed: {}", std::io::Error::last_os_error());
         }
         if let Err(e) = Self::verify_size(fd, path, len) {
+            // SAFETY: fd is open and owned here; closed exactly once on this error path.
             unsafe { libc::close(fd) };
             return Err(e);
         }
@@ -149,6 +152,7 @@ impl ShmPool {
         };
         if base == libc::MAP_FAILED {
             let e = std::io::Error::last_os_error();
+            // SAFETY: fd is open and owned here; closed exactly once on this error path.
             unsafe { libc::close(fd) };
             bail!("mmap({path}, {len}) failed: {e}");
         }

@@ -86,6 +86,8 @@ fn multiprocess_collectives_match_single_process_bitwise() {
     let (ref_ag, ref_bc) = single_process_reference();
     assert_eq!(ref_ag[0], ref_ag[1], "AllGather is rank-symmetric");
 
+    // SAFETY: no launch threads are live at this point (the reference run
+    // flushed above), so the single-threaded child may continue safely.
     match unsafe { libc::fork() } {
         -1 => panic!("fork failed: {}", std::io::Error::last_os_error()),
         0 => {
@@ -97,6 +99,8 @@ fn multiprocess_collectives_match_single_process_bitwise() {
                 assert_eq!(bc, ref_bc[1], "child Broadcast bitwise");
             }))
             .is_ok();
+            // SAFETY: _exit never returns and skips atexit handlers, which is
+            // exactly what a forked test child must do.
             unsafe { libc::_exit(if ok { 0 } else { 1 }) };
         }
         child => {
@@ -105,6 +109,8 @@ fn multiprocess_collectives_match_single_process_bitwise() {
             // Reap the child before asserting so a parent-side failure
             // never leaks a zombie.
             let mut status = 0i32;
+            // SAFETY: child is this process's live child pid; status is a
+            // valid out-param.
             let reaped = unsafe { libc::waitpid(child, &mut status, 0) };
             assert_eq!(reaped, child, "waitpid failed");
             let (ag, bc) = result.expect("parent rank 0 failed");

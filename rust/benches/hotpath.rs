@@ -4,8 +4,11 @@
 //! end-to-end latency per variant.
 //!
 //! Run: `cargo bench --bench hotpath`
+//! Env: `BENCH_JSON=1` additionally writes machine-readable
+//! `BENCH_hotpath.json` (one row per measured cell) for the CI perf
+//! trajectory.
 
-use cxl_ccl::bench_util::{banner, measure, Table};
+use cxl_ccl::bench_util::{banner, measure, write_bench_json, Table};
 use cxl_ccl::collectives::builder::plan_collective;
 use cxl_ccl::collectives::{CclVariant, CollectiveBackend, PlanCache, Primitive};
 use cxl_ccl::doorbell::{DoorbellSet, WaitPolicy};
@@ -16,7 +19,20 @@ use cxl_ccl::topology::ClusterSpec;
 use cxl_ccl::util::size::{fmt_bytes, fmt_time};
 use cxl_ccl::util::SplitMix64;
 
+/// One measured cell for the JSON artifact: which section, which cell
+/// within it, and the p50 plus a section-appropriate rate.
+fn json_row(section: &str, cell: &str, p50_s: f64, gbps: f64) -> String {
+    format!(
+        "{{\"section\": \"{section}\", \"cell\": \"{cell}\", \"p50_ns\": {:.1}, \
+         \"gbps\": {gbps:.3}}}",
+        p50_s * 1e9
+    )
+}
+
 fn main() {
+    let emit_json = std::env::var("BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    let mut rows: Vec<String> = Vec::new();
+
     banner("doorbell: ring + already-ready wait");
     let layout = PoolLayout::new(2, 4 << 20, 1 << 20).unwrap();
     let pool = ShmPool::anon(layout.pool_size()).unwrap();
@@ -28,6 +44,7 @@ fn main() {
         dbs.wait(7, &policy).unwrap();
     });
     println!("ring+wait p50 {} mean {}", fmt_time(s.p50), fmt_time(s.mean));
+    rows.push(json_row("doorbell", "ring_wait", s.p50, 0.0));
 
     banner("pool memcpy bandwidth (this host's hardware floor)");
     let t = Table::new(&[12, 14, 14]);
@@ -43,6 +60,18 @@ fn main() {
             format!("{:.2}", bytes as f64 / w.p50 / 1e9),
             format!("{:.2}", bytes as f64 / r.p50 / 1e9),
         ]);
+        rows.push(json_row(
+            "memcpy",
+            &format!("write_{}", fmt_bytes(bytes)),
+            w.p50,
+            bytes as f64 / w.p50 / 1e9,
+        ));
+        rows.push(json_row(
+            "memcpy",
+            &format!("read_{}", fmt_bytes(bytes)),
+            r.p50,
+            bytes as f64 / r.p50 / 1e9,
+        ));
     }
 
     banner("reduce engine: scalar vs AOT Pallas kernel via PJRT");
@@ -61,6 +90,7 @@ fn main() {
         fmt_time(s.p50),
         (n * 4) as f64 / s.p50 / 1e9
     );
+    rows.push(json_row("reduce", "scalar", s.p50, (n * 4) as f64 / s.p50 / 1e9));
     match cxl_ccl::runtime::PjrtRuntime::cpu() {
         Ok(rt) => {
             let k = rt.reduce_kernel(n).unwrap();
@@ -74,6 +104,7 @@ fn main() {
                 (n * 4) as f64 / s.p50 / 1e9,
                 engine.tile_elems()
             );
+            rows.push(json_row("reduce", "pjrt_pallas", s.p50, (n * 4) as f64 / s.p50 / 1e9));
         }
         Err(e) => println!("pjrt-pallas: skipped ({e})"),
     }
@@ -98,6 +129,8 @@ fn main() {
             fmt_time(c.p50),
             s.p50 / c.p50.max(1e-12)
         );
+        rows.push(json_row("plan", &format!("{p}_fresh"), s.p50, 0.0));
+        rows.push(json_row("plan", &format!("{p}_cached"), c.p50, 0.0));
     }
 
     banner("real executor end-to-end (4MiB AllGather, thread-per-rank)");
@@ -122,7 +155,20 @@ fn main() {
             fmt_time(s.p50),
             format!("{:.2}", plan.total_pool_bytes() as f64 / s.p50 / 1e9),
         ]);
+        rows.push(json_row(
+            "executor",
+            v.name(),
+            s.p50,
+            plan.total_pool_bytes() as f64 / s.p50 / 1e9,
+        ));
     }
     let stats = comm.plan_cache().stats();
     println!("plan cache after the sweep: {} misses, {} hits", stats.misses, stats.hits);
+
+    if emit_json {
+        match write_bench_json("BENCH_hotpath.json", "hotpath", &[], &rows) {
+            Ok(()) => println!("\nwrote BENCH_hotpath.json ({} rows)", rows.len()),
+            Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
+        }
+    }
 }

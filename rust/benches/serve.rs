@@ -1,0 +1,98 @@
+//! **Serving tier** — the KV-cache acceptance bench: seeded Zipf session
+//! streams driven through [`kvcache::serve::run_sim`], which exercises the
+//! real paged allocator (every lease CAS, generation stamp, and CLOCK
+//! sweep) while scoring each request in virtual time from the measured
+//! pool constants.
+//!
+//! Three invariants are asserted per cell (CI runs this as a smoke gate):
+//!
+//! 1. accounting is conserved: `hits + misses == requests`;
+//! 2. popularity skew shows up: a cache of P pages over S >> P Zipf(~1)
+//!    sessions hits well above the uniform ceiling `P/S`;
+//! 3. determinism: re-running the first cell with the same seed
+//!    reproduces its `json_row()` byte for byte.
+//!
+//! Run: `cargo bench --bench serve`
+//! Env: `SERVE_REQUESTS` (default 1M) sets the per-cell request count;
+//! `BENCH_JSON=1` additionally writes `BENCH_serve.json` (one row per
+//! cell, fixed formatting) for the CI perf trajectory.
+
+use cxl_ccl::bench_util::{banner, write_bench_json, Table};
+use cxl_ccl::kvcache::serve::{run_sim, ServeConfig};
+use cxl_ccl::util::size::{fmt_bytes, fmt_time};
+
+fn main() {
+    let requests: usize = std::env::var("SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 20);
+    let emit_json = std::env::var("BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    let seed = 0xC0FFEE;
+
+    // (sessions, zipf_s, pages, page_size): head-heavy vs flat streams
+    // against small and large caches.
+    let cells: &[(usize, f64, usize, usize)] = &[
+        (1 << 20, 1.05, 4096, 4096),
+        (1 << 20, 0.80, 4096, 4096),
+        (1 << 18, 1.20, 1024, 4096),
+        (1 << 20, 1.05, 4096, 16384),
+    ];
+
+    banner(&format!(
+        "serve: Zipf streams over the paged KV arena ({} requests/cell, virtual time)",
+        requests
+    ));
+    let t = Table::new(&[10, 6, 7, 9, 10, 12, 12, 12]);
+    t.header(&["sessions", "zipf", "pages", "page", "hit rate", "p50", "p99", "evictions"]);
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut first_row: Option<String> = None;
+    for &(sessions, zipf_s, pages, page_size) in cells {
+        let cfg = ServeConfig { sessions, requests, zipf_s, pages, page_size, seed };
+        let r = run_sim(&cfg).expect("serve sweep");
+        assert_eq!(r.stats.hits + r.stats.misses, requests, "accounting must be conserved");
+        let uniform_ceiling = pages as f64 / sessions as f64;
+        assert!(
+            r.hit_rate() > 2.0 * uniform_ceiling,
+            "zipf({zipf_s}) hit rate {:.4} does not beat 2x the uniform ceiling {:.4}",
+            r.hit_rate(),
+            uniform_ceiling
+        );
+        assert!(r.stats.evictions > 0, "a {pages}-page cache must evict under this stream");
+        t.row(&[
+            sessions.to_string(),
+            format!("{zipf_s:.2}"),
+            pages.to_string(),
+            fmt_bytes(page_size),
+            format!("{:.2}%", r.hit_rate() * 100.0),
+            fmt_time(r.p50_s),
+            fmt_time(r.p99_s),
+            r.stats.evictions.to_string(),
+        ]);
+        if first_row.is_none() {
+            first_row = Some(r.json_row());
+        }
+        rows.push(r.json_row());
+    }
+
+    // Determinism gate: the first cell re-run with the same seed must
+    // reproduce its row byte for byte — the property CI's double-run
+    // BENCH_serve.json diff relies on.
+    let (sessions, zipf_s, pages, page_size) = cells[0];
+    let again = run_sim(&ServeConfig { sessions, requests, zipf_s, pages, page_size, seed })
+        .expect("serve replay");
+    assert_eq!(
+        first_row.as_deref(),
+        Some(again.json_row().as_str()),
+        "same seed must reproduce the report byte for byte"
+    );
+    println!("\n{} cells swept; seed replay reproduced cell 0 exactly", cells.len());
+
+    if emit_json {
+        let meta = [("requests", requests.to_string()), ("seed", seed.to_string())];
+        match write_bench_json("BENCH_serve.json", "serve", &meta, &rows) {
+            Ok(()) => println!("wrote BENCH_serve.json ({} rows)", rows.len()),
+            Err(e) => eprintln!("failed to write BENCH_serve.json: {e}"),
+        }
+    }
+}

@@ -549,6 +549,64 @@ pub fn check_slice_windows(slices: &[PoolLayout], ctrl_slots: &[usize]) -> Vec<D
     diags
 }
 
+/// KV-cache reserve audit, run whenever a group carves an arena
+/// ([`Bootstrap::with_kv_reserve`](crate::group::Bootstrap::with_kv_reserve)):
+/// the reserve must stay inside the doorbell region (`total_slots` is the
+/// region's slot count) and alias neither any epoch slice's doorbell
+/// window nor a group-control word. `kv` is the absolute slot range of
+/// the reserve. Plan *data* can never reach the arena at all —
+/// [`PoolLayout::block_location`](crate::pool::PoolLayout) keeps every
+/// data block above the doorbell region of its device — so slots are the
+/// only seam this audit has to police.
+pub fn check_kv_window(
+    kv: &std::ops::Range<usize>,
+    slices: &[PoolLayout],
+    ctrl_slots: &[usize],
+    total_slots: usize,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if kv.is_empty() {
+        return diags;
+    }
+    if kv.end > total_slots {
+        diags.push(Diagnostic {
+            kind: DiagnosticKind::WindowEscape,
+            site: None,
+            other: None,
+            detail: format!(
+                "KV reserve [{}, {}) escapes the {total_slots}-slot doorbell region",
+                kv.start, kv.end
+            ),
+        });
+    }
+    for (i, sl) in slices.iter().enumerate() {
+        let db = sl.doorbell_slot_range();
+        if db.start < kv.end && kv.start < db.end {
+            diags.push(Diagnostic {
+                kind: DiagnosticKind::CrossSliceAlias,
+                site: None,
+                other: None,
+                detail: format!(
+                    "slice {i}'s doorbell window [{}, {}) reaches into the KV reserve \
+                     [{}, {})",
+                    db.start, db.end, kv.start, kv.end
+                ),
+            });
+        }
+    }
+    for &w in ctrl_slots {
+        if kv.contains(&w) {
+            diags.push(Diagnostic {
+                kind: DiagnosticKind::CrossSliceAlias,
+                site: None,
+                other: None,
+                detail: format!("KV reserve covers group-control word at slot {w}"),
+            });
+        }
+    }
+    diags
+}
+
 /// Full ring audit: per-launch [`check_plan`] + [`check_windows`] (sites
 /// stamped with their launch index), the layout-level
 /// [`check_slice_windows`], and op-level cross-launch aliasing — two

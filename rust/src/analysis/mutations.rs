@@ -138,3 +138,20 @@ pub fn alias_ring_slices(slices: &[PoolLayout]) -> Option<Vec<PoolLayout>> {
     aliased[1] = aliased[0];
     Some(aliased)
 }
+
+/// Category "kvcache arena alias": a KV reserve slid down so it overlaps
+/// the last ring slice's doorbell window (the bug a bootstrap that forgot
+/// to shrink the plan window would plant). Expected:
+/// [`super::DiagnosticKind::CrossSliceAlias`] from
+/// [`super::check_kv_window`]; a healthy reserve carved *above* every
+/// slice audits clean under the same call.
+pub fn alias_kvcache_arena(slices: &[PoolLayout]) -> Option<std::ops::Range<usize>> {
+    let last = slices.last()?;
+    let db = last.doorbell_slot_range();
+    if db.is_empty() {
+        return None;
+    }
+    // Start one slot inside the last slice's window: a genuine overlap,
+    // whatever the reserve's length.
+    Some(db.end - 1..db.end + 7)
+}

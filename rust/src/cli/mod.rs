@@ -10,6 +10,9 @@
 //! cxl-ccl analyze [--ranks 3] [--sizes 64K,1M,16M] [--depths 1,2,4]
 //! cxl-ccl sweep [--primitive p] ...    # virtual-time size sweep vs IB
 //! cxl-ccl train [--preset tiny] [--steps 40] [--variant auto]
+//! cxl-ccl serve [--sessions 2M] [--requests 4M] [--zipf 1.05]
+//!               [--pages 4096] [--page-size 4K] [--seed N]
+//!               [--bootstrap pool:<path> --rank R --world 2]
 //! cxl-ccl latency                      # Table-1 style report
 //! ```
 //!
@@ -24,7 +27,7 @@
 
 use crate::analysis;
 use crate::baseline::{collective_time, IbParams};
-use crate::bench_util::{banner, Table};
+use crate::bench_util::{banner, write_bench_json, Table};
 use crate::collectives::builder::{plan_collective, plan_collective_dtype};
 use crate::collectives::tuner::{
     candidate_configs, predict_launch_secs, tune_decision, TunedDecision,
@@ -35,8 +38,9 @@ use crate::collectives::{
 };
 use crate::config::{parse_ccl, KvFile, RunConfig};
 use crate::exec::Communicator;
-use crate::group::control::{control_word_slots, GROUP_CTRL_SLOTS};
+use crate::group::control::{control_word_slots, CTRL_SLOTS, GROUP_CTRL_SLOTS};
 use crate::group::{Bootstrap, CollectiveFuture, CommWorld};
+use crate::kvcache::{kv_slots_for, serve as kvserve, ServeConfig, ServeReport};
 use crate::pool::PoolLayout;
 use crate::sim::SimFabric;
 use crate::tensor::{views_f32, views_f32_mut, Dtype, Tensor};
@@ -103,6 +107,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "analyze" => cmd_analyze(&args),
         "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "latency" => cmd_latency(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -133,6 +138,10 @@ fn print_help() {
          sweep  [--primitive p] [--ranks 3] [--max 1G]   virtual-time vs InfiniBand\n  \
          train  [--preset tiny|e2e] [--steps 40] [--variant auto] [--chunks 8]\n         \
                 [--buckets 2] [--pipeline-depth 2]\n  \
+         serve  [--sessions 2M] [--requests 4M] [--zipf 1.05] [--pages 4096]\n         \
+                [--page-size 4K] [--seed N]     Zipf KV-cache sweep in virtual time\n         \
+                [--bootstrap pool:<path> --rank R --world 2]   real 2-process\n         \
+                prefill/decode run printing a cross-rank-diffable event digest\n  \
          latency                  Table-1 style latency report\n\n\
          --variant auto (the default) resolves the (variant, chunks) pair through\n\
          the sim-backed tuner per launch shape; pin a fixed variant to bypass it.\n\n\
@@ -927,6 +936,139 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
     })?;
+    Ok(())
+}
+
+/// `serve`: the KV-cache serving tier's workload driver. Local (the
+/// default) runs the seeded Zipf sweep in virtual time — same seed, same
+/// `BENCH_serve.json` bytes, which CI pins by diffing two runs. `pool:`
+/// runs the real 2-process prefill/decode protocol and prints an event
+/// digest CI diffs across the two ranks' logs, exactly like `run`'s
+/// result digests.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    if let Some(v) = args.get("sessions") {
+        cfg.sessions = parse_size(v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(v) = args.get("requests") {
+        cfg.requests = parse_size(v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(v) = args.get("zipf") {
+        cfg.zipf_s = v.parse()?;
+    }
+    if let Some(v) = args.get("pages") {
+        cfg.pages = parse_size(v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(v) = args.get("page-size") {
+        cfg.page_size = parse_size(v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    cfg.validate()?;
+    let bootstrap = args.get_or("bootstrap", "local");
+    if let Some(path) = bootstrap.strip_prefix("pool:") {
+        return cmd_serve_pool(args, path, &cfg);
+    }
+    ensure!(
+        bootstrap == "local",
+        "--bootstrap must be local or pool:<path>, got {bootstrap:?}"
+    );
+    banner(&format!(
+        "serve[sim]: {} sessions, {} requests, zipf {}, {} pages x {}",
+        cfg.sessions,
+        cfg.requests,
+        cfg.zipf_s,
+        cfg.pages,
+        fmt_bytes(cfg.page_size),
+    ));
+    let wall = Instant::now();
+    let report = kvserve::run_sim(&cfg)?;
+    print_serve_report(&report);
+    println!("swept in {} wall", fmt_time(wall.elapsed().as_secs_f64()));
+    let emit_json = std::env::var("BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    if emit_json {
+        // Virtual-time rows only: the sim report is a pure function of
+        // the config, so CI can diff two runs byte for byte.
+        let meta = [
+            ("zipf_s", format!("{}", cfg.zipf_s)),
+            ("pages", format!("{}", cfg.pages)),
+            ("page_size", format!("{}", cfg.page_size)),
+            ("seed", format!("{}", cfg.seed)),
+        ];
+        write_bench_json("BENCH_serve.json", "serve", &meta, &[report.json_row()])?;
+        println!("wrote BENCH_serve.json (1 rows)");
+    }
+    Ok(())
+}
+
+fn print_serve_report(r: &ServeReport) {
+    let t = Table::new(&[14, 14, 14, 14]);
+    t.header(&["hits", "misses", "evictions", "stale"]);
+    t.row(&[
+        format!("{}", r.stats.hits),
+        format!("{}", r.stats.misses),
+        format!("{}", r.stats.evictions),
+        format!("{}", r.stats.stale_misses),
+    ]);
+    println!(
+        "hit rate {:.2}% | p50 {} p99 {} mean {} per request",
+        r.hit_rate() * 100.0,
+        fmt_time(r.p50_s),
+        fmt_time(r.p99_s),
+        fmt_time(r.mean_s),
+    );
+}
+
+fn cmd_serve_pool(args: &Args, path: &str, cfg: &ServeConfig) -> Result<()> {
+    let world: usize = args
+        .get("world")
+        .context("--bootstrap pool:<path> needs --world 2 (prefill + decode)")?
+        .parse()?;
+    let rank: usize = args
+        .get("rank")
+        .context("--bootstrap pool:<path> needs --rank R (this process's rank)")?
+        .parse()?;
+    ensure!(
+        world == 2,
+        "serve pool mode is a 2-process protocol (prefill rank 0, decode rank 1)"
+    );
+    // Every rank must compute the identical spec — the KV reserve feeds
+    // the pool layout hash, so a mismatched --pages or --page-size fails
+    // the rendezvous up front instead of desyncing mid-stream.
+    let kv_slots = kv_slots_for(cfg.pages, cfg.page_size);
+    let mut spec = ClusterSpec::new(2, 2, 8 << 20);
+    let need_db = 64 * (CTRL_SLOTS + GROUP_CTRL_SLOTS + kv_slots + 2048);
+    if spec.db_region_size < need_db {
+        spec.db_region_size = need_db.next_power_of_two();
+    }
+    let worst = spec.db_region_size + 4 * cfg.page_size + (1 << 20);
+    if spec.device_capacity < worst {
+        spec.device_capacity = worst.next_power_of_two();
+    }
+    banner(&format!(
+        "serve[pool:{path}]: rank {rank}/2 ({}) | {} requests over {} sessions | \
+         {} pages x {} ({} KV slots)",
+        if rank == 0 { "prefill" } else { "decode" },
+        cfg.requests,
+        cfg.sessions,
+        cfg.pages,
+        fmt_bytes(cfg.page_size),
+        kv_slots,
+    ));
+    let boot = Bootstrap::pool(path, spec).with_kv_reserve(kv_slots);
+    let pg = CommWorld::init(boot, rank, world)?;
+    println!(
+        "rendezvous complete: {} ranks, KV reserve at slots {:?}",
+        pg.world_size(),
+        pg.kv_slot_range(),
+    );
+    let (report, digest) = kvserve::run_pool(&pg, cfg)?;
+    print_serve_report(&report);
+    println!(
+        "serve digest fnv64=0x{digest:016x} ({} requests, {} pages)",
+        cfg.requests, cfg.pages
+    );
     Ok(())
 }
 

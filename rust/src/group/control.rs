@@ -33,6 +33,10 @@
 //!              plan doorbells, carved into N epoch slices for pipelined
 //!              launches (the configured ring depth N is part of the
 //!              layout hash, so mixed-depth mappers fail fast)
+//! top          optional KV-cache reserve (v7): the last `kv_slots` slots
+//!              of the region hold the [`crate::kvcache`] page arena +
+//!              publication records, excluded from every plan window above
+//!              (the reserve size is part of the layout hash)
 //! ```
 
 use crate::doorbell::DOORBELL_SLOT;
@@ -52,8 +56,12 @@ pub const POOL_MAGIC: u32 = 0x4343_4C50;
 /// a wrapping epoch-word ring), and the layout hash covers the configured
 /// ring depth. v6: the layout hash additionally covers the tuner algorithm
 /// version, so builds whose `CclConfig::auto()` resolution could diverge
-/// fail rendezvous instead of desyncing mid-launch.
-pub const POOL_PROTO_VERSION: u32 = 6;
+/// fail rendezvous instead of desyncing mid-launch. v7: an optional
+/// KV-cache reserve ([`crate::kvcache`]) is carved from the *top* of the
+/// doorbell region and excluded from the group's plan window; the reserve
+/// size joins the layout hash, since mappers configured with different
+/// reserves would carve different plan windows.
+pub const POOL_PROTO_VERSION: u32 = 7;
 /// Header slots at the very base of the doorbell region.
 pub const HEADER_SLOTS: usize = 8;
 /// One rendezvous slot per global rank.
@@ -201,9 +209,18 @@ impl PoolControl {
     /// [`TUNER_ALGO_VERSION`](crate::collectives::tuner::TUNER_ALGO_VERSION):
     /// `CclConfig::auto()` resolves per rank through the tuner, so two
     /// builds whose tuners could pick different plans for the same spec
-    /// must never rendezvous.
-    pub(crate) fn layout_hash(spec: &ClusterSpec, pool_len: usize, ring_depth: usize) -> u64 {
-        let mut buf = [0u8; 64];
+    /// must never rendezvous. Since v7 it covers the KV-cache reserve
+    /// (`kv_slots`, 0 without one): the reserve is carved from the top of
+    /// the doorbell region *before* the plan window, so mappers configured
+    /// with different reserves would carve different plan windows — and
+    /// different epoch slices — silently.
+    pub(crate) fn layout_hash(
+        spec: &ClusterSpec,
+        pool_len: usize,
+        ring_depth: usize,
+        kv_slots: usize,
+    ) -> u64 {
+        let mut buf = [0u8; 72];
         for (i, v) in [
             spec.nranks as u64,
             spec.ndevices as u64,
@@ -213,6 +230,7 @@ impl PoolControl {
             POOL_PROTO_VERSION as u64,
             ring_depth as u64,
             crate::collectives::tuner::TUNER_ALGO_VERSION,
+            kv_slots as u64,
         ]
         .into_iter()
         .enumerate()
@@ -231,6 +249,7 @@ impl PoolControl {
         rank: usize,
         world: usize,
         ring_depth: usize,
+        kv_slots: usize,
         timeout: Duration,
     ) -> Result<Self> {
         ensure!(
@@ -238,7 +257,7 @@ impl PoolControl {
             "pool bootstrap supports at most {MAX_POOL_WORLD} ranks, got {world}"
         );
         ensure!(rank < world, "rank {rank} out of range ({world} ranks)");
-        let hash = Self::layout_hash(spec, pool.len(), ring_depth);
+        let hash = Self::layout_hash(spec, pool.len(), ring_depth, kv_slots);
         let mut ctrl = Self { pool, generation: 0 };
         ctrl.generation = if rank == 0 {
             ctrl.initialize(hash, world, spec.db_region_size)?
@@ -424,10 +443,10 @@ mod tests {
             let s0 = s.clone();
             let s1 = s.clone();
             let h0 = sc.spawn(move || {
-                PoolControl::rendezvous(p0, &s0, 0, 2, 2, Duration::from_secs(10))
+                PoolControl::rendezvous(p0, &s0, 0, 2, 2, 0, Duration::from_secs(10))
             });
             let h1 = sc.spawn(move || {
-                PoolControl::rendezvous(p1, &s1, 1, 2, 2, Duration::from_secs(10))
+                PoolControl::rendezvous(p1, &s1, 1, 2, 2, 0, Duration::from_secs(10))
             });
             (h0.join().unwrap(), h1.join().unwrap())
         });
@@ -457,6 +476,7 @@ mod tests {
             1,
             2,
             2,
+            0,
             Duration::from_millis(300),
         )
         .unwrap_err();
@@ -469,6 +489,20 @@ mod tests {
             1,
             2,
             3,
+            0,
+            Duration::from_millis(300),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("layout hash mismatch"), "{err:#}");
+        // So is a different KV-cache reserve: the joiner would carve a
+        // different plan window out of the same doorbell region.
+        let err = PoolControl::rendezvous(
+            Arc::clone(&pool),
+            &s,
+            1,
+            2,
+            2,
+            128,
             Duration::from_millis(300),
         )
         .unwrap_err();
@@ -483,7 +517,7 @@ mod tests {
             pool: Arc::clone(pool),
             generation: 0,
         };
-        let hash = PoolControl::layout_hash(s, pool.len(), 2);
+        let hash = PoolControl::layout_hash(s, pool.len(), 2, 0);
         let gen = ctrl.initialize(hash, 2, s.db_region_size).unwrap();
         PoolControl {
             pool: Arc::clone(pool),
@@ -516,16 +550,16 @@ mod tests {
             let s1 = s.clone();
             let s1b = s.clone();
             let h0 = sc.spawn(move || {
-                PoolControl::rendezvous(p0, &s0, 0, 2, 2, Duration::from_secs(10))
+                PoolControl::rendezvous(p0, &s0, 0, 2, 2, 0, Duration::from_secs(10))
             });
             let h1 = sc.spawn(move || {
-                PoolControl::rendezvous(p1, &s1, 1, 2, 2, Duration::from_secs(10))
+                PoolControl::rendezvous(p1, &s1, 1, 2, 2, 0, Duration::from_secs(10))
             });
             h0.join().unwrap().unwrap();
             h1.join().unwrap().unwrap();
             // World complete; a third process claiming rank 1 again must be
             // told so (short timeout keeps the test fast).
-            let err = PoolControl::rendezvous(p1b, &s1b, 1, 2, 2, Duration::from_millis(200))
+            let err = PoolControl::rendezvous(p1b, &s1b, 1, 2, 2, 0, Duration::from_millis(200))
                 .unwrap_err();
             assert!(format!("{err:#}").contains("already registered"), "{err:#}");
         });
@@ -606,29 +640,36 @@ mod tests {
     #[test]
     fn hash_covers_every_layout_dimension() {
         let s = spec();
-        let base = PoolControl::layout_hash(&s, 6 << 20, 2);
+        let base = PoolControl::layout_hash(&s, 6 << 20, 2, 0);
         let mut t = s.clone();
         t.nranks = 3;
-        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2), base);
+        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2, 0), base);
         let mut t = s.clone();
         t.db_region_size = 64 * 256;
-        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2), base);
-        assert_ne!(PoolControl::layout_hash(&s, 12 << 20, 2), base);
+        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2, 0), base);
+        assert_ne!(PoolControl::layout_hash(&s, 12 << 20, 2, 0), base);
         // v5: the configured ring depth is a layout dimension.
         for depth in [1usize, 3, 4, 8] {
-            assert_ne!(PoolControl::layout_hash(&s, 6 << 20, depth), base, "depth {depth}");
+            assert_ne!(PoolControl::layout_hash(&s, 6 << 20, depth, 0), base, "depth {depth}");
+        }
+        // v7: the KV-cache reserve carves the plan window, so it is a
+        // layout dimension too.
+        for kv in [1usize, 16, 64] {
+            assert_ne!(PoolControl::layout_hash(&s, 6 << 20, 2, kv), base, "kv {kv}");
         }
     }
 
-    /// v6: the tuner algorithm version is folded into the fingerprint, so a
-    /// build with a different sweep (which could resolve `auto` launches to
-    /// different plans) fails rendezvous. Pinned by mirroring the hash input
+    /// v6/v7: the tuner algorithm version and the KV-cache reserve are
+    /// folded into the fingerprint, so a build with a different sweep
+    /// (which could resolve `auto` launches to different plans) or a
+    /// mapper with a different reserve (which would carve a different plan
+    /// window) fails rendezvous. Pinned by mirroring the hash input
     /// byte-for-byte: bump `TUNER_ALGO_VERSION` and this stays green, but
-    /// drop it from the buffer and this catches the regression.
+    /// drop a field from the buffer and this catches the regression.
     #[test]
-    fn hash_covers_the_tuner_algorithm_version() {
+    fn hash_covers_the_tuner_algorithm_version_and_kv_reserve() {
         let s = spec();
-        let mut buf = [0u8; 64];
+        let mut buf = [0u8; 72];
         for (i, v) in [
             s.nranks as u64,
             s.ndevices as u64,
@@ -638,12 +679,13 @@ mod tests {
             POOL_PROTO_VERSION as u64,
             2u64,
             crate::collectives::tuner::TUNER_ALGO_VERSION,
+            48u64,
         ]
         .into_iter()
         .enumerate()
         {
             buf[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
         }
-        assert_eq!(PoolControl::layout_hash(&s, 6 << 20, 2), crate::util::fnv1a64(&buf));
+        assert_eq!(PoolControl::layout_hash(&s, 6 << 20, 2, 48), crate::util::fnv1a64(&buf));
     }
 }

@@ -94,6 +94,11 @@ pub enum Bootstrap {
         /// groups fall back to serialized launches over the undivided
         /// window (depth 1) either way.
         depth: Option<usize>,
+        /// Doorbell-region slots reserved off the top for the
+        /// [`crate::kvcache`] page arena (v7); 0 = no serving tier. The
+        /// reserve is excluded from the group's plan window, so plan
+        /// doorbells and epoch slices can never alias it.
+        kv_slots: usize,
     },
     /// Rendezvous through the control-plane header of a file-backed pool
     /// at `path`: every rank is its own OS process mapping the same file.
@@ -112,12 +117,16 @@ pub enum Bootstrap {
         /// planning error mid-train. The *resolved* depth is part of the
         /// pool layout hash — every rank must configure compatibly.
         depth: Option<usize>,
+        /// KV-cache reserve slots (see [`Bootstrap::ThreadLocal`]). Part
+        /// of the pool layout hash — every rank must configure the same
+        /// reserve or rendezvous fails fast.
+        kv_slots: usize,
     },
 }
 
 impl Bootstrap {
     pub fn thread_local(spec: ClusterSpec) -> Self {
-        Bootstrap::ThreadLocal { spec, depth: None }
+        Bootstrap::ThreadLocal { spec, depth: None, kv_slots: 0 }
     }
 
     /// Pool rendezvous at `path` (e.g. `/dev/shm/ccl_pool` on a host,
@@ -128,14 +137,15 @@ impl Bootstrap {
             spec,
             join_timeout: Duration::from_secs(60),
             depth: None,
+            kv_slots: 0,
         }
     }
 
     /// Adjust the pool-rendezvous join timeout (no effect on ThreadLocal).
     pub fn with_join_timeout(self, join_timeout: Duration) -> Self {
         match self {
-            Bootstrap::Pool { path, spec, depth, .. } => {
-                Bootstrap::Pool { path, spec, join_timeout, depth }
+            Bootstrap::Pool { path, spec, depth, kv_slots, .. } => {
+                Bootstrap::Pool { path, spec, join_timeout, depth, kv_slots }
             }
             tl => tl,
         }
@@ -148,11 +158,30 @@ impl Bootstrap {
     /// serialized.
     pub fn with_pipeline_depth(self, n: usize) -> Self {
         match self {
-            Bootstrap::ThreadLocal { spec, .. } => {
-                Bootstrap::ThreadLocal { spec, depth: Some(n) }
+            Bootstrap::ThreadLocal { spec, kv_slots, .. } => {
+                Bootstrap::ThreadLocal { spec, depth: Some(n), kv_slots }
             }
-            Bootstrap::Pool { path, spec, join_timeout, .. } => {
-                Bootstrap::Pool { path, spec, join_timeout, depth: Some(n) }
+            Bootstrap::Pool { path, spec, join_timeout, kv_slots, .. } => {
+                Bootstrap::Pool { path, spec, join_timeout, depth: Some(n), kv_slots }
+            }
+        }
+    }
+
+    /// Reserve `slots` doorbell-region slots off the top for the
+    /// [`crate::kvcache`] serving tier (64 B each; the arena header, page
+    /// control words, publication records, and page frames all live
+    /// there). The reserve is carved *before* the plan window, so plan
+    /// doorbells and epoch slices can never alias it; construction fails
+    /// fast when the remaining window is too small. Pool mode folds the
+    /// reserve into the layout hash — mappers with different reserves
+    /// never rendezvous.
+    pub fn with_kv_reserve(self, slots: usize) -> Self {
+        match self {
+            Bootstrap::ThreadLocal { spec, depth, .. } => {
+                Bootstrap::ThreadLocal { spec, depth, kv_slots: slots }
+            }
+            Bootstrap::Pool { path, spec, join_timeout, depth, .. } => {
+                Bootstrap::Pool { path, spec, join_timeout, depth, kv_slots: slots }
             }
         }
     }
@@ -186,9 +215,11 @@ impl CommWorld {
         );
         ensure!(rank < world_size, "rank {rank} out of range ({world_size} ranks)");
         match bootstrap {
-            Bootstrap::ThreadLocal { spec, depth } => Self::init_thread_local(spec, rank, depth),
-            Bootstrap::Pool { path, spec, join_timeout, depth } => {
-                Self::init_pool(&path, spec, rank, world_size, join_timeout, depth)
+            Bootstrap::ThreadLocal { spec, depth, kv_slots } => {
+                Self::init_thread_local(spec, rank, depth, kv_slots)
+            }
+            Bootstrap::Pool { path, spec, join_timeout, depth, kv_slots } => {
+                Self::init_pool(&path, spec, rank, world_size, join_timeout, depth, kv_slots)
             }
         }
     }
@@ -197,27 +228,31 @@ impl CommWorld {
         spec: ClusterSpec,
         rank: usize,
         depth: Option<usize>,
+        kv_slots: usize,
     ) -> Result<ProcessGroup> {
         let depth = depth.unwrap_or(DEFAULT_PIPELINE_DEPTH);
         ensure!(depth >= 1, "pipeline depth must be at least 1, got {depth}");
         let full = PoolLayout::from_spec(&spec)?;
         let total = full.doorbell_slots();
         ensure!(
-            total > GROUP_CTRL_SLOTS,
+            total > GROUP_CTRL_SLOTS + kv_slots,
             "doorbell region too small: {total} slots cannot fit the {GROUP_CTRL_SLOTS}-slot \
-             group control prefix (grow ClusterSpec::db_region_size)"
+             group control prefix plus the {kv_slots}-slot KV reserve (grow \
+             ClusterSpec::db_region_size)"
         );
         let pool = Arc::new(ShmPool::anon(full.pool_size())?);
-        let layout = full.with_doorbell_window(GROUP_CTRL_SLOTS, total - GROUP_CTRL_SLOTS)?;
+        let layout =
+            full.with_doorbell_window(GROUP_CTRL_SLOTS, total - GROUP_CTRL_SLOTS - kv_slots)?;
         let comm = Arc::new(Communicator::over_pool(&spec, layout, pool)?);
         Ok(ProcessGroup::from_parts(
             GroupImpl::Local(LocalGroup {
                 comm,
-                window: 0..total,
+                window: 0..total - kv_slots,
                 members: (0..spec.nranks).collect(),
             }),
             rank,
             depth,
+            (total - kv_slots)..total,
         ))
     }
 
@@ -228,6 +263,7 @@ impl CommWorld {
         world: usize,
         join_timeout: Duration,
         depth: Option<usize>,
+        kv_slots: usize,
     ) -> Result<ProcessGroup> {
         ensure!(
             world <= MAX_POOL_WORLD,
@@ -236,12 +272,13 @@ impl CommWorld {
         let full = PoolLayout::from_spec(&spec)?;
         let total = full.doorbell_slots();
         ensure!(
-            total > CTRL_SLOTS + GROUP_CTRL_SLOTS,
+            total > CTRL_SLOTS + GROUP_CTRL_SLOTS + kv_slots,
             "doorbell region too small for pool bootstrap: {total} slots, need more than \
-             {} for the control plane (grow ClusterSpec::db_region_size)",
+             {} for the control plane plus the {kv_slots}-slot KV reserve (grow \
+             ClusterSpec::db_region_size)",
             CTRL_SLOTS + GROUP_CTRL_SLOTS
         );
-        let window = CTRL_SLOTS..total;
+        let window = CTRL_SLOTS..total - kv_slots;
         let layout = full.with_doorbell_window(
             window.start + GROUP_CTRL_SLOTS,
             window.end - window.start - GROUP_CTRL_SLOTS,
@@ -293,6 +330,7 @@ impl CommWorld {
             rank,
             world,
             depth,
+            kv_slots,
             join_timeout,
         )?;
         Ok(ProcessGroup::from_parts(
@@ -312,6 +350,7 @@ impl CommWorld {
             }),
             rank,
             depth,
+            (total - kv_slots)..total,
         ))
     }
 }
@@ -349,6 +388,12 @@ pub struct ProcessGroup {
     /// In-flight launch bound (pacing), `1..=ring.len()`.
     depth: AtomicUsize,
     pipe: Mutex<PipeState>,
+    /// Absolute doorbell slots reserved off the top of the region for the
+    /// [`crate::kvcache`] serving tier; empty when no reserve was
+    /// configured. Carved *outside* `window`, so the plan window, the
+    /// group-control prefix, and every epoch slice are disjoint from it
+    /// by construction (the debug audit in [`Self::from_parts`] checks).
+    kv: Range<usize>,
 }
 
 enum GroupImpl {
@@ -400,7 +445,12 @@ impl ProcessGroup {
     /// subgroups (every pool member computes the identical fallback from
     /// the identical windows); pool *world* construction validates the
     /// depth up front and never reaches the fallback.
-    fn from_parts(inner: GroupImpl, bound_rank: usize, ring_depth: usize) -> Self {
+    fn from_parts(
+        inner: GroupImpl,
+        bound_rank: usize,
+        ring_depth: usize,
+        kv: Range<usize>,
+    ) -> Self {
         let base = match &inner {
             GroupImpl::Local(g) => *g.comm.layout(),
             GroupImpl::Pool(g) => g.layout,
@@ -413,11 +463,20 @@ impl ProcessGroup {
         // pairwise disjoint (doorbells and devices) and clear of the
         // group-control words carved in front of the plan window — the
         // static analyzer's cross-slice aliasing invariant (category (c)).
+        // A configured KV reserve joins the same audit: no slice doorbell
+        // window or control word may reach into the arena.
         #[cfg(debug_assertions)]
         {
             let prefix = base.db_slot_base.saturating_sub(GROUP_CTRL_SLOTS);
             let ctrl = control::control_word_slots(prefix, ring.len());
-            let diags = crate::analysis::check_slice_windows(&ring, &ctrl);
+            let mut diags = crate::analysis::check_slice_windows(&ring, &ctrl);
+            if !kv.is_empty() {
+                let total = match &inner {
+                    GroupImpl::Local(g) => g.window.end.max(kv.end),
+                    GroupImpl::Pool(g) => g.window.end.max(kv.end),
+                };
+                diags.extend(crate::analysis::check_kv_window(&kv, &ring, &ctrl, total));
+            }
             debug_assert!(
                 diags.is_empty(),
                 "epoch ring fails the static slice audit:\n{}",
@@ -431,6 +490,7 @@ impl ProcessGroup {
             ring,
             depth: AtomicUsize::new(depth),
             pipe: Mutex::new(PipeState::new()),
+            kv,
         }
     }
 
@@ -475,6 +535,31 @@ impl ProcessGroup {
     pub fn device_range(&self) -> Range<usize> {
         let l = self.layout();
         l.device_base..l.device_base + l.device_span
+    }
+
+    /// Absolute doorbell slots reserved for the [`crate::kvcache`] serving
+    /// tier ([`Bootstrap::with_kv_reserve`]); empty when unconfigured.
+    /// Disjoint from [`ProcessGroup::doorbell_slot_range`] by
+    /// construction.
+    pub fn kv_slot_range(&self) -> Range<usize> {
+        self.kv.clone()
+    }
+
+    /// The KV reserve as a pool byte range (64 B per slot; the doorbell
+    /// region sits at the base of device 0, so slot `s` is pool byte
+    /// `s * 64`). This is the range handed to
+    /// [`crate::kvcache::KvArena`]/[`crate::kvcache::KvExchange`].
+    pub fn kv_byte_range(&self) -> Range<usize> {
+        self.kv.start * crate::doorbell::DOORBELL_SLOT..self.kv.end * crate::doorbell::DOORBELL_SLOT
+    }
+
+    /// The shared pool every member maps (the serving tier allocates its
+    /// arena out of it).
+    pub(crate) fn shm_pool(&self) -> &Arc<ShmPool> {
+        match &self.inner {
+            GroupImpl::Local(g) => g.comm.pool(),
+            GroupImpl::Pool(g) => &g.pool,
+        }
     }
 
     /// The group's (windowed) pool layout — the undivided plan view.
@@ -1230,6 +1315,10 @@ impl ProcessGroup {
             }),
             sub_rank,
             self.ring.len(),
+            // The KV reserve stays with the world group: the serving tier
+            // addresses the arena by absolute slot, which subgroup windows
+            // (re-partitioned among colors) cannot represent.
+            0..0,
         ))
     }
 
@@ -1279,6 +1368,7 @@ impl ProcessGroup {
                     }),
                     0,
                     self.ring.len(),
+                    0..0,
                 ))
             })
             .collect()

@@ -1,0 +1,511 @@
+//! The paged KV-cache allocator: fixed-size page frames in the pool's KV
+//! reserve, each fronted by a 64-byte control slot in the
+//! [`group/control`](crate::group::control) style, reclaimed by a CLOCK
+//! second-chance sweep.
+//!
+//! Every control transition is a CAS or a Release store on in-pool
+//! atomics, so two mappers (one per OS process) can drive allocation and
+//! reads concurrently with no lock: the lease word is the single point of
+//! arbitration per page, and the generation stamp is what makes
+//! reclamation safe — a reader holding a [`PageRef`] from before a
+//! reclaim pins the page, sees the stamp mismatch, unpins, and reports a
+//! clean miss instead of reading the new occupant's bytes.
+
+use crate::pool::ShmPool;
+use anyhow::{bail, ensure, Result};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// `"CCKV"` — published last on create, checked first on attach.
+const A_MAGIC: u32 = 0x4343_4B56;
+/// Arena format version; bump on any control-slot layout change.
+pub const KV_ARENA_VERSION: u32 = 1;
+
+/// One control slot per page, plus one header slot, 64 bytes each — the
+/// doorbell-slot granule, so control words never share a cache line with
+/// frame data.
+pub const KV_CTRL_SLOT: usize = 64;
+
+// Header-slot word byte offsets.
+const H_MAGIC: usize = 0;
+const H_VERSION: usize = 4;
+const H_PAGE_SIZE: usize = 8;
+const H_NPAGES: usize = 12;
+const H_CLOCK: usize = 16;
+
+// Page-control-slot word byte offsets.
+const W_LEASE: usize = 0;
+const W_GEN: usize = 4;
+const W_KEY_LO: usize = 8;
+const W_KEY_HI: usize = 12;
+const W_LEN: usize = 16;
+
+/// Lease bit: the page holds published, readable content.
+pub const LEASE_VALID: u32 = 1 << 31;
+/// Lease bit: a writer holds the page exclusively (never set with VALID).
+pub const LEASE_FILLING: u32 = 1 << 30;
+/// Lease bit: referenced since the CLOCK hand last passed (second chance).
+pub const LEASE_REF: u32 = 1 << 29;
+/// Low bits: count of concurrent pinned readers.
+pub const LEASE_PIN_MASK: u32 = 0xFFFF;
+
+/// An exclusively claimed page, not yet readable by anyone. Must be
+/// [`KvArena::publish`]ed or [`KvArena::abort`]ed.
+#[derive(Debug)]
+pub struct PageClaim {
+    pub page: usize,
+}
+
+/// A handle to published page content: the page index plus the generation
+/// the content was published under. Every access revalidates the stamp,
+/// so a ref that outlives its page's reclamation degrades to a miss, never
+/// to a wrong read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageRef {
+    pub page: usize,
+    pub generation: u32,
+}
+
+/// The paged allocator over a byte range of the shared pool (normally
+/// [`ProcessGroup::kv_byte_range`](crate::group::ProcessGroup::kv_byte_range),
+/// minus the exchange's publication records).
+pub struct KvArena {
+    pool: Arc<ShmPool>,
+    base: usize,
+    page_size: usize,
+    n_pages: usize,
+}
+
+impl KvArena {
+    /// How many pages a `range_len`-byte region holds at `page_size`: one
+    /// header slot off the top, then 64 control bytes + `page_size` frame
+    /// bytes per page.
+    pub fn capacity(range_len: usize, page_size: usize) -> usize {
+        range_len.saturating_sub(KV_CTRL_SLOT) / (KV_CTRL_SLOT + page_size)
+    }
+
+    fn validate(pool: &ShmPool, range: &Range<usize>, page_size: usize) -> Result<usize> {
+        ensure!(
+            range.start < range.end && range.end <= pool.len(),
+            "KV range {range:?} outside the pool"
+        );
+        ensure!(
+            range.start % KV_CTRL_SLOT == 0,
+            "KV range must start slot-aligned, got {}",
+            range.start
+        );
+        ensure!(
+            page_size >= KV_CTRL_SLOT && page_size % KV_CTRL_SLOT == 0,
+            "page size must be a positive multiple of {KV_CTRL_SLOT}, got {page_size}"
+        );
+        let n_pages = Self::capacity(range.end - range.start, page_size);
+        ensure!(
+            n_pages >= 1,
+            "KV range of {} bytes cannot hold one {page_size}-byte page (+{KV_CTRL_SLOT} control)",
+            range.end - range.start
+        );
+        Ok(n_pages)
+    }
+
+    /// Initialize an arena over `range` (one mapper — rank 0 — calls this;
+    /// everyone else [`attach`](KvArena::attach)es). Zeroes the region,
+    /// writes the geometry, and publishes the magic word *last*, so a
+    /// concurrent attacher never observes a half-built header.
+    pub fn create(pool: Arc<ShmPool>, range: Range<usize>, page_size: usize) -> Result<KvArena> {
+        let n_pages = Self::validate(&pool, &range, page_size)?;
+        let base = range.start;
+        pool.zero(base, range.end - base)?;
+        let word = |off: usize| pool.atomic_u32(base + off);
+        word(H_PAGE_SIZE)?.store(page_size as u32, Ordering::Release);
+        word(H_NPAGES)?.store(n_pages as u32, Ordering::Release);
+        word(H_CLOCK)?.store(0, Ordering::Release);
+        word(H_VERSION)?.store(KV_ARENA_VERSION, Ordering::Release);
+        pool.flush(base, KV_CTRL_SLOT);
+        word(H_MAGIC)?.store(A_MAGIC, Ordering::Release);
+        pool.flush(base, KV_CTRL_SLOT);
+        Ok(KvArena { pool, base, page_size, n_pages })
+    }
+
+    /// Map an existing arena. Fails fast (no polling — order creation
+    /// against attachment with a group barrier) when the header is absent,
+    /// from a different format version, or inconsistent with `range`.
+    pub fn attach(pool: Arc<ShmPool>, range: Range<usize>) -> Result<KvArena> {
+        ensure!(
+            range.start < range.end && range.end <= pool.len(),
+            "KV range {range:?} outside the pool"
+        );
+        let base = range.start;
+        pool.flush(base, KV_CTRL_SLOT);
+        let word = |off: usize| pool.atomic_u32(base + off);
+        let magic = word(H_MAGIC)?.load(Ordering::Acquire);
+        ensure!(
+            magic == A_MAGIC,
+            "no KV arena at pool offset {base:#x} (magic {magic:#010x}): create it on rank 0 \
+             and barrier before attaching"
+        );
+        let version = word(H_VERSION)?.load(Ordering::Acquire);
+        ensure!(version == KV_ARENA_VERSION, "KV arena version {version} != {KV_ARENA_VERSION}");
+        let page_size = word(H_PAGE_SIZE)?.load(Ordering::Acquire) as usize;
+        let n_pages = word(H_NPAGES)?.load(Ordering::Acquire) as usize;
+        let expected = Self::validate(&pool, &range, page_size)?;
+        ensure!(
+            n_pages == expected,
+            "KV arena geometry mismatch: header says {n_pages} pages, range fits {expected} \
+             (differently sized reserves?)"
+        );
+        Ok(KvArena { pool, base, page_size, n_pages })
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pool byte offset of page `page`'s frame.
+    pub fn frame_offset(&self, page: usize) -> usize {
+        self.base + KV_CTRL_SLOT * (1 + self.n_pages) + page * self.page_size
+    }
+
+    fn ctrl_off(&self, page: usize, word: usize) -> usize {
+        self.base + KV_CTRL_SLOT * (1 + page) + word
+    }
+
+    fn lease(&self, page: usize) -> Result<&AtomicU32> {
+        ensure!(page < self.n_pages, "page {page} out of range ({} pages)", self.n_pages);
+        self.pool.atomic_u32(self.ctrl_off(page, W_LEASE))
+    }
+
+    fn gen_word(&self, page: usize) -> Result<&AtomicU32> {
+        self.pool.atomic_u32(self.ctrl_off(page, W_GEN))
+    }
+
+    /// The 64-bit key page `page` was last published under (meaningful
+    /// only while the publishing generation is still current).
+    pub fn page_key(&self, page: usize) -> Result<u64> {
+        let lo = self.pool.atomic_u32(self.ctrl_off(page, W_KEY_LO))?.load(Ordering::Acquire);
+        let hi = self.pool.atomic_u32(self.ctrl_off(page, W_KEY_HI))?.load(Ordering::Acquire);
+        Ok((hi as u64) << 32 | lo as u64)
+    }
+
+    /// Claim a page for filling: a free page if the CLOCK sweep finds one,
+    /// else the first reclaimable page (valid, unpinned, reference bit
+    /// already stripped). Returns the claim and whether it *evicted*
+    /// published content. `None` means the sweep found only pinned or
+    /// in-flight pages — the arena is saturated.
+    ///
+    /// Reclamation is the one place the generation advances: the bump
+    /// happens inside the claim (after the CAS to `FILLING`, before any
+    /// new bytes land), so a stale [`PageRef`] can never revalidate
+    /// against recycled content.
+    pub fn alloc(&self) -> Result<Option<(PageClaim, bool)>> {
+        let hand = self.pool.atomic_u32(self.base + H_CLOCK)?;
+        // Up to four laps: one to strip REF bits, one to reclaim, doubled
+        // for CAS races against a concurrent allocator.
+        for _ in 0..self.n_pages.saturating_mul(4) {
+            let page = hand.fetch_add(1, Ordering::Relaxed) as usize % self.n_pages;
+            let lease = self.lease(page)?;
+            if lease
+                .compare_exchange(0, LEASE_FILLING, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Ok(Some((PageClaim { page }, false)));
+            }
+            let cur = lease.load(Ordering::Acquire);
+            if cur & LEASE_FILLING != 0 || cur & LEASE_PIN_MASK != 0 || cur & LEASE_VALID == 0 {
+                continue; // in-flight, pinned, or raced back to free
+            }
+            if cur & LEASE_REF != 0 {
+                // Second chance: strip the reference and keep sweeping.
+                let _ = lease.compare_exchange(
+                    cur,
+                    cur & !LEASE_REF,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                );
+                continue;
+            }
+            // Exactly VALID: reclaim. The exact-value CAS is the underflow
+            // guard — a pin or republish racing in flips a bit and fails it.
+            if lease
+                .compare_exchange(LEASE_VALID, LEASE_FILLING, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.gen_word(page)?.fetch_add(1, Ordering::AcqRel);
+                self.pool.flush(self.ctrl_off(page, 0), KV_CTRL_SLOT);
+                return Ok(Some((PageClaim { page }, true)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Fill the claimed page with `data` under `key` and make it visible:
+    /// frame bytes first, then the metadata words, then the lease flips to
+    /// `VALID|REF` with Release ordering — a reader that observes the
+    /// lease observes the bytes (the doorbell publish order).
+    pub fn publish(&self, claim: PageClaim, key: u64, data: &[u8]) -> Result<PageRef> {
+        ensure!(
+            data.len() <= self.page_size,
+            "payload of {} bytes exceeds the {}-byte page",
+            data.len(),
+            self.page_size
+        );
+        let page = claim.page;
+        let frame = self.frame_offset(page);
+        self.pool.write_bytes(frame, data)?;
+        self.pool.flush(frame, data.len());
+        let word = |w: usize| self.pool.atomic_u32(self.ctrl_off(page, w));
+        word(W_KEY_LO)?.store(key as u32, Ordering::Release);
+        word(W_KEY_HI)?.store((key >> 32) as u32, Ordering::Release);
+        word(W_LEN)?.store(data.len() as u32, Ordering::Release);
+        let generation = self.gen_word(page)?.load(Ordering::Acquire);
+        self.lease(page)?.store(LEASE_VALID | LEASE_REF, Ordering::Release);
+        self.pool.flush(self.ctrl_off(page, 0), KV_CTRL_SLOT);
+        Ok(PageRef { page, generation })
+    }
+
+    /// Release a claim without publishing (fill failed). The generation
+    /// still advances, so nothing can mistake the next occupant for this
+    /// aborted fill.
+    pub fn abort(&self, claim: PageClaim) -> Result<()> {
+        let page = claim.page;
+        self.gen_word(page)?.fetch_add(1, Ordering::AcqRel);
+        self.lease(page)?.store(0, Ordering::Release);
+        self.pool.flush(self.ctrl_off(page, 0), KV_CTRL_SLOT);
+        Ok(())
+    }
+
+    /// Pin page `page` for reading iff it is valid and still at
+    /// generation `expect_gen`. `false` is the *clean miss*: the page is
+    /// free, mid-fill, pin-saturated, or — the case the stamp exists for —
+    /// reclaimed and re-used since the caller's [`PageRef`] was minted.
+    /// On `true` the caller owns one pin and must [`unpin`](Self::unpin).
+    pub fn pin(&self, page: usize, expect_gen: u32) -> Result<bool> {
+        let lease = self.lease(page)?;
+        let mut cur = lease.load(Ordering::Acquire);
+        loop {
+            if cur & LEASE_VALID == 0
+                || cur & LEASE_FILLING != 0
+                || cur & LEASE_PIN_MASK == LEASE_PIN_MASK
+            {
+                return Ok(false);
+            }
+            match lease.compare_exchange_weak(
+                cur,
+                (cur | LEASE_REF) + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        // Revalidate under the pin: a reclaim that won the race bumped the
+        // stamp before we could pin... but the pin itself may also have
+        // landed on the *new* occupant (VALID again, new generation).
+        // Either way the stamp disagrees and the access degrades to a
+        // miss — never to the wrong bytes.
+        if self.gen_word(page)?.load(Ordering::Acquire) != expect_gen {
+            self.unpin(page)?;
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    /// Drop one pin. Erroring (never wrapping) on a pin-free lease word is
+    /// the underflow guard the reclamation tests pin.
+    pub fn unpin(&self, page: usize) -> Result<()> {
+        let lease = self.lease(page)?;
+        let res = lease.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+            if v & LEASE_PIN_MASK == 0 {
+                None
+            } else {
+                Some(v - 1)
+            }
+        });
+        if let Err(word) = res {
+            bail!("unpin of page {page} would underflow (lease word {word:#010x})");
+        }
+        Ok(())
+    }
+
+    /// Pin, copy the page's published bytes into `buf` (resized to the
+    /// published length), unpin. `false` = clean miss (stale generation or
+    /// page gone); `buf` is untouched then. While pinned the page cannot
+    /// be reclaimed, so the pin-time stamp check covers the whole copy.
+    pub fn read(&self, r: &PageRef, buf: &mut Vec<u8>) -> Result<bool> {
+        if !self.pin(r.page, r.generation)? {
+            return Ok(false);
+        }
+        let len =
+            self.pool.atomic_u32(self.ctrl_off(r.page, W_LEN))?.load(Ordering::Acquire) as usize;
+        buf.resize(len.min(self.page_size), 0);
+        let res = self.pool.read_bytes(self.frame_offset(r.page), buf);
+        self.unpin(r.page)?;
+        res?;
+        Ok(true)
+    }
+
+    /// The lease word, for tests and diagnostics.
+    pub fn lease_word(&self, page: usize) -> Result<u32> {
+        Ok(self.lease(page)?.load(Ordering::Acquire))
+    }
+
+    /// The current generation stamp of `page`.
+    pub fn generation(&self, page: usize) -> Result<u32> {
+        Ok(self.gen_word(page)?.load(Ordering::Acquire))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena(pages: usize, page_size: usize) -> KvArena {
+        let len = KV_CTRL_SLOT * (1 + pages) + pages * page_size;
+        let pool = Arc::new(ShmPool::anon(len).unwrap());
+        KvArena::create(pool, 0..len, page_size).unwrap()
+    }
+
+    #[test]
+    fn geometry_round_trips_through_attach() {
+        let pages = 7;
+        let len = KV_CTRL_SLOT * (1 + pages) + pages * 256;
+        let pool = Arc::new(ShmPool::anon(len).unwrap());
+        let a = KvArena::create(Arc::clone(&pool), 0..len, 256).unwrap();
+        assert_eq!((a.n_pages(), a.page_size()), (7, 256));
+        let b = KvArena::attach(pool, 0..len).unwrap();
+        assert_eq!((b.n_pages(), b.page_size()), (7, 256));
+        assert_eq!(a.frame_offset(3), b.frame_offset(3));
+    }
+
+    #[test]
+    fn attach_without_create_fails_fast() {
+        let pool = Arc::new(ShmPool::anon(4096).unwrap());
+        let err = KvArena::attach(pool, 0..4096).unwrap_err();
+        assert!(format!("{err:#}").contains("no KV arena"), "{err:#}");
+    }
+
+    #[test]
+    fn publish_then_read_round_trips() {
+        let a = arena(4, 128);
+        let (claim, evicted) = a.alloc().unwrap().unwrap();
+        assert!(!evicted);
+        let payload = vec![0xAB; 100];
+        let r = a.publish(claim, 42, &payload).unwrap();
+        assert_eq!(a.page_key(r.page).unwrap(), 42);
+        let mut buf = Vec::new();
+        assert!(a.read(&r, &mut buf).unwrap());
+        assert_eq!(buf, payload);
+    }
+
+    #[test]
+    fn clock_evicts_the_unreferenced_and_generation_invalidates_stale_refs() {
+        let a = arena(2, 128);
+        let (c0, _) = a.alloc().unwrap().unwrap();
+        let r0 = a.publish(c0, 0, &[0u8; 16]).unwrap();
+        let (c1, _) = a.alloc().unwrap().unwrap();
+        let _r1 = a.publish(c1, 1, &[1u8; 16]).unwrap();
+        // Both pages valid: the third alloc must evict (stripping REF on
+        // the first lap, reclaiming on the second).
+        let (c2, evicted) = a.alloc().unwrap().unwrap();
+        assert!(evicted);
+        let reused = c2.page;
+        let r2 = a.publish(c2, 2, &[2u8; 16]).unwrap();
+        assert!(a.pin(r2.page, r2.generation).unwrap());
+        a.unpin(r2.page).unwrap();
+        // Whichever old ref pointed at the reused page is now a clean miss.
+        if reused == r0.page {
+            let mut buf = Vec::new();
+            assert!(!a.read(&r0, &mut buf).unwrap(), "stale ref must miss");
+            assert!(buf.is_empty(), "a miss must not produce bytes");
+        }
+    }
+
+    #[test]
+    fn pinned_pages_are_never_reclaimed() {
+        let a = arena(2, 128);
+        let (c0, _) = a.alloc().unwrap().unwrap();
+        let r0 = a.publish(c0, 0, &[0u8; 8]).unwrap();
+        let (c1, _) = a.alloc().unwrap().unwrap();
+        let r1 = a.publish(c1, 1, &[1u8; 8]).unwrap();
+        assert!(a.pin(r0.page, r0.generation).unwrap());
+        assert!(a.pin(r1.page, r1.generation).unwrap());
+        // Everything pinned: the sweep must give up, not tear a pin down.
+        assert!(a.alloc().unwrap().is_none());
+        a.unpin(r0.page).unwrap();
+        let (c2, evicted) = a.alloc().unwrap().unwrap();
+        assert!(evicted);
+        assert_eq!(c2.page, r0.page, "only the unpinned page is reclaimable");
+        a.abort(c2).unwrap();
+        a.unpin(r1.page).unwrap();
+    }
+
+    #[test]
+    fn unpin_underflow_is_an_error_not_a_wrap() {
+        let a = arena(2, 128);
+        let (c, _) = a.alloc().unwrap().unwrap();
+        let r = a.publish(c, 9, &[9u8; 8]).unwrap();
+        assert!(a.pin(r.page, r.generation).unwrap());
+        a.unpin(r.page).unwrap();
+        let err = a.unpin(r.page).unwrap_err();
+        assert!(format!("{err:#}").contains("underflow"), "{err:#}");
+        assert_eq!(a.lease_word(r.page).unwrap() & LEASE_PIN_MASK, 0);
+    }
+
+    #[test]
+    fn abort_frees_the_page_and_burns_the_generation() {
+        let a = arena(1, 128);
+        let (c, _) = a.alloc().unwrap().unwrap();
+        let page = c.page;
+        let g0 = a.generation(page).unwrap();
+        a.abort(c).unwrap();
+        assert_eq!(a.lease_word(page).unwrap(), 0);
+        assert_eq!(a.generation(page).unwrap(), g0 + 1);
+        let (c2, evicted) = a.alloc().unwrap().unwrap();
+        assert!(!evicted, "an aborted page is free, not evicted");
+        a.abort(c2).unwrap();
+    }
+
+    #[test]
+    fn two_threads_hammer_allocation_and_reads_without_tearing() {
+        let pages = 8;
+        let page_size = 256;
+        let len = KV_CTRL_SLOT * (1 + pages) + pages * page_size;
+        let pool = Arc::new(ShmPool::anon(len).unwrap());
+        let a = Arc::new(KvArena::create(Arc::clone(&pool), 0..len, page_size).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let a = Arc::clone(&a);
+            handles.push(std::thread::spawn(move || {
+                let mut refs: Vec<(u64, PageRef)> = Vec::new();
+                for i in 0..2000u64 {
+                    let key = t << 32 | i;
+                    if let Some((claim, _)) = a.alloc().unwrap() {
+                        let fill = (key as u8).wrapping_mul(37);
+                        let r = a.publish(claim, key, &[fill; 64]).unwrap();
+                        refs.push((key, r));
+                    }
+                    // Revisit an old ref: either a clean miss or exactly
+                    // the bytes published under that key — never a blend.
+                    if let Some((k, r)) = refs.get((i % 97) as usize) {
+                        let mut buf = Vec::new();
+                        if a.read(r, &mut buf).unwrap() {
+                            let want = (*k as u8).wrapping_mul(37);
+                            assert!(buf.iter().all(|b| *b == want), "torn read");
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for p in 0..pages {
+            assert_eq!(a.lease_word(p).unwrap() & LEASE_PIN_MASK, 0, "leaked pin on page {p}");
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! The prefill→decode page exchange: publication records announcing new
+//! pages, and page-body pulls through the group's ordinary broadcast
+//! windows.
+//!
+//! The shape mirrors the repo's collectives: a prefill rank *publishes*
+//! (fill the frame, then a Release-stamped record — the doorbell order),
+//! a decode rank *awaits* the record (spin with cache-line flushes and a
+//! timeout, exactly like [`DoorbellSet::wait`]) and then *pulls* the page
+//! body with a plain [`ProcessGroup::broadcast`] — a sealed `ValidPlan`
+//! launched through the epoch ring, so consecutive pulls pipeline like
+//! any other launch train. Nothing here invents a second data path: the
+//! arena is the only new memory, and it lives outside every plan window
+//! by construction.
+//!
+//! [`DoorbellSet::wait`]: crate::doorbell::DoorbellSet::wait
+//! [`ProcessGroup::broadcast`]: crate::group::ProcessGroup::broadcast
+
+use super::arena::{KvArena, PageRef};
+use super::KvStats;
+use crate::collectives::CclConfig;
+use crate::doorbell::WaitPolicy;
+use crate::group::ProcessGroup;
+use crate::pool::ShmPool;
+use crate::tensor::{Dtype, Tensor};
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// 64-byte publication records in the ring (one doorbell-slot granule).
+const REC_SLOT: usize = 64;
+
+// Record word byte offsets. `R_SEQ` is stored last with Release — a
+// record is valid exactly when its stamp matches the awaited sequence.
+const R_SEQ: usize = 0;
+const R_PAGE: usize = 4;
+const R_GEN: usize = 8;
+const R_KEY_LO: usize = 12;
+const R_KEY_HI: usize = 16;
+const R_LEN: usize = 20;
+
+/// Publication records the default exchange ring holds. The serve
+/// protocol issues one collective per miss, which keeps producer and
+/// consumer in lock-step, so the ring never needs to buffer a backlog.
+pub const DEFAULT_PUB_SLOTS: usize = 64;
+
+/// One decoded publication record: "page `page` now holds `len` bytes for
+/// `key`, published under generation `generation`".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PubRecord {
+    pub page: usize,
+    pub generation: u32,
+    pub key: u64,
+    pub len: usize,
+}
+
+/// The exchange layer over a group's KV reserve: a record ring at the
+/// base of the reserve, the [`KvArena`] above it.
+pub struct KvExchange<'g> {
+    pg: &'g ProcessGroup,
+    arena: KvArena,
+    rec_base: usize,
+    pub_slots: usize,
+    /// Next record index this side will stamp (prefill) or await (decode).
+    /// Purely process-local: the cross-process truth is the stamps.
+    next_pub: std::sync::atomic::AtomicUsize,
+    next_sub: std::sync::atomic::AtomicUsize,
+    policy: WaitPolicy,
+    stats: KvStats,
+}
+
+impl<'g> KvExchange<'g> {
+    /// Stand the exchange up over `pg`'s KV reserve
+    /// ([`Bootstrap::with_kv_reserve`](crate::group::Bootstrap::with_kv_reserve))
+    /// with `page_size`-byte pages. Collective: every member calls this
+    /// once — rank 0 initializes the ring and arena, a group barrier
+    /// orders that against everyone else's attach.
+    pub fn new(pg: &'g ProcessGroup, page_size: usize) -> Result<KvExchange<'g>> {
+        Self::with_pub_slots(pg, page_size, DEFAULT_PUB_SLOTS)
+    }
+
+    /// [`KvExchange::new`] with an explicit record-ring length.
+    pub fn with_pub_slots(
+        pg: &'g ProcessGroup,
+        page_size: usize,
+        pub_slots: usize,
+    ) -> Result<KvExchange<'g>> {
+        let kv = pg.kv_byte_range();
+        ensure!(
+            !kv.is_empty(),
+            "group has no KV reserve: bootstrap with Bootstrap::with_kv_reserve(slots)"
+        );
+        ensure!(pub_slots >= 1, "need at least one publication record");
+        let rec_bytes = pub_slots * REC_SLOT;
+        ensure!(
+            kv.end - kv.start > rec_bytes,
+            "KV reserve of {} bytes cannot hold {pub_slots} publication records plus an arena",
+            kv.end - kv.start
+        );
+        let pool: Arc<ShmPool> = Arc::clone(pg.shm_pool());
+        let arena_range = kv.start + rec_bytes..kv.end;
+        let arena = if pg.rank() == 0 {
+            pool.zero(kv.start, rec_bytes)?;
+            pool.flush(kv.start, rec_bytes);
+            let arena = KvArena::create(Arc::clone(&pool), arena_range, page_size)
+                .context("creating the KV arena (rank 0)")?;
+            pg.barrier()?;
+            arena
+        } else {
+            pg.barrier()?;
+            KvArena::attach(Arc::clone(&pool), arena_range)
+                .context("attaching the KV arena (non-zero rank)")?
+        };
+        ensure!(
+            arena.page_size() == page_size,
+            "arena page size {} != requested {page_size} (mixed exchange configs?)",
+            arena.page_size()
+        );
+        Ok(KvExchange {
+            pg,
+            arena,
+            rec_base: kv.start,
+            pub_slots,
+            next_pub: std::sync::atomic::AtomicUsize::new(0),
+            next_sub: std::sync::atomic::AtomicUsize::new(0),
+            policy: WaitPolicy::default(),
+            stats: KvStats::new(),
+        })
+    }
+
+    /// Adjust how long [`await_publication`](Self::await_publication)
+    /// spins before declaring the prefill side missing.
+    pub fn with_wait_policy(mut self, policy: WaitPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// The allocator underneath (tests and the serve driver pin/read
+    /// through it directly).
+    pub fn arena(&self) -> &KvArena {
+        &self.arena
+    }
+
+    /// Exchange counters, in the [`PlanCache`](crate::collectives::PlanCache)
+    /// stats discipline. Misses and evictions are counted by
+    /// [`publish_page`](Self::publish_page); hits and stale misses are the
+    /// caller's classification, recorded here through
+    /// [`KvStats::note_hit`] / [`KvStats::note_stale_miss`].
+    pub fn stats(&self) -> &KvStats {
+        &self.stats
+    }
+
+    fn rec_word(&self, index: usize, word: usize) -> Result<&AtomicU32> {
+        let off = self.rec_base + (index % self.pub_slots) * REC_SLOT + word;
+        self.pg.shm_pool().atomic_u32(off)
+    }
+
+    /// Stamp a record is awaited under: index + 1, wrapping — never 0, so
+    /// a zeroed ring matches nothing (the epoch-word convention of
+    /// [`group::control`](crate::group::control)).
+    fn stamp(index: usize) -> u32 {
+        (index as u32).wrapping_add(1)
+    }
+
+    /// Prefill side: fill a page with `data` under `key`, publish it in
+    /// the arena, and announce it with the next publication record.
+    /// Returns the ref plus whether the fill evicted resident content.
+    /// Counts one miss (and the eviction, if any).
+    pub fn publish_page(&self, key: u64, data: &[u8]) -> Result<(PageRef, bool)> {
+        let Some((claim, evicted)) = self.arena.alloc()? else {
+            bail!("KV arena saturated: every page is pinned or mid-fill");
+        };
+        let r = match self.arena.publish(claim, key, data) {
+            Ok(r) => r,
+            Err(e) => return Err(e),
+        };
+        let index = self.next_pub.fetch_add(1, Ordering::Relaxed);
+        self.rec_word(index, R_PAGE)?.store(r.page as u32, Ordering::Release);
+        self.rec_word(index, R_GEN)?.store(r.generation, Ordering::Release);
+        self.rec_word(index, R_KEY_LO)?.store(key as u32, Ordering::Release);
+        self.rec_word(index, R_KEY_HI)?.store((key >> 32) as u32, Ordering::Release);
+        self.rec_word(index, R_LEN)?.store(data.len() as u32, Ordering::Release);
+        let seq = self.rec_word(index, R_SEQ)?;
+        seq.store(Self::stamp(index), Ordering::Release);
+        let pool = self.pg.shm_pool();
+        pool.flush(self.rec_base + (index % self.pub_slots) * REC_SLOT, REC_SLOT);
+        self.stats.note_miss();
+        if evicted {
+            self.stats.note_eviction();
+        }
+        Ok((r, evicted))
+    }
+
+    /// Decode side: block until the next publication record is stamped
+    /// (spin + flush + timeout, the doorbell consumer loop) and decode it.
+    pub fn await_publication(&self) -> Result<PubRecord> {
+        let index = self.next_sub.fetch_add(1, Ordering::Relaxed);
+        let want = Self::stamp(index);
+        let seq = self.rec_word(index, R_SEQ)?;
+        let off = self.rec_base + (index % self.pub_slots) * REC_SLOT;
+        let pool = self.pg.shm_pool();
+        let start = std::time::Instant::now();
+        loop {
+            for _ in 0..self.policy.spin_iters {
+                if seq.load(Ordering::Acquire) == want {
+                    let lo = self.rec_word(index, R_KEY_LO)?.load(Ordering::Acquire);
+                    let hi = self.rec_word(index, R_KEY_HI)?.load(Ordering::Acquire);
+                    return Ok(PubRecord {
+                        page: self.rec_word(index, R_PAGE)?.load(Ordering::Acquire) as usize,
+                        generation: self.rec_word(index, R_GEN)?.load(Ordering::Acquire),
+                        key: (hi as u64) << 32 | lo as u64,
+                        len: self.rec_word(index, R_LEN)?.load(Ordering::Acquire) as usize,
+                    });
+                }
+                std::hint::spin_loop();
+            }
+            pool.flush(off, REC_SLOT);
+            if start.elapsed() > self.policy.timeout {
+                bail!(
+                    "publication record {index} timed out after {:?} (prefill rank missing \
+                     or protocol desync)",
+                    self.policy.timeout
+                );
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Pull a published page's body to every rank. Collective: all ranks
+    /// call with the same record and `root` (the prefill rank). Across
+    /// processes the body travels through the group's broadcast window as
+    /// a sealed, epoch-ring-pipelined plan; the root pins the page for
+    /// the duration of its frame read, so the body it launches is never a
+    /// torn copy. In-process groups share the mapping, so the pull is a
+    /// plain pinned read on every "rank".
+    pub fn pull(&self, root: usize, rec: &PubRecord) -> Result<Vec<u8>> {
+        let r = PageRef { page: rec.page, generation: rec.generation };
+        if !self.pg.is_multiprocess() || self.pg.rank() == root {
+            let mut body = Vec::new();
+            ensure!(
+                self.arena.read(&r, &mut body)?,
+                "page {} was reclaimed before the pull (generation {} stale)",
+                rec.page,
+                rec.generation
+            );
+            if !self.pg.is_multiprocess() {
+                return Ok(body);
+            }
+            // Root: launch the body through the broadcast window.
+            body.resize(self.arena.page_size(), 0);
+            let n = body.len();
+            let send = Tensor::from_bytes(body, Dtype::U8)?;
+            let cfg = CclConfig::auto().with_root(root);
+            let recv = Tensor::zeros(Dtype::U8, n);
+            let (out, _) = self.pg.broadcast(&cfg, n, send, recv)?.wait()?;
+            let mut got = out.as_bytes().to_vec();
+            got.truncate(rec.len);
+            Ok(got)
+        } else {
+            let n = self.arena.page_size();
+            let cfg = CclConfig::auto().with_root(root);
+            let send = Tensor::zeros(Dtype::U8, n);
+            let recv = Tensor::zeros(Dtype::U8, n);
+            let (out, _) = self.pg.broadcast(&cfg, n, send, recv)?.wait()?;
+            let mut got = out.as_bytes().to_vec();
+            got.truncate(rec.len);
+            Ok(got)
+        }
+    }
+}

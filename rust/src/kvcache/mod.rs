@@ -1,0 +1,136 @@
+//! The CXL KV-cache serving tier (v8): paged cache memory in the shared
+//! pool, a prefill→decode page exchange on top of [`ProcessGroup`], and a
+//! Zipf-driven serve workload.
+//!
+//! The paper argues a CXL pool can carry cross-node GPU *collectives*;
+//! Beluga (PAPERS.md) shows the same pool is an ideal home for LLM
+//! KV-cache pages shared between prefill and decode nodes, and the
+//! 100k+-GPU retrospective argues production scale is defined by
+//! serving-shaped workloads. This module is that workload, built from the
+//! repo's own primitives:
+//!
+//! - [`KvArena`] — a paged allocator carved from the [`ShmPool`]'s
+//!   KV reserve ([`Bootstrap::with_kv_reserve`]): fixed-size page frames,
+//!   each fronted by a 64-byte control slot holding an atomic
+//!   lease/refcount word and a generation stamp (rechecked on every
+//!   access, so a reclaimed page fails fast for stale readers), reclaimed
+//!   by a CLOCK second-chance sweep two mappers can drive concurrently.
+//! - [`KvExchange`] — prefill ranks publish completed pages and announce
+//!   them through doorbell-style publication records; decode ranks pull
+//!   page bodies through the group's ordinary broadcast windows
+//!   (`ValidPlan` + the epoch ring, so pulls pipeline like any launch),
+//!   with hit/miss/eviction counters in the [`PlanCache`]-stats
+//!   discipline.
+//! - [`serve`] — the workload driver: a seeded
+//!   [`Zipf`](crate::util::Zipf) session stream over millions of
+//!   requests, scored in virtual time against the [`sim`](crate::sim)
+//!   constants (sim mode) or run for real as a 2-process prefill/decode
+//!   protocol whose event digests must agree across ranks (pool mode).
+//!
+//! ## Arena word map
+//!
+//! The reserve is the *top* of the doorbell region (absolute slots
+//! [`ProcessGroup::kv_slot_range`]), split into `pub_slots` publication
+//! records, one arena header slot, `n_pages` page-control slots, and the
+//! page frames:
+//!
+//! ```text
+//! slot  +0      pub record 0   { seq, page, gen, key_lo, key_hi, len }
+//!       ...     pub record P-1   (ring; stamped seq = index+1, Release)
+//!       +P      arena header   { magic "CCKV", version, page_size,
+//!                                n_pages, clock hand }
+//!       +P+1    page 0 ctrl    { lease, generation, key_lo, key_hi, len }
+//!       ...     page N-1 ctrl    lease = VALID|FILLING|REF|pin-count
+//!       then    page frames      n_pages x page_size bytes
+//! ```
+//!
+//! Lease protocol: `0` free → `FILLING` (exclusive, via CAS) →
+//! `VALID|REF` (published, Release) → pins count readers. The CLOCK sweep
+//! strips `REF` on first pass (second chance) and reclaims only an exact
+//! `VALID` word — a pinned page can never be reclaimed, so the refcount
+//! never underflows — bumping the generation *at reclaim*, so any
+//! outstanding [`PageRef`] pins, sees the stamp mismatch, unpins, and
+//! reports a clean miss.
+//!
+//! [`ProcessGroup`]: crate::group::ProcessGroup
+//! [`ProcessGroup::kv_slot_range`]: crate::group::ProcessGroup::kv_slot_range
+//! [`Bootstrap::with_kv_reserve`]: crate::group::Bootstrap::with_kv_reserve
+//! [`ShmPool`]: crate::pool::ShmPool
+//! [`PlanCache`]: crate::collectives::PlanCache
+
+pub mod arena;
+pub mod exchange;
+pub mod serve;
+
+pub use arena::{KvArena, PageClaim, PageRef};
+pub use exchange::{KvExchange, PubRecord};
+pub use serve::{ServeConfig, ServeReport};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Doorbell-region slots a [`Bootstrap::with_kv_reserve`] carve needs for
+/// `pages` pages of `page_size` bytes under the default exchange layout:
+/// the publication-record ring, the arena header, one control slot per
+/// page, and the frames themselves (64 bytes per slot). Every rank must
+/// compute the same value — it feeds the pool layout hash.
+///
+/// [`Bootstrap::with_kv_reserve`]: crate::group::Bootstrap::with_kv_reserve
+pub fn kv_slots_for(pages: usize, page_size: usize) -> usize {
+    exchange::DEFAULT_PUB_SLOTS + 1 + pages + pages * page_size.div_ceil(64)
+}
+
+/// Counter snapshot for the serving tier — same shape and discipline as
+/// [`CacheStats`](crate::collectives::CacheStats): relaxed atomics
+/// underneath, a plain `PartialEq` snapshot on top.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KvCacheStats {
+    /// Requests served from an already-resident page.
+    pub hits: usize,
+    /// Requests that had to fill (and in pool mode, pull) a page.
+    pub misses: usize,
+    /// Fills that reclaimed a previously valid page.
+    pub evictions: usize,
+    /// Lookups that found a directory entry whose generation stamp no
+    /// longer matched — the reclaimed-under-you path, served as a miss.
+    pub stale_misses: usize,
+}
+
+/// The live counters behind [`KvCacheStats`].
+#[derive(Debug, Default)]
+pub struct KvStats {
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    evictions: AtomicUsize,
+    stale_misses: AtomicUsize,
+}
+
+impl KvStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn note_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_stale_miss(&self) {
+        self.stale_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> KvCacheStats {
+        KvCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            stale_misses: self.stale_misses.load(Ordering::Relaxed),
+        }
+    }
+}

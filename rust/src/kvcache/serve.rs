@@ -1,0 +1,421 @@
+//! The serve workload: a seeded Zipf session stream driven against the
+//! paged KV cache — virtual-time scoring for million-session sweeps, and
+//! a real two-process prefill/decode protocol for the pool smoke.
+//!
+//! **Sim mode** ([`run_sim`]) drives the real allocator (every lease CAS,
+//! generation stamp, and CLOCK sweep actually executes against an
+//! anonymous pool) but scores each request in *virtual* seconds from the
+//! measured constants in [`sim::constants`](crate::sim::constants), with
+//! the page-pull term priced by simulating the 2-rank broadcast plan the
+//! pool protocol would launch. Everything is seeded, so one seed gives
+//! one bitwise-identical report — the determinism CI pins by diffing two
+//! `BENCH_serve.json` runs.
+//!
+//! **Pool mode** ([`run_pool`]) runs the protocol for real across two OS
+//! processes: rank 0 (prefill) fills and publishes pages, rank 1 (decode)
+//! mirrors the directory from the publication records and pulls page
+//! bodies through the group's broadcast window. Both ranks classify every
+//! request independently from their own state; the induction that keeps
+//! them agreeing — both replay the same seeded stream, records arrive in
+//! publication order, and a page reuse evicts the same key from both maps
+//! — is checked end to end by the event digest, which CI diffs across the
+//! two ranks' logs.
+
+use super::arena::{KvArena, PageRef};
+use super::exchange::KvExchange;
+use super::{KvCacheStats, KvStats};
+use crate::collectives::builder::plan_collective_dtype;
+use crate::collectives::{CclVariant, Primitive};
+use crate::pool::{PoolLayout, ShmPool};
+use crate::sim::constants as k;
+use crate::sim::SimFabric;
+use crate::tensor::Dtype;
+use crate::topology::ClusterSpec;
+use crate::util::{fnv1a64, SplitMix64, Zipf};
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Bytes of cache payload a session fills per miss (a stand-in for one
+/// attention layer's KV block; the page is sized independently).
+const PAYLOAD_BYTES: usize = 64;
+
+/// One serve sweep's knobs. `sessions` is the Zipf domain (distinct
+/// users), `requests` the number of draws from it.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub sessions: usize,
+    pub requests: usize,
+    /// Zipf exponent; ~1 is the classic web/serving popularity law.
+    pub zipf_s: f64,
+    /// Cache capacity in pages.
+    pub pages: usize,
+    /// Page frame size in bytes (multiple of 64).
+    pub page_size: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            sessions: 2_000_000,
+            requests: 4_000_000,
+            zipf_s: 1.05,
+            pages: 4096,
+            page_size: 4096,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.sessions >= 1, "need at least one session");
+        ensure!(self.requests >= 1, "need at least one request");
+        ensure!(self.zipf_s > 0.0 && self.zipf_s.is_finite(), "zipf exponent must be positive");
+        ensure!(self.pages >= 1, "need at least one page");
+        ensure!(
+            self.page_size >= 64 && self.page_size % 64 == 0,
+            "page size must be a positive multiple of 64, got {}",
+            self.page_size
+        );
+        ensure!(self.payload_len() <= self.page_size, "page too small for the payload");
+        Ok(())
+    }
+
+    fn payload_len(&self) -> usize {
+        PAYLOAD_BYTES.min(self.page_size)
+    }
+}
+
+/// What a sweep measured. Sim-mode latencies are virtual seconds (exactly
+/// reproducible); pool-mode latencies are wall-clock.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub sessions: usize,
+    pub requests: usize,
+    pub stats: KvCacheStats,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+}
+
+impl ServeReport {
+    pub fn hit_rate(&self) -> f64 {
+        self.stats.hits as f64 / self.requests as f64
+    }
+
+    /// The row `BENCH_serve.json` carries — one fixed formatting shared by
+    /// the CLI and the bench, so "same seed, same bytes" is a plain diff.
+    pub fn json_row(&self) -> String {
+        format!(
+            "{{\"sessions\": {}, \"requests\": {}, \"hits\": {}, \"misses\": {}, \
+             \"evictions\": {}, \"stale_misses\": {}, \"hit_rate\": {:.6}, \
+             \"p50_us\": {:.3}, \"p99_us\": {:.3}, \"mean_us\": {:.3}}}",
+            self.sessions,
+            self.requests,
+            self.stats.hits,
+            self.stats.misses,
+            self.stats.evictions,
+            self.stats.stale_misses,
+            self.hit_rate(),
+            self.p50_s * 1e6,
+            self.p99_s * 1e6,
+            self.mean_s * 1e6,
+        )
+    }
+}
+
+/// The deterministic 64-byte page payload both ranks derive for a
+/// session key — what lets decode *verify* every pulled body.
+pub fn payload_for(key: u64) -> [u8; PAYLOAD_BYTES] {
+    let mut buf = [0u8; PAYLOAD_BYTES];
+    let mut rng = SplitMix64::new(key ^ 0x4B56_5041_4745);
+    for chunk in buf.chunks_exact_mut(8) {
+        chunk.copy_from_slice(&rng.next_u64().to_le_bytes());
+    }
+    buf
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn finish(cfg: &ServeConfig, stats: KvCacheStats, mut lat: Vec<f64>) -> ServeReport {
+    let mean = lat.iter().sum::<f64>() / lat.len().max(1) as f64;
+    lat.sort_by(|a, b| a.total_cmp(b));
+    ServeReport {
+        sessions: cfg.sessions,
+        requests: cfg.requests,
+        stats,
+        p50_s: percentile(&lat, 0.50),
+        p99_s: percentile(&lat, 0.99),
+        mean_s: mean,
+    }
+}
+
+/// Virtual seconds the pool protocol's page pull would take: the 2-rank
+/// broadcast plan of one page, priced by [`SimFabric`]. A pure function
+/// of the page size, computed once per sweep.
+fn simulated_pull_time(page_size: usize) -> Result<f64> {
+    let spec = ClusterSpec::new(2, 2, 8 << 20);
+    let layout = PoolLayout::from_spec(&spec)?;
+    let plan = [CclVariant::All.config(4), CclVariant::Naive.config(1)]
+        .iter()
+        .find_map(|cfg| {
+            plan_collective_dtype(Primitive::Broadcast, &spec, &layout, cfg, page_size, Dtype::U8)
+                .ok()
+        })
+        .ok_or_else(|| anyhow::anyhow!("no feasible broadcast plan for {page_size}-byte pages"))?;
+    Ok(SimFabric::new(layout).simulate(&plan)?.total_time)
+}
+
+/// Run the Zipf sweep in virtual time. The allocator runs for real (an
+/// anonymous pool sized to `cfg.pages`); only the clock is simulated.
+pub fn run_sim(cfg: &ServeConfig) -> Result<ServeReport> {
+    cfg.validate()?;
+    let arena_len = 64 * (1 + cfg.pages) + cfg.pages * cfg.page_size;
+    let pool = Arc::new(ShmPool::anon(arena_len)?);
+    let arena = KvArena::create(pool, 0..arena_len, cfg.page_size)?;
+    debug_assert_eq!(arena.n_pages(), cfg.pages);
+
+    let t_pull = simulated_pull_time(cfg.page_size)?;
+    // Hit: directory probe + pin round-trip, then the frame read off CXL.
+    let t_hit = 2.0 * k::CXL_LATENCY + cfg.page_size as f64 / k::CXL_DEVICE_BW;
+    // Miss: fill the frame, stamp the record, decode's poll picks it up,
+    // then the broadcast pull moves the body.
+    let t_miss = k::MEMCPY_LAUNCH_OVERHEAD
+        + cfg.page_size as f64 / k::CXL_DEVICE_BW
+        + k::DOORBELL_RING_COST
+        + k::DOORBELL_POLL_INTERVAL
+        + k::DOORBELL_CHECK_COST
+        + t_pull;
+
+    let zipf = Zipf::new(cfg.sessions, cfg.zipf_s);
+    let mut rng = SplitMix64::new(cfg.seed);
+    let stats = KvStats::new();
+    let mut directory: HashMap<u64, PageRef> = HashMap::new();
+    let mut page_keys: Vec<Option<u64>> = vec![None; arena.n_pages()];
+    let mut lat = Vec::with_capacity(cfg.requests);
+    let payload_len = cfg.payload_len();
+
+    for _ in 0..cfg.requests {
+        let sid = zipf.sample(&mut rng) as u64;
+        let mut t = 0.0;
+        let resident = directory.get(&sid).copied();
+        let hit = match resident {
+            Some(r) => {
+                if arena.pin(r.page, r.generation)? {
+                    arena.unpin(r.page)?;
+                    true
+                } else {
+                    // Reclaimed under an outstanding directory entry: the
+                    // generation stamp turned it into a clean miss.
+                    stats.note_stale_miss();
+                    directory.remove(&sid);
+                    t += k::DOORBELL_CHECK_COST;
+                    false
+                }
+            }
+            None => false,
+        };
+        if hit {
+            stats.note_hit();
+            t += t_hit;
+        } else {
+            let Some((claim, evicted)) = arena.alloc()? else {
+                bail!("arena saturated with no pins outstanding (allocator bug)");
+            };
+            stats.note_miss();
+            if evicted {
+                stats.note_eviction();
+                t += k::CXL_LATENCY;
+                if let Some(old) = page_keys[claim.page].take() {
+                    directory.remove(&old);
+                }
+            }
+            let body = payload_for(sid);
+            let r = arena.publish(claim, sid, &body[..payload_len])?;
+            page_keys[r.page] = Some(sid);
+            directory.insert(sid, r);
+            t += t_miss;
+        }
+        lat.push(t);
+    }
+    Ok(finish(cfg, stats.snapshot(), lat))
+}
+
+/// Run the prefill/decode protocol for real over a 2-process pool group.
+/// Returns this rank's report (wall-clock latencies) and the event
+/// digest; the digests of the two ranks must be identical — the
+/// agreement CI checks.
+///
+/// Why the ranks agree: both replay the same seeded Zipf stream; a
+/// request is a hit iff its key is resident, and residency mutates
+/// identically on both sides — prefill inserts at the page its allocator
+/// chose, decode inserts at the page the (in-order) publication record
+/// names, and a page reuse evicts that page's previous key from both
+/// maps. So the two directories are equal before every request, and
+/// every hit/miss decision, page index, and generation matches.
+pub fn run_pool(pg: &crate::group::ProcessGroup, cfg: &ServeConfig) -> Result<(ServeReport, u64)> {
+    cfg.validate()?;
+    ensure!(
+        pg.is_multiprocess() && pg.world_size() == 2,
+        "serve pool mode is a 2-process protocol (prefill rank 0, decode rank 1); got {} ranks",
+        pg.world_size()
+    );
+    let ex = KvExchange::new(pg, cfg.page_size)?;
+    let arena = ex.arena();
+    ensure!(
+        arena.n_pages() >= 1,
+        "KV reserve too small for one {}-byte page",
+        cfg.page_size
+    );
+    let payload_len = cfg.payload_len();
+    let prefill = pg.rank() == 0;
+
+    let zipf = Zipf::new(cfg.sessions, cfg.zipf_s);
+    let mut rng = SplitMix64::new(cfg.seed);
+    // key -> ref on the prefill side; mirrored from records on decode.
+    let mut directory: HashMap<u64, PageRef> = HashMap::new();
+    let mut page_keys: Vec<Option<u64>> = vec![None; arena.n_pages()];
+    let mut events: Vec<u8> = Vec::with_capacity(cfg.requests * 22);
+    let mut lat = Vec::with_capacity(cfg.requests);
+
+    for req in 0..cfg.requests {
+        let sid = zipf.sample(&mut rng) as u64;
+        let start = Instant::now();
+        let resident = directory.get(&sid).copied();
+        let (code, page, generation) = match resident {
+            Some(r) => {
+                if prefill {
+                    // The lock-step protocol never leaves a stale entry in
+                    // the prefill directory (eviction prunes eagerly), so
+                    // a failed revalidation is a broken invariant, not a
+                    // servable miss.
+                    ensure!(
+                        arena.pin(r.page, r.generation)?,
+                        "prefill directory entry for session {sid} went stale (protocol desync)"
+                    );
+                    arena.unpin(r.page)?;
+                } else {
+                    let mut body = Vec::new();
+                    ensure!(
+                        arena.read(&r, &mut body)?,
+                        "decode replica entry for session {sid} went stale (protocol desync)"
+                    );
+                    ensure!(
+                        body.as_slice() == &payload_for(sid)[..payload_len],
+                        "page {} served wrong bytes for session {sid}",
+                        r.page
+                    );
+                }
+                ex.stats().note_hit();
+                (b'H', r.page, r.generation)
+            }
+            None => {
+                let rec = if prefill {
+                    let body = payload_for(sid);
+                    let (r, _evicted) = ex.publish_page(sid, &body[..payload_len])?;
+                    super::PubRecord {
+                        page: r.page,
+                        generation: r.generation,
+                        key: sid,
+                        len: payload_len,
+                    }
+                } else {
+                    let rec = ex.await_publication()?;
+                    ensure!(
+                        rec.key == sid,
+                        "publication record carries session {} while decode expected {sid} \
+                         (streams desynced)",
+                        rec.key
+                    );
+                    ex.stats().note_miss();
+                    rec
+                };
+                if let Some(old) = page_keys[rec.page].take() {
+                    directory.remove(&old);
+                    if !prefill {
+                        ex.stats().note_eviction();
+                    }
+                }
+                directory
+                    .insert(sid, PageRef { page: rec.page, generation: rec.generation });
+                page_keys[rec.page] = Some(sid);
+                // Both ranks join the pull; decode verifies the body.
+                let body = ex.pull(0, &rec)?;
+                if !prefill {
+                    ensure!(
+                        body.as_slice() == &payload_for(sid)[..payload_len],
+                        "pulled body for session {sid} does not match the deterministic payload"
+                    );
+                }
+                (b'M', rec.page, rec.generation)
+            }
+        };
+        lat.push(start.elapsed().as_secs_f64());
+        events.extend_from_slice(&(req as u64).to_le_bytes());
+        events.extend_from_slice(&sid.to_le_bytes());
+        events.push(code);
+        events.extend_from_slice(&(page as u32).to_le_bytes());
+        events.extend_from_slice(&generation.to_le_bytes());
+    }
+    pg.flush()?;
+    let digest = fnv1a64(&events);
+    Ok((finish(cfg, ex.stats().snapshot(), lat), digest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ServeConfig {
+        ServeConfig {
+            sessions: 2_000,
+            requests: 10_000,
+            zipf_s: 1.0,
+            pages: 64,
+            page_size: 256,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn sim_sweep_is_deterministic_for_equal_seeds() {
+        let cfg = small();
+        let a = run_sim(&cfg).unwrap();
+        let b = run_sim(&cfg).unwrap();
+        assert_eq!(a.json_row(), b.json_row(), "same seed must give identical bytes");
+        let c = run_sim(&ServeConfig { seed: 8, ..cfg }).unwrap();
+        assert_ne!(a.stats, c.stats, "a different seed must reshuffle the stream");
+    }
+
+    #[test]
+    fn sim_accounting_is_conserved_and_zipf_skew_shows_up() {
+        let cfg = small();
+        let r = run_sim(&cfg).unwrap();
+        assert_eq!(r.stats.hits + r.stats.misses, cfg.requests);
+        // 64 pages against 2000 Zipf(1) sessions: the hot head keeps the
+        // hit rate meaningfully above the uniform ceiling (pages/sessions
+        // = 3.2%) while the cold tail keeps it well below 1.
+        assert!(r.hit_rate() > 0.10, "hit rate {} too low for Zipf(1)", r.hit_rate());
+        assert!(r.hit_rate() < 0.90, "hit rate {} implausibly high", r.hit_rate());
+        assert!(r.stats.evictions > 0, "a 64-page cache must evict under this stream");
+        assert!(r.stats.misses >= r.stats.evictions);
+        assert!(r.p99_s >= r.p50_s && r.p50_s > 0.0);
+        // Misses dominate the tail: p99 must price at least a full miss.
+        assert!(r.p99_s > r.mean_s);
+    }
+
+    #[test]
+    fn payloads_are_deterministic_and_distinct() {
+        assert_eq!(payload_for(1), payload_for(1));
+        assert_ne!(payload_for(1), payload_for(2));
+    }
+}

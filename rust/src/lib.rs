@@ -114,7 +114,30 @@
 //! | Pipelining | launch `seq` runs on epoch-ring slice `seq % depth`; `set_pipeline_depth` paces `1..=ring` at runtime without re-tuning or re-slicing |
 //! | Plans | validated once at planning into [`collectives::ValidPlan`]s, cached per epoch slice in `PlanCache` (misses == distinct shapes); tuner sweeps never touch it |
 //! | Introspection | `pg.resolve_config(..)` / `pg.resolve_auto(..)` expose the tuner's decision; `pg.plan_cache()` / `pg.decision_cache()` expose hit/miss/eviction stats |
-//! | Subgroups | `pg.split(..)` carves disjoint doorbell + device windows; pool rendezvous layout-hashes topology, protocol, ring depth, and tuner algorithm version, so incompatible builds fail fast instead of desyncing |
+//! | Subgroups | `pg.split(..)` carves disjoint doorbell + device windows; pool rendezvous layout-hashes topology, protocol, ring depth, tuner algorithm version, and the KV reserve, so incompatible builds fail fast instead of desyncing |
+//!
+//! ## Serving tier (v8)
+//!
+//! [`kvcache`] turns the pool into LLM KV-cache memory shared between
+//! prefill and decode ranks: `Bootstrap::with_kv_reserve(kv_slots_for(pages,
+//! page_size))` carves an arena off the top of the doorbell region
+//! (excluded from every plan window and from the layout hash's point of
+//! view a distinct topology), [`kvcache::KvArena`] pages it with
+//! lease/generation control words and CLOCK reclamation, and
+//! [`kvcache::KvExchange`] publishes pages from prefill to decode over
+//! doorbell-style records plus ordinary broadcast pulls. Each 64-byte
+//! page-control slot holds:
+//!
+//! | byte | word | protocol |
+//! |------|------|----------|
+//! | 0 | lease | `VALID`(31) \| `FILLING`(30) \| `REF`(29) \| pin count (0–15); free→`FILLING` by CAS, publish stores `VALID\|REF` Release, CLOCK reclaims only an exact `VALID` |
+//! | 4 | generation | bumped at reclaim/abort; every pin revalidates it, so stale refs degrade to clean misses |
+//! | 8, 12 | key lo/hi | the session key the page was published under |
+//! | 16 | len | published payload bytes |
+//!
+//! `ccl serve` drives a seeded Zipf session stream over it — millions of
+//! virtual-time requests in sim mode, a digest-checked 2-process
+//! prefill/decode protocol in pool mode (see the README walkthrough).
 
 #![deny(unsafe_op_in_unsafe_fn)]
 
@@ -130,6 +153,7 @@ pub mod doorbell;
 pub mod exec;
 pub mod group;
 pub mod interleave;
+pub mod kvcache;
 pub mod pool;
 pub mod runtime;
 pub mod sim;
@@ -147,6 +171,9 @@ pub mod prelude {
     };
     pub use crate::exec::{Communicator, PendingOp, RankComm};
     pub use crate::group::{Bootstrap, CollectiveFuture, CommWorld, ProcessGroup};
+    pub use crate::kvcache::{
+        kv_slots_for, KvArena, KvCacheStats, KvExchange, PageRef, ServeConfig, ServeReport,
+    };
     pub use crate::sim::fabric::SimFabric;
     pub use crate::tensor::{Dtype, Tensor, TensorView, TensorViewMut};
     pub use crate::topology::ClusterSpec;

@@ -8,7 +8,7 @@ pub mod rng;
 pub mod size;
 pub mod stats;
 
-pub use rng::SplitMix64;
+pub use rng::{SplitMix64, Zipf};
 pub use stats::Stats;
 
 /// FNV-1a 64-bit hash. Used for the pool control plane's layout fingerprint

@@ -44,6 +44,11 @@ impl SplitMix64 {
         (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
     }
 
+    /// Uniform f64 in `[0, 1)` (53 mantissa bits — the full double grid).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
     /// Standard-normal-ish f32 via the sum of 4 uniforms (Irwin–Hall),
     /// good enough for synthetic model weights / workloads.
     pub fn next_gaussian(&mut self) -> f32 {
@@ -60,6 +65,73 @@ impl SplitMix64 {
     pub fn fill_f32(&mut self, out: &mut [f32]) {
         for v in out.iter_mut() {
             *v = self.next_f32() * 2.0 - 1.0;
+        }
+    }
+}
+
+/// Seeded Zipf(s) sampler over `{0, 1, .., n-1}` — the request-popularity
+/// law serving workloads live and die by (a small set of hot sessions
+/// dominates the stream). Element `k` is drawn with probability
+/// proportional to `1 / (k + 1)^s`.
+///
+/// Uses Hörmann's rejection-inversion method (W. Hörmann, G. Derflinger —
+/// "Rejection-inversion to generate variates from monotone discrete
+/// distributions", TOMACS 1996; the same construction behind
+/// Apache Commons' `RejectionInversionZipfSampler`): O(1) per sample with
+/// no table, so a billion-session sweep needs no setup proportional to
+/// `n`. Determinism is inherited from [`SplitMix64`] — equal seeds give
+/// equal sample streams, which is what lets two serving ranks agree on a
+/// request trace without exchanging it.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    cut: f64,
+}
+
+impl Zipf {
+    /// Sampler over `n` elements with exponent `s` (`n >= 1`, `s > 0`).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1, "Zipf needs at least one element");
+        assert!(s > 0.0 && s.is_finite(), "Zipf exponent must be positive, got {s}");
+        let h_x1 = Self::h(1.5, s) - 1.0;
+        let h_n = Self::h(n as f64 + 0.5, s);
+        let cut = 2.0 - Self::h_inv(Self::h(2.5, s) - (2.0f64).powf(-s), s);
+        Self { n: n as u64, s, h_x1, h_n, cut }
+    }
+
+    /// Integral of the hat function: `((x)^(1-s) - 1) / (1 - s)`, with the
+    /// `s == 1` limit `ln x`.
+    fn h(x: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-12 {
+            x.ln()
+        } else {
+            (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+        }
+    }
+
+    fn h_inv(y: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-12 {
+            y.exp()
+        } else {
+            // Clamp the base at 0 against round-off (Hörmann §4); a zero
+            // base just produces an out-of-range x the acceptance test
+            // rejects.
+            (1.0 + y * (1.0 - s)).max(0.0).powf(1.0 / (1.0 - s))
+        }
+    }
+
+    /// Draw one 0-based element (0 is the hottest).
+    pub fn sample(&self, rng: &mut SplitMix64) -> usize {
+        loop {
+            let u = self.h_n + rng.next_f64() * (self.h_x1 - self.h_n);
+            let x = Self::h_inv(u, self.s);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            if k - x <= self.cut || u >= Self::h(k + 0.5, self.s) - k.powf(-self.s) {
+                return k as usize - 1;
+            }
         }
     }
 }
@@ -125,5 +197,70 @@ mod tests {
         let mut c2 = parent.split();
         let equal = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
         assert_eq!(equal, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(13);
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn zipf_replays_exactly_for_equal_seeds() {
+        let z = Zipf::new(1 << 20, 1.1);
+        let mut a = SplitMix64::new(0xFEED);
+        let mut b = SplitMix64::new(0xFEED);
+        for _ in 0..1000 {
+            assert_eq!(z.sample(&mut a), z.sample(&mut b));
+        }
+    }
+
+    #[test]
+    fn zipf_stays_in_range_across_exponents() {
+        for s in [0.5, 0.99, 1.0, 1.2, 2.5] {
+            let n = 1000;
+            let z = Zipf::new(n, s);
+            let mut r = SplitMix64::new(17);
+            for _ in 0..20_000 {
+                assert!(z.sample(&mut r) < n, "s = {s}");
+            }
+        }
+        // The degenerate single-element stream is constant.
+        let z = Zipf::new(1, 1.0);
+        let mut r = SplitMix64::new(3);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut r), 0);
+        }
+    }
+
+    /// Pin the rank-frequency skew: under Zipf(1) over 1000 elements, the
+    /// law says freq(k) ∝ 1/(k+1), so element 0 beats element 1 by ~2×
+    /// and the top-10 set carries ~39% of the mass (H(10)/H(1000)). Wide
+    /// tolerances keep the pin about the *law*, not the sampler's noise.
+    #[test]
+    fn zipf_rank_frequency_skew_matches_the_law() {
+        let n = 1000;
+        let draws = 200_000usize;
+        let z = Zipf::new(n, 1.0);
+        let mut r = SplitMix64::new(0x5EED_2024);
+        let mut freq = vec![0usize; n];
+        for _ in 0..draws {
+            freq[z.sample(&mut r)] += 1;
+        }
+        // Hot head ordering: the first few ranks are strictly ordered.
+        assert!(freq[0] > freq[1] && freq[1] > freq[2] && freq[2] > freq[3]);
+        // freq(0)/freq(1) ≈ 2 under s = 1.
+        let ratio = freq[0] as f64 / freq[1] as f64;
+        assert!((1.6..=2.4).contains(&ratio), "freq0/freq1 = {ratio}");
+        // Top-10 mass ≈ H_10/H_1000 = 2.929/7.485 ≈ 0.391.
+        let top10: usize = freq[..10].iter().sum();
+        let mass = top10 as f64 / draws as f64;
+        assert!((0.34..=0.45).contains(&mass), "top-10 mass = {mass}");
+        // The tail is populated: at least half the elements were seen.
+        let seen = freq.iter().filter(|&&c| c > 0).count();
+        assert!(seen > n / 2, "only {seen} of {n} elements drawn");
     }
 }

@@ -152,6 +152,42 @@ fn aliased_ring_slices_flagged_as_cross_slice_alias_with_launches() {
     assert!(analysis::check_ring(&refs, &slices, &[]).is_empty());
 }
 
+#[test]
+fn aliased_kvcache_arena_flagged_as_cross_slice_alias() {
+    let (_, base) = spec_and_layout();
+    let total = base.doorbell_slots();
+    // A bootstrap-shaped carve: control prefix, plan window, 64-slot KV
+    // reserve off the top — the healthy arrangement audits clean.
+    let kv_slots = 64usize;
+    let windowed = base
+        .with_doorbell_window(GROUP_CTRL_SLOTS, total - GROUP_CTRL_SLOTS - kv_slots)
+        .unwrap();
+    let slices = windowed.pipeline_slices(2).unwrap();
+    let ctrl = control_word_slots(0, 2);
+    let healthy = (total - kv_slots)..total;
+    assert!(
+        analysis::check_kv_window(&healthy, &slices, &ctrl, total).is_empty(),
+        "a reserve above the plan window must audit clean"
+    );
+    // The mutant slides the reserve into the last slice's doorbell window.
+    let aliased = mutations::alias_kvcache_arena(&slices).expect("depth-2 ring");
+    let diags = analysis::check_kv_window(&aliased, &slices, &ctrl, total.max(aliased.end));
+    assert!(
+        diags.iter().any(|d| d.kind == DiagnosticKind::CrossSliceAlias && d.site.is_none()),
+        "an arena overlapping a slice window must alias at the layout level; got:\n{}",
+        analysis::report(&diags)
+    );
+    // A reserve running past the doorbell region is an escape, not an
+    // alias — the audit distinguishes the two failure shapes.
+    let escaped = (total - 8)..(total + 8);
+    let diags = analysis::check_kv_window(&escaped, &slices, &ctrl, total);
+    assert!(
+        diags.iter().any(|d| d.kind == DiagnosticKind::WindowEscape),
+        "an out-of-region reserve must be a window escape; got:\n{}",
+        analysis::report(&diags)
+    );
+}
+
 /// The zero-findings regression: every plan the planners emit for every
 /// autotuner candidate, across primitives, dtypes, and ring depths 1 and
 /// 2, audits clean — including against the group-control word map a

@@ -1,0 +1,142 @@
+//! Serving-tier integration under the **ThreadLocal** bootstrap: the KV
+//! reserve carve, the exchange round-trip over a live group, and the
+//! lease/generation reclamation discipline end to end (a stale reader
+//! sees a clean miss; the refcount can never underflow). The fork-based
+//! twin (`tests/kvcache_fork.rs`) re-runs the reclamation story across
+//! two OS processes through the Pool bootstrap.
+
+use cxl_ccl::group::control::GROUP_CTRL_SLOTS;
+use cxl_ccl::kvcache::serve::{run_sim, ServeConfig};
+use cxl_ccl::prelude::*;
+
+const PAGES: usize = 8;
+const PAGE_SIZE: usize = 256;
+
+fn kv_world() -> ProcessGroup {
+    let spec = ClusterSpec::new(2, 6, 8 << 20);
+    let slots = kv_slots_for(PAGES, PAGE_SIZE);
+    CommWorld::init(Bootstrap::thread_local(spec).with_kv_reserve(slots), 0, 2).unwrap()
+}
+
+#[test]
+fn kv_reserve_is_carved_off_the_top_of_the_doorbell_region() {
+    let spec = ClusterSpec::new(2, 6, 8 << 20);
+    let total = spec.db_region_size / 64;
+    let slots = kv_slots_for(PAGES, PAGE_SIZE);
+    let pg =
+        CommWorld::init(Bootstrap::thread_local(spec).with_kv_reserve(slots), 0, 2).unwrap();
+    let kv = pg.kv_slot_range();
+    assert_eq!(kv, total - slots..total, "reserve must be the top `slots` slots");
+    assert_eq!(pg.kv_byte_range(), (total - slots) * 64..total * 64);
+    // The plan window must end where the reserve begins: no doorbell the
+    // collectives can ring may alias a page-control word.
+    let db = pg.doorbell_slot_range();
+    assert!(db.end <= kv.start, "plan doorbells {db:?} overlap the KV reserve {kv:?}");
+    assert!(db.start >= GROUP_CTRL_SLOTS);
+}
+
+#[test]
+fn without_the_reserve_the_exchange_refuses_to_stand_up() {
+    let spec = ClusterSpec::new(2, 6, 8 << 20);
+    let pg = CommWorld::init(Bootstrap::thread_local(spec), 0, 2).unwrap();
+    assert!(pg.kv_slot_range().is_empty());
+    let err = KvExchange::new(&pg, PAGE_SIZE).unwrap_err().to_string();
+    assert!(err.contains("with_kv_reserve"), "error must name the fix, got: {err}");
+}
+
+#[test]
+fn publish_await_pull_round_trips_through_the_exchange() {
+    let pg = kv_world();
+    let ex = KvExchange::new(&pg, PAGE_SIZE).unwrap();
+    assert_eq!(ex.arena().n_pages(), PAGES);
+    let body: Vec<u8> = (0..100u8).collect();
+    let (r, evicted) = ex.publish_page(42, &body).unwrap();
+    assert!(!evicted, "first fill of an empty arena cannot evict");
+    let rec = ex.await_publication().unwrap();
+    assert_eq!(rec.key, 42);
+    assert_eq!(rec.page, r.page);
+    assert_eq!(rec.generation, r.generation);
+    assert_eq!(rec.len, body.len());
+    // ThreadLocal groups share the mapping: the pull is a pinned read.
+    let got = ex.pull(0, &rec).unwrap();
+    assert_eq!(got, body);
+    let s = ex.stats().snapshot();
+    assert_eq!((s.misses, s.evictions), (1, 0));
+}
+
+#[test]
+fn clock_churn_turns_stale_directory_entries_into_clean_misses() {
+    let pg = kv_world();
+    let ex = KvExchange::new(&pg, PAGE_SIZE).unwrap();
+    let arena = ex.arena();
+    let (stale, _) = ex.publish_page(1, b"victim").unwrap();
+    // Churn more fills than the arena holds: CLOCK strips the REF second
+    // chances on the first lap and reclaims every page on the second, so
+    // the victim's frame is reused and its generation bumped.
+    for key in 2..2 + 2 * PAGES as u64 {
+        ex.publish_page(key, b"churn").unwrap();
+    }
+    assert_ne!(
+        arena.generation(stale.page).unwrap(),
+        stale.generation,
+        "reclaim must burn the generation"
+    );
+    // A reader holding the stale ref gets a clean miss — never the new
+    // tenant's bytes, never a panic.
+    assert!(!arena.pin(stale.page, stale.generation).unwrap());
+    let mut buf = Vec::new();
+    assert!(!arena.read(&stale, &mut buf).unwrap());
+    ex.stats().note_stale_miss();
+    assert_eq!(ex.stats().snapshot().stale_misses, 1);
+}
+
+#[test]
+fn refcounts_never_underflow_through_the_exchange_surface() {
+    let pg = kv_world();
+    let ex = KvExchange::new(&pg, PAGE_SIZE).unwrap();
+    let (r, _) = ex.publish_page(7, b"pinned once").unwrap();
+    let arena = ex.arena();
+    assert!(arena.pin(r.page, r.generation).unwrap());
+    arena.unpin(r.page).unwrap();
+    // The pin is gone; a second unpin must be an error, not a wrap to
+    // u16::MAX pins (which would wedge CLOCK forever).
+    let err = arena.unpin(r.page).unwrap_err().to_string();
+    assert!(err.contains("underflow"), "got: {err}");
+    // And the page is still reclaimable afterwards.
+    for key in 100..100 + 2 * PAGES as u64 {
+        ex.publish_page(key, b"churn").unwrap();
+    }
+    assert_ne!(arena.generation(r.page).unwrap(), r.generation);
+}
+
+#[test]
+fn subgroups_do_not_inherit_the_kv_reserve() {
+    let pg = kv_world();
+    assert!(!pg.kv_slot_range().is_empty());
+    let subs = pg.split_all(&[(0, 0), (0, 1)]).unwrap();
+    for sub in &subs {
+        assert!(
+            sub.kv_slot_range().is_empty(),
+            "the reserve belongs to the world group; a split must not alias it"
+        );
+    }
+}
+
+#[test]
+fn serve_sim_runs_against_a_group_sized_reserve() {
+    // The sim driver stands its own arena up, but its config must agree
+    // with what `kv_slots_for` would carve — pin that equivalence here.
+    let cfg = ServeConfig {
+        sessions: 500,
+        requests: 2_000,
+        zipf_s: 1.0,
+        pages: PAGES,
+        page_size: PAGE_SIZE,
+        seed: 11,
+    };
+    let r = run_sim(&cfg).unwrap();
+    assert_eq!(r.stats.hits + r.stats.misses, cfg.requests);
+    assert!(r.stats.evictions > 0);
+    let slots = kv_slots_for(cfg.pages, cfg.page_size);
+    assert!(slots * 64 >= 64 * (1 + PAGES) + PAGES * PAGE_SIZE);
+}

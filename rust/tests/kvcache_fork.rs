@@ -1,0 +1,166 @@
+//! Fork-based serving-tier acceptance: the lease/generation reclamation
+//! discipline and the full prefill→decode serve protocol across **two OS
+//! processes** rendezvousing through a file-backed pool with a KV
+//! reserve.
+//!
+//! Phase A pins the reclamation story cross-process: rank 0 publishes a
+//! page, churns the arena until CLOCK reclaims it, and rank 1 — holding
+//! the stale `(page, generation)` from the publication record — gets a
+//! clean miss from `pin`/`read` (never the new tenant's bytes) and an
+//! error (never a wrap) from an unbalanced `unpin`. Phase B runs the
+//! seeded serve protocol end to end and asserts both ranks computed the
+//! identical event digest — the same check CI performs on the two-shell
+//! smoke's logs.
+//!
+//! One `#[test]` per file: forking is only safe with no other live test
+//! threads (see `tests/process_group_fork.rs`).
+
+use cxl_ccl::kvcache::serve::{run_pool, ServeConfig};
+use cxl_ccl::prelude::*;
+use std::time::Duration;
+
+const PAGES: usize = 8;
+const PAGE_SIZE: usize = 256;
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        sessions: 100,
+        requests: 500,
+        zipf_s: 1.0,
+        pages: PAGES,
+        page_size: PAGE_SIZE,
+        seed: 5,
+    }
+}
+
+fn join_world(path: &str, rank: usize) -> anyhow::Result<ProcessGroup> {
+    let spec = ClusterSpec::new(2, 6, 8 << 20);
+    let boot = Bootstrap::pool(path, spec)
+        .with_kv_reserve(kv_slots_for(PAGES, PAGE_SIZE))
+        .with_join_timeout(Duration::from_secs(30));
+    CommWorld::init(boot, rank, 2)
+}
+
+/// Phase A, prefill side: publish a victim page, churn the arena until
+/// CLOCK reclaims it, and meet decode at the barriers.
+fn reclamation_prefill(pg: &ProcessGroup) -> anyhow::Result<()> {
+    let ex = KvExchange::new(pg, PAGE_SIZE)?;
+    let (victim, _) = ex.publish_page(1, b"victim")?;
+    // Two laps of fills: the first strips every REF second chance, the
+    // second reclaims — the victim's frame is reused, its generation
+    // burned.
+    for key in 2..2 + 2 * PAGES as u64 {
+        ex.publish_page(key, b"churn")?;
+    }
+    anyhow::ensure!(
+        ex.arena().generation(victim.page)? != victim.generation,
+        "churn did not reclaim the victim page"
+    );
+    pg.barrier()?; // churn visible
+    pg.barrier()?; // decode's stale checks done
+    Ok(())
+}
+
+/// Phase A, decode side: learn the victim's `(page, generation)` from the
+/// publication record, wait out the churn, then verify the stale ref
+/// degrades to a clean miss and the refcount refuses to underflow.
+fn reclamation_decode(pg: &ProcessGroup) -> anyhow::Result<()> {
+    let ex = KvExchange::new(pg, PAGE_SIZE)?;
+    let rec = ex.await_publication()?;
+    anyhow::ensure!(rec.key == 1, "first record must be the victim");
+    pg.barrier()?; // churn visible
+    let arena = ex.arena();
+    anyhow::ensure!(
+        !arena.pin(rec.page, rec.generation)?,
+        "stale generation {} must not pin page {}",
+        rec.generation,
+        rec.page
+    );
+    let stale = PageRef { page: rec.page, generation: rec.generation };
+    let mut buf = Vec::new();
+    anyhow::ensure!(!arena.read(&stale, &mut buf)?, "stale read must report a clean miss");
+    let err = arena.unpin(rec.page).unwrap_err().to_string();
+    anyhow::ensure!(err.contains("underflow"), "unbalanced unpin must error, got: {err}");
+    pg.barrier()?; // release prefill into phase B
+    Ok(())
+}
+
+fn run_rank(path: &str, rank: usize) -> anyhow::Result<(u64, KvCacheStats)> {
+    let pg = join_world(path, rank)?;
+    if rank == 0 {
+        reclamation_prefill(&pg)?;
+    } else {
+        reclamation_decode(&pg)?;
+    }
+    // Phase B: the serve protocol proper (its exchange re-zeroes the ring
+    // and re-creates the arena behind its own barrier).
+    let cfg = serve_cfg();
+    let (report, digest) = run_pool(&pg, &cfg)?;
+    anyhow::ensure!(
+        report.stats.hits + report.stats.misses == cfg.requests,
+        "accounting must be conserved"
+    );
+    anyhow::ensure!(
+        report.stats.stale_misses == 0,
+        "the lock-step protocol never leaves stale directory entries"
+    );
+    anyhow::ensure!(report.stats.evictions > 0, "an {PAGES}-page cache must evict");
+    Ok((digest, report.stats))
+}
+
+#[test]
+fn forked_prefill_decode_agree_on_reclamation_and_the_event_digest() {
+    let path = format!("/dev/shm/cxl_ccl_kv_fork_{}", std::process::id());
+    let digest_path = format!("{path}.digest");
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&digest_path);
+
+    // SAFETY: no threads are live in the test binary at this point (one
+    // #[test] per file), so the single-threaded child may continue safely.
+    match unsafe { libc::fork() } {
+        -1 => panic!("fork failed: {}", std::io::Error::last_os_error()),
+        0 => {
+            // Child: rank 1 (decode). Report through the digest file plus
+            // the exit status; never unwind across the fork boundary.
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let (digest, stats) = run_rank(&path, 1).expect("child rank 1 failed");
+                std::fs::write(
+                    &digest_path,
+                    format!(
+                        "{digest:016x} {} {} {} {}",
+                        stats.hits, stats.misses, stats.evictions, stats.stale_misses
+                    ),
+                )
+                .expect("child failed to record its digest");
+            }))
+            .is_ok();
+            // SAFETY: _exit never returns and skips atexit handlers —
+            // exactly what a forked test child must do.
+            unsafe { libc::_exit(if ok { 0 } else { 1 }) };
+        }
+        child => {
+            // Parent: rank 0 (prefill, creates the pool file).
+            let result = run_rank(&path, 0);
+            let mut status = 0i32;
+            // SAFETY: child is this process's live child pid; status is a
+            // valid out-param.
+            let reaped = unsafe { libc::waitpid(child, &mut status, 0) };
+            assert_eq!(reaped, child, "waitpid failed");
+            assert!(
+                libc::WIFEXITED(status) && libc::WEXITSTATUS(status) == 0,
+                "child rank failed (status {status:#x})"
+            );
+            let (digest, stats) = result.expect("parent rank 0 failed");
+            let theirs = std::fs::read_to_string(&digest_path).expect("child digest missing");
+            let ours = format!(
+                "{digest:016x} {} {} {} {}",
+                stats.hits, stats.misses, stats.evictions, stats.stale_misses
+            );
+            assert_eq!(
+                theirs, ours,
+                "prefill and decode must agree on every hit/miss decision and page placement"
+            );
+            let _ = std::fs::remove_file(&digest_path);
+        }
+    }
+}

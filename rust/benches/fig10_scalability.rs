@@ -13,15 +13,28 @@
 //! - AllGather (4th representative): traffic grows like AllReduce without
 //!   the reduction.
 //!
+//! The v9 panel extends the sweep across **pool counts**: the same
+//! message over a flat world (P×L ranks contending on one chassis's six
+//! devices) vs the two-level fabric (P pools of L ranks, each on its own
+//! six devices, leaders exchanging over the network), decided through
+//! [`fabric::tune_fabric`] — the same npools-keyed tuner the launch
+//! surface uses.
+//!
 //! Run: `cargo bench --bench fig10_scalability`
-//! Env: `FIG10_MAX_MB` (default 4096).
+//! Env: `FIG10_MAX_MB` (default 4096); `BENCH_JSON=1` additionally writes
+//! machine-readable `BENCH_multipool.json` (per pool count and size:
+//! flat vs hierarchical virtual time, split by level) for the CI perf
+//! trajectory.
 
 use cxl_ccl::baseline::{collective_time, IbParams};
-use cxl_ccl::bench_util::{banner, Table};
+use cxl_ccl::bench_util::{banner, write_bench_json, Table};
 use cxl_ccl::collectives::builder::plan_collective;
+use cxl_ccl::collectives::tuner::DecisionCache;
 use cxl_ccl::collectives::{run_with_scratch, CclVariant, Primitive};
+use cxl_ccl::fabric::{self, PoolSet};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::sim::SimFabric;
+use cxl_ccl::tensor::Dtype;
 use cxl_ccl::topology::ClusterSpec;
 use cxl_ccl::util::size::{fmt_bytes, fmt_time};
 
@@ -87,6 +100,95 @@ fn main() {
                 println!("(paper: 1.11-1.43x at 6 nodes, 1.44-1.83x at 12 — contention only)")
             }
             _ => {}
+        }
+    }
+
+    multipool_sweep(&sizes_mb, &ib);
+}
+
+/// The v9 pool-count sweep: flat vs two-level at 2 and 4 pools of 4
+/// ranks, through the npools-keyed fabric tuner. Emits
+/// `BENCH_multipool.json` under `BENCH_JSON=1` and hard-asserts the
+/// acceptance shape — hierarchical AllReduce beats flat at every pool
+/// count for these bandwidth-bound sizes.
+fn multipool_sweep(sizes_mb: &[usize], ib: &IbParams) {
+    let emit_json = std::env::var("BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    let per_pool = 4;
+    let cache = DecisionCache::new();
+    let mut rows: Vec<String> = Vec::new();
+    for p in [Primitive::AllReduce, Primitive::AllGather] {
+        banner(&format!(
+            "Fig 10 (v9 panel): {p} — flat world vs two-level fabric, {per_pool} ranks/pool"
+        ));
+        let t = Table::new(&[10, 7, 7, 12, 12, 12, 12, 10, 10]);
+        t.header(&[
+            "size", "pools", "ranks", "flat", "hier", "intra", "inter", "speedup", "verdict",
+        ]);
+        for &mb in sizes_mb {
+            let bytes = mb << 20;
+            for pools in [2usize, 4] {
+                let set = PoolSet::uniform(pools, per_pool).unwrap();
+                let world = set.world_size();
+                // Per-rank payload, world-divisible (the intra
+                // ReduceScatter leg needs n % per_pool == 0).
+                let n = (bytes / 4 / world).max(1) * world;
+                let pool_spec = fabric::sim::pool_spec_for(&set, 6, 1, n, Dtype::F32);
+                let mut flat_spec = ClusterSpec::new(world, 6, 64 << 20);
+                let worst = world * n * 4 + flat_spec.db_region_size + (1 << 20);
+                if flat_spec.device_capacity < worst {
+                    flat_spec.device_capacity = worst.next_power_of_two();
+                }
+                let choice = fabric::tune_fabric(
+                    &cache, &set, &flat_spec, &pool_spec, p, 0, n, Dtype::F32, ib,
+                )
+                .unwrap();
+                let flat_s = choice.flat.predicted_secs;
+                let hier_s = choice.hier.predicted_secs;
+                let verdict = if choice.hierarchical { "two-level" } else { "flat" };
+                t.row(&[
+                    fmt_bytes(bytes),
+                    format!("{pools}"),
+                    format!("{world}"),
+                    fmt_time(flat_s),
+                    fmt_time(hier_s),
+                    fmt_time(choice.hier_time.intra_secs),
+                    fmt_time(choice.hier_time.inter_secs),
+                    format!("{:.2}x", flat_s / hier_s),
+                    verdict.to_string(),
+                ]);
+                if p == Primitive::AllReduce {
+                    assert!(
+                        choice.hierarchical && hier_s < flat_s,
+                        "{p} at {pools} pools x {} must pick the two-level path \
+                         (flat {flat_s:.4}s vs hier {hier_s:.4}s)",
+                        fmt_bytes(bytes)
+                    );
+                }
+                rows.push(format!(
+                    "{{\"primitive\": \"{p}\", \"pools\": {pools}, \"ranks\": {world}, \
+                     \"bytes\": {bytes}, \"flat_s\": {flat_s:.6}, \"hier_s\": {hier_s:.6}, \
+                     \"hier_intra_s\": {:.6}, \"hier_inter_s\": {:.6}, \
+                     \"speedup\": {:.3}, \"hierarchical\": {}}}",
+                    choice.hier_time.intra_secs,
+                    choice.hier_time.inter_secs,
+                    flat_s / hier_s,
+                    choice.hierarchical,
+                ));
+            }
+        }
+    }
+    println!(
+        "(two-level: RS-intra -> leader AllReduce over IB -> AG-intra; pools own their six\n \
+         devices, the flat world crams every rank through one chassis's six)"
+    );
+    if emit_json {
+        let meta = [
+            ("per_pool", per_pool.to_string()),
+            ("tuner_cache_lines", cache.len().to_string()),
+        ];
+        match write_bench_json("BENCH_multipool.json", "multipool", &meta, &rows) {
+            Ok(()) => println!("\nwrote BENCH_multipool.json ({} rows)", rows.len()),
+            Err(e) => eprintln!("\nfailed to write BENCH_multipool.json: {e}"),
         }
     }
 }

@@ -607,6 +607,78 @@ pub fn check_kv_window(
     diags
 }
 
+/// Inter-pool bounce-region audit (v9), run whenever a shared-file
+/// deployment carves a leader exchange region
+/// ([`fabric::bounce_window`](crate::fabric::bounce_window)): the bounce
+/// region must stay inside the doorbell region (`total_slots` slots) and
+/// alias neither any epoch slice's doorbell window, nor a group-control
+/// word, nor the KV reserve (`kv` — pass an empty range without one).
+/// Same seam discipline as [`check_kv_window`]: plan *data* can never
+/// reach the doorbell region, so slots are the only aliasing surface.
+pub fn check_interpool_windows(
+    bounce: &std::ops::Range<usize>,
+    slices: &[PoolLayout],
+    ctrl_slots: &[usize],
+    kv: &std::ops::Range<usize>,
+    total_slots: usize,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if bounce.is_empty() {
+        return diags;
+    }
+    if bounce.end > total_slots {
+        diags.push(Diagnostic {
+            kind: DiagnosticKind::WindowEscape,
+            site: None,
+            other: None,
+            detail: format!(
+                "inter-pool bounce region [{}, {}) escapes the {total_slots}-slot doorbell \
+                 region",
+                bounce.start, bounce.end
+            ),
+        });
+    }
+    for (i, sl) in slices.iter().enumerate() {
+        let db = sl.doorbell_slot_range();
+        if db.start < bounce.end && bounce.start < db.end {
+            diags.push(Diagnostic {
+                kind: DiagnosticKind::CrossSliceAlias,
+                site: None,
+                other: None,
+                detail: format!(
+                    "slice {i}'s doorbell window [{}, {}) reaches into the inter-pool \
+                     bounce region [{}, {})",
+                    db.start, db.end, bounce.start, bounce.end
+                ),
+            });
+        }
+    }
+    for &w in ctrl_slots {
+        if bounce.contains(&w) {
+            diags.push(Diagnostic {
+                kind: DiagnosticKind::CrossSliceAlias,
+                site: None,
+                other: None,
+                detail: format!(
+                    "inter-pool bounce region covers group-control word at slot {w}"
+                ),
+            });
+        }
+    }
+    if !kv.is_empty() && kv.start < bounce.end && bounce.start < kv.end {
+        diags.push(Diagnostic {
+            kind: DiagnosticKind::CrossSliceAlias,
+            site: None,
+            other: None,
+            detail: format!(
+                "inter-pool bounce region [{}, {}) overlaps the KV reserve [{}, {})",
+                bounce.start, bounce.end, kv.start, kv.end
+            ),
+        });
+    }
+    diags
+}
+
 /// Full ring audit: per-launch [`check_plan`] + [`check_windows`] (sites
 /// stamped with their launch index), the layout-level
 /// [`check_slice_windows`], and op-level cross-launch aliasing — two

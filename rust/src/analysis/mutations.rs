@@ -155,3 +155,20 @@ pub fn alias_kvcache_arena(slices: &[PoolLayout]) -> Option<std::ops::Range<usiz
     // whatever the reserve's length.
     Some(db.end - 1..db.end + 7)
 }
+
+/// Category "inter-pool bounce alias" (v9): a bounce region slid down so
+/// it overlaps the last ring slice's doorbell window — the bug a
+/// deployment that carved the bounce region without shrinking the plan
+/// window would plant. Expected:
+/// [`super::DiagnosticKind::CrossSliceAlias`] from
+/// [`super::check_interpool_windows`]; a healthy carve from
+/// [`fabric::bounce_window`](crate::fabric::bounce_window) audits clean
+/// under the same call.
+pub fn alias_interpool_window(slices: &[PoolLayout]) -> Option<std::ops::Range<usize>> {
+    let last = slices.last()?;
+    let db = last.doorbell_slot_range();
+    if db.is_empty() {
+        return None;
+    }
+    Some(db.end - 1..db.end - 1 + crate::fabric::bounce_slots(2))
+}

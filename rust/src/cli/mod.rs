@@ -6,6 +6,7 @@
 //! cxl-ccl run [--config ccl.conf] [--primitive p] [--variant auto|v]
 //!             [--size 16M] [--ranks 3] [--devices 6] [--chunks 8]
 //!             [--iters 3] [--backend shm|sim] [--dtype f32|f16|bf16|u8]
+//!             [--pools P]                      # two-level fabric (v9)
 //! cxl-ccl tune [--ranks 3] [--sizes 64K,1M,16M] [--depths 1,2]
 //! cxl-ccl analyze [--ranks 3] [--sizes 64K,1M,16M] [--depths 1,2,4]
 //! cxl-ccl sweep [--primitive p] ...    # virtual-time size sweep vs IB
@@ -30,7 +31,7 @@ use crate::baseline::{collective_time, IbParams};
 use crate::bench_util::{banner, write_bench_json, Table};
 use crate::collectives::builder::{plan_collective, plan_collective_dtype};
 use crate::collectives::tuner::{
-    candidate_configs, predict_launch_secs, tune_decision, TunedDecision,
+    candidate_configs, predict_launch_secs, tune_decision, DecisionCache, TunedDecision,
 };
 use crate::collectives::{
     oracle, run_with_scratch, CclConfig, CclVariant, CollectiveBackend, CollectivePlan, Primitive,
@@ -38,14 +39,15 @@ use crate::collectives::{
 };
 use crate::config::{parse_ccl, KvFile, RunConfig};
 use crate::exec::Communicator;
+use crate::fabric::{self, run_all_ranks, FabricWorld, PoolSet};
 use crate::group::control::{control_word_slots, CTRL_SLOTS, GROUP_CTRL_SLOTS};
 use crate::group::{Bootstrap, CollectiveFuture, CommWorld};
 use crate::kvcache::{kv_slots_for, serve as kvserve, ServeConfig, ServeReport};
 use crate::pool::PoolLayout;
 use crate::sim::SimFabric;
-use crate::tensor::{views_f32, views_f32_mut, Dtype, Tensor};
+use crate::tensor::{f32_to_bf16, f32_to_f16, views_f32, views_f32_mut, Dtype, Tensor};
 use crate::topology::ClusterSpec;
-use crate::train::{FsdpTrainer, TrainConfig};
+use crate::train::{run_pool_train, FsdpTrainer, PoolTrainConfig, TrainConfig};
 use crate::util::size::{fmt_bytes, fmt_time, parse_size};
 use crate::util::{fnv1a64, SplitMix64};
 use anyhow::{bail, ensure, Context, Result};
@@ -128,7 +130,10 @@ fn print_help() {
          run    [--config F] [--primitive p] [--variant auto|all|aggregate|naive]\n         \
                 [--size 16M] [--ranks 3] [--devices 6] [--chunks 8] [--iters 3]\n         \
                 [--backend shm|sim] [--dtype f32|f16|bf16|u8] [--pipeline-depth N]\n         \
-                [--bootstrap local|pool:<path> --rank R --world N]\n  \
+                [--bootstrap local|pool:<path> --rank R --world N]\n         \
+                [--pools P]   split --ranks into P pools and run the two-level\n         \
+                fabric in process (P=1 = flat reference, digest-diffable);\n         \
+                with --backend sim also prints the flat-vs-hier verdict\n  \
          tune   [--ranks 3] [--devices 6] [--dtype f32] [--sizes 64K,1M,16M]\n         \
                 [--depths 1,2]          offline tuner decision matrix\n  \
          analyze [--ranks 3] [--devices 6] [--sizes 64K,1M,16M] [--depths 1,2,4]\n         \
@@ -137,7 +142,10 @@ fn print_help() {
                 exits nonzero on any finding\n  \
          sweep  [--primitive p] [--ranks 3] [--max 1G]   virtual-time vs InfiniBand\n  \
          train  [--preset tiny|e2e] [--steps 40] [--variant auto] [--chunks 8]\n         \
-                [--buckets 2] [--pipeline-depth 2]\n  \
+                [--buckets 2] [--pipeline-depth 2]\n         \
+                [--bootstrap pool:<path> --rank R --world N [--params 4K]]\n         \
+                process-per-rank FSDP smoke printing a cross-rank-diffable\n         \
+                train digest\n  \
          serve  [--sessions 2M] [--requests 4M] [--zipf 1.05] [--pages 4096]\n         \
                 [--page-size 4K] [--seed N]     Zipf KV-cache sweep in virtual time\n         \
                 [--bootstrap pool:<path> --rank R --world 2]   real 2-process\n         \
@@ -248,6 +256,16 @@ fn cmd_info() -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let bootstrap = args.get_or("bootstrap", "local");
+    if let Some(p) = args.get("pools") {
+        let pools: usize = p.parse().context("--pools must be an integer")?;
+        ensure!(
+            bootstrap == "local",
+            "--pools runs the in-process hierarchical executor; it cannot combine with \
+             --bootstrap {bootstrap:?} (multi-process fabrics rendezvous per pool with \
+             Bootstrap::with_pool_topology)"
+        );
+        return cmd_run_hier(args, pools);
+    }
     if let Some(path) = bootstrap.strip_prefix("pool:") {
         return cmd_run_pool(args, path);
     }
@@ -567,6 +585,193 @@ fn deterministic_payload(rank: usize, elems: usize, dtype: Dtype) -> Result<Tens
             Tensor::from_bytes(bytes, dtype)
         }
     }
+}
+
+/// Small-integer payloads for the hierarchical runner: values in `0..11`
+/// are exact in every float dtype and their sums are order-independent,
+/// so the flat and two-level results match **bitwise** — which is what
+/// the CI smoke step diffs across `--pools` values.
+fn deterministic_int_payload(rank: usize, elems: usize, dtype: Dtype) -> Result<Tensor> {
+    let vals = (0..elems).map(|i| ((rank * 7 + i) % 11) as f32);
+    match dtype {
+        Dtype::F32 => Ok(Tensor::from_f32(&vals.collect::<Vec<_>>())),
+        Dtype::F16 => {
+            let bytes: Vec<u8> = vals.flat_map(|v| f32_to_f16(v).to_le_bytes()).collect();
+            Tensor::from_bytes(bytes, Dtype::F16)
+        }
+        Dtype::Bf16 => {
+            let bytes: Vec<u8> = vals.flat_map(|v| f32_to_bf16(v).to_le_bytes()).collect();
+            Tensor::from_bytes(bytes, Dtype::Bf16)
+        }
+        Dtype::U8 => {
+            let bytes: Vec<u8> = (0..elems).map(|i| ((rank * 7 + i) % 11) as u8).collect();
+            Tensor::from_bytes(bytes, Dtype::U8)
+        }
+    }
+}
+
+/// Every hierarchical iteration must leave all ranks bitwise-identical
+/// (the supported primitives replicate their result), and every
+/// iteration must reproduce the first's digest.
+fn settle_hier_iter(i: usize, outs: &[Tensor], digest: &mut u64) -> Result<()> {
+    let d = fnv1a64(outs[0].as_bytes());
+    for (r, o) in outs.iter().enumerate().skip(1) {
+        ensure!(
+            fnv1a64(o.as_bytes()) == d,
+            "rank {r} disagrees with rank 0 at iteration {i}"
+        );
+    }
+    if i > 0 {
+        ensure!(
+            d == *digest,
+            "iteration {i} produced digest 0x{d:016x}, previous iterations 0x{digest:016x}"
+        );
+    }
+    *digest = d;
+    Ok(())
+}
+
+/// `run --pools P`: one in-process world of `--ranks` global ranks split
+/// into `P` equal pools. `P >= 2` stages AllReduce/AllGather/Broadcast
+/// through [`FabricWorld`] (intra legs per pool, leaders' exchange
+/// between them); `P = 1` runs the flat reference over the identical
+/// integer payloads — so the `result fnv64` lines are directly diffable
+/// across `--pools` values, which is exactly what the CI smoke step
+/// does. `--backend sim` additionally prints the flat-vs-hierarchical
+/// virtual-time verdict from [`fabric::tune_fabric`] (memoized under
+/// pool-count-keyed decision lines).
+fn cmd_run_hier(args: &Args, pools: usize) -> Result<()> {
+    let rc = build_run_config(args)?;
+    let dtype = Dtype::parse(&args.get_or("dtype", "f32"))?;
+    let backend_name = args.get_or("backend", "shm");
+    ensure!(
+        backend_name == "shm" || backend_name == "sim",
+        "unknown backend {backend_name:?} (shm|sim)"
+    );
+    let world = rc.spec.nranks;
+    ensure!(pools >= 1, "--pools must be at least 1");
+    ensure!(
+        world % pools == 0 && world / pools >= 2,
+        "--pools {pools} must split --ranks {world} into equal pools of >= 2 ranks"
+    );
+    let per_pool = world / pools;
+    let depth: usize = args.get_or("pipeline-depth", "1").parse()?;
+    ensure!(depth >= 1, "--pipeline-depth must be at least 1");
+    let n = rc.n_elems(dtype);
+    if rc.primitive.reduces() && dtype == Dtype::U8 {
+        bail!("{} cannot reduce u8 buffers (no reduction semantics)", rc.primitive);
+    }
+    banner(&format!(
+        "run[{backend_name}, pools x{pools}]: {} {} {dtype} | {} per rank | {} ranks as \
+         {pools} pool(s) of {per_pool}, {} devices per pool",
+        rc.primitive,
+        rc.ccl.describe(),
+        fmt_bytes(n * dtype.size_bytes()),
+        world,
+        rc.spec.ndevices,
+    ));
+    let sends: Vec<Tensor> = (0..world)
+        .map(|r| deterministic_int_payload(r, rc.primitive.send_elems(n, world), dtype))
+        .collect::<Result<_>>()?;
+    let recv_elems = rc.primitive.recv_elems(n, world);
+    let mut digest = 0u64;
+    let t0 = Instant::now();
+    if pools >= 2 {
+        let set = PoolSet::uniform(pools, per_pool)?;
+        let fw = FabricWorld::for_message(set.clone(), rc.spec.ndevices, depth, n, dtype)?;
+        for i in 0..rc.iters {
+            let outs = fw.run_primitive(rc.primitive, &rc.ccl, n, &sends)?;
+            settle_hier_iter(i, &outs, &mut digest)?;
+        }
+        fw.flush()?;
+        audit_bounce_region(&set, rc.spec.ndevices, depth, n, dtype)?;
+    } else {
+        let mut spec = rc.spec.clone();
+        let worst = depth * world * rc.msg_bytes + spec.db_region_size + (1 << 20);
+        if spec.device_capacity < worst {
+            spec.device_capacity = worst.next_power_of_two();
+        }
+        let boot = Bootstrap::thread_local(spec).with_pipeline_depth(depth);
+        let pg = CommWorld::init(boot, 0, world)?;
+        for i in 0..rc.iters {
+            let outs = run_all_ranks(&pg, rc.primitive, &rc.ccl, n, sends.clone())?;
+            settle_hier_iter(i, &outs, &mut digest)?;
+        }
+        pg.flush()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} launches in {} ({} per launch)",
+        rc.iters,
+        fmt_time(wall),
+        fmt_time(wall / rc.iters.max(1) as f64)
+    );
+    println!(
+        "{} result fnv64=0x{digest:016x} ({recv_elems} elems, dtype {dtype})",
+        rc.primitive
+    );
+    if backend_name == "sim" && pools >= 2 {
+        let set = PoolSet::uniform(pools, per_pool)?;
+        let pool_spec = fabric::sim::pool_spec_for(&set, rc.spec.ndevices, 1, n, dtype);
+        let cache = DecisionCache::new();
+        let choice = fabric::tune_fabric(
+            &cache,
+            &set,
+            &rc.spec,
+            &pool_spec,
+            rc.primitive,
+            rc.ccl.root,
+            n,
+            dtype,
+            &IbParams::default(),
+        )?;
+        println!(
+            "fabric tuner: flat {} vs hierarchical {} (intra {} + inter {}) -> {}",
+            fmt_time(choice.flat.predicted_secs),
+            fmt_time(choice.hier.predicted_secs),
+            fmt_time(choice.hier_time.intra_secs),
+            fmt_time(choice.hier_time.inter_secs),
+            if choice.hierarchical { "two-level" } else { "flat" },
+        );
+    }
+    Ok(())
+}
+
+/// Layout-level audit of the shared-file deployment shape this fabric
+/// would take: carve the bounce region off the top of a pool's doorbell
+/// region and check it against the intra ring slices and control words —
+/// the same [`analysis::check_interpool_windows`] pass CI runs over
+/// seeded mutants.
+fn audit_bounce_region(
+    set: &PoolSet,
+    ndevices: usize,
+    depth: usize,
+    n_elems: usize,
+    dtype: Dtype,
+) -> Result<()> {
+    let pool_spec = fabric::sim::pool_spec_for(set, ndevices, depth, n_elems, dtype);
+    let full = PoolLayout::from_spec(&pool_spec)?;
+    let total = full.doorbell_slots();
+    let bounce = fabric::bounce_window(total, 0, fabric::bounce_slots(set.npools()))?;
+    let windowed = full.with_doorbell_window(GROUP_CTRL_SLOTS, bounce.start - GROUP_CTRL_SLOTS)?;
+    let slices = windowed
+        .pipeline_slices(depth)
+        .unwrap_or_else(|_| vec![windowed.clone()]);
+    let ctrl = control_word_slots(0, depth);
+    let diags = analysis::check_interpool_windows(&bounce, &slices, &ctrl, &(0..0), total);
+    ensure!(
+        diags.is_empty(),
+        "inter-pool bounce region audit found {} issue(s):\n{}",
+        diags.len(),
+        analysis::report(&diags)
+    );
+    println!(
+        "inter-pool bounce audit: clean ({} slots at [{}, {}))",
+        bounce.len(),
+        bounce.start,
+        bounce.end
+    );
+    Ok(())
 }
 
 /// `run --bootstrap pool:<path> --rank R --world N`: this process is ONE
@@ -913,6 +1118,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let bootstrap = args.get_or("bootstrap", "local");
+    if let Some(path) = bootstrap.strip_prefix("pool:") {
+        return cmd_train_pool(args, path);
+    }
+    ensure!(
+        bootstrap == "local",
+        "--bootstrap must be local or pool:<path>, got {bootstrap:?}"
+    );
     let cfg = TrainConfig {
         preset: args.get_or("preset", "tiny"),
         steps: args.get_or("steps", "40").parse()?,
@@ -936,6 +1149,47 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
     })?;
+    Ok(())
+}
+
+/// `train --bootstrap pool:<path> --rank R --world N`: process-per-rank
+/// FSDP smoke over the shared pool — the PJRT-free synthetic trainer
+/// from [`crate::train::pool`]. Every rank prints per-step losses and a
+/// closing `train digest fnv64=…` line that is identical across ranks
+/// (the final AllGather reads the same pool bytes everywhere), which the
+/// CI pool-train smoke diffs.
+fn cmd_train_pool(args: &Args, path: &str) -> Result<()> {
+    let world: usize = args
+        .get("world")
+        .context("--bootstrap pool:<path> needs --world N (total ranks)")?
+        .parse()?;
+    let rank: usize = args
+        .get("rank")
+        .context("--bootstrap pool:<path> needs --rank R (this process's rank)")?
+        .parse()?;
+    let cfg = PoolTrainConfig {
+        steps: args.get_or("steps", "4").parse()?,
+        params: parse_size(&args.get_or("params", "4K")).map_err(|e| anyhow::anyhow!(e))?,
+        buckets: args.get_or("buckets", "2").parse()?,
+        ccl: parse_ccl(args.get("variant"), args.get_or("chunks", "8").parse()?)?,
+        ndevices: args.get_or("devices", "6").parse()?,
+        pipeline_depth: args.get_or("pipeline-depth", "1").parse()?,
+        lr: args.get_or("lr", "0.05").parse()?,
+    };
+    banner(&format!(
+        "train[pool:{path}]: rank {rank}/{world} | {} params x {} steps | {} buckets | {}",
+        cfg.params,
+        cfg.steps,
+        cfg.buckets,
+        cfg.ccl.describe(),
+    ));
+    let report = run_pool_train(path, rank, world, &cfg, |step, loss| {
+        println!("step {step:<5} loss {loss:<9.4}");
+    })?;
+    println!(
+        "train digest fnv64=0x{:016x} ({} params, loss {:.4})",
+        report.digest, report.params, report.last_loss
+    );
     Ok(())
 }
 

@@ -97,6 +97,11 @@ pub struct DecisionKey {
     pub ring_depth: usize,
     pub n_elems: usize,
     pub dtype: Dtype,
+    /// Pool count the decision was made for: 1 for flat worlds, the
+    /// [`PoolSet`](crate::fabric::PoolSet) pool count for hierarchical
+    /// ones — the same shape resolved flat and two-level must occupy
+    /// distinct cache lines (v9).
+    pub npools: usize,
 }
 
 impl DecisionKey {
@@ -123,7 +128,14 @@ impl DecisionKey {
             ring_depth: ring_depth.max(1),
             n_elems,
             dtype,
+            npools: 1,
         }
+    }
+
+    /// Key the decision by pool count (hierarchical worlds; flat is 1).
+    pub fn with_npools(mut self, npools: usize) -> Self {
+        self.npools = npools.max(1);
+        self
     }
 }
 
@@ -292,6 +304,22 @@ impl DecisionCache {
     ) -> Result<TunedDecision> {
         let ring_depth = if ring.is_empty() { 1 } else { ring.len() };
         let key = DecisionKey::new(primitive, root, spec, layout, ring_depth, n_elems, dtype);
+        self.get_or_tune_keyed(key, || {
+            tune_decision(spec, layout, ring, primitive, root, n_elems, dtype)
+        })
+    }
+
+    /// [`DecisionCache::get_or_tune`] with an explicit key and sweep: the
+    /// entry point for decisions whose key carries more than a flat shape
+    /// — the hierarchical fabric memoizes its flat-vs-two-level choices
+    /// here under pool-count-keyed keys
+    /// ([`DecisionKey::with_npools`]). `tune` must be a pure function of
+    /// the key so racing resolvers produce identical decisions.
+    pub fn get_or_tune_keyed(
+        &self,
+        key: DecisionKey,
+        tune: impl FnOnce() -> Result<TunedDecision>,
+    ) -> Result<TunedDecision> {
         {
             let mut st = self.state.lock().unwrap();
             st.tick += 1;
@@ -305,7 +333,7 @@ impl DecisionCache {
         // Sweep outside the lock (it simulates every candidate); racing
         // resolvers compute identical decisions, so the first insert wins
         // and its vacancy decides hit-vs-miss.
-        let d = tune_decision(spec, layout, ring, primitive, root, n_elems, dtype)?;
+        let d = tune()?;
         let mut st = self.state.lock().unwrap();
         st.tick += 1;
         let tick = st.tick;
@@ -484,6 +512,29 @@ mod tests {
         }
         assert_eq!(cache.len(), 2, "depth-1 and depth-2 decisions are distinct shapes");
         assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn pool_count_is_part_of_the_key() {
+        let (spec, layout) = paper_setup();
+        let k1 = DecisionKey::new(Primitive::AllReduce, 0, &spec, &layout, 1, 3 * 256, Dtype::F32);
+        let k2 = k1.with_npools(2);
+        assert_ne!(k1, k2, "npools must separate otherwise-identical shapes");
+        let cache = DecisionCache::new();
+        let flat = cache
+            .get_or_tune(&spec, &layout, &[], Primitive::AllReduce, 0, 3 * 256, Dtype::F32)
+            .unwrap();
+        // A hierarchical decision for the same flat shape occupies its own
+        // cache line under the pool-count key.
+        let hier = cache
+            .get_or_tune_keyed(k2, || {
+                Ok(TunedDecision { predicted_secs: flat.predicted_secs / 2.0, ..flat })
+            })
+            .unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.peek(&k1), Some(flat));
+        assert_eq!(cache.peek(&k2), Some(hier));
+        assert_ne!(cache.peek(&k1), cache.peek(&k2));
     }
 
     #[test]

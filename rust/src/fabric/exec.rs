@@ -1,0 +1,449 @@
+//! The real two-level executor: a [`FabricWorld`] composes one
+//! [`ProcessGroup`] per pool (the intra legs, over each pool's own shared
+//! memory) with a leaders' group whose pool **is** the designated
+//! inter-pool bounce region. Every stage is an ordinary validated launch
+//! — the same `ValidPlan`/epoch-ring/`CollectiveFuture` pipeline flat
+//! worlds use — so the hierarchy adds no new execution surface, only
+//! composition.
+//!
+//! Stage decompositions (P pools × L ranks, `n` elements):
+//!
+//! - **AllReduce**: ReduceScatter-intra → Gather-intra to the leader
+//!   (bounce staging) → AllReduce-inter over the leaders → Scatter-intra
+//!   from the leader → AllGather-intra.
+//! - **AllGather**: AllGather-intra → AllGather-inter over pool blocks
+//!   (contiguous ascending spans make pool-block concatenation equal the
+//!   flat global-rank order) → Broadcast-intra of the full result.
+//! - **Broadcast**: Broadcast-intra in the root's pool → Broadcast-inter
+//!   over the leaders → Broadcast-intra in every other pool.
+//!
+//! Copy-only stages preserve bytes exactly, so hierarchical AllGather and
+//! Broadcast are bitwise-identical to flat for **any** payload. For
+//! AllReduce the flat planner accumulates in per-rank rotated order, so
+//! bitwise equality holds exactly when the arithmetic is order-exact —
+//! integer-valued payloads within the dtype's exact range, which is what
+//! `tests/multipool.rs` pins across F32/F16, depths 1/2, and 2–4 pools.
+
+use super::PoolSet;
+use crate::collectives::{CclConfig, Primitive};
+use crate::group::{Bootstrap, CollectiveFuture, CommWorld, ProcessGroup};
+use crate::tensor::{Dtype, Tensor};
+use crate::topology::ClusterSpec;
+use anyhow::{bail, ensure, Result};
+
+/// Drive one primitive across **every** rank of a thread-local group and
+/// wait the results, in rank order. This is the synchronous stage driver
+/// the two-level algorithms are built from (also used by the CLI's flat
+/// reference path, so hierarchical and flat digests come off the same
+/// launch surface).
+pub fn run_all_ranks(
+    pg: &ProcessGroup,
+    primitive: Primitive,
+    cfg: &CclConfig,
+    n_elems: usize,
+    sends: Vec<Tensor>,
+) -> Result<Vec<Tensor>> {
+    let nr = pg.world_size();
+    ensure!(
+        sends.len() == nr,
+        "run_all_ranks needs one send tensor per rank ({} != {nr})",
+        sends.len()
+    );
+    let dtype = sends[0].dtype();
+    let recv_elems = primitive.recv_elems(n_elems, nr);
+    let futs: Vec<CollectiveFuture<'_>> = sends
+        .into_iter()
+        .enumerate()
+        .map(|(r, s)| {
+            pg.collective_rank(r, primitive, cfg, n_elems, s, Tensor::zeros(dtype, recv_elems))
+        })
+        .collect::<Result<_>>()?;
+    futs.into_iter().map(|f| f.wait().map(|(t, _w)| t)).collect()
+}
+
+/// One world spanning several pools: the generalization of a flat
+/// [`CommWorld`] the v9 ROADMAP item asked for. Holds P intra-pool
+/// process groups plus the leaders' inter-pool group, and runs the
+/// two-level algorithms across them.
+pub struct FabricWorld {
+    set: PoolSet,
+    intra: Vec<ProcessGroup>,
+    inter: ProcessGroup,
+    depth: usize,
+}
+
+impl FabricWorld {
+    /// Build a fabric from explicit per-pool and inter-pool specs.
+    /// `pool_spec.nranks` must equal the (uniform) ranks-per-pool,
+    /// `inter_spec.nranks` the pool count. `depth` is the epoch-ring
+    /// pipeline depth every constituent group is built with (best-effort,
+    /// exactly like flat thread-local groups).
+    pub fn new(
+        set: PoolSet,
+        pool_spec: ClusterSpec,
+        inter_spec: ClusterSpec,
+        depth: usize,
+    ) -> Result<Self> {
+        ensure!(
+            set.npools() >= 2,
+            "a FabricWorld needs at least 2 pools (use a flat ProcessGroup for one)"
+        );
+        ensure!(
+            set.is_uniform(),
+            "the two-level planner needs uniform pools (equal ranks per pool); got spans \
+             of different lengths"
+        );
+        let per_pool = set.pool(0).ranks.len();
+        ensure!(
+            pool_spec.nranks == per_pool,
+            "pool_spec.nranks ({}) must match ranks-per-pool ({per_pool})",
+            pool_spec.nranks
+        );
+        ensure!(
+            inter_spec.nranks == set.npools(),
+            "inter_spec.nranks ({}) must match the pool count ({})",
+            inter_spec.nranks,
+            set.npools()
+        );
+        let intra = (0..set.npools())
+            .map(|_| {
+                CommWorld::init(
+                    Bootstrap::thread_local(pool_spec.clone()).with_pipeline_depth(depth),
+                    0,
+                    per_pool,
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let inter = CommWorld::init(
+            Bootstrap::thread_local(inter_spec).with_pipeline_depth(depth),
+            0,
+            set.npools(),
+        )?;
+        Ok(Self { set, intra, inter, depth })
+    }
+
+    /// Size both levels for launches up to `n_elems × dtype`: the largest
+    /// buffer any stage moves is the fully gathered `world × n` result
+    /// (hierarchical AllGather's broadcast leg), so both specs get
+    /// capacity for it at the configured pipeline depth.
+    pub fn for_message(
+        set: PoolSet,
+        ndevices: usize,
+        depth: usize,
+        n_elems: usize,
+        dtype: Dtype,
+    ) -> Result<Self> {
+        ensure!(set.npools() >= 2 && set.is_uniform(), "need >= 2 uniform pools");
+        let per_pool = set.pool(0).ranks.len();
+        let full_bytes = set.world_size() * n_elems * dtype.size_bytes();
+        let mut pool_spec = ClusterSpec::new(per_pool, ndevices, 64 << 20);
+        let worst = depth.max(1) * per_pool * full_bytes + pool_spec.db_region_size + (1 << 20);
+        if pool_spec.device_capacity < worst {
+            pool_spec.device_capacity = worst.next_power_of_two();
+        }
+        let mut inter_spec = ClusterSpec::new(set.npools(), ndevices, 64 << 20);
+        let worst = depth.max(1) * set.npools() * full_bytes + inter_spec.db_region_size + (1 << 20);
+        if inter_spec.device_capacity < worst {
+            inter_spec.device_capacity = worst.next_power_of_two();
+        }
+        Self::new(set, pool_spec, inter_spec, depth)
+    }
+
+    pub fn set(&self) -> &PoolSet {
+        &self.set
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.set.world_size()
+    }
+
+    /// The pipeline depth the constituent groups were asked for.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The leaders' group — its pool is the designated inter-pool bounce
+    /// region.
+    pub fn inter_group(&self) -> &ProcessGroup {
+        &self.inter
+    }
+
+    pub fn intra_group(&self, pool: usize) -> &ProcessGroup {
+        &self.intra[pool]
+    }
+
+    fn leader_local(&self, pool: usize) -> usize {
+        let p = self.set.pool(pool);
+        p.leader - p.ranks.start
+    }
+
+    /// Clone the slice of `sends` belonging to one pool.
+    fn pool_sends(&self, pool: usize, sends: &[Tensor]) -> Vec<Tensor> {
+        let span = &self.set.pool(pool).ranks;
+        sends[span.start..span.end].to_vec()
+    }
+
+    /// Dispatch a supported primitive (Broadcast roots from `cfg.root`).
+    pub fn run_primitive(
+        &self,
+        primitive: Primitive,
+        cfg: &CclConfig,
+        n_elems: usize,
+        sends: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        match primitive {
+            Primitive::AllReduce => self.all_reduce(cfg, n_elems, sends),
+            Primitive::AllGather => self.all_gather(cfg, n_elems, sends),
+            Primitive::Broadcast => self.broadcast(cfg, n_elems, sends),
+            other => bail!(
+                "the two-level planner supports AllReduce, AllGather and Broadcast; {other} \
+                 is intra-pool only"
+            ),
+        }
+    }
+
+    /// Two-level AllReduce: ReduceScatter-intra → Gather-intra to the
+    /// leader → AllReduce-inter over the leaders → Scatter-intra →
+    /// AllGather-intra. Returns every global rank's `n_elems` result.
+    pub fn all_reduce(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        sends: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let (world, np, per_pool) =
+            (self.set.world_size(), self.set.npools(), self.set.pool(0).ranks.len());
+        ensure!(sends.len() == world, "need one send per global rank");
+        ensure!(
+            n_elems % per_pool == 0,
+            "AllReduce over a fabric needs n_elems ({n_elems}) divisible by ranks-per-pool \
+             ({per_pool}) for the intra ReduceScatter leg"
+        );
+        let seg = n_elems / per_pool;
+        // Stage 1+2, per pool: partial-sum segments, then stage them at
+        // the leader (the full pool-partial vector, in segment order).
+        let mut leader_partials = Vec::with_capacity(np);
+        for p in 0..np {
+            let rs = run_all_ranks(
+                &self.intra[p],
+                Primitive::ReduceScatter,
+                cfg,
+                n_elems,
+                self.pool_sends(p, sends),
+            )?;
+            let root = self.leader_local(p);
+            let gathered = run_all_ranks(
+                &self.intra[p],
+                Primitive::Gather,
+                &cfg.with_root(root),
+                seg,
+                rs,
+            )?;
+            leader_partials.push(gathered.into_iter().nth(root).unwrap());
+        }
+        // Stage 3: the inter-pool exchange leg over the bounce region.
+        let reduced =
+            run_all_ranks(&self.inter, Primitive::AllReduce, cfg, n_elems, leader_partials)?;
+        // Stage 4+5, per pool: hand segments back out, then AllGather the
+        // globally reduced vector to every member.
+        let mut out: Vec<Option<Tensor>> = (0..world).map(|_| None).collect();
+        for (p, full) in reduced.into_iter().enumerate() {
+            let root = self.leader_local(p);
+            let dtype = full.dtype();
+            let scatter_sends = (0..per_pool)
+                .map(|l| {
+                    if l == root {
+                        full.clone()
+                    } else {
+                        Tensor::zeros(dtype, Primitive::Scatter.send_elems(seg, per_pool))
+                    }
+                })
+                .collect();
+            let segs = run_all_ranks(
+                &self.intra[p],
+                Primitive::Scatter,
+                &cfg.with_root(root),
+                seg,
+                scatter_sends,
+            )?;
+            let ag = run_all_ranks(&self.intra[p], Primitive::AllGather, cfg, seg, segs)?;
+            let span = &self.set.pool(p).ranks;
+            for (l, t) in ag.into_iter().enumerate() {
+                out[span.start + l] = Some(t);
+            }
+        }
+        Ok(out.into_iter().map(|t| t.unwrap()).collect())
+    }
+
+    /// Two-level AllGather: AllGather-intra → AllGather-inter over pool
+    /// blocks → Broadcast-intra of the full result. Every global rank
+    /// receives all `world × n_elems`, in global rank order.
+    pub fn all_gather(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        sends: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let (world, np, per_pool) =
+            (self.set.world_size(), self.set.npools(), self.set.pool(0).ranks.len());
+        ensure!(sends.len() == world, "need one send per global rank");
+        // Stage 1: pool blocks (L×n, in local rank order).
+        let mut leader_blocks = Vec::with_capacity(np);
+        for p in 0..np {
+            let ag = run_all_ranks(
+                &self.intra[p],
+                Primitive::AllGather,
+                cfg,
+                n_elems,
+                self.pool_sends(p, sends),
+            )?;
+            leader_blocks.push(ag.into_iter().nth(self.leader_local(p)).unwrap());
+        }
+        // Stage 2: leaders exchange pool blocks; contiguous ascending
+        // spans make the concatenation the flat global-rank order.
+        let fulls = run_all_ranks(
+            &self.inter,
+            Primitive::AllGather,
+            cfg,
+            per_pool * n_elems,
+            leader_blocks,
+        )?;
+        // Stage 3: fan the full result out inside each pool.
+        let full_elems = world * n_elems;
+        let mut out: Vec<Option<Tensor>> = (0..world).map(|_| None).collect();
+        for (p, full) in fulls.into_iter().enumerate() {
+            let root = self.leader_local(p);
+            let dtype = full.dtype();
+            let bc_sends = (0..per_pool)
+                .map(|l| if l == root { full.clone() } else { Tensor::zeros(dtype, full_elems) })
+                .collect();
+            let bc = run_all_ranks(
+                &self.intra[p],
+                Primitive::Broadcast,
+                &cfg.with_root(root),
+                full_elems,
+                bc_sends,
+            )?;
+            let span = &self.set.pool(p).ranks;
+            for (l, t) in bc.into_iter().enumerate() {
+                out[span.start + l] = Some(t);
+            }
+        }
+        Ok(out.into_iter().map(|t| t.unwrap()).collect())
+    }
+
+    /// Two-level Broadcast from global rank `cfg.root`: intra in the
+    /// root's pool, inter over the leaders, intra everywhere else.
+    pub fn broadcast(
+        &self,
+        cfg: &CclConfig,
+        n_elems: usize,
+        sends: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let (world, np, per_pool) =
+            (self.set.world_size(), self.set.npools(), self.set.pool(0).ranks.len());
+        ensure!(sends.len() == world, "need one send per global rank");
+        let root = cfg.root;
+        let rp = self
+            .set
+            .pool_of(root)
+            .ok_or_else(|| anyhow::anyhow!("broadcast root {root} outside the world"))?;
+        let dtype = sends[root].dtype();
+        let mut out: Vec<Option<Tensor>> = (0..world).map(|_| None).collect();
+        // Stage 1: the root's pool.
+        let local_root = self.set.local_rank(root).unwrap();
+        let stage1 = run_all_ranks(
+            &self.intra[rp],
+            Primitive::Broadcast,
+            &cfg.with_root(local_root),
+            n_elems,
+            self.pool_sends(rp, sends),
+        )?;
+        let leader_data = stage1[self.leader_local(rp)].clone();
+        let span = self.set.pool(rp).ranks.clone();
+        for (l, t) in stage1.into_iter().enumerate() {
+            out[span.start + l] = Some(t);
+        }
+        // Stage 2: leaders, rooted at the root's pool.
+        let inter_sends = (0..np)
+            .map(|p| if p == rp { leader_data.clone() } else { Tensor::zeros(dtype, n_elems) })
+            .collect();
+        let inter = run_all_ranks(
+            &self.inter,
+            Primitive::Broadcast,
+            &cfg.with_root(rp),
+            n_elems,
+            inter_sends,
+        )?;
+        // Stage 3: every other pool, rooted at its leader.
+        for (p, data) in inter.into_iter().enumerate() {
+            if p == rp {
+                continue;
+            }
+            let lroot = self.leader_local(p);
+            let bc_sends = (0..per_pool)
+                .map(|l| if l == lroot { data.clone() } else { Tensor::zeros(dtype, n_elems) })
+                .collect();
+            let bc = run_all_ranks(
+                &self.intra[p],
+                Primitive::Broadcast,
+                &cfg.with_root(lroot),
+                n_elems,
+                bc_sends,
+            )?;
+            let span = &self.set.pool(p).ranks;
+            for (l, t) in bc.into_iter().enumerate() {
+                out[span.start + l] = Some(t);
+            }
+        }
+        Ok(out.into_iter().map(|t| t.unwrap()).collect())
+    }
+
+    /// Flush every constituent group's launch pipeline.
+    pub fn flush(&self) -> Result<()> {
+        for pg in &self.intra {
+            pg.flush()?;
+        }
+        self.inter.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CclVariant;
+
+    fn int_payload(rank: usize, elems: usize) -> Tensor {
+        let v: Vec<f32> = (0..elems).map(|i| ((rank * 7 + i) % 11) as f32).collect();
+        Tensor::from_f32(&v)
+    }
+
+    #[test]
+    fn rejects_non_uniform_and_single_pool_sets() {
+        let spec = ClusterSpec::new(2, 2, 8 << 20);
+        let ispec = ClusterSpec::new(2, 2, 8 << 20);
+        let lopsided = PoolSet::new(vec![
+            super::super::PoolDesc { pool_id: 0, ranks: 0..2, leader: 0 },
+            super::super::PoolDesc { pool_id: 1, ranks: 2..5, leader: 2 },
+        ])
+        .unwrap();
+        assert!(FabricWorld::new(lopsided, spec.clone(), ispec.clone(), 1).is_err());
+        let single = PoolSet::uniform(1, 2).unwrap();
+        assert!(FabricWorld::new(single, spec, ispec, 1).is_err());
+    }
+
+    #[test]
+    fn all_reduce_matches_the_elementwise_sum() {
+        let set = PoolSet::uniform(2, 2).unwrap();
+        let fw = FabricWorld::for_message(set, 2, 1, 64, Dtype::F32).unwrap();
+        let sends: Vec<Tensor> = (0..4).map(|r| int_payload(r, 64)).collect();
+        let cfg = CclVariant::All.config(1);
+        let outs = fw.all_reduce(&cfg, 64, &sends).unwrap();
+        let want: Vec<f32> = (0..64)
+            .map(|i| (0..4).map(|r| ((r * 7 + i) % 11) as f32).sum())
+            .collect();
+        for (r, out) in outs.iter().enumerate() {
+            assert_eq!(out.to_f32().unwrap(), want, "rank {r}");
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! Multi-pool hierarchical worlds (v9): one logical world spanning
+//! **several** CXL pools.
+//!
+//! One pool is one chassis — the paper's memory-centric collectives stop
+//! at the switch radix. This module is the rack-scale layer above that
+//! limit: a [`PoolSet`] describes how the world's ranks split into pools
+//! (per-pool rank span + a designated leader rank per pool), and the
+//! two-level machinery composes the existing intra-pool collectives with
+//! an explicit inter-pool exchange leg:
+//!
+//! ```text
+//!            pool 0                 pool 1                 pool 2
+//!   ┌─────────────────────┐ ┌─────────────────────┐ ┌─────────────────────┐
+//!   │ r0* r1  r2  r3      │ │ r4* r5  r6  r7      │ │ r8* r9  r10 r11     │
+//!   │  └── CXL pool ──┘   │ │  └── CXL pool ──┘   │ │  └── CXL pool ──┘   │
+//!   └────────┬────────────┘ └────────┬────────────┘ └────────┬────────────┘
+//!            │       leaders (*) exchange over the            │
+//!            └────────── inter-pool bounce region ────────────┘
+//! ```
+//!
+//! - [`exec::FabricWorld`] is the real executor: per-pool
+//!   [`ProcessGroup`](crate::group::ProcessGroup)s for the intra legs and
+//!   a leaders' group whose pool *is* the designated bounce region, all
+//!   launched through the same `ValidPlan`/epoch-ring/future pipeline as
+//!   flat worlds.
+//! - [`sim`] is the virtual-time model: intra legs through
+//!   [`SimFabric`](crate::sim::SimFabric) (pools run in parallel on their
+//!   own devices), the leader exchange through
+//!   [`baseline::ib`](crate::baseline)'s cost model — and a flat-vs-
+//!   hierarchical chooser memoized in a
+//!   [`DecisionCache`](crate::collectives::tuner::DecisionCache) under
+//!   pool-count-keyed decision keys.
+//!
+//! The [`PoolSet::fingerprint`] feeds the pool rendezvous layout hash, so
+//! two mappers configured with different pool topologies fail fast
+//! instead of desyncing; [`bounce_window`] is the shared-file carve the
+//! static analyzer audits via
+//! [`check_interpool_windows`](crate::analysis::check_interpool_windows).
+
+pub mod exec;
+pub mod sim;
+
+pub use exec::{run_all_ranks, FabricWorld};
+pub use sim::{flat_launch_secs, hier_launch_secs, tune_fabric, FabricChoice, HierTime};
+
+use crate::util::fnv1a64;
+use anyhow::{ensure, Result};
+use std::ops::Range;
+
+/// One pool of a multi-pool world: a contiguous span of global ranks
+/// sharing one CXL pool, with one member designated as the pool's leader
+/// for the inter-pool exchange leg.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolDesc {
+    /// Position of this pool in the set (also the leader's rank in the
+    /// leaders' group).
+    pub pool_id: usize,
+    /// Global ranks `[start, end)` living in this pool.
+    pub ranks: Range<usize>,
+    /// The global rank (inside `ranks`) that stands for this pool on the
+    /// inter-pool leg.
+    pub leader: usize,
+}
+
+/// The multi-pool topology descriptor: how a world's global ranks split
+/// into pools. Spans must be contiguous, ascending, and cover
+/// `0..world_size` without gaps — that invariant is what makes the
+/// hierarchical AllGather's pool-block concatenation equal the flat
+/// global-rank order (and the bitwise-equality pins possible at all).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolSet {
+    pools: Vec<PoolDesc>,
+}
+
+impl PoolSet {
+    /// Validate and seal a descriptor. Every pool needs at least two
+    /// ranks (a one-rank "pool" has no intra collective), its leader must
+    /// live inside its span, and the spans must tile `0..world`.
+    pub fn new(pools: Vec<PoolDesc>) -> Result<Self> {
+        ensure!(!pools.is_empty(), "a PoolSet needs at least one pool");
+        let mut next = 0usize;
+        for (i, p) in pools.iter().enumerate() {
+            ensure!(
+                p.pool_id == i,
+                "pool_id {} at position {i}: ids must be 0..npools in order",
+                p.pool_id
+            );
+            ensure!(
+                p.ranks.start == next,
+                "pool {i} starts at rank {} but the previous span ends at {next} — spans \
+                 must be contiguous and ascending",
+                p.ranks.start
+            );
+            ensure!(
+                p.ranks.len() >= 2,
+                "pool {i} spans {} rank(s); every pool needs at least 2 (an intra-pool \
+                 collective needs peers)",
+                p.ranks.len()
+            );
+            ensure!(
+                p.ranks.contains(&p.leader),
+                "pool {i}'s leader (global rank {}) is outside its span {:?}",
+                p.leader,
+                p.ranks
+            );
+            next = p.ranks.end;
+        }
+        Ok(Self { pools })
+    }
+
+    /// The common case: `npools` equal pools of `ranks_per_pool`, each
+    /// led by the first rank of its span.
+    pub fn uniform(npools: usize, ranks_per_pool: usize) -> Result<Self> {
+        ensure!(npools >= 1, "need at least one pool");
+        let pools = (0..npools)
+            .map(|i| PoolDesc {
+                pool_id: i,
+                ranks: i * ranks_per_pool..(i + 1) * ranks_per_pool,
+                leader: i * ranks_per_pool,
+            })
+            .collect();
+        Self::new(pools)
+    }
+
+    pub fn npools(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.pools.last().map(|p| p.ranks.end).unwrap_or(0)
+    }
+
+    pub fn pools(&self) -> &[PoolDesc] {
+        &self.pools
+    }
+
+    pub fn pool(&self, i: usize) -> &PoolDesc {
+        &self.pools[i]
+    }
+
+    /// Which pool a global rank lives in.
+    pub fn pool_of(&self, global_rank: usize) -> Option<usize> {
+        self.pools.iter().position(|p| p.ranks.contains(&global_rank))
+    }
+
+    /// A global rank's rank *inside* its pool.
+    pub fn local_rank(&self, global_rank: usize) -> Option<usize> {
+        let p = self.pool_of(global_rank)?;
+        Some(global_rank - self.pools[p].ranks.start)
+    }
+
+    /// The leaders' global ranks, in pool order — rank `p` of the
+    /// inter-pool group is pool `p`'s leader.
+    pub fn leaders(&self) -> Vec<usize> {
+        self.pools.iter().map(|p| p.leader).collect()
+    }
+
+    /// True when every pool spans the same number of ranks — required by
+    /// the two-level planner (the inter leg's contributions must be
+    /// uniform).
+    pub fn is_uniform(&self) -> bool {
+        let l = self.pools[0].ranks.len();
+        self.pools.iter().all(|p| p.ranks.len() == l)
+    }
+
+    /// Topology fingerprint folded into the pool rendezvous layout hash
+    /// (flat worlds pass 0): two mappers joining one pool file with
+    /// different pool maps — different spans, leaders, or pool counts —
+    /// must fail fast at rendezvous, never desync mid-launch.
+    pub fn fingerprint(&self) -> u64 {
+        let mut buf = Vec::with_capacity(8 + self.pools.len() * 24);
+        buf.extend_from_slice(&(self.pools.len() as u64).to_le_bytes());
+        for p in &self.pools {
+            buf.extend_from_slice(&(p.ranks.start as u64).to_le_bytes());
+            buf.extend_from_slice(&(p.ranks.end as u64).to_le_bytes());
+            buf.extend_from_slice(&(p.leader as u64).to_le_bytes());
+        }
+        fnv1a64(&buf)
+    }
+}
+
+/// Doorbell slots the inter-pool bounce region reserves for `nleaders`
+/// leaders in a shared-file deployment: a group-control-sized prefix for
+/// the leaders' own launch/epoch words plus a publish/ack doorbell pair
+/// per leader.
+pub fn bounce_slots(nleaders: usize) -> usize {
+    crate::group::control::GROUP_CTRL_SLOTS + 2 * nleaders
+}
+
+/// Absolute slot range a shared-pool deployment reserves for the
+/// inter-pool bounce region: carved from the top of the doorbell region,
+/// directly **below** the KV reserve (which owns the topmost `kv_slots`).
+/// The carve must leave the intra-pool plan windows above it intact;
+/// [`check_interpool_windows`](crate::analysis::check_interpool_windows)
+/// is the audit that holds that line.
+pub fn bounce_window(total_slots: usize, kv_slots: usize, slots: usize) -> Result<Range<usize>> {
+    ensure!(slots >= 1, "a bounce region needs at least one slot");
+    ensure!(
+        kv_slots + slots <= total_slots,
+        "doorbell region too small: {total_slots} slots cannot hold a {slots}-slot bounce \
+         region below a {kv_slots}-slot KV reserve"
+    );
+    let end = total_slots - kv_slots;
+    Ok(end - slots..end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_set_tiles_the_world() {
+        let s = PoolSet::uniform(3, 4).unwrap();
+        assert_eq!(s.npools(), 3);
+        assert_eq!(s.world_size(), 12);
+        assert_eq!(s.leaders(), vec![0, 4, 8]);
+        assert_eq!(s.pool_of(5), Some(1));
+        assert_eq!(s.local_rank(5), Some(1));
+        assert_eq!(s.pool_of(12), None);
+        assert!(s.is_uniform());
+    }
+
+    #[test]
+    fn rejects_gaps_overlaps_and_stray_leaders() {
+        // Gap between spans.
+        let gap = vec![
+            PoolDesc { pool_id: 0, ranks: 0..2, leader: 0 },
+            PoolDesc { pool_id: 1, ranks: 3..5, leader: 3 },
+        ];
+        assert!(PoolSet::new(gap).is_err());
+        // Overlapping spans.
+        let overlap = vec![
+            PoolDesc { pool_id: 0, ranks: 0..3, leader: 0 },
+            PoolDesc { pool_id: 1, ranks: 2..4, leader: 2 },
+        ];
+        assert!(PoolSet::new(overlap).is_err());
+        // Leader outside its span.
+        let stray = vec![
+            PoolDesc { pool_id: 0, ranks: 0..2, leader: 0 },
+            PoolDesc { pool_id: 1, ranks: 2..4, leader: 0 },
+        ];
+        assert!(PoolSet::new(stray).is_err());
+        // One-rank pool.
+        let lonely = vec![PoolDesc { pool_id: 0, ranks: 0..1, leader: 0 }];
+        assert!(PoolSet::new(lonely).is_err());
+        // Out-of-order pool ids.
+        let ids = vec![
+            PoolDesc { pool_id: 1, ranks: 0..2, leader: 0 },
+            PoolDesc { pool_id: 0, ranks: 2..4, leader: 2 },
+        ];
+        assert!(PoolSet::new(ids).is_err());
+    }
+
+    #[test]
+    fn fingerprint_separates_topologies() {
+        let a = PoolSet::uniform(2, 4).unwrap().fingerprint();
+        assert_ne!(a, PoolSet::uniform(4, 2).unwrap().fingerprint(), "pool count");
+        assert_ne!(a, PoolSet::uniform(2, 3).unwrap().fingerprint(), "span length");
+        // Same spans, different leader.
+        let mut moved = PoolSet::uniform(2, 4).unwrap();
+        moved.pools[1].leader = 5;
+        assert_ne!(a, moved.fingerprint(), "leader placement");
+        // And none of them collide with the flat sentinel.
+        assert_ne!(a, 0);
+    }
+
+    #[test]
+    fn bounce_carve_sits_below_the_kv_reserve() {
+        let w = bounce_window(1024, 48, bounce_slots(4)).unwrap();
+        assert_eq!(w.end, 1024 - 48);
+        assert_eq!(w.len(), bounce_slots(4));
+        // Without a KV reserve the carve reaches the region top.
+        let w = bounce_window(1024, 0, 72).unwrap();
+        assert_eq!(w.end, 1024);
+        // Too small to hold both reserves.
+        assert!(bounce_window(64, 32, 64).is_err());
+    }
+}

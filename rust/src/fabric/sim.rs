@@ -1,0 +1,303 @@
+//! Virtual-time model of two-level launches: the intra legs run through
+//! [`SimFabric`](crate::sim::SimFabric) (via
+//! [`predict_launch_secs`](crate::collectives::tuner::predict_launch_secs),
+//! i.e. `simulate_pipelined` on real `ValidPlan`s), the leader exchange
+//! through [`baseline::ib`](crate::baseline)'s cost model — one pool is
+//! one chassis, so the only way between pools is the network.
+//!
+//! Pools own their devices, so the P intra legs of a stage run in
+//! parallel: a uniform fabric's intra time is one pool's time, and the
+//! hierarchical makespan is the serial chain of stage times. That is the
+//! whole rack-scale argument in one line — a flat world crams `P × L`
+//! ranks through one chassis's devices while the fabric pays one
+//! L-rank leg plus a P-rank network exchange — and
+//! `benches/fig10_scalability.rs` pins the crossover in
+//! `BENCH_multipool.json`.
+
+use super::PoolSet;
+use crate::baseline::{collective_time, IbParams};
+use crate::collectives::tuner::{
+    predict_launch_secs, tune_decision, DecisionCache, DecisionKey, TunedDecision,
+};
+use crate::collectives::{CclConfig, Primitive};
+use crate::pool::PoolLayout;
+use crate::tensor::Dtype;
+use crate::topology::ClusterSpec;
+use anyhow::{bail, Result};
+
+/// A hierarchical launch's virtual time, split by level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HierTime {
+    /// Serial chain of intra-pool stage times (pools run in parallel, so
+    /// each stage counts one pool's time).
+    pub intra_secs: f64,
+    /// The leaders' network exchange.
+    pub inter_secs: f64,
+}
+
+impl HierTime {
+    pub fn total(&self) -> f64 {
+        self.intra_secs + self.inter_secs
+    }
+}
+
+/// Per-pool spec sized for hierarchical launches up to `n_elems ×
+/// dtype`: same capacity discipline as
+/// [`FabricWorld::for_message`](super::FabricWorld::for_message), so the
+/// sim models the layouts the executor actually builds.
+pub fn pool_spec_for(
+    set: &PoolSet,
+    ndevices: usize,
+    depth: usize,
+    n_elems: usize,
+    dtype: Dtype,
+) -> ClusterSpec {
+    let per_pool = set.pool(0).ranks.len();
+    let full_bytes = set.world_size() * n_elems * dtype.size_bytes();
+    let mut spec = ClusterSpec::new(per_pool, ndevices, 64 << 20);
+    let worst = depth.max(1) * per_pool * full_bytes + spec.db_region_size + (1 << 20);
+    if spec.device_capacity < worst {
+        spec.device_capacity = worst.next_power_of_two();
+    }
+    spec
+}
+
+/// One intra-pool stage's predicted per-launch seconds (auto configs
+/// resolve through the tuner sweep, fixed ones plan directly).
+fn stage_secs(
+    spec: &ClusterSpec,
+    layout: &PoolLayout,
+    primitive: Primitive,
+    cfg: &CclConfig,
+    n_elems: usize,
+    dtype: Dtype,
+) -> Result<f64> {
+    if cfg.is_auto() {
+        let d = tune_decision(spec, layout, &[], primitive, cfg.root, n_elems, dtype)?;
+        Ok(d.predicted_secs)
+    } else {
+        predict_launch_secs(spec, layout, &[], primitive, cfg, n_elems, dtype)
+    }
+}
+
+/// Flat reference: one pool, `spec.nranks` ranks, one launch.
+pub fn flat_launch_secs(
+    spec: &ClusterSpec,
+    primitive: Primitive,
+    cfg: &CclConfig,
+    n_elems: usize,
+    dtype: Dtype,
+) -> Result<f64> {
+    let layout = PoolLayout::from_spec(spec)?;
+    stage_secs(spec, &layout, primitive, cfg, n_elems, dtype)
+}
+
+/// The leaders' exchange leg through the IB cost model. `n_bytes`
+/// conventions follow [`collective_time`]: per-rank payload bytes.
+fn inter_leg_secs(
+    set: &PoolSet,
+    primitive: Primitive,
+    n_elems: usize,
+    dtype: Dtype,
+    ib: &IbParams,
+) -> Result<f64> {
+    let np = set.npools();
+    let per_pool = set.pool(0).ranks.len();
+    let b = dtype.size_bytes();
+    Ok(match primitive {
+        Primitive::AllReduce => collective_time(Primitive::AllReduce, n_elems * b, np, ib),
+        // Each leader contributes its whole pool block.
+        Primitive::AllGather => {
+            collective_time(Primitive::AllGather, per_pool * n_elems * b, np, ib)
+        }
+        Primitive::Broadcast => collective_time(Primitive::Broadcast, n_elems * b, np, ib),
+        other => bail!("no inter-pool leg for {other}"),
+    })
+}
+
+/// Virtual time of one hierarchical launch over `set`, staged exactly as
+/// [`FabricWorld`](super::FabricWorld) executes it. `pool_spec` is the
+/// per-pool topology (see [`pool_spec_for`]); the inter leg prices
+/// through `ib`.
+pub fn hier_launch_secs(
+    set: &PoolSet,
+    pool_spec: &ClusterSpec,
+    primitive: Primitive,
+    cfg: &CclConfig,
+    n_elems: usize,
+    dtype: Dtype,
+    ib: &IbParams,
+) -> Result<HierTime> {
+    let per_pool = set.pool(0).ranks.len();
+    let layout = PoolLayout::from_spec(pool_spec)?;
+    // (primitive, n_elems) per intra stage, in execution order.
+    let stages: Vec<(Primitive, usize)> = match primitive {
+        Primitive::AllReduce => {
+            let seg = n_elems / per_pool;
+            vec![
+                (Primitive::ReduceScatter, n_elems),
+                (Primitive::Gather, seg),
+                (Primitive::Scatter, seg),
+                (Primitive::AllGather, seg),
+            ]
+        }
+        Primitive::AllGather => vec![
+            (Primitive::AllGather, n_elems),
+            (Primitive::Broadcast, set.world_size() * n_elems),
+        ],
+        Primitive::Broadcast => {
+            // Root pool's fan-out, then (after the inter leg) the rest —
+            // the non-root pools run in parallel, so one counts.
+            vec![(Primitive::Broadcast, n_elems), (Primitive::Broadcast, n_elems)]
+        }
+        other => bail!(
+            "the two-level planner supports AllReduce, AllGather and Broadcast; {other} is \
+             intra-pool only"
+        ),
+    };
+    let mut intra_secs = 0.0;
+    for (p, n) in stages {
+        intra_secs += stage_secs(pool_spec, &layout, p, cfg, n, dtype)?;
+    }
+    let inter_secs = inter_leg_secs(set, primitive, n_elems, dtype, ib)?;
+    Ok(HierTime { intra_secs, inter_secs })
+}
+
+/// The fabric-level tuning verdict for one launch shape: run it flat, or
+/// two-level over this pool set?
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricChoice {
+    /// True when the two-level path is predicted faster.
+    pub hierarchical: bool,
+    /// The flat decision (npools = 1 cache line).
+    pub flat: TunedDecision,
+    /// The hierarchical decision (pool-count cache line): `cfg` is the
+    /// intra-leg config, `predicted_secs` the full two-level launch.
+    pub hier: TunedDecision,
+    /// The hierarchical time, split by level.
+    pub hier_time: HierTime,
+}
+
+/// Decide flat-vs-hierarchical for one launch shape, memoized in `cache`
+/// under pool-count-keyed [`DecisionKey`]s — the launch-surface threading
+/// the v9 tentpole asks for: the same `(primitive, size, dtype)` shape
+/// occupies one cache line per pool count.
+#[allow(clippy::too_many_arguments)]
+pub fn tune_fabric(
+    cache: &DecisionCache,
+    set: &PoolSet,
+    flat_spec: &ClusterSpec,
+    pool_spec: &ClusterSpec,
+    primitive: Primitive,
+    root: usize,
+    n_elems: usize,
+    dtype: Dtype,
+    ib: &IbParams,
+) -> Result<FabricChoice> {
+    let flat_layout = PoolLayout::from_spec(flat_spec)?;
+    let flat = cache.get_or_tune(flat_spec, &flat_layout, &[], primitive, root, n_elems, dtype)?;
+    let pool_layout = PoolLayout::from_spec(pool_spec)?;
+    let key = DecisionKey::new(primitive, root, pool_spec, &pool_layout, 1, n_elems, dtype)
+        .with_npools(set.npools());
+    let hier = cache.get_or_tune_keyed(key, || {
+        // Tune the intra-leg config, then price the full two-level chain
+        // with it (a pure function of the key, as the cache contract
+        // requires).
+        let d = tune_decision(pool_spec, &pool_layout, &[], primitive, root, n_elems, dtype)?;
+        Ok(TunedDecision {
+            cfg: d.cfg,
+            predicted_secs: hier_launch_secs(set, pool_spec, primitive, &d.cfg, n_elems, dtype, ib)?
+                .total(),
+            ring_depth: 1,
+            feasible: d.feasible,
+        })
+    })?;
+    // The inter leg is analytic, so a cache hit recovers the level split
+    // without re-running the intra sweep.
+    let inter_secs = inter_leg_secs(set, primitive, n_elems, dtype, ib)?;
+    let hier_time = HierTime { intra_secs: hier.predicted_secs - inter_secs, inter_secs };
+    Ok(FabricChoice {
+        hierarchical: hier.predicted_secs < flat.predicted_secs,
+        flat,
+        hier,
+        hier_time,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CclVariant;
+
+    #[test]
+    fn hierarchical_beats_flat_for_bandwidth_bound_allreduce() {
+        // 8 ranks as 2 pools of 4 vs 8 ranks contending on one chassis's
+        // six devices, 16 MiB per rank — the acceptance-criteria shape.
+        let set = PoolSet::uniform(2, 4).unwrap();
+        let n = (16 << 20) / 4;
+        let cfg = CclConfig::auto();
+        let pool_spec = pool_spec_for(&set, 6, 1, n, Dtype::F32);
+        let mut flat_spec = ClusterSpec::new(8, 6, 64 << 20);
+        let worst = 8 * n * 4 + flat_spec.db_region_size + (1 << 20);
+        if flat_spec.device_capacity < worst {
+            flat_spec.device_capacity = worst.next_power_of_two();
+        }
+        let flat =
+            flat_launch_secs(&flat_spec, Primitive::AllReduce, &cfg, n, Dtype::F32).unwrap();
+        let hier = hier_launch_secs(
+            &set,
+            &pool_spec,
+            Primitive::AllReduce,
+            &cfg,
+            n,
+            Dtype::F32,
+            &IbParams::default(),
+        )
+        .unwrap();
+        assert!(
+            hier.total() < flat,
+            "two-level AllReduce ({:.3} ms) must beat flat ({:.3} ms) at 2 pools for \
+             bandwidth-bound sizes",
+            hier.total() * 1e3,
+            flat * 1e3
+        );
+    }
+
+    #[test]
+    fn tune_fabric_occupies_one_cache_line_per_pool_count() {
+        let set = PoolSet::uniform(2, 2).unwrap();
+        let n = 4 * 1024;
+        let pool_spec = pool_spec_for(&set, 6, 1, n, Dtype::F32);
+        let flat_spec = ClusterSpec::new(4, 6, 64 << 20);
+        let cache = DecisionCache::new();
+        let ib = IbParams::default();
+        let c1 = tune_fabric(
+            &cache,
+            &set,
+            &flat_spec,
+            &pool_spec,
+            Primitive::AllReduce,
+            0,
+            n,
+            Dtype::F32,
+            &ib,
+        )
+        .unwrap();
+        assert_eq!(cache.len(), 2, "flat + hierarchical lines");
+        let c2 = tune_fabric(
+            &cache,
+            &set,
+            &flat_spec,
+            &pool_spec,
+            Primitive::AllReduce,
+            0,
+            n,
+            Dtype::F32,
+            &ib,
+        )
+        .unwrap();
+        assert_eq!(c1, c2, "memoized choice must be stable");
+        assert_eq!(cache.len(), 2);
+        assert!(cache.stats().hits >= 2, "second call must hit both lines");
+    }
+}

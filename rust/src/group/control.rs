@@ -61,7 +61,7 @@ pub const POOL_MAGIC: u32 = 0x4343_4C50;
 /// doorbell region and excluded from the group's plan window; the reserve
 /// size joins the layout hash, since mappers configured with different
 /// reserves would carve different plan windows.
-pub const POOL_PROTO_VERSION: u32 = 7;
+pub const POOL_PROTO_VERSION: u32 = 8;
 /// Header slots at the very base of the doorbell region.
 pub const HEADER_SLOTS: usize = 8;
 /// One rendezvous slot per global rank.
@@ -213,14 +213,21 @@ impl PoolControl {
     /// (`kv_slots`, 0 without one): the reserve is carved from the top of
     /// the doorbell region *before* the plan window, so mappers configured
     /// with different reserves would carve different plan windows — and
-    /// different epoch slices — silently.
+    /// different epoch slices — silently. Since v9 it covers the
+    /// multi-pool topology fingerprint
+    /// ([`PoolSet::fingerprint`](crate::fabric::PoolSet::fingerprint), 0
+    /// for flat worlds): a mapper that believes this pool is pool 1 of a
+    /// 2×4 fabric and one that believes it is flat — or pool 0 of a 4×2
+    /// fabric — would stage different two-level plans over the same
+    /// bytes, so they must never rendezvous.
     pub(crate) fn layout_hash(
         spec: &ClusterSpec,
         pool_len: usize,
         ring_depth: usize,
         kv_slots: usize,
+        pool_fingerprint: u64,
     ) -> u64 {
-        let mut buf = [0u8; 72];
+        let mut buf = [0u8; 80];
         for (i, v) in [
             spec.nranks as u64,
             spec.ndevices as u64,
@@ -231,6 +238,7 @@ impl PoolControl {
             ring_depth as u64,
             crate::collectives::tuner::TUNER_ALGO_VERSION,
             kv_slots as u64,
+            pool_fingerprint,
         ]
         .into_iter()
         .enumerate()
@@ -250,6 +258,7 @@ impl PoolControl {
         world: usize,
         ring_depth: usize,
         kv_slots: usize,
+        pool_fingerprint: u64,
         timeout: Duration,
     ) -> Result<Self> {
         ensure!(
@@ -257,7 +266,7 @@ impl PoolControl {
             "pool bootstrap supports at most {MAX_POOL_WORLD} ranks, got {world}"
         );
         ensure!(rank < world, "rank {rank} out of range ({world} ranks)");
-        let hash = Self::layout_hash(spec, pool.len(), ring_depth, kv_slots);
+        let hash = Self::layout_hash(spec, pool.len(), ring_depth, kv_slots, pool_fingerprint);
         let mut ctrl = Self { pool, generation: 0 };
         ctrl.generation = if rank == 0 {
             ctrl.initialize(hash, world, spec.db_region_size)?
@@ -443,10 +452,10 @@ mod tests {
             let s0 = s.clone();
             let s1 = s.clone();
             let h0 = sc.spawn(move || {
-                PoolControl::rendezvous(p0, &s0, 0, 2, 2, 0, Duration::from_secs(10))
+                PoolControl::rendezvous(p0, &s0, 0, 2, 2, 0, 0, Duration::from_secs(10))
             });
             let h1 = sc.spawn(move || {
-                PoolControl::rendezvous(p1, &s1, 1, 2, 2, 0, Duration::from_secs(10))
+                PoolControl::rendezvous(p1, &s1, 1, 2, 2, 0, 0, Duration::from_secs(10))
             });
             (h0.join().unwrap(), h1.join().unwrap())
         });
@@ -477,6 +486,7 @@ mod tests {
             2,
             2,
             0,
+            0,
             Duration::from_millis(300),
         )
         .unwrap_err();
@@ -489,6 +499,7 @@ mod tests {
             1,
             2,
             3,
+            0,
             0,
             Duration::from_millis(300),
         )
@@ -503,6 +514,22 @@ mod tests {
             2,
             2,
             128,
+            0,
+            Duration::from_millis(300),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("layout hash mismatch"), "{err:#}");
+        // v9: so is a different multi-pool topology — a mapper that
+        // believes this pool is one leg of a 2-pool fabric must never
+        // rendezvous with a flat world over the same file.
+        let err = PoolControl::rendezvous(
+            Arc::clone(&pool),
+            &s,
+            1,
+            2,
+            2,
+            0,
+            crate::fabric::PoolSet::uniform(2, 2).unwrap().fingerprint(),
             Duration::from_millis(300),
         )
         .unwrap_err();
@@ -517,7 +544,7 @@ mod tests {
             pool: Arc::clone(pool),
             generation: 0,
         };
-        let hash = PoolControl::layout_hash(s, pool.len(), 2, 0);
+        let hash = PoolControl::layout_hash(s, pool.len(), 2, 0, 0);
         let gen = ctrl.initialize(hash, 2, s.db_region_size).unwrap();
         PoolControl {
             pool: Arc::clone(pool),
@@ -550,17 +577,18 @@ mod tests {
             let s1 = s.clone();
             let s1b = s.clone();
             let h0 = sc.spawn(move || {
-                PoolControl::rendezvous(p0, &s0, 0, 2, 2, 0, Duration::from_secs(10))
+                PoolControl::rendezvous(p0, &s0, 0, 2, 2, 0, 0, Duration::from_secs(10))
             });
             let h1 = sc.spawn(move || {
-                PoolControl::rendezvous(p1, &s1, 1, 2, 2, 0, Duration::from_secs(10))
+                PoolControl::rendezvous(p1, &s1, 1, 2, 2, 0, 0, Duration::from_secs(10))
             });
             h0.join().unwrap().unwrap();
             h1.join().unwrap().unwrap();
             // World complete; a third process claiming rank 1 again must be
             // told so (short timeout keeps the test fast).
-            let err = PoolControl::rendezvous(p1b, &s1b, 1, 2, 2, 0, Duration::from_millis(200))
-                .unwrap_err();
+            let err =
+                PoolControl::rendezvous(p1b, &s1b, 1, 2, 2, 0, 0, Duration::from_millis(200))
+                    .unwrap_err();
             assert!(format!("{err:#}").contains("already registered"), "{err:#}");
         });
     }
@@ -640,36 +668,55 @@ mod tests {
     #[test]
     fn hash_covers_every_layout_dimension() {
         let s = spec();
-        let base = PoolControl::layout_hash(&s, 6 << 20, 2, 0);
+        let base = PoolControl::layout_hash(&s, 6 << 20, 2, 0, 0);
         let mut t = s.clone();
         t.nranks = 3;
-        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2, 0), base);
+        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2, 0, 0), base);
         let mut t = s.clone();
         t.db_region_size = 64 * 256;
-        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2, 0), base);
-        assert_ne!(PoolControl::layout_hash(&s, 12 << 20, 2, 0), base);
+        assert_ne!(PoolControl::layout_hash(&t, 6 << 20, 2, 0, 0), base);
+        assert_ne!(PoolControl::layout_hash(&s, 12 << 20, 2, 0, 0), base);
         // v5: the configured ring depth is a layout dimension.
         for depth in [1usize, 3, 4, 8] {
-            assert_ne!(PoolControl::layout_hash(&s, 6 << 20, depth, 0), base, "depth {depth}");
+            assert_ne!(
+                PoolControl::layout_hash(&s, 6 << 20, depth, 0, 0),
+                base,
+                "depth {depth}"
+            );
         }
         // v7: the KV-cache reserve carves the plan window, so it is a
         // layout dimension too.
         for kv in [1usize, 16, 64] {
-            assert_ne!(PoolControl::layout_hash(&s, 6 << 20, 2, kv), base, "kv {kv}");
+            assert_ne!(PoolControl::layout_hash(&s, 6 << 20, 2, kv, 0), base, "kv {kv}");
         }
+        // v9: the multi-pool topology fingerprint — two distinct fabrics,
+        // and both distinct from flat (fingerprint 0).
+        let fp2 = crate::fabric::PoolSet::uniform(2, 2).unwrap().fingerprint();
+        let fp4 = crate::fabric::PoolSet::uniform(4, 2).unwrap().fingerprint();
+        assert_ne!(PoolControl::layout_hash(&s, 6 << 20, 2, 0, fp2), base, "2-pool fabric");
+        assert_ne!(PoolControl::layout_hash(&s, 6 << 20, 2, 0, fp4), base, "4-pool fabric");
+        assert_ne!(
+            PoolControl::layout_hash(&s, 6 << 20, 2, 0, fp2),
+            PoolControl::layout_hash(&s, 6 << 20, 2, 0, fp4),
+            "distinct fabrics"
+        );
     }
 
-    /// v6/v7: the tuner algorithm version and the KV-cache reserve are
-    /// folded into the fingerprint, so a build with a different sweep
-    /// (which could resolve `auto` launches to different plans) or a
-    /// mapper with a different reserve (which would carve a different plan
-    /// window) fails rendezvous. Pinned by mirroring the hash input
-    /// byte-for-byte: bump `TUNER_ALGO_VERSION` and this stays green, but
-    /// drop a field from the buffer and this catches the regression.
+    /// v6/v7/v9: the tuner algorithm version, the KV-cache reserve and
+    /// the multi-pool topology fingerprint are folded into the
+    /// fingerprint, so a build with a different sweep (which could
+    /// resolve `auto` launches to different plans), a mapper with a
+    /// different reserve (which would carve a different plan window), or
+    /// a mapper with a different pool map (which would stage different
+    /// two-level plans) fails rendezvous. Pinned by mirroring the hash
+    /// input byte-for-byte: bump `TUNER_ALGO_VERSION` and this stays
+    /// green, but drop a field from the buffer and this catches the
+    /// regression.
     #[test]
     fn hash_covers_the_tuner_algorithm_version_and_kv_reserve() {
         let s = spec();
-        let mut buf = [0u8; 72];
+        let fp = crate::fabric::PoolSet::uniform(2, 2).unwrap().fingerprint();
+        let mut buf = [0u8; 80];
         for (i, v) in [
             s.nranks as u64,
             s.ndevices as u64,
@@ -680,12 +727,13 @@ mod tests {
             2u64,
             crate::collectives::tuner::TUNER_ALGO_VERSION,
             48u64,
+            fp,
         ]
         .into_iter()
         .enumerate()
         {
             buf[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
         }
-        assert_eq!(PoolControl::layout_hash(&s, 6 << 20, 2, 48), crate::util::fnv1a64(&buf));
+        assert_eq!(PoolControl::layout_hash(&s, 6 << 20, 2, 48, fp), crate::util::fnv1a64(&buf));
     }
 }

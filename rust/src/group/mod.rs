@@ -121,6 +121,14 @@ pub enum Bootstrap {
         /// of the pool layout hash — every rank must configure the same
         /// reserve or rendezvous fails fast.
         kv_slots: usize,
+        /// Multi-pool topology fingerprint
+        /// ([`PoolSet::fingerprint`](crate::fabric::PoolSet::fingerprint);
+        /// 0 = flat world, the default). Part of the pool layout hash
+        /// (v9): when this pool is one leg of a hierarchical fabric, a
+        /// mapper configured with a different pool map — or none — must
+        /// fail rendezvous fast instead of staging mismatched two-level
+        /// plans over the same bytes.
+        pool_fingerprint: u64,
     },
 }
 
@@ -138,14 +146,15 @@ impl Bootstrap {
             join_timeout: Duration::from_secs(60),
             depth: None,
             kv_slots: 0,
+            pool_fingerprint: 0,
         }
     }
 
     /// Adjust the pool-rendezvous join timeout (no effect on ThreadLocal).
     pub fn with_join_timeout(self, join_timeout: Duration) -> Self {
         match self {
-            Bootstrap::Pool { path, spec, depth, kv_slots, .. } => {
-                Bootstrap::Pool { path, spec, join_timeout, depth, kv_slots }
+            Bootstrap::Pool { path, spec, depth, kv_slots, pool_fingerprint, .. } => {
+                Bootstrap::Pool { path, spec, join_timeout, depth, kv_slots, pool_fingerprint }
             }
             tl => tl,
         }
@@ -161,8 +170,15 @@ impl Bootstrap {
             Bootstrap::ThreadLocal { spec, kv_slots, .. } => {
                 Bootstrap::ThreadLocal { spec, depth: Some(n), kv_slots }
             }
-            Bootstrap::Pool { path, spec, join_timeout, kv_slots, .. } => {
-                Bootstrap::Pool { path, spec, join_timeout, depth: Some(n), kv_slots }
+            Bootstrap::Pool { path, spec, join_timeout, kv_slots, pool_fingerprint, .. } => {
+                Bootstrap::Pool {
+                    path,
+                    spec,
+                    join_timeout,
+                    depth: Some(n),
+                    kv_slots,
+                    pool_fingerprint,
+                }
             }
         }
     }
@@ -180,9 +196,37 @@ impl Bootstrap {
             Bootstrap::ThreadLocal { spec, depth, .. } => {
                 Bootstrap::ThreadLocal { spec, depth, kv_slots: slots }
             }
-            Bootstrap::Pool { path, spec, join_timeout, depth, .. } => {
-                Bootstrap::Pool { path, spec, join_timeout, depth, kv_slots: slots }
+            Bootstrap::Pool { path, spec, join_timeout, depth, pool_fingerprint, .. } => {
+                Bootstrap::Pool {
+                    path,
+                    spec,
+                    join_timeout,
+                    depth,
+                    kv_slots: slots,
+                    pool_fingerprint,
+                }
             }
+        }
+    }
+
+    /// Declare this pool to be one leg of a multi-pool fabric described
+    /// by `set` (v9). Pool rendezvous folds the topology fingerprint into
+    /// the layout hash, so every mapper of the shared file must declare
+    /// the *same* fabric — or none — to join. No effect on ThreadLocal
+    /// bootstraps (a thread-local world carries its topology in process).
+    pub fn with_pool_topology(self, set: &crate::fabric::PoolSet) -> Self {
+        match self {
+            Bootstrap::Pool { path, spec, join_timeout, depth, kv_slots, .. } => {
+                Bootstrap::Pool {
+                    path,
+                    spec,
+                    join_timeout,
+                    depth,
+                    kv_slots,
+                    pool_fingerprint: set.fingerprint(),
+                }
+            }
+            tl => tl,
         }
     }
 
@@ -218,8 +262,17 @@ impl CommWorld {
             Bootstrap::ThreadLocal { spec, depth, kv_slots } => {
                 Self::init_thread_local(spec, rank, depth, kv_slots)
             }
-            Bootstrap::Pool { path, spec, join_timeout, depth, kv_slots } => {
-                Self::init_pool(&path, spec, rank, world_size, join_timeout, depth, kv_slots)
+            Bootstrap::Pool { path, spec, join_timeout, depth, kv_slots, pool_fingerprint } => {
+                Self::init_pool(
+                    &path,
+                    spec,
+                    rank,
+                    world_size,
+                    join_timeout,
+                    depth,
+                    kv_slots,
+                    pool_fingerprint,
+                )
             }
         }
     }
@@ -256,6 +309,7 @@ impl CommWorld {
         ))
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn init_pool(
         path: &str,
         spec: ClusterSpec,
@@ -264,6 +318,7 @@ impl CommWorld {
         join_timeout: Duration,
         depth: Option<usize>,
         kv_slots: usize,
+        pool_fingerprint: u64,
     ) -> Result<ProcessGroup> {
         ensure!(
             world <= MAX_POOL_WORLD,
@@ -331,6 +386,7 @@ impl CommWorld {
             world,
             depth,
             kv_slots,
+            pool_fingerprint,
             join_timeout,
         )?;
         Ok(ProcessGroup::from_parts(

@@ -138,6 +138,41 @@
 //! `ccl serve` drives a seeded Zipf session stream over it — millions of
 //! virtual-time requests in sim mode, a digest-checked 2-process
 //! prefill/decode protocol in pool mode (see the README walkthrough).
+//!
+//! ## Hierarchical worlds (v9)
+//!
+//! One pool is one chassis; [`fabric`] is the rack-scale layer above it.
+//! A [`fabric::PoolSet`] maps the world's global ranks onto pools
+//! (contiguous ascending spans, one designated leader per pool) and a
+//! [`fabric::FabricWorld`] composes per-pool process groups with a
+//! leaders' group whose pool is the designated **inter-pool bounce
+//! region**:
+//!
+//! ```text
+//!            pool 0                 pool 1                 pool 2
+//!   ┌─────────────────────┐ ┌─────────────────────┐ ┌─────────────────────┐
+//!   │ r0* r1  r2  r3      │ │ r4* r5  r6  r7      │ │ r8* r9  r10 r11     │
+//!   │  └── CXL pool ──┘   │ │  └── CXL pool ──┘   │ │  └── CXL pool ──┘   │
+//!   └────────┬────────────┘ └────────┬────────────┘ └────────┬────────────┘
+//!            └──── leaders (*) exchange over the bounce region ────┘
+//! ```
+//!
+//! Two-level algorithms: AllReduce = ReduceScatter-intra → Gather-intra →
+//! AllReduce-inter → Scatter-intra → AllGather-intra; AllGather and
+//! Broadcast analogously. Every stage is an ordinary validated launch, so
+//! hierarchical worlds ride the same `ValidPlan`/epoch-ring/future
+//! pipeline as flat ones; `tests/multipool.rs` pins the two-level results
+//! **bitwise** against flat. The virtual-time side ([`fabric::sim`])
+//! prices intra legs through [`sim::SimFabric`] and the leader exchange
+//! through [`baseline`]'s IB model, and
+//! [`fabric::tune_fabric`] memoizes flat-vs-hierarchical choices in the
+//! [`collectives::DecisionCache`] under **pool-count-keyed** decision
+//! keys. The [`fabric::PoolSet::fingerprint`] feeds the pool rendezvous
+//! layout hash so mixed-topology mappers fail fast, and
+//! [`fabric::bounce_window`]'s shared-file carve is audited by
+//! [`analysis::check_interpool_windows`]. Quick start: `ccl run --pools 2
+//! --ranks 8 --backend sim`, or see the README "Hierarchical worlds"
+//! section.
 
 #![deny(unsafe_op_in_unsafe_fn)]
 
@@ -151,6 +186,7 @@ pub mod config;
 pub mod cost;
 pub mod doorbell;
 pub mod exec;
+pub mod fabric;
 pub mod group;
 pub mod interleave;
 pub mod kvcache;
@@ -170,6 +206,7 @@ pub mod prelude {
         ExecOutcome, PlanCache, Primitive, TuneMode, TunedDecision, ValidPlan,
     };
     pub use crate::exec::{Communicator, PendingOp, RankComm};
+    pub use crate::fabric::{FabricWorld, PoolDesc, PoolSet};
     pub use crate::group::{Bootstrap, CollectiveFuture, CommWorld, ProcessGroup};
     pub use crate::kvcache::{
         kv_slots_for, KvArena, KvCacheStats, KvExchange, PageRef, ServeConfig, ServeReport,

@@ -2,9 +2,15 @@
 //! the rust coordinator, with **all** inter-rank communication going through
 //! CXL-CCL (AllGather for parameters, ReduceScatter for gradients) and all
 //! compute going through the AOT artifacts via PJRT.
+//!
+//! [`pool`] is the v9 process-per-rank variant: the same comm pattern
+//! over a pool bootstrap, with a synthetic (PJRT-free) model so every
+//! rank's closing digest line is diffable in CI.
 
 pub mod data;
 pub mod fsdp;
+pub mod pool;
 
 pub use data::Corpus;
 pub use fsdp::{FsdpTrainer, StepReport, TrainConfig};
+pub use pool::{run_pool_train, PoolTrainConfig, PoolTrainReport};

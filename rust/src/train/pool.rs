@@ -1,0 +1,200 @@
+//! Process-per-rank FSDP smoke trainer over a pool bootstrap (v9): a
+//! PJRT-free mirror of [`FsdpTrainer`](super::FsdpTrainer)'s comm
+//! pattern — bucketed AllGather of parameter shards before "compute",
+//! bucketed ReduceScatter of per-rank gradient contributions after —
+//! with every tensor moving through the shared-pool
+//! [`ProcessGroup`](crate::group::ProcessGroup) this process
+//! rendezvoused into, one OS process (or test thread) per rank.
+//!
+//! The model is synthetic: parameters initialize deterministically and
+//! gradients are a pure function of `(rank, step, index, param)`, so the
+//! run needs no accelerator runtime at all. Determinism is the point —
+//! the final AllGather leaves every rank reading the same pool bytes, so
+//! the closing `train digest fnv64=…` line is identical across ranks,
+//! which the CI pool-train smoke pins by diffing the per-rank logs.
+
+use crate::collectives::{CclConfig, Primitive};
+use crate::group::{Bootstrap, CommWorld};
+use crate::tensor::{Dtype, Tensor};
+use crate::topology::ClusterSpec;
+use crate::util::fnv1a64;
+use anyhow::{ensure, Result};
+
+/// Launch shape of one pool-mode training run. Every rank must pass
+/// identical values — the derived [`ClusterSpec`] feeds the pool layout
+/// hash, so mismatched mappers fail rendezvous instead of desyncing.
+#[derive(Debug, Clone)]
+pub struct PoolTrainConfig {
+    pub steps: usize,
+    /// Requested total parameter count; rounded up so every rank holds
+    /// `buckets` equal bucket slices.
+    pub params: usize,
+    /// Comm buckets per shard (AllGather/ReduceScatter granularity).
+    pub buckets: usize,
+    pub ccl: CclConfig,
+    pub ndevices: usize,
+    pub pipeline_depth: usize,
+    pub lr: f32,
+}
+
+impl Default for PoolTrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 4,
+            params: 4096,
+            buckets: 2,
+            ccl: CclConfig::auto(),
+            ndevices: 6,
+            pipeline_depth: 1,
+            lr: 0.05,
+        }
+    }
+}
+
+/// What one rank's run produced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolTrainReport {
+    /// FNV-64 of the final full parameter vector's bytes — identical on
+    /// every rank (all ranks read the same pool bytes back).
+    pub digest: u64,
+    /// Actual (rounded-up) total parameter count.
+    pub params: usize,
+    pub last_loss: f32,
+}
+
+/// Deterministic initial value of global parameter `g` — any rank can
+/// recompute any shard's starting point.
+fn init_param(g: usize) -> f32 {
+    ((g % 97) as f32) * 0.01
+}
+
+/// Rank `rank`'s gradient contribution for global parameter `g` at
+/// `step`: rank-dependent (so ReduceScatter actually sums something) but
+/// a pure function of its inputs (so the run is reproducible).
+fn grad_contrib(rank: usize, step: usize, g: usize, p: f32) -> f32 {
+    0.1 * p + 0.001 * ((rank + 1) as f32) * (((g + step) % 13) as f32)
+}
+
+/// Run `cfg.steps` synthetic FSDP steps as rank `rank` of `world`,
+/// rendezvousing through the pool file at `path`. `on_step(step, loss)`
+/// fires after each step (the loss is computed from the gathered full
+/// parameters, so it is identical across ranks).
+pub fn run_pool_train(
+    path: &str,
+    rank: usize,
+    world: usize,
+    cfg: &PoolTrainConfig,
+    mut on_step: impl FnMut(usize, f32),
+) -> Result<PoolTrainReport> {
+    ensure!(world >= 2, "pool training needs at least 2 ranks");
+    ensure!(cfg.buckets >= 1, "need at least one comm bucket");
+    ensure!(cfg.steps >= 1, "need at least one step");
+    // Uniform slicing: per_bucket elements per (rank, bucket) cell.
+    let per_bucket = cfg.params.div_ceil(world * cfg.buckets).max(1);
+    let shard = per_bucket * cfg.buckets;
+    let total = shard * world;
+    // Same capacity discipline as the `run` launchers: the largest
+    // message is a ReduceScatter send of one full bucket row.
+    let msg_bytes = world * per_bucket * 4;
+    let mut spec = ClusterSpec::new(world, cfg.ndevices, 64 << 20);
+    let worst =
+        cfg.pipeline_depth.max(1) * world * msg_bytes + spec.db_region_size + (1 << 20);
+    if spec.device_capacity < worst {
+        spec.device_capacity = worst.next_power_of_two();
+    }
+    let boot = Bootstrap::pool(path, spec).with_pipeline_depth(cfg.pipeline_depth);
+    let pg = CommWorld::init(boot, rank, world)?;
+    let shard_base = rank * shard;
+    let mut shard_params: Vec<f32> =
+        (0..shard).map(|i| init_param(shard_base + i)).collect();
+    let mut full = vec![0.0f32; total];
+    let mut last_loss = 0.0f32;
+    for step in 1..=cfg.steps {
+        // FSDP forward half: AllGather every rank's shard slice, bucket
+        // by bucket, into the full parameter vector.
+        for b in 0..cfg.buckets {
+            let seg = b * per_bucket..(b + 1) * per_bucket;
+            let fut = pg.collective(
+                Primitive::AllGather,
+                &cfg.ccl,
+                per_bucket,
+                Tensor::from_f32(&shard_params[seg]),
+                Tensor::zeros(Dtype::F32, per_bucket * world),
+            )?;
+            let flat = fut.wait()?.0.to_f32()?;
+            for r in 0..world {
+                let dst = r * shard + b * per_bucket;
+                full[dst..dst + per_bucket]
+                    .copy_from_slice(&flat[r * per_bucket..(r + 1) * per_bucket]);
+            }
+        }
+        // "Compute": a loss every rank derives identically from the full
+        // vector, and this rank's gradient contribution over all of it.
+        let loss = full.iter().map(|p| p * p).sum::<f32>() / total as f32;
+        // FSDP backward half: ReduceScatter the contributions so each
+        // rank receives the summed gradient of its own shard slice.
+        for b in 0..cfg.buckets {
+            let mut send = vec![0.0f32; world * per_bucket];
+            for r in 0..world {
+                for i in 0..per_bucket {
+                    let g = r * shard + b * per_bucket + i;
+                    send[r * per_bucket + i] = grad_contrib(rank, step, g, full[g]);
+                }
+            }
+            let fut = pg.collective(
+                Primitive::ReduceScatter,
+                &cfg.ccl,
+                world * per_bucket,
+                Tensor::from_f32(&send),
+                Tensor::zeros(Dtype::F32, per_bucket),
+            )?;
+            let reduced = fut.wait()?.0.to_f32()?;
+            for (i, g) in reduced.iter().enumerate() {
+                shard_params[b * per_bucket + i] -= cfg.lr * g;
+            }
+        }
+        last_loss = loss;
+        on_step(step, loss);
+    }
+    // Closing AllGather: the digest every rank prints (and CI diffs) is
+    // of the final full vector's bytes, read back from the pool.
+    let fut = pg.collective(
+        Primitive::AllGather,
+        &cfg.ccl,
+        shard,
+        Tensor::from_f32(&shard_params),
+        Tensor::zeros(Dtype::F32, total),
+    )?;
+    let (out, _) = fut.wait()?;
+    pg.flush()?;
+    Ok(PoolTrainReport { digest: fnv1a64(out.as_bytes()), params: total, last_loss })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_rank_pool_training_converges_on_one_digest() {
+        let path = format!("/dev/shm/cxl_ccl_pooltrain_{}", std::process::id());
+        let _ = std::fs::remove_file(&path);
+        let cfg = PoolTrainConfig { steps: 3, params: 512, ..Default::default() };
+        let run_rank = |rank: usize| -> Result<(PoolTrainReport, Vec<f32>)> {
+            let mut losses = Vec::new();
+            let r = run_pool_train(&path, rank, 2, &cfg, |_, l| losses.push(l))?;
+            Ok((r, losses))
+        };
+        let (a, b) = std::thread::scope(|s| {
+            let h0 = s.spawn(|| run_rank(0));
+            let h1 = s.spawn(|| run_rank(1));
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        let ((ra, la), (rb, lb)) = (a.unwrap(), b.unwrap());
+        assert_eq!(ra, rb, "both ranks must report the identical digest and loss");
+        assert_eq!(la, lb, "per-step losses are a pure function of the gathered params");
+        assert_eq!(la.len(), 3);
+        assert_eq!(ra.params, 512);
+        assert_ne!(ra.digest, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+}

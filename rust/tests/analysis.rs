@@ -188,6 +188,57 @@ fn aliased_kvcache_arena_flagged_as_cross_slice_alias() {
     );
 }
 
+#[test]
+fn aliased_interpool_bounce_region_flagged_as_cross_slice_alias() {
+    let (_, base) = spec_and_layout();
+    let total = base.doorbell_slots();
+    // A fabric-shaped carve (v9): control prefix, plan window, bounce
+    // region for 2 leaders, 64-slot KV reserve off the top — the healthy
+    // arrangement from `fabric::bounce_window` audits clean.
+    let kv_slots = 64usize;
+    let bounce = cxl_ccl::fabric::bounce_window(total, kv_slots, cxl_ccl::fabric::bounce_slots(2))
+        .unwrap();
+    let windowed = base
+        .with_doorbell_window(GROUP_CTRL_SLOTS, bounce.start - GROUP_CTRL_SLOTS)
+        .unwrap();
+    let slices = windowed.pipeline_slices(2).unwrap();
+    let ctrl = control_word_slots(0, 2);
+    let kv = (total - kv_slots)..total;
+    assert!(
+        analysis::check_interpool_windows(&bounce, &slices, &ctrl, &kv, total).is_empty(),
+        "a bounce region between the plan window and the KV reserve must audit clean"
+    );
+    // The mutant slides the bounce region into the last slice's doorbell
+    // window — the bug a deployment that forgot to shrink the plan window
+    // would plant.
+    let aliased = mutations::alias_interpool_window(&slices).expect("depth-2 ring");
+    let diags =
+        analysis::check_interpool_windows(&aliased, &slices, &ctrl, &kv, total.max(aliased.end));
+    assert!(
+        diags.iter().any(|d| d.kind == DiagnosticKind::CrossSliceAlias && d.site.is_none()),
+        "a bounce region overlapping a slice window must alias; got:\n{}",
+        analysis::report(&diags)
+    );
+    // Landing on the KV reserve is an alias too: leader doorbells would
+    // corrupt arena control words.
+    let onto_kv = (total - kv_slots - 4)..(total - kv_slots + 4);
+    let diags = analysis::check_interpool_windows(&onto_kv, &slices, &ctrl, &kv, total);
+    assert!(
+        diags.iter().any(|d| d.kind == DiagnosticKind::CrossSliceAlias
+            && d.detail.contains("KV reserve")),
+        "a bounce region overlapping the KV reserve must alias; got:\n{}",
+        analysis::report(&diags)
+    );
+    // And running past the doorbell region is an escape, not an alias.
+    let escaped = (total - 8)..(total + 8);
+    let diags = analysis::check_interpool_windows(&escaped, &slices, &ctrl, &(0..0), total);
+    assert!(
+        diags.iter().any(|d| d.kind == DiagnosticKind::WindowEscape),
+        "an out-of-region bounce region must be a window escape; got:\n{}",
+        analysis::report(&diags)
+    );
+}
+
 /// The zero-findings regression: every plan the planners emit for every
 /// autotuner candidate, across primitives, dtypes, and ring depths 1 and
 /// 2, audits clean — including against the group-control word map a

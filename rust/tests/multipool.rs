@@ -1,0 +1,221 @@
+//! v9 acceptance pins for multi-pool hierarchical collectives.
+//!
+//! - Two-level AllReduce is **bitwise** identical to flat across
+//!   F32/F16, depths 1/2, and 2–4 pools (integer-valued payloads make
+//!   the float sums order-exact; the flat planner's rotated accumulation
+//!   order then cannot be told apart from the staged hierarchy).
+//! - Two-level AllGather and Broadcast are bitwise identical to flat for
+//!   **arbitrary** payloads (every stage is copy-only).
+//! - In virtual time, the hierarchical makespan beats flat at >= 2 pools
+//!   for bandwidth-bound sizes (the fig10 multipool bench pins the same
+//!   crossover into `BENCH_multipool.json`).
+//! - Pool rendezvous threads the fabric topology fingerprint: same-set
+//!   mappers join, mixed-topology mappers fail fast.
+
+use cxl_ccl::baseline::IbParams;
+use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::fabric::{self, run_all_ranks, FabricWorld, PoolSet};
+use cxl_ccl::group::{Bootstrap, CommWorld};
+use cxl_ccl::tensor::{f32_to_f16, Dtype, Tensor};
+use cxl_ccl::topology::ClusterSpec;
+use cxl_ccl::util::SplitMix64;
+use std::time::Duration;
+
+/// Integer-valued payload (`0..11`), exact and order-independent under
+/// summation in both F32 and F16 (world <= 8 keeps every partial sum
+/// far below f16's 2048 exact-integer ceiling).
+fn int_payload(rank: usize, elems: usize, dtype: Dtype) -> Tensor {
+    let vals: Vec<f32> = (0..elems).map(|i| ((rank * 7 + i) % 11) as f32).collect();
+    match dtype {
+        Dtype::F32 => Tensor::from_f32(&vals),
+        Dtype::F16 => {
+            let bytes: Vec<u8> =
+                vals.iter().flat_map(|v| f32_to_f16(*v).to_le_bytes()).collect();
+            Tensor::from_bytes(bytes, Dtype::F16).unwrap()
+        }
+        other => panic!("no integer payload for {other}"),
+    }
+}
+
+/// Arbitrary (non-integer) payload for the copy-only primitives.
+fn noise_payload(rank: usize, elems: usize) -> Tensor {
+    let mut v = vec![0.0f32; elems];
+    SplitMix64::new(0xFAB ^ rank as u64).fill_f32(&mut v);
+    Tensor::from_f32(&v)
+}
+
+/// Run `primitive` both ways — two-level over `pools` x `per_pool`, and
+/// flat over the same `sends` — and require bitwise-equal results on
+/// every global rank.
+fn assert_bitwise_vs_flat(
+    primitive: Primitive,
+    pools: usize,
+    per_pool: usize,
+    depth: usize,
+    n: usize,
+    root: usize,
+    sends: &[Tensor],
+) {
+    let world = pools * per_pool;
+    let dtype = sends[0].dtype();
+    let cfg = CclVariant::All.config(2).with_root(root);
+    let set = PoolSet::uniform(pools, per_pool).unwrap();
+    let fw = FabricWorld::for_message(set, 2, depth, n, dtype).unwrap();
+    let hier = fw.run_primitive(primitive, &cfg, n, sends).unwrap();
+    fw.flush().unwrap();
+    let spec = ClusterSpec::new(world, 6, 64 << 20);
+    let boot = Bootstrap::thread_local(spec).with_pipeline_depth(depth);
+    let pg = CommWorld::init(boot, 0, world).unwrap();
+    let flat = run_all_ranks(&pg, primitive, &cfg, n, sends.to_vec()).unwrap();
+    pg.flush().unwrap();
+    for r in 0..world {
+        assert_eq!(
+            hier[r].as_bytes(),
+            flat[r].as_bytes(),
+            "{primitive} {dtype}: rank {r} diverges at {pools}x{per_pool} depth {depth}"
+        );
+    }
+}
+
+#[test]
+fn two_level_all_reduce_is_bitwise_identical_to_flat() {
+    let n = 64;
+    for dtype in [Dtype::F32, Dtype::F16] {
+        for depth in [1usize, 2] {
+            for pools in [2usize, 3, 4] {
+                let per_pool = 2;
+                let world = pools * per_pool;
+                let sends: Vec<Tensor> =
+                    (0..world).map(|r| int_payload(r, n, dtype)).collect();
+                assert_bitwise_vs_flat(Primitive::AllReduce, pools, per_pool, depth, n, 0, &sends);
+            }
+        }
+    }
+    // Wider pools too: 2 x 4 exercises a leader mid-span gather fan-in.
+    let sends: Vec<Tensor> = (0..8).map(|r| int_payload(r, n, Dtype::F32)).collect();
+    assert_bitwise_vs_flat(Primitive::AllReduce, 2, 4, 1, n, 0, &sends);
+}
+
+#[test]
+fn two_level_all_gather_is_bitwise_identical_to_flat_for_any_payload() {
+    let n = 48;
+    for (pools, per_pool) in [(2usize, 3usize), (3, 2)] {
+        let world = pools * per_pool;
+        let sends: Vec<Tensor> = (0..world).map(|r| noise_payload(r, n)).collect();
+        assert_bitwise_vs_flat(Primitive::AllGather, pools, per_pool, 1, n, 0, &sends);
+    }
+}
+
+#[test]
+fn two_level_broadcast_is_bitwise_identical_to_flat_from_any_root_pool() {
+    let n = 48;
+    let (pools, per_pool) = (2usize, 3usize);
+    let world = pools * per_pool;
+    // Roots in pool 0, mid-span of pool 1, and a pool-1 non-leader.
+    for root in [0usize, 4, 5] {
+        let sends: Vec<Tensor> = (0..world).map(|r| noise_payload(r, n)).collect();
+        assert_bitwise_vs_flat(Primitive::Broadcast, pools, per_pool, 1, n, root, &sends);
+    }
+}
+
+#[test]
+fn hierarchical_makespan_beats_flat_at_two_and_four_pools() {
+    // The acceptance shape: bandwidth-bound AllReduce, pools of 4 ranks
+    // on their own 6 devices vs a flat world cramming every rank through
+    // one chassis's 6 devices.
+    let n = (16usize << 20) / 4;
+    let cfg = cxl_ccl::collectives::CclConfig::auto();
+    let ib = IbParams::default();
+    for pools in [2usize, 4] {
+        let set = PoolSet::uniform(pools, 4).unwrap();
+        let world = set.world_size();
+        let pool_spec = fabric::sim::pool_spec_for(&set, 6, 1, n, Dtype::F32);
+        let mut flat_spec = ClusterSpec::new(world, 6, 64 << 20);
+        let worst = world * n * 4 + flat_spec.db_region_size + (1 << 20);
+        if flat_spec.device_capacity < worst {
+            flat_spec.device_capacity = worst.next_power_of_two();
+        }
+        let flat =
+            fabric::flat_launch_secs(&flat_spec, Primitive::AllReduce, &cfg, n, Dtype::F32)
+                .unwrap();
+        let hier = fabric::hier_launch_secs(
+            &set,
+            &pool_spec,
+            Primitive::AllReduce,
+            &cfg,
+            n,
+            Dtype::F32,
+            &ib,
+        )
+        .unwrap();
+        assert!(
+            hier.total() < flat,
+            "{pools} pools: hierarchical {:.3} ms must beat flat {:.3} ms",
+            hier.total() * 1e3,
+            flat * 1e3
+        );
+    }
+}
+
+#[test]
+fn pool_rendezvous_accepts_matching_and_rejects_mixed_topologies() {
+    let set = PoolSet::uniform(2, 2).unwrap();
+    let mut spec = ClusterSpec::new(2, 2, 1 << 20);
+    spec.db_region_size = 64 * 512;
+
+    // Same declared fabric on both mappers: rendezvous completes and the
+    // group is fully usable.
+    let path = format!("/dev/shm/cxl_ccl_mp_ok_{}", std::process::id());
+    let _ = std::fs::remove_file(&path);
+    let run_rank = |rank: usize| {
+        let boot = Bootstrap::pool(&path, spec.clone())
+            .with_pool_topology(&set)
+            .with_join_timeout(Duration::from_secs(20));
+        let pg = CommWorld::init(boot, rank, 2)?;
+        let f = pg.collective(
+            Primitive::AllGather,
+            &CclVariant::All.config(2),
+            32,
+            Tensor::from_f32(&vec![rank as f32 + 1.0; 32]),
+            Tensor::zeros(Dtype::F32, 64),
+        )?;
+        let out = f.wait()?.0.to_f32()?;
+        pg.flush()?;
+        anyhow::Ok(out)
+    };
+    let (a, b) = std::thread::scope(|s| {
+        let h0 = s.spawn(|| run_rank(0));
+        let h1 = s.spawn(|| run_rank(1));
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let (a, b) = (a.unwrap(), b.unwrap());
+    assert_eq!(a, b);
+    let _ = std::fs::remove_file(&path);
+
+    // Mixed topologies: a fabric-declaring creator and a flat joiner must
+    // never form a world — the joiner fails fast on the layout hash.
+    let path = format!("/dev/shm/cxl_ccl_mp_mix_{}", std::process::id());
+    let _ = std::fs::remove_file(&path);
+    let (creator, joiner) = std::thread::scope(|s| {
+        let h0 = s.spawn(|| {
+            let boot = Bootstrap::pool(&path, spec.clone())
+                .with_pool_topology(&set)
+                .with_join_timeout(Duration::from_secs(3));
+            CommWorld::init(boot, 0, 2)
+        });
+        let h1 = s.spawn(|| {
+            let boot = Bootstrap::pool(&path, spec.clone())
+                .with_join_timeout(Duration::from_secs(3));
+            CommWorld::init(boot, 1, 2)
+        });
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let err = joiner.err().expect("a flat joiner must be rejected");
+    assert!(
+        format!("{err:#}").contains("layout hash mismatch"),
+        "unexpected joiner error: {err:#}"
+    );
+    // The creator never saw its second rank arrive.
+    assert!(creator.is_err(), "the mismatched world must not complete");
+    let _ = std::fs::remove_file(&path);
+}

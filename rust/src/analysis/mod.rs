@@ -679,6 +679,106 @@ pub fn check_interpool_windows(
     diags
 }
 
+// ---------------------------------------------------------------------------
+// (e): elastic control plane (v10)
+// ---------------------------------------------------------------------------
+
+/// Elastic-word audit (v10), run at group construction alongside
+/// [`check_slice_windows`]: the liveness lease words and the alive-mask /
+/// shrink-record word live in the **pool header** (the first `ctrl_end`
+/// slots), which no group window may reach — `elastic_slots` is their
+/// absolute slot list (see `control::elastic_word_slots`). A word outside
+/// the header is a [`DiagnosticKind::WindowEscape`]; a slice doorbell
+/// window or KV reserve covering one is a
+/// [`DiagnosticKind::CrossSliceAlias`] (a plan doorbell landing on a
+/// lease word would fake a heartbeat for a dead rank).
+pub fn check_elastic_words(
+    elastic_slots: &[usize],
+    slices: &[PoolLayout],
+    kv: &std::ops::Range<usize>,
+    ctrl_end: usize,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for &w in elastic_slots {
+        if w >= ctrl_end {
+            diags.push(Diagnostic {
+                kind: DiagnosticKind::WindowEscape,
+                site: None,
+                other: None,
+                detail: format!(
+                    "elastic control word at slot {w} escapes the {ctrl_end}-slot pool \
+                     header"
+                ),
+            });
+        }
+        for (i, sl) in slices.iter().enumerate() {
+            if sl.doorbell_slot_range().contains(&w) {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::CrossSliceAlias,
+                    site: None,
+                    other: None,
+                    detail: format!(
+                        "slice {i}'s doorbell window covers elastic word (lease / \
+                         alive-mask) at slot {w}"
+                    ),
+                });
+            }
+        }
+        if kv.contains(&w) {
+            diags.push(Diagnostic {
+                kind: DiagnosticKind::CrossSliceAlias,
+                site: None,
+                other: None,
+                detail: format!("KV reserve covers elastic word at slot {w}"),
+            });
+        }
+    }
+    diags
+}
+
+/// Synthetic op-stream model of the v10 **shrink round**, so the
+/// happens-before machinery audits the control-plane protocol itself, not
+/// just data plans. One stream per survivor:
+///
+/// - every survivor arrives at the dedicated shrink barrier (phase 0);
+/// - the leader (stream 0) wipes the launch-control words and the plan
+///   doorbell window — modeled as a `Write` over `[wipe_off, +wipe_len)`;
+/// - survivors meet again (phase 1);
+/// - only then does every survivor read the wiped words while carving the
+///   shrunk group — modeled as a `Read` of the same range.
+///
+/// The model must audit **clean**: the leader's wipe reaches every
+/// survivor's re-read only through the phase-1 rendezvous. Dropping that
+/// edge ([`mutations::read_before_shrink_wipe`]) is the
+/// build-the-shrunk-group-over-half-wiped-words bug, and surfaces as
+/// [`DiagnosticKind::ReadBeforePublish`].
+pub fn shrink_round_model(survivors: usize, wipe_off: usize, wipe_len: usize) -> CollectivePlan {
+    use crate::collectives::ops::RankPlan;
+    use crate::collectives::{CclVariant, Primitive};
+    use crate::tensor::Dtype;
+    let mut ranks = Vec::with_capacity(survivors);
+    for r in 0..survivors {
+        let mut rp = RankPlan::new(r);
+        rp.write_ops.push(Op::Barrier);
+        if r == 0 {
+            rp.write_ops.push(Op::Write { pool_off: wipe_off, src_off: 0, len: wipe_len });
+        }
+        rp.write_ops.push(Op::Barrier);
+        rp.write_ops.push(Op::Read { pool_off: wipe_off, dst_off: 0, len: wipe_len });
+        ranks.push(rp);
+    }
+    CollectivePlan {
+        primitive: Primitive::Broadcast,
+        variant: CclVariant::All,
+        nranks: survivors,
+        n_elems: 0,
+        dtype: Dtype::F32,
+        send_elems: 0,
+        recv_elems: 0,
+        ranks,
+    }
+}
+
 /// Full ring audit: per-launch [`check_plan`] + [`check_windows`] (sites
 /// stamped with their launch index), the layout-level
 /// [`check_slice_windows`], and op-level cross-launch aliasing — two
@@ -925,6 +1025,50 @@ mod tests {
         let diags = check_slice_windows(&slices, &[slices[1].db_slot_base]);
         assert_eq!(diags.len(), 1);
         assert!(diags[0].detail.contains("group-control word"));
+    }
+
+    #[test]
+    fn elastic_words_stay_in_the_header() {
+        // 64-slot region, miniature 16-slot "header": group windows are
+        // carved above it, elastic words (slots 7..11) live inside it.
+        let layout = PoolLayout::new(6, 1 << 20, 4096).unwrap();
+        let grp = layout.with_doorbell_window(16, 48).unwrap();
+        let slices = grp.pipeline_slices(2).unwrap();
+        let words = vec![7, 8, 9, 10];
+        assert!(check_elastic_words(&words, &slices, &(0..0), 16).is_empty());
+        // A word at/after the header boundary escapes.
+        let diags = check_elastic_words(&[16], &slices, &(0..0), 16);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].kind, DiagnosticKind::WindowEscape);
+        // A slice window reaching down to a lease word is an alias.
+        let low = vec![layout.with_doorbell_window(8, 8).unwrap()];
+        let diags = check_elastic_words(&[9], &low, &(0..0), 16);
+        assert!(diags.iter().any(|d| d.kind == DiagnosticKind::CrossSliceAlias
+            && d.detail.contains("lease")));
+        // So is a KV reserve sliding down over one.
+        let diags = check_elastic_words(&[9], &slices, &(9..17), 16);
+        assert!(diags.iter().any(|d| d.kind == DiagnosticKind::CrossSliceAlias
+            && d.detail.contains("KV reserve")));
+    }
+
+    #[test]
+    fn shrink_round_model_is_clean_and_mutant_races() {
+        let model = shrink_round_model(3, 4096, 256);
+        assert!(
+            check_plan(&model).is_empty(),
+            "the shrink protocol's wipe must reach every survivor through the \
+             second rendezvous:\n{}",
+            report(&check_plan(&model))
+        );
+        let (mutant, site) = mutations::read_before_shrink_wipe(&model).unwrap();
+        let diags = check_plan(&mutant);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.kind == DiagnosticKind::ReadBeforePublish && d.site == Some(site)),
+            "premature re-read must surface as read-before-publish at {site}:\n{}",
+            report(&diags)
+        );
     }
 
     #[test]

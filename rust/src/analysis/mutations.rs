@@ -156,6 +156,40 @@ pub fn alias_kvcache_arena(slices: &[PoolLayout]) -> Option<std::ops::Range<usiz
     Some(db.end - 1..db.end + 7)
 }
 
+/// Category "premature shrink re-read" (v10): take the
+/// [`shrink_round_model`](super::shrink_round_model) and hoist one
+/// follower's post-wipe `Read` to *before* the second rendezvous — the
+/// survivor builds its shrunk group over words the leader is still
+/// wiping. Expected: [`super::DiagnosticKind::ReadBeforePublish`] citing
+/// the returned site (the hoisted read). `None` if the plan has no
+/// follower stream shaped like the model.
+pub fn read_before_shrink_wipe(plan: &CollectivePlan) -> Option<(CollectivePlan, OpSite)> {
+    let mut mutant = plan.clone();
+    for rp in &mut mutant.ranks {
+        if rp.rank == 0 {
+            continue; // the leader's own wipe orders its re-read anyway
+        }
+        // Model shape: [Barrier, Barrier, Read]. Swap the read with the
+        // second barrier so it lands in phase 0, concurrent with the wipe.
+        let read_ix = rp
+            .write_ops
+            .iter()
+            .position(|op| matches!(op, Op::Read { .. }))?;
+        if read_ix == 0 || !matches!(rp.write_ops[read_ix - 1], Op::Barrier) {
+            return None;
+        }
+        rp.write_ops.swap(read_ix - 1, read_ix);
+        let site = OpSite {
+            launch: 0,
+            rank: rp.rank,
+            stream: StreamKind::Write,
+            op_index: read_ix - 1,
+        };
+        return Some((mutant, site));
+    }
+    None
+}
+
 /// Category "inter-pool bounce alias" (v9): a bounce region slid down so
 /// it overlaps the last ring slice's doorbell window — the bug a
 /// deployment that carved the bounce region without shrinking the plan

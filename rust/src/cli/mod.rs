@@ -38,10 +38,11 @@ use crate::collectives::{
     ValidPlan,
 };
 use crate::config::{parse_ccl, KvFile, RunConfig};
+use crate::doorbell::WaitPolicy;
 use crate::exec::Communicator;
 use crate::fabric::{self, run_all_ranks, FabricWorld, PoolSet};
 use crate::group::control::{control_word_slots, CTRL_SLOTS, GROUP_CTRL_SLOTS};
-use crate::group::{Bootstrap, CollectiveFuture, CommWorld};
+use crate::group::{Bootstrap, CollectiveFuture, CommWorld, FaultKind, FaultPlan};
 use crate::kvcache::{kv_slots_for, serve as kvserve, ServeConfig, ServeReport};
 use crate::pool::PoolLayout;
 use crate::sim::SimFabric;
@@ -52,7 +53,7 @@ use crate::util::size::{fmt_bytes, fmt_time, parse_size};
 use crate::util::{fnv1a64, SplitMix64};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Parsed command line.
 pub struct Args {
@@ -110,6 +111,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "elastic" => cmd_elastic(&args),
         "latency" => cmd_latency(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -150,7 +152,16 @@ fn print_help() {
                 [--page-size 4K] [--seed N]     Zipf KV-cache sweep in virtual time\n         \
                 [--bootstrap pool:<path> --rank R --world 2]   real 2-process\n         \
                 prefill/decode run printing a cross-rank-diffable event digest\n  \
+         elastic [--path /dev/shm/f] [--size 64K] [--iters 3]\n         \
+                [--lease-timeout-ms 1500]    in-process shrink->regrow conformance\n         \
+                drill: 3 thread-ranks digest a full world, rank 2 dies, survivors\n         \
+                observe the dead lease, shrink and digest the 2-rank world, then\n         \
+                all 3 regrow and the full-world digests must match bitwise\n  \
          latency                  Table-1 style latency report\n\n\
+         elasticity: pool `run`/`train` take [--lease-timeout-ms N] (doorbell,\n\
+         barrier and lease-liveness bound) and `run` takes [--fault SPEC] with\n\
+         SPEC one of kill@N | stall@N:MS | stale-gen@N | torn-sense@N, injected\n\
+         before launch N (kill exits 113 without draining, like a SIGKILL).\n\n\
          --variant auto (the default) resolves the (variant, chunks) pair through\n\
          the sim-backed tuner per launch shape; pin a fixed variant to bypass it.\n\n\
          multi-process: start one `run --bootstrap pool:<path> --rank R --world N`\n\
@@ -809,6 +820,17 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
     // spec; it and the depth are part of the layout hash).
     let depth: usize = args.get_or("pipeline-depth", "1").parse()?;
     ensure!(depth >= 1, "--pipeline-depth must be at least 1");
+    // v10 elasticity knobs: a bounded wait policy (doorbells, barriers AND
+    // the lease monitor share the one timeout) plus an optional scripted
+    // fault to inject at a launch boundary.
+    let lease_timeout_ms: Option<u64> = match args.get("lease-timeout-ms") {
+        Some(v) => Some(v.parse().context("--lease-timeout-ms must be an integer")?),
+        None => None,
+    };
+    let fault: Option<FaultPlan> = match args.get("fault") {
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+        None => None,
+    };
     let worst = depth * rc.spec.nranks * rc.msg_bytes + rc.spec.db_region_size + (1 << 20);
     if rc.spec.device_capacity < worst {
         rc.spec.device_capacity = worst.next_power_of_two();
@@ -833,6 +855,19 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
     // grow-capacity/lower-depth hint (never mid-train).
     let boot = Bootstrap::pool(path, rc.spec.clone()).with_pipeline_depth(depth);
     let pg = CommWorld::init(boot, rank, world)?;
+    let pg = match lease_timeout_ms {
+        Some(ms) => pg.with_wait_policy(WaitPolicy {
+            timeout: Duration::from_millis(ms),
+            ..WaitPolicy::default()
+        }),
+        None => pg,
+    };
+    // Baseline probe: LeaseMonitor classifies by *progress since last
+    // probe*, so sampling once up front means the failure-path probe below
+    // reports genuinely stalled ranks, not cold baselines.
+    let lease_timeout = Duration::from_millis(lease_timeout_ms.unwrap_or(30_000));
+    let mut mon = pg.lease_monitor(lease_timeout);
+    let _ = pg.probe_health(&mut mon);
     println!(
         "rendezvous complete: {} ranks over {} (doorbells {:?}, pipeline x{depth})",
         pg.world_size(),
@@ -854,29 +889,243 @@ fn cmd_run_pool(args: &Args, path: &str) -> Result<()> {
     t.header(&["iter", "time", "pool GB/s"]);
     let mut digest = 0u64;
     let mut in_flight: VecDeque<(usize, CollectiveFuture<'_>)> = VecDeque::new();
-    for i in 0..rc.iters {
-        let fut = pg.collective(
-            rc.primitive,
-            &rc.ccl,
-            n,
-            send.clone(),
-            Tensor::zeros(dtype, recv_elems),
-        )?;
-        in_flight.push_back((i, fut));
-        // Keep up to `depth` launches outstanding before reaping.
-        while in_flight.len() > depth {
-            let (j, fut) = in_flight.pop_front().unwrap();
+    let mut run_iters = || -> Result<()> {
+        for i in 0..rc.iters {
+            if let Some(plan) = &fault {
+                if let Some(kind) = pg.inject_fault(plan, i as u64)? {
+                    println!("fault injected before launch {i}: {plan}");
+                    if kind == FaultKind::Kill {
+                        // A scripted crash: exit without draining, settling
+                        // or flushing — the pool is left exactly as a
+                        // SIGKILLed rank would leave it, lease and all.
+                        std::process::exit(113);
+                    }
+                }
+            }
+            let fut = pg.collective(
+                rc.primitive,
+                &rc.ccl,
+                n,
+                send.clone(),
+                Tensor::zeros(dtype, recv_elems),
+            )?;
+            in_flight.push_back((i, fut));
+            // Keep up to `depth` launches outstanding before reaping.
+            while in_flight.len() > depth {
+                let (j, fut) = in_flight.pop_front().unwrap();
+                settle_pool_iter(&t, bytes_moved, j, fut, &mut digest)?;
+            }
+        }
+        while let Some((j, fut)) = in_flight.pop_front() {
             settle_pool_iter(&t, bytes_moved, j, fut, &mut digest)?;
         }
+        pg.flush()?;
+        Ok(())
+    };
+    if let Err(e) = run_iters() {
+        // Bounded-time failure surfacing: annotate the typed error with a
+        // liveness snapshot so the operator can tell a dead peer from a
+        // stalled one before deciding to shrink or restart.
+        if let Ok(h) = pg.probe_health(&mut mon) {
+            eprintln!("world health at failure: {h}");
+        }
+        return Err(e);
     }
-    while let Some((j, fut)) = in_flight.pop_front() {
-        settle_pool_iter(&t, bytes_moved, j, fut, &mut digest)?;
-    }
-    pg.flush()?;
     println!(
         "{} result fnv64=0x{digest:016x} ({recv_elems} elems, dtype {dtype})",
         rc.primitive
     );
+    Ok(())
+}
+
+/// One phase of the elastic drill: `iters` AllGathers over `pg` as global
+/// rank `rank`, folded into one digest. Identical (world, n, rank) inputs
+/// fold to bitwise-identical digests — the property the drill pins across
+/// the shrink→regrow round trip.
+fn elastic_phase_digest(
+    pg: &crate::group::ProcessGroup,
+    rank: usize,
+    n: usize,
+    iters: usize,
+) -> Result<u64> {
+    let world = pg.world_size();
+    let send = deterministic_payload(rank, n, Dtype::F32)?;
+    let mut digest = 0u64;
+    for _ in 0..iters {
+        let fut = pg.collective(
+            Primitive::AllGather,
+            &CclConfig::auto(),
+            n,
+            send.clone(),
+            Tensor::zeros(Dtype::F32, n * world),
+        )?;
+        let (out, _) = fut.wait()?;
+        digest = digest.rotate_left(1) ^ fnv1a64(out.as_bytes());
+    }
+    pg.flush()?;
+    Ok(digest)
+}
+
+/// `elastic`: the v10 shrink→regrow conformance drill as a runnable
+/// subcommand — the scenario `tests/elastic.rs` pins, surfaced so CI (and
+/// a curious operator) can smoke it end to end. Three thread-ranks
+/// rendezvous over `--path` and digest `--iters` AllGathers (phase 1);
+/// rank 2 then drops its mapping without a goodbye, the survivors watch
+/// its lease go stale, observe an in-flight full-world launch fail fast
+/// with the typed `WorldShrunk` error, shrink to a 2-rank world at the
+/// next generation and digest it (phase 2); finally all three ranks
+/// regrow to the full world at a fresh generation through the
+/// crash-restart rejoin and re-digest (phase 3), which must match phase 1
+/// bitwise. Prints `elastic conformance ok` on success; any hang is
+/// bounded by the wait policy, so a wedged drill exits with an error
+/// instead of stalling CI.
+fn cmd_elastic(args: &Args) -> Result<()> {
+    let default_path = format!("/dev/shm/cxl_ccl_elastic_{}", std::process::id());
+    let path = args.get_or("path", &default_path);
+    let msg = parse_size(&args.get_or("size", "64K")).map_err(|e| anyhow::anyhow!(e))?;
+    ensure!(msg >= 4 && msg % 4 == 0, "--size must be a positive multiple of 4 bytes");
+    let iters: usize = args.get_or("iters", "3").parse()?;
+    ensure!(iters >= 1, "--iters must be at least 1");
+    let lease_ms: u64 = args.get_or("lease-timeout-ms", "1500").parse()?;
+    ensure!(lease_ms >= 100, "--lease-timeout-ms must be at least 100");
+    let world = 3usize;
+    let dead = 2usize;
+    let n = msg / 4;
+    let mut spec = ClusterSpec::new(world, args.get_or("devices", "6").parse()?, 64 << 20);
+    let worst = world * msg + spec.db_region_size + (1 << 20);
+    if spec.device_capacity < worst {
+        spec.device_capacity = worst.next_power_of_two();
+    }
+    let _ = std::fs::remove_file(&path);
+    banner(&format!(
+        "elastic[pool:{path}]: {world} thread-ranks | {} per rank x {iters} iters | \
+         lease timeout {lease_ms}ms",
+        fmt_bytes(msg)
+    ));
+    let lease = Duration::from_millis(lease_ms);
+    let barrier = std::sync::Barrier::new(world);
+    let results: Vec<Result<(u64, Option<u64>, u64)>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for r in 0..world {
+            let path = path.clone();
+            let spec = spec.clone();
+            let barrier = &barrier;
+            handles.push(s.spawn(move || -> Result<(u64, Option<u64>, u64)> {
+                // Bounded everything: doorbell waits, barriers and the
+                // doomed in-flight launch all give up within 3 lease
+                // periods, so the drill cannot hang.
+                let wp = WaitPolicy {
+                    timeout: (lease * 3).max(Duration::from_secs(2)),
+                    ..WaitPolicy::default()
+                };
+                // ---- phase 1: full world -------------------------------
+                let boot = Bootstrap::pool(&path, spec.clone());
+                let pg = CommWorld::init(boot, r, world)?.with_wait_policy(wp);
+                let full1 = elastic_phase_digest(&pg, r, n, iters)?;
+                barrier.wait();
+                // ---- phase 2: rank `dead` departs, survivors shrink ----
+                let shrunk = if r == dead {
+                    // Depart the way a crashed process does: unmap without
+                    // draining anyone else, leaving the lease to go stale.
+                    drop(pg);
+                    None
+                } else {
+                    // An in-flight full-world launch that can never finish
+                    // (rank `dead` will not produce): the shrink round must
+                    // turn its bounded doorbell timeout into the typed
+                    // WorldShrunk error instead of letting it hang.
+                    let doomed = pg.collective(
+                        Primitive::AllGather,
+                        &CclConfig::auto(),
+                        n,
+                        deterministic_payload(r, n, Dtype::F32)?,
+                        Tensor::zeros(Dtype::F32, n * world),
+                    )?;
+                    let mut mon = pg.lease_monitor(lease);
+                    let _ = pg.probe_health(&mut mon)?;
+                    let deadline = Instant::now() + lease * 6;
+                    loop {
+                        std::thread::sleep(lease / 8);
+                        pg.heartbeat()?;
+                        let h = pg.probe_health(&mut mon)?;
+                        if h.dead().contains(&dead) {
+                            println!("rank {r}: observed stale lease — {h}");
+                            break;
+                        }
+                        ensure!(
+                            Instant::now() < deadline,
+                            "rank {dead}'s lease never went stale within {:?}: {h}",
+                            lease * 6
+                        );
+                    }
+                    let sub = pg.shrink(dead)?;
+                    let err = match doomed.wait() {
+                        Err(e) => format!("{e:#}"),
+                        Ok(_) => bail!(
+                            "the doomed full-world launch completed without rank {dead}"
+                        ),
+                    };
+                    ensure!(
+                        err.contains("world shrunk"),
+                        "in-flight launch failed without the typed shrink error: {err}"
+                    );
+                    println!("rank {r}: in-flight launch failed fast: {err}");
+                    let d = elastic_phase_digest(&sub, r, n, iters)?;
+                    drop(sub);
+                    drop(pg);
+                    Some(d)
+                };
+                // ---- phase 3: regrow to the full world -----------------
+                barrier.wait();
+                let boot = Bootstrap::pool(&path, spec.clone());
+                let pg = CommWorld::init(boot, r, world)?.with_wait_policy(wp);
+                let full2 = elastic_phase_digest(&pg, r, n, iters)?;
+                Ok((full1, shrunk, full2))
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let _ = std::fs::remove_file(&path);
+    let mut per_rank = Vec::new();
+    for (r, out) in results.into_iter().enumerate() {
+        per_rank.push(out.with_context(|| format!("thread-rank {r} failed"))?);
+    }
+    let (full1, _, full2) = per_rank[0];
+    for (r, (f1, _, f2)) in per_rank.iter().enumerate() {
+        ensure!(
+            *f1 == full1 && *f2 == full2,
+            "rank {r} digests diverged from rank 0 (phase 1: {f1:#018x} vs \
+             {full1:#018x}, phase 3: {f2:#018x} vs {full2:#018x})"
+        );
+    }
+    ensure!(
+        full1 == full2,
+        "regrown world digests diverged from the original full world \
+         ({full2:#018x} vs {full1:#018x})"
+    );
+    let shrunk = per_rank[0].1.context("survivor rank 0 reported no shrunk digest")?;
+    ensure!(
+        per_rank[1].1 == Some(shrunk),
+        "survivors disagreed on the shrunk-world digest"
+    );
+    println!("full-world digest   fnv64=0x{full1:016x} (phases 1 and 3 bitwise-identical)");
+    println!("shrunk-world digest fnv64=0x{shrunk:016x} (2 survivors)");
+    let emit_json = std::env::var("BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    if emit_json {
+        let meta = [
+            ("world", format!("{world}")),
+            ("iters", format!("{iters}")),
+            ("msg_bytes", format!("{msg}")),
+        ];
+        let rows = [
+            format!("{{\"phase\": \"full\", \"digest\": \"0x{full1:016x}\"}}"),
+            format!("{{\"phase\": \"shrunk\", \"digest\": \"0x{shrunk:016x}\"}}"),
+            format!("{{\"phase\": \"regrown\", \"digest\": \"0x{full2:016x}\"}}"),
+        ];
+        write_bench_json("BENCH_elastic.json", "elastic", &meta, &rows)?;
+        println!("wrote BENCH_elastic.json");
+    }
+    println!("elastic conformance ok");
     Ok(())
 }
 
@@ -1175,6 +1424,11 @@ fn cmd_train_pool(args: &Args, path: &str) -> Result<()> {
         ndevices: args.get_or("devices", "6").parse()?,
         pipeline_depth: args.get_or("pipeline-depth", "1").parse()?,
         lr: args.get_or("lr", "0.05").parse()?,
+        lease_timeout: args
+            .get("lease-timeout-ms")
+            .map(|v| v.parse::<u64>().map(Duration::from_millis))
+            .transpose()
+            .context("--lease-timeout-ms must be an integer")?,
     };
     banner(&format!(
         "train[pool:{path}]: rank {rank}/{world} | {} params x {} steps | {} buckets | {}",

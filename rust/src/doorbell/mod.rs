@@ -102,8 +102,13 @@ impl<'a> DoorbellSet<'a> {
             // flush_doorbell: invalidate our cached copy, not the pool state.
             self.pool.flush(off, DOORBELL_SLOT);
             if start.elapsed() > policy.timeout {
+                // Name the absolute slot too: windowed views (subgroups,
+                // epoch slices) renumber from 0, and a hang report must
+                // point at one line of the pool, not one line of a view.
                 bail!(
-                    "doorbell {index} timed out after {:?} (producer missing or deadlock)",
+                    "doorbell {index} (absolute slot {}) timed out after {:?} \
+                     (producer missing or deadlock)",
+                    self.layout.db_slot_base + index,
                     policy.timeout
                 );
             }
@@ -253,6 +258,30 @@ mod tests {
         };
         let err = dbs.wait(5, &policy).unwrap_err();
         assert!(err.to_string().contains("timed out"));
+        // Pin the attribution: the unwindowed view's slot 5 IS absolute
+        // slot 5 — the message must name both the view index and the
+        // absolute slot (satellite of ISSUE 10).
+        assert!(
+            err.to_string().contains("doorbell 5 (absolute slot 5)"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn windowed_wait_timeout_names_the_absolute_slot() {
+        let (pool, layout) = setup();
+        let hi = layout.with_doorbell_window(8, 8).unwrap();
+        let dbs = DoorbellSet::new(&pool, hi);
+        dbs.reset_all().unwrap();
+        let policy = WaitPolicy {
+            spin_iters: 8,
+            timeout: Duration::from_millis(50),
+        };
+        let err = dbs.wait(3, &policy).unwrap_err().to_string();
+        assert!(
+            err.contains("doorbell 3 (absolute slot 11)"),
+            "windowed views must report pool coordinates: {err}"
+        );
     }
 
     #[test]

@@ -18,14 +18,22 @@
 //!   control waits (rendezvous, barriers, launch epochs) recheck it — a
 //!   stale mapper from a previous world fails fast instead of hanging;
 //! - **per-rank join words**: a duplicate `--rank` is detected instead of
-//!   corrupting the arrival count.
+//!   corrupting the arrival count;
+//! - **liveness leases + alive mask** (v10): every member stamps a
+//!   monotonic heartbeat word on its launch path, the header carries an
+//!   alive-rank bitmask plus shrink bookkeeping, and a
+//!   [`WorldHealth`] probe classifies each rank live/suspect/dead — the
+//!   substrate for the elastic shrink/regrow protocol
+//!   (`ProcessGroup::shrink`).
 //!
 //! Region layout (64 B doorbell slots, one u32 word per concern):
 //!
 //! ```text
 //! slot 0..8    header: magic, version, layout-hash lo/hi, generation,
-//!              arrivals, world-size, (reserved)
-//! slot 8..64   per-rank slots: join count, split color, split key
+//!              arrivals, world-size, elastic words (alive-mask lo/hi,
+//!              shrink count, last-declared-dead rank)
+//! slot 8..64   per-rank slots: join count, split color, split key,
+//!              liveness lease (monotonic heartbeat)
 //! slot 64..    group windows; each group's first 64 slots are its launch
 //!              control — an in-flight ring of up to [`MAX_PIPELINE_DEPTH`]
 //!              epoch slices (per-slice launch barrier, stream barrier, and
@@ -60,8 +68,15 @@ pub const POOL_MAGIC: u32 = 0x4343_4C50;
 /// KV-cache reserve ([`crate::kvcache`]) is carved from the *top* of the
 /// doorbell region and excluded from the group's plan window; the reserve
 /// size joins the layout hash, since mappers configured with different
-/// reserves would carve different plan windows.
-pub const POOL_PROTO_VERSION: u32 = 8;
+/// reserves would carve different plan windows. v9 (proto 8): the layout
+/// hash covers the multi-pool topology fingerprint. v10 (proto 9): the
+/// header's reserved slot 7 became the elastic words (alive-rank mask,
+/// shrink count, last-declared-dead rank), each per-rank slot gained a
+/// liveness-lease heartbeat word, and each group control prefix gained a
+/// dedicated shrink-round barrier (words 50/51) — a v9 mapper would
+/// neither stamp leases nor honor a shrink round, so the protocols must
+/// not mix.
+pub const POOL_PROTO_VERSION: u32 = 9;
 /// Header slots at the very base of the doorbell region.
 pub const HEADER_SLOTS: usize = 8;
 /// One rendezvous slot per global rank.
@@ -86,11 +101,29 @@ const W_LAYOUT_HI: usize = 3;
 const W_GENERATION: usize = 4;
 const W_ARRIVALS: usize = 5;
 const W_WORLD: usize = 6;
+/// The elastic words live together in header slot 7 (v10).
+const W_ELASTIC: usize = 7;
+
+// Byte offsets of the elastic words within the [`W_ELASTIC`] slot.
+/// Alive-rank bitmask, low 32 ranks (bit `r` set = rank `r` is a member
+/// in good standing; cleared by [`PoolControl::publish_shrink`]).
+const E_ALIVE_LO: usize = 0;
+/// Alive-rank bitmask, ranks 32..[`MAX_POOL_WORLD`].
+const E_ALIVE_HI: usize = 4;
+/// Number of shrink rounds published against this world since its last
+/// (re-)initialization. Nonzero distinguishes a `WorldShrunk` generation
+/// bump from a plain re-initialization.
+const E_SHRINK: usize = 8;
+/// Global rank most recently declared dead, **plus one** (0 = none yet).
+const E_DEAD: usize = 12;
 
 // Byte offsets of the words within a per-rank slot.
 const R_JOINS: usize = 0;
 const R_COLOR: usize = 4;
 const R_KEY: usize = 8;
+/// Liveness lease: a monotonic (wrapping) heartbeat the rank's launch and
+/// barrier paths stamp; see [`lease_progressed`] for the wrap discipline.
+const R_LEASE: usize = 12;
 
 // Word indices within a group's control prefix (each in its own slot).
 //
@@ -118,6 +151,14 @@ pub const GC_SLICE_WORDS: usize = 6;
 pub const GC_GROUP_CNT: usize = MAX_PIPELINE_DEPTH * GC_SLICE_WORDS;
 /// Whole-group barrier sense word.
 pub const GC_GROUP_SENSE: usize = GC_GROUP_CNT + 1;
+/// Shrink-round barrier arrival counter (v10). The shrink protocol may
+/// not reuse the whole-group barrier: the member being declared dead may
+/// have died mid-`barrier()`, leaving words 48/49 torn, so survivors meet
+/// on this dedicated pair — untouched by normal operation — and the
+/// leader wipes everything *below* it while the others are parked here.
+pub const GC_SHRINK_CNT: usize = GC_GROUP_SENSE + 1;
+/// Shrink-round barrier sense word (v10).
+pub const GC_SHRINK_SENSE: usize = GC_SHRINK_CNT + 1;
 
 /// Byte offset of group-control word `word` for a group whose doorbell
 /// window starts at absolute slot `window_base_slot`.
@@ -138,7 +179,7 @@ pub fn slice_word(slice: usize, word: usize) -> usize {
 /// them) must never cover any of these slots — the
 /// [`crate::analysis`] ring checks take this list as their `ctrl_slots`.
 pub fn control_word_slots(prefix_base_slot: usize, depth: usize) -> Vec<usize> {
-    let mut slots = Vec::with_capacity(depth.min(MAX_PIPELINE_DEPTH) * 5 + 2);
+    let mut slots = Vec::with_capacity(depth.min(MAX_PIPELINE_DEPTH) * 5 + 4);
     for slice in 0..depth.min(MAX_PIPELINE_DEPTH) {
         for word in [GC_LAUNCH_CNT, GC_LAUNCH_SENSE, GC_STREAM_CNT, GC_STREAM_SENSE, GC_EPOCH] {
             slots.push(prefix_base_slot + slice_word(slice, word));
@@ -146,6 +187,21 @@ pub fn control_word_slots(prefix_base_slot: usize, depth: usize) -> Vec<usize> {
     }
     slots.push(prefix_base_slot + GC_GROUP_CNT);
     slots.push(prefix_base_slot + GC_GROUP_SENSE);
+    slots.push(prefix_base_slot + GC_SHRINK_CNT);
+    slots.push(prefix_base_slot + GC_SHRINK_SENSE);
+    slots
+}
+
+/// The elastic word map (v10), exposed for the static analyzer: absolute
+/// doorbell-slot index of the alive-mask/shrink-record slot and of every
+/// possible liveness-lease slot. All of them live below [`CTRL_SLOTS`] —
+/// [`crate::analysis::check_elastic_words`] asserts that, and that no
+/// group window or KV reserve ever reaches one (a plan doorbell landing
+/// on a lease word would fake a heartbeat for a dead rank).
+pub fn elastic_word_slots() -> Vec<usize> {
+    let mut slots = Vec::with_capacity(1 + MAX_POOL_WORLD);
+    slots.push(W_ELASTIC);
+    slots.extend(HEADER_SLOTS..HEADER_SLOTS + MAX_POOL_WORLD);
     slots
 }
 
@@ -170,6 +226,220 @@ pub(crate) fn epoch_word_for(seq: u64) -> u32 {
 /// Byte offset of the header's generation word (the stale-mapper guard).
 pub fn generation_offset() -> usize {
     W_GENERATION * DOORBELL_SLOT
+}
+
+/// Byte offset of global rank `rank`'s liveness-lease word — the launch
+/// path stamps it directly (it runs on a background thread that holds no
+/// [`PoolControl`] handle).
+pub(crate) fn lease_offset(rank: usize) -> usize {
+    (HEADER_SLOTS + rank) * DOORBELL_SLOT + R_LEASE
+}
+
+/// Byte offset of elastic word `byte` within the [`W_ELASTIC`] header slot.
+fn elastic_offset(byte: usize) -> usize {
+    W_ELASTIC * DOORBELL_SLOT + byte
+}
+
+/// Wrapping distance from lease observation `prev` to `cur`. The lease is
+/// a u32 that only ever increments, so the forward gap is well defined
+/// modulo 2^32.
+pub fn lease_gap(prev: u32, cur: u32) -> u32 {
+    cur.wrapping_sub(prev)
+}
+
+/// Whether a rank made heartbeat progress between two lease observations —
+/// the wrap discipline mirroring the epoch words' (v5): any *forward* gap
+/// in `1..2^31` counts, including across the u32 wrap itself
+/// (`prev = u32::MAX, cur = 0` is one beat forward). A gap of 0 is
+/// silence; gaps of `2^31` and beyond are treated as silence too rather
+/// than risk reading a half-observed word as progress — a live rank would
+/// need 2^31 heartbeats between two probes to be misjudged, which no
+/// probe cadence allows.
+pub fn lease_progressed(prev: u32, cur: u32) -> bool {
+    let gap = lease_gap(prev, cur);
+    gap != 0 && gap < 1 << 31
+}
+
+/// Typed error surfaced when the control plane's generation moved because
+/// survivors ran the shrink protocol (as opposed to a plain
+/// re-initialization): every in-flight or subsequent operation on the old
+/// world fails fast with this instead of hanging. Downcast from the
+/// `anyhow` chain on control-plane call sites; pipelined futures surface
+/// it in their error *message* (launch outcomes cross a thread boundary
+/// as strings).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorldShrunk {
+    /// Generation this handle joined at.
+    pub joined_generation: u32,
+    /// Generation the shrink round published.
+    pub current_generation: u32,
+    /// Global rank most recently declared dead (`None` if the word was
+    /// unreadable).
+    pub dead_rank: Option<usize>,
+}
+
+impl std::fmt::Display for WorldShrunk {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "world shrunk (generation {} -> {}",
+            self.joined_generation, self.current_generation
+        )?;
+        if let Some(r) = self.dead_rank {
+            write!(f, "; rank {r} declared dead")?;
+        }
+        write!(
+            f,
+            "): in-flight collectives on the old world cannot complete — continue on \
+             the shrunk group returned by shrink(), or rejoin at the next generation"
+        )
+    }
+}
+
+impl std::error::Error for WorldShrunk {}
+
+/// The error for a generation mismatch, typed by *why* the generation
+/// moved: a published shrink round yields [`WorldShrunk`]; anything else
+/// is the classic stale-mapper re-initialization message. Shared by every
+/// generation guard (rendezvous-side checks and the launch threads).
+pub(crate) fn generation_error(pool: &ShmPool, joined: u32, cur: u32) -> anyhow::Error {
+    pool.flush(W_ELASTIC * DOORBELL_SLOT, DOORBELL_SLOT);
+    let read = |byte: usize| {
+        pool.atomic_u32(elastic_offset(byte))
+            .map(|w| w.load(Ordering::Acquire))
+            .unwrap_or(0)
+    };
+    if read(E_SHRINK) != 0 {
+        let dead = read(E_DEAD);
+        return anyhow::Error::new(WorldShrunk {
+            joined_generation: joined,
+            current_generation: cur,
+            dead_rank: (dead != 0).then(|| dead as usize - 1),
+        });
+    }
+    anyhow::anyhow!(
+        "pool control plane re-initialized (generation {cur}, joined at {joined}): \
+         stale mapper must re-bootstrap"
+    )
+}
+
+/// If the generation moved since `joined`, the typed reason; `None` while
+/// the world is still the one we joined.
+pub(crate) fn stale_generation_error(pool: &ShmPool, joined: u32) -> Option<anyhow::Error> {
+    let cur = pool.atomic_u32(generation_offset()).ok()?.load(Ordering::Acquire);
+    (cur != joined).then(|| generation_error(pool, joined, cur))
+}
+
+/// One rank's liveness classification (see [`LeaseMonitor`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankHealth {
+    /// Alive-mask bit set and the lease progressed recently.
+    Live,
+    /// No lease progress for at least half the configured timeout.
+    Suspect,
+    /// No lease progress for the full timeout, or the alive-mask bit was
+    /// cleared by a shrink round.
+    Dead,
+}
+
+/// A `ProcessGroup::probe_health` snapshot: one [`RankHealth`] per group
+/// rank (index = group rank, not global rank).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorldHealth {
+    pub ranks: Vec<RankHealth>,
+}
+
+impl WorldHealth {
+    pub fn all_live(&self) -> bool {
+        self.ranks.iter().all(|r| *r == RankHealth::Live)
+    }
+
+    /// Group ranks classified dead.
+    pub fn dead(&self) -> Vec<usize> {
+        self.ranks
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| **r == RankHealth::Dead)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Group ranks classified suspect (stalled but not yet past timeout).
+    pub fn suspects(&self) -> Vec<usize> {
+        self.ranks
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| **r == RankHealth::Suspect)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+impl std::fmt::Display for WorldHealth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, r) in self.ranks.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            let s = match r {
+                RankHealth::Live => "live",
+                RankHealth::Suspect => "suspect",
+                RankHealth::Dead => "dead",
+            };
+            write!(f, "rank {i} {s}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Lease-observation state for one prober: remembers each rank's last
+/// observed lease word and when it last *progressed*, and classifies
+/// silence against the configured timeout (suspect at half, dead at
+/// full). Heartbeats are stamped by the launch/barrier paths, so the
+/// monitor is meaningful while the group is actively launching — an idle
+/// world goes quiet without being dead, which is why death detection is a
+/// probe the caller drives, never an automatic reaper.
+pub struct LeaseMonitor {
+    last: Vec<(u32, Instant)>,
+    suspect_after: Duration,
+    dead_after: Duration,
+}
+
+impl LeaseMonitor {
+    pub(crate) fn new(nranks: usize, timeout: Duration) -> Self {
+        let now = Instant::now();
+        LeaseMonitor {
+            last: vec![(0, now); nranks],
+            suspect_after: timeout / 2,
+            dead_after: timeout,
+        }
+    }
+
+    /// The configured full (death) timeout.
+    pub fn timeout(&self) -> Duration {
+        self.dead_after
+    }
+
+    pub(crate) fn classify(&mut self, idx: usize, lease: u32, alive: bool) -> RankHealth {
+        if !alive {
+            return RankHealth::Dead;
+        }
+        let now = Instant::now();
+        let (prev, since) = &mut self.last[idx];
+        if lease_progressed(*prev, lease) {
+            *prev = lease;
+            *since = now;
+            return RankHealth::Live;
+        }
+        let idle = now.duration_since(*since);
+        if idle >= self.dead_after {
+            RankHealth::Dead
+        } else if idle >= self.suspect_after {
+            RankHealth::Suspect
+        } else {
+            RankHealth::Live
+        }
+    }
 }
 
 const POLL: Duration = Duration::from_millis(2);
@@ -198,6 +468,10 @@ impl PoolControl {
 
     fn rank_word(&self, rank: usize, byte: usize) -> Result<&AtomicU32> {
         self.pool.atomic_u32((HEADER_SLOTS + rank) * DOORBELL_SLOT + byte)
+    }
+
+    fn elastic(&self, byte: usize) -> Result<&AtomicU32> {
+        self.pool.atomic_u32(elastic_offset(byte))
     }
 
     /// Fingerprint of everything two mappers must agree on before they may
@@ -294,6 +568,12 @@ impl PoolControl {
         self.header(W_GENERATION)?.store(gen, Ordering::Release);
         self.header(W_WORLD)?.store(world as u32, Ordering::Release);
         self.header(W_VERSION)?.store(POOL_PROTO_VERSION, Ordering::Release);
+        // v10: every configured rank starts alive; the shrink words were
+        // zeroed with the region, so a later generation bump reads as a
+        // re-initialization unless a shrink round sets them.
+        let full = if world >= 64 { u64::MAX } else { (1u64 << world) - 1 };
+        self.elastic(E_ALIVE_LO)?.store(full as u32, Ordering::Release);
+        self.elastic(E_ALIVE_HI)?.store((full >> 32) as u32, Ordering::Release);
         // Publish: everything above is visible before the magic (Release
         // store + the joiner's Acquire load of the magic word).
         self.header(W_MAGIC)?.store(POOL_MAGIC, Ordering::Release);
@@ -397,17 +677,82 @@ impl PoolControl {
         }
     }
 
-    /// Fail fast if the control plane was re-initialized since we joined.
+    /// Fail fast if the control plane's generation moved since we joined —
+    /// with the typed reason ([`WorldShrunk`] after a shrink round, the
+    /// stale-mapper message after a re-initialization).
     pub(crate) fn check_generation(&self) -> Result<()> {
         let cur = self.header(W_GENERATION)?.load(Ordering::Acquire);
         if cur != self.generation {
-            bail!(
-                "pool control plane re-initialized (generation {cur}, joined at {}): \
-                 stale mapper must re-bootstrap",
-                self.generation
-            );
+            return Err(generation_error(&self.pool, self.generation, cur));
         }
         Ok(())
+    }
+
+    /// The generation word as currently published (not the joined one).
+    pub(crate) fn current_generation(&self) -> Result<u32> {
+        self.pool.flush(generation_offset(), DOORBELL_SLOT);
+        Ok(self.header(W_GENERATION)?.load(Ordering::Acquire))
+    }
+
+    /// A view of the same control plane joined at `generation` — what a
+    /// shrink round hands the surviving subgroup.
+    pub(crate) fn at_generation(&self, generation: u32) -> Self {
+        Self {
+            pool: Arc::clone(&self.pool),
+            generation,
+        }
+    }
+
+    /// Stamp this rank's liveness lease (wrapping increment + flush).
+    pub(crate) fn heartbeat(&self, rank: usize) -> Result<()> {
+        self.rank_word(rank, R_LEASE)?.fetch_add(1, Ordering::AcqRel);
+        self.pool
+            .flush((HEADER_SLOTS + rank) * DOORBELL_SLOT, DOORBELL_SLOT);
+        Ok(())
+    }
+
+    /// Read a peer's current lease word (flushing first, so a remote
+    /// mapper's stores are visible).
+    pub(crate) fn read_lease(&self, rank: usize) -> Result<u32> {
+        self.pool
+            .flush((HEADER_SLOTS + rank) * DOORBELL_SLOT, DOORBELL_SLOT);
+        Ok(self.rank_word(rank, R_LEASE)?.load(Ordering::Acquire))
+    }
+
+    /// The alive-rank bitmask (bit `r` = global rank `r` in good standing).
+    pub(crate) fn alive_mask(&self) -> Result<u64> {
+        self.pool.flush(W_ELASTIC * DOORBELL_SLOT, DOORBELL_SLOT);
+        let lo = self.elastic(E_ALIVE_LO)?.load(Ordering::Acquire) as u64;
+        let hi = self.elastic(E_ALIVE_HI)?.load(Ordering::Acquire) as u64;
+        Ok(lo | (hi << 32))
+    }
+
+    /// Number of shrink rounds published since the last initialization.
+    pub(crate) fn shrink_count(&self) -> Result<u32> {
+        self.pool.flush(W_ELASTIC * DOORBELL_SLOT, DOORBELL_SLOT);
+        Ok(self.elastic(E_SHRINK)?.load(Ordering::Acquire))
+    }
+
+    /// Shrink-round leader only: declare `dead_rank` dead — clear its
+    /// alive bit, record it, bump the shrink count, and *then* bump the
+    /// generation, so any guard that observes the new generation already
+    /// sees the shrink words explaining it. Returns the new generation.
+    pub(crate) fn publish_shrink(&self, dead_rank: usize) -> Result<u32> {
+        ensure!(
+            dead_rank < MAX_POOL_WORLD,
+            "rank {dead_rank} out of range ({MAX_POOL_WORLD} max pool ranks)"
+        );
+        let mask = self.alive_mask()? & !(1u64 << dead_rank);
+        self.elastic(E_ALIVE_LO)?.store(mask as u32, Ordering::Release);
+        self.elastic(E_ALIVE_HI)?.store((mask >> 32) as u32, Ordering::Release);
+        self.elastic(E_DEAD)?.store(dead_rank as u32 + 1, Ordering::Release);
+        self.elastic(E_SHRINK)?.fetch_add(1, Ordering::AcqRel);
+        self.pool.flush(W_ELASTIC * DOORBELL_SLOT, DOORBELL_SLOT);
+        let genw = self.header(W_GENERATION)?;
+        let gen = genw.load(Ordering::Acquire).wrapping_add(1).max(1);
+        genw.store(gen, Ordering::Release);
+        self.pool.flush(generation_offset(), DOORBELL_SLOT);
+        Ok(gen)
     }
 
     /// Publish this rank's `(color, key)` for an in-flight `split()`.
@@ -661,8 +1006,12 @@ mod tests {
         }
         seen.insert(GC_GROUP_CNT);
         seen.insert(GC_GROUP_SENSE);
-        assert_eq!(seen.len(), 5 * MAX_PIPELINE_DEPTH + 2);
+        seen.insert(GC_SHRINK_CNT);
+        seen.insert(GC_SHRINK_SENSE);
+        assert_eq!(seen.len(), 5 * MAX_PIPELINE_DEPTH + 4);
         assert!(seen.iter().all(|w| *w < GROUP_CTRL_SLOTS));
+        // The analyzer's word map agrees with the layout.
+        assert_eq!(control_word_slots(0, MAX_PIPELINE_DEPTH).len(), 5 * MAX_PIPELINE_DEPTH + 4);
     }
 
     #[test]
@@ -735,5 +1084,106 @@ mod tests {
             buf[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
         }
         assert_eq!(PoolControl::layout_hash(&s, 6 << 20, 2, 48, fp), crate::util::fnv1a64(&buf));
+    }
+
+    /// Satellite (v10): the lease-word timeout arithmetic mirrors the
+    /// epoch-word wrap discipline — forward progress is recognized through
+    /// the u32 heartbeat wrap, silence is never mistaken for progress, and
+    /// the half-range guard rejects implausible backward jumps. A sweep of
+    /// probe points around every wrap boundary, like
+    /// `epoch_words_wrap_without_ambiguity_at_every_depth` above.
+    #[test]
+    fn lease_words_wrap_without_ambiguity() {
+        let probes = [0u32, 1, 2, 1 << 16, u32::MAX - 2, u32::MAX - 1, u32::MAX];
+        for &prev in &probes {
+            // Silence: a rank that never beats shows zero gap.
+            assert!(!lease_progressed(prev, prev), "prev {prev}");
+            assert_eq!(lease_gap(prev, prev), 0);
+            // Any plausible number of beats between two probes counts as
+            // progress — including across the wrap.
+            for gap in [1u32, 2, 3, 1000, (1 << 31) - 1] {
+                let cur = prev.wrapping_add(gap);
+                assert!(lease_progressed(prev, cur), "prev {prev} gap {gap}");
+                assert_eq!(lease_gap(prev, cur), gap);
+            }
+            // Half-range and beyond reads as silence (a torn/garbage word,
+            // or a monitor re-observing an ancient value), not progress.
+            for gap in [1u32 << 31, (1 << 31) + 1, u32::MAX] {
+                assert!(!lease_progressed(prev, prev.wrapping_add(gap)), "prev {prev} gap {gap}");
+            }
+        }
+        // The wrap itself, explicitly.
+        assert!(lease_progressed(u32::MAX, 0));
+        assert!(lease_progressed(u32::MAX, 1));
+        assert!(!lease_progressed(0, u32::MAX)); // gap 2^32 - 1: backward
+    }
+
+    #[test]
+    fn heartbeats_and_alive_mask_round_trip() {
+        let s = spec();
+        let pool = pool_for(&s);
+        let ctrl = init_header(&pool, &s);
+        // Initialization seeds a full-world alive mask and no shrink.
+        assert_eq!(ctrl.alive_mask().unwrap(), 0b11);
+        assert_eq!(ctrl.shrink_count().unwrap(), 0);
+        // Leases start silent and advance monotonically per beat.
+        assert_eq!(ctrl.read_lease(1).unwrap(), 0);
+        ctrl.heartbeat(1).unwrap();
+        ctrl.heartbeat(1).unwrap();
+        assert_eq!(ctrl.read_lease(1).unwrap(), 2);
+        assert_eq!(ctrl.read_lease(0).unwrap(), 0, "beats never cross rank slots");
+    }
+
+    #[test]
+    fn publish_shrink_types_the_generation_error() {
+        let s = spec();
+        let pool = pool_for(&s);
+        let ctrl = init_header(&pool, &s);
+        ctrl.check_generation().unwrap();
+        let joined = ctrl.generation;
+        let new_gen = ctrl.publish_shrink(1).unwrap();
+        assert_eq!(new_gen, joined.wrapping_add(1).max(1));
+        assert_eq!(ctrl.alive_mask().unwrap(), 0b01, "rank 1's alive bit cleared");
+        assert_eq!(ctrl.shrink_count().unwrap(), 1);
+        // The stale handle's guard now surfaces the typed WorldShrunk —
+        // downcastable, and naming the departed rank.
+        let err = ctrl.check_generation().unwrap_err();
+        let ws = err.downcast_ref::<WorldShrunk>().expect("WorldShrunk, not stale-mapper");
+        assert_eq!(ws.joined_generation, joined);
+        assert_eq!(ws.current_generation, new_gen);
+        assert_eq!(ws.dead_rank, Some(1));
+        assert!(format!("{err:#}").contains("world shrunk"), "{err:#}");
+        // The survivors' view at the new generation is clean.
+        ctrl.at_generation(new_gen).check_generation().unwrap();
+        // A *re-initialization* (no shrink words) still reads as the
+        // classic stale-mapper error — the two causes stay distinguishable.
+        let fresh = init_header(&pool, &s);
+        let err = ctrl.at_generation(new_gen).check_generation().unwrap_err();
+        assert!(err.downcast_ref::<WorldShrunk>().is_none());
+        assert!(format!("{err:#}").contains("re-initialized"), "{err:#}");
+        drop(fresh);
+    }
+
+    #[test]
+    fn lease_monitor_classifies_live_suspect_dead() {
+        let mut mon = LeaseMonitor::new(2, Duration::from_millis(400));
+        // Progress -> live, regardless of elapsed time.
+        assert_eq!(mon.classify(0, 1, true), RankHealth::Live);
+        // Cleared alive bit -> dead immediately, even with a fresh lease.
+        assert_eq!(mon.classify(1, 7, false), RankHealth::Dead);
+        // Silence walks live -> suspect -> dead against the timeout.
+        assert_eq!(mon.classify(0, 1, true), RankHealth::Live);
+        std::thread::sleep(Duration::from_millis(250));
+        assert_eq!(mon.classify(0, 1, true), RankHealth::Suspect);
+        std::thread::sleep(Duration::from_millis(250));
+        assert_eq!(mon.classify(0, 1, true), RankHealth::Dead);
+        // Progress resurrects a suspect (it was never gone, just slow).
+        assert_eq!(mon.classify(0, 2, true), RankHealth::Live);
+        let h = WorldHealth {
+            ranks: vec![RankHealth::Live, RankHealth::Dead],
+        };
+        assert!(!h.all_live());
+        assert_eq!(h.dead(), vec![1]);
+        assert!(h.suspects().is_empty());
     }
 }

@@ -1,0 +1,164 @@
+//! Scripted fault injection for the v10 elastic-world conformance suite.
+//!
+//! A [`FaultPlan`] names one fault and the launch sequence it fires at, so
+//! a test (or the CLI's `run --fault` flag) can reproduce a failure mode
+//! *deterministically*: the same plan against the same world produces the
+//! same torn pool words, the same typed error, the same survivor digests.
+//! The four kinds cover the ways a member can wedge a pool world:
+//!
+//! | spec              | fault                                            |
+//! |-------------------|--------------------------------------------------|
+//! | `kill@N`          | process exits without cleanup before launch N    |
+//! | `stall@N:MS`      | stops stamping its lease for MS ms before launch N |
+//! | `stale-gen@N`     | generation word bumped under the world before N  |
+//! | `torn-sense@N`    | launch-barrier sense of N's slice torn before N  |
+//!
+//! The plan only *describes* the fault; applying it is
+//! [`ProcessGroup::inject_fault`](crate::group::ProcessGroup::inject_fault)
+//! (which returns [`FaultKind::Kill`] to the caller instead of applying
+//! it — how the process dies is the caller's business).
+
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// What goes wrong. See the module table for the on-pool effect of each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The process dies without running destructors — doorbells stay
+    /// rung, barrier counters half-advanced, the lease word silent.
+    Kill,
+    /// The process stops stamping its liveness lease for the given
+    /// duration (it sleeps), driving peers' probes through suspect
+    /// toward dead while it is in fact merely slow.
+    StallLease(Duration),
+    /// The pool generation word moves underneath the live world — what a
+    /// rank 0 restart (re-initialization) looks like to everyone else.
+    StaleGeneration,
+    /// The launch-barrier sense word of the target launch's epoch slice
+    /// is torn, as a member crashing mid-barrier would leave it.
+    TornSense,
+}
+
+/// One scripted fault: `kind` fires right before launch `at_launch`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub kind: FaultKind,
+    /// Launch sequence the fault fires at (the group's pipelined `seq`
+    /// numbering, starting at 0 unless reseeded).
+    pub at_launch: u64,
+}
+
+impl FaultPlan {
+    /// Parse a `kind@launch` spec: `kill@3`, `stall@2:500` (milliseconds),
+    /// `stale-gen@1`, `torn-sense@0`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let Some((kind, rest)) = s.split_once('@') else {
+            bail!(
+                "fault spec '{s}' must be kind@launch: kill@3, stall@2:500, \
+                 stale-gen@1, or torn-sense@0"
+            );
+        };
+        let seq = |t: &str| -> Result<u64> {
+            t.parse().map_err(|e| {
+                anyhow::anyhow!("bad launch number '{t}' in fault spec '{s}': {e}")
+            })
+        };
+        let kind = match kind {
+            "kill" => FaultKind::Kill,
+            "stall" => {
+                let Some((at, ms)) = rest.split_once(':') else {
+                    bail!("stall fault '{s}' must be stall@launch:millis, e.g. stall@2:500");
+                };
+                let ms: u64 = ms.parse().map_err(|e| {
+                    anyhow::anyhow!("bad stall millis '{ms}' in fault spec '{s}': {e}")
+                })?;
+                return Ok(FaultPlan {
+                    kind: FaultKind::StallLease(Duration::from_millis(ms)),
+                    at_launch: seq(at)?,
+                });
+            }
+            "stale-gen" => FaultKind::StaleGeneration,
+            "torn-sense" => FaultKind::TornSense,
+            other => bail!(
+                "unknown fault kind '{other}' in '{s}' (kill, stall, stale-gen, \
+                 torn-sense)"
+            ),
+        };
+        Ok(FaultPlan {
+            kind,
+            at_launch: seq(rest)?,
+        })
+    }
+
+    /// Does this plan fire at launch `seq`?
+    pub fn fires(&self, seq: u64) -> bool {
+        seq == self.at_launch
+    }
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        FaultPlan::parse(s)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            FaultKind::Kill => write!(f, "kill@{}", self.at_launch),
+            FaultKind::StallLease(d) => {
+                write!(f, "stall@{}:{}", self.at_launch, d.as_millis())
+            }
+            FaultKind::StaleGeneration => write!(f, "stale-gen@{}", self.at_launch),
+            FaultKind::TornSense => write!(f, "torn-sense@{}", self.at_launch),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_round_trips() {
+        let cases = [
+            ("kill@3", FaultKind::Kill, 3),
+            (
+                "stall@2:500",
+                FaultKind::StallLease(Duration::from_millis(500)),
+                2,
+            ),
+            ("stale-gen@1", FaultKind::StaleGeneration, 1),
+            ("torn-sense@0", FaultKind::TornSense, 0),
+        ];
+        for (spec, kind, at) in cases {
+            let p = FaultPlan::parse(spec).unwrap();
+            assert_eq!(p.kind, kind, "{spec}");
+            assert_eq!(p.at_launch, at, "{spec}");
+            assert_eq!(p.to_string(), spec, "display round-trips");
+            assert!(p.fires(at) && !p.fires(at + 1));
+            let via_from_str: FaultPlan = spec.parse().unwrap();
+            assert_eq!(via_from_str, p);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "kill",          // no @launch
+            "kill@",         // empty launch
+            "kill@x",        // non-numeric launch
+            "stall@2",       // missing :millis
+            "stall@2:zz",    // non-numeric millis
+            "explode@1",     // unknown kind
+            "",              // empty
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("fault") || err.contains("launch") || err.contains("stall"),
+                "unhelpful error for '{bad}': {err}"
+            );
+        }
+    }
+}

@@ -54,6 +54,7 @@
 //! concurrently.
 
 pub mod control;
+pub mod fault;
 pub mod pipeline;
 
 use crate::collectives::ops::ValidPlan;
@@ -69,6 +70,8 @@ use crate::util::weighted_shares;
 use anyhow::{bail, ensure, Context, Result};
 use control::{PoolControl, CTRL_SLOTS, GROUP_CTRL_SLOTS, MAX_POOL_WORLD};
 pub use control::MAX_PIPELINE_DEPTH;
+pub use control::{LeaseMonitor, RankHealth, WorldHealth, WorldShrunk};
+pub use fault::{FaultKind, FaultPlan};
 pub use pipeline::CollectiveFuture;
 use pipeline::{Forming, LaunchCell, LocalJob, PipeState, PoolJob};
 use std::ops::Range;
@@ -532,6 +535,17 @@ impl ProcessGroup {
                     GroupImpl::Pool(g) => g.window.end.max(kv.end),
                 };
                 diags.extend(crate::analysis::check_kv_window(&kv, &ring, &ctrl, total));
+            }
+            // Pool groups also audit the v10 elastic words: lease and
+            // alive-mask slots live in the pool header, which no slice
+            // window or KV reserve may reach.
+            if matches!(&inner, GroupImpl::Pool(_)) {
+                diags.extend(crate::analysis::check_elastic_words(
+                    &control::elastic_word_slots(),
+                    &ring,
+                    &kv,
+                    CTRL_SLOTS,
+                ));
             }
             debug_assert!(
                 diags.is_empty(),
@@ -1175,6 +1189,7 @@ impl ProcessGroup {
             pool: Arc::clone(&g.pool),
             generation: g.ctrl.generation,
             window_start: g.window.start,
+            lease_off: control::lease_offset(g.members[g.grank]),
             seq,
             ring: self.ring.len(),
             layout,
@@ -1276,9 +1291,298 @@ impl ProcessGroup {
             GroupImpl::Pool(g) => {
                 let _op = g.op_lock.lock().unwrap();
                 g.ctrl.check_generation()?;
+                // Barrier entry is a liveness signal: peers probing this
+                // rank's lease must see progress even on launch-free paths.
+                g.ctrl.heartbeat(g.members[g.grank])?;
                 g.group_barrier()?.wait()
             }
         }
+    }
+
+    /// v10 elasticity: stamp this process's liveness lease word directly
+    /// (launch and barrier paths stamp it automatically; call this from
+    /// idle loops so peers' [`ProcessGroup::probe_health`] keeps seeing
+    /// progress). No-op for thread-local groups, which cannot lose a
+    /// member process.
+    pub fn heartbeat(&self) -> Result<()> {
+        match &self.inner {
+            GroupImpl::Local(_) => Ok(()),
+            GroupImpl::Pool(g) => g.ctrl.heartbeat(g.members[g.grank]),
+        }
+    }
+
+    /// A [`LeaseMonitor`] sized for this group: silence for `timeout / 2`
+    /// classifies a member suspect, silence for `timeout` classifies it
+    /// dead. Feed it to [`ProcessGroup::probe_health`].
+    pub fn lease_monitor(&self, timeout: Duration) -> LeaseMonitor {
+        LeaseMonitor::new(self.world_size(), timeout)
+    }
+
+    /// Probe every member's liveness lease and classify it live / suspect
+    /// / dead against `mon`'s timeout. A member whose alive-mask bit was
+    /// cleared by a [`ProcessGroup::shrink`] round is dead immediately,
+    /// lease notwithstanding. The caller's own rank is always live.
+    /// Thread-local groups report every rank live: their members are
+    /// threads of this (evidently alive) process.
+    pub fn probe_health(&self, mon: &mut LeaseMonitor) -> Result<WorldHealth> {
+        let g = match &self.inner {
+            GroupImpl::Local(_) => {
+                return Ok(WorldHealth {
+                    ranks: vec![RankHealth::Live; self.world_size()],
+                });
+            }
+            GroupImpl::Pool(g) => g,
+        };
+        let mask = g.ctrl.alive_mask()?;
+        let mut ranks = Vec::with_capacity(g.members.len());
+        for (idx, &global) in g.members.iter().enumerate() {
+            let alive = global < 64 && mask & (1u64 << global) != 0;
+            let lease = g.ctrl.read_lease(global)?;
+            let health = if idx == g.grank {
+                RankHealth::Live
+            } else {
+                mon.classify(idx, lease, alive)
+            };
+            ranks.push(health);
+        }
+        Ok(WorldHealth { ranks })
+    }
+
+    /// Fault-injection hook (the `--fault stale-gen@N` CLI flag and the
+    /// conformance suite): bump the pool generation word *without* a
+    /// shrink record, exactly what a rank 0 restart underneath a live
+    /// world looks like. Every subsequent control-plane touch by this
+    /// world fails fast with the stale-mapper error.
+    #[doc(hidden)]
+    pub fn debug_bump_generation(&self) -> Result<()> {
+        match &self.inner {
+            GroupImpl::Local(_) => bail!(
+                "generation stamps are a pool-bootstrap concept; thread-local groups \
+                 have no control plane to invalidate"
+            ),
+            GroupImpl::Pool(g) => {
+                let off = control::generation_offset();
+                g.pool.atomic_u32(off)?.fetch_add(1, Ordering::AcqRel);
+                g.pool.flush(off, 4);
+                Ok(())
+            }
+        }
+    }
+
+    /// Fault-injection hook: tear epoch slice `slice`'s launch barrier the
+    /// way a member crashing **mid-arrival** does — a phantom arrival left
+    /// in the counter word. (Bumping the *sense* word while the barrier is
+    /// quiescent is absorbed by the sense-reversing design: every later
+    /// arrival reads the torn value consistently. A phantom arrival is the
+    /// tear that actually wedges: the next round either releases early and
+    /// strands a straggler into its bounded timeout, or over-subscribes —
+    /// both typed errors.)
+    #[doc(hidden)]
+    pub fn debug_tear_launch_sense(&self, slice: usize) -> Result<()> {
+        match &self.inner {
+            GroupImpl::Local(_) => bail!(
+                "launch barriers are a pool-bootstrap concept; thread-local launches \
+                 synchronize in-process"
+            ),
+            GroupImpl::Pool(g) => {
+                ensure!(
+                    slice < self.ring.len(),
+                    "slice {slice} out of range: this group rings {} epoch slice(s)",
+                    self.ring.len()
+                );
+                let off = control::group_word_off(
+                    g.window.start,
+                    control::slice_word(slice, control::GC_LAUNCH_CNT),
+                );
+                g.pool.atomic_u32(off)?.fetch_add(1, Ordering::AcqRel);
+                g.pool.flush(off, 4);
+                Ok(())
+            }
+        }
+    }
+
+    /// Apply `plan`'s side effect for launch `seq` if it fires there.
+    /// [`FaultKind::Kill`] is *returned*, never applied — the caller
+    /// decides how the process dies (the CLI uses `process::exit(113)`,
+    /// skipping destructors like a real SIGKILL skips everything). The
+    /// other kinds are applied in place. Returns the fired kind.
+    pub fn inject_fault(&self, plan: &FaultPlan, seq: u64) -> Result<Option<FaultKind>> {
+        if !plan.fires(seq) {
+            return Ok(None);
+        }
+        match plan.kind {
+            FaultKind::Kill => {}
+            FaultKind::StallLease(d) => std::thread::sleep(d),
+            FaultKind::StaleGeneration => self.debug_bump_generation()?,
+            FaultKind::TornSense => {
+                self.debug_tear_launch_sense((seq % self.ring.len() as u64) as usize)?
+            }
+        }
+        Ok(Some(plan.kind))
+    }
+
+    /// v10 shrink protocol: every survivor calls `shrink(dead_rank)` with
+    /// the same dead member (typically after [`ProcessGroup::probe_health`]
+    /// reports it [`RankHealth::Dead`]) and gets back the shrunk group at
+    /// the **next generation**. The round, in pool-word order:
+    ///
+    /// 1. The lowest surviving rank publishes the shrink — alive-mask bit
+    ///    cleared, shrink count bumped, dead rank recorded, generation
+    ///    moved — while the other survivors wait for the generation word
+    ///    to move. The bump lands *before* any draining, so every
+    ///    in-flight launch on the old world (this process's and every
+    ///    peer's, including launches parked on barriers the dead rank
+    ///    will never join) fails fast with a typed [`WorldShrunk`] error
+    ///    instead of hanging.
+    /// 2. This process drains its in-flight launches (their errors were
+    ///    already surfaced through `wait()`/`flush()` and are tolerated).
+    /// 3. Survivors meet on the **dedicated shrink barrier** (words no
+    ///    normal operation ever touches, so the dead rank cannot have
+    ///    left *them* torn), guarded by the new generation.
+    /// 4. The leader wipes the group's launch-control words (counters,
+    ///    senses, and epoch words the dead rank may have left mid-flip)
+    ///    and zeroes the plan-doorbell window; survivors meet again so
+    ///    nobody builds the shrunk group over half-wiped words.
+    /// 5. The parent window is re-carved across the survivors with the
+    ///    weighted `split` arithmetic (one color, survivor order as key)
+    ///    and plans reseal against the shrunk [`ClusterSpec`] through a
+    ///    fresh plan cache.
+    ///
+    /// The departed rank's doorbell and device share is returned to the
+    /// survivors; the shrunk world keeps pipelining at the parent's ring
+    /// depth. At least 2 survivors are required (the executor's floor).
+    pub fn shrink(&self, dead_rank: usize) -> Result<ProcessGroup> {
+        let g = match &self.inner {
+            GroupImpl::Local(_) => bail!(
+                "thread-local groups cannot lose a member process; shrink() is a \
+                 pool-bootstrap operation"
+            ),
+            GroupImpl::Pool(g) => g,
+        };
+        let my_global = g.members[g.grank];
+        ensure!(
+            g.members.contains(&dead_rank),
+            "rank {dead_rank} is not a member of this group (members: {:?})",
+            g.members
+        );
+        ensure!(
+            dead_rank != my_global,
+            "rank {my_global} cannot declare itself dead"
+        );
+        let survivors: Vec<usize> = g
+            .members
+            .iter()
+            .copied()
+            .filter(|r| *r != dead_rank)
+            .collect();
+        ensure!(
+            survivors.len() >= 2,
+            "shrinking away rank {dead_rank} would leave {} rank(s); the executor \
+             needs at least 2 — rebuild the world instead",
+            survivors.len()
+        );
+        let _op = g.op_lock.lock().unwrap();
+        let leader = survivors[0];
+        let new_gen = if my_global == leader {
+            // Don't stack a shrink on a stale view of the world.
+            g.ctrl.check_generation()?;
+            g.ctrl.publish_shrink(dead_rank)?
+        } else {
+            let start = Instant::now();
+            loop {
+                let cur = g.ctrl.current_generation()?;
+                if cur != g.ctrl.generation {
+                    ensure!(
+                        g.ctrl.shrink_count()? != 0,
+                        "pool control plane re-initialized (generation {cur}) while \
+                         this member waited for the shrink of rank {dead_rank}: \
+                         rebuild the world"
+                    );
+                    break cur;
+                }
+                if start.elapsed() > g.policy.timeout {
+                    bail!(
+                        "timed out after {:?} waiting for survivor rank {leader} to \
+                         publish the shrink of rank {dead_rank} (every survivor must \
+                         call shrink with the same dead rank)",
+                        g.policy.timeout
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        };
+        // In-flight launches fail fast through the generation guard now
+        // that it moved; their errors are expected here.
+        let _ = self.drain_launches();
+        let sb = PoolBarrier::new(
+            &g.pool,
+            control::group_word_off(g.window.start, control::GC_SHRINK_CNT),
+            control::group_word_off(g.window.start, control::GC_SHRINK_SENSE),
+            survivors.len(),
+            g.policy,
+        )?
+        .with_guard(control::generation_offset(), new_gen);
+        sb.wait()?;
+        if my_global == leader {
+            // Wipe every launch-control word below the shrink barrier's
+            // own pair: counters and senses the dead rank may have left
+            // mid-flip, and the epoch words (the shrunk group's launch
+            // seq restarts at 0, whose epoch stamp is never 0).
+            for w in 0..control::GC_SHRINK_CNT {
+                let off = control::group_word_off(g.window.start, w);
+                g.pool.atomic_u32(off)?.store(0, Ordering::Release);
+                g.pool.flush(off, 4);
+            }
+            let base = (g.window.start + GROUP_CTRL_SLOTS) * crate::doorbell::DOORBELL_SLOT;
+            let len =
+                (g.window.end - g.window.start - GROUP_CTRL_SLOTS) * crate::doorbell::DOORBELL_SLOT;
+            g.pool.zero(base, len)?;
+            g.pool.flush(base, len);
+        }
+        sb.wait()?;
+        let entries: Vec<(usize, usize, usize)> = survivors
+            .iter()
+            .enumerate()
+            .map(|(key, &global)| -> Result<(usize, usize, usize)> {
+                let parent_gr = g
+                    .members
+                    .iter()
+                    .position(|m| *m == global)
+                    .expect("survivors are members");
+                Ok((parent_gr, 0, key))
+            })
+            .collect::<Result<_>>()?;
+        let parent_dev = g.layout.device_base..g.layout.device_base + g.layout.device_span;
+        let subs = partition_subgroups(&g.window, parent_dev, &entries)?;
+        let my = subs.into_iter().next().expect("one color, one subgroup");
+        let sub_rank = my
+            .members
+            .iter()
+            .position(|r| g.members[*r] == my_global)
+            .expect("every survivor is in the shrunk group");
+        let (sub_spec, layout) = subgroup_view(&g.spec, &g.layout, &my)?;
+        let members: Vec<usize> = my.members.iter().map(|r| g.members[*r]).collect();
+        Ok(ProcessGroup::from_parts(
+            GroupImpl::Pool(PoolGroup {
+                pool: Arc::clone(&g.pool),
+                ctrl: g.ctrl.at_generation(new_gen),
+                spec: sub_spec,
+                layout,
+                window: my.db_window,
+                members,
+                grank: sub_rank,
+                cache: PlanCache::new(),
+                decisions: DecisionCache::new(),
+                engine: Arc::clone(&g.engine),
+                policy: g.policy,
+                op_lock: Mutex::new(()),
+            }),
+            sub_rank,
+            self.ring.len(),
+            // Like split: the KV reserve stays with the (old) world group;
+            // the arena is addressed by absolute slot outside our window.
+            0..0,
+        ))
     }
 
     /// ncclCommSplit for pool groups: a **collective** — every member calls
@@ -1557,6 +1861,71 @@ fn subgroup_view(
         )?
         .with_device_window(sub.dev_window.start, sub.dev_window.len())?;
     Ok((sub_spec, layout))
+}
+
+/// v10 regrow support: read the last published epoch words out of a pool
+/// file a dead (or finished) world left behind, and return the launch
+/// sequence the next world should seed so its epoch ring continues the
+/// old numbering instead of replaying stamps that already fired.
+///
+/// Every epoch word holds `control::epoch_word_for(seq)` of the last
+/// launch completed on its slice (0 = the slice never launched since the
+/// last init). Inverting the stamp needs a search hint: `hint` is any
+/// launch sequence at or before the crash — the seed the dead world
+/// started from is always safe — and the scan walks forward from it, per
+/// slice, up to 65 536 launches. The result is `last completed seq + 1`
+/// across all slices (= `hint` itself when no slice ever launched).
+///
+/// Call this **before** the new world's rank 0 re-initializes the header
+/// (initialization zeroes the epoch words), and have every restarted rank
+/// seed the same recovered value via [`ProcessGroup::seed_launch_seq`] —
+/// compute it once and distribute it, or rely on every rank scanning the
+/// identical quiescent file.
+pub fn recover_launch_seq(
+    path: &str,
+    spec: &ClusterSpec,
+    ring_depth: usize,
+    hint: u64,
+) -> Result<u64> {
+    ensure!(
+        (1..=MAX_PIPELINE_DEPTH).contains(&ring_depth),
+        "ring depth must be 1..={MAX_PIPELINE_DEPTH}, got {ring_depth}"
+    );
+    let full = PoolLayout::from_spec(spec)?;
+    let pool = ShmPool::dax_file_attach(path, full.pool_size())?;
+    let depth = ring_depth as u64;
+    // Bound the inversion: epoch stamps are unique within any 2^32-long
+    // seq range, so any bound below that is sound; 2^16 launches is far
+    // beyond a restart lag and keeps the scan instant.
+    const SCAN: u64 = 1 << 16;
+    let mut best: Option<u64> = None;
+    for slice in 0..ring_depth {
+        let off = control::group_word_off(CTRL_SLOTS, control::slice_word(slice, control::GC_EPOCH));
+        pool.flush(off, 4);
+        let word = pool.atomic_u32(off)?.load(Ordering::Acquire);
+        if word == 0 {
+            continue; // slice never launched since the last init
+        }
+        // First k >= 0 with (hint + k) % depth == slice, then step by
+        // depth: only those sequences ever ran on this slice.
+        let mut k = (slice as u64 + depth - hint % depth) % depth;
+        let mut found = false;
+        while k < SCAN {
+            if control::epoch_word_for(hint.wrapping_add(k)) == word {
+                best = Some(best.map_or(k, |b| b.max(k)));
+                found = true;
+                break;
+            }
+            k += depth;
+        }
+        ensure!(
+            found,
+            "epoch slice {slice} holds stamp {word:#010x}, which matches no launch in \
+             [{hint}, {hint} + {SCAN}): wrong hint, wrong ring depth ({ring_depth}), or \
+             a torn pool file — rebuild the world from scratch instead of rejoining"
+        );
+    }
+    Ok(hint.wrapping_add(best.map_or(0, |k| k.wrapping_add(1))))
 }
 
 #[cfg(test)]

@@ -27,13 +27,14 @@
 //! `ccl analyze` re-checks whole rings of planned launches op-by-op.
 
 use crate::collectives::ops::ValidPlan;
-use crate::doorbell::{DoorbellSet, PoolBarrier, WaitPolicy};
+use crate::doorbell::{DoorbellSet, PoolBarrier, WaitPolicy, DOORBELL_SLOT};
 use crate::exec::communicator::{run_stream, StreamCtx, StreamSync};
 use crate::exec::reduce_engine::ReduceEngine;
 use crate::exec::Communicator;
 use crate::group::control::{
-    epoch_word_for, generation_offset, group_word_off, slice_word, GC_EPOCH, GC_LAUNCH_CNT,
-    GC_LAUNCH_SENSE, GC_STREAM_CNT, GC_STREAM_SENSE,
+    epoch_word_for, generation_error, generation_offset, group_word_off, slice_word,
+    stale_generation_error, GC_EPOCH, GC_LAUNCH_CNT, GC_LAUNCH_SENSE, GC_STREAM_CNT,
+    GC_STREAM_SENSE,
 };
 use crate::group::ProcessGroup;
 use crate::pool::{PoolLayout, ShmPool};
@@ -359,6 +360,14 @@ pub(crate) struct PoolJob {
     pub(crate) generation: u32,
     /// Absolute doorbell slot where the group's control prefix starts.
     pub(crate) window_start: usize,
+    /// Pool byte offset of this process's liveness-lease word (v10): the
+    /// launch thread stamps a heartbeat at entry, while spinning on the
+    /// epoch word, and at completion, so peers probing
+    /// `ProcessGroup::probe_health` see an actively launching rank as
+    /// live. A rank parked inside a barrier does not beat — which is the
+    /// point: it is making no progress, and classifies as suspect if the
+    /// stall outlives half the probe timeout.
+    pub(crate) lease_off: usize,
     pub(crate) seq: u64,
     /// Configured epoch-ring depth (slice = `seq % ring`); identical on
     /// every member — the layout hash pins it at rendezvous.
@@ -384,9 +393,21 @@ pub(crate) fn spawn_pool(job: PoolJob) -> std::thread::JoinHandle<()> {
             gate.wait_done();
         }
         let cell = Arc::clone(&job.cell);
+        let pool = Arc::clone(&job.pool);
+        let generation = job.generation;
         match run_pool_job(job) {
             Ok((recv, wall)) => cell.complete(Ok((vec![recv], wall))),
-            Err(e) => cell.complete(Err(format!("{e:#}"))),
+            Err(e) => {
+                // Whichever wait noticed the failure first (a barrier, the
+                // epoch spin, a doorbell), if the control plane's
+                // generation moved *that* is the root cause — put the typed
+                // reason (WorldShrunk / re-initialized) in front of it.
+                let e = match stale_generation_error(&pool, generation) {
+                    Some(root) => root.context(format!("{e:#}")),
+                    None => e,
+                };
+                cell.complete(Err(format!("{e:#}")));
+            }
         }
         drop(guard);
     })
@@ -433,18 +454,24 @@ fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
     let pool = Arc::clone(&job.pool);
     let slice = (job.seq % job.ring as u64) as usize;
     let gen_w = pool.atomic_u32(generation_offset())?;
+    let generation = job.generation;
     let check_gen = || -> Result<()> {
         let cur = gen_w.load(Ordering::Acquire);
-        if cur != job.generation {
-            bail!(
-                "pool control plane re-initialized (generation {cur}, joined at {}): \
-                 stale mapper must re-bootstrap",
-                job.generation
-            );
+        if cur != generation {
+            return Err(generation_error(&pool, generation, cur));
         }
         Ok(())
     };
+    // Liveness lease (v10): stamp the heartbeat on the way into the launch
+    // protocol, while spinning on the epoch word, and at completion.
+    let lease_w = pool.atomic_u32(job.lease_off)?;
+    let lease_slot = job.lease_off - job.lease_off % DOORBELL_SLOT;
+    let beat = || {
+        lease_w.fetch_add(1, Ordering::AcqRel);
+        pool.flush(lease_slot, DOORBELL_SLOT);
+    };
     check_gen()?;
+    beat();
     slice_barrier(
         &pool,
         job.window_start,
@@ -474,6 +501,7 @@ fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
                 break;
             }
             check_gen()?;
+            beat();
             if start.elapsed() > job.policy.timeout {
                 bail!(
                     "timed out waiting for group rank 0 to open epoch slice {slice} for \
@@ -561,6 +589,7 @@ fn run_pool_job(mut job: PoolJob) -> Result<(Tensor, Duration)> {
     if let Some(e) = errors.into_iter().next() {
         return Err(e);
     }
+    beat();
     let wall = start.elapsed();
     Ok((job.recv, wall))
 }

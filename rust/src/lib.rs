@@ -173,6 +173,35 @@
 //! [`analysis::check_interpool_windows`]. Quick start: `ccl run --pools 2
 //! --ranks 8 --backend sim`, or see the README "Hierarchical worlds"
 //! section.
+//!
+//! ## Elastic worlds (v10)
+//!
+//! Pool worlds now survive member death. Every rank owns a **liveness
+//! lease word** (byte 12 of its control-plane slot) stamped by the
+//! launch, barrier, and explicit heartbeat paths;
+//! [`group::ProcessGroup::probe_health`] classifies peers live / suspect
+//! / dead from lease progress against a configurable timeout
+//! ([`group::LeaseMonitor`]). When a rank dies, every survivor calls
+//! [`group::ProcessGroup::shrink`]: the lowest survivor publishes the
+//! shrink round (alive-mask bit cleared, dead rank recorded, generation
+//! bumped) so every in-flight launch on the old world — including ones
+//! parked on barriers the dead rank will never join — fails fast with a
+//! typed [`group::WorldShrunk`] error instead of hanging; survivors then
+//! meet on a dedicated shrink barrier, the leader wipes the
+//! launch-control words, and the dead rank's doorbell + device share is
+//! re-carved across the survivors with the weighted `split` arithmetic.
+//! Regrow rides the crash-restart rejoin: [`group::recover_launch_seq`]
+//! inverts the published epoch words into the exact replay cursor
+//! (called **before** the restarted rank 0 re-initializes), every
+//! restarted rank seeds it, and the ring drains deterministically —
+//! `tests/elastic.rs` and `tests/elastic_fork.rs` pin shrink → regrow
+//! round trips **bitwise** against an uninterrupted world, across the
+//! u64 launch-sequence wrap, under both thread and forked-process
+//! bootstraps. Scripted faults ([`group::FaultPlan`]: `kill@N`,
+//! `stall@N:MS`, `stale-gen@N`, `torn-sense@N`) drive the conformance
+//! suite and the CLI's `run --fault` flag; `ccl elastic` runs the
+//! in-process kill/shrink/regrow demo, and `run`/`train` take
+//! `--lease-timeout-ms` to bound every wait on a dead peer.
 
 #![deny(unsafe_op_in_unsafe_fn)]
 
@@ -207,7 +236,10 @@ pub mod prelude {
     };
     pub use crate::exec::{Communicator, PendingOp, RankComm};
     pub use crate::fabric::{FabricWorld, PoolDesc, PoolSet};
-    pub use crate::group::{Bootstrap, CollectiveFuture, CommWorld, ProcessGroup};
+    pub use crate::group::{
+        recover_launch_seq, Bootstrap, CollectiveFuture, CommWorld, FaultKind, FaultPlan,
+        LeaseMonitor, ProcessGroup, RankHealth, WorldHealth, WorldShrunk,
+    };
     pub use crate::kvcache::{
         kv_slots_for, KvArena, KvCacheStats, KvExchange, PageRef, ServeConfig, ServeReport,
     };

@@ -14,11 +14,13 @@
 //! which the CI pool-train smoke pins by diffing the per-rank logs.
 
 use crate::collectives::{CclConfig, Primitive};
+use crate::doorbell::WaitPolicy;
 use crate::group::{Bootstrap, CommWorld};
 use crate::tensor::{Dtype, Tensor};
 use crate::topology::ClusterSpec;
 use crate::util::fnv1a64;
 use anyhow::{ensure, Result};
+use std::time::Duration;
 
 /// Launch shape of one pool-mode training run. Every rank must pass
 /// identical values — the derived [`ClusterSpec`] feeds the pool layout
@@ -35,6 +37,11 @@ pub struct PoolTrainConfig {
     pub ndevices: usize,
     pub pipeline_depth: usize,
     pub lr: f32,
+    /// Bound every doorbell/barrier wait (and the lease-liveness probe) to
+    /// this duration instead of the default policy — the v10 knob that
+    /// turns a SIGKILLed peer into a bounded, health-annotated error
+    /// instead of a hang. `None` keeps the default wait policy.
+    pub lease_timeout: Option<Duration>,
 }
 
 impl Default for PoolTrainConfig {
@@ -47,6 +54,7 @@ impl Default for PoolTrainConfig {
             ndevices: 6,
             pipeline_depth: 1,
             lr: 0.05,
+            lease_timeout: None,
         }
     }
 }
@@ -91,8 +99,6 @@ pub fn run_pool_train(
     ensure!(cfg.steps >= 1, "need at least one step");
     // Uniform slicing: per_bucket elements per (rank, bucket) cell.
     let per_bucket = cfg.params.div_ceil(world * cfg.buckets).max(1);
-    let shard = per_bucket * cfg.buckets;
-    let total = shard * world;
     // Same capacity discipline as the `run` launchers: the largest
     // message is a ReduceScatter send of one full bucket row.
     let msg_bytes = world * per_bucket * 4;
@@ -104,6 +110,41 @@ pub fn run_pool_train(
     }
     let boot = Bootstrap::pool(path, spec).with_pipeline_depth(cfg.pipeline_depth);
     let pg = CommWorld::init(boot, rank, world)?;
+    let pg = match cfg.lease_timeout {
+        Some(t) => pg.with_wait_policy(WaitPolicy { timeout: t, ..WaitPolicy::default() }),
+        None => pg,
+    };
+    // Baseline liveness probe now, so the failure-path probe below reports
+    // real lease staleness rather than cold first-sample progress.
+    let mut mon = pg.lease_monitor(cfg.lease_timeout.unwrap_or(Duration::from_secs(30)));
+    let _ = pg.probe_health(&mut mon);
+    match run_train_body(&pg, rank, world, cfg, per_bucket, &mut on_step) {
+        Ok(report) => Ok(report),
+        Err(e) => {
+            // A dead or stalled peer surfaces here as a bounded doorbell /
+            // barrier / generation error; annotate it with the lease view
+            // so the operator can tell which rank to restart.
+            let health = match pg.probe_health(&mut mon) {
+                Ok(h) => format!("; world health: {h}"),
+                Err(_) => String::new(),
+            };
+            Err(e.context(format!("pool training failed as rank {rank}/{world}{health}")))
+        }
+    }
+}
+
+/// The training loop proper, split out so [`run_pool_train`] can annotate
+/// any failure with a [`crate::group::WorldHealth`] snapshot.
+fn run_train_body(
+    pg: &crate::group::ProcessGroup,
+    rank: usize,
+    world: usize,
+    cfg: &PoolTrainConfig,
+    per_bucket: usize,
+    on_step: &mut impl FnMut(usize, f32),
+) -> Result<PoolTrainReport> {
+    let shard = per_bucket * cfg.buckets;
+    let total = shard * world;
     let shard_base = rank * shard;
     let mut shard_params: Vec<f32> =
         (0..shard).map(|i| init_param(shard_base + i)).collect();

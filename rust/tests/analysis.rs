@@ -13,7 +13,7 @@ use cxl_ccl::analysis::{self, mutations, DiagnosticKind};
 use cxl_ccl::collectives::builder::plan_collective_dtype;
 use cxl_ccl::collectives::tuner::candidate_configs;
 use cxl_ccl::collectives::{CclVariant, CollectivePlan, Primitive};
-use cxl_ccl::group::control::{control_word_slots, GROUP_CTRL_SLOTS};
+use cxl_ccl::group::control::{control_word_slots, elastic_word_slots, CTRL_SLOTS, GROUP_CTRL_SLOTS};
 use cxl_ccl::pool::PoolLayout;
 use cxl_ccl::tensor::Dtype;
 use cxl_ccl::topology::ClusterSpec;
@@ -235,6 +235,67 @@ fn aliased_interpool_bounce_region_flagged_as_cross_slice_alias() {
     assert!(
         diags.iter().any(|d| d.kind == DiagnosticKind::WindowEscape),
         "an out-of-region bounce region must be a window escape; got:\n{}",
+        analysis::report(&diags)
+    );
+}
+
+/// v10: the synthetic shrink-round model (wipe → rendezvous → re-read)
+/// audits clean, and hoisting a survivor's shrunk-group read before the
+/// wipe rendezvous — building the shrunk group over half-wiped words —
+/// is flagged as a read-before-publish at the hoisted site.
+#[test]
+fn shrink_round_model_is_clean_and_hoisted_read_is_flagged() {
+    let model = analysis::shrink_round_model(3, 4096, 1024);
+    assert!(
+        analysis::check_plan(&model).is_empty(),
+        "the healthy shrink round must audit clean"
+    );
+    let (mutant, site) =
+        mutations::read_before_shrink_wipe(&model).expect("model has follower streams");
+    let diags = analysis::check_plan(&mutant);
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.kind == DiagnosticKind::ReadBeforePublish && d.site == Some(site)),
+        "a shrunk-group read hoisted before the wipe rendezvous must be flagged; got:\n{}",
+        analysis::report(&diags)
+    );
+}
+
+/// v10: the elastic word map (alive-mask + lease words) lives below the
+/// pool header boundary, no bootstrap-shaped carve reaches it, and a
+/// mis-carved window that covers a lease word (which would let a plan
+/// doorbell fake a dead rank's heartbeat) is flagged.
+#[test]
+fn elastic_words_audit_clean_in_the_header_and_alias_when_covered() {
+    let (_, base) = spec_and_layout();
+    let total = base.doorbell_slots();
+    let slots = elastic_word_slots();
+    // The bootstrap-shaped carve: group windows start above the pool
+    // header, so no slice (or KV reserve) can reach a lease word.
+    let windowed = base
+        .with_doorbell_window(CTRL_SLOTS + GROUP_CTRL_SLOTS, total - CTRL_SLOTS - GROUP_CTRL_SLOTS)
+        .unwrap();
+    let slices = windowed.pipeline_slices(2).unwrap();
+    assert!(
+        analysis::check_elastic_words(&slots, &slices, &(0..0), CTRL_SLOTS).is_empty(),
+        "the pool carve must never cover an elastic word"
+    );
+    // A mis-carved window starting inside the rank-slot range covers
+    // lease words on both slices.
+    let bad = base.with_doorbell_window(8, 120).unwrap();
+    let bad_slices = bad.pipeline_slices(2).unwrap();
+    let diags = analysis::check_elastic_words(&slots, &bad_slices, &(0..0), CTRL_SLOTS);
+    assert!(
+        diags.iter().any(|d| d.kind == DiagnosticKind::CrossSliceAlias),
+        "a window covering a lease word must alias; got:\n{}",
+        analysis::report(&diags)
+    );
+    // And an elastic word placed outside the header is an escape.
+    let diags = analysis::check_elastic_words(&[CTRL_SLOTS + 1], &slices, &(0..0), CTRL_SLOTS);
+    assert!(
+        diags.iter().any(|d| d.kind == DiagnosticKind::WindowEscape),
+        "a word outside the header must escape; got:\n{}",
         analysis::report(&diags)
     );
 }

@@ -1,0 +1,472 @@
+//! Elastic fault-tolerant worlds (v10): deterministic fault-injection
+//! conformance over the thread-per-rank pool bootstrap. The fork-based
+//! mirror (real processes, destructor-skipping exits) lives in
+//! `elastic_fork.rs`; this file pins the protocol logic itself —
+//! liveness-lease classification, the shrink round failing in-flight
+//! work with typed `WorldShrunk` errors, shrink → regrow round-tripping
+//! back to bitwise-identical full-world results, epoch-ring drain/replay
+//! across the u64 sequence wrap, and every scripted [`FaultPlan`] kind
+//! surfacing as a *typed, bounded* error — never a hang.
+
+use anyhow::Result;
+use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::doorbell::WaitPolicy;
+use cxl_ccl::group::{
+    recover_launch_seq, Bootstrap, CommWorld, FaultKind, FaultPlan, ProcessGroup, RankHealth,
+};
+use cxl_ccl::tensor::{Dtype, Tensor};
+use cxl_ccl::topology::ClusterSpec;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+const N: usize = 256;
+
+fn shm_path(tag: &str) -> String {
+    format!("/dev/shm/cxl_ccl_elastic_{tag}_{}", std::process::id())
+}
+
+fn wp(ms: u64) -> WaitPolicy {
+    WaitPolicy { timeout: Duration::from_millis(ms), ..WaitPolicy::default() }
+}
+
+/// Barrier that fails instead of hanging when a peer thread panicked
+/// before reaching it: arrive, then bounded-wait for `target` arrivals.
+fn sync_point(counter: &AtomicUsize, target: usize) {
+    counter.fetch_add(1, Ordering::AcqRel);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while counter.load(Ordering::Acquire) < target {
+        assert!(Instant::now() < deadline, "peer thread never reached the sync point");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Global rank `rank`'s deterministic AllGather payload.
+fn payload(rank: usize, n: usize) -> Vec<f32> {
+    (0..n).map(|i| (rank as f32) * 100.0 + (i as f32) * 0.25 - 3.5).collect()
+}
+
+/// Bytes every member must read back from an AllGather over `members`.
+fn expected(members: &[usize], n: usize) -> Vec<u8> {
+    let mut all = Vec::with_capacity(members.len() * n);
+    for &m in members {
+        all.extend_from_slice(&payload(m, n));
+    }
+    Tensor::from_f32(&all).as_bytes().to_vec()
+}
+
+/// One AllGather as global rank `rank`, returning the gathered bytes.
+fn gather(pg: &ProcessGroup, rank: usize, n: usize) -> Result<Vec<u8>> {
+    let fut = pg.collective(
+        Primitive::AllGather,
+        &CclVariant::All.config(8),
+        n,
+        Tensor::from_f32(&payload(rank, n)),
+        Tensor::zeros(Dtype::F32, n * pg.world_size()),
+    )?;
+    Ok(fut.wait()?.0.as_bytes().to_vec())
+}
+
+/// A rank that stops heartbeating is classified suspect, then dead, by a
+/// surviving rank's lease probe — while the survivor itself stays live.
+#[test]
+fn lease_probe_classifies_a_departed_rank_dead() {
+    let path = shm_path("probe");
+    let _ = std::fs::remove_file(&path);
+    let spec = ClusterSpec::new(2, 6, 4 << 20);
+    std::thread::scope(|s| {
+        let departing = s.spawn(|| -> Result<()> {
+            let pg = CommWorld::init(Bootstrap::pool(path.as_str(), spec.clone()), 1, 2)?;
+            assert_eq!(gather(&pg, 1, N)?, expected(&[0, 1], N));
+            pg.flush()?;
+            Ok(())
+            // pg drops here: rank 1's lease stops beating.
+        });
+        let survivor = s.spawn(|| -> Result<()> {
+            let pg = CommWorld::init(Bootstrap::pool(path.as_str(), spec.clone()), 0, 2)?;
+            assert_eq!(gather(&pg, 0, N)?, expected(&[0, 1], N));
+            let mut mon = pg.lease_monitor(Duration::from_millis(300));
+            let baseline = pg.probe_health(&mut mon)?;
+            assert_eq!(baseline.ranks[0], RankHealth::Live, "own lease just beat: {baseline}");
+            let deadline = Instant::now() + Duration::from_secs(20);
+            loop {
+                std::thread::sleep(Duration::from_millis(25));
+                pg.heartbeat()?;
+                let h = pg.probe_health(&mut mon)?;
+                if h.ranks[1] == RankHealth::Dead {
+                    assert_eq!(h.ranks[0], RankHealth::Live, "{h}");
+                    assert_eq!(h.dead(), vec![1], "{h}");
+                    return Ok(());
+                }
+                assert!(Instant::now() < deadline, "rank 1 never classified dead: {h}");
+            }
+        });
+        departing.join().unwrap().unwrap();
+        survivor.join().unwrap().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A lease stall (slow rank, not a dead one) is observed as non-live and
+/// then re-classified live once its heartbeats resume — suspects recover.
+#[test]
+fn stalled_lease_goes_suspect_then_recovers() {
+    let path = shm_path("stall");
+    let _ = std::fs::remove_file(&path);
+    let spec = ClusterSpec::new(2, 6, 4 << 20);
+    let plan = FaultPlan::parse("stall@1:1200").unwrap();
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let staller = s.spawn(|| -> Result<()> {
+            let pg = CommWorld::init(Bootstrap::pool(path.as_str(), spec.clone()), 1, 2)?;
+            assert_eq!(gather(&pg, 1, N)?, expected(&[0, 1], N));
+            // The stall is applied inline: 1.2 s of lease silence.
+            let fired = pg.inject_fault(&plan, 1)?;
+            assert_eq!(fired, Some(FaultKind::StallLease(Duration::from_millis(1200))));
+            while !done.load(Ordering::Acquire) {
+                pg.heartbeat()?;
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Ok(())
+        });
+        let prober = s.spawn(|| -> Result<()> {
+            let pg = CommWorld::init(Bootstrap::pool(path.as_str(), spec.clone()), 0, 2)?;
+            assert_eq!(gather(&pg, 0, N)?, expected(&[0, 1], N));
+            let mut mon = pg.lease_monitor(Duration::from_millis(800));
+            let _ = pg.probe_health(&mut mon)?;
+            let deadline = Instant::now() + Duration::from_secs(30);
+            let mut saw_stall = false;
+            let mut recovered = false;
+            while Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(25));
+                pg.heartbeat()?;
+                let h = pg.probe_health(&mut mon)?;
+                if !saw_stall && h.ranks[1] != RankHealth::Live {
+                    saw_stall = true;
+                }
+                if saw_stall && h.ranks[1] == RankHealth::Live {
+                    recovered = true;
+                    break;
+                }
+            }
+            done.store(true, Ordering::Release);
+            assert!(saw_stall, "the 1.2s lease stall was never observed as suspect/dead");
+            assert!(recovered, "rank 1 resumed heartbeating but was never re-classified live");
+            Ok(())
+        });
+        staller.join().unwrap().unwrap();
+        prober.join().unwrap().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The tentpole conformance round-trip: a member dies, survivors classify
+/// it dead, the in-flight full-world launch fails *typed and bounded*
+/// (`WorldShrunk`, naming the dead rank), the shrunk group computes the
+/// correct 2-rank result over the re-carved windows, the stale full-world
+/// handle refuses new work, and a regrown 3-rank world reproduces the
+/// original full-world bytes bitwise.
+#[test]
+fn shrink_fails_inflight_typed_then_regrow_matches_bitwise() {
+    let path = shm_path("shrink");
+    let _ = std::fs::remove_file(&path);
+    let spec = ClusterSpec::new(3, 6, 4 << 20);
+    let lease = Duration::from_millis(400);
+    let regrow = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3)
+            .map(|r| {
+                let (path, spec, regrow) = (&path, &spec, &regrow);
+                s.spawn(move || -> Result<()> {
+                    let pg =
+                        CommWorld::init(Bootstrap::pool(path.as_str(), spec.clone()), r, 3)?
+                            .with_wait_policy(wp(8000));
+                    let full1 = gather(&pg, r, N)?;
+                    assert_eq!(full1, expected(&[0, 1, 2], N));
+                    pg.flush()?;
+                    if r == 2 {
+                        drop(pg); // departs; its lease goes stale
+                    } else {
+                        // A full-world launch rank 2 will never join: it
+                        // must fail typed once the shrink publishes, not
+                        // sit on the launch barrier until the timeout.
+                        let doomed = pg.collective(
+                            Primitive::AllGather,
+                            &CclVariant::All.config(8),
+                            N,
+                            Tensor::from_f32(&payload(r, N)),
+                            Tensor::zeros(Dtype::F32, 3 * N),
+                        )?;
+                        let mut mon = pg.lease_monitor(lease);
+                        let _ = pg.probe_health(&mut mon)?;
+                        let deadline = Instant::now() + Duration::from_secs(20);
+                        loop {
+                            std::thread::sleep(Duration::from_millis(25));
+                            pg.heartbeat()?;
+                            let h = pg.probe_health(&mut mon)?;
+                            if h.ranks[2] == RankHealth::Dead {
+                                break;
+                            }
+                            assert!(Instant::now() < deadline, "rank 2 never went dead: {h}");
+                        }
+                        let t0 = Instant::now();
+                        let sub = pg.shrink(2)?;
+                        let msg =
+                            format!("{:#}", doomed.wait().expect_err("doomed launch must fail"));
+                        assert!(msg.contains("world shrunk"), "typed WorldShrunk error: {msg}");
+                        assert!(msg.contains("rank 2 declared dead"), "{msg}");
+                        assert!(
+                            t0.elapsed() < Duration::from_secs(10),
+                            "shrink + fail-fast took {:?}",
+                            t0.elapsed()
+                        );
+                        assert_eq!(sub.world_size(), 2);
+                        assert_eq!(gather(&sub, r, N)?, expected(&[0, 1], N));
+                        sub.flush()?;
+                        // The stale full-world handle refuses new work, typed.
+                        let stale_msg = match pg.collective(
+                            Primitive::AllGather,
+                            &CclVariant::All.config(8),
+                            N,
+                            Tensor::from_f32(&payload(r, N)),
+                            Tensor::zeros(Dtype::F32, 3 * N),
+                        ) {
+                            Err(e) => format!("{e:#}"),
+                            Ok(fut) => {
+                                format!("{:#}", fut.wait().expect_err("stale handle must fail"))
+                            }
+                        };
+                        assert!(stale_msg.contains("world shrunk"), "{stale_msg}");
+                        drop(sub);
+                        drop(pg);
+                    }
+                    // Every handle on the old world is gone; regrow at the
+                    // next generation through the crash-restart rejoin path.
+                    sync_point(regrow, 3);
+                    let pg =
+                        CommWorld::init(Bootstrap::pool(path.as_str(), spec.clone()), r, 3)?
+                            .with_wait_policy(wp(8000));
+                    let full2 = gather(&pg, r, N)?;
+                    assert_eq!(full2, full1, "regrown world must reproduce the full-world bytes");
+                    pg.flush()?;
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A stale-generation fault (what a rank 0 restart looks like to everyone
+/// else) fails every rank's next collective fast, with the typed
+/// stale-mapper message — not `WorldShrunk`, since no shrink was recorded.
+#[test]
+fn stale_generation_fault_fails_every_rank_fast_and_typed() {
+    let path = shm_path("stalegen");
+    let _ = std::fs::remove_file(&path);
+    let spec = ClusterSpec::new(2, 6, 4 << 20);
+    let plan = FaultPlan::parse("stale-gen@1").unwrap();
+    let gate = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let (path, spec, plan, gate) = (&path, &spec, &plan, &gate);
+                s.spawn(move || -> Result<()> {
+                    let pg =
+                        CommWorld::init(Bootstrap::pool(path.as_str(), spec.clone()), r, 2)?
+                            .with_wait_policy(wp(1000));
+                    assert_eq!(gather(&pg, r, N)?, expected(&[0, 1], N));
+                    if r == 0 {
+                        let fired = pg.inject_fault(plan, 1)?;
+                        assert_eq!(fired, Some(FaultKind::StaleGeneration));
+                    }
+                    gate.fetch_add(1, Ordering::AcqRel);
+                    // Injection strictly precedes the next issue on either rank.
+                    let deadline = Instant::now() + Duration::from_secs(60);
+                    while gate.load(Ordering::Acquire) < 2 {
+                        assert!(Instant::now() < deadline, "peer never injected");
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    let t0 = Instant::now();
+                    let msg = match pg.collective(
+                        Primitive::AllGather,
+                        &CclVariant::All.config(8),
+                        N,
+                        Tensor::from_f32(&payload(r, N)),
+                        Tensor::zeros(Dtype::F32, 2 * N),
+                    ) {
+                        Err(e) => format!("{e:#}"),
+                        Ok(fut) => format!("{:#}", fut.wait().expect_err("launch must fail")),
+                    };
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(10),
+                        "stale generation must fail fast, took {:?}",
+                        t0.elapsed()
+                    );
+                    assert!(msg.contains("re-initialized"), "typed stale-mapper error: {msg}");
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A torn launch barrier (the phantom arrival a rank crashing mid-barrier
+/// leaves in the counter word) wedges the next launch into a *bounded,
+/// typed* error on every rank — a timeout naming the stuck party count,
+/// or the over-subscription check — never a hang.
+#[test]
+fn torn_launch_barrier_surfaces_bounded_typed_errors() {
+    let path = shm_path("torn");
+    let _ = std::fs::remove_file(&path);
+    let spec = ClusterSpec::new(2, 6, 4 << 20);
+    let plan = FaultPlan::parse("torn-sense@1").unwrap();
+    let gate = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let (path, spec, plan, gate) = (&path, &spec, &plan, &gate);
+                s.spawn(move || -> Result<()> {
+                    let pg =
+                        CommWorld::init(Bootstrap::pool(path.as_str(), spec.clone()), r, 2)?
+                            .with_wait_policy(wp(800));
+                    assert_eq!(gather(&pg, r, N)?, expected(&[0, 1], N));
+                    if r == 0 {
+                        let fired = pg.inject_fault(plan, 1)?;
+                        assert_eq!(fired, Some(FaultKind::TornSense));
+                    }
+                    gate.fetch_add(1, Ordering::AcqRel);
+                    let deadline = Instant::now() + Duration::from_secs(60);
+                    while gate.load(Ordering::Acquire) < 2 {
+                        assert!(Instant::now() < deadline, "peer never injected");
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    let t0 = Instant::now();
+                    let fut = pg.collective(
+                        Primitive::AllGather,
+                        &CclVariant::All.config(8),
+                        N,
+                        Tensor::from_f32(&payload(r, N)),
+                        Tensor::zeros(Dtype::F32, 2 * N),
+                    )?;
+                    let msg = format!("{:#}", fut.wait().expect_err("torn barrier must fail"));
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(15),
+                        "torn barrier must fail within the wait policy, took {:?}",
+                        t0.elapsed()
+                    );
+                    assert!(
+                        msg.contains("timed out") || msg.contains("over-subscribed"),
+                        "typed barrier error: {msg}"
+                    );
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Per-launch payload for the epoch-ring replay tests: a pure function of
+/// (rank, absolute launch sequence), so an interrupted-and-restarted run
+/// must reproduce the uninterrupted run's bytes exactly.
+fn ring_payload(rank: usize, seq: u64, n: usize) -> Vec<f32> {
+    let tag = (seq % 251) as f32;
+    (0..n).map(|i| tag * 2.0 + (rank as f32) * 31.0 + (i as f32) * 0.5).collect()
+}
+
+/// Run a 2-rank, depth-2 world over `path` executing `launches` AllGathers
+/// with the launch sequence seeded at `seed`; returns the per-launch
+/// gathered bytes (asserted identical across ranks).
+fn run_ring_window(
+    path: &str,
+    spec: &ClusterSpec,
+    seed: u64,
+    launches: usize,
+    n: usize,
+) -> Vec<Vec<u8>> {
+    let seeded = AtomicUsize::new(0);
+    let mut per_rank = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let seeded = &seeded;
+                s.spawn(move || -> Result<Vec<Vec<u8>>> {
+                    let boot = Bootstrap::pool(path, spec.clone()).with_pipeline_depth(2);
+                    let pg = CommWorld::init(boot, r, 2)?.with_wait_policy(wp(10_000));
+                    pg.seed_launch_seq(seed)?;
+                    sync_point(seeded, 2); // every member seeds before any launch
+                    let mut outs = Vec::with_capacity(launches);
+                    for k in 0..launches {
+                        let seq = seed.wrapping_add(k as u64);
+                        let fut = pg.collective(
+                            Primitive::AllGather,
+                            &CclVariant::All.config(4),
+                            n,
+                            Tensor::from_f32(&ring_payload(r, seq, n)),
+                            Tensor::zeros(Dtype::F32, 2 * n),
+                        )?;
+                        outs.push(fut.wait()?.0.as_bytes().to_vec());
+                    }
+                    pg.flush()?;
+                    Ok(outs)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap().unwrap())
+            .collect::<Vec<_>>()
+    });
+    let r1 = per_rank.pop().unwrap();
+    let r0 = per_rank.pop().unwrap();
+    assert_eq!(r0, r1, "both ranks must read identical gathered bytes");
+    r0
+}
+
+/// Satellite: generation-stamped rejoin under a depth-2 epoch ring, seeded
+/// four launches shy of the u64 wrap. The whole world dies mid-ring (the
+/// two slices hold stamps one launch apart), `recover_launch_seq` inverts
+/// the published epoch words into the exact replay cursor — *before* the
+/// restarted rank 0 re-initializes — and the restarted world drains the
+/// remaining launches across `u64::MAX -> 0` bitwise-identically to an
+/// uninterrupted run.
+#[test]
+fn deep_ring_restart_replays_bitwise_across_the_u64_wrap() {
+    const SEED: u64 = u64::MAX - 3;
+    let n = 192usize;
+    let spec = ClusterSpec::new(2, 6, 4 << 20);
+
+    let oracle_path = shm_path("wrap_oracle");
+    let _ = std::fs::remove_file(&oracle_path);
+    let oracle = run_ring_window(&oracle_path, &spec, SEED, 8, n);
+    let _ = std::fs::remove_file(&oracle_path);
+
+    let path = shm_path("wrap_restart");
+    let _ = std::fs::remove_file(&path);
+    let before = run_ring_window(&path, &spec, SEED, 3, n);
+    // The world is down, mid-ring. Recover the replay cursor from the
+    // epoch words before any restarted rank re-initializes the header
+    // (initialization zeroes the ring).
+    let recovered = recover_launch_seq(&path, &spec, 2, SEED).unwrap();
+    assert_eq!(recovered, SEED.wrapping_add(3), "3 launches completed before the crash");
+    // The restarted world rejoins at the next generation and drains the
+    // remaining launches; their sequences cross u64::MAX -> 0.
+    let after = run_ring_window(&path, &spec, recovered, 5, n);
+    let _ = std::fs::remove_file(&path);
+
+    let replayed: Vec<Vec<u8>> = before.into_iter().chain(after).collect();
+    assert_eq!(replayed.len(), oracle.len());
+    assert_eq!(
+        replayed, oracle,
+        "drain/replay must be bitwise-identical to the uninterrupted run"
+    );
+}

@@ -1,0 +1,172 @@
+//! Fork-based elastic conformance: the same kill → classify → shrink →
+//! regrow round-trip as `elastic.rs`, but across real OS processes. The
+//! dying rank exits via `libc::_exit` with its `ProcessGroup` leaked — no
+//! destructors, no drain, the lease left mid-beat — which is what a
+//! SIGKILL looks like to the survivors. Every expected byte is computed
+//! locally in each process (payloads are pure functions of rank), so no
+//! IPC beyond the pool file itself is needed to verify results.
+
+use anyhow::Result;
+use cxl_ccl::collectives::{CclVariant, Primitive};
+use cxl_ccl::doorbell::WaitPolicy;
+use cxl_ccl::group::{Bootstrap, CommWorld, ProcessGroup, RankHealth};
+use cxl_ccl::tensor::{Dtype, Tensor};
+use cxl_ccl::topology::ClusterSpec;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
+
+const N: usize = 320;
+
+fn spec() -> ClusterSpec {
+    ClusterSpec::new(3, 6, 4 << 20)
+}
+
+fn boot(path: &str) -> Bootstrap {
+    Bootstrap::pool(path, spec()).with_join_timeout(Duration::from_secs(30))
+}
+
+fn wp8() -> WaitPolicy {
+    WaitPolicy { timeout: Duration::from_secs(8), ..WaitPolicy::default() }
+}
+
+/// Global rank `rank`'s deterministic AllGather payload.
+fn payload(rank: usize, n: usize) -> Vec<f32> {
+    (0..n).map(|i| (rank as f32) * 1000.0 + (i as f32) * 0.5 - 7.0).collect()
+}
+
+/// Bytes every member must read back from an AllGather over `members`.
+fn expected(members: &[usize], n: usize) -> Vec<u8> {
+    let mut all = Vec::with_capacity(members.len() * n);
+    for &m in members {
+        all.extend_from_slice(&payload(m, n));
+    }
+    Tensor::from_f32(&all).as_bytes().to_vec()
+}
+
+fn gather(pg: &ProcessGroup, rank: usize, n: usize) -> Result<Vec<u8>> {
+    let fut = pg.collective(
+        Primitive::AllGather,
+        &CclVariant::All.config(8),
+        n,
+        Tensor::from_f32(&payload(rank, n)),
+        Tensor::zeros(Dtype::F32, n * pg.world_size()),
+    )?;
+    Ok(fut.wait()?.0.as_bytes().to_vec())
+}
+
+/// Rank 2's whole life in phase 1: join, verify one full-world AllGather,
+/// then vanish without running a single destructor.
+fn run_phase1_then_die(path: &str) -> Result<()> {
+    let pg = CommWorld::init(boot(path), 2, 3)?.with_wait_policy(wp8());
+    assert_eq!(gather(&pg, 2, N)?, expected(&[0, 1, 2], N));
+    // Die like a SIGKILL: the caller `_exit`s, and leaking the group here
+    // guarantees no drain runs even if the exit path changes.
+    std::mem::forget(pg);
+    Ok(())
+}
+
+/// A survivor's life up to the end of the shrunk world: verify phase 1,
+/// park a doomed full-world launch, classify rank 2 dead off its lease,
+/// shrink, assert the typed in-flight failure, verify the 2-rank result.
+fn run_survivor_shrink(path: &str, rank: usize) -> Result<()> {
+    let pg = CommWorld::init(boot(path), rank, 3)?.with_wait_policy(wp8());
+    assert_eq!(gather(&pg, rank, N)?, expected(&[0, 1, 2], N));
+    pg.flush()?;
+    // Rank 2 is (or is about to be) gone: this launch can never complete
+    // and must fail typed once the shrink publishes, not hang.
+    let doomed = pg.collective(
+        Primitive::AllGather,
+        &CclVariant::All.config(8),
+        N,
+        Tensor::from_f32(&payload(rank, N)),
+        Tensor::zeros(Dtype::F32, 3 * N),
+    )?;
+    let mut mon = pg.lease_monitor(Duration::from_millis(500));
+    let _ = pg.probe_health(&mut mon)?;
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        std::thread::sleep(Duration::from_millis(25));
+        pg.heartbeat()?;
+        let h = pg.probe_health(&mut mon)?;
+        if h.ranks[2] == RankHealth::Dead {
+            break;
+        }
+        assert!(Instant::now() < deadline, "rank 2 never classified dead: {h}");
+    }
+    let sub = pg.shrink(2)?;
+    let msg = format!("{:#}", doomed.wait().expect_err("doomed launch must fail"));
+    assert!(msg.contains("world shrunk"), "typed WorldShrunk error: {msg}");
+    assert_eq!(gather(&sub, rank, N)?, expected(&[0, 1], N));
+    sub.flush()?;
+    // Leave the shrunk world together: rank 0's regrow re-initialization
+    // must not wipe control words under a mid-collective peer.
+    sub.barrier()?;
+    Ok(())
+}
+
+/// Rejoin the full 3-rank world at the next generation and verify the
+/// regrown result is bitwise what phase 1 produced.
+fn run_regrow(path: &str, rank: usize) -> Result<()> {
+    let pg = CommWorld::init(boot(path), rank, 3)?.with_wait_policy(wp8());
+    assert_eq!(
+        gather(&pg, rank, N)?,
+        expected(&[0, 1, 2], N),
+        "regrown world must reproduce the full-world bytes"
+    );
+    pg.flush()?;
+    Ok(())
+}
+
+fn fork_child(f: impl FnOnce() -> Result<()>) -> libc::pid_t {
+    // Flush buffered output before forking so the child never re-emits it.
+    use std::io::Write;
+    let _ = std::io::stdout().flush();
+    let _ = std::io::stderr().flush();
+    let pid = unsafe { libc::fork() };
+    assert!(pid >= 0, "fork failed");
+    if pid == 0 {
+        let code = match catch_unwind(AssertUnwindSafe(f)) {
+            Ok(Ok(())) => 0,
+            Ok(Err(e)) => {
+                eprintln!("child failed: {e:#}");
+                1
+            }
+            Err(_) => 1, // the panic itself already printed
+        };
+        unsafe { libc::_exit(code) };
+    }
+    pid
+}
+
+fn wait_child(pid: libc::pid_t, what: &str) {
+    let mut status = 0;
+    let r = unsafe { libc::waitpid(pid, &mut status, 0) };
+    assert_eq!(r, pid, "waitpid({what}) failed");
+    assert!(
+        libc::WIFEXITED(status) && libc::WEXITSTATUS(status) == 0,
+        "{what} exited abnormally (status {status:#x})"
+    );
+}
+
+#[test]
+fn fork_world_kill_shrink_regrow_round_trips_bitwise() {
+    let path = format!("/dev/shm/cxl_ccl_elastic_fork_{}", std::process::id());
+    let _ = std::fs::remove_file(&path);
+    // Rank 1 lives the full arc in a child process; rank 2 dies after
+    // phase 1; the parent is rank 0 (the rendezvous and shrink leader).
+    let survivor = fork_child(|| {
+        run_survivor_shrink(&path, 1)?;
+        run_regrow(&path, 1)
+    });
+    let casualty = fork_child(|| run_phase1_then_die(&path));
+    run_survivor_shrink(&path, 0).unwrap();
+    // Regrow: a replacement rank 2 process joins the next generation. It
+    // is forked before the parent re-initializes and waits out the stale
+    // join residue the dead rank left behind.
+    let replacement = fork_child(|| run_regrow(&path, 2));
+    run_regrow(&path, 0).unwrap();
+    wait_child(casualty, "phase-1 rank 2");
+    wait_child(survivor, "surviving rank 1");
+    wait_child(replacement, "regrown rank 2");
+    let _ = std::fs::remove_file(&path);
+}

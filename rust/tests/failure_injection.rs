@@ -75,6 +75,20 @@ fn missing_producer_times_out_cleanly() {
     );
     let msg = format!("{:#}", err.unwrap_err());
     assert!(msg.contains("timed out"), "{msg}");
+    // v10: a stuck wait names the doorbell slot (window-relative AND
+    // absolute) and the op-stream context names the waiting rank, so a
+    // wedged multi-process job says who was waiting on whom. The layout
+    // here is unwindowed, so relative and absolute slots coincide.
+    assert!(
+        msg.contains("doorbell 11 (absolute slot 11)")
+            || msg.contains("doorbell 12 (absolute slot 12)"),
+        "timeout must name the doorbell slot: {msg}"
+    );
+    assert!(
+        msg.contains("rank 0") || msg.contains("rank 1"),
+        "timeout must name the waiting rank: {msg}"
+    );
+    assert!(msg.contains("producer missing"), "{msg}");
 }
 
 #[test]
